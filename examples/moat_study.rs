@@ -1,0 +1,58 @@
+//! MOAT study across all application versions — the Fig. 19 experiment
+//! at example scale.
+//!
+//! Runs the same MOAT design through the five versions the paper
+//! compares (No reuse / Stage level / Naïve / SCA / RTMA), executing for
+//! real on PJRT workers, and prints makespan, merge-analysis time and
+//! reuse per version. Shapes to expect (paper §4.2.1): every reuse
+//! version beats "No reuse"; Naïve barely beats stage-level; SCA and
+//! RTMA reach ~33% task reuse with RTMA's merge time far below SCA's.
+//!
+//! Usage: `cargo run --release --example moat_study -- [r] [workers]`
+
+use rtf_reuse::benchx::{fmt_secs, Table};
+use rtf_reuse::config::{SaMethod, StudyConfig};
+use rtf_reuse::driver::{prepare, run_pjrt};
+use rtf_reuse::merging::FineAlgorithm;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let r: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(2);
+    let workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);
+
+    let versions: [(&str, bool, FineAlgorithm); 5] = [
+        ("no reuse", false, FineAlgorithm::None),
+        ("stage level", true, FineAlgorithm::None),
+        ("task level - naive", true, FineAlgorithm::Naive(7)),
+        ("task level - sca", true, FineAlgorithm::Sca(7)),
+        ("task level - rtma", true, FineAlgorithm::Rtma(7)),
+    ];
+
+    let mut t = Table::new(&["version", "makespan", "merge time", "fine reuse %", "speedup"]);
+    let mut base = None;
+    for (name, coarse, algo) in versions {
+        let cfg = StudyConfig {
+            method: SaMethod::Moat { r },
+            coarse,
+            algorithm: algo,
+            workers,
+            ..StudyConfig::default()
+        };
+        let prepared = prepare(&cfg);
+        let plan = prepared.plan(&cfg);
+        let outcome = run_pjrt(&cfg, &prepared, &plan).expect("run `make artifacts` first");
+        let wall = outcome.wall.as_secs_f64();
+        let speedup = base.map(|b: f64| b / wall).unwrap_or(1.0);
+        if base.is_none() {
+            base = Some(wall);
+        }
+        t.row(&[
+            name.to_string(),
+            fmt_secs(wall),
+            fmt_secs(plan.merge_time.as_secs_f64()),
+            format!("{:.1}", plan.fine_reuse() * 100.0),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    t.print(&format!("MOAT study, r={r} ({} evals), {workers} workers — paper Fig. 19", r * 16));
+}

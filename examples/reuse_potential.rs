@@ -1,0 +1,37 @@
+//! Maximum fine-grain reuse potential per experiment generator
+//! (paper Table 4): MC vs LHS vs QMC over VBD designs of growing sample
+//! size. Reuse is measured *after* coarse-grain merging, with unbounded
+//! bucket size — exactly the paper's "maximum computation reuse
+//! potential".
+//!
+//! Usage: `cargo run --release --example reuse_potential`
+
+use rtf_reuse::benchx::Table;
+use rtf_reuse::config::{SaMethod, SamplerKind, StudyConfig};
+use rtf_reuse::driver::prepare;
+use rtf_reuse::merging::{FineAlgorithm, TrtmaOptions};
+
+fn main() {
+    let mut t = Table::new(&["sampler", "n=200", "n=600", "n=1000"]);
+    for kind in [SamplerKind::Mc, SamplerKind::Lhs, SamplerKind::Qmc] {
+        let mut cells = vec![kind.name().to_string()];
+        for n in [200usize, 600, 1000] {
+            let cfg = StudyConfig {
+                method: SaMethod::Vbd { n, k_active: 8 },
+                sampler: kind,
+                // one bucket per merge group = the maximum fine reuse
+                algorithm: FineAlgorithm::Trtma(TrtmaOptions::new(1)),
+                ..StudyConfig::default()
+            };
+            let prepared = prepare(&cfg);
+            let plan = prepared.plan(&cfg);
+            cells.push(format!("{:.2}%", plan.fine_reuse() * 100.0));
+        }
+        t.row(&cells);
+    }
+    t.print("maximum fine-grain reuse potential, VBD — paper Table 4");
+    println!(
+        "(paper: 33–37% across all cells, QMC slightly below MC/LHS; the VBD design\n\
+         reuses matrix rows across the A/B/AB_i blocks, which dominates the figure)"
+    );
+}

@@ -1,0 +1,74 @@
+//! Worker-scaling study: No-Reuse vs RTMA vs TRTMA over 8..256 workers
+//! (paper Figs 22/23, Table 5) on the discrete-event cluster simulator.
+//!
+//! Shapes to expect: RTMA wins at low WP, collapses below NR once the
+//! stages-per-worker ratio drops; TRTMA (MaxBuckets = 3×WP) tracks RTMA
+//! at low WP and never falls below NR; its speedup over NR fades toward
+//! 1.0 at WP 256.
+//!
+//! Usage: `cargo run --release --example scalability -- [sample-size]`
+
+use rtf_reuse::benchx::{fmt_secs, Table};
+use rtf_reuse::config::{SaMethod, StudyConfig};
+use rtf_reuse::driver::{prepare, run_sim};
+use rtf_reuse::merging::{FineAlgorithm, TrtmaOptions};
+use rtf_reuse::simulate::{default_cost_model, SimOptions};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let sample: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(1000);
+    let r = sample / 16; // MOAT: sample = r(k+1), k = 15
+    let model = default_cost_model();
+
+    let mut t = Table::new(&[
+        "WP", "NR", "RTMA", "TRTMA", "TRTMA/NR", "TRTMA reuse %", "S/W (RTMA)",
+    ]);
+    let mut prev: Option<(f64, f64, f64)> = None;
+    let mut eff = Table::new(&["WP", "eff NR", "eff RTMA", "eff TRTMA"]);
+
+    for wp in [8usize, 16, 32, 64, 128, 256] {
+        let mk = |coarse: bool, algo: FineAlgorithm| {
+            let cfg = StudyConfig {
+                method: SaMethod::Moat { r },
+                coarse,
+                algorithm: algo,
+                workers: wp,
+                ..StudyConfig::default()
+            };
+            let prepared = prepare(&cfg);
+            let plan = prepared.plan(&cfg);
+            let opts = SimOptions::new(wp).with_cv(0.15, cfg.seed);
+            let rep = run_sim(&prepared, &plan, &model, &opts);
+            (rep, plan)
+        };
+        let (nr, _) = mk(true, FineAlgorithm::None);
+        let (rtma, rtma_plan) = mk(true, FineAlgorithm::Rtma(10));
+        let (trtma, trtma_plan) =
+            mk(true, FineAlgorithm::Trtma(TrtmaOptions::new(3 * wp)));
+
+        let seg_units = rtma_plan.units_of_stage(1).len();
+        t.row(&[
+            wp.to_string(),
+            fmt_secs(nr.makespan),
+            fmt_secs(rtma.makespan),
+            fmt_secs(trtma.makespan),
+            format!("{:.2}x", nr.makespan / trtma.makespan),
+            format!("{:.2}", trtma_plan.fine_reuse() * 100.0),
+            format!("{:.1}", seg_units as f64 / wp as f64),
+        ]);
+        if let Some((p_nr, p_rt, p_tb)) = prev {
+            eff.row(&[
+                wp.to_string(),
+                format!("{:.2}", p_nr / (nr.makespan * 2.0)),
+                format!("{:.2}", p_rt / (rtma.makespan * 2.0)),
+                format!("{:.2}", p_tb / (trtma.makespan * 2.0)),
+            ]);
+        }
+        prev = Some((nr.makespan, rtma.makespan, trtma.makespan));
+    }
+    t.print(&format!(
+        "scalability, MOAT sample {} (r={r}) — paper Fig. 22 / Table 5",
+        r * 16
+    ));
+    eff.print("parallel efficiency vs previous WP — paper Fig. 23");
+}

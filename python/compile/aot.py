@@ -1,0 +1,105 @@
+"""AOT bridge: lower every workflow task to an HLO-text artifact.
+
+``make artifacts`` runs this once; the Rust runtime then loads
+``artifacts/<task>.hlo.txt`` through ``HloModuleProto::from_text_file`` and
+executes them via the PJRT CPU client. Python never runs on the request
+path.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage (from ``python/``):
+
+    python -m compile.aot --out-dir ../artifacts [--size 128]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DEFAULT_SIZE = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax.jit(...).lower(...) result to XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_task(name: str, size: int) -> str:
+    """Lower one workflow task to HLO text with f32[size,size] planes."""
+    img = jax.ShapeDtypeStruct((size, size), jnp.float32)
+    par = jax.ShapeDtypeStruct((model.N_PARAMS,), jnp.float32)
+    if name == "cmp":
+        lowered = jax.jit(model.task_cmp).lower(img, img, img, img, par)
+    else:
+        lowered = jax.jit(model.TASK_FNS[name]).lower(img, img, img, par)
+    return to_hlo_text(lowered)
+
+
+def emit(out_dir: str, size: int, verbose: bool = True) -> dict:
+    """Emit all task artifacts + manifest.json into ``out_dir``."""
+    os.makedirs(out_dir, exist_ok=True)
+    tasks = []
+    for name in list(model.TASKS) + ["cmp"]:
+        t0 = time.time()
+        text = lower_task(name, size)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        tasks.append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "image_inputs": 4 if name == "cmp" else 3,
+                "param_inputs": model.N_PARAMS,
+                "outputs": 1 if name == "cmp" else 3,
+                "output_kind": "metrics3" if name == "cmp" else "planes",
+                "sha256_16": digest,
+            }
+        )
+        if verbose:
+            print(f"  {name:>5}: {len(text):>9} chars  ({time.time() - t0:.2f}s)  {path}")
+    manifest = {
+        "height": size,
+        "width": size,
+        "n_params": model.N_PARAMS,
+        "depth_levels": model.DEPTH_LEVELS,
+        "task_order": list(model.TASKS),
+        "compare_task": "cmp",
+        "tasks": tasks,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"  manifest.json: {len(tasks)} tasks, {size}x{size} planes")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--size", type=int, default=DEFAULT_SIZE)
+    args = ap.parse_args()
+    emit(args.out_dir, args.size)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,374 @@
+"""L2: the microscopy segmentation workflow as 9 AOT-compilable JAX tasks.
+
+This is a JAX re-implementation of the nscale glioblastoma segmentation
+pipeline the paper runs SA over (paper Fig 1 / Table 1): normalization,
+seven fine-grain segmentation tasks t1..t7, and a mask-comparison task.
+Each task is lowered to its own HLO artifact by :mod:`compile.aot` with the
+uniform signature
+
+    (a: f32[H,W], b: f32[H,W], c: f32[H,W], params: f32[5]) -> (a', b', c')
+
+so the Rust coordinator (L3) can execute any task generically, and — key
+for reuse — the paper's 15 parameters are *runtime inputs*: one compiled
+executable serves every parameter set the SA method generates.
+
+State-plane convention along the chain:
+
+    synth tile:  (r, g, b)            raw channels, [0, 255]
+    norm  ->     (r, g, b)            stain-normalized channels
+    t1    ->     (grey, fg,   zero)   inverted grey + foreground mask
+    t2    ->     (grey, cand, domes)  candidate nuclei + h-dome prominence
+    t3    ->     (grey, fill, domes)  hole-filled candidates
+    t4    ->     (grey, kept, domes)  area/prominence-filtered components
+    t5    ->     (grey, kept, depth)  pre-watershed filter + erosion depth
+    t6    ->     (grey, seg,  labels) watershed-split nuclei
+    t7    ->     (grey, final, labels) final area filter
+    cmp(state, ref_mask) -> f32[3]    (dice, jaccard, |diff|) vs reference
+
+The propagation-style operators (reconstruction, fill, CC, watershed) call
+the L1 Pallas sweep kernels from :mod:`compile.kernels.morph` inside
+``lax.while_loop`` / ``lax.fori_loop`` so the iteration lowers into the
+same HLO artifact and runs data-dependently inside XLA, never in Python.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import morph
+
+# Maximum erosion depth tracked for watershed seeding. Nuclei radii in the
+# synthetic tiles are <= ~12 px, so 16 levels always reach the core.
+DEPTH_LEVELS = 16
+
+# Iteration caps for the while-loops (safety net; convergence checks exit
+# earlier). Propagation distance is bounded by the tile diagonal.
+_MAX_SWEEPS = 4096
+
+# Normalization targets (paper stage 1 fixes staining/illumination). The
+# mean is chosen so normalized *background* lands in the paper's B/G/R
+# background-threshold range [210, 240] (Table 1) — otherwise those
+# parameters could never be influential.
+_NORM_MEAN = 210.0
+_NORM_STD = 40.0
+
+# h-maxima suppression height for watershed seeding: regional maxima less
+# than this far above their separating saddle are merged into one seed,
+# which removes the satellite-maxima artifacts of discrete L-inf erosion.
+_SEED_H = 2.0
+
+# Fixed h-dome height for candidate extraction (t2). The reconstruction
+# marker is grey - _DOME_H; the paper's G1 then *thresholds* the dome
+# image, so candidate count is monotone in G1 (as in nscale).
+_DOME_H = 100.0
+
+#: number of padded scalar parameters every task artifact accepts
+N_PARAMS = 5
+
+#: task names in chain order (cmp handled separately: extra ref input)
+TASKS = ("norm", "t1", "t2", "t3", "t4", "t5", "t6", "t7")
+
+
+# ---------------------------------------------------------------------------
+# propagation helpers (fixpoint loops over L1 sweep kernels)
+# ---------------------------------------------------------------------------
+
+
+def _fixpoint(sweep_fn, init: jax.Array) -> jax.Array:
+    """Iterate ``sweep_fn`` until the image stops changing (monotone ops)."""
+
+    def cond(state):
+        it, cur, changed = state
+        return jnp.logical_and(changed, it < _MAX_SWEEPS)
+
+    def body(state):
+        it, cur, _ = state
+        nxt = sweep_fn(cur)
+        return it + 1, nxt, jnp.any(nxt != cur)
+
+    _, out, _ = jax.lax.while_loop(cond, body, (jnp.int32(0), init, jnp.bool_(True)))
+    return out
+
+
+def morph_reconstruct(marker: jax.Array, mask: jax.Array, conn) -> jax.Array:
+    """Greyscale morphological reconstruction by dilation (IWPP fixpoint)."""
+    init = jnp.minimum(marker, mask)
+    return _fixpoint(lambda m: morph.recon_sweep(m, mask, conn), init)
+
+
+def fill_holes(binary: jax.Array, conn) -> jax.Array:
+    """Fill holes: background not reachable from the border becomes object.
+
+    Binary reconstruction of the complement from a border marker; matches
+    the paper's FillHoles operator with its 4/8-conn parameter.
+    """
+    comp = 1.0 - binary
+    h, w = binary.shape
+    border = jnp.zeros_like(binary).at[0, :].set(1.0).at[h - 1, :].set(1.0)
+    border = border.at[:, 0].set(1.0).at[:, w - 1].set(1.0)
+    marker = border * comp
+    outside = _fixpoint(lambda m: morph.recon_sweep(m, comp, conn), marker)
+    return jnp.where(outside > 0.5, 0.0, 1.0) * jnp.maximum(binary, comp)
+
+
+def connected_components(mask: jax.Array, conn=8.0) -> jax.Array:
+    """Label connected components with the min linear index + 1 (0 = bg).
+
+    Min-propagation fixpoint: the negated-label trick reuses the max-sweep
+    reconstruction kernel (min over labels == max over negated labels
+    clamped by the mask), so CC shares the same L1 hot kernel.
+    """
+    h, w = mask.shape
+    idx = (jnp.arange(h * w, dtype=mask.dtype) + 1.0).reshape(h, w)
+    big = h * w + 2.0
+    lab = jnp.where(mask > 0.5, idx, big)
+    # propagate min over the component: -lab propagated by max-reconstruction
+    # under the ceiling -lab_init_masked keeps bg pinned at `big`.
+    neg = -lab
+    ceil = jnp.where(mask > 0.5, jnp.zeros_like(lab), neg)
+    out = _fixpoint(lambda m: morph.recon_sweep(m, ceil, conn), neg)
+    lab = -out
+    return jnp.where(mask > 0.5, lab, 0.0)
+
+
+def component_sizes(labels: jax.Array) -> jax.Array:
+    """Per-pixel size of the pixel's component (0 on background)."""
+    h, w = labels.shape
+    flat = labels.astype(jnp.int32).reshape(-1)
+    areas = jnp.zeros(h * w + 2, dtype=labels.dtype).at[flat].add(1.0)
+    sizes = areas[flat].reshape(h, w)
+    return jnp.where(labels > 0.5, sizes, 0.0)
+
+
+def component_max(labels: jax.Array, values: jax.Array) -> jax.Array:
+    """Per-pixel max of ``values`` over the pixel's component (0 on bg)."""
+    h, w = labels.shape
+    flat = labels.astype(jnp.int32).reshape(-1)
+    m = jnp.full(h * w + 2, -jnp.inf, dtype=values.dtype).at[flat].max(values.reshape(-1))
+    out = m[flat].reshape(h, w)
+    return jnp.where(labels > 0.5, out, 0.0)
+
+
+def area_filter(mask: jax.Array, min_size, max_size, conn=8.0) -> jax.Array:
+    """Drop connected components with size outside [min_size, max_size]."""
+    labels = connected_components(mask, conn)
+    sizes = component_sizes(labels)
+    keep = (sizes >= min_size) & (sizes <= max_size)
+    return jnp.where(keep, mask, 0.0)
+
+
+def erosion_depth(mask: jax.Array, levels: int = DEPTH_LEVELS) -> jax.Array:
+    """Number of 8-conn erosions each pixel survives, + 1 on the mask.
+
+    A cheap discrete stand-in for the distance transform the watershed
+    seeds from (higher = deeper inside a nucleus).
+    """
+
+    def body(_, state):
+        cur, depth = state
+        nxt = morph.neighborhood_min(cur, 8.0)
+        return nxt, depth + nxt
+
+    _, depth = jax.lax.fori_loop(0, levels - 1, body, (mask, mask))
+    return depth
+
+
+def watershed(mask: jax.Array, depth: jax.Array, conn) -> jax.Array:
+    """Seeded watershed by level-ordered label growing (dense IWPP form).
+
+    Seeds are the *h-maxima* of ``depth`` (h = ``_SEED_H``): regional maxima
+    that rise at least h above their surroundings, computed with the same
+    reconstruction kernel (``depth - reconstruct(depth - h, depth) >= h``).
+    Plain regional maxima would over-segment — discrete L-inf erosion of a
+    digital disc produces satellite maxima one level below the core.
+    Low-relief components (peak depth < h) get their peak plateau as the
+    seed so thin objects are not dropped. Labels then grow outward one
+    depth level at a time so each basin claims its slope before basins
+    merge — splitting touching nuclei the way the paper's queue-based
+    watershed does.
+    """
+    inside = mask > 0.5
+    hrecon = morph_reconstruct(jnp.maximum(depth - _SEED_H, 0.0), depth, 8.0)
+    hseed = (depth - hrecon >= _SEED_H) & inside
+    comp = connected_components(mask, 8.0)
+    peak = component_max(comp, depth)
+    lowseed = (peak < _SEED_H) & (depth >= peak) & inside
+    is_seed = hseed | lowseed
+    plateau = connected_components(jnp.where(is_seed, 1.0, 0.0), 8.0)
+    labels = plateau  # 0 where not seed
+
+    def level_body(i, labels):
+        level = jnp.asarray(DEPTH_LEVELS, depth.dtype) - i.astype(depth.dtype)
+        active = jnp.where((depth >= level) & (mask > 0.5), 1.0, 0.0)
+        return _fixpoint(lambda l: morph.label_sweep(l, active, conn), labels)
+
+    labels = jax.lax.fori_loop(0, DEPTH_LEVELS, level_body, labels)
+    return jnp.where(mask > 0.5, labels, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# the 9 workflow tasks (uniform signatures -> per-task HLO artifacts)
+# ---------------------------------------------------------------------------
+
+
+def task_norm(a, b, c, params):
+    """Stage 1 — stain/illumination normalization (no varied parameters).
+
+    Per-channel affine map to fixed target statistics, clipped to [0, 255].
+    The zero-weight ``params`` term keeps the uniform 4-input artifact
+    signature: jax drops unused arguments from the lowered entry layout,
+    which would break the generic Rust task executor.
+    """
+    anchor = 0.0 * params[0]
+
+    def norm1(x):
+        mu = jnp.mean(x)
+        sd = jnp.std(x) + 1e-6
+        return jnp.clip((x - mu) / sd * _NORM_STD + _NORM_MEAN + anchor, 0.0, 255.0)
+
+    return norm1(a), norm1(b), norm1(c)
+
+
+def task_t1(a, b, c, params):
+    """t1 — background detection + red-blood-cell masking.
+
+    params = [B, G, R, T1, T2]: a pixel is background when all channels
+    exceed the B/G/R thresholds; RBC pixels have red/green and red/blue
+    ratios above T1/T2 (paper Table 1).
+    """
+    r, g, bl = a, b, c
+    B, G, R, T1, T2 = params[0], params[1], params[2], params[3], params[4]
+    background = (r > B) & (g > G) & (bl > R)
+    rbc = ((r + 1.0) / (g + 1.0) > T1) & ((r + 1.0) / (bl + 1.0) > T2)
+    grey = 255.0 - (0.299 * r + 0.587 * g + 0.114 * bl)  # nuclei stain dark -> bright
+    fg = jnp.where(background | rbc, 0.0, 1.0)
+    return grey, fg, jnp.zeros_like(grey)
+
+
+def task_t2(a, b, c, params):
+    """t2 — candidate nuclei via h-dome morphological reconstruction.
+
+    params = [G1, RC, _, _, _]: reconstruct (grey - _DOME_H) under grey with
+    RC-connectivity; domes = grey - recon; candidates are foreground pixels
+    whose dome prominence reaches the G1 threshold (monotone in G1, as in
+    nscale's diffIm > G1).
+    """
+    grey, fg = a, b
+    G1, RC = params[0], params[1]
+    # zero-weight anchor keeps the unused aux plane in the lowered entry
+    # signature (see task_norm docstring)
+    marker = jnp.maximum(grey - _DOME_H + 0.0 * c[0, 0], 0.0) * fg
+    recon = morph_reconstruct(marker, grey, RC)
+    domes = (grey - recon) * fg
+    cand = jnp.where(domes >= G1, 1.0, 0.0)
+    return grey, cand, domes
+
+
+def task_t3(a, b, c, params):
+    """t3 — fill holes in the candidate mask. params = [FH, _, _, _, _]."""
+    grey, cand, domes = a, b, c
+    FH = params[0]
+    return grey, fill_holes(cand, FH), domes
+
+
+def task_t4(a, b, c, params):
+    """t4 — component filter by area and dome prominence.
+
+    params = [G2, minS, maxS, _, _]: keep components with size in
+    [minS, maxS] whose peak dome prominence reaches G2.
+    """
+    grey, filled, domes = a, b, c
+    G2, minS, maxS = params[0], params[1], params[2]
+    labels = connected_components(filled, 8.0)
+    sizes = component_sizes(labels)
+    peak = component_max(labels, domes)
+    keep = (sizes >= minS) & (sizes <= maxS) & (peak >= G2)
+    kept = jnp.where(keep, filled, 0.0)
+    return grey, kept, domes
+
+
+def task_t5(a, b, c, params):
+    """t5 — pre-watershed area filter + erosion-depth map.
+
+    params = [minSPL, _, _, _, _] (paper: area threshold before watershed).
+    """
+    grey, kept, domes = a, b, c
+    minSPL = params[0]
+    # zero-weight anchor keeps the (otherwise unused) domes plane in the
+    # lowered entry signature (see task_norm docstring)
+    mask = area_filter(kept, minSPL + 0.0 * domes[0, 0], float(10**9), 8.0)
+    depth = erosion_depth(mask)
+    return grey, mask, depth
+
+
+def task_t6(a, b, c, params):
+    """t6 — seeded watershed split. params = [WConn, _, _, _, _]."""
+    grey, mask, depth = a, b, c
+    WConn = params[0]
+    labels = watershed(mask, depth, WConn)
+    seg = jnp.where(labels > 0.5, 1.0, 0.0)
+    return grey, seg, labels
+
+
+def task_t7(a, b, c, params):
+    """t7 — final object area filter. params = [minSS, maxSS, _, _, _]."""
+    grey, seg, labels = a, b, c
+    minSS, maxSS = params[0], params[1]
+    sizes = component_sizes(labels)
+    keep = (sizes >= minSS) & (sizes <= maxSS) & (seg > 0.5)
+    final = jnp.where(keep, 1.0, 0.0)
+    return grey, final, jnp.where(keep, labels, 0.0)
+
+
+def task_cmp(a, b, c, ref_mask, params):
+    """cmp — compare the final mask against the reference segmentation.
+
+    Returns f32[3] = (dice, jaccard, mean |diff|). The SA output metric the
+    paper feeds MOAT/VBD is the mask *difference*, i.e. 1 - dice.
+    """
+    # zero-weight anchor keeps the unused planes/params in the lowered
+    # entry signature (see task_norm docstring)
+    anchor = 0.0 * (params[0] + a[0, 0] + c[0, 0])
+    m = jnp.where(b > 0.5, 1.0, 0.0)
+    r = jnp.where(ref_mask > 0.5, 1.0, 0.0)
+    inter = jnp.sum(m * r)
+    sm, sr = jnp.sum(m), jnp.sum(r)
+    union = sm + sr - inter
+    dice = (2.0 * inter + 1e-6) / (sm + sr + 1e-6) + anchor
+    jacc = (inter + 1e-6) / (union + 1e-6)
+    diff = jnp.mean(jnp.abs(m - r))
+    return jnp.stack([dice, jacc, diff])
+
+
+TASK_FNS = {
+    "norm": task_norm,
+    "t1": task_t1,
+    "t2": task_t2,
+    "t3": task_t3,
+    "t4": task_t4,
+    "t5": task_t5,
+    "t6": task_t6,
+    "t7": task_t7,
+}
+
+
+def run_chain(r, g, b, param_vectors: dict[str, jax.Array]):
+    """Execute the full task chain in-process (test/debug path only).
+
+    ``param_vectors`` maps task name -> f32[5]; returns the final state.
+    The production path never calls this: Rust executes the per-task HLO
+    artifacts instead.
+    """
+    state = (r, g, b)
+    for name in TASKS:
+        state = TASK_FNS[name](*state, param_vectors[name])
+    return state
+
+
+@partial(jax.jit, static_argnames=())
+def run_chain_jit(r, g, b, pnorm, p1, p2, p3, p4, p5, p6, p7):
+    pv = dict(zip(TASKS, (pnorm, p1, p2, p3, p4, p5, p6, p7)))
+    return run_chain(r, g, b, pv)

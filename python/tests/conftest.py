@@ -1,0 +1,73 @@
+"""Shared fixtures: deterministic synthetic tissue tiles.
+
+Mirrors (loosely — exact equality is not required) the Rust-side generator
+in ``rust/src/data/synth.rs``: bright background, dark-purple elliptical
+nuclei, strongly-red RBC discs, mild Gaussian noise.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+
+def synth_tile(h: int = 64, w: int = 64, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    r = np.full((h, w), 230.0)
+    g = np.full((h, w), 225.0)
+    b = np.full((h, w), 228.0)
+    yy, xx = np.mgrid[0:h, 0:w]
+    n_nuclei = max(3, h * w // 700)
+    for _ in range(n_nuclei):
+        cy, cx = rng.integers(4, h - 4), rng.integers(4, w - 4)
+        rad = rng.integers(3, max(4, min(h, w) // 10))
+        blob = (yy - cy) ** 2 + (xx - cx) ** 2 <= rad * rad
+        stain = rng.uniform(0.05, 1.0)  # per-nucleus stain intensity
+        for ch, dark in ((r, 120.0), (g, 90.0), (b, 160.0)):
+            ch[blob] += (dark - ch[blob]) * stain
+    for _ in range(max(1, n_nuclei // 4)):
+        cy, cx = rng.integers(3, h - 3), rng.integers(3, w - 3)
+        disc = (yy - cy) ** 2 + (xx - cx) ** 2 <= 9
+        redness = rng.uniform(0.6, 1.0)  # per-RBC hemoglobin strength
+        r[disc] = 140.0 + 70.0 * redness
+        g[disc] = 90.0 - 55.0 * redness
+        b[disc] = 90.0 - 55.0 * redness
+
+    def blur3(x):  # 3x3 box blur with edge replication -> soft edges
+        p = np.pad(x, 1, mode="edge")
+        out = np.zeros_like(x)
+        for dy in range(3):
+            for dx in range(3):
+                out += p[dy : dy + h, dx : dx + w]
+        return out / 9.0
+
+    out = []
+    for ch in (r, g, b):
+        ch = blur3(blur3(ch))  # ~2 px gradient skirt around objects
+        ch += rng.normal(0.0, 2.0, (h, w))
+        np.clip(ch, 0.0, 255.0, out=ch)
+        out.append(ch)
+    return tuple(jnp.asarray(x, jnp.float32) for x in out)
+
+
+DEFAULT_PARAMS = {
+    "norm": [0.0, 0.0, 0.0, 0.0, 0.0],
+    "t1": [210.0, 210.0, 210.0, 2.5, 2.5],
+    "t2": [40.0, 8.0, 0.0, 0.0, 0.0],
+    "t3": [8.0, 0.0, 0.0, 0.0, 0.0],
+    "t4": [2.0, 10.0, 1500.0, 0.0, 0.0],
+    "t5": [10.0, 0.0, 0.0, 0.0, 0.0],
+    "t6": [8.0, 0.0, 0.0, 0.0, 0.0],
+    "t7": [10.0, 1200.0, 0.0, 0.0, 0.0],
+}
+
+
+@pytest.fixture
+def tile():
+    return synth_tile()
+
+
+@pytest.fixture
+def default_params():
+    return {k: jnp.asarray(v, jnp.float32) for k, v in DEFAULT_PARAMS.items()}

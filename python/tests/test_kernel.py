@@ -1,0 +1,176 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes / dtypes / connectivity / value distributions and
+asserts exact agreement (the ops are max/min/select — no rounding slack is
+needed; bf16 compares exactly too because both paths round identically).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import morph, ref
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _img(draw, h, w, dtype, lo=-100.0, hi=300.0):
+    arr = draw(
+        st.lists(
+            st.floats(lo, hi, allow_nan=False, allow_infinity=False, width=32),
+            min_size=h * w,
+            max_size=h * w,
+        )
+    )
+    return jnp.asarray(np.array(arr, dtype=np.float32).reshape(h, w), dtype)
+
+
+shapes = st.tuples(st.integers(1, 24), st.integers(1, 24))
+conns = st.sampled_from([4.0, 8.0])
+dtypes = st.sampled_from(DTYPES)
+
+
+@st.composite
+def image_case(draw):
+    h, w = draw(shapes)
+    dtype = draw(dtypes)
+    return _img(draw, h, w, dtype), draw(conns)
+
+
+@st.composite
+def image_pair_case(draw):
+    h, w = draw(shapes)
+    dtype = draw(dtypes)
+    return _img(draw, h, w, dtype), _img(draw, h, w, dtype), draw(conns)
+
+
+@st.composite
+def label_case(draw):
+    h, w = draw(shapes)
+    labels = draw(
+        st.lists(st.integers(0, 50), min_size=h * w, max_size=h * w)
+    )
+    active = draw(st.lists(st.integers(0, 1), min_size=h * w, max_size=h * w))
+    lab = jnp.asarray(np.array(labels, np.float32).reshape(h, w))
+    act = jnp.asarray(np.array(active, np.float32).reshape(h, w))
+    return lab, act, draw(conns)
+
+
+def _eq(a, b):
+    np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+@settings(max_examples=60, deadline=None)
+@given(image_case())
+def test_neighborhood_max_matches_ref(case):
+    x, conn = case
+    _eq(morph.neighborhood_max(x, conn), ref.neighborhood_max_ref(x, conn))
+
+
+@settings(max_examples=60, deadline=None)
+@given(image_case())
+def test_neighborhood_min_matches_ref(case):
+    x, conn = case
+    _eq(morph.neighborhood_min(x, conn), ref.neighborhood_min_ref(x, conn))
+
+
+@settings(max_examples=60, deadline=None)
+@given(image_pair_case())
+def test_recon_sweep_matches_ref(case):
+    marker, mask, conn = case
+    _eq(morph.recon_sweep(marker, mask, conn), ref.recon_sweep_ref(marker, mask, conn))
+
+
+@settings(max_examples=60, deadline=None)
+@given(label_case())
+def test_label_sweep_matches_ref(case):
+    lab, act, conn = case
+    _eq(morph.label_sweep(lab, act, conn), ref.label_sweep_ref(lab, act, conn))
+
+
+# ---------------------------------------------------------------------------
+# directed algebraic properties (catch errors the oracle-diff can't, e.g. a
+# bug shared by kernel and oracle)
+# ---------------------------------------------------------------------------
+
+
+def test_max_of_constant_is_constant():
+    x = jnp.full((7, 9), 3.5)
+    for conn in (4.0, 8.0):
+        _eq(morph.neighborhood_max(x, conn), x)
+        _eq(morph.neighborhood_min(x, conn), x)
+
+
+def test_max_dominates_center_and_min_is_dominated():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(16, 16)), jnp.float32)
+    for conn in (4.0, 8.0):
+        assert bool(jnp.all(morph.neighborhood_max(x, conn) >= x))
+        assert bool(jnp.all(morph.neighborhood_min(x, conn) <= x))
+
+
+def test_conn8_dominates_conn4():
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(16, 16)), jnp.float32)
+    assert bool(jnp.all(morph.neighborhood_max(x, 8.0) >= morph.neighborhood_max(x, 4.0)))
+    assert bool(jnp.all(morph.neighborhood_min(x, 8.0) <= morph.neighborhood_min(x, 4.0)))
+
+
+def test_single_pixel_dilation_cross_vs_square():
+    x = np.zeros((5, 5), np.float32)
+    x[2, 2] = 1.0
+    d4 = np.asarray(morph.neighborhood_max(jnp.asarray(x), 4.0))
+    d8 = np.asarray(morph.neighborhood_max(jnp.asarray(x), 8.0))
+    assert d4.sum() == 5  # center + 4-neighborhood cross
+    assert d8.sum() == 9  # full 3x3 square
+    assert d4[2, 2] == d8[2, 2] == 1.0
+    assert d4[1, 1] == 0.0 and d8[1, 1] == 1.0
+
+
+def test_recon_sweep_clamped_by_mask():
+    rng = np.random.default_rng(3)
+    marker = jnp.asarray(rng.uniform(0, 1, (12, 12)), jnp.float32)
+    mask = jnp.asarray(rng.uniform(0, 1, (12, 12)), jnp.float32)
+    out = morph.recon_sweep(jnp.minimum(marker, mask), mask, 8.0)
+    assert bool(jnp.all(out <= mask))
+
+
+def test_label_sweep_preserves_labeled_pixels():
+    lab = jnp.asarray([[1.0, 0.0], [0.0, 0.0]])
+    act = jnp.ones((2, 2))
+    out = morph.label_sweep(lab, act, 8.0)
+    assert float(out[0, 0]) == 1.0
+    assert bool(jnp.all(out == 1.0))  # all active unlabeled adopt the label
+
+
+def test_label_sweep_respects_active_mask():
+    lab = jnp.asarray([[1.0, 0.0], [0.0, 0.0]])
+    act = jnp.asarray([[1.0, 0.0], [0.0, 0.0]])
+    out = morph.label_sweep(lab, act, 8.0)
+    assert float(out.sum()) == 1.0  # inactive pixels never grow
+
+
+def test_full_reconstruction_fixpoint_matches_oracle_loop():
+    rng = np.random.default_rng(4)
+    mask = jnp.asarray(rng.uniform(0, 10, (16, 16)), jnp.float32)
+    marker = jnp.maximum(mask - 3.0, 0.0)
+    from compile import model
+
+    got = model.morph_reconstruct(marker, mask, 8.0)
+    want = ref.reconstruct_ref(marker, mask, 8.0)
+    _eq(got, want)
+
+
+@pytest.mark.parametrize("conn", [4.0, 8.0])
+def test_reconstruction_bounds(conn):
+    rng = np.random.default_rng(5)
+    mask = jnp.asarray(rng.uniform(0, 10, (12, 12)), jnp.float32)
+    marker = jnp.asarray(rng.uniform(0, 10, (12, 12)), jnp.float32)
+    from compile import model
+
+    rec = model.morph_reconstruct(marker, mask, conn)
+    assert bool(jnp.all(rec <= mask))
+    assert bool(jnp.all(rec >= jnp.minimum(marker, mask)))
+    # idempotence: a second sweep at the fixpoint changes nothing
+    _eq(morph.recon_sweep(rec, mask, conn), rec)

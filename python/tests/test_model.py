@@ -1,0 +1,253 @@
+"""L2 semantics: the 9 workflow tasks behave like their nscale counterparts."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from tests.conftest import synth_tile, DEFAULT_PARAMS
+
+
+def P(*vals):
+    v = list(vals) + [0.0] * (model.N_PARAMS - len(vals))
+    return jnp.asarray(v, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# operator helpers
+# ---------------------------------------------------------------------------
+
+
+def test_fill_holes_fills_interior():
+    m = np.zeros((9, 9), np.float32)
+    m[2:7, 2:7] = 1.0
+    m[4, 4] = 0.0  # interior hole
+    out = np.asarray(model.fill_holes(jnp.asarray(m), 8.0))
+    assert out[4, 4] == 1.0
+    assert out[0, 0] == 0.0
+    assert out.sum() == 25.0
+
+
+def test_fill_holes_keeps_border_notch_open():
+    m = np.zeros((9, 9), np.float32)
+    m[2:7, 2:7] = 1.0
+    m[0:5, 4] = 0.0  # channel to the border: not a hole
+    out = np.asarray(model.fill_holes(jnp.asarray(m), 4.0))
+    assert out[4, 4] == 0.0
+
+
+def test_fill_holes_conn8_can_leak_through_diagonal_gap():
+    # a diagonal crack from the border is passable for 8-conn background
+    # but is a chain of isolated holes for 4-conn background
+    m = np.ones((7, 7), np.float32)
+    for i in range(4):
+        m[i, i] = 0.0  # diagonal background path from (0,0) to (3,3)
+    out4 = np.asarray(model.fill_holes(jnp.asarray(m), 4.0))
+    out8 = np.asarray(model.fill_holes(jnp.asarray(m), 8.0))
+    assert out4[3, 3] == 1.0  # 4-conn bg cannot traverse the diagonal
+    assert out8[3, 3] == 0.0  # 8-conn bg escapes -> not filled
+    assert out4[0, 0] == 0.0  # border pixel itself is never filled
+
+
+def test_connected_components_two_blobs():
+    m = np.zeros((8, 8), np.float32)
+    m[1:3, 1:3] = 1.0
+    m[5:8, 5:8] = 1.0
+    lab = np.asarray(model.connected_components(jnp.asarray(m), 8.0))
+    ids = sorted(set(lab[lab > 0].tolist()))
+    assert len(ids) == 2
+    assert (lab[1:3, 1:3] == ids[0]).all()
+    assert (lab[5:8, 5:8] == ids[1]).all()
+    assert (lab[m == 0] == 0).all()
+
+
+def test_connected_components_diag_conn4_vs_conn8():
+    m = np.zeros((4, 4), np.float32)
+    m[0, 0] = m[1, 1] = 1.0
+    lab4 = np.asarray(model.connected_components(jnp.asarray(m), 4.0))
+    lab8 = np.asarray(model.connected_components(jnp.asarray(m), 8.0))
+    assert lab4[0, 0] != lab4[1, 1]
+    assert lab8[0, 0] == lab8[1, 1]
+
+
+def test_component_sizes_and_max():
+    m = np.zeros((6, 6), np.float32)
+    m[0:2, 0:2] = 1.0  # size 4
+    m[4:6, 0:3] = 1.0  # size 6
+    lab = model.connected_components(jnp.asarray(m), 8.0)
+    sizes = np.asarray(model.component_sizes(lab))
+    assert sizes[0, 0] == 4.0 and sizes[5, 1] == 6.0 and sizes[2, 2] == 0.0
+    vals = np.zeros((6, 6), np.float32)
+    vals[1, 1] = 7.0
+    vals[5, 2] = 3.0
+    peak = np.asarray(model.component_max(lab, jnp.asarray(vals)))
+    assert peak[0, 0] == 7.0 and peak[4, 0] == 3.0
+
+
+def test_area_filter_bounds():
+    m = np.zeros((10, 10), np.float32)
+    m[0, 0] = 1.0  # size 1
+    m[2:4, 2:4] = 1.0  # size 4
+    m[5:10, 5:10] = 1.0  # size 25
+    out = np.asarray(model.area_filter(jnp.asarray(m), 2.0, 10.0, 8.0))
+    assert out[0, 0] == 0.0
+    assert out[2, 2] == 1.0
+    assert out[7, 7] == 0.0
+
+
+def test_erosion_depth_square():
+    m = np.zeros((11, 11), np.float32)
+    m[1:10, 1:10] = 1.0  # 9x9 square: max depth 5 at center
+    d = np.asarray(model.erosion_depth(jnp.asarray(m)))
+    assert d[5, 5] == 5.0
+    assert d[1, 1] == 1.0
+    assert d[0, 0] == 0.0
+    # depth decreases by at most 1 per step outward
+    assert d.max() == 5.0
+
+
+def test_watershed_splits_touching_blobs():
+    # two barely-touching discs (1-px neck): one CC, but the depth saddle
+    # (1) sits >= _SEED_H below both peaks (4) -> two h-maxima -> 2 labels
+    h = w = 24
+    yy, xx = np.mgrid[0:h, 0:w]
+    m = (((yy - 12) ** 2 + (xx - 6) ** 2) <= 25) | (((yy - 12) ** 2 + (xx - 17) ** 2) <= 25)
+    m = m.astype(np.float32)
+    assert len(set(np.asarray(model.connected_components(jnp.asarray(m), 8.0))[m > 0].tolist())) == 1
+    depth = model.erosion_depth(jnp.asarray(m))
+    lab = np.asarray(model.watershed(jnp.asarray(m), depth, 8.0))
+    ids = set(lab[m > 0].tolist()) - {0.0}
+    assert len(ids) == 2
+    # every mask pixel is claimed by some basin
+    assert (lab[m > 0] > 0).all()
+
+
+def test_watershed_single_blob_single_label():
+    h = w = 16
+    yy, xx = np.mgrid[0:h, 0:w]
+    m = (((yy - 8) ** 2 + (xx - 8) ** 2) <= 20).astype(np.float32)
+    depth = model.erosion_depth(jnp.asarray(m))
+    lab = np.asarray(model.watershed(jnp.asarray(m), depth, 8.0))
+    assert len(set(lab[m > 0].tolist()) - {0.0}) == 1
+
+
+# ---------------------------------------------------------------------------
+# tasks
+# ---------------------------------------------------------------------------
+
+
+def test_task_norm_targets_stats():
+    r, g, b = synth_tile(48, 48, seed=7)
+    a, bb, c = model.task_norm(r, g, b, P())
+    for x in (a, bb, c):
+        x = np.asarray(x)
+        assert 0.0 <= x.min() and x.max() <= 255.0
+        assert abs(x.mean() - 210.0) < 25.0  # clipping skews slightly
+
+
+def test_task_t1_masks_background_and_rbc():
+    r, g, b = synth_tile(48, 48, seed=1)
+    rn, gn, bn = model.task_norm(r, g, b, P())
+    grey, fg, _ = model.task_t1(rn, gn, bn, P(210.0, 210.0, 210.0, 2.5, 2.5))
+    grey, fg = np.asarray(grey), np.asarray(fg)
+    assert 0.0 < fg.mean() < 0.9  # some bg detected, some fg kept
+    # laxer thresholds (higher B/G/R) classify fewer pixels as background
+    _, fg_lax, _ = model.task_t1(rn, gn, bn, P(240.0, 240.0, 240.0, 2.5, 2.5))
+    assert np.asarray(fg_lax).sum() >= fg.sum()
+    # nuclei pixels (dark red, high blue — unlike RBC) stay foreground
+    nuclei = (np.asarray(rn) < 150) & (np.asarray(bn) > 120)
+    assert fg[nuclei].mean() > 0.9
+
+
+def test_task_t2_candidates_shrink_with_G1():
+    r, g, b = synth_tile(48, 48, seed=2)
+    state = model.task_norm(r, g, b, P())
+    state = model.task_t1(*state, P(210.0, 210.0, 210.0, 2.5, 2.5))
+    _, cand_lo, _ = model.task_t2(*state, P(20.0, 8.0))
+    _, cand_hi, _ = model.task_t2(*state, P(70.0, 8.0))
+    assert np.asarray(cand_hi).sum() <= np.asarray(cand_lo).sum()
+    assert np.asarray(cand_lo).sum() > 0
+
+
+def test_task_t4_prominence_and_area():
+    grey = jnp.zeros((8, 8))
+    filled = np.zeros((8, 8), np.float32)
+    filled[0:2, 0:2] = 1.0  # size-4, peak dome 10
+    filled[5:6, 5:8] = 1.0  # size-3, peak dome 1
+    domes = np.zeros((8, 8), np.float32)
+    domes[1, 1] = 10.0
+    domes[5, 5] = 1.0
+    _, kept, _ = model.task_t4(grey, jnp.asarray(filled), jnp.asarray(domes), P(5.0, 2.0, 100.0))
+    kept = np.asarray(kept)
+    assert kept[0, 0] == 1.0  # passes both area + prominence
+    assert kept[5, 5] == 0.0  # fails prominence G2=5
+
+
+def test_task_t7_final_filter():
+    grey = jnp.zeros((8, 8))
+    seg = np.zeros((8, 8), np.float32)
+    seg[0:3, 0:3] = 1.0
+    seg[6, 6] = 1.0
+    labels = model.connected_components(jnp.asarray(seg), 8.0)
+    _, final, lab_out = model.task_t7(grey, jnp.asarray(seg), labels, P(2.0, 100.0))
+    final = np.asarray(final)
+    assert final[1, 1] == 1.0 and final[6, 6] == 0.0
+    assert np.asarray(lab_out)[6, 6] == 0.0
+
+
+def test_task_cmp_metrics():
+    a = jnp.zeros((6, 6))
+    m = np.zeros((6, 6), np.float32)
+    m[0:3, :] = 1.0
+    ref = np.zeros((6, 6), np.float32)
+    ref[0:3, 0:3] = 1.0
+    out = np.asarray(model.task_cmp(a, jnp.asarray(m), a, jnp.asarray(ref), P()))
+    dice, jacc, diff = out
+    assert abs(dice - 2 * 9 / (18 + 9)) < 1e-5
+    assert abs(jacc - 9 / 18) < 1e-5
+    assert abs(diff - 9 / 36) < 1e-5
+
+
+def test_task_cmp_identical_masks_perfect_score():
+    a = jnp.zeros((5, 5))
+    m = jnp.asarray(np.eye(5, dtype=np.float32))
+    out = np.asarray(model.task_cmp(a, m, a, m, P()))
+    assert abs(out[0] - 1.0) < 1e-5 and abs(out[1] - 1.0) < 1e-5 and out[2] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end chain
+# ---------------------------------------------------------------------------
+
+
+def test_chain_end_to_end_produces_segmentation(default_params, tile):
+    r, g, b = tile
+    grey, mask, labels = model.run_chain(r, g, b, default_params)
+    mask, labels = np.asarray(mask), np.asarray(labels)
+    assert mask.sum() > 20  # found nuclei
+    assert mask.mean() < 0.5  # did not flood the tile
+    n_obj = len(set(labels[labels > 0].tolist()))
+    assert n_obj >= 2
+    # labels and mask agree
+    assert ((labels > 0) == (mask > 0.5)).all()
+
+
+def test_chain_output_sensitive_to_influential_params(default_params, tile):
+    """G1/G2 are the paper's most influential parameters (Table 2) — the
+    output must actually move when they move, else SA is meaningless."""
+    r, g, b = tile
+    _, mask_ref, _ = model.run_chain(r, g, b, default_params)
+    perturbed = dict(default_params)
+    perturbed["t2"] = jnp.asarray([75.0, 8.0, 0.0, 0.0, 0.0])
+    _, mask_hi, _ = model.run_chain(r, g, b, perturbed)
+    assert float(jnp.abs(mask_ref - mask_hi).sum()) > 0
+
+
+def test_chain_deterministic(default_params, tile):
+    r, g, b = tile
+    out1 = model.run_chain(r, g, b, default_params)
+    out2 = model.run_chain(r, g, b, default_params)
+    for x, y in zip(out1, out2):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

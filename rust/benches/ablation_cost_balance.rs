@@ -1,0 +1,74 @@
+//! Ablation: count-balanced TRTMA (paper §3.3.4) vs the cost-balanced
+//! TRTMA the paper's conclusion proposes as future work (§5).
+//!
+//! Under the paper's own Table-6 cost profile (t6 = 39.6% of a stage),
+//! two buckets with equal task *counts* can differ ~1.26× in cost
+//! (Fig. 24). Balancing by estimated cost removes that residual
+//! imbalance; the effect concentrates at low buckets-per-worker ratios
+//! where one hot bucket sets the makespan. Also ablated: the smallRT
+//! best-reuse selection strategy (paper: negligible — reproduced).
+
+use rtf_reuse::benchx::{fmt_secs, Table};
+use rtf_reuse::config::{SaMethod, StudyConfig};
+use rtf_reuse::driver::{prepare, run_sim};
+use rtf_reuse::merging::{FineAlgorithm, TrtmaOptions};
+use rtf_reuse::simulate::{default_cost_model, SimOptions};
+
+fn main() {
+    let model = default_cost_model();
+    let r = 31; // sample 496
+    let mut t = Table::new(&[
+        "WP", "TRTMA (count)", "TRTMA (cost)", "gain %", "util count %", "util cost %",
+    ]);
+
+    for wp in [16usize, 32, 64, 128] {
+        let mk = |algo: FineAlgorithm| {
+            let cfg = StudyConfig {
+                method: SaMethod::Moat { r },
+                algorithm: algo,
+                workers: wp,
+                ..StudyConfig::default()
+            };
+            let prepared = prepare(&cfg);
+            let plan = prepared.plan(&cfg);
+            let opts = SimOptions::new(wp).with_cv(0.0, 42);
+            run_sim(&prepared, &plan, &model, &opts)
+        };
+        let count = mk(FineAlgorithm::Trtma(TrtmaOptions::new(3 * wp)));
+        let cost = mk(FineAlgorithm::TrtmaCost(TrtmaOptions::new(3 * wp)));
+        t.row(&[
+            wp.to_string(),
+            fmt_secs(count.makespan),
+            fmt_secs(cost.makespan),
+            format!("{:+.1}", (1.0 - cost.makespan / count.makespan) * 100.0),
+            format!("{:.1}", count.utilization() * 100.0),
+            format!("{:.1}", cost.utilization() * 100.0),
+        ]);
+    }
+    t.print(&format!(
+        "ablation — count- vs cost-balanced TRTMA, MOAT sample {}, Table-6 costs",
+        r * 16
+    ));
+
+    // smallRT selection strategy ablation (paper §3.3.4 Discussion)
+    let mut t2 = Table::new(&["strategy", "makespan", "reuse %"]);
+    for (name, best_reuse) in [("last bucket (default)", false), ("best-reuse smallRT", true)] {
+        let mut opts = TrtmaOptions::new(48);
+        opts.smallrt_best_reuse = best_reuse;
+        let cfg = StudyConfig {
+            method: SaMethod::Moat { r },
+            algorithm: FineAlgorithm::Trtma(opts),
+            workers: 16,
+            ..StudyConfig::default()
+        };
+        let prepared = prepare(&cfg);
+        let plan = prepared.plan(&cfg);
+        let rep = run_sim(&prepared, &plan, &model, &SimOptions::new(16));
+        t2.row(&[
+            name.to_string(),
+            fmt_secs(rep.makespan),
+            format!("{:.2}", plan.fine_reuse() * 100.0),
+        ]);
+    }
+    t2.print("ablation — smallRT selection (paper: negligible difference)");
+}

@@ -1,0 +1,64 @@
+//! Ablation: PATS (performance-aware task scheduling, paper §2.3) vs
+//! FCFS device assignment on hybrid CPU+accelerator worker nodes.
+//!
+//! The RTF schedules a stage's fine-grain tasks onto a node's CPU cores
+//! and accelerators by estimated acceleration (PATS, paper refs
+//! [27, 35-39]). With the application's speedup profile (wavefront
+//! tasks t2/t6 accelerate ~9-11×, area filters ~1.5×), PATS keeps the
+//! scarce accelerator busy on the tasks where it pays.
+
+use rtf_reuse::benchx::{fmt_secs, Table};
+use rtf_reuse::config::{SaMethod, StudyConfig};
+use rtf_reuse::driver::prepare;
+use rtf_reuse::merging::FineAlgorithm;
+use rtf_reuse::simulate::{
+    default_cost_model, hetero_unit_makespan, DeviceModel, SchedulePolicy,
+};
+
+fn main() {
+    let cfg = StudyConfig {
+        method: SaMethod::Moat { r: 20 },
+        algorithm: FineAlgorithm::Rtma(7),
+        ..StudyConfig::default()
+    };
+    let p = prepare(&cfg);
+    let plan = p.plan(&cfg);
+    let model = default_cost_model();
+
+    let mut t = Table::new(&[
+        "node (cpu+acc)", "FCFS Σunits", "PATS Σunits", "PATS gain %", "vs cpu-only",
+    ]);
+    let merged: Vec<_> = plan.units.iter().filter(|u| u.nodes.len() >= 2).collect();
+    let cpu_only = DeviceModel::new(4, 0);
+    let base: f64 = merged
+        .iter()
+        .map(|u| {
+            hetero_unit_makespan(u, &p.graph, &p.instances, &model, &cpu_only, SchedulePolicy::Pats)
+        })
+        .sum();
+
+    for (cpus, accs) in [(4usize, 1usize), (4, 2), (8, 2), (16, 4)] {
+        let devices = DeviceModel::paper_profile(cpus, accs);
+        let total = |policy| -> f64 {
+            merged
+                .iter()
+                .map(|u| hetero_unit_makespan(u, &p.graph, &p.instances, &model, &devices, policy))
+                .sum()
+        };
+        let fcfs = total(SchedulePolicy::Fcfs);
+        let pats = total(SchedulePolicy::Pats);
+        t.row(&[
+            format!("{cpus}+{accs}"),
+            fmt_secs(fcfs),
+            fmt_secs(pats),
+            format!("{:+.1}", (1.0 - pats / fcfs) * 100.0),
+            format!("{:.2}x", base / pats),
+        ]);
+    }
+    t.print(&format!(
+        "ablation — PATS vs FCFS over {} merged units (MOAT sample {})",
+        merged.len(),
+        20 * 16
+    ));
+    println!("(cpu-only baseline: {} across the same units)", fmt_secs(base));
+}

@@ -1,0 +1,61 @@
+//! Paper Fig. 19: MOAT study execution time vs sample size for the five
+//! application versions (No reuse / Stage level / Naïve / SCA / RTMA).
+//!
+//! Makespans come from the discrete-event cluster simulator (6 workers,
+//! the paper's "6 Stampede nodes"; WP are serial stage slots); the merge-analysis times
+//! are measured for real — they are the paper's contribution and the
+//! quantity Fig. 19 stacks on top of the bars. Expected shape: every
+//! reuse version beats NR; Naïve barely improves on Stage; SCA's merge
+//! time grows to a visible fraction of the run; RTMA matches SCA's reuse
+//! at negligible merge cost (speedup up to ~2.6× over NR).
+
+use rtf_reuse::benchx::{fmt_secs, Table};
+use rtf_reuse::config::{SaMethod, StudyConfig};
+use rtf_reuse::driver::{prepare, run_sim};
+use rtf_reuse::merging::FineAlgorithm;
+use rtf_reuse::simulate::{default_cost_model, SimOptions};
+
+fn main() {
+    let model = default_cost_model();
+    let workers = 6;
+    let mut t = Table::new(&[
+        "sample", "version", "makespan", "merge", "reuse %", "speedup vs NR",
+    ]);
+
+    for sample in [160usize, 320, 480, 640] {
+        let r = sample / 16;
+        let mut nr_makespan = None;
+        for (name, coarse, algo) in [
+            ("no reuse", false, FineAlgorithm::None),
+            ("stage level", true, FineAlgorithm::None),
+            ("naive", true, FineAlgorithm::Naive(7)),
+            ("sca", true, FineAlgorithm::Sca(7)),
+            ("rtma", true, FineAlgorithm::Rtma(7)),
+        ] {
+            let cfg = StudyConfig {
+                method: SaMethod::Moat { r },
+                coarse,
+                algorithm: algo,
+                workers,
+                ..StudyConfig::default()
+            };
+            let prepared = prepare(&cfg);
+            let plan = prepared.plan(&cfg); // merge time measured inside
+            let opts = SimOptions::new(workers);
+            let rep = run_sim(&prepared, &plan, &model, &opts);
+            let total = rep.makespan + plan.merge_time.as_secs_f64();
+            if nr_makespan.is_none() {
+                nr_makespan = Some(total);
+            }
+            t.row(&[
+                sample.to_string(),
+                name.to_string(),
+                fmt_secs(rep.makespan),
+                fmt_secs(plan.merge_time.as_secs_f64()),
+                format!("{:.1}", plan.fine_reuse() * 100.0),
+                format!("{:.2}x", nr_makespan.unwrap() / total),
+            ]);
+        }
+    }
+    t.print("Fig. 19 — MOAT study, 6 workers (sim makespan + real merge time)");
+}

@@ -1,0 +1,48 @@
+//! Paper Fig. 21: impact of MaxBucketSize (2..8) on RTMA execution time.
+//!
+//! Expected shape: larger buckets → more merging → smaller makespan,
+//! with diminishing returns once the design's sharing groups are
+//! captured; the end-to-end spread stays modest (paper: ≤ ~12% between
+//! MBS 2 and 8), which is what makes fine-grain reuse viable on
+//! memory-constrained nodes (small MBS ⇒ bounded merged-stage state).
+
+use rtf_reuse::benchx::{fmt_secs, Table};
+use rtf_reuse::config::{SaMethod, StudyConfig};
+use rtf_reuse::driver::{prepare, run_sim};
+use rtf_reuse::merging::FineAlgorithm;
+use rtf_reuse::simulate::{default_cost_model, SimOptions};
+
+fn main() {
+    let model = default_cost_model();
+    let workers = 6;
+    let r = 30; // sample 480
+    let mut t = Table::new(&["MaxBucketSize", "makespan", "reuse %", "seg units", "vs MBS=2"]);
+
+    let mut base = None;
+    for mbs in 2usize..=8 {
+        let cfg = StudyConfig {
+            method: SaMethod::Moat { r },
+            algorithm: FineAlgorithm::Rtma(mbs),
+            workers,
+            ..StudyConfig::default()
+        };
+        let prepared = prepare(&cfg);
+        let plan = prepared.plan(&cfg);
+        let opts = SimOptions::new(workers);
+        let rep = run_sim(&prepared, &plan, &model, &opts);
+        if base.is_none() {
+            base = Some(rep.makespan);
+        }
+        t.row(&[
+            mbs.to_string(),
+            fmt_secs(rep.makespan),
+            format!("{:.1}", plan.fine_reuse() * 100.0),
+            plan.units_of_stage(1).len().to_string(),
+            format!("{:+.1}%", (rep.makespan / base.unwrap() - 1.0) * 100.0),
+        ]);
+    }
+    t.print(&format!(
+        "Fig. 21 — MaxBucketSize sweep, MOAT sample {}, {workers} workers",
+        r * 16
+    ));
+}

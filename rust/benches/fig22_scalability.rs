@@ -1,0 +1,62 @@
+//! Paper Fig. 22 + Fig. 23: worker scaling of NR vs RTMA vs TRTMA
+//! (MOAT sample 1000, WP 8..256) with stages-per-worker ratios and
+//! parallel-efficiency series.
+//!
+//! Expected shape: RTMA (MaxBucketSize 10) wins at low WP but its fixed
+//! bucket count starves high WP — it drops below NR; TRTMA
+//! (MaxBuckets = 3×WP) adapts its bucket count and stays ≥ NR
+//! everywhere, with its advantage fading to ~1.0× at WP 256 (Table 5's
+//! companion figure).
+
+use rtf_reuse::benchx::{fmt_secs, Table};
+use rtf_reuse::config::{SaMethod, StudyConfig};
+use rtf_reuse::driver::{prepare, run_sim};
+use rtf_reuse::merging::{FineAlgorithm, TrtmaOptions};
+use rtf_reuse::simulate::{default_cost_model, SimOptions};
+
+fn main() {
+    let model = default_cost_model();
+    let r = 62; // sample 992 ≈ paper's 1000
+    let mut t = Table::new(&["WP", "NR", "RTMA(mbs=10)", "TRTMA(3xWP)", "S/W rtma", "S/W trtma"]);
+    let mut eff = Table::new(&["WP", "eff NR", "eff RTMA", "eff TRTMA"]);
+    let mut prev: Option<(f64, f64, f64)> = None;
+
+    for wp in [8usize, 16, 32, 64, 128, 256] {
+        let mk = |coarse: bool, algo: FineAlgorithm| {
+            let cfg = StudyConfig {
+                method: SaMethod::Moat { r },
+                coarse,
+                algorithm: algo,
+                workers: wp,
+                ..StudyConfig::default()
+            };
+            let prepared = prepare(&cfg);
+            let plan = prepared.plan(&cfg);
+            let opts = SimOptions::new(wp).with_cv(0.15, 42);
+            (run_sim(&prepared, &plan, &model, &opts), plan)
+        };
+        let (nr, _) = mk(true, FineAlgorithm::None);
+        let (rtma, rtma_plan) = mk(true, FineAlgorithm::Rtma(10));
+        let (trtma, trtma_plan) = mk(true, FineAlgorithm::Trtma(TrtmaOptions::new(3 * wp)));
+
+        t.row(&[
+            wp.to_string(),
+            fmt_secs(nr.makespan),
+            fmt_secs(rtma.makespan),
+            fmt_secs(trtma.makespan),
+            format!("{:.1}", rtma_plan.units_of_stage(1).len() as f64 / wp as f64),
+            format!("{:.1}", trtma_plan.units_of_stage(1).len() as f64 / wp as f64),
+        ]);
+        if let Some((p_nr, p_rt, p_tb)) = prev {
+            eff.row(&[
+                wp.to_string(),
+                format!("{:.2}", p_nr / (nr.makespan * 2.0)),
+                format!("{:.2}", p_rt / (rtma.makespan * 2.0)),
+                format!("{:.2}", p_tb / (trtma.makespan * 2.0)),
+            ]);
+        }
+        prev = Some((nr.makespan, rtma.makespan, trtma.makespan));
+    }
+    t.print(&format!("Fig. 22 — scaling, MOAT sample {} (cv=0.15)", r * 16));
+    eff.print("Fig. 23 — parallel efficiency vs previous WP (factor 2)");
+}

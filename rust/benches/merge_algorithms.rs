@@ -1,0 +1,78 @@
+//! Merge-algorithm microbenchmark: reuse-analysis cost of every
+//! fine-grain algorithm as the stage count grows.
+//!
+//! This is the scalability argument of paper §3.3: Naïve and RTMA scale
+//! ~linearly (hash-trie), TRTMA ~O(n²) worst-case, SCA O(n⁴) — the
+//! reason SCA DNFs at VBD sample sizes (Fig. 20).
+
+use std::time::Duration;
+
+use rtf_reuse::benchx::{fmt_secs, time_once, Table};
+use rtf_reuse::data::SplitMix64;
+use rtf_reuse::merging::reuse_tree::ReuseTree;
+use rtf_reuse::merging::{
+    naive_merge, reuse_fraction, rtma_merge, sca_merge, trtma_merge, MergeStage, TrtmaOptions,
+};
+
+/// MOAT-shaped stage population: families sharing long prefixes.
+fn population(n: usize, seed: u64) -> Vec<MergeStage> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n)
+        .map(|i| {
+            let fam = rng.uniform_usize(0, (n / 8).max(2)) as u64;
+            let sub = rng.uniform_usize(0, 4) as u64;
+            let path = vec![
+                fam,
+                fam * 31 + sub,
+                fam * 31 + sub * 7 + rng.next_u64() % 3,
+                rng.next_u64() % 97,
+                rng.next_u64() % 997,
+                rng.next_u64() % 9973,
+                rng.next_u64(),
+            ];
+            MergeStage::new(i, path)
+        })
+        .collect()
+}
+
+fn main() {
+    let sca_cap = 700; // SCA beyond this would dominate the bench (paper: DNF)
+    let mut t = Table::new(&["n", "tree build", "naive", "rtma", "trtma", "sca"]);
+    let mut q = Table::new(&["n", "naive reuse %", "rtma reuse %", "trtma reuse %", "sca reuse %"]);
+
+    for n in [100usize, 200, 400, 800, 1600, 3200] {
+        let stages = population(n, 42);
+        let (_, d_tree) = time_once(|| ReuseTree::build(&stages));
+        let (b_naive, d_naive) = time_once(|| naive_merge(&stages, 7));
+        let (b_rtma, d_rtma) = time_once(|| rtma_merge(&stages, 7));
+        let (b_trtma, d_trtma) =
+            time_once(|| trtma_merge(&stages, TrtmaOptions::new((n / 7).max(1))));
+        let (b_sca, d_sca) = if n <= sca_cap {
+            let (b, d) = time_once(|| sca_merge(&stages, 7));
+            (Some(b), Some(d))
+        } else {
+            (None, None)
+        };
+
+        t.row(&[
+            n.to_string(),
+            fmt_secs(d_tree.as_secs_f64()),
+            fmt_secs(d_naive.as_secs_f64()),
+            fmt_secs(d_rtma.as_secs_f64()),
+            fmt_secs(d_trtma.as_secs_f64()),
+            d_sca.map(|d: Duration| fmt_secs(d.as_secs_f64())).unwrap_or("DNF".into()),
+        ]);
+        q.row(&[
+            n.to_string(),
+            format!("{:.1}", reuse_fraction(&stages, &b_naive) * 100.0),
+            format!("{:.1}", reuse_fraction(&stages, &b_rtma) * 100.0),
+            format!("{:.1}", reuse_fraction(&stages, &b_trtma) * 100.0),
+            b_sca
+                .map(|b| format!("{:.1}", reuse_fraction(&stages, &b) * 100.0))
+                .unwrap_or("-".into()),
+        ]);
+    }
+
+    t.print("merge-analysis cost vs stage count (paper §3.3 complexity claims)");
+    q.print("reuse quality per algorithm (SCA ≈ RTMA; naive order-sensitive)");
+}

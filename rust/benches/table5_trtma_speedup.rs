@@ -1,0 +1,42 @@
+//! Paper Table 5: TRTMA speedup over No-Reuse and TRTMA's attained
+//! reuse, WP 8..256 (MOAT sample 1000, MaxBuckets = 3×WP).
+//!
+//! Expected shape: speedup 1.3× at WP 8 decaying monotonically toward
+//! ~1.0× at WP 256, with the attained reuse dropping as the bucket
+//! target (3×WP) forces finer partitions (paper: 33% → 10.7%).
+
+use rtf_reuse::benchx::Table;
+use rtf_reuse::config::{SaMethod, StudyConfig};
+use rtf_reuse::driver::{prepare, run_sim};
+use rtf_reuse::merging::{FineAlgorithm, TrtmaOptions};
+use rtf_reuse::simulate::{default_cost_model, SimOptions};
+
+fn main() {
+    let model = default_cost_model();
+    let r = 62; // sample 992 ≈ paper's 1000
+    let mut t = Table::new(&["WP", "speedup TRTMA vs NR", "TRTMA reuse %"]);
+
+    for wp in [8usize, 16, 32, 64, 128, 256] {
+        let mk = |coarse: bool, algo: FineAlgorithm| {
+            let cfg = StudyConfig {
+                method: SaMethod::Moat { r },
+                coarse,
+                algorithm: algo,
+                workers: wp,
+                ..StudyConfig::default()
+            };
+            let prepared = prepare(&cfg);
+            let plan = prepared.plan(&cfg);
+            let opts = SimOptions::new(wp).with_cv(0.15, 42);
+            (run_sim(&prepared, &plan, &model, &opts), plan)
+        };
+        let (nr, _) = mk(true, FineAlgorithm::None);
+        let (trtma, plan) = mk(true, FineAlgorithm::Trtma(TrtmaOptions::new(3 * wp)));
+        t.row(&[
+            wp.to_string(),
+            format!("{:.2}", nr.makespan / trtma.makespan),
+            format!("{:.2}", plan.fine_reuse() * 100.0),
+        ]);
+    }
+    t.print(&format!("Table 5 — TRTMA vs NR, MOAT sample {}", r * 16));
+}

@@ -1,0 +1,56 @@
+//! Paper Table 6: empirical per-task cost breakdown of the segmentation
+//! stage, measured on the real PJRT execution of the AOT artifacts.
+//!
+//! Absolute seconds differ from the paper's Stampede/OpenCV numbers (we
+//! run 128×128 synthetic tiles through XLA CPU); the quantity that must
+//! hold is the *shape*: task costs are far from uniform, with the
+//! irregular-wavefront tasks (t2 morphological reconstruction, t6
+//! watershed) dominating — the reason task-count-balanced buckets can
+//! still be imbalanced (paper §4.5.1, Fig. 24).
+
+use rtf_reuse::benchx::{fmt_secs, Table};
+use rtf_reuse::config::StudyConfig;
+use rtf_reuse::driver::{make_tiles, reference_masks};
+use rtf_reuse::runtime::PjrtEngine;
+use rtf_reuse::sampling::default_space;
+use rtf_reuse::simulate::default_cost_model;
+use rtf_reuse::workflow::paper_workflow;
+
+fn main() {
+    let cfg = StudyConfig { tiles: 4, ..StudyConfig::default() };
+    let mut engine = PjrtEngine::load(&cfg.artifacts_dir).expect("run `make artifacts` first");
+    let (h, w) = engine.tile_shape();
+    let space = default_space();
+    let wf = paper_workflow();
+    let tiles = make_tiles(&cfg, h, w);
+
+    // repeated chain executions over several tiles for stable means
+    for _ in 0..5 {
+        let _ = reference_masks(&mut engine, &space, &wf, &tiles).unwrap();
+    }
+
+    let rows = engine.timer().summary();
+    let seg: f64 = rows
+        .iter()
+        .filter(|(n, _, _)| n.starts_with('t'))
+        .map(|(_, m, _)| m)
+        .sum();
+    let paper = default_cost_model();
+    let paper_seg: f64 = (1..=7).map(|i| paper.cost_of(&format!("t{i}"))).sum();
+
+    let mut t = Table::new(&["task", "mean", "share %", "paper share %", "runs"]);
+    for (name, mean, n) in &rows {
+        if !name.starts_with('t') {
+            continue;
+        }
+        t.row(&[
+            name.clone(),
+            fmt_secs(*mean),
+            format!("{:.2}", mean / seg * 100.0),
+            format!("{:.2}", paper.cost_of(name) / paper_seg * 100.0),
+            n.to_string(),
+        ]);
+    }
+    t.print("Table 6 — per-task cost breakdown (measured via PJRT vs paper shares)");
+    println!("segmentation stage total: {} per tile", fmt_secs(seg));
+}

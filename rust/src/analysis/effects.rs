@@ -1,0 +1,155 @@
+//! Morris elementary effects (paper §2.2, Table 2 left column).
+
+use crate::sampling::MoatSample;
+
+/// Per-parameter MOAT statistics.
+#[derive(Clone, Debug)]
+pub struct MoatIndices {
+    /// Signed mean elementary effect (the paper's "First-order Effect";
+    /// sign conveys direction, magnitude conveys influence).
+    pub mean: Vec<f64>,
+    /// Mean absolute elementary effect μ* (Campolongo's screening
+    /// statistic — robust to non-monotone effects).
+    pub mu_star: Vec<f64>,
+    /// Standard deviation of the effects (interaction/nonlinearity).
+    pub sigma: Vec<f64>,
+    /// Elementary-effect count per parameter (r when every trajectory
+    /// perturbs every parameter once).
+    pub count: Vec<usize>,
+}
+
+impl MoatIndices {
+    /// Parameter indices sorted by decreasing μ*.
+    pub fn ranking(&self) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.mu_star.len()).collect();
+        order.sort_by(|&a, &b| {
+            self.mu_star[b].partial_cmp(&self.mu_star[a]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        order
+    }
+}
+
+/// Compute the elementary effects of a MOAT experiment. `y[i]` is the
+/// workflow output (here: 1 − dice vs. the reference mask) of
+/// evaluation `i` of `sample.sets`; `k` is the parameter-space dimension.
+///
+/// Each trajectory step perturbing parameter `p` by normalized Δ yields
+/// `EE_p = (y_after − y_before) / Δ`.
+pub fn moat_effects(sample: &MoatSample, y: &[f64], k: usize) -> MoatIndices {
+    assert_eq!(y.len(), sample.sets.len(), "one output per evaluation");
+    let mut sums = vec![0.0f64; k];
+    let mut abs_sums = vec![0.0f64; k];
+    let mut sq_sums = vec![0.0f64; k];
+    let mut count = vec![0usize; k];
+
+    for t in &sample.trajectories {
+        for (i, step) in t.steps.iter().enumerate() {
+            let before = y[t.first_eval + i];
+            let after = y[t.first_eval + i + 1];
+            let ee = (after - before) / step.delta_norm;
+            sums[step.param] += ee;
+            abs_sums[step.param] += ee.abs();
+            sq_sums[step.param] += ee * ee;
+            count[step.param] += 1;
+        }
+    }
+
+    let mut mean = vec![0.0; k];
+    let mut mu_star = vec![0.0; k];
+    let mut sigma = vec![0.0; k];
+    for p in 0..k {
+        let n = count[p] as f64;
+        if count[p] == 0 {
+            continue;
+        }
+        mean[p] = sums[p] / n;
+        mu_star[p] = abs_sums[p] / n;
+        let var = (sq_sums[p] / n - mean[p] * mean[p]).max(0.0);
+        sigma[p] = var.sqrt();
+    }
+    MoatIndices { mean, mu_star, sigma, count }
+}
+
+/// The two-phase SA screen: the `k` parameters with the largest μ*
+/// (paper: MOAT over all 15, VBD over the top 8), returned in canonical
+/// (ascending index) order.
+pub fn screen_top_k(indices: &MoatIndices, k: usize) -> Vec<usize> {
+    let mut top: Vec<usize> = indices.ranking().into_iter().take(k).collect();
+    top.sort_unstable();
+    top
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::{default_space, HaltonSampler, MoatDesign};
+
+    /// Synthetic model with known sensitivities: y = 3·x5 + 1·x6 + noiseless
+    /// rest (x in level fractions).
+    fn synth_outputs(sample: &crate::sampling::MoatSample) -> Vec<f64> {
+        let space = default_space();
+        sample
+            .sets
+            .iter()
+            .map(|set| {
+                let f = |p: usize| {
+                    let d = &space.params[p];
+                    let lo = d.grid[0];
+                    let hi = *d.grid.last().unwrap();
+                    (set[p] - lo) / (hi - lo)
+                };
+                3.0 * f(5) + 1.0 * f(6)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn recovers_known_influence_ordering() {
+        let space = default_space();
+        let sample = MoatDesign::new(20).generate(&space, &mut HaltonSampler::new(0), 7);
+        let y = synth_outputs(&sample);
+        let idx = moat_effects(&sample, &y, space.dim());
+        let rank = idx.ranking();
+        assert_eq!(rank[0], 5, "G1 dominates: {:?}", idx.mu_star);
+        assert_eq!(rank[1], 6, "G2 second");
+        // linear noiseless model: sigma ~ 0 for influential params
+        assert!(idx.sigma[5] < 1e-9, "sigma {}", idx.sigma[5]);
+        // non-influential params have zero effect
+        for p in [0usize, 1, 2, 10, 11] {
+            assert!(idx.mu_star[p] < 1e-12, "param {p}: {}", idx.mu_star[p]);
+        }
+    }
+
+    #[test]
+    fn signed_mean_tracks_direction() {
+        let space = default_space();
+        let sample = MoatDesign::new(15).generate(&space, &mut HaltonSampler::new(1), 3);
+        // y decreases with G1
+        let y: Vec<f64> = sample.sets.iter().map(|s| -s[5]).collect();
+        let idx = moat_effects(&sample, &y, space.dim());
+        assert!(idx.mean[5] < 0.0);
+        assert!(idx.mu_star[5] > 0.0);
+    }
+
+    #[test]
+    fn every_param_measured_r_times() {
+        let space = default_space();
+        let r = 9;
+        let sample = MoatDesign::new(r).generate(&space, &mut HaltonSampler::new(2), 5);
+        let y = vec![0.0; sample.sets.len()];
+        let idx = moat_effects(&sample, &y, space.dim());
+        assert!(idx.count.iter().all(|&c| c == r), "{:?}", idx.count);
+    }
+
+    #[test]
+    fn screen_top_k_returns_sorted_subset() {
+        let space = default_space();
+        let sample = MoatDesign::new(12).generate(&space, &mut HaltonSampler::new(3), 11);
+        let y = synth_outputs(&sample);
+        let idx = moat_effects(&sample, &y, space.dim());
+        let top = screen_top_k(&idx, 8);
+        assert_eq!(top.len(), 8);
+        assert!(top.windows(2).all(|w| w[0] < w[1]));
+        assert!(top.contains(&5) && top.contains(&6));
+    }
+}

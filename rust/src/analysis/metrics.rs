@@ -1,0 +1,100 @@
+//! Mask-comparison metrics — Rust reference implementation of the `cmp`
+//! artifact's numbers (used for cross-checking and for the simulator).
+
+use crate::data::Plane;
+
+fn confusion(a: &Plane, b: &Plane, thr: f32) -> (f64, f64, f64) {
+    assert_eq!(a.height(), b.height());
+    assert_eq!(a.width(), b.width());
+    let mut inter = 0u64;
+    let mut na = 0u64;
+    let mut nb = 0u64;
+    for (x, y) in a.data().iter().zip(b.data()) {
+        let pa = *x > thr;
+        let pb = *y > thr;
+        na += pa as u64;
+        nb += pb as u64;
+        inter += (pa && pb) as u64;
+    }
+    (inter as f64, na as f64, nb as f64)
+}
+
+/// Dice coefficient 2|A∩B| / (|A|+|B|) over thresholded masks. Two empty
+/// masks are perfectly similar (1.0).
+pub fn dice(a: &Plane, b: &Plane, thr: f32) -> f64 {
+    let (inter, na, nb) = confusion(a, b, thr);
+    if na + nb == 0.0 {
+        1.0
+    } else {
+        2.0 * inter / (na + nb)
+    }
+}
+
+/// Jaccard index |A∩B| / |A∪B| over thresholded masks.
+pub fn jaccard(a: &Plane, b: &Plane, thr: f32) -> f64 {
+    let (inter, na, nb) = confusion(a, b, thr);
+    let union = na + nb - inter;
+    if union == 0.0 {
+        1.0
+    } else {
+        inter / union
+    }
+}
+
+/// Mean absolute difference between two planes (the `cmp` artifact's
+/// third metric).
+pub fn mask_diff(a: &Plane, b: &Plane) -> f64 {
+    let n = a.data().len().max(1);
+    a.data().iter().zip(b.data()).map(|(x, y)| (x - y).abs() as f64).sum::<f64>() / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plane(vals: &[f32], w: usize) -> Plane {
+        Plane::new(vals.to_vec(), vals.len() / w, w).unwrap()
+    }
+
+    #[test]
+    fn identical_masks_score_one() {
+        let a = plane(&[1.0, 0.0, 1.0, 1.0], 2);
+        assert_eq!(dice(&a, &a, 0.5), 1.0);
+        assert_eq!(jaccard(&a, &a, 0.5), 1.0);
+        assert_eq!(mask_diff(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn disjoint_masks_score_zero() {
+        let a = plane(&[1.0, 1.0, 0.0, 0.0], 2);
+        let b = plane(&[0.0, 0.0, 1.0, 1.0], 2);
+        assert_eq!(dice(&a, &b, 0.5), 0.0);
+        assert_eq!(jaccard(&a, &b, 0.5), 0.0);
+        assert_eq!(mask_diff(&a, &b), 1.0);
+    }
+
+    #[test]
+    fn half_overlap() {
+        let a = plane(&[1.0, 1.0, 0.0, 0.0], 2);
+        let b = plane(&[1.0, 0.0, 1.0, 0.0], 2);
+        assert!((dice(&a, &b, 0.5) - 0.5).abs() < 1e-12);
+        assert!((jaccard(&a, &b, 0.5) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_masks_are_similar() {
+        let a = plane(&[0.0; 4], 2);
+        assert_eq!(dice(&a, &a, 0.5), 1.0);
+        assert_eq!(jaccard(&a, &a, 0.5), 1.0);
+    }
+
+    #[test]
+    fn dice_jaccard_relation() {
+        // d = 2j/(1+j) always
+        let a = plane(&[1.0, 1.0, 1.0, 0.0, 0.0, 0.0], 3);
+        let b = plane(&[1.0, 1.0, 0.0, 1.0, 0.0, 0.0], 3);
+        let d = dice(&a, &b, 0.5);
+        let j = jaccard(&a, &b, 0.5);
+        assert!((d - 2.0 * j / (1.0 + j)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,18 @@
+//! Sensitivity-analysis statistics — the numbers of paper Table 2.
+//!
+//! * [`moat_effects`] — Morris elementary effects: per-parameter signed
+//!   mean effect, μ* (mean absolute effect) and σ (effect spread).
+//! * [`sobol_indices`] — Saltelli/Jansen estimators of first-order and
+//!   total-order Sobol indices over a [`VbdSample`].
+//! * [`dice`] / [`jaccard`] — mask-comparison metrics (Rust reference for
+//!   the `cmp` artifact; the coordinator uses the artifact's numbers).
+//! * [`screen_top_k`] — the paper's two-phase flow: pick the k most
+//!   influential parameters from a MOAT screen to feed the VBD study.
+
+mod effects;
+mod metrics;
+mod sobol;
+
+pub use effects::{moat_effects, screen_top_k, MoatIndices};
+pub use metrics::{dice, jaccard, mask_diff};
+pub use sobol::{sobol_indices, SobolIndices};

@@ -1,0 +1,134 @@
+//! Sobol indices via the Saltelli design (paper §2.2, Table 2 right).
+
+use crate::sampling::VbdSample;
+
+/// First-order (main) and total-order Sobol indices per active parameter.
+#[derive(Clone, Debug)]
+pub struct SobolIndices {
+    /// S_i — variance attributable to parameter i alone ("Main").
+    pub first: Vec<f64>,
+    /// ST_i — variance including all interactions of i ("Total").
+    pub total: Vec<f64>,
+    /// Total output variance over the A∪B sample.
+    pub variance: f64,
+}
+
+impl SobolIndices {
+    /// Higher-order effect proxy per parameter: ST_i − S_i.
+    pub fn interaction(&self, i: usize) -> f64 {
+        self.total[i] - self.first[i]
+    }
+}
+
+/// Estimate Sobol indices from the evaluations of a Saltelli design.
+/// `y[i]` is the output of `sample.sets[i]`.
+///
+/// Estimators (Saltelli 2010 / Jansen 1999):
+///   S_i  =  mean( f_B · (f_ABi − f_A) ) / V
+///   ST_i =  mean( (f_A − f_ABi)² ) / (2 V)
+pub fn sobol_indices(sample: &VbdSample, y: &[f64]) -> SobolIndices {
+    assert_eq!(y.len(), sample.sample_size(), "one output per evaluation");
+    let n = sample.n;
+    let k = sample.k;
+
+    let fa: Vec<f64> = (0..n).map(|j| y[sample.idx_a(j)]).collect();
+    let fb: Vec<f64> = (0..n).map(|j| y[sample.idx_b(j)]).collect();
+
+    // total variance over A ∪ B
+    let all: Vec<f64> = fa.iter().chain(&fb).copied().collect();
+    let mean = all.iter().sum::<f64>() / all.len() as f64;
+    let variance = all.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / all.len() as f64;
+
+    let mut first = vec![0.0; k];
+    let mut total = vec![0.0; k];
+    if variance > 1e-300 {
+        for i in 0..k {
+            let mut s = 0.0;
+            let mut t = 0.0;
+            for j in 0..n {
+                let fab = y[sample.idx_ab(i, j)];
+                s += fb[j] * (fab - fa[j]);
+                t += (fa[j] - fab) * (fa[j] - fab);
+            }
+            first[i] = s / (n as f64 * variance);
+            total[i] = t / (2.0 * n as f64 * variance);
+        }
+    }
+    SobolIndices { first, total, variance }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::{default_space, LatinHypercube, VbdDesign};
+
+    /// Ishigami-like additive model on normalized levels: strong x0,
+    /// moderate x1, inert x2.
+    fn run(n: usize) -> SobolIndices {
+        let space = default_space();
+        let active = vec![5usize, 6, 7]; // G1, G2, minSize
+        let sample = VbdDesign::new(n).generate(&space, &active, &mut LatinHypercube::new(17));
+        let norm = |p: usize, v: f64| {
+            let d = &space.params[p];
+            (v - d.grid[0]) / (d.grid.last().unwrap() - d.grid[0])
+        };
+        let y: Vec<f64> = sample
+            .sets
+            .iter()
+            .map(|s| 4.0 * norm(5, s[5]) + 1.0 * norm(6, s[6]))
+            .collect();
+        sobol_indices(&sample, &y)
+    }
+
+    #[test]
+    fn additive_model_indices() {
+        let idx = run(4000);
+        // analytic: Var = 16/12·σ0² + 1/12... with uniform levels the
+        // first-order shares are 16:1:0
+        assert!(idx.first[0] > 0.85, "S_G1 {}", idx.first[0]);
+        assert!(idx.first[1] > 0.02 && idx.first[1] < 0.15, "S_G2 {}", idx.first[1]);
+        assert!(idx.first[2].abs() < 0.05, "S_minSize {}", idx.first[2]);
+        // additive model: total ≈ first
+        for i in 0..3 {
+            assert!(
+                (idx.total[i] - idx.first[i]).abs() < 0.08,
+                "param {i}: S {} vs ST {}",
+                idx.first[i],
+                idx.total[i]
+            );
+        }
+    }
+
+    #[test]
+    fn interaction_detected() {
+        let space = default_space();
+        let active = vec![5usize, 6];
+        let sample = VbdDesign::new(4000).generate(&space, &active, &mut LatinHypercube::new(3));
+        let norm = |p: usize, v: f64| {
+            let d = &space.params[p];
+            (v - d.grid[0]) / (d.grid.last().unwrap() - d.grid[0])
+        };
+        // pure interaction: y = x0·x1 (centered)
+        let y: Vec<f64> = sample
+            .sets
+            .iter()
+            .map(|s| (norm(5, s[5]) - 0.5) * (norm(6, s[6]) - 0.5))
+            .collect();
+        let idx = sobol_indices(&sample, &y);
+        assert!(idx.first[0].abs() < 0.1, "no main effect: {}", idx.first[0]);
+        assert!(idx.total[0] > 0.5, "interaction in total: {}", idx.total[0]);
+        assert!(idx.interaction(0) > 0.4);
+    }
+
+    #[test]
+    fn constant_output_yields_zero_indices() {
+        let space = default_space();
+        let sample =
+            VbdDesign::new(50).generate(&space, &[5, 6], &mut LatinHypercube::new(9));
+        let y = vec![3.25; sample.sample_size()];
+        let idx = sobol_indices(&sample, &y);
+        assert_eq!(idx.variance, 0.0);
+        assert!(idx.first.iter().all(|&v| v == 0.0));
+        assert!(idx.total.iter().all(|&v| v == 0.0));
+    }
+}

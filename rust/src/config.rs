@@ -1,0 +1,287 @@
+//! Study configuration: one struct describing a full SA run — method,
+//! sampler, merging algorithm, execution engine, cluster shape — parsed
+//! from CLI-style `key=value` pairs or JSON, consumed by the CLI, the
+//! examples and the bench harness.
+
+use crate::merging::{FineAlgorithm, TrtmaOptions};
+use crate::{Error, Result};
+
+/// Which SA method generates the experiments.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SaMethod {
+    /// Morris screening with `r` trajectories (sample = r(k+1)).
+    Moat { r: usize },
+    /// Saltelli VBD with base sample `n` over `k_active` screened
+    /// parameters (sample = n(k_active+2)).
+    Vbd { n: usize, k_active: usize },
+}
+
+impl SaMethod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SaMethod::Moat { .. } => "moat",
+            SaMethod::Vbd { .. } => "vbd",
+        }
+    }
+}
+
+/// Which base sampler draws the design points (Table 4 compares these).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplerKind {
+    /// Quasi-Monte-Carlo (Halton).
+    Qmc,
+    /// Plain Monte-Carlo.
+    Mc,
+    /// Latin Hypercube.
+    Lhs,
+}
+
+impl SamplerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SamplerKind::Qmc => "qmc",
+            SamplerKind::Mc => "mc",
+            SamplerKind::Lhs => "lhs",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "qmc" | "halton" => Ok(SamplerKind::Qmc),
+            "mc" | "monte-carlo" => Ok(SamplerKind::Mc),
+            "lhs" | "latin" => Ok(SamplerKind::Lhs),
+            other => Err(Error::Config(format!("unknown sampler `{other}`"))),
+        }
+    }
+
+    /// Instantiate the sampler.
+    pub fn build(&self, seed: u64) -> Box<dyn crate::sampling::Sampler> {
+        match self {
+            SamplerKind::Qmc => Box::new(crate::sampling::HaltonSampler::new(seed)),
+            SamplerKind::Mc => Box::new(crate::sampling::MonteCarlo::new(seed)),
+            SamplerKind::Lhs => Box::new(crate::sampling::LatinHypercube::new(seed)),
+        }
+    }
+}
+
+/// Execution engine for the planned study.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineMode {
+    /// Real PJRT execution of the AOT artifacts.
+    Pjrt,
+    /// Discrete-event simulation with the cost model.
+    Sim,
+}
+
+/// The full study configuration.
+#[derive(Clone, Debug)]
+pub struct StudyConfig {
+    pub method: SaMethod,
+    pub sampler: SamplerKind,
+    pub algorithm: FineAlgorithm,
+    /// Coarse (stage-level) merging on/off — off only for the paper's
+    /// "No reuse" replica baseline.
+    pub coarse: bool,
+    pub engine: EngineMode,
+    /// Worker count (threads in PJRT mode; simulated WP in sim mode).
+    pub workers: usize,
+    /// Cores per simulated worker node (task-level parallelism inside a
+    /// merged stage, paper Fig. 4). 1 = serial stage execution, which is
+    /// what the paper's WP-scaling experiments correspond to.
+    pub cores: usize,
+    /// Tiles per study (each evaluation runs on every tile).
+    pub tiles: usize,
+    pub seed: u64,
+    /// Artifact directory for PJRT mode.
+    pub artifacts_dir: String,
+    /// Optional workflow descriptor file (paper §3.1); defaults to the
+    /// built-in paper workflow. Custom workflows simulate with default
+    /// task costs; PJRT execution requires matching artifacts.
+    pub workflow_file: Option<String>,
+}
+
+impl Default for StudyConfig {
+    fn default() -> Self {
+        Self {
+            method: SaMethod::Moat { r: 10 },
+            sampler: SamplerKind::Qmc,
+            algorithm: FineAlgorithm::Rtma(7),
+            coarse: true,
+            engine: EngineMode::Pjrt,
+            workers: 2,
+            cores: 1,
+            tiles: 1,
+            seed: 42,
+            artifacts_dir: "artifacts".into(),
+            workflow_file: None,
+        }
+    }
+}
+
+impl StudyConfig {
+    /// Parse `key=value` arguments over the defaults. Recognized keys:
+    /// `method` (moat|vbd), `r`, `n`, `k-active`, `sampler`
+    /// (qmc|mc|lhs), `algo` (none|naive|sca|rtma|trtma), `mbs`,
+    /// `max-buckets`, `coarse` (on|off), `engine` (pjrt|sim),
+    /// `workers`, `tiles`, `seed`, `artifacts`.
+    pub fn from_args(args: &[String]) -> Result<Self> {
+        let mut cfg = StudyConfig::default();
+        let mut algo_name = String::from("rtma");
+        let mut mbs = 7usize;
+        let mut max_buckets = 0usize;
+        let mut r = 10usize;
+        let mut n = 200usize;
+        let mut k_active = 8usize;
+        let mut method = String::from("moat");
+
+        for a in args {
+            let (key, value) = a
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("expected key=value, got `{a}`")))?;
+            let uint = |v: &str| -> Result<usize> {
+                v.parse().map_err(|_| Error::Config(format!("`{key}` needs an integer, got `{v}`")))
+            };
+            match key {
+                "method" => method = value.to_string(),
+                "r" => r = uint(value)?,
+                "n" => n = uint(value)?,
+                "k-active" => k_active = uint(value)?,
+                "sampler" => cfg.sampler = SamplerKind::parse(value)?,
+                "algo" => algo_name = value.to_string(),
+                "mbs" => mbs = uint(value)?,
+                "max-buckets" => max_buckets = uint(value)?,
+                "coarse" => cfg.coarse = value == "on" || value == "true",
+                "engine" => {
+                    cfg.engine = match value {
+                        "pjrt" => EngineMode::Pjrt,
+                        "sim" => EngineMode::Sim,
+                        other => {
+                            return Err(Error::Config(format!("unknown engine `{other}`")))
+                        }
+                    }
+                }
+                "workers" => cfg.workers = uint(value)?.max(1),
+                "cores" => cfg.cores = uint(value)?.max(1),
+                "tiles" => cfg.tiles = uint(value)?.max(1),
+                "seed" => cfg.seed = uint(value)? as u64,
+                "artifacts" => cfg.artifacts_dir = value.to_string(),
+                "workflow" => cfg.workflow_file = Some(value.to_string()),
+                other => return Err(Error::Config(format!("unknown option `{other}`"))),
+            }
+        }
+
+        cfg.method = match method.as_str() {
+            "moat" => SaMethod::Moat { r },
+            "vbd" => SaMethod::Vbd { n, k_active },
+            other => return Err(Error::Config(format!("unknown method `{other}`"))),
+        };
+        cfg.algorithm = parse_algorithm(&algo_name, mbs, max_buckets)?;
+        Ok(cfg)
+    }
+
+    /// Human-readable one-liner for logs and reports.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} sampler={} algo={} coarse={} engine={:?} workers={} tiles={} seed={}",
+            match self.method {
+                SaMethod::Moat { r } => format!("moat(r={r})"),
+                SaMethod::Vbd { n, k_active } => format!("vbd(n={n},k={k_active})"),
+            },
+            self.sampler.name(),
+            self.algorithm.name(),
+            if self.coarse { "on" } else { "off" },
+            self.engine,
+            self.workers,
+            self.tiles,
+            self.seed
+        )
+    }
+}
+
+/// Parse a fine-grain algorithm name plus its size knob.
+pub fn parse_algorithm(name: &str, mbs: usize, max_buckets: usize) -> Result<FineAlgorithm> {
+    Ok(match name {
+        "none" | "stage" | "stage-level" => FineAlgorithm::None,
+        "naive" => FineAlgorithm::Naive(mbs),
+        "sca" => FineAlgorithm::Sca(mbs),
+        "rtma" => FineAlgorithm::Rtma(mbs),
+        "trtma" => {
+            FineAlgorithm::Trtma(TrtmaOptions::new(if max_buckets > 0 { max_buckets } else { mbs }))
+        }
+        "trtma-cost" => FineAlgorithm::TrtmaCost(TrtmaOptions::new(if max_buckets > 0 {
+            max_buckets
+        } else {
+            mbs
+        })),
+        other => return Err(Error::Config(format!("unknown algorithm `{other}`"))),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = StudyConfig::default();
+        assert_eq!(c.method, SaMethod::Moat { r: 10 });
+        assert_eq!(c.sampler, SamplerKind::Qmc);
+        assert!(c.coarse);
+    }
+
+    #[test]
+    fn parses_full_spec() {
+        let c = StudyConfig::from_args(&args(&[
+            "method=vbd",
+            "n=500",
+            "k-active=8",
+            "sampler=lhs",
+            "algo=trtma",
+            "max-buckets=24",
+            "engine=sim",
+            "workers=8",
+            "seed=7",
+        ]))
+        .unwrap();
+        assert_eq!(c.method, SaMethod::Vbd { n: 500, k_active: 8 });
+        assert_eq!(c.sampler, SamplerKind::Lhs);
+        assert!(matches!(c.algorithm, FineAlgorithm::Trtma(o) if o.max_buckets == 24));
+        assert_eq!(c.engine, EngineMode::Sim);
+        assert_eq!(c.workers, 8);
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_values() {
+        assert!(StudyConfig::from_args(&args(&["bogus=1"])).is_err());
+        assert!(StudyConfig::from_args(&args(&["method=sobol"])).is_err());
+        assert!(StudyConfig::from_args(&args(&["algo=magic"])).is_err());
+        assert!(StudyConfig::from_args(&args(&["workers"])).is_err());
+        assert!(StudyConfig::from_args(&args(&["r=xyz"])).is_err());
+    }
+
+    #[test]
+    fn algorithm_parsing() {
+        assert_eq!(parse_algorithm("none", 5, 0).unwrap(), FineAlgorithm::None);
+        assert_eq!(parse_algorithm("rtma", 5, 0).unwrap(), FineAlgorithm::Rtma(5));
+        assert!(matches!(
+            parse_algorithm("trtma", 5, 0).unwrap(),
+            FineAlgorithm::Trtma(o) if o.max_buckets == 5
+        ));
+    }
+
+    #[test]
+    fn samplers_build() {
+        for kind in [SamplerKind::Qmc, SamplerKind::Mc, SamplerKind::Lhs] {
+            let mut s = kind.build(1);
+            let pts = s.draw(4, 3);
+            assert_eq!(pts.len(), 4);
+            assert!(pts.iter().all(|p| p.len() == 3));
+            assert!(pts.iter().flatten().all(|&v| (0.0..1.0).contains(&v)));
+        }
+    }
+}

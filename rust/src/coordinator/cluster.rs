@@ -1,0 +1,274 @@
+//! The manager/worker cluster: demand-driven unit dispatch over worker
+//! threads, each with a private PJRT engine.
+
+use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::path::PathBuf;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::data::{Plane, TileSet};
+use crate::merging::{CompactGraph, StudyPlan};
+use crate::runtime::{PjrtEngine, TaskTimer};
+use crate::workflow::StageInstance;
+use crate::{Error, Result};
+
+use super::exec::{execute_unit, UnitOutput};
+use super::store::{NodeStore, State};
+
+/// Cluster shape and artifact location.
+#[derive(Clone, Debug)]
+pub struct ExecuteOptions {
+    pub workers: usize,
+    pub artifacts_dir: PathBuf,
+    /// Resident-state ceiling in bytes; states beyond it spill to a
+    /// temp directory (the RTF's hierarchical storage layer). `None` =
+    /// unbounded.
+    pub state_limit_bytes: Option<usize>,
+}
+
+impl ExecuteOptions {
+    pub fn new(workers: usize, artifacts_dir: impl Into<PathBuf>) -> Self {
+        Self {
+            workers: workers.max(1),
+            artifacts_dir: artifacts_dir.into(),
+            state_limit_bytes: None,
+        }
+    }
+
+    /// Bound resident inter-unit state, spilling the excess to disk.
+    pub fn with_state_limit(mut self, bytes: usize) -> Self {
+        self.state_limit_bytes = Some(bytes);
+        self
+    }
+}
+
+/// Result of a real (PJRT) study execution.
+#[derive(Clone, Debug)]
+pub struct StudyOutcome {
+    /// Per-evaluation (dice, jaccard, mean-diff) vs. the reference mask.
+    pub metrics: Vec<[f32; 3]>,
+    /// Per-evaluation scalar output fed to the SA estimators: 1 − dice
+    /// (0 = identical to reference, grows with divergence).
+    pub y: Vec<f64>,
+    /// Wall time of the whole execution (includes engine compilation).
+    pub wall: Duration,
+    /// Per-task timings merged over all workers (Table 6 source).
+    pub timer: TaskTimer,
+    /// High-water mark of inter-unit state bytes (memory pressure of the
+    /// merge plan — the paper's MaxBucketSize motivation).
+    pub peak_state_bytes: usize,
+}
+
+/// Scheduler state shared between the manager and the workers. Ready
+/// units are dispatched costliest-first (LPT), keeping long merged
+/// buckets off the straggler tail at low units-per-worker ratios.
+struct Sched {
+    ready: BinaryHeap<(usize, std::cmp::Reverse<usize>)>,
+    indeg: Vec<usize>,
+    children: Vec<Vec<usize>>,
+    done: usize,
+    total: usize,
+    failed: Option<String>,
+}
+
+/// Execute a planned study on real PJRT engines.
+///
+/// `tiles` and `references` are keyed by tile id; every evaluation's tile
+/// must be present. Returns per-evaluation metrics in evaluation order
+/// (`0..n_evals`).
+pub fn execute_study(
+    opts: &ExecuteOptions,
+    plan: &StudyPlan,
+    graph: &CompactGraph,
+    instances: &[StageInstance],
+    tiles: &HashMap<u64, TileSet>,
+    references: &HashMap<u64, Plane>,
+    n_evals: usize,
+) -> Result<StudyOutcome> {
+    plan.assert_valid(graph);
+    let start = Instant::now();
+    let n = plan.units.len();
+
+    // consumers per compact node = distinct downstream units
+    let mut consumers = vec![0usize; graph.nodes.len()];
+    {
+        let mut seen: HashSet<(usize, usize)> = HashSet::new();
+        for u in &plan.units {
+            for &node in &u.nodes {
+                if let Some(p) = graph.nodes[node].parent {
+                    if seen.insert((u.id, p)) {
+                        consumers[p] += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    let sched = Mutex::new(Sched {
+        ready: (0..n)
+            .filter(|&i| plan.units[i].deps.is_empty())
+            .map(|i| (plan.units[i].task_cost, std::cmp::Reverse(i)))
+            .collect(),
+        indeg: plan.units.iter().map(|u| u.deps.len()).collect(),
+        children: {
+            let mut ch: Vec<Vec<usize>> = vec![Vec::new(); n];
+            for u in &plan.units {
+                for &d in &u.deps {
+                    ch[d].push(u.id);
+                }
+            }
+            ch
+        },
+        done: 0,
+        total: n,
+        failed: None,
+    });
+    let cv = Condvar::new();
+    let store = match opts.state_limit_bytes {
+        Some(limit) => {
+            let dir = std::env::temp_dir().join(format!("rtf-reuse-spill-{}", std::process::id()));
+            std::fs::create_dir_all(&dir)?;
+            NodeStore::with_spill(limit, dir)
+        }
+        None => NodeStore::new(),
+    };
+    let metrics_map: Mutex<HashMap<usize, [f32; 3]>> = Mutex::new(HashMap::new());
+    let timers: Mutex<Vec<(String, f64, u64)>> = Mutex::new(Vec::new());
+
+    std::thread::scope(|scope| {
+        for _ in 0..opts.workers {
+            scope.spawn(|| {
+                worker_loop(
+                    opts, plan, graph, instances, tiles, references, &sched, &cv, &store,
+                    &metrics_map, &timers, &consumers,
+                );
+            });
+        }
+    });
+
+    let sched = sched.into_inner().unwrap();
+    if let Some(msg) = sched.failed {
+        return Err(Error::Coordinator(msg));
+    }
+    if sched.done != n {
+        return Err(Error::Coordinator(format!("only {} of {n} units completed", sched.done)));
+    }
+
+    // per-evaluation metrics from the last stage's compact node
+    let metrics_map = metrics_map.into_inner().unwrap();
+    let mut metrics = Vec::with_capacity(n_evals);
+    let mut y = Vec::with_capacity(n_evals);
+    for eval in 0..n_evals {
+        let nodes = graph
+            .eval_nodes
+            .get(&eval)
+            .ok_or_else(|| Error::Coordinator(format!("evaluation {eval} missing from graph")))?;
+        let last = *nodes.last().unwrap();
+        let m = metrics_map
+            .get(&last)
+            .ok_or_else(|| Error::Coordinator(format!("no metrics for eval {eval}")))?;
+        metrics.push(*m);
+        y.push(1.0 - m[0] as f64);
+    }
+
+    let mut timer = TaskTimer::default();
+    timer.absorb(&timers.into_inner().unwrap());
+
+    Ok(StudyOutcome {
+        metrics,
+        y,
+        wall: start.elapsed(),
+        timer,
+        peak_state_bytes: store.peak_bytes(),
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    opts: &ExecuteOptions,
+    plan: &StudyPlan,
+    graph: &CompactGraph,
+    instances: &[StageInstance],
+    tiles: &HashMap<u64, TileSet>,
+    references: &HashMap<u64, Plane>,
+    sched: &Mutex<Sched>,
+    cv: &Condvar,
+    store: &NodeStore,
+    metrics_map: &Mutex<HashMap<usize, [f32; 3]>>,
+    timers: &Mutex<Vec<(String, f64, u64)>>,
+    consumers: &[usize],
+) {
+    let fail = |msg: String| {
+        let mut s = sched.lock().unwrap();
+        if s.failed.is_none() {
+            s.failed = Some(msg);
+        }
+        cv.notify_all();
+    };
+
+    let mut engine = match PjrtEngine::load(&opts.artifacts_dir) {
+        Ok(e) => e,
+        Err(e) => return fail(format!("worker engine load failed: {e}")),
+    };
+
+    loop {
+        // demand-driven: request the next ready unit
+        let unit_id = {
+            let mut s = sched.lock().unwrap();
+            loop {
+                if s.failed.is_some() || s.done == s.total {
+                    // flush this worker's timings before leaving
+                    timers.lock().unwrap().extend(engine.timer().summary());
+                    return;
+                }
+                if let Some((_, std::cmp::Reverse(u))) = s.ready.pop() {
+                    break u;
+                }
+                s = cv.wait(s).unwrap();
+            }
+        };
+        let unit = &plan.units[unit_id];
+
+        // input state: tile planes for stage 0, upstream node otherwise
+        let rep = &instances[graph.nodes[unit.nodes[0]].rep];
+        let input: Result<State> = if unit.stage_idx == 0 {
+            match tiles.get(&rep.tile) {
+                Some(t) => Ok([t.r.clone(), t.g.clone(), t.b.clone()]),
+                None => Err(Error::Coordinator(format!("tile {} not provided", rep.tile))),
+            }
+        } else {
+            store.take(graph.nodes[unit.nodes[0]].parent.expect("non-root has parent"))
+        };
+        let input = match input {
+            Ok(i) => i,
+            Err(e) => return fail(format!("unit {unit_id}: {e}")),
+        };
+
+        let reference = references.get(&rep.tile);
+        match execute_unit(&mut engine, unit, graph, instances, input, reference) {
+            Ok(UnitOutput::States(states)) => {
+                for (node, state) in states {
+                    store.put(node, state, consumers[node]);
+                }
+            }
+            Ok(UnitOutput::Metrics(ms)) => {
+                metrics_map.lock().unwrap().extend(ms);
+            }
+            Err(e) => return fail(format!("unit {unit_id} failed: {e}")),
+        }
+
+        // completion: release dependents
+        {
+            let mut s = sched.lock().unwrap();
+            s.done += 1;
+            let children = std::mem::take(&mut s.children[unit_id]);
+            for c in children {
+                s.indeg[c] -= 1;
+                if s.indeg[c] == 0 {
+                    s.ready.push((plan.units[c].task_cost, std::cmp::Reverse(c)));
+                }
+            }
+            cv.notify_all();
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Execution of one schedule unit on one worker engine: the bucket's
+//! reuse tree runs depth-first so shared task prefixes execute once.
+
+use crate::data::Plane;
+use crate::merging::reuse_tree::ReuseTree;
+use crate::merging::{CompactGraph, MergeStage, ScheduleUnit};
+use crate::runtime::PjrtEngine;
+use crate::workflow::StageInstance;
+use crate::{Error, Result};
+
+use super::store::State;
+
+/// What a unit produced: chain stages output 3-plane states per compact
+/// node; the comparison stage outputs (dice, jaccard, diff) per node.
+pub enum UnitOutput {
+    States(Vec<(usize, State)>),
+    Metrics(Vec<(usize, [f32; 3])>),
+}
+
+/// Execute `unit` given its input state. For the comparison stage a
+/// reference mask must be supplied.
+pub fn execute_unit(
+    engine: &mut PjrtEngine,
+    unit: &ScheduleUnit,
+    graph: &CompactGraph,
+    instances: &[StageInstance],
+    input: State,
+    reference: Option<&Plane>,
+) -> Result<UnitOutput> {
+    let rep = &instances[graph.nodes[unit.nodes[0]].rep];
+    let compare = rep.tasks.len() == 1 && rep.tasks[0].name == engine.manifest().compare_task;
+    if compare {
+        let reference = reference.ok_or_else(|| {
+            Error::Coordinator(format!("unit {} (comparison) needs a reference mask", unit.id))
+        })?;
+        // all nodes of the unit share the input: one PJRT execution
+        let m = engine.execute_compare(&input, reference)?;
+        return Ok(UnitOutput::Metrics(unit.nodes.iter().map(|&n| (n, m)).collect()));
+    }
+
+    // Build the bucket's reuse tree; member i of the tree is unit.nodes[i].
+    let stages: Vec<MergeStage> = unit
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| MergeStage::new(i, instances[graph.nodes[n].rep].task_path()))
+        .collect();
+    let tree = ReuseTree::build(&stages);
+    let mut out: Vec<(usize, State)> = Vec::with_capacity(unit.nodes.len());
+    // state stays literal-resident along the chain; planes materialize
+    // only at the leaves (unit boundaries) — EXPERIMENTS.md §Perf
+    let lit_input = engine.lit_state(&input)?;
+    dfs(engine, &tree, tree.root, lit_input, unit, graph, instances, &mut out)?;
+    if out.len() != unit.nodes.len() {
+        return Err(Error::Coordinator(format!(
+            "unit {} produced {} states for {} nodes",
+            unit.id,
+            out.len(),
+            unit.nodes.len()
+        )));
+    }
+    Ok(UnitOutput::States(out))
+}
+
+/// Depth-first execution: every tree task node runs once; states are
+/// cloned only at fan-out points (a node with c children clones c−1
+/// times), which is the minimum for by-value branching.
+#[allow(clippy::too_many_arguments)]
+fn dfs(
+    engine: &mut PjrtEngine,
+    tree: &ReuseTree,
+    node: usize,
+    state: [xla::Literal; 3],
+    unit: &ScheduleUnit,
+    graph: &CompactGraph,
+    instances: &[StageInstance],
+    out: &mut Vec<(usize, State)>,
+) -> Result<()> {
+    let children = &tree.nodes[node].children;
+    for (i, &c) in children.iter().enumerate() {
+        let last = i + 1 == children.len();
+        if let Some(member) = tree.nodes[c].stage {
+            // leaf: materialize this member's final state as planes
+            out.push((unit.nodes[member], engine.plane_state(&state)?));
+            continue;
+        }
+        let level = tree.nodes[c].level; // 1-based task level
+        let member = first_member(tree, c);
+        let task = &instances[graph.nodes[unit.nodes[member]].rep].tasks[level - 1];
+        let params: Vec<f32> = task.params.iter().map(|&v| v as f32).collect();
+        let next = engine.execute_task_lit(&task.name, &state, &params)?;
+        dfs(engine, tree, c, next, unit, graph, instances, out)?;
+        let _ = last;
+    }
+    Ok(())
+}
+
+/// Any member (stage index into the unit) whose leaf lies under `node`.
+fn first_member(tree: &ReuseTree, node: usize) -> usize {
+    let mut v = node;
+    loop {
+        if let Some(s) = tree.nodes[v].stage {
+            return s;
+        }
+        v = tree.nodes[v].children[0];
+    }
+}

@@ -1,0 +1,25 @@
+//! The RTF manager/worker runtime (paper §2.3) executing study plans on
+//! real PJRT engines.
+//!
+//! The **manager** owns the dependency state of the [`StudyPlan`] and a
+//! FIFO ready queue; **workers** (one OS thread each, with a private
+//! [`crate::runtime::PjrtEngine`] — PJRT handles are not `Send`, and one
+//! engine per worker is also the faithful topology) request schedule
+//! units demand-driven whenever idle, exactly like RTF worker nodes
+//! request stage instances. Inter-unit data (region-template states)
+//! flows through a reference-counted [`NodeStore`]; states are dropped
+//! the moment their last consumer has fetched them, bounding resident
+//! memory like the RTF's hierarchical storage layer.
+//!
+//! Inside a worker, a *merged* unit executes its bucket's reuse tree
+//! depth-first: every shared task prefix runs **once**, branching states
+//! are cloned only at fan-out points — this is where the planned
+//! fine-grain reuse turns into actually-skipped PJRT executions.
+
+mod cluster;
+mod exec;
+mod store;
+
+pub use cluster::{execute_study, ExecuteOptions, StudyOutcome};
+pub use exec::{execute_unit, UnitOutput};
+pub use store::NodeStore;

@@ -1,0 +1,246 @@
+//! Reference-counted inter-unit state store — the region-template data
+//! plane of the coordinator, with an optional memory bound.
+//!
+//! The paper limits `MaxBucketSize` partly because merged-stage
+//! intermediate state must fit in node memory (§3.3). The store makes
+//! that pressure first-class: states are held as [`DataRegion`]s, and
+//! when resident bytes exceed the configured limit the oldest states
+//! spill to disk (the RTF's hierarchical storage layer) and transparently
+//! reload on consumption.
+
+use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crate::data::{DataRegion, Plane};
+use crate::{Error, Result};
+
+/// The 3-plane chain state a stage outputs.
+pub type State = [Plane; 3];
+
+struct Entry {
+    regions: Vec<DataRegion>,
+    /// Units still needing this node's output.
+    consumers: usize,
+}
+
+impl Entry {
+    fn resident_bytes(&self) -> usize {
+        self.regions.iter().map(DataRegion::resident_bytes).sum()
+    }
+}
+
+struct Inner {
+    map: HashMap<usize, Entry>,
+    /// Node ids in insertion order — spill victims are taken oldest-first.
+    order: VecDeque<usize>,
+    peak_bytes: usize,
+    spills: usize,
+}
+
+/// Thread-safe store of compact-node outputs with consumer counting:
+/// a `take` by the last consumer removes the entry (memory bound =
+/// frontier of the compact graph, not the whole study). With a spill
+/// configuration, resident bytes never exceed the limit (modulo the
+/// entry currently being inserted).
+pub struct NodeStore {
+    inner: Mutex<Inner>,
+    /// Resident-byte ceiling; `usize::MAX` = unbounded.
+    limit: usize,
+    spill_dir: Option<PathBuf>,
+}
+
+impl NodeStore {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+                peak_bytes: 0,
+                spills: 0,
+            }),
+            limit: usize::MAX,
+            spill_dir: None,
+        }
+    }
+
+    /// A store that spills to `dir` once resident state exceeds
+    /// `limit_bytes`.
+    pub fn with_spill(limit_bytes: usize, dir: impl Into<PathBuf>) -> Self {
+        let mut s = Self::new();
+        s.limit = limit_bytes;
+        s.spill_dir = Some(dir.into());
+        s
+    }
+
+    /// Publish `node`'s output for `consumers` downstream units. With
+    /// zero consumers the state is dropped immediately.
+    pub fn put(&self, node: usize, state: State, consumers: usize) {
+        if consumers == 0 {
+            return;
+        }
+        let regions: Vec<DataRegion> = state
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| DataRegion::in_memory(format!("node{node}.plane{i}"), node as u64, p))
+            .collect();
+        let mut m = self.inner.lock().unwrap();
+        m.map.insert(node, Entry { regions, consumers });
+        m.order.push_back(node);
+        let resident: usize = m.map.values().map(Entry::resident_bytes).sum();
+        m.peak_bytes = m.peak_bytes.max(resident);
+        if let Some(dir) = &self.spill_dir {
+            let mut resident = resident;
+            // spill oldest entries (not the one just inserted) to honor
+            // the limit; ignore spill I/O errors only by keeping resident
+            let victims: Vec<usize> = m.order.iter().copied().filter(|&v| v != node).collect();
+            for v in victims {
+                if resident <= self.limit {
+                    break;
+                }
+                if let Some(e) = m.map.get_mut(&v) {
+                    let before = e.resident_bytes();
+                    if before == 0 {
+                        continue; // already spilled
+                    }
+                    let mut ok = true;
+                    for r in &mut e.regions {
+                        if r.spill(dir).is_err() {
+                            ok = false;
+                        }
+                    }
+                    if ok {
+                        resident -= before;
+                        m.spills += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fetch `node`'s output for one consumer: clones unless this is the
+    /// last consumer, in which case the entry is removed and moved out.
+    /// Spilled states reload transparently.
+    pub fn take(&self, node: usize) -> Result<State> {
+        let mut m = self.inner.lock().unwrap();
+        let e = m
+            .map
+            .get_mut(&node)
+            .ok_or_else(|| Error::Coordinator(format!("state of node {node} not available")))?;
+        e.consumers -= 1;
+        let last = e.consumers == 0;
+        let mut planes = Vec::with_capacity(3);
+        for r in &mut e.regions {
+            planes.push(r.fetch()?.clone());
+        }
+        if last {
+            m.map.remove(&node);
+            m.order.retain(|&v| v != node);
+        }
+        let mut it = planes.into_iter();
+        Ok([it.next().unwrap(), it.next().unwrap(), it.next().unwrap()])
+    }
+
+    /// Entries currently resident (in memory or spilled).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// High-water mark of resident plane bytes.
+    pub fn peak_bytes(&self) -> usize {
+        self.inner.lock().unwrap().peak_bytes
+    }
+
+    /// Entries spilled to disk so far.
+    pub fn spill_count(&self) -> usize {
+        self.inner.lock().unwrap().spills
+    }
+}
+
+impl Default for NodeStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(v: f32) -> State {
+        [Plane::filled(v, 2, 2), Plane::filled(v, 2, 2), Plane::filled(v, 2, 2)]
+    }
+
+    #[test]
+    fn last_take_removes_entry() {
+        let s = NodeStore::new();
+        s.put(1, state(1.0), 2);
+        assert_eq!(s.len(), 1);
+        let a = s.take(1).unwrap();
+        assert_eq!(a[0].get(0, 0), 1.0);
+        assert_eq!(s.len(), 1, "one consumer left");
+        let _ = s.take(1).unwrap();
+        assert!(s.is_empty(), "last consumer drops the entry");
+        assert!(s.take(1).is_err());
+    }
+
+    #[test]
+    fn zero_consumers_never_stored() {
+        let s = NodeStore::new();
+        s.put(5, state(2.0), 0);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn peak_bytes_tracks_high_water() {
+        let s = NodeStore::new();
+        s.put(1, state(1.0), 1);
+        s.put(2, state(2.0), 1);
+        let two = s.peak_bytes();
+        let _ = s.take(1).unwrap();
+        let _ = s.take(2).unwrap();
+        assert!(s.is_empty());
+        assert_eq!(s.peak_bytes(), two, "peak survives drains");
+        assert_eq!(two, 2 * 3 * 4 * 4); // 2 nodes x 3 planes x 4 px x 4 B
+    }
+
+    #[test]
+    fn missing_node_is_coordinator_error() {
+        let s = NodeStore::new();
+        assert!(matches!(s.take(9), Err(Error::Coordinator(_))));
+    }
+
+    #[test]
+    fn spill_and_reload_round_trip() {
+        let dir = std::env::temp_dir().join(format!("rtf-store-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // each state = 48 bytes; limit of 60 forces spilling after 2 puts
+        let s = NodeStore::with_spill(60, &dir);
+        s.put(1, state(1.5), 1);
+        s.put(2, state(2.5), 1);
+        s.put(3, state(3.5), 1);
+        assert!(s.spill_count() >= 1, "limit must trigger spills");
+        // all three states survive, spilled or not
+        for (n, v) in [(1usize, 1.5f32), (2, 2.5), (3, 3.5)] {
+            let st = s.take(n).unwrap();
+            assert_eq!(st[0].get(1, 1), v);
+            assert_eq!(st[2].get(0, 0), v);
+        }
+        assert!(s.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unbounded_store_never_spills() {
+        let s = NodeStore::new();
+        for n in 0..10 {
+            s.put(n, state(n as f32), 1);
+        }
+        assert_eq!(s.spill_count(), 0);
+        assert_eq!(s.len(), 10);
+    }
+}

@@ -1,0 +1,16 @@
+//! Region-template data layer.
+//!
+//! The paper's RTF interchanges data between stages as *region templates*
+//! containing *data regions* (2-D planes here). This module provides the
+//! plane type the PJRT runtime transfers, the region-template container
+//! with its pluggable storage levels, and the deterministic synthetic
+//! tissue-tile generator that substitutes for the paper's proprietary
+//! whole-slide images (see DESIGN.md §Substitutions).
+
+mod plane;
+mod region;
+pub(crate) mod synth;
+
+pub use plane::Plane;
+pub use region::{DataRegion, RegionTemplate, StorageKind, StorageStats};
+pub use synth::{synth_tile, SplitMix64, SynthConfig, TileSet};

@@ -1,0 +1,114 @@
+//! A 2-D `f32` image plane — the unit of data the task artifacts consume
+//! and produce (three planes of state flow through the segmentation
+//! chain; see `python/compile/model.py`).
+
+use crate::{Error, Result};
+
+/// Row-major 2-D `f32` array.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plane {
+    data: Vec<f32>,
+    height: usize,
+    width: usize,
+}
+
+impl Plane {
+    /// Create a plane from row-major data.
+    pub fn new(data: Vec<f32>, height: usize, width: usize) -> Result<Self> {
+        if data.len() != height * width {
+            return Err(Error::Workflow(format!(
+                "plane data length {} != {height}x{width}",
+                data.len()
+            )));
+        }
+        Ok(Self { data, height, width })
+    }
+
+    /// A plane filled with a constant value.
+    pub fn filled(value: f32, height: usize, width: usize) -> Self {
+        Self { data: vec![value; height * width], height, width }
+    }
+
+    /// A zeroed plane.
+    pub fn zeros(height: usize, width: usize) -> Self {
+        Self::filled(0.0, height, width)
+    }
+
+    pub fn height(&self) -> usize {
+        self.height
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Row-major backing slice.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable row-major backing slice.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Pixel accessor (row, col).
+    pub fn get(&self, y: usize, x: usize) -> f32 {
+        self.data[y * self.width + x]
+    }
+
+    /// Pixel mutator (row, col).
+    pub fn set(&mut self, y: usize, x: usize, v: f32) {
+        self.data[y * self.width + x] = v;
+    }
+
+    /// Sum of all pixels.
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&v| v as f64).sum()
+    }
+
+    /// Number of pixels strictly above `thr`.
+    pub fn count_above(&self, thr: f32) -> usize {
+        self.data.iter().filter(|&&v| v > thr).count()
+    }
+
+    /// Mean pixel value.
+    pub fn mean(&self) -> f64 {
+        self.sum() / (self.data.len().max(1) as f64)
+    }
+
+    /// In-memory size in bytes (for storage accounting / MaxBucketSize
+    /// memory-pressure reasoning).
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_length() {
+        assert!(Plane::new(vec![0.0; 6], 2, 3).is_ok());
+        assert!(Plane::new(vec![0.0; 5], 2, 3).is_err());
+    }
+
+    #[test]
+    fn accessors_roundtrip() {
+        let mut p = Plane::zeros(3, 4);
+        p.set(2, 1, 7.5);
+        assert_eq!(p.get(2, 1), 7.5);
+        assert_eq!(p.data()[2 * 4 + 1], 7.5);
+        assert_eq!(p.sum(), 7.5);
+        assert_eq!(p.count_above(7.0), 1);
+        assert_eq!(p.nbytes(), 48);
+    }
+
+    #[test]
+    fn filled_and_mean() {
+        let p = Plane::filled(2.0, 4, 4);
+        assert_eq!(p.mean(), 2.0);
+        assert_eq!(p.count_above(1.0), 16);
+    }
+}

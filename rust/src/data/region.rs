@@ -1,0 +1,213 @@
+//! Region-template data abstraction (paper §2.3).
+//!
+//! A [`RegionTemplate`] is a container for a spatially/temporally bounded
+//! region; its [`DataRegion`]s are the storage materializations that
+//! stages consume and produce. The RTF delegates placement to the storage
+//! layer — here two levels are modeled: in-memory and disk-spill (the
+//! paper used node RAM + a cluster file system). The coordinator moves
+//! regions between stages through this layer, never by direct
+//! stage-to-stage transfer.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::{Error, Result};
+
+use super::Plane;
+
+/// Where a data region currently lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StorageKind {
+    /// Node-local RAM.
+    Memory,
+    /// Spilled to the shared file system (Lustre/Pylon in the paper).
+    Disk,
+}
+
+/// A named, versioned 2-D data region.
+#[derive(Debug)]
+pub struct DataRegion {
+    pub name: String,
+    /// Version tag: output of which parameter-set evaluation.
+    pub version: u64,
+    storage: RegionStorage,
+}
+
+#[derive(Debug)]
+enum RegionStorage {
+    Memory(Plane),
+    Disk { path: PathBuf, height: usize, width: usize },
+}
+
+impl DataRegion {
+    /// Create an in-memory region.
+    pub fn in_memory(name: impl Into<String>, version: u64, plane: Plane) -> Self {
+        Self { name: name.into(), version, storage: RegionStorage::Memory(plane) }
+    }
+
+    pub fn kind(&self) -> StorageKind {
+        match self.storage {
+            RegionStorage::Memory(_) => StorageKind::Memory,
+            RegionStorage::Disk { .. } => StorageKind::Disk,
+        }
+    }
+
+    /// Bytes resident in RAM for this region.
+    pub fn resident_bytes(&self) -> usize {
+        match &self.storage {
+            RegionStorage::Memory(p) => p.nbytes(),
+            RegionStorage::Disk { .. } => 0,
+        }
+    }
+
+    /// Spill the region to `dir`, freeing RAM.
+    pub fn spill(&mut self, dir: &std::path::Path) -> Result<()> {
+        if let RegionStorage::Memory(plane) = &self.storage {
+            std::fs::create_dir_all(dir)?;
+            let path = dir.join(format!("{}-v{}.bin", self.name.replace('/', "_"), self.version));
+            let bytes: Vec<u8> = plane.data().iter().flat_map(|v| v.to_le_bytes()).collect();
+            std::fs::write(&path, bytes)?;
+            self.storage =
+                RegionStorage::Disk { path, height: plane.height(), width: plane.width() };
+        }
+        Ok(())
+    }
+
+    /// Materialize the region back into RAM (reads from disk if spilled).
+    pub fn fetch(&mut self) -> Result<&Plane> {
+        if let RegionStorage::Disk { path, height, width } = &self.storage {
+            let bytes = std::fs::read(path)?;
+            if bytes.len() != height * width * 4 {
+                return Err(Error::Workflow(format!(
+                    "spilled region {} has {} bytes, want {}",
+                    self.name,
+                    bytes.len(),
+                    height * width * 4
+                )));
+            }
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let plane = Plane::new(data, *height, *width)?;
+            self.storage = RegionStorage::Memory(plane);
+        }
+        match &self.storage {
+            RegionStorage::Memory(p) => Ok(p),
+            RegionStorage::Disk { .. } => unreachable!(),
+        }
+    }
+
+    /// Borrow the plane if resident in memory.
+    pub fn plane(&self) -> Option<&Plane> {
+        match &self.storage {
+            RegionStorage::Memory(p) => Some(p),
+            RegionStorage::Disk { .. } => None,
+        }
+    }
+}
+
+/// Aggregate statistics over a region template's storage.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StorageStats {
+    pub regions: usize,
+    pub resident_bytes: usize,
+    pub spilled_regions: usize,
+}
+
+/// Container of data regions keyed by name (paper: one RT instance may
+/// hold multiple data regions).
+#[derive(Debug, Default)]
+pub struct RegionTemplate {
+    regions: HashMap<String, DataRegion>,
+}
+
+impl RegionTemplate {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert (or replace) a region.
+    pub fn insert(&mut self, region: DataRegion) {
+        self.regions.insert(region.name.clone(), region);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&DataRegion> {
+        self.regions.get(name)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut DataRegion> {
+        self.regions.get_mut(name)
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<DataRegion> {
+        self.regions.remove(name)
+    }
+
+    pub fn stats(&self) -> StorageStats {
+        StorageStats {
+            regions: self.regions.len(),
+            resident_bytes: self.regions.values().map(|r| r.resident_bytes()).sum(),
+            spilled_regions: self
+                .regions
+                .values()
+                .filter(|r| r.kind() == StorageKind::Disk)
+                .count(),
+        }
+    }
+
+    /// Spill every resident region larger than `threshold_bytes`.
+    pub fn spill_over(&mut self, threshold_bytes: usize, dir: &std::path::Path) -> Result<usize> {
+        let mut spilled = 0;
+        for r in self.regions.values_mut() {
+            if r.resident_bytes() > threshold_bytes {
+                r.spill(dir)?;
+                spilled += 1;
+            }
+        }
+        Ok(spilled)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plane() -> Plane {
+        Plane::new((0..12).map(|i| i as f32).collect(), 3, 4).unwrap()
+    }
+
+    #[test]
+    fn memory_region_roundtrip() {
+        let mut rt = RegionTemplate::new();
+        rt.insert(DataRegion::in_memory("seg/mask", 3, plane()));
+        assert_eq!(rt.get("seg/mask").unwrap().version, 3);
+        assert_eq!(rt.stats().regions, 1);
+        assert_eq!(rt.stats().resident_bytes, 48);
+    }
+
+    #[test]
+    fn spill_and_fetch_roundtrip() {
+        let dir = std::env::temp_dir().join("rtf_reuse_test_spill");
+        let mut region = DataRegion::in_memory("x", 0, plane());
+        region.spill(&dir).unwrap();
+        assert_eq!(region.kind(), StorageKind::Disk);
+        assert_eq!(region.resident_bytes(), 0);
+        let p = region.fetch().unwrap();
+        assert_eq!(p.get(2, 3), 11.0);
+        assert_eq!(region.kind(), StorageKind::Memory);
+    }
+
+    #[test]
+    fn spill_over_threshold() {
+        let dir = std::env::temp_dir().join("rtf_reuse_test_spill2");
+        let mut rt = RegionTemplate::new();
+        rt.insert(DataRegion::in_memory("big", 0, Plane::zeros(64, 64)));
+        rt.insert(DataRegion::in_memory("small", 0, Plane::zeros(2, 2)));
+        let n = rt.spill_over(1024, &dir).unwrap();
+        assert_eq!(n, 1);
+        let stats = rt.stats();
+        assert_eq!(stats.spilled_regions, 1);
+        assert_eq!(stats.resident_bytes, 16);
+    }
+}

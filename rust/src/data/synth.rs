@@ -1,0 +1,227 @@
+//! Deterministic synthetic tissue-tile generator.
+//!
+//! Substitutes for the paper's brain-cancer WSIs (4K×4K tiles from TCGA
+//! studies): bright eosin-ish background, dark hematoxylin-stained nuclei
+//! with per-nucleus stain intensity (so the G1/G2 prominence thresholds
+//! are discriminating), strongly-red RBC discs with per-disc redness (so
+//! T1/T2 are discriminating), a 2-px blur skirt (so thresholds see
+//! gradients, not step edges) and Gaussian noise. The python test fixture
+//! (`python/tests/conftest.py`) mirrors this recipe.
+//!
+//! Randomness is a self-contained SplitMix64 so tiles are reproducible
+//! across runs and across the python/rust boundary is *not* required —
+//! the reference mask is always computed by this same pipeline with
+//! default parameters (as in the paper).
+
+use super::Plane;
+
+/// SplitMix64 PRNG — deterministic, dependency-free.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn uniform_usize(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next_u64() % (hi - lo).max(1) as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+/// Generator parameters.
+#[derive(Clone, Debug)]
+pub struct SynthConfig {
+    pub height: usize,
+    pub width: usize,
+    /// nuclei per pixel-area (paper tiles average ~100 nuclei / 4K tile
+    /// region; the default reproduces a similar density at small sizes)
+    pub nuclei_per_px: f64,
+    pub noise_sigma: f64,
+    pub seed: u64,
+}
+
+impl SynthConfig {
+    pub fn new(height: usize, width: usize, seed: u64) -> Self {
+        Self { height, width, nuclei_per_px: 1.0 / 700.0, noise_sigma: 2.0, seed }
+    }
+}
+
+/// The three raw channel planes of one synthetic tile.
+#[derive(Clone, Debug)]
+pub struct TileSet {
+    pub r: Plane,
+    pub g: Plane,
+    pub b: Plane,
+}
+
+fn blur3(x: &Plane) -> Plane {
+    let (h, w) = (x.height(), x.width());
+    let mut out = Plane::zeros(h, w);
+    for y in 0..h {
+        for xx in 0..w {
+            let mut acc = 0.0f32;
+            for dy in -1i64..=1 {
+                for dx in -1i64..=1 {
+                    // edge replication
+                    let sy = (y as i64 + dy).clamp(0, h as i64 - 1) as usize;
+                    let sx = (xx as i64 + dx).clamp(0, w as i64 - 1) as usize;
+                    acc += x.get(sy, sx);
+                }
+            }
+            out.set(y, xx, acc / 9.0);
+        }
+    }
+    out
+}
+
+/// Generate one synthetic tissue tile.
+pub fn synth_tile(cfg: &SynthConfig) -> TileSet {
+    let (h, w) = (cfg.height, cfg.width);
+    let mut rng = SplitMix64::new(cfg.seed);
+    let mut r = Plane::filled(230.0, h, w);
+    let mut g = Plane::filled(225.0, h, w);
+    let mut b = Plane::filled(228.0, h, w);
+
+    let n_nuclei = ((h * w) as f64 * cfg.nuclei_per_px).max(3.0) as usize;
+    let max_rad = (h.min(w) / 10).max(4);
+    for _ in 0..n_nuclei {
+        let cy = rng.uniform_usize(4, h.saturating_sub(4).max(5));
+        let cx = rng.uniform_usize(4, w.saturating_sub(4).max(5));
+        let rad = rng.uniform_usize(3, max_rad) as i64;
+        let stain = rng.uniform(0.05, 1.0) as f32;
+        paint_disc(&mut r, cy, cx, rad, 120.0, stain);
+        paint_disc(&mut g, cy, cx, rad, 90.0, stain);
+        paint_disc(&mut b, cy, cx, rad, 160.0, stain);
+    }
+    for _ in 0..(n_nuclei / 4).max(1) {
+        let cy = rng.uniform_usize(3, h.saturating_sub(3).max(4));
+        let cx = rng.uniform_usize(3, w.saturating_sub(3).max(4));
+        let redness = rng.uniform(0.6, 1.0) as f32;
+        set_disc(&mut r, cy, cx, 3, 140.0 + 70.0 * redness);
+        set_disc(&mut g, cy, cx, 3, 90.0 - 55.0 * redness);
+        set_disc(&mut b, cy, cx, 3, 90.0 - 55.0 * redness);
+    }
+
+    let mut planes = [r, g, b];
+    for p in planes.iter_mut() {
+        let blurred = blur3(&blur3(p));
+        *p = blurred;
+        for v in p.data_mut() {
+            *v = (*v + (rng.normal() * cfg.noise_sigma) as f32).clamp(0.0, 255.0);
+        }
+    }
+    let [r, g, b] = planes;
+    TileSet { r, g, b }
+}
+
+fn paint_disc(p: &mut Plane, cy: usize, cx: usize, rad: i64, dark: f32, stain: f32) {
+    for_disc(p, cy, cx, rad, |v| v + (dark - v) * stain);
+}
+
+fn set_disc(p: &mut Plane, cy: usize, cx: usize, rad: i64, value: f32) {
+    for_disc(p, cy, cx, rad, |_| value);
+}
+
+fn for_disc(p: &mut Plane, cy: usize, cx: usize, rad: i64, f: impl Fn(f32) -> f32) {
+    let (h, w) = (p.height() as i64, p.width() as i64);
+    let (cy, cx) = (cy as i64, cx as i64);
+    for y in (cy - rad).max(0)..=(cy + rad).min(h - 1) {
+        for x in (cx - rad).max(0)..=(cx + rad).min(w - 1) {
+            if (y - cy) * (y - cy) + (x - cx) * (x - cx) <= rad * rad {
+                let v = p.get(y as usize, x as usize);
+                p.set(y as usize, x as usize, f(v));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let cfg = SynthConfig::new(32, 32, 42);
+        let a = synth_tile(&cfg);
+        let b = synth_tile(&cfg);
+        assert_eq!(a.r, b.r);
+        assert_eq!(a.g, b.g);
+        assert_eq!(a.b, b.b);
+    }
+
+    #[test]
+    fn different_seed_differs() {
+        let a = synth_tile(&SynthConfig::new(32, 32, 1));
+        let b = synth_tile(&SynthConfig::new(32, 32, 2));
+        assert_ne!(a.r, b.r);
+    }
+
+    #[test]
+    fn contains_background_and_nuclei() {
+        let t = synth_tile(&SynthConfig::new(64, 64, 7));
+        // background stays bright, nuclei are dark: wide dynamic range
+        let bright = t.r.count_above(200.0);
+        let dark = t.r.data().iter().filter(|&&v| v < 160.0).count();
+        assert!(bright > 64 * 64 / 2, "background dominates");
+        assert!(dark > 20, "some dark nuclei pixels exist: {dark}");
+    }
+
+    #[test]
+    fn values_clamped() {
+        let t = synth_tile(&SynthConfig::new(48, 48, 3));
+        for p in [&t.r, &t.g, &t.b] {
+            assert!(p.data().iter().all(|&v| (0.0..=255.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn splitmix_uniform_range() {
+        let mut rng = SplitMix64::new(9);
+        for _ in 0..1000 {
+            let v = rng.uniform(2.0, 3.0);
+            assert!((2.0..3.0).contains(&v));
+            let u = rng.uniform_usize(5, 10);
+            assert!((5..10).contains(&u));
+        }
+    }
+
+    #[test]
+    fn splitmix_normal_moments() {
+        let mut rng = SplitMix64::new(11);
+        let n = 20000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+}

@@ -1,0 +1,277 @@
+//! High-level study driver: glue shared by the CLI, the examples and the
+//! bench harness. Generates the SA experiments from a [`StudyConfig`],
+//! instantiates the workflow, composes the reuse plan, and runs it on the
+//! chosen engine.
+
+use std::collections::HashMap;
+
+use crate::analysis::{moat_effects, screen_top_k, MoatIndices};
+use crate::config::{SaMethod, StudyConfig};
+use crate::coordinator::{execute_study, ExecuteOptions, StudyOutcome};
+use crate::data::{synth_tile, Plane, SynthConfig, TileSet};
+use crate::merging::{plan_study_weighted, CompactGraph, FineAlgorithm, StudyPlan};
+use crate::runtime::PjrtEngine;
+use crate::sampling::{default_space, MoatSample, ParamSpace, VbdSample};
+use crate::sampling::{MoatDesign, VbdDesign};
+use crate::simulate::{simulate_plan, CostModel, SimOptions, SimReport};
+use crate::workflow::{instantiate_study, paper_workflow, Evaluation, StageInstance, WorkflowSpec};
+use crate::Result;
+
+/// The SA design actually generated, kept for the estimators.
+pub enum SampleInfo {
+    Moat(MoatSample),
+    Vbd(VbdSample, Vec<usize>),
+}
+
+impl SampleInfo {
+    /// Number of distinct parameter sets in the design.
+    pub fn n_sets(&self) -> usize {
+        match self {
+            SampleInfo::Moat(s) => s.sets.len(),
+            SampleInfo::Vbd(s, _) => s.sets.len(),
+        }
+    }
+}
+
+/// A fully instantiated study, ready for planning and execution.
+pub struct PreparedStudy {
+    pub space: ParamSpace,
+    pub workflow: WorkflowSpec,
+    pub sample: SampleInfo,
+    pub evals: Vec<Evaluation>,
+    pub instances: Vec<StageInstance>,
+    pub graph: CompactGraph,
+}
+
+impl PreparedStudy {
+    /// Compose the two-level reuse plan per the config's algorithm. The
+    /// cost-balanced TRTMA prices tasks with the Table-6 model by
+    /// default; use [`PreparedStudy::plan_with_model`] to supply a
+    /// measured model.
+    pub fn plan(&self, cfg: &StudyConfig) -> StudyPlan {
+        self.plan_with_model(cfg, &crate::simulate::default_cost_model())
+    }
+
+    /// [`PreparedStudy::plan`] with an explicit per-task cost model
+    /// (only [`FineAlgorithm::TrtmaCost`] consults it).
+    pub fn plan_with_model(&self, cfg: &StudyConfig, model: &CostModel) -> StudyPlan {
+        let costs: HashMap<String, f64> = if matches!(cfg.algorithm, FineAlgorithm::TrtmaCost(_)) {
+            model.rows().into_iter().collect()
+        } else {
+            HashMap::new()
+        };
+        plan_study_weighted(&self.graph, &self.instances, cfg.algorithm, &costs)
+    }
+
+    /// Number of workflow evaluations (sets × tiles).
+    pub fn n_evals(&self) -> usize {
+        self.evals.len()
+    }
+}
+
+/// Generate the experiment (parameter sets) for a config. For VBD the
+/// active set defaults to the canonical top-8 of the paper (G1, G2 &co)
+/// unless a MOAT screen is supplied via [`prepare_with_active`].
+pub fn prepare(cfg: &StudyConfig) -> PreparedStudy {
+    prepare_with_active(cfg, None)
+}
+
+/// Like [`prepare`], with an explicit VBD active-parameter set.
+pub fn prepare_with_active(cfg: &StudyConfig, active: Option<Vec<usize>>) -> PreparedStudy {
+    let space = default_space();
+    let workflow = match &cfg.workflow_file {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .unwrap_or_else(|e| panic!("cannot read workflow file `{path}`: {e}"));
+            crate::workflow::parse_workflow_file(&text, &space)
+                .unwrap_or_else(|e| panic!("invalid workflow file `{path}`: {e}"))
+        }
+        None => paper_workflow(),
+    };
+    let mut sampler = cfg.sampler.build(cfg.seed);
+
+    let (sets, sample) = match cfg.method {
+        SaMethod::Moat { r } => {
+            let s = MoatDesign::new(r).generate(&space, sampler.as_mut(), cfg.seed);
+            (s.sets.clone(), SampleInfo::Moat(s))
+        }
+        SaMethod::Vbd { n, k_active } => {
+            // paper Table 2: the 8 most influential parameters survive the
+            // MOAT screen — T2, G1, G2, minS, maxS, minSPL, RC, WConn
+            let act = active.unwrap_or_else(|| {
+                let canonical = [4usize, 5, 6, 7, 8, 9, 13, 14];
+                canonical.iter().copied().take(k_active).collect()
+            });
+            let s = VbdDesign::new(n).generate(&space, &act, sampler.as_mut());
+            (s.sets.clone(), SampleInfo::Vbd(s, act))
+        }
+    };
+
+    // set-major evaluation layout: eval(set s, tile t) = s·tiles + t
+    let mut evals = Vec::with_capacity(sets.len() * cfg.tiles);
+    for (s, set) in sets.iter().enumerate() {
+        for t in 0..cfg.tiles {
+            evals.push(Evaluation { id: s * cfg.tiles + t, tile: t as u64, params: set.clone() });
+        }
+    }
+    let instances = instantiate_study(&workflow, &evals);
+    let graph = CompactGraph::build(&instances, cfg.coarse);
+    PreparedStudy { space, workflow, sample, evals, instances, graph }
+}
+
+/// Average per-set outputs over tiles (evaluations are set-major).
+pub fn y_per_set(y: &[f64], n_sets: usize, tiles: usize) -> Vec<f64> {
+    assert_eq!(y.len(), n_sets * tiles);
+    (0..n_sets)
+        .map(|s| y[s * tiles..(s + 1) * tiles].iter().sum::<f64>() / tiles as f64)
+        .collect()
+}
+
+/// Deterministic synthetic tiles for a study (tile ids `0..cfg.tiles`).
+pub fn make_tiles(cfg: &StudyConfig, height: usize, width: usize) -> HashMap<u64, TileSet> {
+    (0..cfg.tiles as u64)
+        .map(|id| (id, synth_tile(&SynthConfig::new(height, width, cfg.seed ^ (id << 17) ^ 0x7469))))
+        .collect()
+}
+
+/// Build the reference masks: the workflow run with the application
+/// default parameters on every tile (paper §4.1: "a reference mask set,
+/// created using the application default parameters").
+pub fn reference_masks(
+    engine: &mut PjrtEngine,
+    space: &ParamSpace,
+    workflow: &WorkflowSpec,
+    tiles: &HashMap<u64, TileSet>,
+) -> Result<HashMap<u64, Plane>> {
+    let defaults = space.defaults();
+    let mut task_params: HashMap<String, Vec<f32>> = HashMap::new();
+    for stage in &workflow.stages {
+        for t in &stage.tasks {
+            task_params
+                .insert(t.name.clone(), t.project(&defaults).iter().map(|&v| v as f32).collect());
+        }
+    }
+    let mut refs = HashMap::new();
+    for (&id, tile) in tiles {
+        let state = engine.run_chain(tile, &task_params)?;
+        refs.insert(id, state[1].clone()); // plane 1 carries the label mask
+    }
+    Ok(refs)
+}
+
+/// Run a prepared study for real on PJRT workers.
+pub fn run_pjrt(
+    cfg: &StudyConfig,
+    prepared: &PreparedStudy,
+    plan: &StudyPlan,
+) -> Result<StudyOutcome> {
+    let mut engine = PjrtEngine::load(&cfg.artifacts_dir)?;
+    let (h, w) = engine.tile_shape();
+    let tiles = make_tiles(cfg, h, w);
+    let references = reference_masks(&mut engine, &prepared.space, &prepared.workflow, &tiles)?;
+    drop(engine);
+    let opts = ExecuteOptions::new(cfg.workers, &cfg.artifacts_dir);
+    execute_study(
+        &opts,
+        plan,
+        &prepared.graph,
+        &prepared.instances,
+        &tiles,
+        &references,
+        prepared.n_evals(),
+    )
+}
+
+/// Run a prepared study through the discrete-event simulator.
+pub fn run_sim(
+    prepared: &PreparedStudy,
+    plan: &StudyPlan,
+    model: &CostModel,
+    opts: &SimOptions,
+) -> SimReport {
+    simulate_plan(plan, &prepared.graph, &prepared.instances, model, opts)
+}
+
+/// The paper's two-phase flow in one call: MOAT screen → top-k active
+/// parameters (plus the MOAT indices for reporting).
+pub fn moat_screen(
+    cfg: &StudyConfig,
+    prepared: &PreparedStudy,
+    y: &[f64],
+    k: usize,
+) -> (MoatIndices, Vec<usize>) {
+    let SampleInfo::Moat(sample) = &prepared.sample else {
+        panic!("moat_screen requires a MOAT study");
+    };
+    let y_sets = y_per_set(y, sample.sets.len(), cfg.tiles);
+    let idx = moat_effects(sample, &y_sets, prepared.space.dim());
+    let top = screen_top_k(&idx, k);
+    (idx, top)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SamplerKind;
+    use crate::merging::FineAlgorithm;
+    use crate::simulate::default_cost_model;
+
+    fn cfg_moat(r: usize) -> StudyConfig {
+        StudyConfig {
+            method: SaMethod::Moat { r },
+            sampler: SamplerKind::Qmc,
+            algorithm: FineAlgorithm::Rtma(7),
+            ..StudyConfig::default()
+        }
+    }
+
+    #[test]
+    fn prepare_moat_layout() {
+        let cfg = cfg_moat(3);
+        let p = prepare(&cfg);
+        assert_eq!(p.sample.n_sets(), 3 * 16);
+        assert_eq!(p.n_evals(), 48);
+        assert_eq!(p.instances.len(), 48 * 3);
+        let plan = p.plan(&cfg);
+        plan.assert_valid(&p.graph);
+        assert!(plan.fine_reuse() > 0.0, "MOAT studies must expose reuse");
+    }
+
+    #[test]
+    fn prepare_vbd_uses_canonical_actives() {
+        let cfg = StudyConfig {
+            method: SaMethod::Vbd { n: 10, k_active: 8 },
+            ..StudyConfig::default()
+        };
+        let p = prepare(&cfg);
+        let SampleInfo::Vbd(s, act) = &p.sample else { panic!() };
+        assert_eq!(act, &vec![4, 5, 6, 7, 8, 9, 13, 14]);
+        assert_eq!(s.sample_size(), 10 * 10);
+    }
+
+    #[test]
+    fn sim_run_end_to_end() {
+        let cfg = cfg_moat(4);
+        let p = prepare(&cfg);
+        let plan = p.plan(&cfg);
+        let r = run_sim(&p, &plan, &default_cost_model(), &crate::simulate::SimOptions::new(cfg.workers).with_cores(16));
+        assert!(r.makespan > 0.0);
+        assert_eq!(r.tasks, plan.tasks_to_execute());
+    }
+
+    #[test]
+    fn y_per_set_averages_tiles() {
+        let y = vec![1.0, 3.0, 5.0, 7.0];
+        assert_eq!(y_per_set(&y, 2, 2), vec![2.0, 6.0]);
+        assert_eq!(y_per_set(&y, 4, 1), y);
+    }
+
+    #[test]
+    fn multi_tile_evals_are_set_major() {
+        let cfg = StudyConfig { tiles: 3, ..cfg_moat(2) };
+        let p = prepare(&cfg);
+        assert_eq!(p.n_evals(), 2 * 16 * 3);
+        assert_eq!(p.evals[4].tile, 1); // set 1, tile 1
+        assert_eq!(p.evals[4].params, p.evals[3].params);
+    }
+}

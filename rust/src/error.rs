@@ -1,0 +1,59 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Errors surfaced by the rtf-reuse library.
+#[derive(Debug)]
+pub enum Error {
+    /// PJRT / XLA runtime failure (compile, transfer, execute).
+    Xla(String),
+    /// Artifact directory / manifest problems.
+    Artifact(String),
+    /// Workflow descriptor or instantiation problems.
+    Workflow(String),
+    /// Invalid study / sampler configuration.
+    Config(String),
+    /// Coordinator / scheduling failure.
+    Coordinator(String),
+    /// I/O error with context.
+    Io(std::io::Error),
+    /// JSON (de)serialization error.
+    Json(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(m) => write!(f, "xla/pjrt error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Workflow(m) => write!(f, "workflow error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(e) => write!(f, "json error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::jsonx::ParseError> for Error {
+    fn from(e: crate::jsonx::ParseError) -> Self {
+        Error::Json(e.to_string())
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,342 @@
+//! `rtf-reuse` — the leader entrypoint.
+//!
+//! Subcommands (all take `key=value` options; see `rtf-reuse help`):
+//!
+//! * `run-sa`             — execute an SA study for real on PJRT workers
+//! * `simulate`           — same plan through the discrete-event cluster
+//! * `merge-plan`         — print the reuse plan an algorithm produces
+//! * `reuse-audit`        — maximum reuse potential per sampler (Table 4)
+//! * `profile-tasks`      — measure per-task costs (Table 6) and emit a
+//!                          cost-model JSON
+//! * `gen-tiles`          — describe the synthetic tiles of a study
+//! * `inspect-artifacts`  — show the AOT artifact manifest
+
+
+use rtf_reuse::analysis::sobol_indices;
+use rtf_reuse::benchx::{fmt_secs, Table};
+use rtf_reuse::config::{EngineMode, SaMethod, StudyConfig};
+use rtf_reuse::data::{synth_tile, SynthConfig};
+use rtf_reuse::driver::{
+    self, make_tiles, prepare, reference_masks, run_pjrt, run_sim, SampleInfo,
+};
+use rtf_reuse::merging::UnitKind;
+use rtf_reuse::runtime::PjrtEngine;
+use rtf_reuse::sampling::default_space;
+use rtf_reuse::simulate::{default_cost_model, CostModel};
+use rtf_reuse::workflow::paper_workflow;
+use rtf_reuse::{Error, Result};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = if args.is_empty() { &[][..] } else { &args[1..] };
+    let r = match cmd {
+        "run-sa" => cmd_run_sa(rest),
+        "simulate" => cmd_simulate(rest),
+        "merge-plan" => cmd_merge_plan(rest),
+        "reuse-audit" => cmd_reuse_audit(rest),
+        "profile-tasks" => cmd_profile_tasks(rest),
+        "gen-tiles" => cmd_gen_tiles(rest),
+        "inspect-artifacts" => cmd_inspect(rest),
+        "gen-stage" => cmd_gen_stage(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown command `{other}` (try `help`)"))),
+    };
+    if let Err(e) = r {
+        eprintln!("rtf-reuse: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "rtf-reuse — multi-level computation reuse for SA studies\n\
+         \n\
+         usage: rtf-reuse <command> [key=value ...]\n\
+         \n\
+         commands:\n\
+           run-sa             run an SA study on real PJRT workers\n\
+           simulate           run the study through the cluster simulator\n\
+           merge-plan         print the reuse plan for a config\n\
+           reuse-audit        reuse potential per sampler (paper Table 4)\n\
+           profile-tasks      measure per-task costs (paper Table 6)\n\
+           gen-tiles          describe the synthetic tiles of a study\n\
+           gen-stage          emit Rust code from a workflow descriptor\n\
+           inspect-artifacts  show the AOT artifact manifest\n\
+         \n\
+         common options:\n\
+           method=moat|vbd  r=10  n=200  k-active=8  sampler=qmc|mc|lhs\n\
+           algo=none|naive|sca|rtma|trtma  mbs=7  max-buckets=N\n\
+           coarse=on|off  engine=pjrt|sim  workers=2  tiles=1  seed=42\n\
+           artifacts=artifacts"
+    );
+}
+
+fn cmd_run_sa(args: &[String]) -> Result<()> {
+    let cfg = StudyConfig::from_args(args)?;
+    println!("study: {}", cfg.describe());
+    let prepared = prepare(&cfg);
+    let plan = prepared.plan(&cfg);
+    print_plan_summary(&cfg, &prepared, &plan);
+
+    if cfg.engine == EngineMode::Sim {
+        let opts = rtf_reuse::simulate::SimOptions::new(cfg.workers).with_cores(cfg.cores);
+        let report = run_sim(&prepared, &plan, &default_cost_model(), &opts);
+        println!(
+            "simulated: makespan {}  utilization {:.1}%  tasks {}",
+            fmt_secs(report.makespan),
+            report.utilization() * 100.0,
+            report.tasks
+        );
+        return Ok(());
+    }
+
+    let outcome = run_pjrt(&cfg, &prepared, &plan)?;
+    println!(
+        "executed: wall {}  peak state {} KiB",
+        fmt_secs(outcome.wall.as_secs_f64()),
+        outcome.peak_state_bytes / 1024
+    );
+
+    match &prepared.sample {
+        SampleInfo::Moat(_) => {
+            let (idx, top) = driver::moat_screen(&cfg, &prepared, &outcome.y, 8);
+            let space = &prepared.space;
+            let mut t = Table::new(&["param", "mean EE", "mu*", "sigma"]);
+            for p in 0..space.dim() {
+                t.row(&[
+                    space.params[p].name.clone(),
+                    format!("{:+.4}", idx.mean[p]),
+                    format!("{:.4}", idx.mu_star[p]),
+                    format!("{:.4}", idx.sigma[p]),
+                ]);
+            }
+            t.print("MOAT elementary effects (paper Table 2, left)");
+            let names: Vec<&str> =
+                top.iter().map(|&p| space.params[p].name.as_str()).collect();
+            println!("top-8 screen: {}", names.join(", "));
+        }
+        SampleInfo::Vbd(sample, active) => {
+            let y = driver::y_per_set(&outcome.y, sample.sets.len(), cfg.tiles);
+            let idx = sobol_indices(sample, &y);
+            let mut t = Table::new(&["param", "S_i (main)", "ST_i (total)"]);
+            for (i, &p) in active.iter().enumerate() {
+                t.row(&[
+                    prepared.space.params[p].name.clone(),
+                    format!("{:.4}", idx.first[i]),
+                    format!("{:.4}", idx.total[i]),
+                ]);
+            }
+            t.print("VBD Sobol indices (paper Table 2, right)");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &[String]) -> Result<()> {
+    let mut cfg = StudyConfig::from_args(args)?;
+    cfg.engine = EngineMode::Sim;
+    println!("study: {}", cfg.describe());
+    let prepared = prepare(&cfg);
+    let plan = prepared.plan(&cfg);
+    print_plan_summary(&cfg, &prepared, &plan);
+    let model = load_cost_model();
+    let opts = rtf_reuse::simulate::SimOptions::new(cfg.workers).with_cores(cfg.cores);
+    let report = run_sim(&prepared, &plan, &model, &opts);
+    println!(
+        "simulated on {} workers: makespan {}  total work {}  utilization {:.1}%",
+        cfg.workers,
+        fmt_secs(report.makespan),
+        fmt_secs(report.total_work),
+        report.utilization() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_merge_plan(args: &[String]) -> Result<()> {
+    let cfg = StudyConfig::from_args(args)?;
+    println!("study: {}", cfg.describe());
+    let prepared = prepare(&cfg);
+    let plan = prepared.plan(&cfg);
+    print_plan_summary(&cfg, &prepared, &plan);
+
+    let mut t = Table::new(&["unit", "stage", "kind", "stages", "unique tasks"]);
+    for u in plan.units.iter().take(40) {
+        t.row(&[
+            u.id.to_string(),
+            u.stage.clone(),
+            format!("{:?}", u.kind),
+            u.nodes.len().to_string(),
+            u.task_cost.to_string(),
+        ]);
+    }
+    t.print(&format!(
+        "schedule units (first 40 of {}; merge took {})",
+        plan.units.len(),
+        fmt_secs(plan.merge_time.as_secs_f64())
+    ));
+    Ok(())
+}
+
+fn cmd_reuse_audit(args: &[String]) -> Result<()> {
+    use rtf_reuse::config::SamplerKind;
+    use rtf_reuse::merging::{FineAlgorithm, TrtmaOptions};
+    let base = StudyConfig::from_args(args)?;
+    let mut t = Table::new(&["sampler", "sample", "coarse saved", "fine reuse %"]);
+    for kind in [SamplerKind::Mc, SamplerKind::Lhs, SamplerKind::Qmc] {
+        let cfg = StudyConfig {
+            sampler: kind,
+            // maximum reuse potential: one bucket per merge group
+            algorithm: FineAlgorithm::Trtma(TrtmaOptions::new(1)),
+            ..base.clone()
+        };
+        let prepared = prepare(&cfg);
+        let plan = prepared.plan(&cfg);
+        t.row(&[
+            kind.name().to_string(),
+            prepared.sample.n_sets().to_string(),
+            plan.coarse_saved.to_string(),
+            format!("{:.2}", plan.fine_reuse() * 100.0),
+        ]);
+    }
+    t.print("maximum fine-grain reuse potential (paper Table 4)");
+    Ok(())
+}
+
+fn cmd_profile_tasks(args: &[String]) -> Result<()> {
+    let cfg = StudyConfig::from_args(args)?;
+    let mut engine = PjrtEngine::load(&cfg.artifacts_dir)?;
+    let (h, w) = engine.tile_shape();
+    let space = default_space();
+    let wf = paper_workflow();
+    let tiles = make_tiles(&cfg, h, w);
+    // several repetitions for stable means
+    for rep in 0..5 {
+        let _ = rep;
+        let _ = reference_masks(&mut engine, &space, &wf, &tiles)?;
+    }
+    let rows = engine.timer().summary();
+    let total: f64 = rows.iter().map(|(_, m, _)| m).sum();
+    let mut t = Table::new(&["task", "mean", "share %", "runs"]);
+    for (name, mean, n) in &rows {
+        t.row(&[
+            name.clone(),
+            fmt_secs(*mean),
+            format!("{:.2}", mean / total * 100.0),
+            n.to_string(),
+        ]);
+    }
+    t.print("per-task execution cost (paper Table 6 analog)");
+    let model = CostModel::from_timer(engine.timer());
+    let json = model.to_json().to_string_pretty();
+    std::fs::create_dir_all("assets")?;
+    std::fs::write("assets/task_costs.json", &json)?;
+    println!("cost model written to assets/task_costs.json");
+    Ok(())
+}
+
+fn cmd_gen_tiles(args: &[String]) -> Result<()> {
+    let cfg = StudyConfig::from_args(args)?;
+    let mut t = Table::new(&["tile", "size", "mean R", "mean G", "mean B"]);
+    for id in 0..cfg.tiles as u64 {
+        let tile = synth_tile(&SynthConfig::new(128, 128, cfg.seed ^ (id << 17) ^ 0x7469));
+        t.row(&[
+            id.to_string(),
+            format!("{}x{}", tile.r.height(), tile.r.width()),
+            format!("{:.1}", tile.r.mean()),
+            format!("{:.1}", tile.g.mean()),
+            format!("{:.1}", tile.b.mean()),
+        ]);
+    }
+    t.print("synthetic tissue tiles");
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let cfg = StudyConfig::from_args(args)?;
+    let engine = PjrtEngine::load(&cfg.artifacts_dir)?;
+    let m = engine.manifest();
+    println!(
+        "artifacts at {}: {}x{} tile, {} params, {} tasks",
+        m.dir.display(),
+        m.height,
+        m.width,
+        m.n_params,
+        m.tasks.len()
+    );
+    let mut t = Table::new(&["task", "file", "in", "out", "kind", "sha16"]);
+    for a in &m.tasks {
+        t.row(&[
+            a.name.clone(),
+            a.file.clone(),
+            a.image_inputs.to_string(),
+            a.outputs.to_string(),
+            a.output_kind.clone(),
+            a.sha256_16.clone(),
+        ]);
+    }
+    t.print("artifact manifest");
+    Ok(())
+}
+
+fn print_plan_summary(
+    cfg: &StudyConfig,
+    prepared: &rtf_reuse::driver::PreparedStudy,
+    plan: &rtf_reuse::merging::StudyPlan,
+) {
+    let merged = plan.units.iter().filter(|u| u.kind == UnitKind::Merged).count();
+    println!(
+        "plan: {} evals -> {} compact nodes ({} coarse-saved) -> {} units ({merged} merged), \
+         fine reuse {:.1}%, merge time {}",
+        prepared.n_evals(),
+        prepared.graph.nodes.len(),
+        plan.coarse_saved,
+        plan.units.len(),
+        plan.fine_reuse() * 100.0,
+        fmt_secs(plan.merge_time.as_secs_f64())
+    );
+    match cfg.method {
+        SaMethod::Moat { r } => println!("design: MOAT r={r} -> {} sets", prepared.sample.n_sets()),
+        SaMethod::Vbd { n, k_active } => {
+            println!("design: VBD n={n} k={k_active} -> {} sets", prepared.sample.n_sets())
+        }
+    }
+}
+
+fn cmd_gen_stage(args: &[String]) -> Result<()> {
+    // gen-stage file=<descriptor.json> [out=<file.rs>]
+    let mut file = None;
+    let mut out = None;
+    for a in args {
+        match a.split_once('=') {
+            Some(("file", v)) => file = Some(v.to_string()),
+            Some(("out", v)) => out = Some(v.to_string()),
+            _ => return Err(Error::Config(format!("gen-stage: unknown option `{a}`"))),
+        }
+    }
+    let file = file.ok_or_else(|| Error::Config("gen-stage needs file=<descriptor.json>".into()))?;
+    let text = std::fs::read_to_string(&file)?;
+    let space = default_space();
+    let wf = rtf_reuse::workflow::parse_workflow_file(&text, &space)?;
+    let code = rtf_reuse::workflow::generate_workflow_code(&wf, &space);
+    match out {
+        Some(path) => {
+            std::fs::write(&path, &code)?;
+            println!("wrote {} bytes of generated workflow code to {path}", code.len());
+        }
+        None => print!("{code}"),
+    }
+    Ok(())
+}
+
+fn load_cost_model() -> CostModel {
+    std::fs::read_to_string("assets/task_costs.json")
+        .ok()
+        .and_then(|text| rtf_reuse::jsonx::Json::parse(&text).ok())
+        .and_then(|j| CostModel::from_json(&j).ok())
+        .unwrap_or_else(default_cost_model)
+}
+

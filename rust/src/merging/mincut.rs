@@ -1,0 +1,254 @@
+//! Minimum-cut machinery for the Smart Cut Algorithm (paper §3.3.2).
+//!
+//! The SCA models stages as a fully-connected undirected graph whose edge
+//! weights are pairwise reuse degrees, and repeatedly 2-cuts it. The
+//! paper prices each cut at O(E + V log V) = O(n²) on the dense graph —
+//! i.e. one *maximum-adjacency (Stoer–Wagner) phase*, whose
+//! cut-of-the-phase separates the last-added vertex from the rest (the
+//! "least reusable" stage, exactly the behaviour of Fig. 9). A full
+//! Stoer–Wagner min-cut (n phases, O(n³)) is also provided for
+//! cross-checking on small graphs.
+
+/// Dense symmetric weight matrix.
+#[derive(Clone, Debug)]
+pub struct DenseGraph {
+    n: usize,
+    w: Vec<f64>,
+}
+
+impl DenseGraph {
+    pub fn new(n: usize) -> Self {
+        Self { n, w: vec![0.0; n * n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn set(&mut self, a: usize, b: usize, weight: f64) {
+        self.w[a * self.n + b] = weight;
+        self.w[b * self.n + a] = weight;
+    }
+
+    pub fn get(&self, a: usize, b: usize) -> f64 {
+        self.w[a * self.n + b]
+    }
+
+    /// Restrict to a vertex subset (returns mapping new -> old).
+    pub fn subgraph(&self, verts: &[usize]) -> (DenseGraph, Vec<usize>) {
+        let mut g = DenseGraph::new(verts.len());
+        for (i, &a) in verts.iter().enumerate() {
+            for (j, &b) in verts.iter().enumerate().skip(i + 1) {
+                g.set(i, j, self.get(a, b));
+            }
+        }
+        (g, verts.to_vec())
+    }
+}
+
+/// One maximum-adjacency phase over the vertices `active` of `g`:
+/// returns `(last_vertex, cut_weight)` — the cut-of-the-phase is
+/// `({last}, active \ {last})`.
+pub fn ma_phase(g: &DenseGraph, active: &[usize]) -> (usize, f64) {
+    assert!(active.len() >= 2, "phase needs >= 2 vertices");
+    let mut in_a = vec![false; g.len()];
+    let mut conn = vec![0.0f64; g.len()];
+    let start = active[0];
+    in_a[start] = true;
+    for &v in active {
+        if v != start {
+            conn[v] = g.get(start, v);
+        }
+    }
+    let mut last = start;
+    for _ in 1..active.len() {
+        // most tightly connected vertex not yet in A
+        let mut best = usize::MAX;
+        let mut best_w = f64::NEG_INFINITY;
+        for &v in active {
+            if !in_a[v] && conn[v] > best_w {
+                best = v;
+                best_w = conn[v];
+            }
+        }
+        in_a[best] = true;
+        last = best;
+        for &v in active {
+            if !in_a[v] {
+                conn[v] += g.get(best, v);
+            }
+        }
+    }
+    (last, conn[last])
+}
+
+/// The SCA 2-cut: split `active` along its global minimum cut (full
+/// Stoer–Wagner on the subgraph) into `(larger, smaller)` — Algorithm 2
+/// keeps cutting the larger side until it is viable, so the smaller side
+/// is the "peeled" set returned to the pool. Minimizing the cut weight
+/// minimizes the reuse destroyed by the cut (paper §3.3.2).
+pub fn two_cut(g: &DenseGraph, active: &[usize]) -> (Vec<usize>, Vec<usize>) {
+    assert!(active.len() >= 2);
+    if active.len() == 2 {
+        return (vec![active[0]], vec![active[1]]);
+    }
+    let (sub, map) = g.subgraph(active);
+    let (_w, side) = stoer_wagner(&sub);
+    let in_side = {
+        let mut f = vec![false; sub.len()];
+        for &v in &side {
+            f[v] = true;
+        }
+        f
+    };
+    let a: Vec<usize> = (0..sub.len()).filter(|&v| in_side[v]).map(|v| map[v]).collect();
+    let b: Vec<usize> = (0..sub.len()).filter(|&v| !in_side[v]).map(|v| map[v]).collect();
+    if a.len() >= b.len() {
+        (a, b)
+    } else {
+        (b, a)
+    }
+}
+
+/// Full Stoer–Wagner global minimum cut (for validation; O(n³)).
+/// Returns (cut_weight, one side of the cut).
+pub fn stoer_wagner(g: &DenseGraph) -> (f64, Vec<usize>) {
+    let n = g.len();
+    assert!(n >= 2);
+    // merged vertex groups
+    let mut groups: Vec<Vec<usize>> = (0..n).map(|v| vec![v]).collect();
+    let mut w = g.clone();
+    let mut active: Vec<usize> = (0..n).collect();
+    let mut best = (f64::INFINITY, Vec::new());
+    while active.len() > 1 {
+        // maximum adjacency phase tracking the before-last vertex too
+        let mut in_a = vec![false; n];
+        let mut conn = vec![0.0f64; n];
+        let start = active[0];
+        in_a[start] = true;
+        for &v in &active {
+            if v != start {
+                conn[v] = w.get(start, v);
+            }
+        }
+        let (mut s, mut t) = (start, start);
+        for _ in 1..active.len() {
+            let mut bestv = usize::MAX;
+            let mut bw = f64::NEG_INFINITY;
+            for &v in &active {
+                if !in_a[v] && conn[v] > bw {
+                    bestv = v;
+                    bw = conn[v];
+                }
+            }
+            in_a[bestv] = true;
+            s = t;
+            t = bestv;
+            for &v in &active {
+                if !in_a[v] {
+                    conn[v] += w.get(bestv, v);
+                }
+            }
+        }
+        if conn[t] < best.0 {
+            best = (conn[t], groups[t].clone());
+        }
+        // merge t into s
+        let tg = std::mem::take(&mut groups[t]);
+        groups[s].extend(tg);
+        for &v in &active {
+            if v != s && v != t {
+                let nw = w.get(s, v) + w.get(t, v);
+                w.set(s, v, nw);
+            }
+        }
+        active.retain(|&v| v != t);
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two triangles joined by one weak edge.
+    fn barbell() -> DenseGraph {
+        let mut g = DenseGraph::new(6);
+        for &(a, b) in &[(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5)] {
+            g.set(a, b, 10.0);
+        }
+        g.set(2, 3, 1.0);
+        g
+    }
+
+    #[test]
+    fn stoer_wagner_finds_weak_bridge() {
+        let (w, side) = stoer_wagner(&barbell());
+        assert_eq!(w, 1.0);
+        let mut side = side;
+        side.sort();
+        assert!(side == vec![0, 1, 2] || side == vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn ma_phase_peels_least_connected() {
+        // star: vertex 3 weakly attached
+        let mut g = DenseGraph::new(4);
+        g.set(0, 1, 5.0);
+        g.set(0, 2, 5.0);
+        g.set(1, 2, 5.0);
+        g.set(0, 3, 0.5);
+        let active: Vec<usize> = (0..4).collect();
+        let (last, cut_w) = ma_phase(&g, &active);
+        assert_eq!(last, 3);
+        assert_eq!(cut_w, 0.5);
+    }
+
+    #[test]
+    fn two_cut_partitions_along_the_bridge() {
+        let g = barbell();
+        let active: Vec<usize> = (0..6).collect();
+        let (rest, peeled) = two_cut(&g, &active);
+        assert_eq!(rest.len() + peeled.len(), 6);
+        assert_eq!(rest.len(), 3);
+        assert_eq!(peeled.len(), 3);
+        let mut p = peeled.clone();
+        p.sort();
+        assert!(p == vec![0, 1, 2] || p == vec![3, 4, 5]);
+        assert!(rest.iter().all(|v| !peeled.contains(v)));
+    }
+
+    #[test]
+    fn two_cut_subset_of_actives() {
+        // restrict to one triangle plus the weak neighbour
+        let g = barbell();
+        let (rest, peeled) = two_cut(&g, &[2, 3, 4, 5]);
+        // min cut separates 2 (weakly attached) from the triangle 3,4,5
+        assert_eq!(peeled, vec![2]);
+        let mut r = rest.clone();
+        r.sort();
+        assert_eq!(r, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn subgraph_maps_weights() {
+        let g = barbell();
+        let (sg, map) = g.subgraph(&[3, 4, 5]);
+        assert_eq!(sg.len(), 3);
+        assert_eq!(sg.get(0, 1), 10.0);
+        assert_eq!(map, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn stoer_wagner_two_vertices() {
+        let mut g = DenseGraph::new(2);
+        g.set(0, 1, 3.5);
+        let (w, side) = stoer_wagner(&g);
+        assert_eq!(w, 3.5);
+        assert_eq!(side.len(), 1);
+    }
+}

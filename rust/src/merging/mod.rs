@@ -1,0 +1,35 @@
+//! Multi-level computation reuse — the paper's contribution (§3).
+//!
+//! Two levels:
+//!
+//! * **Stage-level (coarse-grain)** — [`CompactGraph`] implements
+//!   Algorithm 1: identical stage instances across evaluations collapse
+//!   into one node of a compact workflow graph.
+//! * **Task-level (fine-grain)** — the remaining unique stage instances
+//!   are grouped into *buckets* of stages whose common task prefixes
+//!   execute once. Four bucketing algorithms, in increasing
+//!   sophistication (paper §3.3): [`naive_merge`], [`sca_merge`]
+//!   (Smart Cut, min-cut peeling), [`rtma_merge`] (Reuse-Tree), and
+//!   [`trtma_merge`] (Task-Balanced Reuse-Tree).
+//!
+//! [`plan_study`] ties both levels together into the schedulable
+//! [`StudyPlan`] the coordinator and the simulator execute.
+
+mod naive;
+mod plan;
+mod rtma;
+mod sca;
+mod stage;
+mod study;
+mod trtma;
+
+pub mod mincut;
+pub mod reuse_tree;
+
+pub use naive::naive_merge;
+pub use plan::{assert_partition, reuse_fraction, stats_for, unique_tasks, weighted_tasks, Bucket, MergeStage, PlanStats};
+pub use rtma::rtma_merge;
+pub use sca::sca_merge;
+pub use stage::{CompactGraph, CompactNode};
+pub use study::{plan_study, plan_study_weighted, FineAlgorithm, ScheduleUnit, StudyPlan, UnitKind};
+pub use trtma::{trtma_merge, trtma_merge_weighted, TrtmaOptions};

@@ -1,0 +1,58 @@
+//! Naïve fine-grain merging (paper §3.3.1) — the baseline.
+//!
+//! Groups stages into buckets of `max_bucket_size` **in generation
+//! order**. Linear time, but its reuse efficiency is "highly dependent on
+//! the stages ordering": it only wins when similar stages happen to be
+//! generated adjacently (which MOAT trajectories partially provide).
+
+use super::plan::{Bucket, MergeStage};
+
+/// Sequential bucketing of `stages` in input order.
+pub fn naive_merge(stages: &[MergeStage], max_bucket_size: usize) -> Vec<Bucket> {
+    assert!(max_bucket_size >= 1, "max_bucket_size must be >= 1");
+    (0..stages.len())
+        .collect::<Vec<_>>()
+        .chunks(max_bucket_size)
+        .map(|c| Bucket::of(c.to_vec()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::merging::plan::{assert_partition, mk_stages, reuse_fraction};
+
+    #[test]
+    fn chunks_in_order() {
+        let stages = mk_stages(&[&[1], &[2], &[3], &[4], &[5]]);
+        let buckets = naive_merge(&stages, 2);
+        assert_eq!(buckets.len(), 3);
+        assert_eq!(buckets[0].members, vec![0, 1]);
+        assert_eq!(buckets[2].members, vec![4]);
+        assert_partition(stages.len(), &buckets);
+    }
+
+    #[test]
+    fn bucket_size_one_is_no_merging() {
+        let stages = mk_stages(&[&[1, 2], &[1, 2]]);
+        let buckets = naive_merge(&stages, 1);
+        assert_eq!(buckets.len(), 2);
+        assert_eq!(reuse_fraction(&stages, &buckets), 0.0);
+    }
+
+    #[test]
+    fn order_dependence() {
+        // adjacent similar stages reuse; interleaved ones don't
+        let good = mk_stages(&[&[1, 1], &[1, 2], &[3, 1], &[3, 2]]);
+        let bad = mk_stages(&[&[1, 1], &[3, 1], &[1, 2], &[3, 2]]);
+        let rg = reuse_fraction(&good, &naive_merge(&good, 2));
+        let rb = reuse_fraction(&bad, &naive_merge(&bad, 2));
+        assert!(rg > rb, "naive must benefit from favorable ordering ({rg} vs {rb})");
+        assert_eq!(rb, 0.0);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(naive_merge(&[], 3).is_empty());
+    }
+}

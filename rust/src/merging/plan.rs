@@ -1,0 +1,223 @@
+//! Shared types for the fine-grain merging algorithms.
+
+use std::collections::HashSet;
+
+/// One stage instance as the merging algorithms see it: an opaque id and
+/// its reuse path (one task signature per level). All stages offered to a
+/// single merge call share the same stage type and input signature, so
+/// *prefix equality of paths* ⇔ *task reusability* (paper §3.3.3).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MergeStage {
+    /// Caller-side identity (e.g. compact-graph node index).
+    pub id: usize,
+    /// Task signatures level by level.
+    pub path: Vec<u64>,
+    /// Chained prefix signatures (see [`prefix_sigs`]), precomputed so
+    /// TaskCost evaluations never re-hash the path.
+    pub prefixes: Vec<u64>,
+}
+
+impl MergeStage {
+    pub fn new(id: usize, path: Vec<u64>) -> Self {
+        let prefixes = prefix_sigs(&path);
+        Self { id, path, prefixes }
+    }
+}
+
+/// A bucket of stages merged for joint execution: the stages' common task
+/// prefixes execute once.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Bucket {
+    /// Indices into the merge call's stage slice.
+    pub members: Vec<usize>,
+}
+
+impl Bucket {
+    pub fn of(members: Vec<usize>) -> Self {
+        Self { members }
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+}
+
+/// Identity hasher for values that are already hashes (the chained
+/// prefix signatures below). Removes the SipHash cost from the
+/// TaskCost evaluations that dominate TRTMA's balance search
+/// (EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy, Default)]
+pub struct SigHasher(u64);
+
+impl std::hash::Hasher for SigHasher {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = self.0.rotate_left(8) ^ b as u64;
+        }
+    }
+    fn write_u64(&mut self, v: u64) {
+        self.0 ^= v;
+    }
+}
+
+/// `BuildHasher` for [`SigHasher`].
+pub type SigBuild = std::hash::BuildHasherDefault<SigHasher>;
+
+/// Per-stage chained prefix signatures: element `l` identifies the task
+/// prefix `path[..=l]` (level folded in, so cross-level collisions are
+/// excluded by construction).
+pub fn prefix_sigs(path: &[u64]) -> Vec<u64> {
+    let mut out = Vec::with_capacity(path.len());
+    let mut acc: u64 = 0xcbf29ce484222325;
+    for (level, &sig) in path.iter().enumerate() {
+        acc = acc.wrapping_mul(0x100000001b3) ^ sig;
+        // fold the level in so equal signatures at different depths differ
+        out.push(acc ^ ((level as u64).wrapping_mul(0x9e3779b97f4a7c15)));
+    }
+    out
+}
+
+/// Number of *unique* tasks a set of stages executes when merged: the
+/// count of distinct path prefixes (the trie size, paper's TaskCost).
+pub fn unique_tasks(stages: &[MergeStage], members: &[usize]) -> usize {
+    let mut seen: HashSet<u64, SigBuild> = HashSet::default();
+    let mut count = 0usize;
+    for &m in members {
+        for &sig in &stages[m].prefixes {
+            if seen.insert(sig) {
+                count += 1;
+            }
+        }
+    }
+    count
+}
+
+/// Cost-weighted variant of [`unique_tasks`]: each distinct prefix at
+/// level `l` contributes `level_costs[l]` (estimated seconds of the
+/// stage's `l`-th task) instead of 1. This is the bucket-cost function
+/// of the cost-balanced TRTMA (paper §5 future work).
+pub fn weighted_tasks(stages: &[MergeStage], members: &[usize], level_costs: &[f64]) -> f64 {
+    let mut seen: HashSet<u64, SigBuild> = HashSet::default();
+    let mut total = 0.0;
+    for &m in members {
+        for (level, &sig) in stages[m].prefixes.iter().enumerate() {
+            if seen.insert(sig) {
+                total += level_costs.get(level).copied().unwrap_or(1.0);
+            }
+        }
+    }
+    total
+}
+
+/// Length of the common path prefix of two stages — the paper's "degree
+/// of reuse" edge weight in the SCA graph.
+pub fn reuse_degree(a: &MergeStage, b: &MergeStage) -> usize {
+    a.path.iter().zip(&b.path).take_while(|(x, y)| x == y).count()
+}
+
+/// Aggregate statistics of a bucketing.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PlanStats {
+    pub stages: usize,
+    pub buckets: usize,
+    /// Tasks executed without fine-grain reuse (n·k).
+    pub tasks_replica: usize,
+    /// Tasks executed with the bucketing (Σ bucket unique tasks).
+    pub tasks_merged: usize,
+}
+
+impl PlanStats {
+    /// Fraction of task executions removed by the merging (paper ~33 %).
+    pub fn reuse(&self) -> f64 {
+        if self.tasks_replica == 0 {
+            0.0
+        } else {
+            1.0 - self.tasks_merged as f64 / self.tasks_replica as f64
+        }
+    }
+}
+
+/// Compute [`PlanStats`] for a bucketing of `stages`.
+pub fn stats_for(stages: &[MergeStage], buckets: &[Bucket]) -> PlanStats {
+    let tasks_replica: usize = stages.iter().map(|s| s.path.len()).sum();
+    let tasks_merged: usize = buckets.iter().map(|b| unique_tasks(stages, &b.members)).sum();
+    PlanStats { stages: stages.len(), buckets: buckets.len(), tasks_replica, tasks_merged }
+}
+
+/// Fraction of tasks saved by `buckets` relative to replica execution.
+pub fn reuse_fraction(stages: &[MergeStage], buckets: &[Bucket]) -> f64 {
+    stats_for(stages, buckets).reuse()
+}
+
+/// Debug-check that a bucketing is a partition of `0..n`.
+pub fn assert_partition(n: usize, buckets: &[Bucket]) {
+    let mut seen = vec![false; n];
+    for b in buckets {
+        for &m in &b.members {
+            assert!(m < n, "member {m} out of range {n}");
+            assert!(!seen[m], "stage {m} in two buckets");
+            seen[m] = true;
+        }
+    }
+    assert!(seen.iter().all(|&s| s), "not all stages bucketed");
+}
+
+#[cfg(test)]
+pub(crate) fn mk_stages(paths: &[&[u64]]) -> Vec<MergeStage> {
+    paths.iter().enumerate().map(|(i, p)| MergeStage::new(i, p.to_vec())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unique_tasks_counts_trie_nodes() {
+        // paper Fig. 6: sets {A1,B5,C9,D13}, {A1,B5,C2,D7}, {A1,B5,C9,D15}
+        // -> 7 unique tasks instead of 12
+        let stages = mk_stages(&[&[1, 5, 9, 13], &[1, 5, 2, 7], &[1, 5, 9, 15]]);
+        assert_eq!(unique_tasks(&stages, &[0, 1, 2]), 7);
+        assert_eq!(unique_tasks(&stages, &[0]), 4);
+        assert_eq!(unique_tasks(&stages, &[0, 1]), 6);
+        assert_eq!(unique_tasks(&stages, &[]), 0);
+    }
+
+    #[test]
+    fn unique_tasks_no_false_sharing_across_levels() {
+        // same signature at different levels must not collide
+        let stages = mk_stages(&[&[7, 7], &[7, 8]]);
+        assert_eq!(unique_tasks(&stages, &[0, 1]), 3);
+    }
+
+    #[test]
+    fn prefix_only_reuse() {
+        // identical suffix but different first task -> nothing shared
+        let stages = mk_stages(&[&[1, 5, 9], &[2, 5, 9]]);
+        assert_eq!(unique_tasks(&stages, &[0, 1]), 6);
+    }
+
+    #[test]
+    fn reuse_degree_is_common_prefix() {
+        let stages = mk_stages(&[&[1, 5, 9, 13], &[1, 5, 2, 7], &[2, 5, 9, 13]]);
+        assert_eq!(reuse_degree(&stages[0], &stages[1]), 2);
+        assert_eq!(reuse_degree(&stages[0], &stages[2]), 0);
+        assert_eq!(reuse_degree(&stages[0], &stages[0]), 4);
+    }
+
+    #[test]
+    fn stats_and_reuse() {
+        let stages = mk_stages(&[&[1, 5, 9, 13], &[1, 5, 2, 7], &[1, 5, 9, 15]]);
+        let buckets = vec![Bucket::of(vec![0, 1, 2])];
+        let st = stats_for(&stages, &buckets);
+        assert_eq!(st.tasks_replica, 12);
+        assert_eq!(st.tasks_merged, 7);
+        assert!((st.reuse() - 5.0 / 12.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,222 @@
+//! The Reuse-Tree structure (paper §3.3.3).
+//!
+//! Level ℓ of the tree represents task ℓ of the stage; a node stands for
+//! one distinct task instantiation, and two stages share a node at level
+//! ℓ iff their tasks 1..ℓ are pairwise identical (same computation, same
+//! inputs) — i.e. reusable among themselves. Every stage terminates in
+//! its own *leaf node* below its last task node, exactly as the paper
+//! draws it (Fig. 11: stage letters hang below the task levels).
+//!
+//! Construction uses a hash-map child lookup, giving the O(kn) bound of
+//! the paper's optimized GenerateReuseTree.
+
+use std::collections::HashMap;
+
+use super::plan::MergeStage;
+
+/// One reuse-tree node: either a task node (`stage == None`) or a stage
+/// leaf (`stage == Some(idx)`, always childless).
+#[derive(Clone, Debug)]
+pub struct RtNode {
+    /// Task signature at this level (0 for the root and for leaves).
+    pub sig: u64,
+    /// 0 = root; tasks at 1..=k; stage leaves at k+1.
+    pub level: usize,
+    pub parent: Option<usize>,
+    pub children: Vec<usize>,
+    /// For stage leaves: the stage (index into the merge input).
+    pub stage: Option<usize>,
+}
+
+impl RtNode {
+    pub fn is_leaf(&self) -> bool {
+        self.stage.is_some()
+    }
+}
+
+/// Arena-allocated reuse tree.
+#[derive(Clone, Debug)]
+pub struct ReuseTree {
+    pub nodes: Vec<RtNode>,
+    pub root: usize,
+    /// Task levels (path length of the inserted stages).
+    pub n_levels: usize,
+}
+
+impl ReuseTree {
+    /// Insert every stage one task-node at a time, reusing existing nodes
+    /// with equal (parent, signature), then attach the stage leaf.
+    pub fn build(stages: &[MergeStage]) -> Self {
+        let mut nodes = vec![RtNode {
+            sig: 0,
+            level: 0,
+            parent: None,
+            children: Vec::new(),
+            stage: None,
+        }];
+        let mut lookup: HashMap<(usize, u64), usize> = HashMap::new();
+        let n_levels = stages.first().map(|s| s.path.len()).unwrap_or(0);
+        for (idx, st) in stages.iter().enumerate() {
+            assert_eq!(st.path.len(), n_levels, "stage paths must have equal length");
+            let mut cur = 0usize;
+            for (li, &sig) in st.path.iter().enumerate() {
+                let key = (cur, sig);
+                cur = match lookup.get(&key) {
+                    Some(&c) => c,
+                    None => {
+                        let id = nodes.len();
+                        nodes.push(RtNode {
+                            sig,
+                            level: li + 1,
+                            parent: Some(cur),
+                            children: Vec::new(),
+                            stage: None,
+                        });
+                        nodes[cur].children.push(id);
+                        lookup.insert(key, id);
+                        id
+                    }
+                };
+            }
+            let leaf = nodes.len();
+            nodes.push(RtNode {
+                sig: 0,
+                level: n_levels + 1,
+                parent: Some(cur),
+                children: Vec::new(),
+                stage: Some(idx),
+            });
+            nodes[cur].children.push(leaf);
+        }
+        ReuseTree { nodes, root: 0, n_levels }
+    }
+
+    /// Number of task executions the whole tree represents: one per task
+    /// node (root and stage leaves carry no work).
+    pub fn unique_task_count(&self) -> usize {
+        self.nodes.iter().filter(|n| !n.is_leaf()).count() - 1
+    }
+
+    /// Stage indices of all leaves under `node` (inclusive).
+    pub fn leaves_under(&self, node: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut stack = vec![node];
+        while let Some(v) = stack.pop() {
+            if let Some(s) = self.nodes[v].stage {
+                out.push(s);
+            }
+            stack.extend(self.nodes[v].children.iter().copied());
+        }
+        out
+    }
+
+    /// All leaf node ids (one per inserted stage).
+    pub fn leaf_nodes(&self) -> Vec<usize> {
+        (0..self.nodes.len()).filter(|&i| self.nodes[i].is_leaf()).collect()
+    }
+
+    /// Height = node levels on the longest root-to-leaf path including
+    /// the root and the stage-leaf level (bare root has height 1).
+    pub fn height(&self) -> usize {
+        fn depth(t: &ReuseTree, v: usize) -> usize {
+            1 + t.nodes[v].children.iter().map(|&c| depth(t, c)).max().unwrap_or(0)
+        }
+        depth(self, self.root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::merging::plan::mk_stages;
+
+    #[test]
+    fn fig10_insertion() {
+        // Fig. 10: stages a..d over tasks (p1, p2, p3); then x = (8, 2, 9)
+        // is inserted, reusing the p1=8 node and creating new nodes for
+        // its 2nd and 3rd tasks (plus x's leaf).
+        let before = mk_stages(&[
+            /* a */ &[7, 1, 4],
+            /* b */ &[7, 3, 4],
+            /* c */ &[7, 3, 5],
+            /* d */ &[8, 5, 6],
+        ]);
+        let t0 = ReuseTree::build(&before);
+        // root + level1 {7,8} + level2 {1,3,5} + level3 {4,4',5,6} + 4 leaves
+        assert_eq!(t0.nodes.len(), 1 + 2 + 3 + 4 + 4);
+        assert_eq!(t0.unique_task_count(), 9);
+
+        let after = mk_stages(&[
+            &[7, 1, 4],
+            &[7, 3, 4],
+            &[7, 3, 5],
+            &[8, 5, 6],
+            /* x */ &[8, 2, 9],
+        ]);
+        let t1 = ReuseTree::build(&after);
+        // x reuses node "8" and adds exactly 2 task nodes + 1 leaf
+        assert_eq!(t1.nodes.len(), t0.nodes.len() + 3);
+        assert_eq!(t1.unique_task_count(), 11);
+        assert_eq!(t1.leaves_under(t1.root).len(), 5);
+    }
+
+    #[test]
+    fn duplicate_full_paths_share_all_tasks() {
+        let stages = mk_stages(&[&[1, 2], &[1, 2], &[1, 2]]);
+        let t = ReuseTree::build(&stages);
+        let mut leaves: Vec<usize> =
+            t.leaf_nodes().iter().map(|&n| t.nodes[n].stage.unwrap()).collect();
+        leaves.sort();
+        assert_eq!(leaves, vec![0, 1, 2]);
+        // three identical stages cost 2 unique tasks, not 6
+        assert_eq!(t.unique_task_count(), 2);
+    }
+
+    #[test]
+    fn unique_task_count_matches_plan_helper() {
+        let stages = mk_stages(&[&[1, 5, 9, 13], &[1, 5, 2, 7], &[1, 5, 9, 15]]);
+        let t = ReuseTree::build(&stages);
+        let all: Vec<usize> = (0..stages.len()).collect();
+        assert_eq!(t.unique_task_count(), super::super::plan::unique_tasks(&stages, &all));
+        assert_eq!(t.unique_task_count(), 7);
+    }
+
+    #[test]
+    fn height_and_leaves() {
+        let stages = mk_stages(&[&[1, 2, 3], &[1, 2, 4], &[9, 9, 9]]);
+        let t = ReuseTree::build(&stages);
+        assert_eq!(t.height(), 5); // root + 3 task levels + leaf level
+        assert_eq!(t.n_levels, 3);
+        let mut ls = t.leaves_under(t.root);
+        ls.sort();
+        assert_eq!(ls, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn no_reuse_tree_is_a_star_of_chains() {
+        let stages = mk_stages(&[&[1, 2], &[3, 4], &[5, 6]]);
+        let t = ReuseTree::build(&stages);
+        assert_eq!(t.nodes[t.root].children.len(), 3);
+        assert_eq!(t.unique_task_count(), 6);
+    }
+
+    #[test]
+    fn leaves_are_childless_and_tasks_carry_no_stage() {
+        let stages = mk_stages(&[&[1, 2, 3], &[1, 9, 9]]);
+        let t = ReuseTree::build(&stages);
+        for n in &t.nodes {
+            if n.is_leaf() {
+                assert!(n.children.is_empty());
+                assert_eq!(n.level, t.n_levels + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        let t = ReuseTree::build(&[]);
+        assert_eq!(t.nodes.len(), 1);
+        assert_eq!(t.unique_task_count(), 0);
+        assert!(t.leaves_under(t.root).is_empty());
+    }
+}

@@ -1,0 +1,131 @@
+//! Smart Cut Algorithm (SCA) — paper §3.3.2, Algorithm 2.
+//!
+//! Build the fully-connected reuse-degree graph over the stage instances,
+//! then repeatedly 2-cut the working graph (peeling its least-reusable
+//! stage) until a viable subgraph (≤ `max_bucket_size` stages) remains;
+//! emit it as a bucket, return the peeled stages to the pool, repeat.
+//!
+//! Complexity: O(n²) per cut on the dense graph and O(n²) cuts worst
+//! case ⇒ O(n⁴) — the scaling wall the paper demonstrates in Figs. 19/20
+//! (SCA never finishes the VBD-sized merges). Kept faithful on purpose;
+//! the benches reproduce exactly that blow-up.
+
+use super::mincut::{two_cut, DenseGraph};
+use super::plan::{reuse_degree, Bucket, MergeStage};
+
+/// Run the SCA bucketing.
+pub fn sca_merge(stages: &[MergeStage], max_bucket_size: usize) -> Vec<Bucket> {
+    assert!(max_bucket_size >= 1);
+    let n = stages.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    // fully-connected reuse graph (paper Fig. 9b)
+    let mut g = DenseGraph::new(n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            g.set(i, j, reuse_degree(&stages[i], &stages[j]) as f64);
+        }
+    }
+
+    let mut pool: Vec<usize> = (0..n).collect();
+    let mut buckets = Vec::new();
+    while !pool.is_empty() {
+        if pool.len() <= max_bucket_size {
+            buckets.push(Bucket::of(pool.clone()));
+            break;
+        }
+        // cut the working set until the surviving side is viable
+        let mut work = pool.clone();
+        let mut peeled_all: Vec<usize> = Vec::new();
+        while work.len() > max_bucket_size {
+            let (rest, peeled) = two_cut(&g, &work);
+            peeled_all.extend(peeled);
+            work = rest;
+        }
+        buckets.push(Bucket::of(work.clone()));
+        // the viable subgraph leaves the pool; peeled stages go back
+        pool = peeled_all;
+    }
+    buckets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::merging::plan::{assert_partition, mk_stages, reuse_fraction};
+
+    #[test]
+    fn groups_similar_stages_together() {
+        // two families with strong internal reuse, interleaved on purpose
+        let stages = mk_stages(&[
+            &[1, 1, 1],
+            &[9, 9, 9],
+            &[1, 1, 2],
+            &[9, 9, 8],
+            &[1, 1, 3],
+            &[9, 9, 7],
+        ]);
+        let buckets = sca_merge(&stages, 3);
+        assert_partition(stages.len(), &buckets);
+        assert_eq!(buckets.len(), 2);
+        for b in &buckets {
+            // each bucket must be a single family: members share a
+            // 2-task prefix
+            let first = &stages[b.members[0]].path;
+            for &m in &b.members {
+                assert_eq!(stages[m].path[..2], first[..2]);
+            }
+        }
+        // SCA beats order-based naive on this adversarial ordering
+        let naive = crate::merging::naive_merge(&stages, 3);
+        assert!(reuse_fraction(&stages, &buckets) > reuse_fraction(&stages, &naive));
+    }
+
+    #[test]
+    fn respects_max_bucket_size() {
+        let stages = mk_stages(&[&[1], &[1], &[1], &[1], &[1], &[1], &[1]]);
+        for mbs in 1..=4 {
+            let buckets = sca_merge(&stages, mbs);
+            assert_partition(stages.len(), &buckets);
+            assert!(buckets.iter().all(|b| b.len() <= mbs));
+        }
+    }
+
+    #[test]
+    fn single_stage() {
+        let stages = mk_stages(&[&[1, 2, 3]]);
+        let buckets = sca_merge(&stages, 4);
+        assert_eq!(buckets.len(), 1);
+        assert_eq!(buckets[0].members, vec![0]);
+    }
+
+    #[test]
+    fn empty() {
+        assert!(sca_merge(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn fig9_walkthrough() {
+        // Fig. 9: 5 instances of a 6-task workflow, MaxBucketSize = 2.
+        // d and e are the most-reusing pair; a, b, c are progressively
+        // less related. The first bucket must be {d, e}.
+        let stages = mk_stages(&[
+            /* a */ &[1, 10, 20, 33, 43, 50],
+            /* b */ &[1, 10, 21, 31, 41, 51],
+            /* c */ &[2, 11, 22, 32, 42, 52],
+            /* d */ &[1, 10, 20, 30, 40, 53],
+            /* e */ &[1, 10, 20, 30, 40, 54],
+        ]);
+        let buckets = sca_merge(&stages, 2);
+        assert_partition(stages.len(), &buckets);
+        let de = buckets.iter().find(|b| {
+            let mut m = b.members.clone();
+            m.sort();
+            m == vec![3, 4]
+        });
+        assert!(de.is_some(), "d+e must share a bucket: {buckets:?}");
+        // c is the least reusable and ends up alone or with b, never
+        // splitting the d/e pair
+    }
+}

@@ -1,0 +1,196 @@
+//! Stage-level (coarse-grain) merging — paper Algorithm 1.
+//!
+//! Builds the *compact graph*: one node per **unique** stage instance
+//! (same stage, same input, same parameters ⇒ same output), with the
+//! replica workflows' edges preserved. The `find` step uses a hash map,
+//! so inserting n workflow instances of k stages is O(kn) (the paper's
+//! optimized bound).
+
+use std::collections::HashMap;
+
+use crate::workflow::StageInstance;
+
+/// One unique stage instance in the compact graph.
+#[derive(Clone, Debug)]
+pub struct CompactNode {
+    /// Index of this node in [`CompactGraph::nodes`].
+    pub id: usize,
+    /// Representative stage instance (first one merged into this node).
+    pub rep: usize,
+    /// All stage-instance ids this node covers (≥ 1; > 1 means coarse
+    /// reuse happened).
+    pub covered: Vec<usize>,
+    /// Upstream compact node (None for first stage of the chain).
+    pub parent: Option<usize>,
+    /// Downstream compact nodes.
+    pub children: Vec<usize>,
+    pub stage: String,
+    pub stage_idx: usize,
+}
+
+/// The compact (deduplicated) workflow graph of a whole study.
+#[derive(Clone, Debug, Default)]
+pub struct CompactGraph {
+    pub nodes: Vec<CompactNode>,
+    /// For each evaluation: the compact node executing each stage level.
+    pub eval_nodes: HashMap<usize, Vec<usize>>,
+}
+
+impl CompactGraph {
+    /// Algorithm 1, with the hash-table `find`. When `dedupe` is false the
+    /// graph is the replica-based composition ("No reuse" baseline).
+    pub fn build(instances: &[StageInstance], dedupe: bool) -> Self {
+        let mut nodes: Vec<CompactNode> = Vec::new();
+        // PendingVer of Algorithm 1: full_sig -> node id
+        let mut by_sig: HashMap<(usize, u64), usize> = HashMap::new();
+        let mut eval_nodes: HashMap<usize, Vec<usize>> = HashMap::new();
+
+        for inst in instances {
+            let key = (inst.stage_idx, inst.full_sig);
+            let node_id = match by_sig.get(&key) {
+                Some(&id) if dedupe => {
+                    nodes[id].covered.push(inst.id);
+                    id
+                }
+                _ => {
+                    let id = nodes.len();
+                    // parent: the node executing this eval's previous stage
+                    let parent = if inst.stage_idx == 0 {
+                        None
+                    } else {
+                        eval_nodes.get(&inst.eval).and_then(|v| v.last().copied())
+                    };
+                    nodes.push(CompactNode {
+                        id,
+                        rep: inst.id,
+                        covered: vec![inst.id],
+                        parent,
+                        children: Vec::new(),
+                        stage: inst.stage.clone(),
+                        stage_idx: inst.stage_idx,
+                    });
+                    if let Some(p) = parent {
+                        nodes[p].children.push(id);
+                    }
+                    by_sig.insert(key, id);
+                    id
+                }
+            };
+            eval_nodes.entry(inst.eval).or_default().push(node_id);
+        }
+        CompactGraph { nodes, eval_nodes }
+    }
+
+    /// Unique stage instances remaining per stage index.
+    pub fn nodes_of_stage(&self, stage_idx: usize) -> Vec<usize> {
+        self.nodes.iter().filter(|n| n.stage_idx == stage_idx).map(|n| n.id).collect()
+    }
+
+    /// Total stage instances before merging.
+    pub fn replica_stage_count(&self) -> usize {
+        self.nodes.iter().map(|n| n.covered.len()).sum()
+    }
+
+    /// Stage instances removed by coarse-grain reuse.
+    pub fn stages_saved(&self) -> usize {
+        self.replica_stage_count() - self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::default_space;
+    use crate::workflow::{instantiate_study, paper_workflow, Evaluation};
+
+    fn study(n: usize, vary: impl Fn(usize, &mut Vec<f64>)) -> Vec<StageInstance> {
+        let wf = paper_workflow();
+        let space = default_space();
+        let evals: Vec<Evaluation> = (0..n)
+            .map(|id| {
+                let mut params = space.defaults();
+                vary(id, &mut params);
+                Evaluation { id, tile: 0, params }
+            })
+            .collect();
+        instantiate_study(&wf, &evals)
+    }
+
+    #[test]
+    fn normalization_collapses_to_one_node() {
+        // each eval varies G1 -> segmentation/comparison unique, norm shared
+        let insts = study(10, |id, p| p[5] = 5.0 * (id + 1) as f64);
+        let g = CompactGraph::build(&insts, true);
+        assert_eq!(g.nodes_of_stage(0).len(), 1);
+        assert_eq!(g.nodes_of_stage(1).len(), 10);
+        assert_eq!(g.nodes_of_stage(2).len(), 10);
+        assert_eq!(g.replica_stage_count(), 30);
+        assert_eq!(g.stages_saved(), 9);
+    }
+
+    #[test]
+    fn identical_evaluations_collapse_fully() {
+        let insts = study(5, |_, _| {});
+        let g = CompactGraph::build(&insts, true);
+        assert_eq!(g.nodes.len(), 3); // one node per stage
+        assert_eq!(g.stages_saved(), 12);
+        // all evals point at the same chain
+        for v in g.eval_nodes.values() {
+            assert_eq!(v, g.eval_nodes.get(&0).unwrap());
+        }
+    }
+
+    #[test]
+    fn no_dedupe_keeps_replicas() {
+        let insts = study(4, |_, _| {});
+        let g = CompactGraph::build(&insts, false);
+        assert_eq!(g.nodes.len(), 12);
+        assert_eq!(g.stages_saved(), 0);
+    }
+
+    #[test]
+    fn parent_chain_is_consistent() {
+        let insts = study(6, |id, p| p[6] = 2.0 * (id % 3 + 1) as f64);
+        let g = CompactGraph::build(&insts, true);
+        for n in &g.nodes {
+            match n.stage_idx {
+                0 => assert!(n.parent.is_none()),
+                _ => {
+                    let p = &g.nodes[n.parent.unwrap()];
+                    assert_eq!(p.stage_idx, n.stage_idx - 1);
+                    assert!(p.children.contains(&n.id));
+                }
+            }
+        }
+        // 3 distinct G2 values -> 3 unique segmentation nodes
+        assert_eq!(g.nodes_of_stage(1).len(), 3);
+    }
+
+    #[test]
+    fn fig6_compact_graph() {
+        // Fig. 6 of the paper: 3 parameter sets over tasks A,B,C,D where
+        // sets share (A,B) and sets 1,3 share (A,B,C): 12 replica tasks
+        // -> 7 compact tasks. Modeled as a 4-stage workflow with one task
+        // per stage.
+        use crate::workflow::{StageSpec, TaskSpec, WorkflowSpec};
+        let wf = WorkflowSpec::new(
+            "fig6",
+            vec![
+                StageSpec::new("A", vec![TaskSpec::new("A", "x::a", vec![0])]),
+                StageSpec::new("B", vec![TaskSpec::new("B", "x::b", vec![1])]),
+                StageSpec::new("C", vec![TaskSpec::new("C", "x::c", vec![2])]),
+                StageSpec::new("D", vec![TaskSpec::new("D", "x::d", vec![3])]),
+            ],
+        );
+        // params: (1,5,9,13), (1,5,2,7), (1,5,9,15) — paper's Set 1..3
+        let sets = [[1.0, 5.0, 9.0, 13.0], [1.0, 5.0, 2.0, 7.0], [1.0, 5.0, 9.0, 15.0]];
+        let evals: Vec<Evaluation> = sets
+            .iter()
+            .enumerate()
+            .map(|(id, p)| Evaluation { id, tile: 0, params: p.to_vec() })
+            .collect();
+        let g = CompactGraph::build(&instantiate_study(&wf, &evals), true);
+        assert_eq!(g.replica_stage_count(), 12);
+        assert_eq!(g.nodes.len(), 7, "paper: 12 tasks -> 7 tasks (~41% fewer)");
+    }
+}

@@ -1,0 +1,394 @@
+//! Study planning: both reuse levels composed into a schedulable plan.
+//!
+//! [`plan_study`] takes the coarse-grain [`CompactGraph`] (Algorithm 1
+//! output) and applies one of the fine-grain merging algorithms to every
+//! *merge group* — the compact nodes of one stage level sharing the same
+//! input signature, i.e. exactly the stage instances the paper's
+//! task-level merging may bundle. The result is a [`StudyPlan`] of
+//! [`ScheduleUnit`]s with explicit inter-unit dependencies; the
+//! coordinator (real PJRT execution) and the simulator (scaling studies)
+//! both consume this plan.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::workflow::StageInstance;
+
+use super::plan::{unique_tasks, Bucket, MergeStage, PlanStats};
+use super::stage::CompactGraph;
+use super::{naive_merge, rtma_merge, sca_merge, trtma_merge, trtma_merge_weighted, TrtmaOptions};
+
+/// Which fine-grain (task-level) merging algorithm to run on top of the
+/// coarse-grain compact graph.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FineAlgorithm {
+    /// Coarse-grain reuse only (the paper's "Stage Level" version).
+    None,
+    /// Naïve sequential bucketing (paper §3.3.1), `MaxBucketSize` stages.
+    Naive(usize),
+    /// Smart Cut min-cut peeling (paper §3.3.2), `MaxBucketSize` stages.
+    Sca(usize),
+    /// Reuse-Tree merging (paper §3.3.3), `MaxBucketSize` stages.
+    Rtma(usize),
+    /// Task-Balanced Reuse-Tree merging (paper §3.3.4). The target bucket
+    /// count applies *per merge group* (one group per stage level × input
+    /// signature; the paper's single-tile studies have one big group, so
+    /// this matches its global `MaxBuckets`).
+    Trtma(TrtmaOptions),
+    /// Cost-balanced TRTMA (the paper's §5 future work): buckets
+    /// balanced by estimated task *cost* (per-task seconds supplied to
+    /// [`plan_study_weighted`]) instead of task count, removing the
+    /// Fig.-24 topology imbalance.
+    TrtmaCost(TrtmaOptions),
+}
+
+impl FineAlgorithm {
+    /// Short display name matching the paper's figure legends.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FineAlgorithm::None => "stage-level",
+            FineAlgorithm::Naive(_) => "naive",
+            FineAlgorithm::Sca(_) => "sca",
+            FineAlgorithm::Rtma(_) => "rtma",
+            FineAlgorithm::Trtma(_) => "trtma",
+            FineAlgorithm::TrtmaCost(_) => "trtma-cost",
+        }
+    }
+
+    fn run(&self, stages: &[MergeStage], level_costs: &[f64]) -> Vec<Bucket> {
+        match *self {
+            FineAlgorithm::None => {
+                (0..stages.len()).map(|i| Bucket::of(vec![i])).collect()
+            }
+            FineAlgorithm::Naive(mbs) => naive_merge(stages, mbs),
+            FineAlgorithm::Sca(mbs) => sca_merge(stages, mbs),
+            FineAlgorithm::Rtma(mbs) => rtma_merge(stages, mbs),
+            FineAlgorithm::Trtma(opts) => trtma_merge(stages, opts),
+            FineAlgorithm::TrtmaCost(opts) => trtma_merge_weighted(stages, opts, level_costs),
+        }
+    }
+}
+
+/// How a schedule unit came to be.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum UnitKind {
+    /// One compact node, not fine-grain merged (singleton or `None`).
+    Single,
+    /// A bucket of ≥ 2 compact nodes sharing task prefixes.
+    Merged,
+}
+
+/// One schedulable work item: a bucket of compact-graph nodes of the same
+/// stage level and input, executed jointly on one worker with the common
+/// task prefixes running once.
+#[derive(Clone, Debug)]
+pub struct ScheduleUnit {
+    pub id: usize,
+    pub stage: String,
+    pub stage_idx: usize,
+    /// Compact-graph node ids bundled into this unit.
+    pub nodes: Vec<usize>,
+    /// Unit ids that must complete before this unit can run.
+    pub deps: Vec<usize>,
+    pub kind: UnitKind,
+    /// Unique fine-grain tasks this unit executes (the paper's TaskCost).
+    pub task_cost: usize,
+}
+
+/// The complete two-level reuse plan for a study.
+#[derive(Clone, Debug)]
+pub struct StudyPlan {
+    pub units: Vec<ScheduleUnit>,
+    /// compact node id → owning unit id.
+    pub node_unit: Vec<usize>,
+    /// Stage instances removed by coarse-grain merging.
+    pub coarse_saved: usize,
+    /// Fine-grain task statistics over the *post-coarse* instances
+    /// (Table 4 reports exactly this "fine reuse after coarse reuse").
+    pub fine: PlanStats,
+    /// Wall time spent inside the fine-grain merging algorithm — the
+    /// overhead plotted on top of the bars in Figs 19/20.
+    pub merge_time: Duration,
+}
+
+impl StudyPlan {
+    /// Fine-grain reuse fraction (paper ≈ 33–36 %).
+    pub fn fine_reuse(&self) -> f64 {
+        self.fine.reuse()
+    }
+
+    /// Total fine-grain tasks the plan executes.
+    pub fn tasks_to_execute(&self) -> usize {
+        self.units.iter().map(|u| u.task_cost).sum()
+    }
+
+    /// Units per stage level, for parallelism diagnostics.
+    pub fn units_of_stage(&self, stage_idx: usize) -> Vec<usize> {
+        self.units
+            .iter()
+            .filter(|u| u.stage_idx == stage_idx)
+            .map(|u| u.id)
+            .collect()
+    }
+
+    /// Check plan integrity: every node in exactly one unit, deps point
+    /// to earlier stage levels. Panics on violation (test helper).
+    pub fn assert_valid(&self, graph: &CompactGraph) {
+        let mut seen = vec![false; graph.nodes.len()];
+        for u in &self.units {
+            for &n in &u.nodes {
+                assert!(!seen[n], "node {n} in two units");
+                seen[n] = true;
+                assert_eq!(self.node_unit[n], u.id);
+            }
+            for &d in &u.deps {
+                assert!(
+                    self.units[d].stage_idx < u.stage_idx,
+                    "dep {} not upstream of unit {}",
+                    d,
+                    u.id
+                );
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "unassigned compact node");
+    }
+}
+
+/// Build the fine-grain merge groups: compact nodes keyed by
+/// (stage level, input signature). Only instances with identical inputs
+/// may share task results.
+fn merge_groups(
+    graph: &CompactGraph,
+    instances: &[StageInstance],
+) -> Vec<Vec<usize>> {
+    let mut groups: HashMap<(usize, u64), Vec<usize>> = HashMap::new();
+    for node in &graph.nodes {
+        let rep = &instances[node.rep];
+        groups.entry((node.stage_idx, rep.input_sig)).or_default().push(node.id);
+    }
+    let mut out: Vec<Vec<usize>> = groups.into_values().collect();
+    // deterministic planning order: by first node id
+    out.sort_by_key(|g| g.iter().copied().min().unwrap_or(0));
+    out
+}
+
+/// Compose coarse- and fine-grain reuse into a [`StudyPlan`] with unit
+/// task costs (every task weighs 1 — the paper's algorithms).
+pub fn plan_study(
+    graph: &CompactGraph,
+    instances: &[StageInstance],
+    algo: FineAlgorithm,
+) -> StudyPlan {
+    plan_study_weighted(graph, instances, algo, &HashMap::new())
+}
+
+/// Like [`plan_study`], with per-task cost estimates (task name →
+/// seconds) used by [`FineAlgorithm::TrtmaCost`]; unknown tasks weigh 1.
+pub fn plan_study_weighted(
+    graph: &CompactGraph,
+    instances: &[StageInstance],
+    algo: FineAlgorithm,
+    task_costs: &HashMap<String, f64>,
+) -> StudyPlan {
+    let mut units: Vec<ScheduleUnit> = Vec::new();
+    let mut node_unit = vec![usize::MAX; graph.nodes.len()];
+    let mut tasks_replica = 0usize;
+    let mut tasks_merged = 0usize;
+    let mut merge_time = Duration::ZERO;
+
+    for group in merge_groups(graph, instances) {
+        // Paths of the group's members, in group order.
+        let stages: Vec<MergeStage> = group
+            .iter()
+            .enumerate()
+            .map(|(i, &n)| MergeStage::new(i, instances[graph.nodes[n].rep].task_path()))
+            .collect();
+        tasks_replica += stages.iter().map(|s| s.path.len()).sum::<usize>();
+
+        let buckets = if group.len() >= 2 && stages[0].path.len() >= 1 {
+            // per-level cost estimates for this group's stage type
+            let rep = &instances[graph.nodes[group[0]].rep];
+            let level_costs: Vec<f64> = rep
+                .tasks
+                .iter()
+                .map(|t| task_costs.get(&t.name).copied().unwrap_or(1.0))
+                .collect();
+            let t0 = Instant::now();
+            let b = algo.run(&stages, &level_costs);
+            merge_time += t0.elapsed();
+            b
+        } else {
+            (0..group.len()).map(|i| Bucket::of(vec![i])).collect()
+        };
+
+        for b in &buckets {
+            let cost = unique_tasks(&stages, &b.members);
+            tasks_merged += cost;
+            let nodes: Vec<usize> = b.members.iter().map(|&m| group[m]).collect();
+            let id = units.len();
+            for &n in &nodes {
+                node_unit[n] = id;
+            }
+            units.push(ScheduleUnit {
+                id,
+                stage: graph.nodes[nodes[0]].stage.clone(),
+                stage_idx: graph.nodes[nodes[0]].stage_idx,
+                nodes,
+                deps: Vec::new(),
+                kind: if b.members.len() > 1 { UnitKind::Merged } else { UnitKind::Single },
+                task_cost: cost,
+            });
+        }
+    }
+
+    // dependencies: a unit depends on the units owning its nodes' parents
+    for i in 0..units.len() {
+        let mut deps: Vec<usize> = units[i]
+            .nodes
+            .iter()
+            .filter_map(|&n| graph.nodes[n].parent)
+            .map(|p| node_unit[p])
+            .collect();
+        deps.sort_unstable();
+        deps.dedup();
+        units[i].deps = deps;
+    }
+
+    StudyPlan {
+        coarse_saved: graph.stages_saved(),
+        fine: PlanStats {
+            stages: graph.nodes.len(),
+            buckets: units.len(),
+            tasks_replica,
+            tasks_merged,
+        },
+        units,
+        node_unit,
+        merge_time,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::default_space;
+    use crate::workflow::{instantiate_study, paper_workflow, Evaluation};
+
+    fn study(n: usize, vary: impl Fn(usize, &mut Vec<f64>)) -> (CompactGraph, Vec<StageInstance>) {
+        let wf = paper_workflow();
+        let space = default_space();
+        let evals: Vec<Evaluation> = (0..n)
+            .map(|id| {
+                let mut params = space.defaults();
+                vary(id, &mut params);
+                Evaluation { id, tile: 0, params }
+            })
+            .collect();
+        let insts = instantiate_study(&wf, &evals);
+        (CompactGraph::build(&insts, true), insts)
+    }
+
+    #[test]
+    fn stage_level_plan_is_singletons() {
+        let (g, insts) = study(8, |id, p| p[5] = 5.0 * (id % 4 + 1) as f64);
+        let plan = plan_study(&g, &insts, FineAlgorithm::None);
+        plan.assert_valid(&g);
+        assert!(plan.units.iter().all(|u| u.kind == UnitKind::Single));
+        assert_eq!(plan.fine.tasks_merged, plan.fine.tasks_replica);
+        assert_eq!(plan.fine_reuse(), 0.0);
+        // 4 distinct G1 values -> 1 norm + 4 seg + 4 cmp units
+        assert_eq!(plan.units.len(), 9);
+        assert_eq!(plan.coarse_saved, 24 - 9);
+    }
+
+    #[test]
+    fn rtma_plan_merges_shared_prefixes() {
+        // t5's parameter varies -> t1..t4 shared among all evals
+        let (g, insts) = study(6, |id, p| p[9] = 5.0 * (id + 1) as f64);
+        let plan = plan_study(&g, &insts, FineAlgorithm::Rtma(6));
+        plan.assert_valid(&g);
+        let merged: Vec<_> =
+            plan.units.iter().filter(|u| u.kind == UnitKind::Merged).collect();
+        assert_eq!(merged.len(), 1, "one segmentation bucket: {:?}", plan.units);
+        // 6 stages x 7 tasks = 42 replica; shared t1..t4 once: 4 + 6*3 = 22
+        assert_eq!(merged[0].task_cost, 22);
+        assert!(plan.fine_reuse() > 0.0);
+    }
+
+    #[test]
+    fn deps_follow_the_workflow_chain() {
+        let (g, insts) = study(5, |id, p| p[6] = 2.0 * (id + 1) as f64);
+        let plan = plan_study(&g, &insts, FineAlgorithm::Rtma(3));
+        plan.assert_valid(&g);
+        for u in &plan.units {
+            match u.stage_idx {
+                0 => assert!(u.deps.is_empty()),
+                _ => {
+                    assert!(!u.deps.is_empty());
+                    for &d in &u.deps {
+                        assert_eq!(plan.units[d].stage_idx, u.stage_idx - 1);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn different_tiles_never_merge() {
+        let wf = paper_workflow();
+        let space = default_space();
+        let evals: Vec<Evaluation> = (0..4)
+            .map(|id| Evaluation { id, tile: (id % 2) as u64, params: space.defaults() })
+            .collect();
+        let insts = instantiate_study(&wf, &evals);
+        let g = CompactGraph::build(&insts, true);
+        let plan = plan_study(&g, &insts, FineAlgorithm::Rtma(4));
+        plan.assert_valid(&g);
+        for u in &plan.units {
+            let sig = insts[g.nodes[u.nodes[0]].rep].input_sig;
+            for &n in &u.nodes {
+                assert_eq!(insts[g.nodes[n].rep].input_sig, sig);
+            }
+        }
+    }
+
+    #[test]
+    fn trtma_respects_bucket_target() {
+        let (g, insts) = study(12, |id, p| {
+            p[5] = 5.0 * (id % 3 + 1) as f64;
+            p[9] = 5.0 * (id + 1) as f64;
+        });
+        let plan = plan_study(&g, &insts, FineAlgorithm::Trtma(TrtmaOptions::new(4)));
+        plan.assert_valid(&g);
+        let seg_units = plan.units_of_stage(1);
+        assert!(seg_units.len() <= 4, "seg units: {}", seg_units.len());
+    }
+
+    #[test]
+    fn all_algorithms_agree_on_task_totals_invariant() {
+        let (g, insts) = study(10, |id, p| {
+            p[5] = 5.0 * (id % 5 + 1) as f64;
+        });
+        let replica: usize = g.nodes.iter().map(|n| insts[n.rep].tasks.len()).sum();
+        for algo in [
+            FineAlgorithm::None,
+            FineAlgorithm::Naive(4),
+            FineAlgorithm::Sca(4),
+            FineAlgorithm::Rtma(4),
+            FineAlgorithm::Trtma(TrtmaOptions::new(4)),
+        ] {
+            let plan = plan_study(&g, &insts, algo);
+            plan.assert_valid(&g);
+            assert_eq!(plan.fine.tasks_replica, replica, "{}", algo.name());
+            assert!(plan.fine.tasks_merged <= replica, "{}", algo.name());
+            assert_eq!(plan.tasks_to_execute(), plan.fine.tasks_merged);
+        }
+    }
+
+    #[test]
+    fn merge_time_is_recorded_for_fine_algorithms() {
+        let (g, insts) = study(30, |id, p| p[9] = 5.0 * (id % 16 + 1) as f64);
+        let plan = plan_study(&g, &insts, FineAlgorithm::Sca(5));
+        assert!(plan.merge_time > Duration::ZERO);
+    }
+}

@@ -1,0 +1,238 @@
+//! The PJRT engine: compile once, execute many.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::data::Plane;
+use crate::{Error, Result};
+
+use super::manifest::ArtifactManifest;
+
+/// Per-task wall-clock accounting (feeds the Table-6 cost model).
+#[derive(Clone, Debug, Default)]
+pub struct TaskTimer {
+    totals: HashMap<String, (Duration, u64)>,
+}
+
+impl TaskTimer {
+    pub fn record(&mut self, task: &str, elapsed: Duration) {
+        let e = self.totals.entry(task.to_string()).or_default();
+        e.0 += elapsed;
+        e.1 += 1;
+    }
+
+    /// Mean seconds per execution for `task`, if any were recorded.
+    pub fn mean_secs(&self, task: &str) -> Option<f64> {
+        self.totals.get(task).map(|(d, n)| d.as_secs_f64() / (*n as f64).max(1.0))
+    }
+
+    /// Merge another timer's rows into this one (the coordinator folds
+    /// every worker engine's timer into a study-wide one).
+    pub fn absorb(&mut self, rows: &[(String, f64, u64)]) {
+        for (name, mean, n) in rows {
+            let e = self.totals.entry(name.clone()).or_default();
+            e.0 += Duration::from_secs_f64(mean * *n as f64);
+            e.1 += n;
+        }
+    }
+
+    /// (task, mean seconds, count) for all tasks, sorted by task name.
+    pub fn summary(&self) -> Vec<(String, f64, u64)> {
+        let mut rows: Vec<_> = self
+            .totals
+            .iter()
+            .map(|(k, (d, n))| (k.clone(), d.as_secs_f64() / (*n as f64).max(1.0), *n))
+            .collect();
+        rows.sort_by(|a, b| a.0.cmp(&b.0));
+        rows
+    }
+}
+
+/// Loads every artifact, compiles it once on a PJRT CPU client, and
+/// executes tasks with concrete planes. One engine per worker thread
+/// (PJRT handles are not `Send`).
+pub struct PjrtEngine {
+    manifest: ArtifactManifest,
+    /// Owns the PJRT CPU client; never read directly but must outlive
+    /// the loaded executables.
+    _client: xla::PjRtClient,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    timer: TaskTimer,
+}
+
+impl PjrtEngine {
+    /// Load + compile all artifacts in `dir`.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = ArtifactManifest::load(dir)?;
+        Self::from_manifest(manifest)
+    }
+
+    /// Load + compile from an already-parsed manifest.
+    pub fn from_manifest(manifest: ArtifactManifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        let mut execs = HashMap::new();
+        for t in &manifest.tasks {
+            let path = manifest.dir.join(&t.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            execs.insert(t.name.clone(), exe);
+        }
+        Ok(Self { manifest, _client: client, execs, timer: TaskTimer::default() })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Tile height/width the artifacts were compiled for.
+    pub fn tile_shape(&self) -> (usize, usize) {
+        (self.manifest.height, self.manifest.width)
+    }
+
+    pub fn timer(&self) -> &TaskTimer {
+        &self.timer
+    }
+
+    fn plane_literal(&self, p: &Plane) -> Result<xla::Literal> {
+        if (p.height(), p.width()) != self.tile_shape() {
+            return Err(Error::Xla(format!(
+                "plane {}x{} does not match artifact tile {}x{}",
+                p.height(),
+                p.width(),
+                self.manifest.height,
+                self.manifest.width
+            )));
+        }
+        Ok(xla::Literal::vec1(p.data()).reshape(&[p.height() as i64, p.width() as i64])?)
+    }
+
+    fn literal_plane(&self, lit: &xla::Literal) -> Result<Plane> {
+        let (h, w) = self.tile_shape();
+        let data = lit.to_vec::<f32>()?;
+        Plane::new(data, h, w)
+    }
+
+    /// Convert a 3-plane state to literals (unit-boundary transfer).
+    pub fn lit_state(&self, state: &[Plane; 3]) -> Result<[xla::Literal; 3]> {
+        Ok([
+            self.plane_literal(&state[0])?,
+            self.plane_literal(&state[1])?,
+            self.plane_literal(&state[2])?,
+        ])
+    }
+
+    /// Convert a 3-literal state back to planes.
+    pub fn plane_state(&self, lits: &[xla::Literal; 3]) -> Result<[Plane; 3]> {
+        Ok([
+            self.literal_plane(&lits[0])?,
+            self.literal_plane(&lits[1])?,
+            self.literal_plane(&lits[2])?,
+        ])
+    }
+
+    /// Execute a chain task with literal-resident state — the hot path:
+    /// chained tasks feed each other's output literals directly, so the
+    /// host round-trip (literal → Plane → literal, ~23% of per-task
+    /// wall time at 128×128; EXPERIMENTS.md §Perf change 3) happens only
+    /// at unit boundaries.
+    pub fn execute_task_lit(
+        &mut self,
+        name: &str,
+        state: &[xla::Literal; 3],
+        params: &[f32],
+    ) -> Result<[xla::Literal; 3]> {
+        let t = self
+            .manifest
+            .task(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown task `{name}`")))?;
+        if t.image_inputs != 3 || t.outputs != 3 {
+            return Err(Error::Artifact(format!(
+                "task `{name}` is not a 3-plane chain task (use execute_compare)"
+            )));
+        }
+        let start = Instant::now();
+        let pl = self.param_literal(params)?;
+        let inputs: [&xla::Literal; 4] = [&state[0], &state[1], &state[2], &pl];
+        let exe = &self.execs[name];
+        let result = exe.execute(&inputs)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let out: [xla::Literal; 3] = parts
+            .try_into()
+            .map_err(|_| Error::Xla(format!("task `{name}` did not return 3 outputs")))?;
+        self.timer.record(name, start.elapsed());
+        Ok(out)
+    }
+
+    /// Execute a chain task (`norm`, `t1`..`t7`): 3 planes + padded param
+    /// vector in, 3 planes out. Convenience wrapper over
+    /// [`PjrtEngine::execute_task_lit`].
+    pub fn execute_task(
+        &mut self,
+        name: &str,
+        state: &[Plane; 3],
+        params: &[f32],
+    ) -> Result<[Plane; 3]> {
+        let lits = self.lit_state(state)?;
+        let out = self.execute_task_lit(name, &lits, params)?;
+        self.plane_state(&out)
+    }
+
+    /// Execute the comparison task: final state + reference mask in,
+    /// `(dice, jaccard, mean |diff|)` out.
+    pub fn execute_compare(
+        &mut self,
+        state: &[Plane; 3],
+        reference: &Plane,
+    ) -> Result<[f32; 3]> {
+        let name = self.manifest.compare_task.clone();
+        let start = Instant::now();
+        let inputs = vec![
+            self.plane_literal(&state[0])?,
+            self.plane_literal(&state[1])?,
+            self.plane_literal(&state[2])?,
+            self.plane_literal(reference)?,
+            self.param_literal(&[])?,
+        ];
+        let exe = &self.execs[&name];
+        let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let metrics = result.to_tuple1()?;
+        let v = metrics.to_vec::<f32>()?;
+        if v.len() != 3 {
+            return Err(Error::Xla(format!("compare returned {} metrics", v.len())));
+        }
+        self.timer.record(&name, start.elapsed());
+        Ok([v[0], v[1], v[2]])
+    }
+
+    fn param_literal(&self, params: &[f32]) -> Result<xla::Literal> {
+        let mut padded = vec![0.0f32; self.manifest.n_params];
+        if params.len() > self.manifest.n_params {
+            return Err(Error::Config(format!(
+                "{} params exceed artifact capacity {}",
+                params.len(),
+                self.manifest.n_params
+            )));
+        }
+        padded[..params.len()].copy_from_slice(params);
+        Ok(xla::Literal::vec1(&padded))
+    }
+
+    /// Run the full chain (norm → t7) on one tile with per-task params,
+    /// returning the final 3-plane state.
+    pub fn run_chain(
+        &mut self,
+        tile: &crate::data::TileSet,
+        task_params: &HashMap<String, Vec<f32>>,
+    ) -> Result<[Plane; 3]> {
+        let planes = [tile.r.clone(), tile.g.clone(), tile.b.clone()];
+        let mut state = self.lit_state(&planes)?;
+        let order = self.manifest.task_order.clone();
+        for name in &order {
+            let empty = Vec::new();
+            let p = task_params.get(name).unwrap_or(&empty);
+            state = self.execute_task_lit(name, &state, p)?;
+        }
+        self.plane_state(&state)
+    }
+}

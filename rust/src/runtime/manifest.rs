@@ -1,0 +1,149 @@
+//! `artifacts/manifest.json` — the contract between `compile/aot.py`
+//! and the Rust loader.
+
+use std::path::{Path, PathBuf};
+
+use crate::jsonx::Json;
+use crate::{Error, Result};
+
+/// One task artifact entry.
+#[derive(Clone, Debug)]
+pub struct TaskArtifact {
+    pub name: String,
+    pub file: String,
+    pub image_inputs: usize,
+    pub param_inputs: usize,
+    pub outputs: usize,
+    pub output_kind: String,
+    pub sha256_16: String,
+}
+
+/// Parsed manifest plus its directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub height: usize,
+    pub width: usize,
+    pub n_params: usize,
+    pub depth_levels: usize,
+    pub task_order: Vec<String>,
+    pub compare_task: String,
+    pub tasks: Vec<TaskArtifact>,
+    pub dir: PathBuf,
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| Error::Artifact(format!("manifest: missing/invalid `{key}`")))
+}
+
+fn req_str(v: &Json, key: &str) -> Result<String> {
+    Ok(v.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Artifact(format!("manifest: missing/invalid `{key}`")))?
+        .to_string())
+}
+
+impl ArtifactManifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let v = Json::parse(&text)?;
+        let task_order = v
+            .get("task_order")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Artifact("manifest: missing `task_order`".into()))?
+            .iter()
+            .map(|j| j.as_str().unwrap_or_default().to_string())
+            .collect();
+        let mut tasks = Vec::new();
+        for tj in v
+            .get("tasks")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Artifact("manifest: missing `tasks`".into()))?
+        {
+            tasks.push(TaskArtifact {
+                name: req_str(tj, "name")?,
+                file: req_str(tj, "file")?,
+                image_inputs: req_usize(tj, "image_inputs")?,
+                param_inputs: req_usize(tj, "param_inputs")?,
+                outputs: req_usize(tj, "outputs")?,
+                output_kind: req_str(tj, "output_kind")?,
+                sha256_16: req_str(tj, "sha256_16").unwrap_or_default(),
+            });
+        }
+        let m = ArtifactManifest {
+            height: req_usize(&v, "height")?,
+            width: req_usize(&v, "width")?,
+            n_params: req_usize(&v, "n_params")?,
+            depth_levels: req_usize(&v, "depth_levels")?,
+            task_order,
+            compare_task: req_str(&v, "compare_task")?,
+            tasks,
+            dir: dir.to_path_buf(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for name in self.task_order.iter().chain([&self.compare_task]) {
+            let t = self
+                .task(name)
+                .ok_or_else(|| Error::Artifact(format!("manifest missing task `{name}`")))?;
+            let p = self.dir.join(&t.file);
+            if !p.exists() {
+                return Err(Error::Artifact(format!("artifact file missing: {}", p.display())));
+            }
+        }
+        if self.n_params == 0 || self.height == 0 || self.width == 0 {
+            return Err(Error::Artifact("degenerate manifest dimensions".into()));
+        }
+        Ok(())
+    }
+
+    /// Find a task entry by name.
+    pub fn task(&self, name: &str) -> Option<&TaskArtifact> {
+        self.tasks.iter().find(|t| t.name == name)
+    }
+
+    /// Absolute path of a task's HLO file.
+    pub fn hlo_path(&self, name: &str) -> Option<PathBuf> {
+        self.task(name).map(|t| self.dir.join(&t.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn load_real_manifest() {
+        let m = ArtifactManifest::load(artifacts_dir()).expect("run `make artifacts` first");
+        assert_eq!(m.n_params, 5);
+        assert_eq!(m.task_order.len(), 8);
+        assert_eq!(m.task_order[0], "norm");
+        assert_eq!(m.compare_task, "cmp");
+        let cmp = m.task("cmp").unwrap();
+        assert_eq!(cmp.image_inputs, 4);
+        assert_eq!(cmp.output_kind, "metrics3");
+        assert!(m.hlo_path("t3").unwrap().exists());
+    }
+
+    #[test]
+    fn missing_dir_is_artifact_error() {
+        let err = ArtifactManifest::load("/nonexistent/path").unwrap_err();
+        assert!(matches!(err, Error::Artifact(_)));
+    }
+}

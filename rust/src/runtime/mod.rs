@@ -1,0 +1,19 @@
+//! PJRT execution of the AOT-compiled task artifacts.
+//!
+//! `make artifacts` lowers every workflow task (L2 JAX calling the L1
+//! Pallas kernels) to HLO *text* under `artifacts/`; this module loads
+//! them through `HloModuleProto::from_text_file`, compiles each once per
+//! engine with the PJRT CPU client, and executes them from the L3 hot
+//! path. Text is the interchange format because jax ≥ 0.5 emits protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects.
+//!
+//! PJRT handles are not `Send`; the coordinator therefore gives each
+//! worker node its own [`PjrtEngine`] on a dedicated OS thread — which is
+//! also the faithful topology: every RTF worker node is its own process
+//! with its own runtime.
+
+mod engine;
+mod manifest;
+
+pub use engine::{PjrtEngine, TaskTimer};
+pub use manifest::{ArtifactManifest, TaskArtifact};

@@ -1,0 +1,52 @@
+//! Plain Monte-Carlo base sampler.
+
+use crate::data::synth::SplitMix64;
+
+use super::Sampler;
+
+/// Uniform pseudo-random sampler (SplitMix64, deterministic per seed).
+pub struct MonteCarlo {
+    rng: SplitMix64,
+}
+
+impl MonteCarlo {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed) }
+    }
+}
+
+impl Sampler for MonteCarlo {
+    fn draw(&mut self, n: usize, dim: usize) -> Vec<Vec<f64>> {
+        (0..n).map(|_| (0..dim).map(|_| self.rng.next_f64()).collect()).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "MC"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_range() {
+        let pts = MonteCarlo::new(1).draw(100, 15);
+        assert_eq!(pts.len(), 100);
+        assert!(pts.iter().all(|p| p.len() == 15));
+        assert!(pts.iter().flatten().all(|&v| (0.0..1.0).contains(&v)));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        assert_eq!(MonteCarlo::new(7).draw(5, 3), MonteCarlo::new(7).draw(5, 3));
+        assert_ne!(MonteCarlo::new(7).draw(5, 3), MonteCarlo::new(8).draw(5, 3));
+    }
+
+    #[test]
+    fn roughly_uniform_mean() {
+        let pts = MonteCarlo::new(3).draw(4000, 2);
+        let mean: f64 = pts.iter().map(|p| p[0]).sum::<f64>() / 4000.0;
+        assert!((mean - 0.5).abs() < 0.03, "mean {mean}");
+    }
+}

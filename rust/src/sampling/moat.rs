@@ -1,0 +1,197 @@
+//! MOAT — Morris One-At-a-Time screening design (paper §2.2).
+//!
+//! `r` trajectories of `k+1` points each: a random grid base point, then
+//! one elementary perturbation per parameter in random order. The jump is
+//! Δ = p/(2(p−1)) in normalized units (the paper's choice, [33]), i.e.
+//! ⌊p/2⌋ grid levels. Consecutive trajectory points differ in exactly one
+//! parameter — this is precisely the structure the reuse-tree merging
+//! exploits.
+
+use crate::data::SplitMix64;
+
+use super::{ParamSet, ParamSpace, Sampler};
+
+/// One elementary-effect step within a trajectory.
+#[derive(Clone, Debug)]
+pub struct MoatStep {
+    /// Which parameter was perturbed.
+    pub param: usize,
+    /// Signed normalized jump (Δ in units of the full parameter range).
+    pub delta_norm: f64,
+}
+
+/// One trajectory: `k+1` consecutive evaluation indices into the sample's
+/// `sets`, plus the step descriptors between them.
+#[derive(Clone, Debug)]
+pub struct Trajectory {
+    /// Index of the trajectory's first evaluation in `MoatSample::sets`.
+    pub first_eval: usize,
+    pub steps: Vec<MoatStep>,
+}
+
+/// A generated MOAT experiment.
+#[derive(Clone, Debug)]
+pub struct MoatSample {
+    pub sets: Vec<ParamSet>,
+    pub trajectories: Vec<Trajectory>,
+}
+
+impl MoatSample {
+    /// Total number of workflow evaluations (the paper's "sample size").
+    pub fn sample_size(&self) -> usize {
+        self.sets.len()
+    }
+}
+
+/// MOAT design parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct MoatDesign {
+    /// Number of trajectories (paper: 5–15 typical; sample = r(k+1)).
+    pub r: usize,
+}
+
+impl MoatDesign {
+    pub fn new(r: usize) -> Self {
+        Self { r }
+    }
+
+    /// The `r` needed for a requested sample size (rounded down, ≥ 1).
+    pub fn for_sample_size(sample: usize, k: usize) -> Self {
+        Self { r: (sample / (k + 1)).max(1) }
+    }
+
+    /// Generate the experiment. The base points come from `sampler`
+    /// (paper: Halton QMC "known to provide a good coverage"); step order
+    /// and directions come from a deterministic PRNG seeded by `seed`.
+    pub fn generate(&self, space: &ParamSpace, sampler: &mut dyn Sampler, seed: u64) -> MoatSample {
+        let k = space.dim();
+        let mut rng = SplitMix64::new(seed ^ 0x4d4f4154); // "MOAT"
+        let bases = sampler.draw(self.r, k);
+        let mut sets = Vec::with_capacity(self.r * (k + 1));
+        let mut trajectories = Vec::with_capacity(self.r);
+
+        for base_fracs in bases {
+            // base point as level indices
+            let mut levels: Vec<usize> = space
+                .params
+                .iter()
+                .zip(&base_fracs)
+                .map(|(p, &f)| p.level_of_fraction(f))
+                .collect();
+
+            // random parameter visit order (Fisher–Yates)
+            let mut order: Vec<usize> = (0..k).collect();
+            for i in (1..k).rev() {
+                let j = rng.uniform_usize(0, i + 1);
+                order.swap(i, j);
+            }
+
+            let first_eval = sets.len();
+            sets.push(levels_to_set(space, &levels));
+            let mut steps = Vec::with_capacity(k);
+            for &param in &order {
+                let p = &space.params[param];
+                let pl = p.levels();
+                let jump = (pl / 2).max(1);
+                // choose a feasible direction (prefer the random one)
+                let up = rng.next_f64() < 0.5;
+                let (new_level, dir) = if up && levels[param] + jump < pl {
+                    (levels[param] + jump, 1.0)
+                } else if levels[param] >= jump {
+                    (levels[param] - jump, -1.0)
+                } else {
+                    (levels[param] + jump.min(pl - 1 - levels[param]), 1.0)
+                };
+                let delta_levels = (new_level as f64 - levels[param] as f64).abs() * dir;
+                levels[param] = new_level;
+                sets.push(levels_to_set(space, &levels));
+                // normalized Δ: fraction of the parameter's level range
+                let delta_norm = delta_levels / (pl.saturating_sub(1).max(1) as f64);
+                steps.push(MoatStep { param, delta_norm });
+            }
+            trajectories.push(Trajectory { first_eval, steps });
+        }
+        MoatSample { sets, trajectories }
+    }
+}
+
+fn levels_to_set(space: &ParamSpace, levels: &[usize]) -> ParamSet {
+    space.params.iter().zip(levels).map(|(p, &l)| p.value_at(l)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::{default_space, HaltonSampler};
+
+    fn sample(r: usize) -> (MoatSample, ParamSpace) {
+        let space = default_space();
+        let mut sampler = HaltonSampler::new(0);
+        (MoatDesign::new(r).generate(&space, &mut sampler, 42), space)
+    }
+
+    #[test]
+    fn sample_size_is_r_times_k_plus_1() {
+        let (s, space) = sample(10);
+        assert_eq!(s.sample_size(), 10 * (space.dim() + 1));
+        assert_eq!(s.trajectories.len(), 10);
+    }
+
+    #[test]
+    fn consecutive_points_differ_in_exactly_one_param() {
+        let (s, space) = sample(8);
+        for t in &s.trajectories {
+            for (i, step) in t.steps.iter().enumerate() {
+                let a = &s.sets[t.first_eval + i];
+                let b = &s.sets[t.first_eval + i + 1];
+                let diffs: Vec<usize> =
+                    (0..space.dim()).filter(|&d| (a[d] - b[d]).abs() > 1e-12).collect();
+                assert_eq!(diffs, vec![step.param], "trajectory step {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn each_param_perturbed_once_per_trajectory() {
+        let (s, space) = sample(5);
+        for t in &s.trajectories {
+            let mut seen: Vec<usize> = t.steps.iter().map(|st| st.param).collect();
+            seen.sort();
+            assert_eq!(seen, (0..space.dim()).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn all_points_on_grid() {
+        let (s, space) = sample(6);
+        for set in &s.sets {
+            space.validate(set).unwrap();
+        }
+    }
+
+    #[test]
+    fn deltas_are_nonzero_and_sane() {
+        let (s, _) = sample(6);
+        for t in &s.trajectories {
+            for st in &t.steps {
+                assert!(st.delta_norm.abs() > 1e-9);
+                assert!(st.delta_norm.abs() <= 1.0 + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn for_sample_size_rounds_down() {
+        assert_eq!(MoatDesign::for_sample_size(160, 15).r, 10);
+        assert_eq!(MoatDesign::for_sample_size(640, 15).r, 40);
+        assert_eq!(MoatDesign::for_sample_size(3, 15).r, 1);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let space = default_space();
+        let a = MoatDesign::new(3).generate(&space, &mut HaltonSampler::new(1), 9);
+        let b = MoatDesign::new(3).generate(&space, &mut HaltonSampler::new(1), 9);
+        assert_eq!(a.sets, b.sets);
+    }
+}

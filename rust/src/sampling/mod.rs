@@ -1,0 +1,34 @@
+//! Sensitivity-analysis experiment generation.
+//!
+//! The paper evaluates two SA methods — MOAT (Morris One-At-a-Time,
+//! screening) and VBD (variance-based decomposition, Saltelli design) —
+//! driven by three base samplers (Monte-Carlo, Latin-Hypercube,
+//! quasi-Monte-Carlo/Halton; Table 4 compares their reuse potential).
+//! This module generates the parameter-set lists ("experiments") that the
+//! merging algorithms compact and the coordinator executes.
+//!
+//! All sampling happens on the *discrete grids* of Table 1 — the paper's
+//! parameter space has about 21·10¹² points (asserted by a unit test).
+
+mod lhs;
+mod mc;
+mod moat;
+mod qmc;
+pub mod space;
+mod vbd;
+
+pub use lhs::LatinHypercube;
+pub use mc::MonteCarlo;
+pub use moat::{MoatDesign, MoatSample};
+pub use qmc::{halton, HaltonSampler};
+pub use space::{default_space, ParamDef, ParamSpace, ParamSet};
+pub use vbd::{VbdDesign, VbdSample};
+
+/// A base sampler draws points (as per-parameter *level fractions* in
+/// [0,1)) that the designs then snap onto the discrete grids.
+pub trait Sampler {
+    /// Draw `n` points of dimension `dim`; element (i, j) in [0, 1).
+    fn draw(&mut self, n: usize, dim: usize) -> Vec<Vec<f64>>;
+    /// Human-readable name (used in Table 4 reports).
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,98 @@
+//! Quasi-Monte-Carlo base sampler (Halton sequence — the paper generated
+//! its MOAT experiments "with a quasi-Monte Carlo sampling using a Halton
+//! sequence").
+
+use super::Sampler;
+
+const PRIMES: [u64; 24] = [
+    2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59, 61, 67, 71, 73, 79, 83, 89,
+];
+
+/// The `i`-th element (1-based internally) of the van-der-Corput sequence
+/// in the given base.
+pub fn halton(index: u64, base: u64) -> f64 {
+    let mut f = 1.0;
+    let mut r = 0.0;
+    let mut i = index;
+    while i > 0 {
+        f /= base as f64;
+        r += f * (i % base) as f64;
+        i /= base;
+    }
+    r
+}
+
+/// Multi-dimensional Halton sampler with a leap-free, offset start (skip
+/// the first points to avoid the degenerate origin cluster).
+pub struct HaltonSampler {
+    next_index: u64,
+}
+
+impl HaltonSampler {
+    pub fn new(seed: u64) -> Self {
+        // seed offsets the stream so different studies decorrelate
+        Self { next_index: 20 + (seed % 1000) }
+    }
+}
+
+impl Sampler for HaltonSampler {
+    fn draw(&mut self, n: usize, dim: usize) -> Vec<Vec<f64>> {
+        assert!(dim <= PRIMES.len(), "Halton supports up to {} dims", PRIMES.len());
+        let mut pts = Vec::with_capacity(n);
+        for _ in 0..n {
+            let i = self.next_index;
+            self.next_index += 1;
+            pts.push((0..dim).map(|d| halton(i, PRIMES[d])).collect());
+        }
+        pts
+    }
+
+    fn name(&self) -> &'static str {
+        "QMC"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn van_der_corput_base2_prefix() {
+        let want = [0.5, 0.25, 0.75, 0.125, 0.625, 0.375, 0.875];
+        for (i, w) in want.iter().enumerate() {
+            assert!((halton(i as u64 + 1, 2) - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn low_discrepancy_coverage() {
+        // Halton fills the unit interval evenly: each of 10 bins gets
+        // close to n/10 of the first n points.
+        let mut s = HaltonSampler::new(0);
+        let pts = s.draw(1000, 1);
+        let mut bins = [0usize; 10];
+        for p in &pts {
+            bins[(p[0] * 10.0) as usize] += 1;
+        }
+        for b in bins {
+            assert!((90..=110).contains(&b), "bin count {b}");
+        }
+    }
+
+    #[test]
+    fn sequential_draws_continue_sequence() {
+        let mut a = HaltonSampler::new(3);
+        let first = a.draw(5, 2);
+        let second = a.draw(5, 2);
+        let mut b = HaltonSampler::new(3);
+        let all = b.draw(10, 2);
+        assert_eq!(first[..], all[..5]);
+        assert_eq!(second[..], all[5..]);
+    }
+
+    #[test]
+    fn values_in_unit_interval() {
+        let pts = HaltonSampler::new(1).draw(200, 15);
+        assert!(pts.iter().flatten().all(|&v| (0.0..1.0).contains(&v)));
+    }
+}

@@ -1,0 +1,217 @@
+//! The 15-parameter space of the segmentation workflow (paper Table 1).
+
+use crate::{Error, Result};
+
+/// A parameter set: one concrete value per parameter, in canonical order.
+pub type ParamSet = Vec<f64>;
+
+/// One workflow parameter with its discrete value grid.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamDef {
+    pub name: String,
+    /// The discrete levels the SA methods sample from (ascending).
+    pub grid: Vec<f64>,
+}
+
+impl ParamDef {
+    pub fn new(name: &str, grid: Vec<f64>) -> Self {
+        Self { name: name.into(), grid }
+    }
+
+    /// Evenly spaced grid `lo, lo+step, ..., hi`.
+    pub fn range(name: &str, lo: f64, hi: f64, step: f64) -> Self {
+        let mut grid = Vec::new();
+        let mut v = lo;
+        while v <= hi + 1e-9 {
+            grid.push((v * 1e6).round() / 1e6);
+            v += step;
+        }
+        Self::new(name, grid)
+    }
+
+    pub fn levels(&self) -> usize {
+        self.grid.len()
+    }
+
+    /// Snap a fraction in [0,1) to a grid level index.
+    pub fn level_of_fraction(&self, f: f64) -> usize {
+        ((f.clamp(0.0, 1.0 - 1e-12)) * self.levels() as f64) as usize
+    }
+
+    /// Value at a level index (clamped).
+    pub fn value_at(&self, level: usize) -> f64 {
+        self.grid[level.min(self.levels() - 1)]
+    }
+}
+
+/// The full parameter space.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpace {
+    pub params: Vec<ParamDef>,
+}
+
+impl ParamSpace {
+    pub fn new(params: Vec<ParamDef>) -> Self {
+        Self { params }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Number of points in the discrete space (paper: ~21 trillion).
+    pub fn cardinality(&self) -> f64 {
+        self.params.iter().map(|p| p.levels() as f64).product()
+    }
+
+    /// Index of a parameter by name.
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.params
+            .iter()
+            .position(|p| p.name == name)
+            .ok_or_else(|| Error::Config(format!("unknown parameter `{name}`")))
+    }
+
+    /// Map per-parameter fractions to grid values.
+    pub fn snap(&self, fractions: &[f64]) -> ParamSet {
+        self.params
+            .iter()
+            .zip(fractions)
+            .map(|(p, &f)| p.value_at(p.level_of_fraction(f)))
+            .collect()
+    }
+
+    /// The paper's default parameter values (application defaults used to
+    /// build the reference mask).
+    pub fn defaults(&self) -> ParamSet {
+        self.params
+            .iter()
+            .map(|p| p.grid[p.levels() / 2]) // mid-grid
+            .collect()
+    }
+
+    /// Validate that a parameter set lies on the grids.
+    pub fn validate(&self, set: &ParamSet) -> Result<()> {
+        if set.len() != self.dim() {
+            return Err(Error::Config(format!(
+                "param set has {} values, space has {}",
+                set.len(),
+                self.dim()
+            )));
+        }
+        for (p, v) in self.params.iter().zip(set) {
+            if !p.grid.iter().any(|g| (g - v).abs() < 1e-9) {
+                return Err(Error::Config(format!("value {v} not on grid of `{}`", p.name)));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Canonical parameter order used across the crate: indices into every
+/// [`ParamSet`].
+pub mod idx {
+    pub const B: usize = 0;
+    pub const G: usize = 1;
+    pub const R: usize = 2;
+    pub const T1: usize = 3;
+    pub const T2: usize = 4;
+    pub const G1: usize = 5;
+    pub const G2: usize = 6;
+    pub const MIN_SIZE: usize = 7;
+    pub const MAX_SIZE: usize = 8;
+    pub const MIN_SIZE_PL: usize = 9;
+    pub const MIN_SIZE_SEG: usize = 10;
+    pub const MAX_SIZE_SEG: usize = 11;
+    pub const FILL_HOLES: usize = 12;
+    pub const RECON: usize = 13;
+    pub const WATERSHED: usize = 14;
+}
+
+/// Build the Table-1 space: B/G/R ∈ {210..240 step 10}, T1/T2 ∈
+/// {2.5..7.5 step 0.5}, G1/minSPL ∈ {5..80 step 5}, G2/minS/minSS ∈
+/// {2..40 step 2}, maxS/maxSS ∈ {900..1500 step 50}, and the three
+/// 4-/8-connectivity switches — ≈ 2.1·10¹³ combinations.
+pub fn default_space() -> ParamSpace {
+    ParamSpace::new(vec![
+        ParamDef::range("B", 210.0, 240.0, 10.0),
+        ParamDef::range("G", 210.0, 240.0, 10.0),
+        ParamDef::range("R", 210.0, 240.0, 10.0),
+        ParamDef::range("T1", 2.5, 7.5, 0.5),
+        ParamDef::range("T2", 2.5, 7.5, 0.5),
+        ParamDef::range("G1", 5.0, 80.0, 5.0),
+        ParamDef::range("G2", 2.0, 40.0, 2.0),
+        ParamDef::range("minSize", 2.0, 40.0, 2.0),
+        ParamDef::range("maxSize", 900.0, 1500.0, 50.0),
+        ParamDef::range("minSizePl", 5.0, 80.0, 5.0),
+        ParamDef::range("minSizeSeg", 2.0, 40.0, 2.0),
+        ParamDef::range("maxSizeSeg", 900.0, 1500.0, 50.0),
+        ParamDef::new("fillHolesConn", vec![4.0, 8.0]),
+        ParamDef::new("reconConn", vec![4.0, 8.0]),
+        ParamDef::new("watershedConn", vec![4.0, 8.0]),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_cardinality_is_about_21_trillion() {
+        let s = default_space();
+        assert_eq!(s.dim(), 15);
+        let c = s.cardinality();
+        assert!(
+            (2.0e13..2.5e13).contains(&c),
+            "paper says ~21 trillion, got {c:.3e}"
+        );
+    }
+
+    #[test]
+    fn grids_match_table1() {
+        let s = default_space();
+        assert_eq!(s.params[idx::B].grid, vec![210.0, 220.0, 230.0, 240.0]);
+        assert_eq!(s.params[idx::T1].levels(), 11);
+        assert_eq!(s.params[idx::G1].levels(), 16);
+        assert_eq!(s.params[idx::G2].levels(), 20);
+        assert_eq!(s.params[idx::MAX_SIZE].levels(), 13);
+        assert_eq!(s.params[idx::FILL_HOLES].grid, vec![4.0, 8.0]);
+    }
+
+    #[test]
+    fn snap_hits_grid() {
+        let s = default_space();
+        let set = s.snap(&vec![0.999; 15]);
+        s.validate(&set).unwrap();
+        assert_eq!(set[idx::B], 240.0);
+        assert_eq!(set[idx::WATERSHED], 8.0);
+        let set0 = s.snap(&vec![0.0; 15]);
+        assert_eq!(set0[idx::B], 210.0);
+        assert_eq!(set0[idx::G2], 2.0);
+    }
+
+    #[test]
+    fn defaults_validate() {
+        let s = default_space();
+        s.validate(&s.defaults()).unwrap();
+    }
+
+    #[test]
+    fn level_of_fraction_uniform() {
+        let p = ParamDef::new("x", vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(p.level_of_fraction(0.0), 0);
+        assert_eq!(p.level_of_fraction(0.24), 0);
+        assert_eq!(p.level_of_fraction(0.25), 1);
+        assert_eq!(p.level_of_fraction(0.99), 3);
+        assert_eq!(p.level_of_fraction(1.0), 3); // clamped
+    }
+
+    #[test]
+    fn validate_rejects_off_grid() {
+        let s = default_space();
+        let mut set = s.defaults();
+        set[idx::B] = 215.0;
+        assert!(s.validate(&set).is_err());
+        assert!(s.validate(&set[..3].to_vec()).is_err());
+    }
+}

@@ -1,0 +1,179 @@
+//! VBD — variance-based decomposition with the Saltelli design
+//! (paper §2.2: n(k+2) evaluations for k parameters and n samples,
+//! yielding first-order *and* total-order Sobol indices).
+
+use super::{ParamSet, ParamSpace, Sampler};
+
+/// A generated VBD experiment: the A matrix, the B matrix, and the k
+/// "A-with-column-i-from-B" matrices, flattened into `sets`.
+#[derive(Clone, Debug)]
+pub struct VbdSample {
+    pub sets: Vec<ParamSet>,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl VbdSample {
+    /// Evaluation index of A-matrix row `j`.
+    pub fn idx_a(&self, j: usize) -> usize {
+        j
+    }
+
+    /// Evaluation index of B-matrix row `j`.
+    pub fn idx_b(&self, j: usize) -> usize {
+        self.n + j
+    }
+
+    /// Evaluation index of row `j` of A with column `i` replaced from B.
+    pub fn idx_ab(&self, i: usize, j: usize) -> usize {
+        2 * self.n + i * self.n + j
+    }
+
+    /// Total evaluations = n(k+2).
+    pub fn sample_size(&self) -> usize {
+        self.sets.len()
+    }
+}
+
+/// VBD design parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct VbdDesign {
+    /// Base sample count n (paper: order of thousands).
+    pub n: usize,
+}
+
+impl VbdDesign {
+    pub fn new(n: usize) -> Self {
+        Self { n }
+    }
+
+    /// The n needed for a requested total sample size.
+    pub fn for_sample_size(sample: usize, k: usize) -> Self {
+        Self { n: (sample / (k + 2)).max(1) }
+    }
+
+    /// Generate the Saltelli design on `space`, optionally restricted to
+    /// `active` parameter indices (the paper screens down to the 8 most
+    /// influential parameters with MOAT first; inactive parameters stay
+    /// at their defaults).
+    pub fn generate(
+        &self,
+        space: &ParamSpace,
+        active: &[usize],
+        sampler: &mut dyn Sampler,
+    ) -> VbdSample {
+        let k = active.len();
+        let defaults = space.defaults();
+        // draw A and B as one 2k-dimensional sample (standard Saltelli)
+        let pts = sampler.draw(self.n, 2 * k);
+        let row = |fracs: &[f64]| -> ParamSet {
+            let mut set = defaults.clone();
+            for (ai, &p) in active.iter().enumerate() {
+                let pd = &space.params[p];
+                set[p] = pd.value_at(pd.level_of_fraction(fracs[ai]));
+            }
+            set
+        };
+        let a_rows: Vec<ParamSet> = pts.iter().map(|p| row(&p[..k])).collect();
+        let b_rows: Vec<ParamSet> = pts.iter().map(|p| row(&p[k..])).collect();
+
+        let mut sets = Vec::with_capacity(self.n * (k + 2));
+        sets.extend(a_rows.iter().cloned());
+        sets.extend(b_rows.iter().cloned());
+        for (ai, &p) in active.iter().enumerate() {
+            let _ = ai;
+            for j in 0..self.n {
+                let mut s = a_rows[j].clone();
+                s[p] = b_rows[j][p];
+                sets.push(s);
+            }
+        }
+        VbdSample { sets, n: self.n, k }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::{default_space, LatinHypercube};
+
+    fn sample(n: usize, k: usize) -> (VbdSample, Vec<usize>) {
+        let space = default_space();
+        let active: Vec<usize> = (0..k).collect();
+        let mut s = LatinHypercube::new(11);
+        (VbdDesign::new(n).generate(&space, &active, &mut s), active)
+    }
+
+    #[test]
+    fn size_is_n_times_k_plus_2() {
+        let (s, _) = sample(50, 8);
+        assert_eq!(s.sample_size(), 50 * 10);
+        assert_eq!(s.n, 50);
+        assert_eq!(s.k, 8);
+    }
+
+    #[test]
+    fn layout_indices_partition_the_sets() {
+        let (s, _) = sample(10, 4);
+        let mut seen = vec![false; s.sample_size()];
+        for j in 0..s.n {
+            seen[s.idx_a(j)] = true;
+            seen[s.idx_b(j)] = true;
+            for i in 0..s.k {
+                seen[s.idx_ab(i, j)] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn ab_rows_differ_from_a_only_in_param_i() {
+        let (s, active) = sample(12, 5);
+        for i in 0..s.k {
+            for j in 0..s.n {
+                let a = &s.sets[s.idx_a(j)];
+                let ab = &s.sets[s.idx_ab(i, j)];
+                for (d, (x, y)) in a.iter().zip(ab).enumerate() {
+                    if d == active[i] {
+                        // comes from B: usually differs (grids can collide)
+                        let b = &s.sets[s.idx_b(j)];
+                        assert_eq!(*y, b[d]);
+                    } else {
+                        assert_eq!(x, y, "param {d} must match A");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inactive_params_stay_default() {
+        let space = default_space();
+        let active = vec![5usize, 6]; // G1, G2
+        let mut smp = LatinHypercube::new(3);
+        let s = VbdDesign::new(20).generate(&space, &active, &mut smp);
+        let defaults = space.defaults();
+        for set in &s.sets {
+            for d in 0..space.dim() {
+                if !active.contains(&d) {
+                    assert_eq!(set[d], defaults[d]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_points_on_grid() {
+        let (s, _) = sample(15, 8);
+        let space = default_space();
+        for set in &s.sets {
+            space.validate(set).unwrap();
+        }
+    }
+
+    #[test]
+    fn for_sample_size() {
+        assert_eq!(VbdDesign::for_sample_size(2000, 8).n, 200);
+        assert_eq!(VbdDesign::for_sample_size(10000, 8).n, 1000);
+    }
+}

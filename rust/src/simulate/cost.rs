@@ -1,0 +1,162 @@
+//! Per-task cost model (paper Table 6).
+
+use std::collections::HashMap;
+
+use crate::jsonx::{obj, Json};
+use crate::runtime::TaskTimer;
+use crate::{Error, Result};
+
+/// Mean execution cost (seconds) per fine-grain task name, with an
+/// optional multiplicative variance for imbalance source (iii) of
+/// paper §4.5.1 (same task, different input → different cost).
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    costs: HashMap<String, f64>,
+    /// Fallback for task names without a measurement.
+    pub default_cost: f64,
+}
+
+impl CostModel {
+    pub fn new(costs: HashMap<String, f64>, default_cost: f64) -> Self {
+        Self { costs, default_cost }
+    }
+
+    /// Mean cost of one execution of `task`.
+    pub fn cost_of(&self, task: &str) -> f64 {
+        self.costs.get(task).copied().unwrap_or(self.default_cost)
+    }
+
+    /// Build from real measurements (`rtf-reuse profile-tasks`).
+    pub fn from_timer(timer: &TaskTimer) -> Self {
+        let mut costs = HashMap::new();
+        for (name, mean, _) in timer.summary() {
+            costs.insert(name, mean);
+        }
+        let default_cost = if costs.is_empty() {
+            1.0
+        } else {
+            costs.values().sum::<f64>() / costs.len() as f64
+        };
+        Self { costs, default_cost }
+    }
+
+    /// All (task, cost) rows sorted by task name (Table-6 report).
+    pub fn rows(&self) -> Vec<(String, f64)> {
+        let mut rows: Vec<(String, f64)> =
+            self.costs.iter().map(|(k, v)| (k.clone(), *v)).collect();
+        rows.sort_by(|a, b| a.0.cmp(&b.0));
+        rows
+    }
+
+    /// Total cost of one full stage execution (sum over tasks).
+    pub fn total(&self) -> f64 {
+        self.costs.values().sum()
+    }
+
+    /// Serialize as JSON (persisted in `assets/task_costs.json`).
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows()
+            .into_iter()
+            .map(|(name, cost)| {
+                obj(vec![("task", Json::Str(name)), ("mean_secs", Json::Num(cost))])
+            })
+            .collect();
+        obj(vec![
+            ("default_secs", Json::Num(self.default_cost)),
+            ("tasks", Json::Arr(rows)),
+        ])
+    }
+
+    /// Parse the JSON produced by [`CostModel::to_json`].
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let default_cost = v
+            .get("default_secs")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| Error::Json("cost model: missing `default_secs`".into()))?;
+        let mut costs = HashMap::new();
+        for row in v
+            .get("tasks")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Json("cost model: missing `tasks`".into()))?
+        {
+            let name = row
+                .get("task")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Json("cost row: missing `task`".into()))?;
+            let cost = row
+                .get("mean_secs")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::Json("cost row: missing `mean_secs`".into()))?;
+            costs.insert(name.to_string(), cost);
+        }
+        Ok(Self { costs, default_cost })
+    }
+}
+
+/// The paper's empirical task costs (Table 6: t1 1.14 s … t7 0.86 s,
+/// Σ = 9.51 s) plus modest normalization/comparison costs, used whenever
+/// no measured model is supplied.
+pub fn default_cost_model() -> CostModel {
+    let mut costs = HashMap::new();
+    for (name, cost) in [
+        ("norm", 0.48),
+        ("t1", 1.14),
+        ("t2", 1.99),
+        ("t3", 0.65),
+        ("t4", 0.33),
+        ("t5", 0.76),
+        ("t6", 3.76),
+        ("t7", 0.86),
+        ("cmp", 0.21),
+    ] {
+        costs.insert(name.to_string(), cost);
+    }
+    CostModel::new(costs, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table6_costs() {
+        let m = default_cost_model();
+        assert_eq!(m.cost_of("t6"), 3.76);
+        assert_eq!(m.cost_of("t4"), 0.33);
+        // paper Table 6 prints a 9.51 s total, but its per-task values
+        // sum to 9.49 s — we use the per-task values as ground truth
+        let seg: f64 = (1..=7).map(|i| m.cost_of(&format!("t{i}"))).sum();
+        assert!((seg - 9.49).abs() < 1e-9, "{seg}");
+        // t6 is ~39.6% of a stage (paper: 39.59%)
+        assert!((m.cost_of("t6") / seg - 0.3959).abs() < 0.01);
+    }
+
+    #[test]
+    fn unknown_task_uses_default() {
+        let m = default_cost_model();
+        assert_eq!(m.cost_of("no-such-task"), 1.0);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let m = default_cost_model();
+        let j = m.to_json();
+        let text = j.to_string_pretty();
+        let back = CostModel::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.rows(), m.rows());
+        assert_eq!(back.default_cost, m.default_cost);
+    }
+
+    #[test]
+    fn from_timer_means() {
+        use std::time::Duration;
+        let mut t = TaskTimer::default();
+        t.record("t1", Duration::from_millis(100));
+        t.record("t1", Duration::from_millis(300));
+        t.record("t2", Duration::from_millis(50));
+        let m = CostModel::from_timer(&t);
+        assert!((m.cost_of("t1") - 0.2).abs() < 1e-9);
+        assert!((m.cost_of("t2") - 0.05).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,346 @@
+//! The discrete-event simulation of a study plan on a worker cluster.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::collections::VecDeque;
+
+use crate::data::SplitMix64;
+use crate::merging::{ScheduleUnit, StudyPlan};
+use crate::merging::reuse_tree::ReuseTree;
+use crate::merging::{CompactGraph, MergeStage};
+use crate::simulate::CostModel;
+use crate::workflow::StageInstance;
+
+/// Simulation knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SimOptions {
+    /// Worker-process count (the paper's WP).
+    pub workers: usize,
+    /// Cores per worker node: a unit's reuse-tree tasks are scheduled
+    /// across these, the RTF's fine-grain task scheduling (paper Fig. 4;
+    /// Stampede nodes expose 16 cores). 1 = serial stage execution.
+    pub cores: usize,
+    /// Coefficient of variation of per-task-execution cost, modelling
+    /// imbalance source (iii) of §4.5.1 (same task, variable cost over
+    /// different inputs). 0 = deterministic costs.
+    pub cost_cv: f64,
+    /// Seed for the cost jitter.
+    pub seed: u64,
+}
+
+impl SimOptions {
+    pub fn new(workers: usize) -> Self {
+        Self { workers, cores: 1, cost_cv: 0.0, seed: 0 }
+    }
+
+    pub fn with_cores(mut self, cores: usize) -> Self {
+        self.cores = cores.max(1);
+        self
+    }
+
+    pub fn with_cv(mut self, cv: f64, seed: u64) -> Self {
+        self.cost_cv = cv;
+        self.seed = seed;
+        self
+    }
+}
+
+/// Outcome of one simulated study execution.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    /// Simulated wall time to drain the plan (seconds).
+    pub makespan: f64,
+    /// Busy seconds per worker.
+    pub worker_busy: Vec<f64>,
+    /// Units executed.
+    pub units: usize,
+    /// Fine-grain task executions performed.
+    pub tasks: usize,
+    /// Σ of all unit durations (serial work).
+    pub total_work: f64,
+}
+
+impl SimReport {
+    /// Mean worker utilization in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        if self.makespan <= 0.0 || self.worker_busy.is_empty() {
+            return 0.0;
+        }
+        self.worker_busy.iter().sum::<f64>()
+            / (self.makespan * self.worker_busy.len() as f64)
+    }
+
+    /// Speedup of this report over `base` (same plan semantics assumed).
+    pub fn speedup_over(&self, base: &SimReport) -> f64 {
+        base.makespan / self.makespan
+    }
+
+    /// Parallel efficiency of this run vs. a run on `other` with
+    /// `factor`× fewer workers (paper Fig. 23: consecutive WP doublings
+    /// ⇒ factor 2).
+    pub fn parallel_efficiency(&self, prev: &SimReport, factor: f64) -> f64 {
+        prev.makespan / (self.makespan * factor)
+    }
+}
+
+/// Duration of one schedule unit: the bucket's reuse tree is scheduled
+/// over the worker's cores (task nodes depend on their tree parent —
+/// the RTF's per-node fine-grain task scheduling, paper Fig. 4). With
+/// one core this degenerates to the sum of unique task costs.
+fn unit_duration(
+    unit: &ScheduleUnit,
+    graph: &CompactGraph,
+    instances: &[StageInstance],
+    model: &CostModel,
+    opts: &SimOptions,
+    tasks_out: &mut usize,
+) -> f64 {
+    let stages: Vec<MergeStage> = unit
+        .nodes
+        .iter()
+        .map(|&n| MergeStage::new(n, instances[graph.nodes[n].rep].task_path()))
+        .collect();
+    let rep = &instances[graph.nodes[unit.nodes[0]].rep];
+    let tree = ReuseTree::build(&stages);
+
+    // per-task-node cost (leaves and root carry no work)
+    let mut cost = vec![0.0f64; tree.nodes.len()];
+    for (id, node) in tree.nodes.iter().enumerate() {
+        if id == tree.root || node.is_leaf() {
+            continue;
+        }
+        let name = &rep.tasks[node.level - 1].name;
+        let mut c = model.cost_of(name);
+        if opts.cost_cv > 0.0 {
+            let mut rng =
+                SplitMix64::new(opts.seed ^ node.sig ^ ((node.level as u64) << 32));
+            c *= (1.0 + opts.cost_cv * rng.normal()).max(0.05);
+        }
+        cost[id] = c;
+        *tasks_out += 1;
+    }
+
+    // list-schedule the tree on `cores` respecting parent dependencies
+    let is_task = |id: usize| id != tree.root && !tree.nodes[id].is_leaf();
+    let mut ready: VecDeque<usize> = tree.nodes[tree.root]
+        .children
+        .iter()
+        .copied()
+        .filter(|&c| is_task(c))
+        .collect();
+    let mut events: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    let to_ns = |s: f64| (s * 1e9).round() as u64;
+    let mut idle = opts.cores;
+    let mut now = 0.0f64;
+    let mut done = 0usize;
+    let n_tasks = (0..tree.nodes.len()).filter(|&id| is_task(id)).count();
+    while done < n_tasks {
+        while idle > 0 && !ready.is_empty() {
+            let t = ready.pop_front().unwrap();
+            idle -= 1;
+            events.push(Reverse((to_ns(now + cost[t]), t)));
+        }
+        let Some(Reverse((t_ns, t))) = events.pop() else {
+            unreachable!("tree schedule stalled");
+        };
+        now = t_ns as f64 / 1e9;
+        idle += 1;
+        done += 1;
+        for &c in &tree.nodes[t].children {
+            if is_task(c) {
+                ready.push_back(c);
+            }
+        }
+    }
+    now
+}
+
+/// Run the demand-driven list-scheduling simulation: whenever a worker is
+/// idle and a unit is ready (all deps complete), the unit starts; units
+/// become ready the instant their last dependency finishes. Among ready
+/// units the manager dispatches the *costliest first* (LPT) — merged
+/// buckets are longer than singleton stages, and largest-first dispatch
+/// keeps them off the straggler tail at low units-per-worker ratios
+/// (without it, FIFO order can push TRTMA below NR at WP 256, which
+/// contradicts the paper's Table 5).
+pub fn simulate_plan(
+    plan: &StudyPlan,
+    graph: &CompactGraph,
+    instances: &[StageInstance],
+    model: &CostModel,
+    opts: &SimOptions,
+) -> SimReport {
+    assert!(opts.workers >= 1);
+    let n = plan.units.len();
+    let mut tasks = 0usize;
+    let durations: Vec<f64> = plan
+        .units
+        .iter()
+        .map(|u| unit_duration(u, graph, instances, model, opts, &mut tasks))
+        .collect();
+    let total_work: f64 = durations.iter().sum();
+
+    // dependency bookkeeping
+    let mut indeg: Vec<usize> = plan.units.iter().map(|u| u.deps.len()).collect();
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for u in &plan.units {
+        for &d in &u.deps {
+            children[d].push(u.id);
+        }
+    }
+
+    let to_ns = |s: f64| (s * 1e9).round() as u64;
+    // ready units ordered costliest-first (ties by unit id for
+    // determinism)
+    let mut ready: BinaryHeap<(u64, std::cmp::Reverse<usize>)> = (0..n)
+        .filter(|&i| indeg[i] == 0)
+        .map(|i| (to_ns(durations[i]), std::cmp::Reverse(i)))
+        .collect();
+    // idle workers (ids) and the completion event queue
+    let mut idle: Vec<usize> = (0..opts.workers).collect();
+    let mut events: BinaryHeap<Reverse<(u64, usize, usize)>> = BinaryHeap::new(); // (finish_ns, unit, worker)
+
+    let mut worker_busy = vec![0.0f64; opts.workers];
+    let mut now = 0.0f64;
+    let mut done = 0usize;
+
+    while done < n {
+        // start everything startable
+        while !ready.is_empty() && !idle.is_empty() {
+            let (_, std::cmp::Reverse(u)) = ready.pop().unwrap();
+            let w = idle.pop().unwrap();
+            let dur = durations[u];
+            worker_busy[w] += dur;
+            events.push(Reverse((to_ns(now + dur), u, w)));
+        }
+        // advance to the next completion
+        let Some(Reverse((t_ns, u, w))) = events.pop() else {
+            panic!("deadlock: {} of {} units stuck (cyclic deps?)", n - done, n);
+        };
+        now = t_ns as f64 / 1e9;
+        idle.push(w);
+        done += 1;
+        for &c in &children[u] {
+            indeg[c] -= 1;
+            if indeg[c] == 0 {
+                ready.push((to_ns(durations[c]), std::cmp::Reverse(c)));
+            }
+        }
+    }
+
+    SimReport { makespan: now, worker_busy, units: n, tasks, total_work }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::merging::{plan_study, FineAlgorithm};
+    use crate::sampling::default_space;
+    use crate::simulate::default_cost_model;
+    use crate::workflow::{instantiate_study, paper_workflow, Evaluation};
+
+    fn study(n: usize, vary: impl Fn(usize, &mut Vec<f64>)) -> (CompactGraph, Vec<StageInstance>) {
+        let wf = paper_workflow();
+        let space = default_space();
+        let evals: Vec<Evaluation> = (0..n)
+            .map(|id| {
+                let mut params = space.defaults();
+                vary(id, &mut params);
+                Evaluation { id, tile: 0, params }
+            })
+            .collect();
+        let insts = instantiate_study(&wf, &evals);
+        (CompactGraph::build(&insts, true), insts)
+    }
+
+    #[test]
+    fn single_worker_makespan_is_total_work() {
+        let (g, insts) = study(6, |id, p| p[5] = 5.0 * (id + 1) as f64);
+        let plan = plan_study(&g, &insts, FineAlgorithm::Rtma(3));
+        let model = default_cost_model();
+        let r = simulate_plan(&plan, &g, &insts, &model, &SimOptions::new(1));
+        assert!((r.makespan - r.total_work).abs() < 1e-6);
+        assert!((r.utilization() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn more_workers_never_slower() {
+        let (g, insts) = study(24, |id, p| {
+            p[5] = 5.0 * (id % 6 + 1) as f64;
+            p[9] = 5.0 * (id % 4 + 1) as f64;
+        });
+        let plan = plan_study(&g, &insts, FineAlgorithm::Rtma(4));
+        let model = default_cost_model();
+        let mut last = f64::INFINITY;
+        for wp in [1usize, 2, 4, 8, 16] {
+            let r = simulate_plan(&plan, &g, &insts, &model, &SimOptions::new(wp));
+            assert!(r.makespan <= last + 1e-9, "wp={wp}: {} > {last}", r.makespan);
+            last = r.makespan;
+        }
+    }
+
+    #[test]
+    fn reuse_reduces_simulated_makespan() {
+        let (g, insts) = study(30, |id, p| p[9] = 5.0 * (id % 16 + 1) as f64);
+        let model = default_cost_model();
+        let nr = plan_study(&g, &insts, FineAlgorithm::None);
+        let rt = plan_study(&g, &insts, FineAlgorithm::Rtma(7));
+        // worker nodes expose cores: merged buckets fan their reuse-tree
+        // branches across them (paper Fig. 4)
+        let opts = SimOptions::new(4).with_cores(8);
+        let r_nr = simulate_plan(&nr, &g, &insts, &model, &opts);
+        let r_rt = simulate_plan(&rt, &g, &insts, &model, &opts);
+        assert!(
+            r_rt.makespan < r_nr.makespan,
+            "rtma {} vs nr {}",
+            r_rt.makespan,
+            r_nr.makespan
+        );
+        assert!(r_rt.speedup_over(&r_nr) > 1.0);
+    }
+
+    #[test]
+    fn task_count_matches_plan() {
+        let (g, insts) = study(10, |id, p| p[5] = 5.0 * (id % 5 + 1) as f64);
+        let plan = plan_study(&g, &insts, FineAlgorithm::Rtma(5));
+        let model = default_cost_model();
+        let r = simulate_plan(&plan, &g, &insts, &model, &SimOptions::new(2));
+        assert_eq!(r.tasks, plan.tasks_to_execute());
+        assert_eq!(r.units, plan.units.len());
+    }
+
+    #[test]
+    fn excess_merging_hurts_at_high_worker_counts() {
+        // the paper's core scalability finding (Fig 22): with few buckets
+        // and many workers, RTMA's reduced parallelism wastes resources
+        let (g, insts) = study(64, |id, p| {
+            p[9] = 5.0 * (id % 16 + 1) as f64;
+            p[10] = 2.0 * (id % 4 + 1) as f64;
+        });
+        let model = default_cost_model();
+        let nr = plan_study(&g, &insts, FineAlgorithm::None);
+        let rt = plan_study(&g, &insts, FineAlgorithm::Rtma(64));
+        let wp = 48;
+        let r_nr = simulate_plan(&nr, &g, &insts, &model, &SimOptions::new(wp));
+        let r_rt = simulate_plan(&rt, &g, &insts, &model, &SimOptions::new(wp));
+        // massive merging - few big buckets - worse makespan than NR
+        assert!(
+            r_rt.makespan > r_nr.makespan,
+            "over-merged rtma {} should lose to nr {} at wp={wp}",
+            r_rt.makespan,
+            r_nr.makespan
+        );
+    }
+
+    #[test]
+    fn jitter_changes_makespan_deterministically() {
+        let (g, insts) = study(12, |id, p| p[5] = 5.0 * (id % 6 + 1) as f64);
+        let plan = plan_study(&g, &insts, FineAlgorithm::Rtma(4));
+        let model = default_cost_model();
+        let a = simulate_plan(&plan, &g, &insts, &model, &SimOptions::new(4).with_cv(0.3, 7));
+        let b = simulate_plan(&plan, &g, &insts, &model, &SimOptions::new(4).with_cv(0.3, 7));
+        let c = simulate_plan(&plan, &g, &insts, &model, &SimOptions::new(4).with_cv(0.3, 8));
+        assert_eq!(a.makespan, b.makespan);
+        assert_ne!(a.makespan, c.makespan);
+    }
+}

@@ -1,0 +1,22 @@
+//! Discrete-event cluster simulator (paper Figs 22/23, Table 5).
+//!
+//! The paper's 8–256-worker scaling experiments ran on TACC Stampede;
+//! here the same [`crate::merging::StudyPlan`]s drive a demand-driven
+//! manager/worker simulation whose per-task costs come from a cost model
+//! measured on the real PJRT execution (Table-6 analog). The scheduling
+//! policy is exactly the RTF's: workers request the next ready schedule
+//! unit whenever idle; a unit occupies one worker for the sum of its
+//! unique task costs.
+//!
+//! Because reuse fraction, makespan and load balance are functions of the
+//! merge plan plus the task-cost distribution — not of Infiniband — the
+//! paper's who-wins/crossover shapes are preserved (DESIGN.md
+//! §Substitutions).
+
+mod cost;
+mod des;
+mod pats;
+
+pub use cost::{default_cost_model, CostModel};
+pub use des::{simulate_plan, SimOptions, SimReport};
+pub use pats::{hetero_unit_makespan, DeviceModel, SchedulePolicy};

@@ -1,0 +1,161 @@
+//! JSON stage-descriptor parsing (paper Fig. 7 / §3.1).
+//!
+//! The paper's GUI + code generator let domain experts define stages in a
+//! descriptor file ("name", external library, inputs, tasks with their
+//! argument lists) and compose workflows in Taverna. This module is the
+//! runtime half of that generator: it turns descriptor JSON into
+//! [`StageSpec`]s / [`WorkflowSpec`]s so new workflows can be deployed
+//! without recompiling the framework.
+//!
+//! Example stage descriptor (same shape as the paper's Fig. 7):
+//!
+//! ```json
+//! {
+//!   "name": "segmentation",
+//!   "lib": "nscale",
+//!   "tasks": [
+//!     {"call": "segmentNucleiStg1", "name": "t1",
+//!      "args": ["B", "G", "R", "T1", "T2"]},
+//!     {"call": "segmentNucleiStg2", "name": "t2", "args": ["G1", "reconConn"]}
+//!   ]
+//! }
+//! ```
+
+use crate::jsonx::Json;
+use crate::sampling::ParamSpace;
+use crate::{Error, Result};
+
+use super::spec::{StageSpec, TaskSpec, WorkflowSpec};
+
+/// Parse one stage descriptor object. Task `args` name parameters of
+/// `space` (resolved to canonical indices); unknown names are an error.
+pub fn parse_stage_descriptor(json: &Json, space: &ParamSpace) -> Result<StageSpec> {
+    let name = json
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Workflow("stage descriptor: missing `name`".into()))?;
+    let lib = json.get("lib").and_then(Json::as_str).unwrap_or("local");
+    let tasks_json = json
+        .get("tasks")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Workflow(format!("stage `{name}`: missing `tasks`")))?;
+    if tasks_json.is_empty() {
+        return Err(Error::Workflow(format!("stage `{name}`: empty `tasks`")));
+    }
+    let mut tasks = Vec::with_capacity(tasks_json.len());
+    for (i, tj) in tasks_json.iter().enumerate() {
+        let call = tj
+            .get("call")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Workflow(format!("stage `{name}` task {i}: missing `call`")))?;
+        let tname = tj
+            .get("name")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("{name}.{i}"));
+        let mut param_indices = Vec::new();
+        if let Some(args) = tj.get("args").and_then(Json::as_arr) {
+            for a in args {
+                let pname = a.as_str().ok_or_else(|| {
+                    Error::Workflow(format!("stage `{name}` task `{tname}`: non-string arg"))
+                })?;
+                param_indices.push(space.index_of(pname)?);
+            }
+        }
+        tasks.push(TaskSpec::new(&tname, &format!("{lib}::{call}"), param_indices));
+    }
+    Ok(StageSpec::new(name, tasks))
+}
+
+/// Parse a workflow file: `{"name": ..., "stages": [<descriptor>, ...]}`
+/// (the role the Taverna parser played in the paper).
+pub fn parse_workflow_file(text: &str, space: &ParamSpace) -> Result<WorkflowSpec> {
+    let json = Json::parse(text)?;
+    let name = json.get("name").and_then(Json::as_str).unwrap_or("workflow");
+    let stages_json = json
+        .get("stages")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Workflow("workflow file: missing `stages`".into()))?;
+    let mut stages = Vec::with_capacity(stages_json.len());
+    for sj in stages_json {
+        stages.push(parse_stage_descriptor(sj, space)?);
+    }
+    let wf = WorkflowSpec::new(name, stages);
+    wf.validate(space.dim())?;
+    Ok(wf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::default_space;
+
+    const DESCRIPTOR: &str = r#"
+    {
+      "name": "segmentation",
+      "lib": "nscale",
+      "tasks": [
+        {"call": "segmentNucleiStg1", "name": "t1",
+         "args": ["B", "G", "R", "T1", "T2"]},
+        {"call": "segmentNucleiStg2", "name": "t2", "args": ["G1", "reconConn"]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_fig7_style_descriptor() {
+        let space = default_space();
+        let stage =
+            parse_stage_descriptor(&Json::parse(DESCRIPTOR).unwrap(), &space).unwrap();
+        assert_eq!(stage.name, "segmentation");
+        assert_eq!(stage.tasks.len(), 2);
+        assert_eq!(stage.tasks[0].lib_call, "nscale::segmentNucleiStg1");
+        assert_eq!(stage.tasks[0].param_indices, vec![0, 1, 2, 3, 4]);
+        assert_eq!(stage.tasks[1].param_indices, vec![5, 13]);
+    }
+
+    #[test]
+    fn unknown_parameter_is_error() {
+        let space = default_space();
+        let bad = r#"{"name": "s", "tasks": [{"call": "c", "args": ["NOPE"]}]}"#;
+        assert!(parse_stage_descriptor(&Json::parse(bad).unwrap(), &space).is_err());
+    }
+
+    #[test]
+    fn workflow_file_roundtrip() {
+        let space = default_space();
+        let text = format!(
+            r#"{{"name": "wf", "stages": [
+                 {{"name": "norm", "lib": "nscale",
+                   "tasks": [{{"call": "normalize", "name": "norm"}}]}},
+                 {DESCRIPTOR}
+               ]}}"#
+        );
+        let wf = parse_workflow_file(&text, &space).unwrap();
+        assert_eq!(wf.stages.len(), 2);
+        assert_eq!(wf.tasks_per_evaluation(), 3);
+    }
+
+    #[test]
+    fn shipped_descriptor_matches_builtin_workflow() {
+        // assets/workflows/microscopy.json is the paper workflow as a
+        // Fig-7-style descriptor; parsing it must reproduce
+        // `paper_workflow()` exactly.
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("assets/workflows/microscopy.json");
+        let text = std::fs::read_to_string(path).unwrap();
+        let space = default_space();
+        let wf = parse_workflow_file(&text, &space).unwrap();
+        assert_eq!(wf, crate::workflow::paper_workflow());
+    }
+
+    #[test]
+    fn missing_tasks_is_error() {
+        let space = default_space();
+        assert!(parse_stage_descriptor(&Json::parse(r#"{"name":"s"}"#).unwrap(), &space).is_err());
+        assert!(parse_stage_descriptor(
+            &Json::parse(r#"{"name":"s","tasks":[]}"#).unwrap(),
+            &space
+        )
+        .is_err());
+    }
+}

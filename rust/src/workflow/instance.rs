@@ -1,0 +1,198 @@
+//! Workflow instantiation: parameter sets → stage/task instances.
+//!
+//! This is where reuse becomes *visible*: every task instance carries a
+//! signature (task identity + its own parameter values), every stage
+//! instance carries its input signature (chained from the upstream stage)
+//! and a full signature. Two task executions are interchangeable exactly
+//! when their stage input signatures and task-signature *prefixes* match;
+//! two stage instances are interchangeable when their full signatures
+//! match (coarse-grain reuse, Algorithm 1).
+
+use crate::sampling::ParamSet;
+
+use super::spec::WorkflowSpec;
+
+/// FNV-1a 64-bit over a byte stream — stable, dependency-free hashing for
+/// reuse signatures.
+pub fn sig_hash(parts: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for p in parts {
+        for b in p.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+fn str_bits(s: &str) -> u64 {
+    sig_hash(&s.bytes().map(|b| b as u64).collect::<Vec<_>>())
+}
+
+/// One requested workflow run: a tile and a full parameter set.
+#[derive(Clone, Debug)]
+pub struct Evaluation {
+    pub id: usize,
+    pub tile: u64,
+    pub params: ParamSet,
+}
+
+/// A fine-grain task instance inside a stage instance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskInstance {
+    pub name: String,
+    pub lib_call: String,
+    /// This task's own parameter values (artifact argument order).
+    pub params: Vec<f64>,
+    /// Signature of (task identity, params). Reuse of the task requires
+    /// equal signatures *and* an equal upstream prefix.
+    pub sig: u64,
+}
+
+/// A coarse-grain stage instance.
+#[derive(Clone, Debug)]
+pub struct StageInstance {
+    /// Globally unique instance id (index into the study's instance list).
+    pub id: usize,
+    /// Evaluation this instance belongs to.
+    pub eval: usize,
+    pub stage: String,
+    /// Position of the stage in the workflow chain.
+    pub stage_idx: usize,
+    pub tile: u64,
+    pub tasks: Vec<TaskInstance>,
+    /// Signature of the stage's input (tile for the first stage, the
+    /// upstream stage's `full_sig` otherwise).
+    pub input_sig: u64,
+    /// Signature of (stage identity, input, all task sigs) — the
+    /// coarse-grain reuse key.
+    pub full_sig: u64,
+}
+
+impl StageInstance {
+    /// The reuse-tree path of this instance: task signatures level by
+    /// level. Instances with equal `input_sig` share (and may reuse) any
+    /// common prefix of this path.
+    pub fn task_path(&self) -> Vec<u64> {
+        self.tasks.iter().map(|t| t.sig).collect()
+    }
+}
+
+/// Instantiate every stage of every evaluation. Returns instances grouped
+/// in evaluation-major order (eval 0's stages, then eval 1's, ...).
+pub fn instantiate_study(wf: &WorkflowSpec, evals: &[Evaluation]) -> Vec<StageInstance> {
+    let mut out = Vec::with_capacity(evals.len() * wf.stages.len());
+    for ev in evals {
+        let mut upstream = sig_hash(&[0x7469_6c65, ev.tile]); // "tile"
+        for (stage_idx, s) in wf.stages.iter().enumerate() {
+            let tasks: Vec<TaskInstance> = s
+                .tasks
+                .iter()
+                .map(|t| {
+                    let params = t.project(&ev.params);
+                    let mut parts = vec![str_bits(&t.name), str_bits(&t.lib_call)];
+                    parts.extend(params.iter().map(|v| v.to_bits()));
+                    TaskInstance {
+                        name: t.name.clone(),
+                        lib_call: t.lib_call.clone(),
+                        params,
+                        sig: sig_hash(&parts),
+                    }
+                })
+                .collect();
+            let mut parts = vec![str_bits(&s.name), upstream];
+            parts.extend(tasks.iter().map(|t| t.sig));
+            let full_sig = sig_hash(&parts);
+            out.push(StageInstance {
+                id: out.len(),
+                eval: ev.id,
+                stage: s.name.clone(),
+                stage_idx,
+                tile: ev.tile,
+                tasks,
+                input_sig: upstream,
+                full_sig,
+            });
+            upstream = full_sig;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::default_space;
+    use crate::workflow::paper_workflow;
+
+    fn evals(param_sets: Vec<ParamSet>) -> Vec<Evaluation> {
+        param_sets
+            .into_iter()
+            .enumerate()
+            .map(|(id, params)| Evaluation { id, tile: 0, params })
+            .collect()
+    }
+
+    #[test]
+    fn instance_count_and_chaining() {
+        let wf = paper_workflow();
+        let space = default_space();
+        let insts = instantiate_study(&wf, &evals(vec![space.defaults(), space.defaults()]));
+        assert_eq!(insts.len(), 6); // 2 evals x 3 stages
+        // chain: each stage's input is the upstream full signature
+        assert_eq!(insts[1].input_sig, insts[0].full_sig);
+        assert_eq!(insts[2].input_sig, insts[1].full_sig);
+        // identical evaluations produce identical signatures
+        assert_eq!(insts[0].full_sig, insts[3].full_sig);
+        assert_eq!(insts[2].full_sig, insts[5].full_sig);
+    }
+
+    #[test]
+    fn norm_stage_reusable_across_different_params() {
+        let wf = paper_workflow();
+        let space = default_space();
+        let mut p2 = space.defaults();
+        p2[5] = 80.0; // G1
+        let insts = instantiate_study(&wf, &evals(vec![space.defaults(), p2]));
+        // normalization has no parameters: both instances identical
+        assert_eq!(insts[0].full_sig, insts[3].full_sig);
+        // segmentation differs
+        assert_ne!(insts[1].full_sig, insts[4].full_sig);
+        // and so does comparison (depends on segmentation output)
+        assert_ne!(insts[2].full_sig, insts[5].full_sig);
+    }
+
+    #[test]
+    fn task_prefix_reflects_changed_parameter() {
+        let wf = paper_workflow();
+        let space = default_space();
+        let mut p2 = space.defaults();
+        p2[9] = 80.0; // minSizePl — consumed by t5
+        let insts = instantiate_study(&wf, &evals(vec![space.defaults(), p2]));
+        let a = insts[1].task_path();
+        let b = insts[4].task_path();
+        assert_eq!(a[..4], b[..4], "t1..t4 unchanged");
+        assert_ne!(a[4], b[4], "t5 differs");
+        assert_eq!(a[5..], b[5..], "t6/t7 signatures equal (same own params)");
+    }
+
+    #[test]
+    fn different_tiles_never_share_input_sig() {
+        let wf = paper_workflow();
+        let space = default_space();
+        let mut ev = evals(vec![space.defaults(), space.defaults()]);
+        ev[1].tile = 7;
+        let insts = instantiate_study(&wf, &ev);
+        assert_ne!(insts[0].input_sig, insts[3].input_sig);
+        assert_ne!(insts[0].full_sig, insts[3].full_sig);
+    }
+
+    #[test]
+    fn sig_hash_is_stable_and_sensitive() {
+        let a = sig_hash(&[1, 2, 3]);
+        assert_eq!(a, sig_hash(&[1, 2, 3]));
+        assert_ne!(a, sig_hash(&[1, 2, 4]));
+        assert_ne!(a, sig_hash(&[3, 2, 1]));
+        assert_ne!(sig_hash(&[]), sig_hash(&[0]));
+    }
+}

@@ -1,0 +1,19 @@
+//! Hierarchical workflow model (paper §2.3, §3.1).
+//!
+//! A workflow is a chain of coarse-grain **stages**, each composed of
+//! fine-grain **tasks**. Stages are the unit of distribution (one stage
+//! instance runs on one worker node); tasks are the unit of local
+//! scheduling and of fine-grain reuse. Stages are described by JSON
+//! descriptor files (paper Fig. 7) from which the task-based stage code
+//! generator builds the executable workflow — here the descriptor parser
+//! plus [`spec::paper_workflow`] play that role.
+
+mod codegen;
+mod descriptor;
+mod instance;
+mod spec;
+
+pub use codegen::{generate_stage_code, generate_workflow_code};
+pub use descriptor::{parse_stage_descriptor, parse_workflow_file};
+pub use instance::{instantiate_study, sig_hash, Evaluation, StageInstance, TaskInstance};
+pub use spec::{paper_workflow, StageSpec, TaskSpec, WorkflowSpec};

@@ -1,0 +1,192 @@
+//! Workflow/stage/task specifications.
+
+use crate::sampling::space::idx;
+use crate::{Error, Result};
+
+/// A fine-grain task: an external library call plus the indices of the
+/// global parameters it consumes (in the order the artifact expects them).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskSpec {
+    /// Task name — matches the AOT artifact name (`norm`, `t1`.. `t7`).
+    pub name: String,
+    /// The external operation this task calls (paper Fig. 7:
+    /// `nscale::segmentNucleiStg1` etc.; here the artifact id).
+    pub lib_call: String,
+    /// Indices into the canonical 15-parameter set.
+    pub param_indices: Vec<usize>,
+}
+
+impl TaskSpec {
+    pub fn new(name: &str, lib_call: &str, param_indices: Vec<usize>) -> Self {
+        Self { name: name.into(), lib_call: lib_call.into(), param_indices }
+    }
+
+    /// Extract this task's parameter vector from a full parameter set.
+    pub fn project(&self, set: &[f64]) -> Vec<f64> {
+        self.param_indices.iter().map(|&i| set[i]).collect()
+    }
+}
+
+/// A coarse-grain stage: an ordered list of tasks (linear dependency
+/// chain within the stage, matching the segmentation pipeline).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageSpec {
+    pub name: String,
+    pub tasks: Vec<TaskSpec>,
+}
+
+impl StageSpec {
+    pub fn new(name: &str, tasks: Vec<TaskSpec>) -> Self {
+        Self { name: name.into(), tasks }
+    }
+
+    /// All global parameter indices any task of this stage consumes.
+    pub fn param_indices(&self) -> Vec<usize> {
+        let mut v: Vec<usize> =
+            self.tasks.iter().flat_map(|t| t.param_indices.iter().copied()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+/// A workflow: a linear chain of stages (normalization → segmentation →
+/// comparison in the paper's application).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkflowSpec {
+    pub name: String,
+    pub stages: Vec<StageSpec>,
+}
+
+impl WorkflowSpec {
+    pub fn new(name: &str, stages: Vec<StageSpec>) -> Self {
+        Self { name: name.into(), stages }
+    }
+
+    pub fn stage(&self, name: &str) -> Result<&StageSpec> {
+        self.stages
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| Error::Workflow(format!("unknown stage `{name}`")))
+    }
+
+    /// Total fine-grain tasks per evaluation.
+    pub fn tasks_per_evaluation(&self) -> usize {
+        self.stages.iter().map(|s| s.tasks.len()).sum()
+    }
+
+    /// Sanity checks: non-empty stages, unique task names, valid param
+    /// indices for a space of dimension `dim`.
+    pub fn validate(&self, dim: usize) -> Result<()> {
+        if self.stages.is_empty() {
+            return Err(Error::Workflow("workflow has no stages".into()));
+        }
+        let mut names = std::collections::HashSet::new();
+        for s in &self.stages {
+            if s.tasks.is_empty() {
+                return Err(Error::Workflow(format!("stage `{}` has no tasks", s.name)));
+            }
+            for t in &s.tasks {
+                if !names.insert(t.name.clone()) {
+                    return Err(Error::Workflow(format!("duplicate task `{}`", t.name)));
+                }
+                if let Some(&bad) = t.param_indices.iter().find(|&&i| i >= dim) {
+                    return Err(Error::Workflow(format!(
+                        "task `{}` references parameter {bad} outside space dim {dim}",
+                        t.name
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The paper's microscopy workflow: a parameter-free normalization stage,
+/// the 7-task segmentation stage carrying all 15 parameters of Table 1,
+/// and the comparison stage (paper Fig. 1; task→parameter mapping in
+/// DESIGN.md §2.1).
+pub fn paper_workflow() -> WorkflowSpec {
+    WorkflowSpec::new(
+        "microscopy-segmentation",
+        vec![
+            StageSpec::new("normalization", vec![TaskSpec::new("norm", "nscale::normalize", vec![])]),
+            StageSpec::new(
+                "segmentation",
+                vec![
+                    TaskSpec::new(
+                        "t1",
+                        "nscale::segmentNucleiStg1",
+                        vec![idx::B, idx::G, idx::R, idx::T1, idx::T2],
+                    ),
+                    TaskSpec::new("t2", "nscale::segmentNucleiStg2", vec![idx::G1, idx::RECON]),
+                    TaskSpec::new("t3", "nscale::segmentNucleiStg3", vec![idx::FILL_HOLES]),
+                    TaskSpec::new(
+                        "t4",
+                        "nscale::segmentNucleiStg4",
+                        vec![idx::G2, idx::MIN_SIZE, idx::MAX_SIZE],
+                    ),
+                    TaskSpec::new("t5", "nscale::segmentNucleiStg5", vec![idx::MIN_SIZE_PL]),
+                    TaskSpec::new("t6", "nscale::segmentNucleiStg6", vec![idx::WATERSHED]),
+                    TaskSpec::new(
+                        "t7",
+                        "nscale::segmentNucleiStg7",
+                        vec![idx::MIN_SIZE_SEG, idx::MAX_SIZE_SEG],
+                    ),
+                ],
+            ),
+            StageSpec::new("comparison", vec![TaskSpec::new("cmp", "nscale::diffMask", vec![])]),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::default_space;
+
+    #[test]
+    fn paper_workflow_validates() {
+        let wf = paper_workflow();
+        wf.validate(default_space().dim()).unwrap();
+        assert_eq!(wf.stages.len(), 3);
+        assert_eq!(wf.tasks_per_evaluation(), 9);
+        assert_eq!(wf.stage("segmentation").unwrap().tasks.len(), 7);
+    }
+
+    #[test]
+    fn segmentation_covers_all_15_params() {
+        let wf = paper_workflow();
+        let covered = wf.stage("segmentation").unwrap().param_indices();
+        assert_eq!(covered, (0..15).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn project_extracts_in_task_order() {
+        let wf = paper_workflow();
+        let set: Vec<f64> = (0..15).map(|i| i as f64 * 10.0).collect();
+        let t4 = &wf.stage("segmentation").unwrap().tasks[3];
+        assert_eq!(t4.project(&set), vec![60.0, 70.0, 80.0]); // G2, minS, maxS
+    }
+
+    #[test]
+    fn validate_catches_bad_param_index() {
+        let wf = WorkflowSpec::new(
+            "bad",
+            vec![StageSpec::new("s", vec![TaskSpec::new("t", "x", vec![99])])],
+        );
+        assert!(wf.validate(15).is_err());
+    }
+
+    #[test]
+    fn validate_catches_duplicate_tasks() {
+        let wf = WorkflowSpec::new(
+            "bad",
+            vec![StageSpec::new(
+                "s",
+                vec![TaskSpec::new("t", "x", vec![]), TaskSpec::new("t", "y", vec![])],
+            )],
+        );
+        assert!(wf.validate(15).is_err());
+    }
+}

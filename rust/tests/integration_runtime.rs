@@ -1,0 +1,63 @@
+//! End-to-end runtime check: the AOT artifacts load, compile and execute
+//! through the PJRT CPU client, the chain segments a synthetic tile, and
+//! the comparison task returns sane metrics.
+
+use std::collections::HashMap;
+
+use rtf_reuse::data::{synth_tile, SynthConfig};
+use rtf_reuse::runtime::PjrtEngine;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn default_params() -> HashMap<String, Vec<f32>> {
+    let mut m = HashMap::new();
+    m.insert("norm".into(), vec![]);
+    m.insert("t1".into(), vec![220.0, 220.0, 220.0, 4.0, 4.0]);
+    m.insert("t2".into(), vec![40.0, 8.0]);
+    m.insert("t3".into(), vec![8.0]);
+    m.insert("t4".into(), vec![20.0, 10.0, 1200.0]);
+    m.insert("t5".into(), vec![10.0]);
+    m.insert("t6".into(), vec![8.0]);
+    m.insert("t7".into(), vec![10.0, 1200.0]);
+    m
+}
+
+#[test]
+fn chain_executes_and_segments() {
+    let mut engine = PjrtEngine::load(artifacts_dir()).expect("run `make artifacts` first");
+    let (h, w) = engine.tile_shape();
+    let tile = synth_tile(&SynthConfig::new(h, w, 42));
+
+    let state = engine.run_chain(&tile, &default_params()).unwrap();
+    let mask = &state[1];
+    let on = mask.count_above(0.5);
+    assert!(on > 50, "expected segmented nuclei pixels, got {on}");
+    assert!(
+        (on as f64) < (h * w) as f64 * 0.5,
+        "mask flooded the tile: {on} of {}",
+        h * w
+    );
+
+    // self-comparison is perfect
+    let m = engine.execute_compare(&state, mask).unwrap();
+    assert!((m[0] - 1.0).abs() < 1e-4, "self-dice {}", m[0]);
+    assert!((m[1] - 1.0).abs() < 1e-4, "self-jaccard {}", m[1]);
+    assert!(m[2].abs() < 1e-6, "self-diff {}", m[2]);
+
+    // determinism across re-execution
+    let state2 = engine.run_chain(&tile, &default_params()).unwrap();
+    assert_eq!(state[1], state2[1]);
+
+    // perturbing the influential G1 parameter changes the output
+    let mut params = default_params();
+    params.insert("t2".into(), vec![75.0, 8.0]);
+    let state3 = engine.run_chain(&tile, &params).unwrap();
+    let d = engine.execute_compare(&state3, mask).unwrap();
+    assert!(d[0] < 0.999, "G1 perturbation must change the mask, dice={}", d[0]);
+
+    // timer collected per-task stats
+    let rows = engine.timer().summary();
+    assert!(rows.iter().any(|(name, mean, n)| name == "t2" && *mean > 0.0 && *n >= 3));
+}

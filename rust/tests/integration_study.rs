@@ -1,0 +1,172 @@
+//! End-to-end study integration: full SA studies through the real PJRT
+//! coordinator, checking the fundamental reuse property — **reuse must
+//! not change results** — plus multi-tile studies and both SA methods.
+
+use rtf_reuse::config::{SaMethod, StudyConfig};
+use rtf_reuse::driver::{moat_screen, prepare, run_pjrt, y_per_set, SampleInfo};
+use rtf_reuse::merging::{FineAlgorithm, TrtmaOptions};
+
+fn base_cfg() -> StudyConfig {
+    StudyConfig {
+        method: SaMethod::Moat { r: 1 }, // 16 evaluations
+        workers: 2,
+        artifacts_dir: format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")),
+        ..StudyConfig::default()
+    }
+}
+
+#[test]
+fn reuse_never_changes_study_results() {
+    // the paper's core correctness requirement: merged execution skips
+    // re-computation but every evaluation's output must be identical
+    let mut reference: Option<Vec<f64>> = None;
+    for (coarse, algo) in [
+        (false, FineAlgorithm::None), // replica baseline
+        (true, FineAlgorithm::None),
+        (true, FineAlgorithm::Naive(4)),
+        (true, FineAlgorithm::Sca(4)),
+        (true, FineAlgorithm::Rtma(4)),
+        (true, FineAlgorithm::Trtma(TrtmaOptions::new(5))),
+    ] {
+        let mut cfg = base_cfg();
+        cfg.coarse = coarse;
+        cfg.algorithm = algo;
+        let prepared = prepare(&cfg);
+        let plan = prepared.plan(&cfg);
+        plan.assert_valid(&prepared.graph);
+        let outcome = run_pjrt(&cfg, &prepared, &plan).expect("run `make artifacts` first");
+        assert_eq!(outcome.y.len(), prepared.n_evals());
+        match &reference {
+            None => reference = Some(outcome.y.clone()),
+            Some(r) => {
+                for (i, (a, b)) in r.iter().zip(&outcome.y).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-6,
+                        "eval {i} differs under {:?}: {a} vs {b}",
+                        algo.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn merged_execution_skips_work_but_metrics_stay_sane() {
+    let mut cfg = base_cfg();
+    cfg.algorithm = FineAlgorithm::Rtma(7);
+    let prepared = prepare(&cfg);
+    let plan = prepared.plan(&cfg);
+    assert!(plan.fine_reuse() > 0.1, "MOAT study must expose fine reuse");
+    let outcome = run_pjrt(&cfg, &prepared, &plan).unwrap();
+    for (i, m) in outcome.metrics.iter().enumerate() {
+        assert!((0.0..=1.0 + 1e-6).contains(&(m[0] as f64)), "eval {i} dice {}", m[0]);
+        assert!((0.0..=1.0 + 1e-6).contains(&(m[1] as f64)), "eval {i} jaccard {}", m[1]);
+        assert!(m[2] >= 0.0);
+        // dice >= jaccard always
+        assert!(m[0] >= m[1] - 1e-6);
+    }
+    // per-task timings were recorded for the merged execution
+    let rows = outcome.timer.summary();
+    assert!(rows.iter().any(|(n, _, _)| n == "t6"));
+    let t_total: u64 = rows.iter().map(|(_, _, n)| n).sum();
+    assert_eq!(t_total as usize, plan.tasks_to_execute());
+    assert!(outcome.peak_state_bytes > 0);
+}
+
+#[test]
+fn multi_tile_study_keeps_tiles_separate() {
+    let mut cfg = base_cfg();
+    cfg.tiles = 2;
+    cfg.algorithm = FineAlgorithm::Rtma(5);
+    let prepared = prepare(&cfg);
+    let plan = prepared.plan(&cfg);
+    plan.assert_valid(&prepared.graph);
+    let outcome = run_pjrt(&cfg, &prepared, &plan).unwrap();
+    assert_eq!(outcome.y.len(), prepared.n_evals());
+    // default-parameter evaluation (trajectory bases are not defaults, so
+    // instead check: per-set tile average is well-formed)
+    let SampleInfo::Moat(sample) = &prepared.sample else { unreachable!() };
+    let y_sets = y_per_set(&outcome.y, sample.sets.len(), cfg.tiles);
+    assert_eq!(y_sets.len(), 16);
+    assert!(y_sets.iter().all(|v| (0.0..=1.0).contains(v)));
+}
+
+#[test]
+fn moat_screen_flows_into_vbd() {
+    // phase 1
+    let mut cfg = base_cfg();
+    cfg.method = SaMethod::Moat { r: 2 };
+    cfg.algorithm = FineAlgorithm::Rtma(7);
+    let prepared = prepare(&cfg);
+    let plan = prepared.plan(&cfg);
+    let outcome = run_pjrt(&cfg, &prepared, &plan).unwrap();
+    let (_, top) = moat_screen(&cfg, &prepared, &outcome.y, 4);
+    assert_eq!(top.len(), 4);
+
+    // phase 2 on the screened parameters
+    let mut vcfg = base_cfg();
+    vcfg.method = SaMethod::Vbd { n: 3, k_active: top.len() };
+    vcfg.algorithm = FineAlgorithm::Rtma(6);
+    let vprep = rtf_reuse::driver::prepare_with_active(&vcfg, Some(top.clone()));
+    let vplan = vprep.plan(&vcfg);
+    assert!(vplan.fine_reuse() > 0.0, "VBD designs always expose reuse");
+    let vout = run_pjrt(&vcfg, &vprep, &vplan).unwrap();
+    let SampleInfo::Vbd(sample, active) = &vprep.sample else { unreachable!() };
+    assert_eq!(active, &top);
+    let y = y_per_set(&vout.y, sample.sets.len(), vcfg.tiles);
+    let idx = rtf_reuse::analysis::sobol_indices(sample, &y);
+    assert_eq!(idx.first.len(), top.len());
+}
+
+#[test]
+fn state_limit_spills_without_changing_results() {
+    use rtf_reuse::coordinator::{execute_study, ExecuteOptions};
+    use rtf_reuse::driver::{make_tiles, reference_masks};
+    use rtf_reuse::runtime::PjrtEngine;
+
+    let mut cfg = base_cfg();
+    cfg.algorithm = FineAlgorithm::Rtma(5);
+    let prepared = prepare(&cfg);
+    let plan = prepared.plan(&cfg);
+
+    let mut engine = PjrtEngine::load(&cfg.artifacts_dir).unwrap();
+    let (h, w) = engine.tile_shape();
+    let tiles = make_tiles(&cfg, h, w);
+    let refs = reference_masks(&mut engine, &prepared.space, &prepared.workflow, &tiles).unwrap();
+    drop(engine);
+
+    let unlimited = ExecuteOptions::new(2, &cfg.artifacts_dir);
+    let base = execute_study(
+        &unlimited, &plan, &prepared.graph, &prepared.instances, &tiles, &refs,
+        prepared.n_evals(),
+    )
+    .unwrap();
+
+    // a limit far below the working set forces disk spills
+    let limited = ExecuteOptions::new(2, &cfg.artifacts_dir).with_state_limit(256 * 1024);
+    let spilled = execute_study(
+        &limited, &plan, &prepared.graph, &prepared.instances, &tiles, &refs,
+        prepared.n_evals(),
+    )
+    .unwrap();
+
+    for (a, b) in base.y.iter().zip(&spilled.y) {
+        assert!((a - b).abs() < 1e-9, "spilling must not change results: {a} vs {b}");
+    }
+}
+
+#[test]
+fn worker_count_does_not_change_results() {
+    let mut cfg = base_cfg();
+    cfg.algorithm = FineAlgorithm::Rtma(5);
+    let prepared = prepare(&cfg);
+    let plan = prepared.plan(&cfg);
+    let y1 = run_pjrt(&cfg, &prepared, &plan).unwrap().y;
+    cfg.workers = 4;
+    let y4 = run_pjrt(&cfg, &prepared, &plan).unwrap().y;
+    assert_eq!(y1.len(), y4.len());
+    for (a, b) in y1.iter().zip(&y4) {
+        assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+    }
+}

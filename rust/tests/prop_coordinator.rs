@@ -1,0 +1,156 @@
+//! Property-based sweep over study planning and simulated execution:
+//! random study shapes through `plan_study` + the DES, checking the
+//! coordinator-level invariants (every task exactly once, dependency
+//! order, work conservation, scaling monotonicity).
+
+use rtf_reuse::config::{SaMethod, SamplerKind, StudyConfig};
+use rtf_reuse::data::SplitMix64;
+use rtf_reuse::driver::{prepare, run_sim};
+use rtf_reuse::merging::{FineAlgorithm, TrtmaOptions, UnitKind};
+use rtf_reuse::simulate::{default_cost_model, SimOptions};
+
+fn random_cfg(rng: &mut SplitMix64) -> StudyConfig {
+    let method = if rng.next_f64() < 0.5 {
+        SaMethod::Moat { r: rng.uniform_usize(1, 6) }
+    } else {
+        SaMethod::Vbd { n: rng.uniform_usize(2, 20), k_active: rng.uniform_usize(2, 9) }
+    };
+    let sampler = match rng.uniform_usize(0, 3) {
+        0 => SamplerKind::Qmc,
+        1 => SamplerKind::Mc,
+        _ => SamplerKind::Lhs,
+    };
+    let algorithm = match rng.uniform_usize(0, 5) {
+        0 => FineAlgorithm::None,
+        1 => FineAlgorithm::Naive(rng.uniform_usize(1, 9)),
+        2 => FineAlgorithm::Sca(rng.uniform_usize(1, 6)),
+        3 => FineAlgorithm::Rtma(rng.uniform_usize(1, 9)),
+        _ => FineAlgorithm::Trtma(TrtmaOptions::new(rng.uniform_usize(1, 12))),
+    };
+    StudyConfig {
+        method,
+        sampler,
+        algorithm,
+        coarse: rng.next_f64() < 0.8,
+        workers: rng.uniform_usize(1, 9),
+        tiles: rng.uniform_usize(1, 3),
+        seed: rng.next_u64() % 1000,
+        ..StudyConfig::default()
+    }
+}
+
+#[test]
+fn random_studies_plan_and_simulate_consistently() {
+    let mut rng = SplitMix64::new(0x5EED);
+    let model = default_cost_model();
+    for case in 0..40 {
+        let cfg = random_cfg(&mut rng);
+        let prepared = prepare(&cfg);
+        let plan = prepared.plan(&cfg);
+        plan.assert_valid(&prepared.graph); // partition + dep direction
+
+        // every instance's tasks are covered exactly once per unique node
+        let node_tasks: usize = prepared
+            .graph
+            .nodes
+            .iter()
+            .map(|n| prepared.instances[n.rep].tasks.len())
+            .sum();
+        assert_eq!(plan.fine.tasks_replica, node_tasks, "case {case}");
+        assert!(plan.fine.tasks_merged <= node_tasks);
+
+        let opts = SimOptions::new(cfg.workers).with_cores(rng.uniform_usize(1, 17));
+        let rep = run_sim(&prepared, &plan, &model, &opts);
+        assert_eq!(rep.units, plan.units.len(), "case {case}: every unit exactly once");
+        assert_eq!(rep.tasks, plan.tasks_to_execute(), "case {case}");
+        assert!(rep.makespan > 0.0);
+        // work conservation: busy time == sum of unit durations
+        let busy: f64 = rep.worker_busy.iter().sum();
+        assert!(
+            (busy - rep.total_work).abs() < 1e-6 * rep.total_work.max(1.0),
+            "case {case}: busy {busy} vs work {}",
+            rep.total_work
+        );
+        assert!(rep.utilization() <= 1.0 + 1e-9);
+        // makespan bounds: critical work <= makespan <= total work (1 wp)
+        assert!(rep.makespan <= rep.total_work + 1e-6);
+    }
+}
+
+#[test]
+fn worker_scaling_is_monotone_and_bounded() {
+    let mut rng = SplitMix64::new(0xACE);
+    let model = default_cost_model();
+    for _ in 0..8 {
+        let mut cfg = random_cfg(&mut rng);
+        cfg.workers = 1;
+        let prepared = prepare(&cfg);
+        let plan = prepared.plan(&cfg);
+        let mut last = f64::INFINITY;
+        let one_wp = run_sim(&prepared, &plan, &model, &SimOptions::new(1)).makespan;
+        for wp in [1usize, 2, 4, 8, 32, 1024] {
+            let rep = run_sim(&prepared, &plan, &model, &SimOptions::new(wp));
+            assert!(rep.makespan <= last + 1e-9, "wp={wp}");
+            // never better than the longest unit (critical path >= max dur)
+            assert!(rep.makespan * wp as f64 >= one_wp * 0.999 / wp as f64);
+            last = rep.makespan;
+        }
+    }
+}
+
+#[test]
+fn reuse_never_changes_the_work_multiset_semantics() {
+    // plans with reuse execute a subset of the replica tasks; the plan's
+    // unique-task accounting must agree between planner and simulator
+    // for every algorithm on the same study
+    let mut rng = SplitMix64::new(0x7777);
+    let model = default_cost_model();
+    for _ in 0..10 {
+        let mut cfg = random_cfg(&mut rng);
+        cfg.coarse = true;
+        let prepared = prepare(&cfg);
+        let mut merged_costs = Vec::new();
+        for algo in [
+            FineAlgorithm::None,
+            FineAlgorithm::Naive(5),
+            FineAlgorithm::Rtma(5),
+            FineAlgorithm::Trtma(TrtmaOptions::new(6)),
+        ] {
+            let mut c = cfg.clone();
+            c.algorithm = algo;
+            let plan = prepared.plan(&c);
+            let rep = run_sim(&prepared, &plan, &model, &SimOptions::new(4));
+            assert_eq!(rep.tasks, plan.fine.tasks_merged);
+            merged_costs.push(plan.fine.tasks_merged);
+        }
+        // "None" executes the most tasks; every real algorithm at most that
+        let none_cost = merged_costs[0];
+        for &c in &merged_costs[1..] {
+            assert!(c <= none_cost);
+        }
+    }
+}
+
+#[test]
+fn merged_units_only_in_multi_task_stages() {
+    let mut rng = SplitMix64::new(0x31337);
+    for _ in 0..10 {
+        let cfg = random_cfg(&mut rng);
+        let prepared = prepare(&cfg);
+        let plan = prepared.plan(&cfg);
+        for u in &plan.units {
+            if u.kind == UnitKind::Merged {
+                assert!(u.nodes.len() >= 2);
+                // merged units share their input signature
+                let sig =
+                    prepared.instances[prepared.graph.nodes[u.nodes[0]].rep].input_sig;
+                for &n in &u.nodes {
+                    assert_eq!(
+                        prepared.instances[prepared.graph.nodes[n].rep].input_sig,
+                        sig
+                    );
+                }
+            }
+        }
+    }
+}

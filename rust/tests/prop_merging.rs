@@ -1,0 +1,183 @@
+//! Property-based sweep over the merging algorithms (hand-rolled driver
+//! — proptest is not vendored): random stage populations through every
+//! algorithm, checking the paper's structural invariants.
+
+use rtf_reuse::data::SplitMix64;
+use rtf_reuse::merging::reuse_tree::ReuseTree;
+use rtf_reuse::merging::{
+    naive_merge, reuse_fraction, rtma_merge, sca_merge, trtma_merge, unique_tasks, Bucket,
+    MergeStage, TrtmaOptions,
+};
+
+/// Random family-structured population: `n` stages of `k` tasks whose
+/// prefixes follow a random tree (the shape SA studies produce).
+fn population(rng: &mut SplitMix64, n: usize, k: usize) -> Vec<MergeStage> {
+    let families = rng.uniform_usize(1, (n / 2).max(2)) as u64;
+    (0..n)
+        .map(|i| {
+            let fam = rng.next_u64() % families;
+            let mut path = Vec::with_capacity(k);
+            let mut acc = fam + 1;
+            for level in 0..k {
+                // deeper levels diverge with growing probability
+                let spread = 1 + level as u64 * 3;
+                acc = acc
+                    .wrapping_mul(31)
+                    .wrapping_add(rng.next_u64() % (spread * families));
+                path.push(acc);
+            }
+            MergeStage::new(i, path)
+        })
+        .collect()
+}
+
+fn check_partition(n: usize, buckets: &[Bucket], ctx: &str) {
+    let mut seen = vec![false; n];
+    for b in buckets {
+        assert!(!b.is_empty(), "{ctx}: empty bucket");
+        for &m in &b.members {
+            assert!(m < n, "{ctx}: member out of range");
+            assert!(!seen[m], "{ctx}: stage {m} in two buckets");
+            seen[m] = true;
+        }
+    }
+    assert!(seen.iter().all(|&s| s), "{ctx}: stage not bucketed");
+}
+
+#[test]
+fn all_algorithms_produce_valid_partitions() {
+    let mut rng = SplitMix64::new(0xA11A);
+    for case in 0..60 {
+        let n = rng.uniform_usize(1, 80);
+        let k = rng.uniform_usize(1, 9);
+        let mbs = rng.uniform_usize(1, 12);
+        let stages = population(&mut rng, n, k);
+
+        for (name, buckets) in [
+            ("naive", naive_merge(&stages, mbs)),
+            ("rtma", rtma_merge(&stages, mbs)),
+            ("sca", sca_merge(&stages, mbs)),
+            ("trtma", trtma_merge(&stages, TrtmaOptions::new(mbs))),
+        ] {
+            let ctx = format!("case {case} ({name}, n={n}, k={k}, mbs={mbs})");
+            check_partition(n, &buckets, &ctx);
+            let r = reuse_fraction(&stages, &buckets);
+            assert!((0.0..1.0).contains(&r), "{ctx}: reuse {r}");
+            if name == "naive" || name == "sca" {
+                assert!(buckets.iter().all(|b| b.len() <= mbs), "{ctx}: oversize bucket");
+            }
+        }
+    }
+}
+
+#[test]
+fn merged_task_cost_bounded_by_tree_and_replica() {
+    let mut rng = SplitMix64::new(0xBEE);
+    for _ in 0..40 {
+        let n = rng.uniform_usize(2, 60);
+        let k = rng.uniform_usize(2, 8);
+        let mbs = rng.uniform_usize(2, 10);
+        let stages = population(&mut rng, n, k);
+        let replica: usize = stages.iter().map(|s| s.path.len()).sum();
+        let tree_min = ReuseTree::build(&stages).unique_task_count();
+
+        for buckets in [
+            naive_merge(&stages, mbs),
+            rtma_merge(&stages, mbs),
+            sca_merge(&stages, mbs),
+            trtma_merge(&stages, TrtmaOptions::new(mbs)),
+        ] {
+            let merged: usize =
+                buckets.iter().map(|b| unique_tasks(&stages, &b.members)).sum();
+            assert!(merged <= replica, "merging may never add work");
+            assert!(
+                merged >= tree_min,
+                "no bucketing beats the full reuse tree ({merged} < {tree_min})"
+            );
+        }
+    }
+}
+
+#[test]
+fn trtma_respects_bucket_count_and_never_worse_than_one_bucket_split() {
+    let mut rng = SplitMix64::new(0xC0DE);
+    for _ in 0..30 {
+        let n = rng.uniform_usize(4, 50);
+        let k = rng.uniform_usize(2, 6);
+        let stages = population(&mut rng, n, k);
+        let mb = rng.uniform_usize(1, 8);
+        let buckets = trtma_merge(&stages, TrtmaOptions::new(mb));
+        check_partition(n, &buckets, "trtma");
+        assert!(
+            buckets.len() <= mb.max(1),
+            "trtma exceeded MaxBuckets: {} > {mb}",
+            buckets.len()
+        );
+    }
+}
+
+#[test]
+fn rtma_quality_dominates_naive_on_shuffled_order() {
+    // the naive algorithm is order-dependent; after shuffling, RTMA must
+    // match or beat it in the vast majority of cases (paper §4.2.1)
+    let mut rng = SplitMix64::new(0xD1CE);
+    let mut rtma_wins = 0usize;
+    let cases = 30;
+    for _ in 0..cases {
+        let n = rng.uniform_usize(10, 60);
+        let k = rng.uniform_usize(2, 7);
+        let mbs = rng.uniform_usize(2, 8);
+        let mut stages = population(&mut rng, n, k);
+        // shuffle (Fisher–Yates) and re-id
+        for i in (1..stages.len()).rev() {
+            let j = rng.uniform_usize(0, i + 1);
+            stages.swap(i, j);
+        }
+        for (i, s) in stages.iter_mut().enumerate() {
+            s.id = i;
+        }
+        let r_naive = reuse_fraction(&stages, &naive_merge(&stages, mbs));
+        let r_rtma = reuse_fraction(&stages, &rtma_merge(&stages, mbs));
+        if r_rtma >= r_naive - 1e-12 {
+            rtma_wins += 1;
+        }
+    }
+    assert!(
+        rtma_wins * 10 >= cases * 9,
+        "rtma must dominate shuffled naive in >=90% of cases ({rtma_wins}/{cases})"
+    );
+}
+
+#[test]
+fn duplicate_stages_always_merge_for_free() {
+    // identical paths cost exactly one chain regardless of algorithm
+    // bucketing, as long as duplicates land in one bucket — guaranteed
+    // for rtma/trtma by tree construction
+    let mut rng = SplitMix64::new(0xF00D);
+    for _ in 0..20 {
+        let k = rng.uniform_usize(1, 6);
+        let dup = rng.uniform_usize(2, 6);
+        let path: Vec<u64> = (0..k).map(|_| rng.next_u64()).collect();
+        let stages: Vec<MergeStage> =
+            (0..dup).map(|i| MergeStage::new(i, path.clone())).collect();
+        let buckets = rtma_merge(&stages, dup);
+        check_partition(dup, &buckets, "dups");
+        assert_eq!(buckets.len(), 1);
+        assert_eq!(unique_tasks(&stages, &buckets[0].members), k);
+    }
+}
+
+#[test]
+fn single_task_stages_degenerate_gracefully() {
+    let mut rng = SplitMix64::new(0x51);
+    let stages: Vec<MergeStage> =
+        (0..20).map(|i| MergeStage::new(i, vec![rng.next_u64() % 4])).collect();
+    for buckets in [
+        naive_merge(&stages, 5),
+        rtma_merge(&stages, 5),
+        sca_merge(&stages, 5),
+        trtma_merge(&stages, TrtmaOptions::new(4)),
+    ] {
+        check_partition(20, &buckets, "k=1");
+    }
+}
