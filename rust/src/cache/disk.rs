@@ -1,0 +1,118 @@
+//! The persistent disk tier of the reuse cache.
+//!
+//! Entries are written write-through as one file per key under the
+//! configured directory, so cached states survive process restarts and
+//! are shared between studies run at different times (the cross-study
+//! "persistent" in the cache's name). The format is self-describing and
+//! versioned; unreadable or truncated files are treated as misses, never
+//! as errors — the cache is an accelerator, not a source of truth.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::data::Plane;
+
+/// File magic + format version.
+const MAGIC: &[u8; 4] = b"RTC1";
+
+/// Discriminator for temp-file names (concurrent writers never collide).
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// One 3-plane state as stored on disk.
+pub(crate) fn state_path(dir: &Path, key: u64) -> PathBuf {
+    dir.join(format!("{key:016x}.state"))
+}
+
+/// True when the key has a plausible on-disk entry (no content check).
+pub(crate) fn has_state(dir: &Path, key: u64) -> bool {
+    state_path(dir, key).exists()
+}
+
+/// Write a state for `key`, atomically (temp file + rename). Returns
+/// `Ok(false)` when the key was already present.
+pub(crate) fn store_state(dir: &Path, key: u64, state: &[Plane; 3]) -> std::io::Result<bool> {
+    let path = state_path(dir, key);
+    if path.exists() {
+        return Ok(false);
+    }
+    std::fs::create_dir_all(dir)?;
+    let mut bytes: Vec<u8> = Vec::with_capacity(16 + state[0].nbytes() * 3);
+    bytes.extend_from_slice(MAGIC);
+    bytes.extend_from_slice(&(state[0].height() as u32).to_le_bytes());
+    bytes.extend_from_slice(&(state[0].width() as u32).to_le_bytes());
+    for plane in state {
+        for v in plane.data() {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let tmp = dir.join(format!(
+        ".tmp-{}-{}-{key:016x}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::write(&tmp, &bytes)?;
+    std::fs::rename(&tmp, &path)?;
+    Ok(true)
+}
+
+/// Load the state for `key`, if present and well-formed.
+pub(crate) fn load_state(dir: &Path, key: u64) -> Option<[Plane; 3]> {
+    let bytes = std::fs::read(state_path(dir, key)).ok()?;
+    if bytes.len() < 12 || &bytes[..4] != MAGIC {
+        return None;
+    }
+    let h = u32::from_le_bytes(bytes[4..8].try_into().ok()?) as usize;
+    let w = u32::from_le_bytes(bytes[8..12].try_into().ok()?) as usize;
+    if bytes.len() != 12 + 3 * h * w * 4 {
+        return None;
+    }
+    let mut planes = Vec::with_capacity(3);
+    for p in 0..3 {
+        let start = 12 + p * h * w * 4;
+        let data: Vec<f32> = bytes[start..start + h * w * 4]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        planes.push(Plane::new(data, h, w).ok()?);
+    }
+    let mut it = planes.into_iter();
+    Some([it.next()?, it.next()?, it.next()?])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("rtf-cache-disk-{tag}-{}", std::process::id()))
+    }
+
+    fn state(v: f32) -> [Plane; 3] {
+        [Plane::filled(v, 3, 2), Plane::filled(v + 1.0, 3, 2), Plane::filled(v + 2.0, 3, 2)]
+    }
+
+    #[test]
+    fn roundtrip_and_idempotent_store() {
+        let dir = tmp_dir("rt");
+        let s = state(4.0);
+        assert!(store_state(&dir, 0xabc, &s).unwrap(), "first store is new");
+        assert!(!store_state(&dir, 0xabc, &s).unwrap(), "second store is a no-op");
+        assert!(has_state(&dir, 0xabc));
+        let loaded = load_state(&dir, 0xabc).unwrap();
+        assert_eq!(loaded[0].get(2, 1), 4.0);
+        assert_eq!(loaded[2].get(0, 0), 6.0);
+        assert!(load_state(&dir, 0xdef).is_none(), "absent key misses");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_files_read_as_misses() {
+        let dir = tmp_dir("corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(state_path(&dir, 7), b"RTC1garbage").unwrap();
+        assert!(load_state(&dir, 7).is_none());
+        std::fs::write(state_path(&dir, 8), b"XXXX").unwrap();
+        assert!(load_state(&dir, 8).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

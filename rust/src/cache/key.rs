@@ -1,0 +1,188 @@
+//! Content-addressed cache keys.
+//!
+//! A cached state is identified by the *entire computation that produced
+//! it*: the content fingerprint of the input tile, chained with the
+//! (quantized) signature of every task executed since, in order. Unlike
+//! the within-study signatures of [`crate::workflow::instantiate_study`]
+//! — which root at the tile *id* — these keys root at the tile *content*,
+//! so they are stable across studies, processes and seeds: two studies
+//! computing the same task prefix on the same pixels produce the same
+//! key, whatever their ids say.
+//!
+//! Quantization is the approximate-reuse knob: with step `q > 0`, every
+//! task parameter is snapped to the `q`-grid before hashing, so parameter
+//! vectors that differ by less than the grid resolution share keys (and
+//! therefore states). `q = 0` means exact reuse only.
+//!
+//! Keys are 64-bit FNV-1a chains: compact and fast, but not
+//! collision-resistant — a cross-key collision would silently alias two
+//! distinct computations. At study scale (≤ millions of distinct
+//! prefixes) the birthday bound keeps this negligible; widening to
+//! 128-bit keys before the multi-tenant/serving phase is tracked in
+//! ROADMAP.md.
+
+use std::collections::HashMap;
+
+use crate::data::Plane;
+use crate::merging::CompactGraph;
+use crate::workflow::{sig_hash, str_bits, StageInstance, TaskInstance};
+
+/// Streaming FNV-1a over 64-bit words (byte-compatible with
+/// [`sig_hash`] over the same word sequence).
+pub struct Fnv(u64);
+
+impl Fnv {
+    pub fn new() -> Self {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    pub fn mix(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Snap a parameter value onto the quantization grid (`step = 0` keeps
+/// the value exact).
+pub fn quantize(v: f64, step: f64) -> f64 {
+    if step > 0.0 {
+        (v / step).round() * step
+    } else {
+        v
+    }
+}
+
+/// Cache signature of one task instance: task identity + quantized
+/// parameter values.
+pub fn task_cache_sig(task: &TaskInstance, step: f64) -> u64 {
+    let mut parts = vec![str_bits(&task.name), str_bits(&task.lib_call)];
+    parts.extend(task.params.iter().map(|&v| quantize(v, step).to_bits()));
+    sig_hash(&parts)
+}
+
+/// Extend a chain key by one executed task.
+pub fn chain_key(prev: u64, task_sig: u64) -> u64 {
+    sig_hash(&[prev, task_sig])
+}
+
+/// Content fingerprint of a set of planes (shape + every pixel's bits) —
+/// the key root for tiles and the reference-mask discriminator for
+/// cached metrics.
+pub fn content_fingerprint(planes: &[&Plane]) -> u64 {
+    let mut h = Fnv::new();
+    for p in planes {
+        h.mix(p.height() as u64);
+        h.mix(p.width() as u64);
+        for &v in p.data() {
+            h.mix(v.to_bits() as u64);
+        }
+    }
+    h.finish()
+}
+
+/// Content key of the state a compact node receives as *input*: the tile
+/// fingerprint folded through every task of every upstream stage along
+/// the node's parent chain.
+pub fn node_input_key(
+    graph: &CompactGraph,
+    instances: &[StageInstance],
+    node: usize,
+    tile_fp: u64,
+    step: f64,
+) -> u64 {
+    let mut chain = Vec::new();
+    let mut cur = graph.nodes[node].parent;
+    while let Some(p) = cur {
+        chain.push(p);
+        cur = graph.nodes[p].parent;
+    }
+    let mut key = tile_fp;
+    for &p in chain.iter().rev() {
+        for t in &instances[graph.nodes[p].rep].tasks {
+            key = chain_key(key, task_cache_sig(t, step));
+        }
+    }
+    key
+}
+
+/// Content fingerprints of a study's tiles, keyed by tile id.
+pub fn tile_fingerprints(tiles: &HashMap<u64, crate::data::TileSet>) -> HashMap<u64, u64> {
+    tiles
+        .iter()
+        .map(|(&id, t)| (id, content_fingerprint(&[&t.r, &t.g, &t.b])))
+        .collect()
+}
+
+/// Content fingerprints of a study's reference masks, keyed by tile id.
+pub fn reference_fingerprints(references: &HashMap<u64, Plane>) -> HashMap<u64, u64> {
+    references.iter().map(|(&id, p)| (id, content_fingerprint(&[p]))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(params: &[f64]) -> TaskInstance {
+        let mut parts = vec![str_bits("t2"), str_bits("lib")];
+        parts.extend(params.iter().map(|v| v.to_bits()));
+        TaskInstance {
+            name: "t2".into(),
+            lib_call: "lib".into(),
+            params: params.to_vec(),
+            sig: sig_hash(&parts),
+        }
+    }
+
+    #[test]
+    fn quantization_controls_key_equality() {
+        let a = task(&[40.0, 8.0]);
+        let b = task(&[40.4, 8.0]);
+        let c = task(&[43.0, 8.0]);
+        // exact mode distinguishes everything
+        assert_ne!(task_cache_sig(&a, 0.0), task_cache_sig(&b, 0.0));
+        // step 1.0: 40.4 rounds onto 40.0, 43.0 does not
+        assert_eq!(task_cache_sig(&a, 1.0), task_cache_sig(&b, 1.0));
+        assert_ne!(task_cache_sig(&a, 1.0), task_cache_sig(&c, 1.0));
+        // coarser step merges all three
+        assert_eq!(task_cache_sig(&a, 10.0), task_cache_sig(&c, 10.0));
+    }
+
+    #[test]
+    fn chain_keys_are_order_sensitive() {
+        let x = chain_key(chain_key(7, 1), 2);
+        let y = chain_key(chain_key(7, 2), 1);
+        assert_ne!(x, y);
+        assert_ne!(chain_key(7, 1), chain_key(8, 1));
+    }
+
+    #[test]
+    fn content_fingerprint_sees_pixels_and_shape() {
+        let a = Plane::filled(1.0, 2, 3);
+        let b = Plane::filled(1.0, 3, 2);
+        let mut c = Plane::filled(1.0, 2, 3);
+        c.set(1, 1, 2.0);
+        assert_eq!(content_fingerprint(&[&a]), content_fingerprint(&[&a.clone()]));
+        assert_ne!(content_fingerprint(&[&a]), content_fingerprint(&[&b]));
+        assert_ne!(content_fingerprint(&[&a]), content_fingerprint(&[&c]));
+    }
+
+    #[test]
+    fn streaming_fnv_matches_sig_hash() {
+        let mut h = Fnv::new();
+        h.mix(3);
+        h.mix(9);
+        assert_eq!(h.finish(), sig_hash(&[3, 9]));
+    }
+}

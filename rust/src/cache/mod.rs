@@ -1,0 +1,45 @@
+//! Cross-study persistent reuse cache (content-addressed task
+//! memoization).
+//!
+//! The paper exploits recurrence *within* one planned study: the compact
+//! graph collapses identical stage instances, and per-bucket reuse trees
+//! execute shared task prefixes once (§3). But SA workloads are recurrent
+//! *across* studies too — MOAT screens feed VBD refinements, tuning loops
+//! re-run overlapping designs, and successive SA iterations re-execute
+//! most of their task chains (arXiv:1910.14548 measures the biggest wins
+//! there). This module makes that reuse first-class:
+//!
+//! * [`key`] — content-addressed keys: tile-content fingerprint chained
+//!   through the (optionally quantized) signature of every executed task.
+//!   Keys are stable across studies, seeds and processes.
+//! * [`ReuseCache`] — a sharded, byte-bounded LRU over 3-plane states,
+//!   with an optional write-through disk tier for persistence, plus a
+//!   side map of cached comparison metrics.
+//!
+//! Integration points: [`crate::runtime::PjrtEngine`] consults/populates
+//! the cache at task granularity, [`crate::coordinator`] shares one cache
+//! across worker threads and fingerprints tiles/references,
+//! [`crate::merging::prune_cached`] subtracts already-cached prefixes
+//! from unit costs at planning time, and [`crate::config::CacheSettings`]
+//! exposes the knobs.
+//!
+//! Cost model: a cache-cold run pays for its future reuse — every task
+//! miss materializes the output state host-side for insertion (plus a
+//! synchronous disk write when the persistent tier is on), where
+//! cache-off execution keeps states device-resident along the chain.
+//! The two-study bench reports this cold overhead explicitly; enable the
+//! cache when studies recur, not for strict one-shots. With `quantize`
+//! \> 0 reuse is approximate and first-writer-wins (see
+//! [`crate::config::CacheSettings::quantize`]); `quantize = 0` reuse is
+//! exact and changes no results.
+
+pub mod key;
+
+mod disk;
+mod store;
+
+pub use key::{
+    chain_key, content_fingerprint, node_input_key, quantize, reference_fingerprints,
+    task_cache_sig, tile_fingerprints,
+};
+pub use store::{CacheConfig, CacheStats, CachedState, ReuseCache};

@@ -1,0 +1,442 @@
+//! The sharded, byte-bounded, LRU reuse store.
+//!
+//! One [`ReuseCache`] is shared by every worker thread of a study — and,
+//! crucially, by every *study* that runs while it lives. Lock contention
+//! is kept off the hot path by sharding: keys map to one of N independent
+//! mutex-protected shards, so concurrent workers almost always lock
+//! disjoint shards. Each shard enforces its slice of the byte budget with
+//! LRU eviction; with a disk tier configured, entries are written through
+//! on insert, evictions become cheap drops, and lookups fall back to disk
+//! before declaring a miss.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::data::Plane;
+
+use super::disk;
+
+/// The 3-plane chain state the cache stores (same shape the coordinator's
+/// node store moves between stages).
+pub type CachedState = [Plane; 3];
+
+/// Construction-time knobs (surfaced as `cache-*` study-config options).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheConfig {
+    /// In-memory ceiling over all shards, in bytes.
+    pub capacity_bytes: usize,
+    /// Number of independently locked shards.
+    pub shards: usize,
+    /// Parameter quantization step for key construction (0 = exact).
+    pub quantize: f64,
+    /// Optional persistent tier: write-through on insert, fallback on
+    /// lookup.
+    pub spill_dir: Option<PathBuf>,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        Self {
+            capacity_bytes: 256 * 1024 * 1024,
+            shards: 8,
+            quantize: 0.0,
+            spill_dir: None,
+        }
+    }
+}
+
+/// A point-in-time snapshot of the cache counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// State lookups served from memory.
+    pub hits: u64,
+    /// State lookups served from the disk tier.
+    pub disk_hits: u64,
+    /// State lookups that found nothing.
+    pub misses: u64,
+    /// States newly published (first-time keys; approximate when several
+    /// workers publish the same key simultaneously).
+    pub inserts: u64,
+    /// Entries evicted from memory by the byte bound.
+    pub evictions: u64,
+    /// Entries written to the disk tier.
+    pub spilled: u64,
+    /// Metric lookups served / missed.
+    pub metric_hits: u64,
+    pub metric_misses: u64,
+    /// Current and high-water resident bytes.
+    pub resident_bytes: u64,
+    pub peak_bytes: u64,
+}
+
+impl CacheStats {
+    /// Fraction of state lookups served from any tier.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.disk_hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            (self.hits + self.disk_hits) as f64 / total as f64
+        }
+    }
+
+    /// `TaskTimer`-style counter rows for study reports.
+    pub fn summary(&self) -> Vec<(String, u64)> {
+        vec![
+            ("cache.hits".into(), self.hits),
+            ("cache.disk_hits".into(), self.disk_hits),
+            ("cache.misses".into(), self.misses),
+            ("cache.inserts".into(), self.inserts),
+            ("cache.evictions".into(), self.evictions),
+            ("cache.spilled".into(), self.spilled),
+            ("cache.metric_hits".into(), self.metric_hits),
+            ("cache.metric_misses".into(), self.metric_misses),
+            ("cache.resident_bytes".into(), self.resident_bytes),
+            ("cache.peak_bytes".into(), self.peak_bytes),
+        ]
+    }
+}
+
+struct Entry {
+    state: CachedState,
+    bytes: usize,
+    tick: u64,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<u64, Entry>,
+    bytes: usize,
+}
+
+/// The cross-study, content-addressed reuse cache.
+pub struct ReuseCache {
+    cfg: CacheConfig,
+    shards: Vec<Mutex<Shard>>,
+    metrics: Mutex<HashMap<u64, [f32; 3]>>,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    disk_hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    evictions: AtomicU64,
+    spilled: AtomicU64,
+    metric_hits: AtomicU64,
+    metric_misses: AtomicU64,
+    resident: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl fmt::Debug for ReuseCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ReuseCache")
+            .field("cfg", &self.cfg)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+impl ReuseCache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        let n = cfg.shards.max(1);
+        Self {
+            cfg,
+            shards: (0..n).map(|_| Mutex::new(Shard::default())).collect(),
+            metrics: Mutex::new(HashMap::new()),
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            spilled: AtomicU64::new(0),
+            metric_hits: AtomicU64::new(0),
+            metric_misses: AtomicU64::new(0),
+            resident: AtomicU64::new(0),
+            peak: AtomicU64::new(0),
+        }
+    }
+
+    /// An in-memory cache with the given byte budget and defaults
+    /// elsewhere.
+    pub fn with_capacity(capacity_bytes: usize) -> Self {
+        Self::new(CacheConfig { capacity_bytes, ..CacheConfig::default() })
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    /// The parameter quantization step keys are built with.
+    pub fn quantize_step(&self) -> f64 {
+        self.cfg.quantize
+    }
+
+    fn shard_of(&self, key: u64) -> &Mutex<Shard> {
+        let i = ((key ^ (key >> 32)) as usize) % self.shards.len();
+        &self.shards[i]
+    }
+
+    fn per_shard_budget(&self) -> usize {
+        self.cfg.capacity_bytes / self.shards.len()
+    }
+
+    fn next_tick(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Look up the state for `key`: memory first, then the disk tier.
+    /// A disk hit is promoted back into memory.
+    pub fn get_state(&self, key: u64) -> Option<CachedState> {
+        {
+            let mut s = self.shard_of(key).lock().unwrap();
+            if let Some(e) = s.map.get_mut(&key) {
+                e.tick = self.next_tick();
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Some(e.state.clone());
+            }
+        }
+        if let Some(dir) = &self.cfg.spill_dir {
+            if let Some(state) = disk::load_state(dir, key) {
+                self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                self.insert_resident(key, state.clone());
+                return Some(state);
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Probe without fetching (planning-time check): true when the key is
+    /// resident in memory or present on disk. Does not touch LRU order or
+    /// the hit/miss counters.
+    pub fn contains_state(&self, key: u64) -> bool {
+        if self.shard_of(key).lock().unwrap().map.contains_key(&key) {
+            return true;
+        }
+        match &self.cfg.spill_dir {
+            Some(dir) => disk::has_state(dir, key),
+            None => false,
+        }
+    }
+
+    /// Publish a state under `key`. With a disk tier the entry is written
+    /// through immediately; the in-memory copy is subject to LRU. The
+    /// `inserts` counter tracks newly published keys (approximate under
+    /// concurrent duplicate publication of the same key).
+    pub fn put_state(&self, key: u64, state: CachedState) {
+        let mut new_on_disk = false;
+        if let Some(dir) = &self.cfg.spill_dir {
+            if let Ok(true) = disk::store_state(dir, key, &state) {
+                self.spilled.fetch_add(1, Ordering::Relaxed);
+                new_on_disk = true;
+            }
+        }
+        if self.insert_resident(key, state) || new_on_disk {
+            self.inserts.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Returns true when `key` was newly added to the resident map.
+    fn insert_resident(&self, key: u64, state: CachedState) -> bool {
+        let bytes: usize = state.iter().map(Plane::nbytes).sum();
+        let budget = self.per_shard_budget();
+        if bytes > budget {
+            return false; // larger than a whole shard: disk-only (if configured)
+        }
+        let tick = self.next_tick();
+        let mut s = self.shard_of(key).lock().unwrap();
+        if let Some(e) = s.map.get_mut(&key) {
+            e.tick = tick;
+            return false;
+        }
+        s.map.insert(key, Entry { state, bytes, tick });
+        s.bytes += bytes;
+        let mut freed = 0u64;
+        while s.bytes > budget {
+            // LRU victim: smallest tick. Shard maps stay small enough
+            // (budget / state size) that a scan beats maintaining an
+            // ordered index under the lock.
+            let victim = s
+                .map
+                .iter()
+                .filter(|(&k, _)| k != key)
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(&k, _)| k);
+            match victim {
+                Some(v) => {
+                    if let Some(e) = s.map.remove(&v) {
+                        s.bytes -= e.bytes;
+                        freed += e.bytes as u64;
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                None => break,
+            }
+        }
+        let grown = bytes as u64;
+        let now = self.resident.fetch_add(grown, Ordering::Relaxed) + grown;
+        self.resident.fetch_sub(freed, Ordering::Relaxed);
+        self.peak.fetch_max(now.saturating_sub(freed), Ordering::Relaxed);
+        true
+    }
+
+    /// Look up cached comparison metrics.
+    pub fn get_metrics(&self, key: u64) -> Option<[f32; 3]> {
+        let m = self.metrics.lock().unwrap();
+        match m.get(&key) {
+            Some(v) => {
+                self.metric_hits.fetch_add(1, Ordering::Relaxed);
+                Some(*v)
+            }
+            None => {
+                self.metric_misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Publish comparison metrics (tiny; memory-only, unbounded).
+    pub fn put_metrics(&self, key: u64, metrics: [f32; 3]) {
+        self.metrics.lock().unwrap().insert(key, metrics);
+    }
+
+    /// True when the metrics map holds `key` (planning-time probe).
+    pub fn contains_metrics(&self, key: u64) -> bool {
+        self.metrics.lock().unwrap().contains_key(&key)
+    }
+
+    /// Number of states resident in memory.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes currently resident in memory.
+    pub fn resident_bytes(&self) -> usize {
+        self.resident.load(Ordering::Relaxed) as usize
+    }
+
+    /// Snapshot every counter.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            spilled: self.spilled.load(Ordering::Relaxed),
+            metric_hits: self.metric_hits.load(Ordering::Relaxed),
+            metric_misses: self.metric_misses.load(Ordering::Relaxed),
+            resident_bytes: self.resident.load(Ordering::Relaxed),
+            peak_bytes: self.peak.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(v: f32, side: usize) -> CachedState {
+        [
+            Plane::filled(v, side, side),
+            Plane::filled(v, side, side),
+            Plane::filled(v, side, side),
+        ]
+    }
+
+    /// Bytes of one `state(v, 4)`: 3 planes x 16 px x 4 B.
+    const S4: usize = 3 * 16 * 4;
+
+    #[test]
+    fn put_get_roundtrip_and_counters() {
+        let c = ReuseCache::with_capacity(1 << 20);
+        assert!(c.get_state(1).is_none());
+        c.put_state(1, state(5.0, 4));
+        let got = c.get_state(1).expect("hit");
+        assert_eq!(got[0].get(0, 0), 5.0);
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses, st.inserts), (1, 1, 1));
+        assert_eq!(st.resident_bytes as usize, S4);
+        assert!(c.contains_state(1));
+        assert!(!c.contains_state(2));
+    }
+
+    #[test]
+    fn lru_evicts_oldest_at_the_byte_bound() {
+        // one shard, room for exactly 2 states
+        let c = ReuseCache::new(CacheConfig {
+            capacity_bytes: 2 * S4,
+            shards: 1,
+            ..CacheConfig::default()
+        });
+        c.put_state(1, state(1.0, 4));
+        c.put_state(2, state(2.0, 4));
+        let _ = c.get_state(1); // 1 is now more recent than 2
+        c.put_state(3, state(3.0, 4));
+        assert!(c.resident_bytes() <= 2 * S4, "bound holds: {}", c.resident_bytes());
+        assert!(c.get_state(2).is_none(), "LRU victim was 2");
+        assert!(c.get_state(1).is_some());
+        assert!(c.get_state(3).is_some());
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn oversized_states_bypass_memory() {
+        let c = ReuseCache::new(CacheConfig {
+            capacity_bytes: S4 / 2,
+            shards: 1,
+            ..CacheConfig::default()
+        });
+        c.put_state(9, state(1.0, 4));
+        assert_eq!(c.len(), 0, "state larger than the shard budget stays out");
+        assert!(c.get_state(9).is_none());
+    }
+
+    #[test]
+    fn metrics_roundtrip() {
+        let c = ReuseCache::with_capacity(1024);
+        assert!(c.get_metrics(5).is_none());
+        c.put_metrics(5, [0.9, 0.8, 0.01]);
+        assert_eq!(c.get_metrics(5), Some([0.9, 0.8, 0.01]));
+        assert!(c.contains_metrics(5));
+        let st = c.stats();
+        assert_eq!((st.metric_hits, st.metric_misses), (1, 1));
+    }
+
+    #[test]
+    fn disk_tier_serves_after_eviction() {
+        let dir = std::env::temp_dir().join(format!("rtf-cache-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = ReuseCache::new(CacheConfig {
+            capacity_bytes: S4, // memory holds one state
+            shards: 1,
+            spill_dir: Some(dir.clone()),
+            ..CacheConfig::default()
+        });
+        c.put_state(1, state(1.0, 4));
+        c.put_state(2, state(2.0, 4)); // evicts 1 from memory
+        let back = c.get_state(1).expect("served from disk");
+        assert_eq!(back[1].get(3, 3), 1.0);
+        let st = c.stats();
+        assert!(st.disk_hits >= 1, "stats: {st:?}");
+        assert!(st.spilled >= 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stats_summary_is_labeled() {
+        let c = ReuseCache::with_capacity(1024);
+        c.put_state(1, state(1.0, 2));
+        let rows = c.stats().summary();
+        assert!(rows.iter().any(|(k, v)| k == "cache.inserts" && *v == 1));
+        assert_eq!(rows.len(), 10);
+    }
+}

@@ -73,6 +73,34 @@ pub enum EngineMode {
     Sim,
 }
 
+/// Cross-study reuse-cache knobs (see [`crate::cache`]). Disabled by
+/// default: the cache changes no results, but callers must opt into the
+/// memory/disk footprint.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheSettings {
+    /// Master switch.
+    pub enabled: bool,
+    /// In-memory LRU budget in MiB.
+    pub capacity_mb: usize,
+    /// Parameter quantization step for cache keys. 0 (the default) means
+    /// exact-match reuse: the cache never changes any result. Larger
+    /// values trade accuracy for cross-study hit rate — parameter
+    /// vectors within the same grid cell share states, and which vector
+    /// seeds a cell is first-writer-wins, so quantized results can vary
+    /// with scheduling order across runs.
+    pub quantize: f64,
+    /// Lock shards (concurrency of the shared cache).
+    pub shards: usize,
+    /// Persistent tier directory (write-through; survives processes).
+    pub spill_dir: Option<String>,
+}
+
+impl Default for CacheSettings {
+    fn default() -> Self {
+        Self { enabled: false, capacity_mb: 256, quantize: 0.0, shards: 8, spill_dir: None }
+    }
+}
+
 /// The full study configuration.
 #[derive(Clone, Debug)]
 pub struct StudyConfig {
@@ -92,12 +120,17 @@ pub struct StudyConfig {
     /// Tiles per study (each evaluation runs on every tile).
     pub tiles: usize,
     pub seed: u64,
-    /// Artifact directory for PJRT mode.
+    /// Artifact directory for PJRT mode. The default is the crate's
+    /// `artifacts/` directory resolved at *compile time* (so examples,
+    /// benches and CI work from any cwd); a relocated release binary
+    /// must pass `artifacts=<dir>` explicitly.
     pub artifacts_dir: String,
     /// Optional workflow descriptor file (paper §3.1); defaults to the
     /// built-in paper workflow. Custom workflows simulate with default
     /// task costs; PJRT execution requires matching artifacts.
     pub workflow_file: Option<String>,
+    /// Cross-study reuse cache configuration.
+    pub cache: CacheSettings,
 }
 
 impl Default for StudyConfig {
@@ -112,8 +145,9 @@ impl Default for StudyConfig {
             cores: 1,
             tiles: 1,
             seed: 42,
-            artifacts_dir: "artifacts".into(),
+            artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
             workflow_file: None,
+            cache: CacheSettings::default(),
         }
     }
 }
@@ -123,7 +157,9 @@ impl StudyConfig {
     /// `method` (moat|vbd), `r`, `n`, `k-active`, `sampler`
     /// (qmc|mc|lhs), `algo` (none|naive|sca|rtma|trtma), `mbs`,
     /// `max-buckets`, `coarse` (on|off), `engine` (pjrt|sim),
-    /// `workers`, `tiles`, `seed`, `artifacts`.
+    /// `workers`, `tiles`, `seed`, `artifacts`, plus the reuse-cache
+    /// knobs `cache` (on|off), `cache-mb`, `cache-quant`,
+    /// `cache-shards`, `cache-dir`.
     pub fn from_args(args: &[String]) -> Result<Self> {
         let mut cfg = StudyConfig::default();
         let mut algo_name = String::from("rtma");
@@ -140,6 +176,9 @@ impl StudyConfig {
                 .ok_or_else(|| Error::Config(format!("expected key=value, got `{a}`")))?;
             let uint = |v: &str| -> Result<usize> {
                 v.parse().map_err(|_| Error::Config(format!("`{key}` needs an integer, got `{v}`")))
+            };
+            let float = |v: &str| -> Result<f64> {
+                v.parse().map_err(|_| Error::Config(format!("`{key}` needs a number, got `{v}`")))
             };
             match key {
                 "method" => method = value.to_string(),
@@ -166,6 +205,11 @@ impl StudyConfig {
                 "seed" => cfg.seed = uint(value)? as u64,
                 "artifacts" => cfg.artifacts_dir = value.to_string(),
                 "workflow" => cfg.workflow_file = Some(value.to_string()),
+                "cache" => cfg.cache.enabled = value == "on" || value == "true",
+                "cache-mb" => cfg.cache.capacity_mb = uint(value)?,
+                "cache-quant" => cfg.cache.quantize = float(value)?.max(0.0),
+                "cache-shards" => cfg.cache.shards = uint(value)?.max(1),
+                "cache-dir" => cfg.cache.spill_dir = Some(value.to_string()),
                 other => return Err(Error::Config(format!("unknown option `{other}`"))),
             }
         }
@@ -181,8 +225,18 @@ impl StudyConfig {
 
     /// Human-readable one-liner for logs and reports.
     pub fn describe(&self) -> String {
+        let cache = if self.cache.enabled {
+            format!(
+                " cache=on({}MiB,q={}{})",
+                self.cache.capacity_mb,
+                self.cache.quantize,
+                if self.cache.spill_dir.is_some() { ",disk" } else { "" }
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "{} sampler={} algo={} coarse={} engine={:?} workers={} tiles={} seed={}",
+            "{} sampler={} algo={} coarse={} engine={:?} workers={} tiles={} seed={}{cache}",
             match self.method {
                 SaMethod::Moat { r } => format!("moat(r={r})"),
                 SaMethod::Vbd { n, k_active } => format!("vbd(n={n},k={k_active})"),
@@ -272,6 +326,28 @@ mod tests {
             parse_algorithm("trtma", 5, 0).unwrap(),
             FineAlgorithm::Trtma(o) if o.max_buckets == 5
         ));
+    }
+
+    #[test]
+    fn cache_defaults_off_and_parses() {
+        let c = StudyConfig::default();
+        assert!(!c.cache.enabled);
+        let c = StudyConfig::from_args(&args(&[
+            "cache=on",
+            "cache-mb=64",
+            "cache-quant=0.5",
+            "cache-shards=4",
+            "cache-dir=/tmp/rtf-cache",
+        ]))
+        .unwrap();
+        assert!(c.cache.enabled);
+        assert_eq!(c.cache.capacity_mb, 64);
+        assert_eq!(c.cache.quantize, 0.5);
+        assert_eq!(c.cache.shards, 4);
+        assert_eq!(c.cache.spill_dir.as_deref(), Some("/tmp/rtf-cache"));
+        assert!(c.describe().contains("cache=on"));
+        assert!(StudyConfig::from_args(&args(&["cache-quant=abc"])).is_err());
+        assert!(StudyConfig::from_args(&args(&["cache-mb=x"])).is_err());
     }
 
     #[test]

@@ -3,16 +3,18 @@
 
 use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::path::PathBuf;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::cache::{chain_key, node_input_key, reference_fingerprints, tile_fingerprints};
+use crate::cache::{CacheStats, ReuseCache};
 use crate::data::{Plane, TileSet};
 use crate::merging::{CompactGraph, StudyPlan};
-use crate::runtime::{PjrtEngine, TaskTimer};
+use crate::runtime::{ArtifactManifest, PjrtEngine, TaskTimer};
 use crate::workflow::StageInstance;
 use crate::{Error, Result};
 
-use super::exec::{execute_unit, UnitOutput};
+use super::exec::{execute_unit, UnitCacheCtx, UnitOutput};
 use super::store::{NodeStore, State};
 
 /// Cluster shape and artifact location.
@@ -24,6 +26,9 @@ pub struct ExecuteOptions {
     /// temp directory (the RTF's hierarchical storage layer). `None` =
     /// unbounded.
     pub state_limit_bytes: Option<usize>,
+    /// Cross-study reuse cache, shared by every worker engine (and, when
+    /// the caller holds it across studies, by successive executions).
+    pub cache: Option<Arc<ReuseCache>>,
 }
 
 impl ExecuteOptions {
@@ -32,12 +37,19 @@ impl ExecuteOptions {
             workers: workers.max(1),
             artifacts_dir: artifacts_dir.into(),
             state_limit_bytes: None,
+            cache: None,
         }
     }
 
     /// Bound resident inter-unit state, spilling the excess to disk.
     pub fn with_state_limit(mut self, bytes: usize) -> Self {
         self.state_limit_bytes = Some(bytes);
+        self
+    }
+
+    /// Share a cross-study reuse cache with the worker engines.
+    pub fn with_cache(mut self, cache: Arc<ReuseCache>) -> Self {
+        self.cache = Some(cache);
         self
     }
 }
@@ -57,6 +69,10 @@ pub struct StudyOutcome {
     /// High-water mark of inter-unit state bytes (memory pressure of the
     /// merge plan — the paper's MaxBucketSize motivation).
     pub peak_state_bytes: usize,
+    /// Reuse-cache counters at the end of the execution (when a cache
+    /// was attached). Counters accumulate over the cache's lifetime, so
+    /// diff successive snapshots for per-study numbers.
+    pub cache: Option<CacheStats>,
 }
 
 /// Scheduler state shared between the manager and the workers. Ready
@@ -135,12 +151,28 @@ pub fn execute_study(
     let metrics_map: Mutex<HashMap<usize, [f32; 3]>> = Mutex::new(HashMap::new());
     let timers: Mutex<Vec<(String, f64, u64)>> = Mutex::new(Vec::new());
 
+    // content fingerprints root the cross-study cache keys at the actual
+    // pixels (tile ids are study-local and must not leak into keys),
+    // folded with the artifact fingerprint so states computed by
+    // different kernel versions never alias
+    let fps = match &opts.cache {
+        Some(_) => {
+            let art = ArtifactManifest::load(&opts.artifacts_dir)?.fingerprint();
+            let mut tile_fps = tile_fingerprints(tiles);
+            for fp in tile_fps.values_mut() {
+                *fp = chain_key(art, *fp);
+            }
+            Some((tile_fps, reference_fingerprints(references)))
+        }
+        None => None,
+    };
+
     std::thread::scope(|scope| {
         for _ in 0..opts.workers {
             scope.spawn(|| {
                 worker_loop(
                     opts, plan, graph, instances, tiles, references, &sched, &cv, &store,
-                    &metrics_map, &timers, &consumers,
+                    &metrics_map, &timers, &consumers, fps.as_ref(),
                 );
             });
         }
@@ -180,6 +212,7 @@ pub fn execute_study(
         wall: start.elapsed(),
         timer,
         peak_state_bytes: store.peak_bytes(),
+        cache: opts.cache.as_ref().map(|c| c.stats()),
     })
 }
 
@@ -197,6 +230,7 @@ fn worker_loop(
     metrics_map: &Mutex<HashMap<usize, [f32; 3]>>,
     timers: &Mutex<Vec<(String, f64, u64)>>,
     consumers: &[usize],
+    fps: Option<&(HashMap<u64, u64>, HashMap<u64, u64>)>,
 ) {
     let fail = |msg: String| {
         let mut s = sched.lock().unwrap();
@@ -210,6 +244,10 @@ fn worker_loop(
         Ok(e) => e,
         Err(e) => return fail(format!("worker engine load failed: {e}")),
     };
+    if let Some(cache) = &opts.cache {
+        engine.set_cache(cache.clone());
+    }
+    let quantize = opts.cache.as_ref().map(|c| c.quantize_step()).unwrap_or(0.0);
 
     loop {
         // demand-driven: request the next ready unit
@@ -245,7 +283,17 @@ fn worker_loop(
         };
 
         let reference = references.get(&rep.tile);
-        match execute_unit(&mut engine, unit, graph, instances, input, reference) {
+        let cache_ctx = fps.map(|(tile_fps, ref_fps)| UnitCacheCtx {
+            base_key: node_input_key(
+                graph,
+                instances,
+                unit.nodes[0],
+                tile_fps.get(&rep.tile).copied().unwrap_or(0),
+                quantize,
+            ),
+            ref_fp: ref_fps.get(&rep.tile).copied().unwrap_or(0),
+        });
+        match execute_unit(&mut engine, unit, graph, instances, input, reference, cache_ctx) {
             Ok(UnitOutput::States(states)) => {
                 for (node, state) in states {
                     store.put(node, state, consumers[node]);

@@ -1,6 +1,13 @@
 //! Execution of one schedule unit on one worker engine: the bucket's
 //! reuse tree runs depth-first so shared task prefixes execute once.
+//!
+//! With a cross-study cache attached to the engine, every tree task node
+//! carries a content-addressed chain key (unit input key folded through
+//! the quantized task signatures along the path); task nodes whose key
+//! hits the cache short-circuit — their subtree continues from the cached
+//! state without touching PJRT — and misses publish what they compute.
 
+use crate::cache::{chain_key, task_cache_sig};
 use crate::data::Plane;
 use crate::merging::reuse_tree::ReuseTree;
 use crate::merging::{CompactGraph, MergeStage, ScheduleUnit};
@@ -17,8 +24,27 @@ pub enum UnitOutput {
     Metrics(Vec<(usize, [f32; 3])>),
 }
 
+/// Cache context for one unit: the content key of the unit's input state
+/// and the fingerprint of the tile's reference mask (for metric keys).
+#[derive(Clone, Copy, Debug)]
+pub struct UnitCacheCtx {
+    pub base_key: u64,
+    pub ref_fp: u64,
+}
+
+/// Everything the depth-first walk needs besides the engine and the
+/// per-node state.
+struct DfsCtx<'a> {
+    tree: &'a ReuseTree,
+    unit: &'a ScheduleUnit,
+    graph: &'a CompactGraph,
+    instances: &'a [StageInstance],
+    quantize: f64,
+}
+
 /// Execute `unit` given its input state. For the comparison stage a
-/// reference mask must be supplied.
+/// reference mask must be supplied. `cache_ctx` enables cross-study
+/// memoization (requires a cache attached to the engine).
 pub fn execute_unit(
     engine: &mut PjrtEngine,
     unit: &ScheduleUnit,
@@ -26,15 +52,25 @@ pub fn execute_unit(
     instances: &[StageInstance],
     input: State,
     reference: Option<&Plane>,
+    cache_ctx: Option<UnitCacheCtx>,
 ) -> Result<UnitOutput> {
     let rep = &instances[graph.nodes[unit.nodes[0]].rep];
+    let quantize = engine.cache().map(|c| c.quantize_step()).unwrap_or(0.0);
+    let keyed = engine.cache().is_some();
     let compare = rep.tasks.len() == 1 && rep.tasks[0].name == engine.manifest().compare_task;
     if compare {
         let reference = reference.ok_or_else(|| {
             Error::Coordinator(format!("unit {} (comparison) needs a reference mask", unit.id))
         })?;
+        let key = match cache_ctx {
+            Some(ctx) if keyed => Some(chain_key(
+                chain_key(ctx.base_key, task_cache_sig(&rep.tasks[0], quantize)),
+                ctx.ref_fp,
+            )),
+            _ => None,
+        };
         // all nodes of the unit share the input: one PJRT execution
-        let m = engine.execute_compare(&input, reference)?;
+        let (m, _hit) = engine.execute_compare_keyed(key, &input, reference)?;
         return Ok(UnitOutput::Metrics(unit.nodes.iter().map(|&n| (n, m)).collect()));
     }
 
@@ -50,7 +86,12 @@ pub fn execute_unit(
     // state stays literal-resident along the chain; planes materialize
     // only at the leaves (unit boundaries) — EXPERIMENTS.md §Perf
     let lit_input = engine.lit_state(&input)?;
-    dfs(engine, &tree, tree.root, lit_input, unit, graph, instances, &mut out)?;
+    let base_key = match cache_ctx {
+        Some(ctx) if keyed => Some(ctx.base_key),
+        _ => None,
+    };
+    let cx = DfsCtx { tree: &tree, unit, graph, instances, quantize };
+    dfs(engine, &cx, tree.root, lit_input, base_key, &mut out)?;
     if out.len() != unit.nodes.len() {
         return Err(Error::Coordinator(format!(
             "unit {} produced {} states for {} nodes",
@@ -62,35 +103,37 @@ pub fn execute_unit(
     Ok(UnitOutput::States(out))
 }
 
-/// Depth-first execution: every tree task node runs once; states are
-/// cloned only at fan-out points (a node with c children clones c−1
-/// times), which is the minimum for by-value branching.
-#[allow(clippy::too_many_arguments)]
+/// Depth-first execution: every tree task node runs once (or is served by
+/// the cache); states are cloned only at fan-out points (a node with c
+/// children clones c−1 times), which is the minimum for by-value
+/// branching.
+///
+/// The planning-time probe `merging/study.rs::count_cached` mirrors this
+/// walk (same tree, same level→task resolution, same key chaining) —
+/// keep the two in sync.
 fn dfs(
     engine: &mut PjrtEngine,
-    tree: &ReuseTree,
+    cx: &DfsCtx,
     node: usize,
     state: [xla::Literal; 3],
-    unit: &ScheduleUnit,
-    graph: &CompactGraph,
-    instances: &[StageInstance],
+    key: Option<u64>,
     out: &mut Vec<(usize, State)>,
 ) -> Result<()> {
-    let children = &tree.nodes[node].children;
-    for (i, &c) in children.iter().enumerate() {
-        let last = i + 1 == children.len();
-        if let Some(member) = tree.nodes[c].stage {
+    for &c in &cx.tree.nodes[node].children {
+        if let Some(member) = cx.tree.nodes[c].stage {
             // leaf: materialize this member's final state as planes
-            out.push((unit.nodes[member], engine.plane_state(&state)?));
+            out.push((cx.unit.nodes[member], engine.plane_state(&state)?));
             continue;
         }
-        let level = tree.nodes[c].level; // 1-based task level
-        let member = first_member(tree, c);
-        let task = &instances[graph.nodes[unit.nodes[member]].rep].tasks[level - 1];
+        let level = cx.tree.nodes[c].level; // 1-based task level
+        let member = first_member(cx.tree, c);
+        let node_id = cx.unit.nodes[member];
+        let task = &cx.instances[cx.graph.nodes[node_id].rep].tasks[level - 1];
         let params: Vec<f32> = task.params.iter().map(|&v| v as f32).collect();
-        let next = engine.execute_task_lit(&task.name, &state, &params)?;
-        dfs(engine, tree, c, next, unit, graph, instances, out)?;
-        let _ = last;
+        let child_key = key.map(|k| chain_key(k, task_cache_sig(task, cx.quantize)));
+        let (next, _hit) =
+            engine.execute_task_lit_keyed(&task.name, child_key, &state, &params)?;
+        dfs(engine, cx, c, next, child_key, out)?;
     }
     Ok(())
 }

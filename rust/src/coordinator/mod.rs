@@ -21,5 +21,5 @@ mod exec;
 mod store;
 
 pub use cluster::{execute_study, ExecuteOptions, StudyOutcome};
-pub use exec::{execute_unit, UnitOutput};
+pub use exec::{execute_unit, UnitCacheCtx, UnitOutput};
 pub use store::NodeStore;

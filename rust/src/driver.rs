@@ -4,12 +4,15 @@
 //! chosen engine.
 
 use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::analysis::{moat_effects, screen_top_k, MoatIndices};
+use crate::cache::{chain_key, reference_fingerprints, tile_fingerprints, CacheConfig, ReuseCache};
 use crate::config::{SaMethod, StudyConfig};
 use crate::coordinator::{execute_study, ExecuteOptions, StudyOutcome};
 use crate::data::{synth_tile, Plane, SynthConfig, TileSet};
-use crate::merging::{plan_study_weighted, CompactGraph, FineAlgorithm, StudyPlan};
+use crate::merging::{plan_study_weighted, prune_cached, CompactGraph, FineAlgorithm, StudyPlan};
 use crate::runtime::PjrtEngine;
 use crate::sampling::{default_space, MoatSample, ParamSpace, VbdSample};
 use crate::sampling::{MoatDesign, VbdDesign};
@@ -130,7 +133,10 @@ pub fn y_per_set(y: &[f64], n_sets: usize, tiles: usize) -> Vec<f64> {
 /// Deterministic synthetic tiles for a study (tile ids `0..cfg.tiles`).
 pub fn make_tiles(cfg: &StudyConfig, height: usize, width: usize) -> HashMap<u64, TileSet> {
     (0..cfg.tiles as u64)
-        .map(|id| (id, synth_tile(&SynthConfig::new(height, width, cfg.seed ^ (id << 17) ^ 0x7469))))
+        .map(|id| {
+            let seed = cfg.seed ^ (id << 17) ^ 0x7469;
+            (id, synth_tile(&SynthConfig::new(height, width, seed)))
+        })
         .collect()
 }
 
@@ -159,27 +165,138 @@ pub fn reference_masks(
     Ok(refs)
 }
 
-/// Run a prepared study for real on PJRT workers.
+/// Build the cross-study reuse cache a config asks for (`None` when the
+/// cache is disabled). Hold the returned `Arc` across studies — that is
+/// what makes the reuse *cross*-study.
+pub fn build_cache(cfg: &StudyConfig) -> Option<Arc<ReuseCache>> {
+    if !cfg.cache.enabled {
+        return None;
+    }
+    Some(Arc::new(ReuseCache::new(CacheConfig {
+        capacity_bytes: cfg.cache.capacity_mb * 1024 * 1024,
+        shards: cfg.cache.shards,
+        quantize: cfg.cache.quantize,
+        spill_dir: cfg.cache.spill_dir.as_ref().map(PathBuf::from),
+    })))
+}
+
+/// The fixed per-study runtime inputs: synthetic tiles, reference masks,
+/// and the artifact identity the cache keys root at. Build once with
+/// [`make_inputs`] and share between a planning probe and one or more
+/// executions over the same tiles — it costs an engine load plus a full
+/// reference-chain run per tile, which callers should not pay twice.
+pub struct StudyInputs {
+    pub tiles: HashMap<u64, TileSet>,
+    pub references: HashMap<u64, Plane>,
+    pub compare_task: String,
+    art_fp: u64,
+}
+
+/// Build the runtime inputs for a prepared study (tiles, reference
+/// masks, artifact fingerprint).
+pub fn make_inputs(cfg: &StudyConfig, prepared: &PreparedStudy) -> Result<StudyInputs> {
+    let mut engine = PjrtEngine::load(&cfg.artifacts_dir)?;
+    let (h, w) = engine.tile_shape();
+    let tiles = make_tiles(cfg, h, w);
+    let references = reference_masks(&mut engine, &prepared.space, &prepared.workflow, &tiles)?;
+    Ok(StudyInputs {
+        tiles,
+        references,
+        compare_task: engine.manifest().compare_task.clone(),
+        art_fp: engine.manifest().fingerprint(),
+    })
+}
+
+/// Tile content fingerprints folded with the artifact fingerprint — the
+/// exact cache-key roots `execute_study` derives internally.
+fn keyed_tile_fps(inputs: &StudyInputs) -> HashMap<u64, u64> {
+    let mut fps = tile_fingerprints(&inputs.tiles);
+    for fp in fps.values_mut() {
+        *fp = chain_key(inputs.art_fp, *fp);
+    }
+    fps
+}
+
+/// Run a prepared study for real on PJRT workers. When the config enables
+/// the reuse cache, a fresh cache is built for this run (its disk tier,
+/// if configured, still persists across runs); to share one in-memory
+/// cache across studies use [`run_pjrt_with_cache`].
 pub fn run_pjrt(
     cfg: &StudyConfig,
     prepared: &PreparedStudy,
     plan: &StudyPlan,
 ) -> Result<StudyOutcome> {
-    let mut engine = PjrtEngine::load(&cfg.artifacts_dir)?;
-    let (h, w) = engine.tile_shape();
-    let tiles = make_tiles(cfg, h, w);
-    let references = reference_masks(&mut engine, &prepared.space, &prepared.workflow, &tiles)?;
-    drop(engine);
-    let opts = ExecuteOptions::new(cfg.workers, &cfg.artifacts_dir);
+    run_pjrt_with_cache(cfg, prepared, plan, build_cache(cfg))
+}
+
+/// [`run_pjrt`] with an explicit (usually study-surviving) reuse cache.
+pub fn run_pjrt_with_cache(
+    cfg: &StudyConfig,
+    prepared: &PreparedStudy,
+    plan: &StudyPlan,
+    cache: Option<Arc<ReuseCache>>,
+) -> Result<StudyOutcome> {
+    let inputs = make_inputs(cfg, prepared)?;
+    run_pjrt_with_inputs(cfg, prepared, plan, cache, &inputs)
+}
+
+/// [`run_pjrt_with_cache`] over pre-built [`StudyInputs`] (the
+/// probe-then-run flow builds inputs once and passes them to both).
+/// `inputs` must come from the same artifacts dir and tile config.
+pub fn run_pjrt_with_inputs(
+    cfg: &StudyConfig,
+    prepared: &PreparedStudy,
+    plan: &StudyPlan,
+    cache: Option<Arc<ReuseCache>>,
+    inputs: &StudyInputs,
+) -> Result<StudyOutcome> {
+    let mut opts = ExecuteOptions::new(cfg.workers, &cfg.artifacts_dir);
+    if let Some(cache) = cache {
+        opts = opts.with_cache(cache);
+    }
     execute_study(
         &opts,
         plan,
         &prepared.graph,
         &prepared.instances,
-        &tiles,
-        &references,
+        &inputs.tiles,
+        &inputs.references,
         prepared.n_evals(),
     )
+}
+
+/// Cache-aware planning pass over a prepared study: probes `cache` for
+/// every planned task and subtracts predicted hits from the unit costs
+/// (see [`crate::merging::prune_cached`]). Returns the number of tasks
+/// predicted to be served by the cache.
+pub fn prune_plan_with_inputs(
+    prepared: &PreparedStudy,
+    plan: &mut StudyPlan,
+    cache: &ReuseCache,
+    inputs: &StudyInputs,
+) -> usize {
+    prune_cached(
+        plan,
+        &prepared.graph,
+        &prepared.instances,
+        cache,
+        &keyed_tile_fps(inputs),
+        &reference_fingerprints(&inputs.references),
+        &inputs.compare_task,
+    )
+}
+
+/// [`prune_plan_with_inputs`] building its own inputs (pays the engine
+/// load + reference chain; prefer sharing [`StudyInputs`] with the
+/// execution when both run).
+pub fn prune_plan_with_cache(
+    cfg: &StudyConfig,
+    prepared: &PreparedStudy,
+    plan: &mut StudyPlan,
+    cache: &ReuseCache,
+) -> Result<usize> {
+    let inputs = make_inputs(cfg, prepared)?;
+    Ok(prune_plan_with_inputs(prepared, plan, cache, &inputs))
 }
 
 /// Run a prepared study through the discrete-event simulator.
@@ -254,7 +371,8 @@ mod tests {
         let cfg = cfg_moat(4);
         let p = prepare(&cfg);
         let plan = p.plan(&cfg);
-        let r = run_sim(&p, &plan, &default_cost_model(), &crate::simulate::SimOptions::new(cfg.workers).with_cores(16));
+        let opts = crate::simulate::SimOptions::new(cfg.workers).with_cores(16);
+        let r = run_sim(&p, &plan, &default_cost_model(), &opts);
         assert!(r.makespan > 0.0);
         assert_eq!(r.tasks, plan.tasks_to_execute());
     }

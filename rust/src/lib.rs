@@ -16,6 +16,9 @@
 //! * [`merging`] — the paper's contribution: stage-level compact-graph
 //!   merging (Alg. 1) and the fine-grain Naïve / SCA / RTMA / TRTMA
 //!   task-level merging algorithms (Sec. 3.3).
+//! * [`cache`] — the cross-study persistent reuse cache: content-
+//!   addressed task memoization (tile fingerprint × quantized task-path
+//!   prefix), sharded in-memory LRU with an optional disk tier.
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas task
 //!   artifacts (`artifacts/*.hlo.txt`); python never runs at request time.
 //! * [`coordinator`] — demand-driven manager/worker execution of merged
@@ -32,6 +35,7 @@
 
 pub mod analysis;
 pub mod benchx;
+pub mod cache;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -11,7 +11,6 @@
 //! * `gen-tiles`          — describe the synthetic tiles of a study
 //! * `inspect-artifacts`  — show the AOT artifact manifest
 
-
 use rtf_reuse::analysis::sobol_indices;
 use rtf_reuse::benchx::{fmt_secs, Table};
 use rtf_reuse::config::{EngineMode, SaMethod, StudyConfig};
@@ -71,7 +70,8 @@ fn print_help() {
            method=moat|vbd  r=10  n=200  k-active=8  sampler=qmc|mc|lhs\n\
            algo=none|naive|sca|rtma|trtma  mbs=7  max-buckets=N\n\
            coarse=on|off  engine=pjrt|sim  workers=2  tiles=1  seed=42\n\
-           artifacts=artifacts"
+           artifacts=DIR (default: the crate's artifacts/ dir)\n\
+           cache=on|off  cache-mb=256  cache-quant=0  cache-shards=8  cache-dir=DIR"
     );
 }
 
@@ -100,6 +100,19 @@ fn cmd_run_sa(args: &[String]) -> Result<()> {
         fmt_secs(outcome.wall.as_secs_f64()),
         outcome.peak_state_bytes / 1024
     );
+    if let Some(stats) = &outcome.cache {
+        println!(
+            "cache: {} state hits ({} from disk), {} misses, {} metric hits, \
+             {:.1}% hit rate, resident {} KiB (peak {} KiB)",
+            stats.hits + stats.disk_hits,
+            stats.disk_hits,
+            stats.misses,
+            stats.metric_hits,
+            stats.hit_rate() * 100.0,
+            stats.resident_bytes / 1024,
+            stats.peak_bytes / 1024
+        );
+    }
 
     match &prepared.sample {
         SampleInfo::Moat(_) => {
@@ -339,4 +352,3 @@ fn load_cost_model() -> CostModel {
         .and_then(|j| CostModel::from_json(&j).ok())
         .unwrap_or_else(default_cost_model)
 }
-

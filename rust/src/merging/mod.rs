@@ -27,9 +27,15 @@ pub mod mincut;
 pub mod reuse_tree;
 
 pub use naive::naive_merge;
-pub use plan::{assert_partition, reuse_fraction, stats_for, unique_tasks, weighted_tasks, Bucket, MergeStage, PlanStats};
+pub use plan::{
+    assert_partition, reuse_fraction, stats_for, unique_tasks, weighted_tasks, Bucket,
+    MergeStage, PlanStats,
+};
 pub use rtma::rtma_merge;
 pub use sca::sca_merge;
 pub use stage::{CompactGraph, CompactNode};
-pub use study::{plan_study, plan_study_weighted, FineAlgorithm, ScheduleUnit, StudyPlan, UnitKind};
+pub use study::{
+    plan_study, plan_study_weighted, prune_cached, FineAlgorithm, ScheduleUnit, StudyPlan,
+    UnitKind,
+};
 pub use trtma::{trtma_merge, trtma_merge_weighted, TrtmaOptions};

@@ -30,9 +30,9 @@ pub fn rtma_merge(stages: &[MergeStage], max_bucket_size: usize) -> Vec<Bucket> 
         // parents of still-attached leaves, excluding the root (bucketed
         // leaves are detached: parent == None)
         let mut leaf_parents: Vec<usize> = Vec::new();
-        for id in 0..t.nodes.len() {
-            if t.nodes[id].is_leaf() {
-                let Some(p) = t.nodes[id].parent else { continue };
+        for node in &t.nodes {
+            if node.is_leaf() {
+                let Some(p) = node.parent else { continue };
                 if p != root && !leaf_parents.contains(&p) {
                     leaf_parents.push(p);
                 }

@@ -12,9 +12,11 @@
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
+use crate::cache::{chain_key, node_input_key, task_cache_sig, ReuseCache};
 use crate::workflow::StageInstance;
 
 use super::plan::{unique_tasks, Bucket, MergeStage, PlanStats};
+use super::reuse_tree::ReuseTree;
 use super::stage::CompactGraph;
 use super::{naive_merge, rtma_merge, sca_merge, trtma_merge, trtma_merge_weighted, TrtmaOptions};
 
@@ -109,6 +111,9 @@ pub struct StudyPlan {
     /// Wall time spent inside the fine-grain merging algorithm — the
     /// overhead plotted on top of the bars in Figs 19/20.
     pub merge_time: Duration,
+    /// Tasks [`prune_cached`] predicts the cross-study cache will serve
+    /// (0 until a cache-aware planning pass runs).
+    pub cached_tasks: usize,
 }
 
 impl StudyPlan {
@@ -205,7 +210,7 @@ pub fn plan_study_weighted(
             .collect();
         tasks_replica += stages.iter().map(|s| s.path.len()).sum::<usize>();
 
-        let buckets = if group.len() >= 2 && stages[0].path.len() >= 1 {
+        let buckets = if group.len() >= 2 && !stages[0].path.is_empty() {
             // per-level cost estimates for this group's stage type
             let rep = &instances[graph.nodes[group[0]].rep];
             let level_costs: Vec<f64> = rep
@@ -242,8 +247,8 @@ pub fn plan_study_weighted(
     }
 
     // dependencies: a unit depends on the units owning its nodes' parents
-    for i in 0..units.len() {
-        let mut deps: Vec<usize> = units[i]
+    for u in units.iter_mut() {
+        let mut deps: Vec<usize> = u
             .nodes
             .iter()
             .filter_map(|&n| graph.nodes[n].parent)
@@ -251,7 +256,7 @@ pub fn plan_study_weighted(
             .collect();
         deps.sort_unstable();
         deps.dedup();
-        units[i].deps = deps;
+        u.deps = deps;
     }
 
     StudyPlan {
@@ -265,6 +270,101 @@ pub fn plan_study_weighted(
         units,
         node_unit,
         merge_time,
+        cached_tasks: 0,
+    }
+}
+
+/// Cache-aware planning pass: probe the cross-study cache for every task
+/// the plan would execute and subtract the hits from each unit's
+/// `task_cost`, so (a) the LPT dispatch order reflects the work that will
+/// *actually* run and (b) callers can report predicted cross-study reuse
+/// before spending any engine time. `tile_fps` keys tile ids to content
+/// fingerprints ([`crate::cache::tile_fingerprints`]); comparison units
+/// additionally need `ref_fps` (reference-mask fingerprints) and
+/// `compare_task` to recognize the metric-cached stage.
+///
+/// Returns the number of tasks predicted cached (also recorded in
+/// [`StudyPlan::cached_tasks`]). The probe mirrors execution exactly:
+/// every reuse-tree task node whose chain key is present in the cache is
+/// one skipped execution.
+pub fn prune_cached(
+    plan: &mut StudyPlan,
+    graph: &CompactGraph,
+    instances: &[StageInstance],
+    cache: &ReuseCache,
+    tile_fps: &HashMap<u64, u64>,
+    ref_fps: &HashMap<u64, u64>,
+    compare_task: &str,
+) -> usize {
+    let step = cache.quantize_step();
+    let mut pruned_total = 0usize;
+    for u in plan.units.iter_mut() {
+        let rep = &instances[graph.nodes[u.nodes[0]].rep];
+        let tile_fp = tile_fps.get(&rep.tile).copied().unwrap_or(0);
+        let base = node_input_key(graph, instances, u.nodes[0], tile_fp, step);
+        let pruned = if rep.tasks.len() == 1 && rep.tasks[0].name == compare_task {
+            let ref_fp = ref_fps.get(&rep.tile).copied().unwrap_or(0);
+            let key = chain_key(chain_key(base, task_cache_sig(&rep.tasks[0], step)), ref_fp);
+            usize::from(cache.contains_metrics(key))
+        } else {
+            let stages: Vec<MergeStage> = u
+                .nodes
+                .iter()
+                .enumerate()
+                .map(|(i, &n)| MergeStage::new(i, instances[graph.nodes[n].rep].task_path()))
+                .collect();
+            let tree = ReuseTree::build(&stages);
+            count_cached(&tree, tree.root, base, u, graph, instances, cache, step)
+        };
+        u.task_cost = u.task_cost.saturating_sub(pruned);
+        pruned_total += pruned;
+    }
+    plan.cached_tasks = pruned_total;
+    pruned_total
+}
+
+/// Walk a unit's reuse tree exactly as the executor does, counting task
+/// nodes whose content chain key is already cached.
+///
+/// KEEP IN SYNC with `coordinator/exec.rs::dfs`: tree construction,
+/// level→task resolution and key chaining must match the executor
+/// step-for-step or predicted reuse silently drifts from measured.
+#[allow(clippy::too_many_arguments)]
+fn count_cached(
+    tree: &ReuseTree,
+    node: usize,
+    key: u64,
+    unit: &ScheduleUnit,
+    graph: &CompactGraph,
+    instances: &[StageInstance],
+    cache: &ReuseCache,
+    step: f64,
+) -> usize {
+    let mut count = 0;
+    for &c in &tree.nodes[node].children {
+        if tree.nodes[c].stage.is_some() {
+            continue; // leaves carry no work
+        }
+        let level = tree.nodes[c].level;
+        let member = first_leaf_member(tree, c);
+        let task = &instances[graph.nodes[unit.nodes[member]].rep].tasks[level - 1];
+        let child_key = chain_key(key, task_cache_sig(task, step));
+        if cache.contains_state(child_key) {
+            count += 1;
+        }
+        count += count_cached(tree, c, child_key, unit, graph, instances, cache, step);
+    }
+    count
+}
+
+/// Any member (stage index into the unit) whose leaf lies under `node`.
+fn first_leaf_member(tree: &ReuseTree, node: usize) -> usize {
+    let mut v = node;
+    loop {
+        if let Some(s) = tree.nodes[v].stage {
+            return s;
+        }
+        v = tree.nodes[v].children[0];
     }
 }
 

@@ -1,8 +1,10 @@
 //! The PJRT engine: compile once, execute many.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::cache::ReuseCache;
 use crate::data::Plane;
 use crate::{Error, Result};
 
@@ -58,6 +60,9 @@ pub struct PjrtEngine {
     _client: xla::PjRtClient,
     execs: HashMap<String, xla::PjRtLoadedExecutable>,
     timer: TaskTimer,
+    /// Cross-study reuse cache, shared between worker engines. When set,
+    /// the keyed execution paths consult/populate it at task granularity.
+    cache: Option<Arc<ReuseCache>>,
 }
 
 impl PjrtEngine {
@@ -78,7 +83,18 @@ impl PjrtEngine {
             let exe = client.compile(&comp)?;
             execs.insert(t.name.clone(), exe);
         }
-        Ok(Self { manifest, _client: client, execs, timer: TaskTimer::default() })
+        Ok(Self { manifest, _client: client, execs, timer: TaskTimer::default(), cache: None })
+    }
+
+    /// Attach a (shared) cross-study reuse cache; keyed executions will
+    /// consult it before running and publish what they compute.
+    pub fn set_cache(&mut self, cache: Arc<ReuseCache>) {
+        self.cache = Some(cache);
+    }
+
+    /// The attached reuse cache, if any.
+    pub fn cache(&self) -> Option<&Arc<ReuseCache>> {
+        self.cache.as_ref()
     }
 
     pub fn manifest(&self) -> &ArtifactManifest {
@@ -162,6 +178,54 @@ impl PjrtEngine {
             .map_err(|_| Error::Xla(format!("task `{name}` did not return 3 outputs")))?;
         self.timer.record(name, start.elapsed());
         Ok(out)
+    }
+
+    /// Cache-aware chain-task execution: when a cache is attached and a
+    /// content key is supplied, a cached state short-circuits the PJRT
+    /// execution entirely (recorded as a zero-cost `<task>#cached` timer
+    /// row so study summaries report reuse per task); a miss executes and
+    /// publishes the result. Returns the output state and whether it was
+    /// served from the cache.
+    pub fn execute_task_lit_keyed(
+        &mut self,
+        name: &str,
+        key: Option<u64>,
+        state: &[xla::Literal; 3],
+        params: &[f32],
+    ) -> Result<([xla::Literal; 3], bool)> {
+        if let (Some(cache), Some(k)) = (self.cache.clone(), key) {
+            if let Some(planes) = cache.get_state(k) {
+                let lits = self.lit_state(&planes)?;
+                self.timer.record(&format!("{name}#cached"), Duration::ZERO);
+                return Ok((lits, true));
+            }
+            let out = self.execute_task_lit(name, state, params)?;
+            let planes = self.plane_state(&out)?;
+            cache.put_state(k, planes);
+            return Ok((out, false));
+        }
+        Ok((self.execute_task_lit(name, state, params)?, false))
+    }
+
+    /// Cache-aware comparison execution (metrics are memoized under the
+    /// full chain key folded with the reference-mask fingerprint).
+    pub fn execute_compare_keyed(
+        &mut self,
+        key: Option<u64>,
+        state: &[Plane; 3],
+        reference: &Plane,
+    ) -> Result<([f32; 3], bool)> {
+        if let (Some(cache), Some(k)) = (self.cache.clone(), key) {
+            if let Some(m) = cache.get_metrics(k) {
+                let name = self.manifest.compare_task.clone();
+                self.timer.record(&format!("{name}#cached"), Duration::ZERO);
+                return Ok((m, true));
+            }
+            let m = self.execute_compare(state, reference)?;
+            cache.put_metrics(k, m);
+            return Ok((m, false));
+        }
+        Ok((self.execute_compare(state, reference)?, false))
     }
 
     /// Execute a chain task (`norm`, `t1`..`t7`): 3 planes + padded param

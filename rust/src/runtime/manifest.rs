@@ -4,6 +4,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::jsonx::Json;
+use crate::workflow::{sig_hash, str_bits};
 use crate::{Error, Result};
 
 /// One task artifact entry.
@@ -107,6 +108,29 @@ impl ArtifactManifest {
             return Err(Error::Artifact("degenerate manifest dimensions".into()));
         }
         Ok(())
+    }
+
+    /// Stable fingerprint of the artifact set: tile shape, parameter
+    /// capacity, and every task's identity + content hash. The
+    /// cross-study cache folds this into its key roots so states
+    /// computed by different kernels/artifacts never alias — regenerated
+    /// artifacts (new `sha256_16` tags) invalidate old cache entries by
+    /// construction.
+    pub fn fingerprint(&self) -> u64 {
+        let mut parts = vec![
+            self.height as u64,
+            self.width as u64,
+            self.n_params as u64,
+            self.depth_levels as u64,
+        ];
+        for t in &self.tasks {
+            parts.push(str_bits(&t.name));
+            parts.push(str_bits(&t.file));
+            parts.push(str_bits(&t.sha256_16));
+            parts.push(t.image_inputs as u64);
+            parts.push(t.outputs as u64);
+        }
+        sig_hash(&parts)
     }
 
     /// Find a task entry by name.

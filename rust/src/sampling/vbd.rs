@@ -80,8 +80,7 @@ impl VbdDesign {
         let mut sets = Vec::with_capacity(self.n * (k + 2));
         sets.extend(a_rows.iter().cloned());
         sets.extend(b_rows.iter().cloned());
-        for (ai, &p) in active.iter().enumerate() {
-            let _ = ai;
+        for &p in active.iter() {
             for j in 0..self.n {
                 let mut s = a_rows[j].clone();
                 s[p] = b_rows[j][p];

@@ -198,7 +198,8 @@ pub fn simulate_plan(
         .collect();
     // idle workers (ids) and the completion event queue
     let mut idle: Vec<usize> = (0..opts.workers).collect();
-    let mut events: BinaryHeap<Reverse<(u64, usize, usize)>> = BinaryHeap::new(); // (finish_ns, unit, worker)
+    // event tuples are (finish_ns, unit, worker)
+    let mut events: BinaryHeap<Reverse<(u64, usize, usize)>> = BinaryHeap::new();
 
     let mut worker_busy = vec![0.0f64; opts.workers];
     let mut now = 0.0f64;

@@ -25,7 +25,8 @@ pub fn sig_hash(parts: &[u64]) -> u64 {
     h
 }
 
-fn str_bits(s: &str) -> u64 {
+/// FNV signature of a string (shared with the cross-study cache keys).
+pub fn str_bits(s: &str) -> u64 {
     sig_hash(&s.bytes().map(|b| b as u64).collect::<Vec<_>>())
 }
 

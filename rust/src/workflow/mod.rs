@@ -15,5 +15,5 @@ mod spec;
 
 pub use codegen::{generate_stage_code, generate_workflow_code};
 pub use descriptor::{parse_stage_descriptor, parse_workflow_file};
-pub use instance::{instantiate_study, sig_hash, Evaluation, StageInstance, TaskInstance};
+pub use instance::{instantiate_study, sig_hash, str_bits, Evaluation, StageInstance, TaskInstance};
 pub use spec::{paper_workflow, StageSpec, TaskSpec, WorkflowSpec};

@@ -110,7 +110,10 @@ pub fn paper_workflow() -> WorkflowSpec {
     WorkflowSpec::new(
         "microscopy-segmentation",
         vec![
-            StageSpec::new("normalization", vec![TaskSpec::new("norm", "nscale::normalize", vec![])]),
+            StageSpec::new(
+                "normalization",
+                vec![TaskSpec::new("norm", "nscale::normalize", vec![])],
+            ),
             StageSpec::new(
                 "segmentation",
                 vec![

@@ -1,0 +1,225 @@
+//! Cross-study reuse-cache integration: correctness under quantization,
+//! byte-bounded LRU behavior, concurrent access from scoped workers,
+//! disk-tier persistence, and the two-study end-to-end guarantee — the
+//! warm study executes fewer tasks yet produces identical results.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use rtf_reuse::cache::{CacheConfig, ReuseCache};
+use rtf_reuse::config::{SaMethod, StudyConfig};
+use rtf_reuse::data::Plane;
+use rtf_reuse::driver::{prepare, prune_plan_with_cache, run_pjrt_with_cache};
+use rtf_reuse::merging::FineAlgorithm;
+
+fn state(v: f32) -> [Plane; 3] {
+    [Plane::filled(v, 8, 8), Plane::filled(v, 8, 8), Plane::filled(v, 8, 8)]
+}
+
+/// Bytes of one `state(v)`: 3 planes x 64 px x 4 B.
+const SB: usize = 3 * 64 * 4;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("rtf-cache-it-{tag}-{}", std::process::id()))
+}
+
+fn base_cfg() -> StudyConfig {
+    StudyConfig {
+        method: SaMethod::Moat { r: 1 }, // 16 evaluations
+        algorithm: FineAlgorithm::Rtma(7),
+        workers: 2,
+        ..StudyConfig::default()
+    }
+}
+
+fn executed_tasks(outcome: &rtf_reuse::coordinator::StudyOutcome) -> u64 {
+    outcome
+        .timer
+        .summary()
+        .iter()
+        .filter(|(name, _, _)| !name.ends_with("#cached"))
+        .map(|(_, _, n)| n)
+        .sum()
+}
+
+fn cached_tasks(outcome: &rtf_reuse::coordinator::StudyOutcome) -> u64 {
+    outcome
+        .timer
+        .summary()
+        .iter()
+        .filter(|(name, _, _)| name.ends_with("#cached"))
+        .map(|(_, _, n)| n)
+        .sum()
+}
+
+#[test]
+fn lru_eviction_holds_the_byte_bound() {
+    let c = ReuseCache::new(CacheConfig {
+        capacity_bytes: 4 * SB,
+        shards: 1,
+        ..CacheConfig::default()
+    });
+    for k in 0..16u64 {
+        c.put_state(k, state(k as f32));
+        assert!(
+            c.resident_bytes() <= 4 * SB,
+            "bound violated at insert {k}: {}",
+            c.resident_bytes()
+        );
+    }
+    let st = c.stats();
+    assert_eq!(st.inserts, 16);
+    assert_eq!(st.evictions, 12, "4 resident, 12 evicted");
+    // the most recent entries survive, the oldest do not
+    assert!(c.get_state(15).is_some());
+    assert!(c.get_state(0).is_none());
+}
+
+#[test]
+fn concurrent_scoped_workers_share_one_cache() {
+    let cache = Arc::new(ReuseCache::new(CacheConfig {
+        capacity_bytes: 1 << 20,
+        shards: 4,
+        ..CacheConfig::default()
+    }));
+    let workers = 8usize;
+    let per = 32u64;
+    std::thread::scope(|scope| {
+        for w in 0..workers as u64 {
+            let cache = &cache;
+            scope.spawn(move || {
+                for i in 0..per {
+                    // half the keys are shared across all workers, half private
+                    let shared = i % 2 == 0;
+                    let key = if shared { i } else { ((w + 1) << 32) | i };
+                    if cache.get_state(key).is_none() {
+                        cache.put_state(key, state(key as f32));
+                    }
+                    let got = cache.get_state(key).expect("just inserted or present");
+                    assert_eq!(got[0].get(0, 0), key as f32, "no cross-key corruption");
+                }
+            });
+        }
+    });
+    let st = cache.stats();
+    let lookups = st.hits + st.disk_hits + st.misses;
+    assert_eq!(lookups, workers as u64 * per * 2, "every lookup is counted");
+    assert!(st.hits > 0 && st.misses > 0);
+}
+
+#[test]
+fn disk_tier_persists_across_cache_instances() {
+    let dir = tmp_dir("persist");
+    let _ = std::fs::remove_dir_all(&dir);
+    {
+        let c = ReuseCache::new(CacheConfig {
+            capacity_bytes: 1 << 20,
+            spill_dir: Some(dir.clone()),
+            ..CacheConfig::default()
+        });
+        c.put_state(0xfeed, state(7.5));
+    } // first "process" ends
+    let c2 = ReuseCache::new(CacheConfig {
+        capacity_bytes: 1 << 20,
+        spill_dir: Some(dir.clone()),
+        ..CacheConfig::default()
+    });
+    assert!(c2.contains_state(0xfeed), "persistent tier visible to a fresh cache");
+    let got = c2.get_state(0xfeed).expect("served from disk");
+    assert_eq!(got[2].get(7, 7), 7.5);
+    assert_eq!(c2.stats().disk_hits, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn quantized_studies_share_cache_entries() {
+    // two studies over the same tile whose parameters differ by less than
+    // the quantization step must produce key collisions (approximate
+    // reuse); with exact keys they must not.
+    use rtf_reuse::cache::task_cache_sig;
+    use rtf_reuse::workflow::{instantiate_study, paper_workflow, Evaluation};
+
+    let wf = paper_workflow();
+    let space = rtf_reuse::sampling::default_space();
+    let mut p2 = space.defaults();
+    p2[5] += 0.4; // G1 nudged off-grid by less than half a grid step
+    let evals = vec![
+        Evaluation { id: 0, tile: 0, params: space.defaults() },
+        Evaluation { id: 1, tile: 0, params: p2 },
+    ];
+    let insts = instantiate_study(&wf, &evals);
+    // t2 consumes G1: instances 1 and 4 are the segmentation stages
+    let a = &insts[1].tasks[1];
+    let b = &insts[4].tasks[1];
+    assert_ne!(task_cache_sig(a, 0.0), task_cache_sig(b, 0.0), "exact keys differ");
+    assert_eq!(task_cache_sig(a, 5.0), task_cache_sig(b, 5.0), "quantized keys match");
+}
+
+#[test]
+fn two_study_end_to_end_executes_fewer_tasks_with_identical_results() {
+    let cfg = base_cfg();
+    let prepared = prepare(&cfg);
+    let plan = prepared.plan(&cfg);
+
+    // ground truth without any cache
+    let baseline = run_pjrt_with_cache(&cfg, &prepared, &plan, None).unwrap();
+
+    let cache = Arc::new(ReuseCache::with_capacity(512 * 1024 * 1024));
+    let first = run_pjrt_with_cache(&cfg, &prepared, &plan, Some(cache.clone())).unwrap();
+    for (a, b) in baseline.y.iter().zip(&first.y) {
+        assert!((a - b).abs() < 1e-9, "cold cached run must match baseline");
+    }
+    // the cold run may already reuse across buckets of one merge group
+    // (different buckets share task prefixes the planner split apart), so
+    // it executes at most the planned tasks
+    let exec1 = executed_tasks(&first);
+    assert!(exec1 as usize <= plan.tasks_to_execute(), "cold run never exceeds the plan");
+    assert!(exec1 > 0);
+
+    // second study: identical design, warm cache
+    let prepared2 = prepare(&cfg);
+    let mut plan2 = prepared2.plan(&cfg);
+    let predicted = prune_plan_with_cache(&cfg, &prepared2, &mut plan2, &cache).unwrap();
+    assert!(predicted > 0, "planning must see the warm cache");
+    assert_eq!(plan2.cached_tasks, predicted);
+    assert!(
+        plan2.tasks_to_execute() < plan.tasks_to_execute(),
+        "pruned plan predicts less work"
+    );
+
+    let second = run_pjrt_with_cache(&cfg, &prepared2, &plan2, Some(cache.clone())).unwrap();
+    for (a, b) in baseline.y.iter().zip(&second.y) {
+        assert!((a - b).abs() < 1e-9, "warm run must match baseline: {a} vs {b}");
+    }
+    let exec2 = executed_tasks(&second);
+    assert!(
+        exec2 < exec1,
+        "warm study must execute fewer tasks ({exec2} vs {exec1})"
+    );
+    assert!(cached_tasks(&second) > 0, "per-task #cached rows are reported");
+    let stats = second.cache.expect("stats present");
+    assert!(stats.hits + stats.disk_hits > 0);
+    assert!(stats.metric_hits > 0, "comparison metrics are memoized too");
+}
+
+#[test]
+fn cache_survives_worker_count_changes() {
+    // the cache is keyed by content, not by scheduling: a warm cache must
+    // serve a study executed with a different worker count unchanged
+    let cfg = base_cfg();
+    let prepared = prepare(&cfg);
+    let plan = prepared.plan(&cfg);
+    let cache = Arc::new(ReuseCache::with_capacity(512 * 1024 * 1024));
+    let y1 = run_pjrt_with_cache(&cfg, &prepared, &plan, Some(cache.clone())).unwrap().y;
+
+    let mut cfg4 = base_cfg();
+    cfg4.workers = 4;
+    let prepared4 = prepare(&cfg4);
+    let plan4 = prepared4.plan(&cfg4);
+    let out4 = run_pjrt_with_cache(&cfg4, &prepared4, &plan4, Some(cache.clone())).unwrap();
+    assert_eq!(y1.len(), out4.y.len());
+    for (a, b) in y1.iter().zip(&out4.y) {
+        assert!((a - b).abs() < 1e-9);
+    }
+    assert!(executed_tasks(&out4) < plan4.tasks_to_execute() as u64);
+}

@@ -1,0 +1,394 @@
+//! Native CPU fallback for the `xla` PJRT binding.
+//!
+//! This crate exposes the exact API surface of the published `xla` crate
+//! (v0.1.6) that `rtf-reuse` uses — `PjRtClient`, `PjRtLoadedExecutable`,
+//! `Literal`, `HloModuleProto`, `XlaComputation` — but executes the nine
+//! workflow tasks with a pure-Rust interpreter ([`kernels`]) instead of
+//! libxla. The build environment carries no XLA shared libraries, and the
+//! AOT artifacts' HLO text is only used to identify *which* task an
+//! artifact encodes (module name, or an explicit `rtf-native-task:`
+//! marker in stub artifacts).
+//!
+//! **Substitution contract.** On hosts with the real toolchain, point the
+//! `xla` dependency of `rtf-reuse` back at the published crate and
+//! regenerate real artifacts with `python -m compile.aot`; no call site
+//! changes. The fallback preserves the properties the experiments rely
+//! on: deterministic outputs, identical results for identical inputs,
+//! and per-task execution cost that scales with tile area.
+
+pub mod kernels;
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+use kernels::{Grid, TaskOutput};
+
+/// Errors surfaced by the backend (the published crate's `xla::Error`
+/// analog; a single message-carrying variant suffices here).
+#[derive(Clone, Debug)]
+pub enum Error {
+    Msg(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Msg(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Crate-local result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err(msg: impl Into<String>) -> Error {
+    Error::Msg(msg.into())
+}
+
+// ---------------------------------------------------------------------------
+// literals
+// ---------------------------------------------------------------------------
+
+/// Element types a [`Literal`] can yield through [`Literal::to_vec`].
+/// Only `f32` is needed by the workflow artifacts.
+pub trait NativeType: Sized {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Repr {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    Tuple(Vec<Literal>),
+}
+
+/// A host-resident array (or tuple of arrays) — the unit of transfer
+/// between the coordinator and the backend.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    repr: Repr,
+}
+
+impl Literal {
+    /// A rank-1 f32 literal.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { repr: Repr::F32 { data: data.to_vec(), dims: vec![data.len()] } }
+    }
+
+    /// A tuple literal.
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { repr: Repr::Tuple(elements) }
+    }
+
+    /// Reinterpret the element buffer under new dimensions.
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal> {
+        match self.repr {
+            Repr::F32 { data, .. } => {
+                let want: usize = dims.iter().map(|&d| d.max(0) as usize).product();
+                if want != data.len() {
+                    return Err(err(format!(
+                        "cannot reshape {} elements to {dims:?}",
+                        data.len()
+                    )));
+                }
+                let dims = dims.iter().map(|&d| d.max(0) as usize).collect();
+                Ok(Literal { repr: Repr::F32 { data, dims } })
+            }
+            Repr::Tuple(_) => Err(err("cannot reshape a tuple literal")),
+        }
+    }
+
+    /// Copy the elements out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match &self.repr {
+            Repr::F32 { data, .. } => Ok(data.iter().map(|&v| T::from_f32(v)).collect()),
+            Repr::Tuple(_) => Err(err("to_vec on a tuple literal")),
+        }
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.repr {
+            Repr::Tuple(elements) => Ok(elements),
+            Repr::F32 { .. } => Err(err("to_tuple on an array literal")),
+        }
+    }
+
+    /// Unwrap a 1-tuple.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        let mut elements = self.to_tuple()?;
+        if elements.len() != 1 {
+            return Err(err(format!("to_tuple1 on a {}-tuple", elements.len())));
+        }
+        Ok(elements.pop().expect("len checked"))
+    }
+
+    /// Array dimensions (empty for tuples).
+    pub fn dims(&self) -> &[usize] {
+        match &self.repr {
+            Repr::F32 { dims, .. } => dims,
+            Repr::Tuple(_) => &[],
+        }
+    }
+
+    fn as_grid(&self) -> Result<Grid> {
+        match &self.repr {
+            Repr::F32 { data, dims } if dims.len() == 2 => {
+                Ok(Grid::new(data.clone(), dims[0], dims[1]))
+            }
+            _ => Err(err("expected a rank-2 f32 literal")),
+        }
+    }
+
+    fn from_grid(g: Grid) -> Literal {
+        Literal { repr: Repr::F32 { dims: vec![g.h, g.w], data: g.data } }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLO artifacts
+// ---------------------------------------------------------------------------
+
+/// A parsed HLO module. The native backend only needs the task identity,
+/// recovered from an `rtf-native-task:` marker (stub artifacts) or the
+/// `HloModule` name (real jax-lowered artifacts, e.g. `jit_t4`).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    task: String,
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err(format!("cannot read {}: {e}", path.display())))?;
+        let task = task_name_from_hlo(&text).ok_or_else(|| {
+            err(format!("no task identity found in HLO text {}", path.display()))
+        })?;
+        Ok(Self { task })
+    }
+
+    /// The task this module encodes.
+    pub fn name(&self) -> &str {
+        &self.task
+    }
+}
+
+fn task_name_from_hlo(text: &str) -> Option<String> {
+    for line in text.lines() {
+        if let Some(rest) = line.split("rtf-native-task:").nth(1) {
+            let name: String =
+                rest.trim().chars().take_while(|c| c.is_alphanumeric()).collect();
+            if !name.is_empty() {
+                return Some(name);
+            }
+        }
+    }
+    for line in text.lines() {
+        if let Some(rest) = line.trim_start().strip_prefix("HloModule ") {
+            let token = rest.split([',', ' ']).next().unwrap_or("");
+            let mut name = token;
+            for prefix in ["jit_", "xla_computation_", "task_"] {
+                name = name.strip_prefix(prefix).unwrap_or(name);
+            }
+            // jax may append a uniquifier, e.g. `t4.1`
+            let name = name.split('.').next().unwrap_or(name);
+            if !name.is_empty() {
+                return Some(name.to_string());
+            }
+        }
+    }
+    None
+}
+
+/// A computation ready for compilation (wraps the parsed module).
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    task: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { task: proto.task.clone() }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// client / executable / buffers
+// ---------------------------------------------------------------------------
+
+/// The (stateless) CPU client.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU client.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    /// "Compile" a computation: validate the task is known to the native
+    /// interpreter and return an executable bound to it.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        if !kernels::known_task(&comp.task) {
+            return Err(err(format!(
+                "native backend cannot execute task `{}`",
+                comp.task
+            )));
+        }
+        Ok(PjRtLoadedExecutable { task: comp.task.clone() })
+    }
+}
+
+/// A device-resident output buffer (host-resident here).
+#[derive(Clone, Debug)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    /// Transfer the buffer to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// A compiled executable for one workflow task.
+#[derive(Clone, Debug)]
+pub struct PjRtLoadedExecutable {
+    task: String,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute the task. Inputs are the task's image planes (rank-2
+    /// literals, in order) followed by the padded parameter vector
+    /// (rank-1). Returns one result buffer holding the output tuple, in
+    /// the `Vec<Vec<..>>` (replica × output) shape of the PJRT API.
+    pub fn execute<L: Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let mut planes: Vec<Grid> = Vec::new();
+        let mut params: Vec<f32> = Vec::new();
+        for a in args {
+            let lit = a.borrow();
+            match lit.dims().len() {
+                2 => planes.push(lit.as_grid()?),
+                1 => params = lit.to_vec::<f32>()?,
+                r => return Err(err(format!("unsupported input rank {r}"))),
+            }
+        }
+        if let Some(first) = planes.first() {
+            let (h, w) = (first.h, first.w);
+            if planes.iter().any(|p| p.h != h || p.w != w) {
+                return Err(err("input planes disagree on shape"));
+            }
+        }
+        let out = kernels::run_task(&self.task, &planes, &params).map_err(Error::Msg)?;
+        let tuple = match out {
+            TaskOutput::Planes([a, b, c]) => Literal::tuple(vec![
+                Literal::from_grid(a),
+                Literal::from_grid(b),
+                Literal::from_grid(c),
+            ]),
+            TaskOutput::Metrics(m) => Literal::tuple(vec![Literal::vec1(&m)]),
+        };
+        Ok(vec![vec![PjRtBuffer { literal: tuple }]])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plane_lit(v: f32, h: usize, w: usize) -> Literal {
+        Literal::vec1(&vec![v; h * w]).reshape(&[h as i64, w as i64]).unwrap()
+    }
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims(), &[4]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(Literal::vec1(&[1.0]).reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn tuple_accessors() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1.0]), Literal::vec1(&[2.0])]);
+        let parts = t.clone().to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(t.to_tuple1().is_err());
+        let one = Literal::tuple(vec![Literal::vec1(&[7.0])]);
+        assert_eq!(one.to_tuple1().unwrap().to_vec::<f32>().unwrap(), vec![7.0]);
+    }
+
+    #[test]
+    fn hlo_task_identity_from_marker_and_module_name() {
+        let dir = std::env::temp_dir().join(format!("xla-native-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let stub = dir.join("stub.hlo.txt");
+        std::fs::write(&stub, "HloModule jit_t4\n// rtf-native-task: t4\n").unwrap();
+        assert_eq!(HloModuleProto::from_text_file(&stub).unwrap().name(), "t4");
+        let real = dir.join("real.hlo.txt");
+        std::fs::write(&real, "HloModule jit_norm.2, entry_computation_layout=...\n").unwrap();
+        assert_eq!(HloModuleProto::from_text_file(&real).unwrap().name(), "norm");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compile_rejects_unknown_tasks() {
+        let client = PjRtClient::cpu().unwrap();
+        let good = XlaComputation { task: "t3".into() };
+        assert!(client.compile(&good).is_ok());
+        let bad = XlaComputation { task: "resnet".into() };
+        assert!(client.compile(&bad).is_err());
+    }
+
+    #[test]
+    fn execute_norm_end_to_end() {
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&XlaComputation { task: "norm".into() }).unwrap();
+        let inputs = vec![
+            plane_lit(100.0, 4, 4),
+            plane_lit(150.0, 4, 4),
+            plane_lit(200.0, 4, 4),
+            Literal::vec1(&[0.0; 5]),
+        ];
+        let out = exe.execute::<Literal>(&inputs).unwrap()[0][0].to_literal_sync().unwrap();
+        let parts = out.to_tuple().unwrap();
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].dims(), &[4, 4]);
+        // constant channel normalizes to the target mean
+        let v = parts[0].to_vec::<f32>().unwrap();
+        assert!(v.iter().all(|&x| (x - 210.0).abs() < 1e-3), "{v:?}");
+    }
+
+    #[test]
+    fn execute_cmp_yields_metrics_tuple() {
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&XlaComputation { task: "cmp".into() }).unwrap();
+        let mask = plane_lit(1.0, 3, 3);
+        let inputs = vec![
+            plane_lit(0.0, 3, 3),
+            mask.clone(),
+            plane_lit(0.0, 3, 3),
+            mask,
+            Literal::vec1(&[0.0; 5]),
+        ];
+        let out = exe.execute::<Literal>(&inputs).unwrap()[0][0].to_literal_sync().unwrap();
+        let m = out.to_tuple1().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(m.len(), 3);
+        assert!((m[0] - 1.0).abs() < 1e-5, "self dice {}", m[0]);
+    }
+}
