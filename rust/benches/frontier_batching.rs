@@ -1,0 +1,133 @@
+//! Acceptance benchmark for fine-grain frontier batching: a
+//! fan-out-heavy Morris study executed on ONE worker, node-at-a-time
+//! (`batch-width=1`, the old DFS cost profile) vs. frontier-batched
+//! (`batch-width=16`, one kernel launch per reuse-tree level chunk).
+//! Batched execution must be ≥ 1.5× faster with bit-identical
+//! per-evaluation metrics.
+//!
+//! Also reports the planner's launch model (launches at width 1 vs 16)
+//! and a cache-warm batched phase whose hits are refcount bumps on the
+//! shared cache states (zero-copy hit path).
+//!
+//! `--test` runs a smaller design for CI smoke (no hard assertion —
+//! shared runners are noisy) and still writes the `BENCH_frontier.json`
+//! perf-trajectory artifact.
+
+use std::sync::Arc;
+
+use rtf_reuse::benchx::{fmt_secs, time_once, Table};
+use rtf_reuse::cache::ReuseCache;
+use rtf_reuse::config::{SaMethod, StudyConfig};
+use rtf_reuse::driver::{make_inputs, prepare, run_pjrt_with_inputs};
+use rtf_reuse::merging::{unit_launch_count, FineAlgorithm, TrtmaOptions};
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    let r = if test_mode { 1 } else { 2 };
+    let mut cfg = StudyConfig {
+        method: SaMethod::Moat { r },
+        // one bucket per merge group: maximal fan-out under shared prefixes
+        algorithm: FineAlgorithm::Trtma(TrtmaOptions::new(1)),
+        workers: 1,
+        batch_width: 1,
+        ..StudyConfig::default()
+    };
+    let prepared = prepare(&cfg);
+    let plan = prepared.plan(&cfg);
+    let inputs = make_inputs(&cfg, &prepared).expect("study inputs");
+
+    let launches = |w: usize| -> usize {
+        plan.units
+            .iter()
+            .map(|u| unit_launch_count(u, &prepared.graph, &prepared.instances, w))
+            .sum()
+    };
+    let (launches_seq, launches_bat) = (launches(1), launches(16));
+
+    // phase 1: node-at-a-time baseline (one backend call per tree node)
+    let (seq, d_seq) = time_once(|| run_pjrt_with_inputs(&cfg, &prepared, &plan, None, &inputs));
+    let seq = seq.expect("sequential study");
+
+    // phase 2: frontier-batched
+    cfg.batch_width = 16;
+    let (bat, d_bat) = time_once(|| run_pjrt_with_inputs(&cfg, &prepared, &plan, None, &inputs));
+    let bat = bat.expect("batched study");
+
+    // batching must never change results
+    for (i, (a, b)) in seq.metrics.iter().zip(&bat.metrics).enumerate() {
+        assert_eq!(a, b, "eval {i}: batched metrics drifted from node-at-a-time");
+    }
+
+    // phase 3: batched + warm cache — hits are Arc refcount bumps
+    let cache = Arc::new(ReuseCache::with_capacity(512 * 1024 * 1024));
+    let cold =
+        run_pjrt_with_inputs(&cfg, &prepared, &plan, Some(cache.clone()), &inputs).expect("cold");
+    let cold_stats = cold.cache.expect("stats");
+    let (warm, d_warm) = time_once(|| {
+        run_pjrt_with_inputs(&cfg, &prepared, &plan, Some(cache.clone()), &inputs)
+    });
+    let warm = warm.expect("warm study");
+    let warm_stats = warm.cache.expect("stats");
+    for (a, b) in seq.metrics.iter().zip(&warm.metrics) {
+        assert_eq!(a, b, "cache-served batched metrics drifted");
+    }
+    // counters accumulate over the cache lifetime: diff the snapshots
+    let warm_hits = warm_stats.hits + warm_stats.disk_hits - cold_stats.hits - cold_stats.disk_hits;
+    let warm_misses = warm_stats.misses - cold_stats.misses;
+    let hit_rate = if warm_hits + warm_misses == 0 {
+        0.0
+    } else {
+        warm_hits as f64 / (warm_hits + warm_misses) as f64
+    };
+
+    let speedup = d_seq.as_secs_f64() / d_bat.as_secs_f64();
+    let mut t = Table::new(&["phase", "wall", "vs node-at-a-time", "launches"]);
+    t.row(&[
+        "node-at-a-time (width 1)".into(),
+        fmt_secs(d_seq.as_secs_f64()),
+        "1.00x".into(),
+        launches_seq.to_string(),
+    ]);
+    t.row(&[
+        "frontier-batched (width 16)".into(),
+        fmt_secs(d_bat.as_secs_f64()),
+        format!("{speedup:.2}x"),
+        launches_bat.to_string(),
+    ]);
+    t.row(&[
+        "batched + warm cache".into(),
+        fmt_secs(d_warm.as_secs_f64()),
+        format!("{:.2}x", d_seq.as_secs_f64() / d_warm.as_secs_f64()),
+        "-".into(),
+    ]);
+    t.print("frontier batching on a fan-out-heavy Morris study (1 worker)");
+    println!("warm-phase state hit rate: {:.1}% ({warm_hits} hits)", hit_rate * 100.0);
+
+    let json = format!(
+        "{{\n  \"bench\": \"frontier_batching\",\n  \"mode\": \"{}\",\n  \
+         \"evals\": {},\n  \"wall_sequential_secs\": {:.6},\n  \
+         \"wall_batched_secs\": {:.6},\n  \"speedup\": {:.4},\n  \
+         \"launches_sequential\": {launches_seq},\n  \"launches_batched\": {launches_bat},\n  \
+         \"warm_wall_secs\": {:.6},\n  \"warm_cache_hit_rate\": {:.4}\n}}\n",
+        if test_mode { "test" } else { "full" },
+        prepared.n_evals(),
+        d_seq.as_secs_f64(),
+        d_bat.as_secs_f64(),
+        speedup,
+        d_warm.as_secs_f64(),
+        hit_rate,
+    );
+    std::fs::write("BENCH_frontier.json", &json).expect("write BENCH_frontier.json");
+    println!("wrote BENCH_frontier.json");
+
+    println!(
+        "ACCEPTANCE: batched speedup {speedup:.2}x (required >= 1.5x, single worker) — {}",
+        if speedup >= 1.5 { "PASS" } else { "FAIL" }
+    );
+    if !test_mode {
+        assert!(
+            speedup >= 1.5,
+            "frontier batching must be >= 1.5x over node-at-a-time, got {speedup:.2}x"
+        );
+    }
+}

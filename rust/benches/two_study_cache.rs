@@ -17,8 +17,11 @@ use rtf_reuse::driver::{make_inputs, prepare, prune_plan_with_inputs, run_pjrt_w
 use rtf_reuse::merging::FineAlgorithm;
 
 fn main() {
+    // `--test`: a smaller design for CI smoke; the speedup is reported
+    // but not asserted (shared runners are noisy).
+    let test_mode = std::env::args().any(|a| a == "--test");
     let cfg = StudyConfig {
-        method: SaMethod::Moat { r: 2 }, // 32 evaluations
+        method: SaMethod::Moat { r: if test_mode { 1 } else { 2 } },
         algorithm: FineAlgorithm::Rtma(7),
         workers: 2,
         ..StudyConfig::default()
@@ -95,8 +98,10 @@ fn main() {
         "ACCEPTANCE: warm-study speedup {speedup:.2}x (required >= 1.5x) — {}",
         if speedup >= 1.5 { "PASS" } else { "FAIL" }
     );
-    assert!(
-        speedup >= 1.5,
-        "cross-study cache must give >= 1.5x on the warm study, got {speedup:.2}x"
-    );
+    if !test_mode {
+        assert!(
+            speedup >= 1.5,
+            "cross-study cache must give >= 1.5x on the warm study, got {speedup:.2}x"
+        );
+    }
 }

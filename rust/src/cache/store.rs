@@ -13,15 +13,17 @@ use std::collections::HashMap;
 use std::fmt;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::data::Plane;
 
 use super::disk;
 
 /// The 3-plane chain state the cache stores (same shape the coordinator's
-/// node store moves between stages).
-pub type CachedState = [Plane; 3];
+/// node store moves between stages), refcount-shared: a cache hit hands
+/// back an `Arc` clone — a refcount bump, not a ~3×H×W f32 deep copy —
+/// and concurrent readers of the same entry share one allocation.
+pub type CachedState = Arc<[Plane; 3]>;
 
 /// Construction-time knobs (surfaced as `cache-*` study-config options).
 #[derive(Clone, Debug, PartialEq)]
@@ -189,25 +191,35 @@ impl ReuseCache {
     }
 
     /// Look up the state for `key`: memory first, then the disk tier.
-    /// A disk hit is promoted back into memory.
+    /// A memory hit is a refcount bump (the returned `Arc` shares the
+    /// resident allocation); a disk hit is promoted back into memory.
     pub fn get_state(&self, key: u64) -> Option<CachedState> {
         {
             let mut s = self.shard_of(key).lock().unwrap();
             if let Some(e) = s.map.get_mut(&key) {
                 e.tick = self.next_tick();
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                return Some(e.state.clone());
+                return Some(Arc::clone(&e.state));
             }
         }
         if let Some(dir) = &self.cfg.spill_dir {
             if let Some(state) = disk::load_state(dir, key) {
+                let state: CachedState = Arc::new(state);
                 self.disk_hits.fetch_add(1, Ordering::Relaxed);
-                self.insert_resident(key, state.clone());
+                self.insert_resident(key, Arc::clone(&state));
                 return Some(state);
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         None
+    }
+
+    /// Count a state hit that was served outside [`ReuseCache::get_state`]
+    /// — the batched executor serving a lane from a sibling lane's
+    /// just-computed result records it here, exactly as the sequential
+    /// path's lookup-after-publication would have counted a hit.
+    pub fn note_state_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Probe without fetching (planning-time check): true when the key is
@@ -223,11 +235,14 @@ impl ReuseCache {
         }
     }
 
-    /// Publish a state under `key`. With a disk tier the entry is written
-    /// through immediately; the in-memory copy is subject to LRU. The
-    /// `inserts` counter tracks newly published keys (approximate under
-    /// concurrent duplicate publication of the same key).
-    pub fn put_state(&self, key: u64, state: CachedState) {
+    /// Publish a state under `key` (anything convertible into the
+    /// refcounted [`CachedState`]; a plain `[Plane; 3]` wraps into a
+    /// fresh `Arc`). With a disk tier the entry is written through
+    /// immediately; the in-memory copy is subject to LRU. The `inserts`
+    /// counter tracks newly published keys (approximate under concurrent
+    /// duplicate publication of the same key).
+    pub fn put_state(&self, key: u64, state: impl Into<CachedState>) {
+        let state = state.into();
         let mut new_on_disk = false;
         if let Some(dir) = &self.cfg.spill_dir {
             if let Ok(true) = disk::store_state(dir, key, &state) {
@@ -323,6 +338,26 @@ impl ReuseCache {
         self.resident.load(Ordering::Relaxed) as usize
     }
 
+    /// Sorted keys of every state resident in memory (diagnostic / test
+    /// aid: two runs that must leave the cache in the same state compare
+    /// these).
+    pub fn resident_keys(&self) -> Vec<u64> {
+        let mut keys: Vec<u64> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.lock().unwrap().map.keys().copied().collect::<Vec<_>>())
+            .collect();
+        keys.sort_unstable();
+        keys
+    }
+
+    /// Sorted keys of every cached comparison metric.
+    pub fn metric_keys(&self) -> Vec<u64> {
+        let mut keys: Vec<u64> = self.metrics.lock().unwrap().keys().copied().collect();
+        keys.sort_unstable();
+        keys
+    }
+
     /// Snapshot every counter.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
@@ -344,12 +379,25 @@ impl ReuseCache {
 mod tests {
     use super::*;
 
-    fn state(v: f32, side: usize) -> CachedState {
+    fn state(v: f32, side: usize) -> [Plane; 3] {
         [
             Plane::filled(v, side, side),
             Plane::filled(v, side, side),
             Plane::filled(v, side, side),
         ]
+    }
+
+    #[test]
+    fn hits_share_the_resident_allocation() {
+        let c = ReuseCache::with_capacity(1 << 20);
+        c.put_state(7, state(3.0, 4));
+        let a = c.get_state(7).expect("hit");
+        let b = c.get_state(7).expect("hit");
+        // zero-copy: both hits point at the same [Plane; 3] allocation
+        assert!(Arc::ptr_eq(&a, &b), "cache hits must be refcount bumps");
+        assert_eq!(c.resident_keys(), vec![7]);
+        c.put_metrics(9, [1.0, 1.0, 0.0]);
+        assert_eq!(c.metric_keys(), vec![9]);
     }
 
     /// Bytes of one `state(v, 4)`: 3 planes x 16 px x 4 B.

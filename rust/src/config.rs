@@ -3,6 +3,7 @@
 //! from CLI-style `key=value` pairs or JSON, consumed by the CLI, the
 //! examples and the bench harness.
 
+use crate::coordinator::BatchPolicy;
 use crate::merging::{FineAlgorithm, TrtmaOptions};
 use crate::{Error, Result};
 
@@ -113,6 +114,11 @@ pub struct StudyConfig {
     pub engine: EngineMode,
     /// Worker count (threads in PJRT mode; simulated WP in sim mode).
     pub workers: usize,
+    /// Frontier batch width: how many same-task reuse-tree siblings one
+    /// kernel launch carries (PJRT mode). 1 = node-at-a-time execution;
+    /// results are bit-identical at every width. Defaults to
+    /// [`BatchPolicy::default`]'s width.
+    pub batch_width: usize,
     /// Cores per simulated worker node (task-level parallelism inside a
     /// merged stage, paper Fig. 4). 1 = serial stage execution, which is
     /// what the paper's WP-scaling experiments correspond to.
@@ -142,6 +148,7 @@ impl Default for StudyConfig {
             coarse: true,
             engine: EngineMode::Pjrt,
             workers: 2,
+            batch_width: BatchPolicy::default().width,
             cores: 1,
             tiles: 1,
             seed: 42,
@@ -157,8 +164,8 @@ impl StudyConfig {
     /// `method` (moat|vbd), `r`, `n`, `k-active`, `sampler`
     /// (qmc|mc|lhs), `algo` (none|naive|sca|rtma|trtma), `mbs`,
     /// `max-buckets`, `coarse` (on|off), `engine` (pjrt|sim),
-    /// `workers`, `tiles`, `seed`, `artifacts`, plus the reuse-cache
-    /// knobs `cache` (on|off), `cache-mb`, `cache-quant`,
+    /// `workers`, `batch-width`, `tiles`, `seed`, `artifacts`, plus the
+    /// reuse-cache knobs `cache` (on|off), `cache-mb`, `cache-quant`,
     /// `cache-shards`, `cache-dir`.
     pub fn from_args(args: &[String]) -> Result<Self> {
         let mut cfg = StudyConfig::default();
@@ -200,6 +207,7 @@ impl StudyConfig {
                     }
                 }
                 "workers" => cfg.workers = uint(value)?.max(1),
+                "batch-width" => cfg.batch_width = uint(value)?.max(1),
                 "cores" => cfg.cores = uint(value)?.max(1),
                 "tiles" => cfg.tiles = uint(value)?.max(1),
                 "seed" => cfg.seed = uint(value)? as u64,
@@ -236,7 +244,8 @@ impl StudyConfig {
             String::new()
         };
         format!(
-            "{} sampler={} algo={} coarse={} engine={:?} workers={} tiles={} seed={}{cache}",
+            "{} sampler={} algo={} coarse={} engine={:?} workers={} batch={} tiles={} \
+             seed={}{cache}",
             match self.method {
                 SaMethod::Moat { r } => format!("moat(r={r})"),
                 SaMethod::Vbd { n, k_active } => format!("vbd(n={n},k={k_active})"),
@@ -246,6 +255,7 @@ impl StudyConfig {
             if self.coarse { "on" } else { "off" },
             self.engine,
             self.workers,
+            self.batch_width,
             self.tiles,
             self.seed
         )
@@ -326,6 +336,17 @@ mod tests {
             parse_algorithm("trtma", 5, 0).unwrap(),
             FineAlgorithm::Trtma(o) if o.max_buckets == 5
         ));
+    }
+
+    #[test]
+    fn batch_width_parses_and_clamps() {
+        assert_eq!(StudyConfig::default().batch_width, 16);
+        let c = StudyConfig::from_args(&args(&["batch-width=4"])).unwrap();
+        assert_eq!(c.batch_width, 4);
+        assert!(c.describe().contains("batch=4"));
+        let c = StudyConfig::from_args(&args(&["batch-width=0"])).unwrap();
+        assert_eq!(c.batch_width, 1, "width clamps to >= 1");
+        assert!(StudyConfig::from_args(&args(&["batch-width=wide"])).is_err());
     }
 
     #[test]

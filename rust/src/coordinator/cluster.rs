@@ -3,6 +3,7 @@
 
 use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -14,8 +15,24 @@ use crate::runtime::{ArtifactManifest, PjrtEngine, TaskTimer};
 use crate::workflow::StageInstance;
 use crate::{Error, Result};
 
-use super::exec::{execute_unit, UnitCacheCtx, UnitOutput};
+use super::exec::{execute_unit, BatchPolicy, UnitCacheCtx, UnitOutput};
 use super::store::{NodeStore, State};
+
+/// Uniquifies spill directories when several studies run concurrently in
+/// one process (the pid alone is not enough).
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Owns one execution's spill directory and removes it — contents and
+/// all — when the execution ends, success or failure.
+struct SpillDirGuard {
+    dir: PathBuf,
+}
+
+impl Drop for SpillDirGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
 
 /// Cluster shape and artifact location.
 #[derive(Clone, Debug)]
@@ -29,6 +46,9 @@ pub struct ExecuteOptions {
     /// Cross-study reuse cache, shared by every worker engine (and, when
     /// the caller holds it across studies, by successive executions).
     pub cache: Option<Arc<ReuseCache>>,
+    /// How workers batch reuse-tree frontier siblings into kernel
+    /// launches (see [`BatchPolicy`]).
+    pub batch: BatchPolicy,
 }
 
 impl ExecuteOptions {
@@ -38,6 +58,7 @@ impl ExecuteOptions {
             artifacts_dir: artifacts_dir.into(),
             state_limit_bytes: None,
             cache: None,
+            batch: BatchPolicy::default(),
         }
     }
 
@@ -50,6 +71,14 @@ impl ExecuteOptions {
     /// Share a cross-study reuse cache with the worker engines.
     pub fn with_cache(mut self, cache: Arc<ReuseCache>) -> Self {
         self.cache = Some(cache);
+        self
+    }
+
+    /// Set the frontier batching policy (default: [`BatchPolicy`]'s
+    /// width-16; `BatchPolicy::sequential()` restores node-at-a-time
+    /// execution).
+    pub fn with_batch(mut self, batch: BatchPolicy) -> Self {
+        self.batch = batch;
         self
     }
 }
@@ -140,13 +169,19 @@ pub fn execute_study(
         failed: None,
     });
     let cv = Condvar::new();
-    let store = match opts.state_limit_bytes {
+    // spill dirs are per-execution (pid + sequence, so concurrent studies
+    // in one process never share) and removed when the guard drops
+    let (store, _spill_guard) = match opts.state_limit_bytes {
         Some(limit) => {
-            let dir = std::env::temp_dir().join(format!("rtf-reuse-spill-{}", std::process::id()));
+            let dir = std::env::temp_dir().join(format!(
+                "rtf-reuse-spill-{}-{}",
+                std::process::id(),
+                SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
+            ));
             std::fs::create_dir_all(&dir)?;
-            NodeStore::with_spill(limit, dir)
+            (NodeStore::with_spill(limit, dir.clone()), Some(SpillDirGuard { dir }))
         }
-        None => NodeStore::new(),
+        None => (NodeStore::new(), None),
     };
     let metrics_map: Mutex<HashMap<usize, [f32; 3]>> = Mutex::new(HashMap::new());
     let timers: Mutex<Vec<(String, f64, u64)>> = Mutex::new(Vec::new());
@@ -293,7 +328,17 @@ fn worker_loop(
             ),
             ref_fp: ref_fps.get(&rep.tile).copied().unwrap_or(0),
         });
-        match execute_unit(&mut engine, unit, graph, instances, input, reference, cache_ctx) {
+        let result = execute_unit(
+            &mut engine,
+            unit,
+            graph,
+            instances,
+            input,
+            reference,
+            cache_ctx,
+            opts.batch,
+        );
+        match result {
             Ok(UnitOutput::States(states)) => {
                 for (node, state) in states {
                     store.put(node, state, consumers[node]);

@@ -1,21 +1,63 @@
 //! Execution of one schedule unit on one worker engine: the bucket's
-//! reuse tree runs depth-first so shared task prefixes execute once.
+//! reuse tree runs in *frontier order* (level-synchronous BFS), so the
+//! sibling evaluations that fan out below a shared task prefix — the
+//! dominant shape in Morris/VBD studies — execute in a handful of
+//! batched kernel launches per tree level instead of one launch per
+//! node.
 //!
 //! With a cross-study cache attached to the engine, every tree task node
 //! carries a content-addressed chain key (unit input key folded through
-//! the quantized task signatures along the path); task nodes whose key
-//! hits the cache short-circuit — their subtree continues from the cached
-//! state without touching PJRT — and misses publish what they compute.
+//! the quantized task signatures along the path, computed over the same
+//! [`ReuseTree::chain_keys`] walk the planner probes); each batched
+//! launch partitions its lanes into cache hits (served as refcount bumps
+//! on the stored states) and misses (executed in one call, published on
+//! completion).
+//!
+//! Memory note: the frontier holds one literal state per live tree node
+//! of two adjacent levels (a level's inputs and outputs), where the old
+//! depth-first walk held one state per level along a root-to-leaf path.
+//! At study tile sizes this is a few MiB per worker; the policy width
+//! caps how many *outputs* a single launch materializes at once.
 
 use crate::cache::{chain_key, task_cache_sig};
 use crate::data::Plane;
-use crate::merging::reuse_tree::ReuseTree;
-use crate::merging::{CompactGraph, MergeStage, ScheduleUnit};
-use crate::runtime::PjrtEngine;
-use crate::workflow::StageInstance;
+use crate::merging::reuse_tree::{ReuseTree, WalkNode};
+use crate::merging::{unit_stages, CompactGraph, ScheduleUnit};
+use crate::runtime::{PjrtEngine, TaskId};
+use crate::workflow::{StageInstance, TaskInstance};
 use crate::{Error, Result};
 
 use super::store::State;
+
+/// How the executor groups reuse-tree frontier nodes into kernel
+/// launches. `width == 1` is the node-at-a-time baseline (one backend
+/// call per tree node — the cost profile of the old depth-first walk);
+/// wider policies stack up to `width` same-task siblings into a single
+/// batched call with the per-pixel loops vectorized across the batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Maximum evaluations per kernel launch (≥ 1).
+    pub width: usize,
+}
+
+impl BatchPolicy {
+    pub fn new(width: usize) -> Self {
+        Self { width: width.max(1) }
+    }
+
+    /// The node-at-a-time (unbatched) policy.
+    pub fn sequential() -> Self {
+        Self { width: 1 }
+    }
+}
+
+impl Default for BatchPolicy {
+    /// Width 16: fills 8-lane f32 SIMD twice per pixel step while
+    /// keeping a launch's output working set (16 × 3 planes) modest.
+    fn default() -> Self {
+        Self { width: 16 }
+    }
+}
 
 /// What a unit produced: chain stages output 3-plane states per compact
 /// node; the comparison stage outputs (dice, jaccard, diff) per node.
@@ -32,19 +74,31 @@ pub struct UnitCacheCtx {
     pub ref_fp: u64,
 }
 
-/// Everything the depth-first walk needs besides the engine and the
-/// per-node state.
-struct DfsCtx<'a> {
+/// Everything the frontier walk needs besides the engine and the
+/// per-node states.
+struct FrontierCtx<'a> {
     tree: &'a ReuseTree,
     unit: &'a ScheduleUnit,
     graph: &'a CompactGraph,
     instances: &'a [StageInstance],
-    quantize: f64,
+}
+
+impl<'a> FrontierCtx<'a> {
+    /// The task a tree node at 1-based `level` runs, resolved through
+    /// any member whose leaf lies under it (all members below share the
+    /// task prefix). This resolution is what [`ReuseTree::chain_keys`]
+    /// receives on both the planning and the execution side.
+    fn task_of(&self, level: usize, member: usize) -> &'a TaskInstance {
+        let node_id = self.unit.nodes[member];
+        &self.instances[self.graph.nodes[node_id].rep].tasks[level - 1]
+    }
 }
 
 /// Execute `unit` given its input state. For the comparison stage a
 /// reference mask must be supplied. `cache_ctx` enables cross-study
-/// memoization (requires a cache attached to the engine).
+/// memoization (requires a cache attached to the engine); `batch`
+/// bounds how many frontier siblings share one kernel launch.
+#[allow(clippy::too_many_arguments)]
 pub fn execute_unit(
     engine: &mut PjrtEngine,
     unit: &ScheduleUnit,
@@ -53,6 +107,7 @@ pub fn execute_unit(
     input: State,
     reference: Option<&Plane>,
     cache_ctx: Option<UnitCacheCtx>,
+    batch: BatchPolicy,
 ) -> Result<UnitOutput> {
     let rep = &instances[graph.nodes[unit.nodes[0]].rep];
     let quantize = engine.cache().map(|c| c.quantize_step()).unwrap_or(0.0);
@@ -74,24 +129,25 @@ pub fn execute_unit(
         return Ok(UnitOutput::Metrics(unit.nodes.iter().map(|&n| (n, m)).collect()));
     }
 
-    // Build the bucket's reuse tree; member i of the tree is unit.nodes[i].
-    let stages: Vec<MergeStage> = unit
-        .nodes
-        .iter()
-        .enumerate()
-        .map(|(i, &n)| MergeStage::new(i, instances[graph.nodes[n].rep].task_path()))
-        .collect();
-    let tree = ReuseTree::build(&stages);
+    // Build the bucket's reuse tree from the same merge input the
+    // planner probes; member i of the tree is unit.nodes[i].
+    let tree = ReuseTree::build(&unit_stages(unit, graph, instances));
     let mut out: Vec<(usize, State)> = Vec::with_capacity(unit.nodes.len());
     // state stays literal-resident along the chain; planes materialize
     // only at the leaves (unit boundaries) — EXPERIMENTS.md §Perf
     let lit_input = engine.lit_state(&input)?;
-    let base_key = match cache_ctx {
-        Some(ctx) if keyed => Some(ctx.base_key),
+    let cx = FrontierCtx { tree: &tree, unit, graph, instances };
+    let levels = tree.walk();
+    // per-node content chain keys, over the same walk the planner probes
+    let keys: Option<Vec<u64>> = match cache_ctx {
+        Some(ctx) if keyed => Some(
+            tree.chain_keys(&levels, ctx.base_key, |level, member| {
+                task_cache_sig(cx.task_of(level, member), quantize)
+            }),
+        ),
         _ => None,
     };
-    let cx = DfsCtx { tree: &tree, unit, graph, instances, quantize };
-    dfs(engine, &cx, tree.root, lit_input, base_key, &mut out)?;
+    frontier(engine, &cx, &levels, lit_input, keys.as_deref(), batch, &mut out)?;
     if out.len() != unit.nodes.len() {
         return Err(Error::Coordinator(format!(
             "unit {} produced {} states for {} nodes",
@@ -103,48 +159,91 @@ pub fn execute_unit(
     Ok(UnitOutput::States(out))
 }
 
-/// Depth-first execution: every tree task node runs once (or is served by
-/// the cache); states are cloned only at fan-out points (a node with c
-/// children clones c−1 times), which is the minimum for by-value
-/// branching.
-///
-/// The planning-time probe `merging/study.rs::count_cached` mirrors this
-/// walk (same tree, same level→task resolution, same key chaining) —
-/// keep the two in sync.
-fn dfs(
+/// Level-synchronous execution over [`ReuseTree::walk`]: each level's
+/// task nodes — all instantiations of the *same* task, by construction
+/// of the merge groups — run in `ceil(n / width)` batched launches;
+/// stage leaves materialize their parent's state as the member's output.
+/// Every tree task node still executes exactly once (or is served by the
+/// cache); a level's input states are dropped as soon as the level
+/// completes.
+fn frontier(
     engine: &mut PjrtEngine,
-    cx: &DfsCtx,
-    node: usize,
-    state: [xla::Literal; 3],
-    key: Option<u64>,
+    cx: &FrontierCtx,
+    levels: &[Vec<WalkNode>],
+    input: [xla::Literal; 3],
+    keys: Option<&[u64]>,
+    batch: BatchPolicy,
     out: &mut Vec<(usize, State)>,
 ) -> Result<()> {
-    for &c in &cx.tree.nodes[node].children {
-        if let Some(member) = cx.tree.nodes[c].stage {
-            // leaf: materialize this member's final state as planes
-            out.push((cx.unit.nodes[member], engine.plane_state(&state)?));
-            continue;
+    let tree = cx.tree;
+    let mut states: Vec<Option<[xla::Literal; 3]>> = vec![None; tree.nodes.len()];
+    states[tree.root] = Some(input);
+    for level in levels {
+        let mut pending: Vec<WalkNode> = Vec::with_capacity(level.len());
+        for n in level {
+            match n.stage {
+                Some(member) => {
+                    let parent = states[n.parent].as_ref().ok_or_else(|| {
+                        Error::Coordinator(format!(
+                            "unit {}: state of leaf parent {} missing",
+                            cx.unit.id, n.parent
+                        ))
+                    })?;
+                    out.push((cx.unit.nodes[member], engine.plane_state(parent)?));
+                }
+                None => pending.push(*n),
+            }
         }
-        let level = cx.tree.nodes[c].level; // 1-based task level
-        let member = first_member(cx.tree, c);
-        let node_id = cx.unit.nodes[member];
-        let task = &cx.instances[cx.graph.nodes[node_id].rep].tasks[level - 1];
-        let params: Vec<f32> = task.params.iter().map(|&v| v as f32).collect();
-        let child_key = key.map(|k| chain_key(k, task_cache_sig(task, cx.quantize)));
-        let (next, _hit) =
-            engine.execute_task_lit_keyed(&task.name, child_key, &state, &params)?;
-        dfs(engine, cx, c, next, child_key, out)?;
+        if !pending.is_empty() {
+            let id = engine.require_id(&cx.task_of(pending[0].level, pending[0].member).name)?;
+            for chunk in pending.chunks(batch.width.max(1)) {
+                run_chunk(engine, cx, id, chunk, keys, &mut states)?;
+            }
+        }
+        // this level consumed its parents' states: free them
+        for n in level {
+            states[n.parent] = None;
+        }
     }
     Ok(())
 }
 
-/// Any member (stage index into the unit) whose leaf lies under `node`.
-fn first_member(tree: &ReuseTree, node: usize) -> usize {
-    let mut v = node;
-    loop {
-        if let Some(s) = tree.nodes[v].stage {
-            return s;
-        }
-        v = tree.nodes[v].children[0];
+/// Execute one frontier chunk: a single batched keyed call for `B > 1`,
+/// the scalar keyed path for singleton chunks (which makes `width == 1`
+/// exactly the node-at-a-time baseline).
+fn run_chunk(
+    engine: &mut PjrtEngine,
+    cx: &FrontierCtx,
+    id: TaskId,
+    chunk: &[WalkNode],
+    keys: Option<&[u64]>,
+    states: &mut [Option<[xla::Literal; 3]>],
+) -> Result<()> {
+    let params: Vec<Vec<f32>> = chunk
+        .iter()
+        .map(|n| cx.task_of(n.level, n.member).params.iter().map(|&v| v as f32).collect())
+        .collect();
+    let node_keys: Vec<Option<u64>> = chunk.iter().map(|n| keys.map(|k| k[n.node])).collect();
+    let missing = |n: &WalkNode| {
+        Error::Coordinator(format!("unit {}: state of parent {} missing", cx.unit.id, n.parent))
+    };
+    if chunk.len() == 1 {
+        let n = &chunk[0];
+        let parent = states[n.parent].as_ref().ok_or_else(|| missing(n))?;
+        let (st, _hit) = engine.execute_task_lit_keyed_id(id, node_keys[0], parent, &params[0])?;
+        states[n.node] = Some(st);
+        return Ok(());
     }
+    let results = {
+        let mut parent_refs: Vec<&[xla::Literal; 3]> = Vec::with_capacity(chunk.len());
+        for n in chunk {
+            parent_refs.push(states[n.parent].as_ref().ok_or_else(|| missing(n))?);
+        }
+        let p_refs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+        engine.execute_task_batch_keyed(id, &node_keys, &parent_refs, &p_refs)?
+    };
+    for (n, (st, _hit)) in chunk.iter().zip(results) {
+        states[n.node] = Some(st);
+    }
+    Ok(())
 }

@@ -11,15 +11,17 @@
 //! the moment their last consumer has fetched them, bounding resident
 //! memory like the RTF's hierarchical storage layer.
 //!
-//! Inside a worker, a *merged* unit executes its bucket's reuse tree
-//! depth-first: every shared task prefix runs **once**, branching states
-//! are cloned only at fan-out points — this is where the planned
-//! fine-grain reuse turns into actually-skipped PJRT executions.
+//! Inside a worker, a *merged* unit executes its bucket's reuse tree in
+//! frontier order (level-synchronous BFS): every shared task prefix runs
+//! **once**, and the same-task siblings of each tree level are stacked
+//! into batched kernel launches ([`exec::BatchPolicy`]) — this is where
+//! the planned fine-grain reuse turns into actually-skipped (and
+//! batch-vectorized) PJRT executions.
 
 mod cluster;
 mod exec;
 mod store;
 
 pub use cluster::{execute_study, ExecuteOptions, StudyOutcome};
-pub use exec::{execute_unit, UnitCacheCtx, UnitOutput};
+pub use exec::{execute_unit, BatchPolicy, UnitCacheCtx, UnitOutput};
 pub use store::NodeStore;

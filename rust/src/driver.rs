@@ -10,7 +10,7 @@ use std::sync::Arc;
 use crate::analysis::{moat_effects, screen_top_k, MoatIndices};
 use crate::cache::{chain_key, reference_fingerprints, tile_fingerprints, CacheConfig, ReuseCache};
 use crate::config::{SaMethod, StudyConfig};
-use crate::coordinator::{execute_study, ExecuteOptions, StudyOutcome};
+use crate::coordinator::{execute_study, BatchPolicy, ExecuteOptions, StudyOutcome};
 use crate::data::{synth_tile, Plane, SynthConfig, TileSet};
 use crate::merging::{plan_study_weighted, prune_cached, CompactGraph, FineAlgorithm, StudyPlan};
 use crate::runtime::PjrtEngine;
@@ -250,7 +250,8 @@ pub fn run_pjrt_with_inputs(
     cache: Option<Arc<ReuseCache>>,
     inputs: &StudyInputs,
 ) -> Result<StudyOutcome> {
-    let mut opts = ExecuteOptions::new(cfg.workers, &cfg.artifacts_dir);
+    let mut opts = ExecuteOptions::new(cfg.workers, &cfg.artifacts_dir)
+        .with_batch(BatchPolicy::new(cfg.batch_width));
     if let Some(cache) = cache {
         opts = opts.with_cache(cache);
     }

@@ -69,7 +69,8 @@ fn print_help() {
          common options:\n\
            method=moat|vbd  r=10  n=200  k-active=8  sampler=qmc|mc|lhs\n\
            algo=none|naive|sca|rtma|trtma  mbs=7  max-buckets=N\n\
-           coarse=on|off  engine=pjrt|sim  workers=2  tiles=1  seed=42\n\
+           coarse=on|off  engine=pjrt|sim  workers=2  batch-width=16\n\
+           tiles=1  seed=42\n\
            artifacts=DIR (default: the crate's artifacts/ dir)\n\
            cache=on|off  cache-mb=256  cache-quant=0  cache-shards=8  cache-dir=DIR"
     );

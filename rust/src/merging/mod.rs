@@ -35,7 +35,7 @@ pub use rtma::rtma_merge;
 pub use sca::sca_merge;
 pub use stage::{CompactGraph, CompactNode};
 pub use study::{
-    plan_study, plan_study_weighted, prune_cached, FineAlgorithm, ScheduleUnit, StudyPlan,
-    UnitKind,
+    batched_unit_cost, plan_study, plan_study_weighted, prune_cached, unit_launch_count,
+    unit_stages, FineAlgorithm, ScheduleUnit, StudyPlan, UnitKind,
 };
 pub use trtma::{trtma_merge, trtma_merge_weighted, TrtmaOptions};

@@ -123,6 +123,88 @@ impl ReuseTree {
         }
         depth(self, self.root)
     }
+
+    /// Any member (stage index into the merge input) whose leaf lies
+    /// under `node` — all members below a task node share the task
+    /// prefix down to it, so any one resolves the node's task.
+    pub fn first_member(&self, node: usize) -> usize {
+        let mut v = node;
+        loop {
+            if let Some(s) = self.nodes[v].stage {
+                return s;
+            }
+            v = self.nodes[v].children[0];
+        }
+    }
+
+    /// The frontier-order (level-synchronous BFS) walk of the tree: one
+    /// `Vec<WalkNode>` per level, task levels `1..=n_levels` first, the
+    /// stage-leaf level last. This is THE canonical traversal — the
+    /// executor (`coordinator/exec.rs`) batches each level's task nodes
+    /// into kernel launches, and the planning probe
+    /// (`merging/study.rs::prune_cached`) counts cached nodes over the
+    /// same walk, so the two can never drift.
+    pub fn walk(&self) -> Vec<Vec<WalkNode>> {
+        let mut levels: Vec<Vec<WalkNode>> = vec![Vec::new(); self.n_levels + 1];
+        for (id, n) in self.nodes.iter().enumerate() {
+            if id == self.root {
+                continue;
+            }
+            levels[n.level - 1].push(WalkNode {
+                node: id,
+                parent: n.parent.expect("non-root node has a parent"),
+                level: n.level,
+                member: self.first_member(id),
+                stage: n.stage,
+            });
+        }
+        levels
+    }
+
+    /// Content chain keys for every tree node, derived over a
+    /// precomputed [`walk`] (callers already hold the walk for
+    /// execution/probing — pass it in rather than traversing twice):
+    /// the root carries `base`, and each task node extends its parent's
+    /// key with `task_sig(level, member)` — the caller resolves the task
+    /// signature exactly as it resolves the task to execute. Leaves
+    /// inherit nothing (they carry no work); their slots keep `base`.
+    ///
+    /// [`walk`]: ReuseTree::walk
+    pub fn chain_keys(
+        &self,
+        levels: &[Vec<WalkNode>],
+        base: u64,
+        mut task_sig: impl FnMut(usize, usize) -> u64,
+    ) -> Vec<u64> {
+        let mut keys = vec![base; self.nodes.len()];
+        for level in levels {
+            for n in level {
+                if n.stage.is_none() {
+                    keys[n.node] =
+                        crate::cache::chain_key(keys[n.parent], task_sig(n.level, n.member));
+                }
+            }
+        }
+        keys
+    }
+}
+
+/// One node of a frontier level (see [`ReuseTree::walk`]): a task node
+/// (`stage == None`) to execute, or a stage leaf (`stage == Some(s)`)
+/// whose parent state materializes member `s`'s output.
+#[derive(Clone, Copy, Debug)]
+pub struct WalkNode {
+    /// Tree node id.
+    pub node: usize,
+    /// Parent tree node id (the state this node consumes).
+    pub parent: usize,
+    /// 1-based task level (`n_levels + 1` for stage leaves).
+    pub level: usize,
+    /// A member (stage index) whose leaf lies under this node — resolves
+    /// the node's task at `level`.
+    pub member: usize,
+    /// For stage leaves: the member this leaf terminates.
+    pub stage: Option<usize>,
 }
 
 #[cfg(test)]
@@ -218,5 +300,61 @@ mod tests {
         assert_eq!(t.nodes.len(), 1);
         assert_eq!(t.unique_task_count(), 0);
         assert!(t.leaves_under(t.root).is_empty());
+        assert!(t.walk().iter().all(|l| l.is_empty()));
+    }
+
+    #[test]
+    fn walk_visits_every_node_once_in_level_order() {
+        let stages = mk_stages(&[&[1, 2, 3], &[1, 2, 4], &[1, 9, 9], &[7, 8, 9]]);
+        let t = ReuseTree::build(&stages);
+        let levels = t.walk();
+        assert_eq!(levels.len(), t.n_levels + 1);
+        let mut seen = vec![false; t.nodes.len()];
+        seen[t.root] = true;
+        for (li, level) in levels.iter().enumerate() {
+            for n in level {
+                assert_eq!(n.level, li + 1);
+                assert_eq!(t.nodes[n.node].level, n.level);
+                assert_eq!(t.nodes[n.node].parent, Some(n.parent));
+                assert!(seen[n.parent], "parents precede children");
+                assert!(!seen[n.node], "node visited twice");
+                seen[n.node] = true;
+                assert_eq!(n.stage, t.nodes[n.node].stage);
+                // the member's leaf lies under the node
+                assert!(t.leaves_under(n.node).contains(&n.member));
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "walk must cover the whole tree");
+        // the last level is exactly the stage leaves
+        assert!(levels[t.n_levels].iter().all(|n| n.stage.is_some()));
+        assert_eq!(levels[t.n_levels].len(), stages.len());
+    }
+
+    #[test]
+    fn chain_keys_fold_parent_keys_through_task_sigs() {
+        let stages = mk_stages(&[&[1, 2], &[1, 3]]);
+        let t = ReuseTree::build(&stages);
+        // sig = level * 100 + member-resolved path entry
+        let levels = t.walk();
+        let keys = t.chain_keys(&levels, 7, |level, member| stages[member].path[level - 1] * 100);
+        // manual recursion over the same definition
+        fn expect(t: &ReuseTree, node: usize, key: u64, stages: &[MergeStage], keys: &[u64]) {
+            assert_eq!(keys[node], key);
+            for &c in &t.nodes[node].children {
+                if t.nodes[c].stage.is_some() {
+                    continue;
+                }
+                let member = t.first_member(c);
+                let sig = stages[member].path[t.nodes[c].level - 1] * 100;
+                expect(t, c, crate::cache::chain_key(key, sig), stages, keys);
+            }
+        }
+        expect(&t, t.root, 7, &stages, &keys);
+        // shared prefix node -> shared key; divergent second level -> distinct
+        let l1 = &t.walk()[0];
+        assert_eq!(l1.len(), 1, "both stages share the level-1 node");
+        let l2 = &t.walk()[1];
+        assert_eq!(l2.len(), 2);
+        assert_ne!(keys[l2[0].node], keys[l2[1].node]);
     }
 }

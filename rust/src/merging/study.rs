@@ -307,14 +307,7 @@ pub fn prune_cached(
             let key = chain_key(chain_key(base, task_cache_sig(&rep.tasks[0], step)), ref_fp);
             usize::from(cache.contains_metrics(key))
         } else {
-            let stages: Vec<MergeStage> = u
-                .nodes
-                .iter()
-                .enumerate()
-                .map(|(i, &n)| MergeStage::new(i, instances[graph.nodes[n].rep].task_path()))
-                .collect();
-            let tree = ReuseTree::build(&stages);
-            count_cached(&tree, tree.root, base, u, graph, instances, cache, step)
+            count_cached(u, graph, instances, cache, base, step)
         };
         u.task_cost = u.task_cost.saturating_sub(pruned);
         pruned_total += pruned;
@@ -323,49 +316,86 @@ pub fn prune_cached(
     pruned_total
 }
 
-/// Walk a unit's reuse tree exactly as the executor does, counting task
-/// nodes whose content chain key is already cached.
+/// Build a unit's fine-grain merge input: one [`MergeStage`] per bundled
+/// compact node, in unit order. The executor (`coordinator/exec.rs`) and
+/// the planning probes below all build their [`ReuseTree`]s from THIS
+/// function, so predicted and executed trees cannot drift.
+pub fn unit_stages(
+    unit: &ScheduleUnit,
+    graph: &CompactGraph,
+    instances: &[StageInstance],
+) -> Vec<MergeStage> {
+    unit.nodes
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| MergeStage::new(i, instances[graph.nodes[n].rep].task_path()))
+        .collect()
+}
+
+/// Probe a unit's reuse tree for already-cached task states, counting
+/// task nodes whose content chain key is present.
 ///
-/// KEEP IN SYNC with `coordinator/exec.rs::dfs`: tree construction,
-/// level→task resolution and key chaining must match the executor
-/// step-for-step or predicted reuse silently drifts from measured.
-#[allow(clippy::too_many_arguments)]
+/// This mirrors the executor *by construction*: both sides traverse
+/// [`ReuseTree::walk`] and chain keys with [`ReuseTree::chain_keys`]
+/// over the same level→task resolution, so predicted reuse cannot drift
+/// from measured reuse.
 fn count_cached(
-    tree: &ReuseTree,
-    node: usize,
-    key: u64,
     unit: &ScheduleUnit,
     graph: &CompactGraph,
     instances: &[StageInstance],
     cache: &ReuseCache,
+    base: u64,
     step: f64,
 ) -> usize {
-    let mut count = 0;
-    for &c in &tree.nodes[node].children {
-        if tree.nodes[c].stage.is_some() {
-            continue; // leaves carry no work
-        }
-        let level = tree.nodes[c].level;
-        let member = first_leaf_member(tree, c);
-        let task = &instances[graph.nodes[unit.nodes[member]].rep].tasks[level - 1];
-        let child_key = chain_key(key, task_cache_sig(task, step));
-        if cache.contains_state(child_key) {
-            count += 1;
-        }
-        count += count_cached(tree, c, child_key, unit, graph, instances, cache, step);
-    }
-    count
+    let stages = unit_stages(unit, graph, instances);
+    let tree = ReuseTree::build(&stages);
+    let levels = tree.walk();
+    let keys = tree.chain_keys(&levels, base, |level, member| {
+        task_cache_sig(&instances[graph.nodes[unit.nodes[member]].rep].tasks[level - 1], step)
+    });
+    levels
+        .iter()
+        .flatten()
+        .filter(|n| n.stage.is_none() && cache.contains_state(keys[n.node]))
+        .count()
 }
 
-/// Any member (stage index into the unit) whose leaf lies under `node`.
-fn first_leaf_member(tree: &ReuseTree, node: usize) -> usize {
-    let mut v = node;
-    loop {
-        if let Some(s) = tree.nodes[v].stage {
-            return s;
-        }
-        v = tree.nodes[v].children[0];
+/// Kernel launches a unit needs under frontier batching with width
+/// `width`: the executor walks the unit's reuse tree level by level and
+/// issues `ceil(level_task_nodes / width)` batched calls per level.
+/// Units with empty task paths cost one launch. Comparison units come
+/// out as one launch because the parameterless `cmp` task collapses to
+/// a single tree node; a parameterized compare task would need explicit
+/// handling here (the executor always issues one compare per unit).
+pub fn unit_launch_count(
+    unit: &ScheduleUnit,
+    graph: &CompactGraph,
+    instances: &[StageInstance],
+    width: usize,
+) -> usize {
+    let width = width.max(1);
+    let stages = unit_stages(unit, graph, instances);
+    if stages.first().map(|s| s.path.is_empty()).unwrap_or(true) {
+        return 1;
     }
+    let tree = ReuseTree::build(&stages);
+    tree.walk()
+        .iter()
+        .map(|level| {
+            let tasks = level.iter().filter(|n| n.stage.is_none()).count();
+            tasks.div_ceil(width)
+        })
+        .sum()
+}
+
+/// The batched-unit cost model: one fixed `launch_cost` per kernel
+/// launch plus `marginal` seconds per task executed — the linear
+/// launch-overhead model behind fine-grain task merging (a batch of B
+/// same-task evaluations costs `launch + B·marginal`, not `B·(launch +
+/// marginal)`). Feed `launches` from [`unit_launch_count`] and `tasks`
+/// from [`ScheduleUnit::task_cost`].
+pub fn batched_unit_cost(launches: usize, tasks: usize, launch_cost: f64, marginal: f64) -> f64 {
+    launches as f64 * launch_cost + tasks as f64 * marginal
 }
 
 #[cfg(test)]
@@ -490,5 +520,41 @@ mod tests {
         let (g, insts) = study(30, |id, p| p[9] = 5.0 * (id % 16 + 1) as f64);
         let plan = plan_study(&g, &insts, FineAlgorithm::Sca(5));
         assert!(plan.merge_time > Duration::ZERO);
+    }
+
+    #[test]
+    fn launch_counts_follow_the_frontier_shape() {
+        // t5 varies -> shared t1..t4 prefix, fan-out below
+        let (g, insts) = study(6, |id, p| p[9] = 5.0 * (id + 1) as f64);
+        let plan = plan_study(&g, &insts, FineAlgorithm::Rtma(6));
+        let merged = plan
+            .units
+            .iter()
+            .find(|u| u.kind == UnitKind::Merged)
+            .expect("one merged segmentation bucket");
+        // width 1 = node-at-a-time: one launch per unique task
+        assert_eq!(unit_launch_count(merged, &g, &insts, 1), merged.task_cost);
+        // unbounded width: one launch per tree level
+        let levels = insts[g.nodes[merged.nodes[0]].rep].tasks.len();
+        assert_eq!(unit_launch_count(merged, &g, &insts, usize::MAX), levels);
+        // widths in between are monotone
+        let (l1, l4, l16) = (
+            unit_launch_count(merged, &g, &insts, 1),
+            unit_launch_count(merged, &g, &insts, 4),
+            unit_launch_count(merged, &g, &insts, 16),
+        );
+        assert!(l1 >= l4 && l4 >= l16 && l16 >= levels);
+        // comparison units cost one launch regardless of width
+        let cmp = plan.units.iter().find(|u| u.stage_idx == 2).expect("compare unit");
+        assert_eq!(unit_launch_count(cmp, &g, &insts, 1), 1);
+    }
+
+    #[test]
+    fn batched_cost_is_launches_plus_marginal() {
+        let c = batched_unit_cost(3, 24, 0.5, 0.125);
+        assert!((c - (3.0 * 0.5 + 24.0 * 0.125)).abs() < 1e-12);
+        // batching B same-task evaluations beats B separate launches
+        let unbatched = batched_unit_cost(24, 24, 0.5, 0.125);
+        assert!(c < unbatched);
     }
 }

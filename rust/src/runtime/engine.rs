@@ -10,40 +10,98 @@ use crate::{Error, Result};
 
 use super::manifest::ArtifactManifest;
 
+/// Interned task identity: an index into the engine's executable table
+/// (manifest order). Resolve once with [`PjrtEngine::task_id`] and use
+/// the `_id` execution methods on the hot path — no string hashing or
+/// allocation per call.
+pub type TaskId = usize;
+
 /// Per-task wall-clock accounting (feeds the Table-6 cost model).
+///
+/// Executions are recorded under interned [`TaskId`]s plus a `cached`
+/// flag — the hot path touches two array slots and never allocates; the
+/// display names (`task`, `task#cached`) materialize only in
+/// [`TaskTimer::summary`]. Rows absorbed from other workers' summaries
+/// stay string-keyed (off the per-execution path).
 #[derive(Clone, Debug, Default)]
 pub struct TaskTimer {
-    totals: HashMap<String, (Duration, u64)>,
+    /// Interned task names; slot `2*id` accumulates live executions of
+    /// `names[id]`, slot `2*id + 1` cache-served ones.
+    names: Vec<String>,
+    slots: Vec<(Duration, u64)>,
+    /// String-keyed rows merged in via [`TaskTimer::absorb`].
+    extra: HashMap<String, (Duration, u64)>,
 }
 
 impl TaskTimer {
-    pub fn record(&mut self, task: &str, elapsed: Duration) {
-        let e = self.totals.entry(task.to_string()).or_default();
+    /// A timer with interned slots for `names` (the engine passes its
+    /// manifest's task names).
+    pub fn with_tasks(names: Vec<String>) -> Self {
+        let slots = vec![(Duration::ZERO, 0); names.len() * 2];
+        Self { names, slots, extra: HashMap::new() }
+    }
+
+    /// Record one execution of interned task `id`; `cached` executions
+    /// accumulate under the `<task>#cached` summary row.
+    pub fn record(&mut self, id: TaskId, cached: bool, elapsed: Duration) {
+        let e = &mut self.slots[id * 2 + usize::from(cached)];
         e.0 += elapsed;
         e.1 += 1;
     }
 
-    /// Mean seconds per execution for `task`, if any were recorded.
+    /// Mean seconds per execution for `task` (a plain task name, or
+    /// `<task>#cached` for the cache-served row), if any were recorded.
     pub fn mean_secs(&self, task: &str) -> Option<f64> {
-        self.totals.get(task).map(|(d, n)| d.as_secs_f64() / (*n as f64).max(1.0))
+        let (base, cached) = match task.strip_suffix("#cached") {
+            Some(b) => (b, true),
+            None => (task, false),
+        };
+        let mut d = Duration::ZERO;
+        let mut n = 0u64;
+        if let Some(id) = self.names.iter().position(|x| x == base) {
+            let (sd, sn) = self.slots[id * 2 + usize::from(cached)];
+            d += sd;
+            n += sn;
+        }
+        if let Some((ed, en)) = self.extra.get(task) {
+            d += *ed;
+            n += *en;
+        }
+        if n == 0 {
+            None
+        } else {
+            Some(d.as_secs_f64() / n as f64)
+        }
     }
 
     /// Merge another timer's rows into this one (the coordinator folds
     /// every worker engine's timer into a study-wide one).
     pub fn absorb(&mut self, rows: &[(String, f64, u64)]) {
         for (name, mean, n) in rows {
-            let e = self.totals.entry(name.clone()).or_default();
+            let e = self.extra.entry(name.clone()).or_insert((Duration::ZERO, 0));
             e.0 += Duration::from_secs_f64(mean * *n as f64);
             e.1 += n;
         }
     }
 
     /// (task, mean seconds, count) for all tasks, sorted by task name.
+    /// Cache-served executions report as `<task>#cached` rows.
     pub fn summary(&self) -> Vec<(String, f64, u64)> {
-        let mut rows: Vec<_> = self
-            .totals
-            .iter()
-            .map(|(k, (d, n))| (k.clone(), d.as_secs_f64() / (*n as f64).max(1.0), *n))
+        let mut acc: HashMap<String, (Duration, u64)> = self.extra.clone();
+        for (id, name) in self.names.iter().enumerate() {
+            for cached in [false, true] {
+                let (d, n) = self.slots[id * 2 + usize::from(cached)];
+                if n > 0 {
+                    let key = if cached { format!("{name}#cached") } else { name.clone() };
+                    let e = acc.entry(key).or_insert((Duration::ZERO, 0));
+                    e.0 += d;
+                    e.1 += n;
+                }
+            }
+        }
+        let mut rows: Vec<_> = acc
+            .into_iter()
+            .map(|(k, (d, n))| (k, d.as_secs_f64() / (n as f64).max(1.0), n))
             .collect();
         rows.sort_by(|a, b| a.0.cmp(&b.0));
         rows
@@ -58,7 +116,13 @@ pub struct PjrtEngine {
     /// Owns the PJRT CPU client; never read directly but must outlive
     /// the loaded executables.
     _client: xla::PjRtClient,
-    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Compiled executables, indexed by interned [`TaskId`] (manifest
+    /// order) — the hot path is an array index, not a map lookup.
+    execs: Vec<xla::PjRtLoadedExecutable>,
+    /// Task name → interned id (resolved once per call site, off the
+    /// per-execution path).
+    ids: HashMap<String, TaskId>,
+    compare_id: TaskId,
     timer: TaskTimer,
     /// Cross-study reuse cache, shared between worker engines. When set,
     /// the keyed execution paths consult/populate it at task granularity.
@@ -75,15 +139,20 @@ impl PjrtEngine {
     /// Load + compile from an already-parsed manifest.
     pub fn from_manifest(manifest: ArtifactManifest) -> Result<Self> {
         let client = xla::PjRtClient::cpu()?;
-        let mut execs = HashMap::new();
-        for t in &manifest.tasks {
+        let mut execs = Vec::with_capacity(manifest.tasks.len());
+        let mut ids = HashMap::new();
+        for (id, t) in manifest.tasks.iter().enumerate() {
             let path = manifest.dir.join(&t.file);
             let proto = xla::HloModuleProto::from_text_file(&path)?;
             let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
-            execs.insert(t.name.clone(), exe);
+            execs.push(client.compile(&comp)?);
+            ids.insert(t.name.clone(), id);
         }
-        Ok(Self { manifest, _client: client, execs, timer: TaskTimer::default(), cache: None })
+        let compare_id = *ids
+            .get(&manifest.compare_task)
+            .ok_or_else(|| Error::Artifact("manifest lacks the compare task".into()))?;
+        let timer = TaskTimer::with_tasks(manifest.tasks.iter().map(|t| t.name.clone()).collect());
+        Ok(Self { manifest, _client: client, execs, ids, compare_id, timer, cache: None })
     }
 
     /// Attach a (shared) cross-study reuse cache; keyed executions will
@@ -99,6 +168,11 @@ impl PjrtEngine {
 
     pub fn manifest(&self) -> &ArtifactManifest {
         &self.manifest
+    }
+
+    /// Interned id of a task, stable for this engine (manifest order).
+    pub fn task_id(&self, name: &str) -> Option<TaskId> {
+        self.ids.get(name).copied()
     }
 
     /// Tile height/width the artifacts were compiled for.
@@ -147,6 +221,23 @@ impl PjrtEngine {
         ])
     }
 
+    /// Resolve a task name, erroring on unknown tasks.
+    pub fn require_id(&self, name: &str) -> Result<TaskId> {
+        self.task_id(name).ok_or_else(|| Error::Artifact(format!("unknown task `{name}`")))
+    }
+
+    /// Validate that `id` names a 3-plane chain task.
+    fn require_chain(&self, id: TaskId) -> Result<()> {
+        let t = &self.manifest.tasks[id];
+        if t.image_inputs != 3 || t.outputs != 3 {
+            return Err(Error::Artifact(format!(
+                "task `{}` is not a 3-plane chain task (use execute_compare)",
+                t.name
+            )));
+        }
+        Ok(())
+    }
+
     /// Execute a chain task with literal-resident state — the hot path:
     /// chained tasks feed each other's output literals directly, so the
     /// host round-trip (literal → Plane → literal, ~23% of per-task
@@ -158,25 +249,28 @@ impl PjrtEngine {
         state: &[xla::Literal; 3],
         params: &[f32],
     ) -> Result<[xla::Literal; 3]> {
-        let t = self
-            .manifest
-            .task(name)
-            .ok_or_else(|| Error::Artifact(format!("unknown task `{name}`")))?;
-        if t.image_inputs != 3 || t.outputs != 3 {
-            return Err(Error::Artifact(format!(
-                "task `{name}` is not a 3-plane chain task (use execute_compare)"
-            )));
-        }
+        let id = self.require_id(name)?;
+        self.execute_task_lit_id(id, state, params)
+    }
+
+    /// [`PjrtEngine::execute_task_lit`] over an interned [`TaskId`].
+    pub fn execute_task_lit_id(
+        &mut self,
+        id: TaskId,
+        state: &[xla::Literal; 3],
+        params: &[f32],
+    ) -> Result<[xla::Literal; 3]> {
+        self.require_chain(id)?;
         let start = Instant::now();
         let pl = self.param_literal(params)?;
         let inputs: [&xla::Literal; 4] = [&state[0], &state[1], &state[2], &pl];
-        let exe = &self.execs[name];
+        let exe = &self.execs[id];
         let result = exe.execute(&inputs)?[0][0].to_literal_sync()?;
         let parts = result.to_tuple()?;
-        let out: [xla::Literal; 3] = parts
-            .try_into()
-            .map_err(|_| Error::Xla(format!("task `{name}` did not return 3 outputs")))?;
-        self.timer.record(name, start.elapsed());
+        let out: [xla::Literal; 3] = parts.try_into().map_err(|_| {
+            Error::Xla(format!("task `{}` did not return 3 outputs", self.manifest.tasks[id].name))
+        })?;
+        self.timer.record(id, false, start.elapsed());
         Ok(out)
     }
 
@@ -193,18 +287,128 @@ impl PjrtEngine {
         state: &[xla::Literal; 3],
         params: &[f32],
     ) -> Result<([xla::Literal; 3], bool)> {
+        let id = self.require_id(name)?;
+        self.execute_task_lit_keyed_id(id, key, state, params)
+    }
+
+    /// [`PjrtEngine::execute_task_lit_keyed`] over an interned
+    /// [`TaskId`].
+    pub fn execute_task_lit_keyed_id(
+        &mut self,
+        id: TaskId,
+        key: Option<u64>,
+        state: &[xla::Literal; 3],
+        params: &[f32],
+    ) -> Result<([xla::Literal; 3], bool)> {
         if let (Some(cache), Some(k)) = (self.cache.clone(), key) {
             if let Some(planes) = cache.get_state(k) {
                 let lits = self.lit_state(&planes)?;
-                self.timer.record(&format!("{name}#cached"), Duration::ZERO);
+                self.timer.record(id, true, Duration::ZERO);
                 return Ok((lits, true));
             }
-            let out = self.execute_task_lit(name, state, params)?;
+            let out = self.execute_task_lit_id(id, state, params)?;
             let planes = self.plane_state(&out)?;
             cache.put_state(k, planes);
             return Ok((out, false));
         }
-        Ok((self.execute_task_lit(name, state, params)?, false))
+        Ok((self.execute_task_lit_id(id, state, params)?, false))
+    }
+
+    /// Cache-aware **batched** chain-task execution: partitions the
+    /// batch into cache hits and misses, serves every hit from the cache
+    /// (a refcount bump on the stored state), executes all misses in ONE
+    /// backend call with the per-pixel loops vectorized across the
+    /// batch, publishes exactly the miss results, and returns per-lane
+    /// `(state, served_from_cache)` in input order. Lanes without a key
+    /// (or with no cache attached) count as misses.
+    pub fn execute_task_batch_keyed(
+        &mut self,
+        id: TaskId,
+        keys: &[Option<u64>],
+        states: &[&[xla::Literal; 3]],
+        params: &[&[f32]],
+    ) -> Result<Vec<([xla::Literal; 3], bool)>> {
+        let n = states.len();
+        if keys.len() != n || params.len() != n {
+            return Err(Error::Xla(format!(
+                "batch arity mismatch: {n} states, {} keys, {} params",
+                keys.len(),
+                params.len()
+            )));
+        }
+        self.require_chain(id)?;
+        let cache = self.cache.clone();
+        let mut out: Vec<Option<([xla::Literal; 3], bool)>> = (0..n).map(|_| None).collect();
+        let mut miss: Vec<usize> = Vec::with_capacity(n);
+        // intra-batch dedup: a later lane whose (quantized) key equals an
+        // earlier miss lane's key is served that lane's result — exactly
+        // what the sequential path does, where the earlier node publishes
+        // before the later one looks up. Without this, width > 1 could
+        // diverge from width 1 under quantized keys.
+        let mut dup_of: Vec<(usize, usize)> = Vec::new();
+        let mut first_missed: HashMap<u64, usize> = HashMap::new();
+        for i in 0..n {
+            match (&cache, keys[i]) {
+                (Some(c), Some(k)) => {
+                    if let Some(&src) = first_missed.get(&k) {
+                        // sibling lane already owns this key: served from
+                        // its result below, without a second miss lookup
+                        dup_of.push((i, src));
+                        continue;
+                    }
+                    match c.get_state(k) {
+                        Some(planes) => {
+                            let lits = self.lit_state(&planes)?;
+                            self.timer.record(id, true, Duration::ZERO);
+                            out[i] = Some((lits, true));
+                        }
+                        None => {
+                            first_missed.insert(k, i);
+                            miss.push(i);
+                        }
+                    }
+                }
+                _ => miss.push(i),
+            }
+        }
+        if !miss.is_empty() {
+            let start = Instant::now();
+            let mut padded: Vec<Vec<f32>> = Vec::with_capacity(miss.len());
+            for &i in &miss {
+                padded.push(self.padded_params(params[i])?);
+            }
+            let p_refs: Vec<&[f32]> = padded.iter().map(|p| p.as_slice()).collect();
+            let s_refs: Vec<&[xla::Literal; 3]> = miss.iter().map(|&i| states[i]).collect();
+            let exe = &self.execs[id];
+            let results = exe.execute_batch(&s_refs, &p_refs)?;
+            let elapsed = start.elapsed();
+            if results.len() != miss.len() {
+                return Err(Error::Xla(format!(
+                    "batch returned {} states for {} lanes",
+                    results.len(),
+                    miss.len()
+                )));
+            }
+            // per-task accounting: the launch cost amortizes over lanes
+            let per_lane = elapsed / miss.len() as u32;
+            for (&i, lits) in miss.iter().zip(results) {
+                if let (Some(c), Some(k)) = (&cache, keys[i]) {
+                    c.put_state(k, self.plane_state(&lits)?);
+                }
+                self.timer.record(id, false, per_lane);
+                out[i] = Some((lits, false));
+            }
+        }
+        for (i, src) in dup_of {
+            let lits = out[src].as_ref().expect("dedup source executed").0.clone();
+            if let Some(c) = &cache {
+                // the sequential path would hit the just-published key
+                c.note_state_hit();
+            }
+            self.timer.record(id, true, Duration::ZERO);
+            out[i] = Some((lits, true));
+        }
+        Ok(out.into_iter().map(|o| o.expect("every lane resolved")).collect())
     }
 
     /// Cache-aware comparison execution (metrics are memoized under the
@@ -217,8 +421,7 @@ impl PjrtEngine {
     ) -> Result<([f32; 3], bool)> {
         if let (Some(cache), Some(k)) = (self.cache.clone(), key) {
             if let Some(m) = cache.get_metrics(k) {
-                let name = self.manifest.compare_task.clone();
-                self.timer.record(&format!("{name}#cached"), Duration::ZERO);
+                self.timer.record(self.compare_id, true, Duration::ZERO);
                 return Ok((m, true));
             }
             let m = self.execute_compare(state, reference)?;
@@ -249,7 +452,7 @@ impl PjrtEngine {
         state: &[Plane; 3],
         reference: &Plane,
     ) -> Result<[f32; 3]> {
-        let name = self.manifest.compare_task.clone();
+        let id = self.compare_id;
         let start = Instant::now();
         let inputs = vec![
             self.plane_literal(&state[0])?,
@@ -258,18 +461,19 @@ impl PjrtEngine {
             self.plane_literal(reference)?,
             self.param_literal(&[])?,
         ];
-        let exe = &self.execs[&name];
+        let exe = &self.execs[id];
         let result = exe.execute::<xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
         let metrics = result.to_tuple1()?;
         let v = metrics.to_vec::<f32>()?;
         if v.len() != 3 {
             return Err(Error::Xla(format!("compare returned {} metrics", v.len())));
         }
-        self.timer.record(&name, start.elapsed());
+        self.timer.record(id, false, start.elapsed());
         Ok([v[0], v[1], v[2]])
     }
 
-    fn param_literal(&self, params: &[f32]) -> Result<xla::Literal> {
+    /// Zero-pad a parameter vector to the artifact capacity.
+    fn padded_params(&self, params: &[f32]) -> Result<Vec<f32>> {
         let mut padded = vec![0.0f32; self.manifest.n_params];
         if params.len() > self.manifest.n_params {
             return Err(Error::Config(format!(
@@ -279,7 +483,11 @@ impl PjrtEngine {
             )));
         }
         padded[..params.len()].copy_from_slice(params);
-        Ok(xla::Literal::vec1(&padded))
+        Ok(padded)
+    }
+
+    fn param_literal(&self, params: &[f32]) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(&self.padded_params(params)?))
     }
 
     /// Run the full chain (norm → t7) on one tile with per-task params,

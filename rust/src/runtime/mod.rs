@@ -15,5 +15,5 @@
 mod engine;
 mod manifest;
 
-pub use engine::{PjrtEngine, TaskTimer};
+pub use engine::{PjrtEngine, TaskId, TaskTimer};
 pub use manifest::{ArtifactManifest, TaskArtifact};

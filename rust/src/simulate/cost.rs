@@ -151,10 +151,10 @@ mod tests {
     #[test]
     fn from_timer_means() {
         use std::time::Duration;
-        let mut t = TaskTimer::default();
-        t.record("t1", Duration::from_millis(100));
-        t.record("t1", Duration::from_millis(300));
-        t.record("t2", Duration::from_millis(50));
+        let mut t = TaskTimer::with_tasks(vec!["t1".into(), "t2".into()]);
+        t.record(0, false, Duration::from_millis(100));
+        t.record(0, false, Duration::from_millis(300));
+        t.record(1, false, Duration::from_millis(50));
         let m = CostModel::from_timer(&t);
         assert!((m.cost_of("t1") - 0.2).abs() < 1e-9);
         assert!((m.cost_of("t2") - 0.05).abs() < 1e-9);

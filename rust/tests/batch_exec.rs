@@ -1,0 +1,202 @@
+//! Frontier-batched execution: batch width must never change results —
+//! metrics bit-identical, cache contents identical — and the batched
+//! engine call must publish exactly its miss keys.
+
+use std::sync::Arc;
+
+use rtf_reuse::cache::ReuseCache;
+use rtf_reuse::config::{SaMethod, SamplerKind, StudyConfig};
+use rtf_reuse::data::{synth_tile, SplitMix64, SynthConfig};
+use rtf_reuse::driver::{prepare, run_pjrt_with_cache};
+use rtf_reuse::merging::{FineAlgorithm, TrtmaOptions};
+use rtf_reuse::runtime::PjrtEngine;
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fan_out_cfg(width: usize) -> StudyConfig {
+    StudyConfig {
+        method: SaMethod::Moat { r: 1 }, // 16 evaluations
+        // one bucket per merge group: the widest frontiers the study has
+        algorithm: FineAlgorithm::Trtma(TrtmaOptions::new(1)),
+        workers: 2,
+        batch_width: width,
+        artifacts_dir: artifacts_dir(),
+        ..StudyConfig::default()
+    }
+}
+
+#[test]
+fn batch_width_never_changes_results_or_cache_contents() {
+    let mut runs: Vec<(rtf_reuse::coordinator::StudyOutcome, Arc<ReuseCache>)> = Vec::new();
+    for width in [1usize, 4, 16] {
+        let cfg = fan_out_cfg(width);
+        let prepared = prepare(&cfg);
+        let plan = prepared.plan(&cfg);
+        let cache = Arc::new(ReuseCache::with_capacity(512 * 1024 * 1024));
+        let outcome = run_pjrt_with_cache(&cfg, &prepared, &plan, Some(cache.clone()))
+            .expect("run `make artifacts` first");
+        runs.push((outcome, cache));
+    }
+    let (base, base_cache) = &runs[0];
+    for (o, c) in &runs[1..] {
+        // [f32; 3] equality is exact: bit-identical metrics
+        assert_eq!(base.metrics, o.metrics, "metrics drift across batch widths");
+        assert_eq!(
+            base_cache.resident_keys(),
+            c.resident_keys(),
+            "state cache contents drift across batch widths"
+        );
+        assert_eq!(
+            base_cache.metric_keys(),
+            c.metric_keys(),
+            "metric cache contents drift across batch widths"
+        );
+    }
+}
+
+#[test]
+fn randomized_studies_are_width_invariant() {
+    let mut rng = SplitMix64::new(0xBA7C4);
+    for _ in 0..2 {
+        let sampler = match rng.uniform_usize(0, 3) {
+            0 => SamplerKind::Qmc,
+            1 => SamplerKind::Mc,
+            _ => SamplerKind::Lhs,
+        };
+        let algorithm = match rng.uniform_usize(0, 3) {
+            0 => FineAlgorithm::Rtma(rng.uniform_usize(2, 9)),
+            1 => FineAlgorithm::Trtma(TrtmaOptions::new(rng.uniform_usize(1, 5))),
+            _ => FineAlgorithm::Naive(rng.uniform_usize(2, 7)),
+        };
+        let seed = rng.next_u64() % 1000;
+        let mut outcomes = Vec::new();
+        for width in [1usize, 8] {
+            let cfg = StudyConfig {
+                sampler,
+                algorithm,
+                seed,
+                ..fan_out_cfg(width)
+            };
+            let prepared = prepare(&cfg);
+            let plan = prepared.plan(&cfg);
+            let outcome =
+                run_pjrt_with_cache(&cfg, &prepared, &plan, None).expect("study executes");
+            outcomes.push(outcome);
+        }
+        assert_eq!(
+            outcomes[0].metrics, outcomes[1].metrics,
+            "randomized study (sampler {}, algo {}, seed {seed}) drifted with batching",
+            sampler.name(),
+            algorithm.name()
+        );
+    }
+}
+
+#[test]
+fn batch_partition_publishes_exactly_the_miss_keys() {
+    let mut engine = PjrtEngine::load(artifacts_dir()).expect("run `make artifacts` first");
+    let cache = Arc::new(ReuseCache::with_capacity(64 * 1024 * 1024));
+    engine.set_cache(cache.clone());
+    let (h, w) = engine.tile_shape();
+    let tile = synth_tile(&SynthConfig::new(h, w, 7));
+    let state = engine.lit_state(&[tile.r.clone(), tile.g.clone(), tile.b.clone()]).unwrap();
+    let id = engine.task_id("t1").expect("t1 artifact present");
+    let params: Vec<Vec<f32>> = vec![
+        vec![220.0, 220.0, 220.0, 4.0, 4.0],
+        vec![200.0, 210.0, 215.0, 3.0, 5.0],
+        vec![230.0, 205.0, 225.0, 4.0, 3.5],
+    ];
+    let (k0, k1, k2) = (101u64, 202, 303);
+
+    // pre-populate lane 0's key
+    let _ = engine.execute_task_lit_keyed_id(id, Some(k0), &state, &params[0]).unwrap();
+    assert!(cache.contains_state(k0));
+    let inserts_before = cache.stats().inserts;
+
+    let keys = [Some(k0), Some(k1), Some(k2)];
+    let states = [&state, &state, &state];
+    let p_refs: Vec<&[f32]> = params.iter().map(|p| p.as_slice()).collect();
+    let res = engine.execute_task_batch_keyed(id, &keys, &states, &p_refs).unwrap();
+    assert_eq!(res.len(), 3);
+    assert!(res[0].1, "lane 0 must be served from the cache");
+    assert!(!res[1].1 && !res[2].1, "lanes 1, 2 are misses");
+    assert!(cache.contains_state(k1) && cache.contains_state(k2));
+    assert_eq!(
+        cache.stats().inserts - inserts_before,
+        2,
+        "exactly the miss keys are published"
+    );
+
+    // miss lanes must match the scalar execution bit-for-bit
+    let direct = engine.execute_task_lit("t1", &state, &params[1]).unwrap();
+    for (a, b) in direct.iter().zip(&res[1].0) {
+        assert_eq!(a.to_vec::<f32>().unwrap(), b.to_vec::<f32>().unwrap());
+    }
+}
+
+#[test]
+fn duplicate_keys_within_a_batch_dedupe_like_the_sequential_path() {
+    // Two miss lanes sharing one (e.g. quantized) chain key: the
+    // sequential path executes the first and serves the second from the
+    // just-published state. The batched partition must match — one
+    // execution, one insert, identical states on both lanes.
+    let mut engine = PjrtEngine::load(artifacts_dir()).unwrap();
+    let cache = Arc::new(ReuseCache::with_capacity(64 * 1024 * 1024));
+    engine.set_cache(cache.clone());
+    let (h, w) = engine.tile_shape();
+    let tile = synth_tile(&SynthConfig::new(h, w, 9));
+    let state = engine.lit_state(&[tile.r.clone(), tile.g.clone(), tile.b.clone()]).unwrap();
+    let id = engine.task_id("t1").unwrap();
+    let p0: &[f32] = &[220.0, 220.0, 220.0, 4.0, 4.0];
+    let p1: &[f32] = &[220.4, 220.0, 220.0, 4.0, 4.0]; // same quantized cell, say
+    let shared = 0xdeadu64;
+    let before = cache.stats();
+    let res = engine
+        .execute_task_batch_keyed(id, &[Some(shared), Some(shared)], &[&state, &state], &[p0, p1])
+        .unwrap();
+    assert!(!res[0].1, "first lane executes");
+    assert!(res[1].1, "second lane is served the first's result");
+    let after = cache.stats();
+    assert_eq!(after.inserts - before.inserts, 1, "one publication for the shared key");
+    // counter parity with the sequential path: one miss (first lane's
+    // lookup), one hit (second lane served after publication)
+    assert_eq!(after.misses - before.misses, 1);
+    assert_eq!(after.hits - before.hits, 1);
+    for (a, b) in res[0].0.iter().zip(&res[1].0) {
+        assert_eq!(a.to_vec::<f32>().unwrap(), b.to_vec::<f32>().unwrap());
+    }
+}
+
+#[test]
+fn spill_dirs_are_cleaned_up_and_never_collide() {
+    use rtf_reuse::coordinator::{execute_study, ExecuteOptions};
+    use rtf_reuse::driver::{make_tiles, reference_masks};
+    use rtf_reuse::sampling::default_space;
+
+    let cfg = fan_out_cfg(8);
+    let prepared = prepare(&cfg);
+    let plan = prepared.plan(&cfg);
+    let mut engine = PjrtEngine::load(&cfg.artifacts_dir).unwrap();
+    let (h, w) = engine.tile_shape();
+    let tiles = make_tiles(&cfg, h, w);
+    let refs =
+        reference_masks(&mut engine, &default_space(), &prepared.workflow, &tiles).unwrap();
+    drop(engine);
+
+    let opts = ExecuteOptions::new(2, &cfg.artifacts_dir).with_state_limit(64 * 1024);
+    execute_study(&opts, &plan, &prepared.graph, &prepared.instances, &tiles, &refs,
+        prepared.n_evals())
+    .unwrap();
+
+    // every spill dir of this process must be gone after execution
+    let prefix = format!("rtf-reuse-spill-{}-", std::process::id());
+    let leftovers: Vec<String> = std::fs::read_dir(std::env::temp_dir())
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.starts_with(&prefix))
+        .collect();
+    assert!(leftovers.is_empty(), "spill dirs leaked: {leftovers:?}");
+}

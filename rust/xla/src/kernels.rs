@@ -439,6 +439,622 @@ fn par(p: &[f32], i: usize) -> f32 {
     p.get(i).copied().unwrap_or(0.0)
 }
 
+// ---------------------------------------------------------------------------
+// batched execution: one call, B lanes
+// ---------------------------------------------------------------------------
+//
+// Sensitivity-analysis studies execute the *same task* over many nearby
+// parameter sets; the fine-grain batching layer stacks up to B of those
+// evaluations into one call and vectorizes the per-pixel inner loops
+// across the batch. Data is lane-interleaved (`data[pixel * b + lane]`),
+// so the innermost loop of every sweep runs over `b` contiguous f32s —
+// bounds checks and index arithmetic amortize over the batch and LLVM
+// autovectorizes the lane loop.
+//
+// **Equivalence contract.** Each lane of a batched task must produce
+// bit-identical output to the scalar kernel on the same inputs: every
+// batched operator mirrors its scalar counterpart operation-for-
+// operation in the same order (f32 min/max are exact; the f64
+// normalization sums accumulate in the same pixel order), and the
+// fixpoint loops apply the same sweeps per lane — a lane is frozen at
+// the first sweep that leaves it unchanged, exactly where the scalar
+// `fixpoint` stops. `batched_chain_matches_scalar_lanes` enforces this.
+
+/// A batch of B same-shaped planes, lane-interleaved:
+/// `data[(y * w + x) * b + lane]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    data: Vec<f32>,
+    h: usize,
+    w: usize,
+    b: usize,
+}
+
+impl Batch {
+    fn filled(v: f32, h: usize, w: usize, b: usize) -> Batch {
+        Batch { data: vec![v; h * w * b], h, w, b }
+    }
+
+    /// Interleave one plane per lane (all planes must share a shape).
+    fn from_lanes(planes: &[&Grid]) -> Batch {
+        let b = planes.len();
+        let (h, w) = (planes[0].h, planes[0].w);
+        let mut data = vec![0.0f32; h * w * b];
+        for (l, p) in planes.iter().enumerate() {
+            for (i, &v) in p.data.iter().enumerate() {
+                data[i * b + l] = v;
+            }
+        }
+        Batch { data, h, w, b }
+    }
+
+    /// Extract one lane as a scalar grid.
+    fn lane(&self, l: usize) -> Grid {
+        let mut out = Grid::filled(0.0, self.h, self.w);
+        for i in 0..self.h * self.w {
+            out.data[i] = self.data[i * self.b + l];
+        }
+        out
+    }
+
+    fn map(&self, f: impl Fn(f32) -> f32) -> Batch {
+        Batch {
+            data: self.data.iter().map(|&v| f(v)).collect(),
+            h: self.h,
+            w: self.w,
+            b: self.b,
+        }
+    }
+
+    fn zip(&self, other: &Batch, f: impl Fn(f32, f32) -> f32) -> Batch {
+        debug_assert_eq!((self.h, self.w, self.b), (other.h, other.w, other.b));
+        let data = self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect();
+        Batch { data, h: self.h, w: self.w, b: self.b }
+    }
+
+    /// A new batch holding only the given lanes, in the given order.
+    fn select_lanes(&self, lanes: &[usize]) -> Batch {
+        let nb = lanes.len();
+        let mut data = vec![0.0f32; self.h * self.w * nb];
+        for i in 0..self.h * self.w {
+            let src = &self.data[i * self.b..(i + 1) * self.b];
+            let dst = &mut data[i * nb..(i + 1) * nb];
+            for (j, &l) in lanes.iter().enumerate() {
+                dst[j] = src[l];
+            }
+        }
+        Batch { data, h: self.h, w: self.w, b: nb }
+    }
+
+    /// Write `src` lane `j` into `self` lane `lanes[j]` for every j.
+    fn scatter_lanes(&mut self, src: &Batch, lanes: &[usize]) {
+        debug_assert_eq!(src.b, lanes.len());
+        for i in 0..self.h * self.w {
+            for (j, &l) in lanes.iter().enumerate() {
+                self.data[i * self.b + l] = src.data[i * src.b + j];
+            }
+        }
+    }
+
+    /// Copy `src` lane `src_lane` into `self` lane `dst_lane`.
+    fn copy_lane(&mut self, dst_lane: usize, src: &Batch, src_lane: usize) {
+        for i in 0..self.h * self.w {
+            self.data[i * self.b + dst_lane] = src.data[i * src.b + src_lane];
+        }
+    }
+}
+
+/// Per-lane "did any pixel change" between two equally-shaped batches.
+fn changed_lanes(a: &Batch, b: &Batch) -> Vec<bool> {
+    let mut ch = vec![false; a.b];
+    for (ca, cb) in a.data.chunks_exact(a.b).zip(b.data.chunks_exact(b.b)) {
+        for l in 0..a.b {
+            if ca[l] != cb[l] {
+                ch[l] = true;
+            }
+        }
+    }
+    ch
+}
+
+/// Batched neighborhood extremum — the vectorized form of [`nbr_ext`]:
+/// neighbors are applied in the same order (up, down, left, right, then
+/// the four diagonals), with the innermost loop running over the `b`
+/// contiguous lanes of each pixel.
+fn nbr_ext_b(x: &Batch, conn8: bool, ext: impl Fn(f32, f32) -> f32 + Copy) -> Batch {
+    let (h, w, b) = (x.h, x.w, x.b);
+    let mut out = x.clone(); // start from the center values
+    let row = w * b;
+    for y in 0..h {
+        for c in 0..w {
+            let d = (y * w + c) * b;
+            let mut pull = |s: usize| {
+                let dst = &mut out.data[d..d + b];
+                let src = &x.data[s..s + b];
+                for (dv, &sv) in dst.iter_mut().zip(src) {
+                    *dv = ext(*dv, sv);
+                }
+            };
+            if y > 0 {
+                pull(d - row);
+            }
+            if y + 1 < h {
+                pull(d + row);
+            }
+            if c > 0 {
+                pull(d - b);
+            }
+            if c + 1 < w {
+                pull(d + b);
+            }
+            if conn8 {
+                if y > 0 && c > 0 {
+                    pull(d - row - b);
+                }
+                if y > 0 && c + 1 < w {
+                    pull(d - row + b);
+                }
+                if y + 1 < h && c > 0 {
+                    pull(d + row - b);
+                }
+                if y + 1 < h && c + 1 < w {
+                    pull(d + row + b);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One batched reconstruction-by-dilation sweep (cf. [`recon_sweep`]).
+fn recon_sweep_b(marker: &Batch, mask: &Batch, conn8: bool) -> Batch {
+    nbr_ext_b(marker, conn8, f32::max).zip(mask, f32::min)
+}
+
+/// One batched label-growing sweep (cf. [`label_sweep`]).
+fn label_sweep_b(labels: &Batch, active: &Batch, conn8: bool) -> Batch {
+    let nbr = nbr_ext_b(labels, conn8, f32::max);
+    let mut out = labels.clone();
+    for i in 0..out.data.len() {
+        if out.data[i] == 0.0 && active.data[i] > 0.5 {
+            out.data[i] = nbr.data[i];
+        }
+    }
+    out
+}
+
+/// Batched monotone fixpoint with per-lane convergence: every loop
+/// iteration applies one sweep to all still-changing lanes; a lane is
+/// frozen into the result at the first sweep that leaves it unchanged
+/// (identical to where the scalar [`fixpoint`] stops for that lane).
+/// Converged lanes are *compacted out* so slow lanes do not drag the
+/// batch — the sweep cost tracks each lane's own convergence distance.
+/// `ctx` batches (masks, activity planes) are compacted in sync and
+/// handed back to the sweep alongside the iterate.
+fn fixpoint_b(init: Batch, ctx: Vec<Batch>, sweep: impl Fn(&Batch, &[Batch]) -> Batch) -> Batch {
+    let b = init.b;
+    let mut result = Batch::filled(0.0, init.h, init.w, b);
+    let mut live: Vec<usize> = (0..b).collect();
+    let mut cur = init;
+    let mut ctx = ctx;
+    for _ in 0..MAX_SWEEPS {
+        let nxt = sweep(&cur, &ctx);
+        let changed = changed_lanes(&cur, &nxt);
+        if changed.iter().all(|&c| c) {
+            cur = nxt;
+            continue;
+        }
+        let keep: Vec<usize> = (0..cur.b).filter(|&i| changed[i]).collect();
+        for i in 0..cur.b {
+            if !changed[i] {
+                result.copy_lane(live[i], &nxt, i);
+            }
+        }
+        if keep.is_empty() {
+            return result;
+        }
+        live = keep.iter().map(|&i| live[i]).collect();
+        cur = nxt.select_lanes(&keep);
+        for c in ctx.iter_mut() {
+            *c = c.select_lanes(&keep);
+        }
+    }
+    for (i, &orig) in live.iter().enumerate() {
+        result.copy_lane(orig, &cur, i);
+    }
+    result
+}
+
+/// Batched greyscale morphological reconstruction (cf.
+/// [`morph_reconstruct`]).
+fn morph_reconstruct_b(marker: &Batch, mask: &Batch, conn8: bool) -> Batch {
+    let init = marker.zip(mask, f32::min);
+    fixpoint_b(init, vec![mask.clone()], move |m, ctx| recon_sweep_b(m, &ctx[0], conn8))
+}
+
+/// Batched hole filling (cf. [`fill_holes`]).
+fn fill_holes_b(binary: &Batch, conn8: bool) -> Batch {
+    let (h, w, b) = (binary.h, binary.w, binary.b);
+    let comp = binary.map(|v| 1.0 - v);
+    let mut marker = Batch::filled(0.0, h, w, b);
+    for y in 0..h {
+        for c in 0..w {
+            if y == 0 || y == h - 1 || c == 0 || c == w - 1 {
+                let d = (y * w + c) * b;
+                marker.data[d..d + b].copy_from_slice(&comp.data[d..d + b]);
+            }
+        }
+    }
+    let outside =
+        fixpoint_b(marker, vec![comp.clone()], move |m, ctx| recon_sweep_b(m, &ctx[0], conn8));
+    let mut out = Batch::filled(0.0, h, w, b);
+    for i in 0..out.data.len() {
+        let keep = if outside.data[i] > 0.5 { 0.0 } else { 1.0 };
+        out.data[i] = keep * binary.data[i].max(comp.data[i]);
+    }
+    out
+}
+
+/// Batched connected components (cf. [`connected_components`]).
+fn connected_components_b(mask: &Batch, conn8: bool) -> Batch {
+    let (h, w, b) = (mask.h, mask.w, mask.b);
+    let big = (h * w) as f32 + 2.0;
+    let mut neg = Batch::filled(0.0, h, w, b);
+    let mut ceil = Batch::filled(0.0, h, w, b);
+    for i in 0..h * w {
+        for l in 0..b {
+            let j = i * b + l;
+            if mask.data[j] > 0.5 {
+                neg.data[j] = -(i as f32 + 1.0);
+                ceil.data[j] = 0.0;
+            } else {
+                neg.data[j] = -big;
+                ceil.data[j] = -big;
+            }
+        }
+    }
+    let rec = fixpoint_b(neg, vec![ceil], move |m, ctx| recon_sweep_b(m, &ctx[0], conn8));
+    let mut labels = Batch::filled(0.0, h, w, b);
+    for j in 0..labels.data.len() {
+        if mask.data[j] > 0.5 {
+            labels.data[j] = -rec.data[j];
+        }
+    }
+    labels
+}
+
+/// Batched per-component pixel counts (cf. [`component_sizes`]). The
+/// histogram passes run lane-by-lane in pixel order, matching the scalar
+/// accumulation exactly; they are O(HW) per lane and far off the
+/// sweep-dominated critical path.
+fn component_sizes_b(labels: &Batch) -> Batch {
+    let (hw, b) = (labels.h * labels.w, labels.b);
+    let n = hw + 2;
+    let mut out = Batch::filled(0.0, labels.h, labels.w, b);
+    for l in 0..b {
+        let mut counts = vec![0.0f32; n];
+        for i in 0..hw {
+            let v = labels.data[i * b + l];
+            counts[(v.max(0.0) as usize).min(n - 1)] += 1.0;
+        }
+        for i in 0..hw {
+            let v = labels.data[i * b + l];
+            if v > 0.5 {
+                out.data[i * b + l] = counts[(v as usize).min(n - 1)];
+            }
+        }
+    }
+    out
+}
+
+/// Batched per-component max of `values` (cf. [`component_max`]).
+fn component_max_b(labels: &Batch, values: &Batch) -> Batch {
+    let (hw, b) = (labels.h * labels.w, labels.b);
+    let n = hw + 2;
+    let mut out = Batch::filled(0.0, labels.h, labels.w, b);
+    for l in 0..b {
+        let mut maxes = vec![f32::NEG_INFINITY; n];
+        for i in 0..hw {
+            let slot = (labels.data[i * b + l].max(0.0) as usize).min(n - 1);
+            maxes[slot] = maxes[slot].max(values.data[i * b + l]);
+        }
+        for i in 0..hw {
+            let v = labels.data[i * b + l];
+            if v > 0.5 {
+                out.data[i * b + l] = maxes[(v as usize).min(n - 1)];
+            }
+        }
+    }
+    out
+}
+
+/// Batched area filter with per-lane size bounds (cf. [`area_filter`]).
+fn area_filter_b(mask: &Batch, min_size: &[f32], max_size: &[f32], conn8: bool) -> Batch {
+    let labels = connected_components_b(mask, conn8);
+    let sizes = component_sizes_b(&labels);
+    let mut out = Batch::filled(0.0, mask.h, mask.w, mask.b);
+    let b = mask.b;
+    for i in 0..mask.h * mask.w {
+        for l in 0..b {
+            let j = i * b + l;
+            if (min_size[l]..=max_size[l]).contains(&sizes.data[j]) {
+                out.data[j] = mask.data[j];
+            }
+        }
+    }
+    out
+}
+
+/// Batched erosion depth (cf. [`erosion_depth`]; fixed sweep count, no
+/// convergence tracking needed).
+fn erosion_depth_b(mask: &Batch) -> Batch {
+    let mut cur = mask.clone();
+    let mut depth = mask.clone();
+    for _ in 0..DEPTH_LEVELS - 1 {
+        cur = nbr_ext_b(&cur, true, f32::min);
+        for i in 0..depth.data.len() {
+            depth.data[i] += cur.data[i];
+        }
+    }
+    depth
+}
+
+/// Batched seeded watershed (cf. [`watershed`]); `conn8` is the label-
+/// growing connectivity, uniform for all lanes of the (sub-)batch.
+fn watershed_b(mask: &Batch, depth: &Batch, conn8: bool) -> Batch {
+    let (h, w, b) = (mask.h, mask.w, mask.b);
+    let marker = depth.map(|v| (v - SEED_H).max(0.0));
+    let hrecon = morph_reconstruct_b(&marker, depth, true);
+    let comp = connected_components_b(mask, true);
+    let peak = component_max_b(&comp, depth);
+
+    let mut seed_mask = Batch::filled(0.0, h, w, b);
+    for j in 0..seed_mask.data.len() {
+        let inside = mask.data[j] > 0.5;
+        let hseed = depth.data[j] - hrecon.data[j] >= SEED_H && inside;
+        let lowseed = peak.data[j] < SEED_H && depth.data[j] >= peak.data[j] && inside;
+        if hseed || lowseed {
+            seed_mask.data[j] = 1.0;
+        }
+    }
+    let mut labels = connected_components_b(&seed_mask, true);
+
+    for i in 0..DEPTH_LEVELS {
+        let level = (DEPTH_LEVELS - i) as f32;
+        let mut active = Batch::filled(0.0, h, w, b);
+        for j in 0..active.data.len() {
+            if depth.data[j] >= level && mask.data[j] > 0.5 {
+                active.data[j] = 1.0;
+            }
+        }
+        labels = fixpoint_b(labels, vec![active], move |l, ctx| label_sweep_b(l, &ctx[0], conn8));
+    }
+    for j in 0..labels.data.len() {
+        if mask.data[j] <= 0.5 {
+            labels.data[j] = 0.0;
+        }
+    }
+    labels
+}
+
+/// Batched stain normalization of one channel: per-lane f64 mean and
+/// variance accumulated in the scalar [`normalize_channel`]'s pixel
+/// order, so every lane matches the scalar output bit-for-bit.
+fn normalize_channel_b(x: &Batch) -> Batch {
+    let b = x.b;
+    let n = (x.h * x.w) as f64;
+    let mut mu = vec![0.0f64; b];
+    for chunk in x.data.chunks_exact(b) {
+        for l in 0..b {
+            mu[l] += chunk[l] as f64;
+        }
+    }
+    for m in mu.iter_mut() {
+        *m /= n;
+    }
+    let mut var = vec![0.0f64; b];
+    for chunk in x.data.chunks_exact(b) {
+        for l in 0..b {
+            let d = chunk[l] as f64 - mu[l];
+            var[l] += d * d;
+        }
+    }
+    let sd: Vec<f32> = var.iter().map(|&v| (v / n).sqrt() as f32 + 1e-6).collect();
+    let muf: Vec<f32> = mu.iter().map(|&m| m as f32).collect();
+    let mut out = x.clone();
+    for chunk in out.data.chunks_exact_mut(b) {
+        for l in 0..b {
+            chunk[l] = ((chunk[l] - muf[l]) / sd[l] * NORM_STD + NORM_MEAN).clamp(0.0, 255.0);
+        }
+    }
+    out
+}
+
+/// Per-lane value of parameter `i` across the batch.
+fn lane_params(params: &[&[f32]], i: usize) -> Vec<f32> {
+    params.iter().map(|p| par(p, i)).collect()
+}
+
+/// Run `f` once per connectivity group (lanes whose connectivity flag
+/// agrees), reassembling one output batch. The uniform case runs on the
+/// full batch with no lane copies.
+fn run_conn_grouped(
+    inputs: &[&Batch],
+    conn8: &[bool],
+    f: impl Fn(&[&Batch], bool) -> Batch,
+) -> Batch {
+    let b = conn8.len();
+    if conn8.iter().all(|&c| c == conn8[0]) {
+        return f(inputs, conn8[0]);
+    }
+    let (h, w) = (inputs[0].h, inputs[0].w);
+    let mut out = Batch::filled(0.0, h, w, b);
+    for flag in [false, true] {
+        let lanes: Vec<usize> = (0..b).filter(|&l| conn8[l] == flag).collect();
+        if lanes.is_empty() {
+            continue;
+        }
+        let sel: Vec<Batch> = inputs.iter().map(|x| x.select_lanes(&lanes)).collect();
+        let refs: Vec<&Batch> = sel.iter().collect();
+        out.scatter_lanes(&f(&refs, flag), &lanes);
+    }
+    out
+}
+
+fn task_norm_b(a: &Batch, b: &Batch, c: &Batch) -> [Batch; 3] {
+    [normalize_channel_b(a), normalize_channel_b(b), normalize_channel_b(c)]
+}
+
+fn task_t1_b(r: &Batch, g: &Batch, bl: &Batch, params: &[&[f32]]) -> [Batch; 3] {
+    let (bb, gg, rr) = (lane_params(params, 0), lane_params(params, 1), lane_params(params, 2));
+    let (t1, t2) = (lane_params(params, 3), lane_params(params, 4));
+    let (h, w, b) = (r.h, r.w, r.b);
+    let mut grey = Batch::filled(0.0, h, w, b);
+    let mut fg = Batch::filled(0.0, h, w, b);
+    for i in 0..h * w {
+        for l in 0..b {
+            let j = i * b + l;
+            let (rv, gv, bv) = (r.data[j], g.data[j], bl.data[j]);
+            let background = rv > bb[l] && gv > gg[l] && bv > rr[l];
+            let rbc = (rv + 1.0) / (gv + 1.0) > t1[l] && (rv + 1.0) / (bv + 1.0) > t2[l];
+            grey.data[j] = 255.0 - (0.299 * rv + 0.587 * gv + 0.114 * bv);
+            fg.data[j] = if background || rbc { 0.0 } else { 1.0 };
+        }
+    }
+    let zeros = Batch::filled(0.0, h, w, b);
+    [grey, fg, zeros]
+}
+
+fn task_t2_b(grey: &Batch, fg: &Batch, params: &[&[f32]]) -> [Batch; 3] {
+    let g1 = lane_params(params, 0);
+    let rc = lane_params(params, 1);
+    let marker = grey.zip(fg, |gv, fv| (gv - DOME_H).max(0.0) * fv);
+    let conn: Vec<bool> = rc.iter().map(|&v| v >= 8.0).collect();
+    let recon = run_conn_grouped(&[&marker, grey], &conn, |ins, c8| {
+        morph_reconstruct_b(ins[0], ins[1], c8)
+    });
+    let domes = grey.zip(&recon, |gv, rv| gv - rv).zip(fg, |d, fv| d * fv);
+    let b = grey.b;
+    let mut cand = Batch::filled(0.0, grey.h, grey.w, b);
+    for i in 0..grey.h * grey.w {
+        for l in 0..b {
+            let j = i * b + l;
+            if domes.data[j] >= g1[l] {
+                cand.data[j] = 1.0;
+            }
+        }
+    }
+    [grey.clone(), cand, domes]
+}
+
+fn task_t3_b(grey: &Batch, cand: &Batch, domes: &Batch, params: &[&[f32]]) -> [Batch; 3] {
+    let fh = lane_params(params, 0);
+    let conn: Vec<bool> = fh.iter().map(|&v| v >= 8.0).collect();
+    let filled = run_conn_grouped(&[cand], &conn, |ins, c8| fill_holes_b(ins[0], c8));
+    [grey.clone(), filled, domes.clone()]
+}
+
+fn task_t4_b(grey: &Batch, filled: &Batch, domes: &Batch, params: &[&[f32]]) -> [Batch; 3] {
+    let (g2, min_s, max_s) =
+        (lane_params(params, 0), lane_params(params, 1), lane_params(params, 2));
+    let labels = connected_components_b(filled, true);
+    let sizes = component_sizes_b(&labels);
+    let peak = component_max_b(&labels, domes);
+    let b = filled.b;
+    let mut kept = Batch::filled(0.0, filled.h, filled.w, b);
+    for i in 0..filled.h * filled.w {
+        for l in 0..b {
+            let j = i * b + l;
+            let keep = (min_s[l]..=max_s[l]).contains(&sizes.data[j]) && peak.data[j] >= g2[l];
+            if keep {
+                kept.data[j] = filled.data[j];
+            }
+        }
+    }
+    [grey.clone(), kept, domes.clone()]
+}
+
+fn task_t5_b(grey: &Batch, kept: &Batch, params: &[&[f32]]) -> [Batch; 3] {
+    let min_spl = lane_params(params, 0);
+    let max = vec![1e9f32; kept.b];
+    let mask = area_filter_b(kept, &min_spl, &max, true);
+    let depth = erosion_depth_b(&mask);
+    [grey.clone(), mask, depth]
+}
+
+fn task_t6_b(grey: &Batch, mask: &Batch, depth: &Batch, params: &[&[f32]]) -> [Batch; 3] {
+    let wconn = lane_params(params, 0);
+    let conn: Vec<bool> = wconn.iter().map(|&v| v >= 8.0).collect();
+    let labels = run_conn_grouped(&[mask, depth], &conn, |ins, c8| watershed_b(ins[0], ins[1], c8));
+    let seg = labels.map(|l| if l > 0.5 { 1.0 } else { 0.0 });
+    [grey.clone(), seg, labels]
+}
+
+fn task_t7_b(grey: &Batch, seg: &Batch, labels: &Batch, params: &[&[f32]]) -> [Batch; 3] {
+    let (min_ss, max_ss) = (lane_params(params, 0), lane_params(params, 1));
+    let sizes = component_sizes_b(labels);
+    let b = seg.b;
+    let mut fin = Batch::filled(0.0, seg.h, seg.w, b);
+    let mut lab = Batch::filled(0.0, seg.h, seg.w, b);
+    for i in 0..seg.h * seg.w {
+        for l in 0..b {
+            let j = i * b + l;
+            let keep = (min_ss[l]..=max_ss[l]).contains(&sizes.data[j]) && seg.data[j] > 0.5;
+            if keep {
+                fin.data[j] = 1.0;
+                lab.data[j] = labels.data[j];
+            }
+        }
+    }
+    [grey.clone(), fin, lab]
+}
+
+/// Execute one chain task over a batch of B states × B parameter
+/// vectors in a single call, vectorizing the per-pixel inner loops
+/// across the batch. `states[i]` holds lane i's three input planes;
+/// `params[i]` its (possibly short — missing entries read as 0) parameter
+/// vector. Every lane's output is bit-identical to [`run_task`] on the
+/// same inputs. `cmp` is not a chain task and is rejected.
+pub fn run_task_batch(
+    name: &str,
+    states: &[[Grid; 3]],
+    params: &[&[f32]],
+) -> Result<Vec<[Grid; 3]>, String> {
+    if states.is_empty() {
+        return Ok(Vec::new());
+    }
+    if states.len() != params.len() {
+        return Err(format!(
+            "batch arity mismatch: {} states vs {} param vectors",
+            states.len(),
+            params.len()
+        ));
+    }
+    let (h, w) = (states[0][0].h, states[0][0].w);
+    for s in states {
+        for p in s {
+            if (p.h, p.w) != (h, w) {
+                return Err("batch planes disagree on shape".into());
+            }
+        }
+    }
+    let a = Batch::from_lanes(&states.iter().map(|s| &s[0]).collect::<Vec<_>>());
+    let b = Batch::from_lanes(&states.iter().map(|s| &s[1]).collect::<Vec<_>>());
+    let c = Batch::from_lanes(&states.iter().map(|s| &s[2]).collect::<Vec<_>>());
+    let out: [Batch; 3] = match name {
+        "norm" => task_norm_b(&a, &b, &c),
+        "t1" => task_t1_b(&a, &b, &c, params),
+        "t2" => task_t2_b(&a, &b, params),
+        "t3" => task_t3_b(&a, &b, &c, params),
+        "t4" => task_t4_b(&a, &b, &c, params),
+        "t5" => task_t5_b(&a, &b, params),
+        "t6" => task_t6_b(&a, &b, &c, params),
+        "t7" => task_t7_b(&a, &b, &c, params),
+        other => return Err(format!("task `{other}` is not batchable")),
+    };
+    Ok((0..states.len()).map(|l| [out[0].lane(l), out[1].lane(l), out[2].lane(l)]).collect())
+}
+
 /// Execute one workflow task. Chain tasks take 3 planes, `cmp` takes 4
 /// (state + reference mask); `params` is the padded parameter vector.
 pub fn run_task(name: &str, planes: &[Grid], params: &[f32]) -> Result<TaskOutput, String> {
@@ -576,6 +1192,81 @@ mod tests {
         let b = labels.at(2, 6);
         assert!(a > 0.5 && b > 0.5, "both centers labeled: {a} {b}");
         assert_ne!(a, b, "touching nuclei split into separate labels");
+    }
+
+    /// Deterministic pseudo-random grid (splitmix-style) for equivalence
+    /// sweeps.
+    fn noise_grid(seed: u64, h: usize, w: usize, lo: f32, hi: f32) -> Grid {
+        let mut s = seed;
+        let data = (0..h * w)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let u = ((s >> 33) & 0xffff) as f32 / 65535.0;
+                lo + u * (hi - lo)
+            })
+            .collect();
+        Grid::new(data, h, w)
+    }
+
+    #[test]
+    fn batched_chain_matches_scalar_lanes() {
+        // Three lanes with distinct parameters — including mixed 4/8
+        // connectivity — chained through every task. Each lane of the
+        // batched output must equal the scalar kernel bit-for-bit.
+        let (h, w) = (14, 11);
+        let tile = [
+            noise_grid(11, h, w, 0.0, 255.0),
+            noise_grid(22, h, w, 0.0, 255.0),
+            noise_grid(33, h, w, 0.0, 255.0),
+        ];
+        let lane_params: [Vec<Vec<f32>>; 8] = [
+            /* norm */ vec![vec![], vec![], vec![]],
+            /* t1 */
+            vec![
+                vec![220.0, 220.0, 220.0, 4.0, 4.0],
+                vec![200.0, 210.0, 215.0, 3.0, 5.0],
+                vec![235.0, 215.0, 205.0, 4.5, 3.5],
+            ],
+            /* t2 */ vec![vec![40.0, 8.0], vec![60.0, 4.0], vec![25.0, 8.0]],
+            /* t3 */ vec![vec![8.0], vec![4.0], vec![8.0]],
+            /* t4 */
+            vec![vec![20.0, 10.0, 1200.0], vec![5.0, 2.0, 800.0], vec![50.0, 4.0, 1500.0]],
+            /* t5 */ vec![vec![10.0], vec![2.0], vec![1.0]],
+            /* t6 */ vec![vec![8.0], vec![4.0], vec![8.0]],
+            /* t7 */ vec![vec![10.0, 1200.0], vec![2.0, 500.0], vec![4.0, 1000.0]],
+        ];
+        // per-lane scalar chain states
+        let mut scalar: Vec<[Grid; 3]> =
+            vec![tile.clone(), tile.clone(), tile.clone()];
+        for (ti, name) in TASKS.iter().enumerate() {
+            let params: Vec<&[f32]> =
+                lane_params[ti].iter().map(|p| p.as_slice()).collect();
+            let batched = run_task_batch(name, &scalar, &params).expect("batched task");
+            let mut next: Vec<[Grid; 3]> = Vec::new();
+            for (l, state) in scalar.iter().enumerate() {
+                let out = run_task(name, &state[..], params[l]).expect("scalar task");
+                let TaskOutput::Planes(planes) = out else {
+                    panic!("chain task returned metrics")
+                };
+                for (bp, sp) in batched[l].iter().zip(planes.iter()) {
+                    assert_eq!(bp, sp, "task {name}, lane {l}: batched output drifted");
+                }
+                next.push(planes);
+            }
+            scalar = next;
+        }
+    }
+
+    #[test]
+    fn run_task_batch_validates_inputs() {
+        let g = Grid::filled(1.0, 3, 3);
+        let st = [g.clone(), g.clone(), g.clone()];
+        let p: &[f32] = &[0.0; 5];
+        assert!(run_task_batch("cmp", &[st.clone()], &[p]).is_err(), "cmp is not batchable");
+        assert!(run_task_batch("t1", &[st.clone()], &[p, p]).is_err(), "arity mismatch");
+        assert!(run_task_batch("t1", &[], &[]).unwrap().is_empty());
+        let bad = [g.clone(), g.clone(), Grid::filled(0.0, 2, 2)];
+        assert!(run_task_batch("t1", &[st, bad], &[p, p]).is_err(), "shape mismatch");
     }
 
     #[test]

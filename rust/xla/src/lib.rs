@@ -303,6 +303,36 @@ impl PjRtLoadedExecutable {
         };
         Ok(vec![vec![PjRtBuffer { literal: tuple }]])
     }
+
+    /// Execute a 3-plane chain task over a batch of B states × B
+    /// parameter vectors in one call: `states[i]` are lane i's input
+    /// planes, `params[i]` its parameter vector. The native interpreter
+    /// vectorizes the per-pixel inner loops across the batch
+    /// ([`kernels::run_task_batch`]); every lane's output is
+    /// bit-identical to a [`PjRtLoadedExecutable::execute`] call on the
+    /// same inputs.
+    ///
+    /// This is an *extension* over the published `xla` crate's API
+    /// surface: when substituting the real binding, provide a shim that
+    /// loops over `execute` (results are identical, only the batching
+    /// speedup is lost).
+    pub fn execute_batch(
+        &self,
+        states: &[&[Literal; 3]],
+        params: &[&[f32]],
+    ) -> Result<Vec<[Literal; 3]>> {
+        let mut grids: Vec<[Grid; 3]> = Vec::with_capacity(states.len());
+        for s in states {
+            grids.push([s[0].as_grid()?, s[1].as_grid()?, s[2].as_grid()?]);
+        }
+        let outs = kernels::run_task_batch(&self.task, &grids, params).map_err(Error::Msg)?;
+        Ok(outs
+            .into_iter()
+            .map(|[a, b, c]| {
+                [Literal::from_grid(a), Literal::from_grid(b), Literal::from_grid(c)]
+            })
+            .collect())
+    }
 }
 
 #[cfg(test)]
@@ -372,6 +402,35 @@ mod tests {
         // constant channel normalizes to the target mean
         let v = parts[0].to_vec::<f32>().unwrap();
         assert!(v.iter().all(|&x| (x - 210.0).abs() < 1e-3), "{v:?}");
+    }
+
+    #[test]
+    fn execute_batch_matches_per_lane_execute() {
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&XlaComputation { task: "t1".into() }).unwrap();
+        let state: [Literal; 3] =
+            [plane_lit(100.0, 4, 4), plane_lit(150.0, 4, 4), plane_lit(200.0, 4, 4)];
+        let p0: &[f32] = &[220.0, 220.0, 220.0, 4.0, 4.0];
+        let p1: &[f32] = &[90.0, 120.0, 150.0, 1.0, 1.0];
+        let batch = exe.execute_batch(&[&state, &state], &[p0, p1]).unwrap();
+        assert_eq!(batch.len(), 2);
+        for (lane, p) in [p0, p1].iter().enumerate() {
+            let inputs =
+                vec![state[0].clone(), state[1].clone(), state[2].clone(), Literal::vec1(p)];
+            let out =
+                exe.execute::<Literal>(&inputs).unwrap()[0][0].to_literal_sync().unwrap();
+            let parts = out.to_tuple().unwrap();
+            for (b, s) in batch[lane].iter().zip(&parts) {
+                assert_eq!(
+                    b.to_vec::<f32>().unwrap(),
+                    s.to_vec::<f32>().unwrap(),
+                    "lane {lane} drifted"
+                );
+            }
+        }
+        // cmp is not batchable
+        let cmp = client.compile(&XlaComputation { task: "cmp".into() }).unwrap();
+        assert!(cmp.execute_batch(&[&state], &[p0]).is_err());
     }
 
     #[test]
