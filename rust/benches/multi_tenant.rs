@@ -1,0 +1,138 @@
+//! Acceptance benchmark for the multi-tenant study service: N tenants
+//! submit the SAME workflow to one service concurrently. Because the
+//! service owns a single shared reuse cache with single-flight misses
+//! (plus memoized study inputs), the aggregate backend launches across
+//! all N tenants must stay within 1.25× of what ONE cold tenant pays —
+//! warm tenants ride the shared cache almost entirely.
+//!
+//! Also asserts the accounting invariant: per-tenant scoped counters
+//! sum exactly to the shared cache's global counters, field by field.
+//!
+//! Unlike the wall-clock benches, the acceptance metric here is a
+//! *count* (backend launches), so it is asserted in `--test` (CI smoke)
+//! mode too — scheduler noise cannot break it. Writes
+//! `BENCH_multi_tenant.json` as the perf-trajectory artifact.
+
+use rtf_reuse::benchx::{fmt_secs, Table};
+use rtf_reuse::cache::CacheConfig;
+use rtf_reuse::config::{SaMethod, StudyConfig};
+use rtf_reuse::merging::FineAlgorithm;
+use rtf_reuse::serve::{ServeOptions, ServiceReport, StudyJob, StudyService};
+
+const TENANTS: usize = 4;
+
+fn study(test_mode: bool) -> StudyConfig {
+    StudyConfig {
+        method: SaMethod::Moat { r: if test_mode { 1 } else { 2 } },
+        algorithm: FineAlgorithm::Rtma(7),
+        ..StudyConfig::default()
+    }
+}
+
+fn serve_opts(service_workers: usize) -> ServeOptions {
+    ServeOptions {
+        service_workers,
+        tenant_inflight_cap: 1,
+        study_workers: 2,
+        cache: CacheConfig { capacity_bytes: 512 * 1024 * 1024, ..CacheConfig::default() },
+        ..ServeOptions::default()
+    }
+}
+
+fn run_service(tenants: usize, service_workers: usize, cfg: &StudyConfig) -> ServiceReport {
+    let svc = StudyService::start(serve_opts(service_workers)).expect("service starts");
+    for t in 0..tenants {
+        svc.submit(StudyJob { tenant: format!("tenant-{t}"), cfg: cfg.clone() })
+            .expect("submission accepted");
+    }
+    svc.drain()
+}
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    let cfg = study(test_mode);
+
+    // phase 1: ONE tenant on a fresh service — the cold cost
+    let cold = run_service(1, 1, &cfg);
+    assert!(cold.jobs.iter().all(|j| j.ok()), "cold job failed: {:?}", cold.jobs);
+    let cold_launches = cold.total_launches();
+
+    // phase 2: N tenants concurrently on a fresh service, one shared cache
+    let multi = run_service(TENANTS, TENANTS, &cfg);
+    assert!(multi.jobs.iter().all(|j| j.ok()), "tenant job failed: {:?}", multi.jobs);
+    let total_launches = multi.total_launches();
+
+    // identical workflows must produce identical results for every tenant
+    for j in &multi.jobs[1..] {
+        assert_eq!(multi.jobs[0].y, j.y, "tenant results diverged");
+    }
+
+    // accounting invariant: tenant scopes sum to the shared globals
+    let sums = multi.scoped_totals();
+    let g = multi.cache;
+    assert_eq!(sums.hits, g.hits, "tenant hit counters must sum to global");
+    assert_eq!(sums.disk_hits, g.disk_hits);
+    assert_eq!(sums.misses, g.misses, "tenant miss counters must sum to global");
+    assert_eq!(sums.inserts, g.inserts);
+    assert_eq!(sums.metric_hits, g.metric_hits);
+    assert_eq!(sums.metric_misses, g.metric_misses);
+
+    let mut t = Table::new(&["phase", "tenants", "launches", "cached", "hits", "wall"]);
+    t.row(&[
+        "cold (1 tenant)".into(),
+        "1".into(),
+        cold_launches.to_string(),
+        cold.jobs.iter().map(|j| j.cached_tasks).sum::<u64>().to_string(),
+        (cold.cache.hits + cold.cache.disk_hits).to_string(),
+        fmt_secs(cold.wall.as_secs_f64()),
+    ]);
+    t.row(&[
+        format!("shared ({TENANTS} tenants)"),
+        TENANTS.to_string(),
+        total_launches.to_string(),
+        multi.jobs.iter().map(|j| j.cached_tasks).sum::<u64>().to_string(),
+        (g.hits + g.disk_hits).to_string(),
+        fmt_secs(multi.wall.as_secs_f64()),
+    ]);
+    t.print("multi-tenant service: concurrent identical workflows, one shared cache");
+    for ten in &multi.tenants {
+        println!(
+            "  {}: {} launches, {} cache-served, {:.1}% hit rate",
+            ten.tenant,
+            ten.launches,
+            ten.cached_tasks,
+            ten.cache.hit_rate() * 100.0
+        );
+    }
+
+    let ratio = total_launches as f64 / cold_launches as f64;
+    let json = format!(
+        "{{\n  \"bench\": \"multi_tenant\",\n  \"mode\": \"{}\",\n  \
+         \"tenants\": {TENANTS},\n  \"evals_per_tenant\": {},\n  \
+         \"cold_launches\": {cold_launches},\n  \"total_launches\": {total_launches},\n  \
+         \"launch_ratio\": {ratio:.4},\n  \"input_launches\": {},\n  \
+         \"global_hits\": {},\n  \"global_misses\": {},\n  \
+         \"cold_wall_secs\": {:.6},\n  \"multi_wall_secs\": {:.6}\n}}\n",
+        if test_mode { "test" } else { "full" },
+        multi.jobs.first().map(|j| j.n_evals).unwrap_or(0),
+        multi.input_launches,
+        g.hits + g.disk_hits,
+        g.misses,
+        cold.wall.as_secs_f64(),
+        multi.wall.as_secs_f64(),
+    );
+    std::fs::write("BENCH_multi_tenant.json", &json).expect("write BENCH_multi_tenant.json");
+    println!("wrote BENCH_multi_tenant.json");
+
+    let limit = (cold_launches as f64 * 1.25).ceil() as u64;
+    println!(
+        "ACCEPTANCE: {TENANTS} tenants spent {total_launches} launches vs cold {cold_launches} \
+         ({ratio:.2}x, required <= 1.25x) — {}",
+        if total_launches <= limit { "PASS" } else { "FAIL" }
+    );
+    assert!(
+        total_launches <= limit,
+        "{TENANTS} concurrent tenants must stay within 1.25x of one cold tenant's launches: \
+         {total_launches} > {limit}"
+    );
+}

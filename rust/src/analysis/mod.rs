@@ -3,7 +3,7 @@
 //! * [`moat_effects`] — Morris elementary effects: per-parameter signed
 //!   mean effect, μ* (mean absolute effect) and σ (effect spread).
 //! * [`sobol_indices`] — Saltelli/Jansen estimators of first-order and
-//!   total-order Sobol indices over a [`VbdSample`].
+//!   total-order Sobol indices over a [`VbdSample`](crate::sampling::VbdSample).
 //! * [`dice`] / [`jaccard`] — mask-comparison metrics (Rust reference for
 //!   the `cmp` artifact; the coordinator uses the artifact's numbers).
 //! * [`screen_top_k`] — the paper's two-phase flow: pick the k most

@@ -4,35 +4,68 @@
 //! configured directory, so cached states survive process restarts and
 //! are shared between studies run at different times (the cross-study
 //! "persistent" in the cache's name). The format is self-describing and
-//! versioned; unreadable or truncated files are treated as misses, never
-//! as errors — the cache is an accelerator, not a source of truth.
+//! versioned; unreadable, truncated or *stale-version* files are treated
+//! as misses, never as errors — the cache is an accelerator, not a
+//! source of truth.
+//!
+//! # Format versioning
+//!
+//! The current format is `RTC2`: 128-bit keys, file names of 32 hex
+//! digits (`{key:032x}.state`). The pre-widening `RTC1` format used
+//! 64-bit keys and 16-hex names; a spill directory may legitimately hold
+//! both after an upgrade. Version handling is explicit rather than
+//! accidental:
+//!
+//! * [`has_state`] / [`load_state`] accept only current-version files —
+//!   a stale file at a probed path reads as a miss, not garbage.
+//! * [`store_state`] *overwrites* a stale-version file parked at the
+//!   key's path; without this, a stale file would both refuse to load
+//!   and block re-publication, pinning the key to a permanent miss.
+//! * Old-format files at old-format paths are simply never probed (the
+//!   name widths differ) and age out with the directory.
 
+use std::io::Read;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::data::Plane;
 
-/// File magic + format version.
-const MAGIC: &[u8; 4] = b"RTC1";
+use super::key::Key;
+
+/// File magic + format version. `RTC1` was the 64-bit-key format; bump
+/// this whenever the on-disk layout or the key derivation changes
+/// incompatibly, so stale entries are invalidated rather than misread.
+const MAGIC: &[u8; 4] = b"RTC2";
 
 /// Discriminator for temp-file names (concurrent writers never collide).
 static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// One 3-plane state as stored on disk.
-pub(crate) fn state_path(dir: &Path, key: u64) -> PathBuf {
-    dir.join(format!("{key:016x}.state"))
+pub(crate) fn state_path(dir: &Path, key: Key) -> PathBuf {
+    dir.join(format!("{:032x}.state", key.as_u128()))
 }
 
-/// True when the key has a plausible on-disk entry (no content check).
-pub(crate) fn has_state(dir: &Path, key: u64) -> bool {
-    state_path(dir, key).exists()
+/// True when the file at `path` starts with the current-version magic.
+fn is_current_version(path: &Path) -> bool {
+    let mut magic = [0u8; 4];
+    match std::fs::File::open(path) {
+        Ok(mut f) => f.read_exact(&mut magic).is_ok() && &magic == MAGIC,
+        Err(_) => false,
+    }
+}
+
+/// True when the key has a current-version on-disk entry (magic check,
+/// no content check).
+pub(crate) fn has_state(dir: &Path, key: Key) -> bool {
+    is_current_version(&state_path(dir, key))
 }
 
 /// Write a state for `key`, atomically (temp file + rename). Returns
-/// `Ok(false)` when the key was already present.
-pub(crate) fn store_state(dir: &Path, key: u64, state: &[Plane; 3]) -> std::io::Result<bool> {
+/// `Ok(false)` when a current-version entry was already present; a
+/// stale-version file at the path is overwritten.
+pub(crate) fn store_state(dir: &Path, key: Key, state: &[Plane; 3]) -> std::io::Result<bool> {
     let path = state_path(dir, key);
-    if path.exists() {
+    if path.exists() && is_current_version(&path) {
         return Ok(false);
     }
     std::fs::create_dir_all(dir)?;
@@ -46,17 +79,18 @@ pub(crate) fn store_state(dir: &Path, key: u64, state: &[Plane; 3]) -> std::io::
         }
     }
     let tmp = dir.join(format!(
-        ".tmp-{}-{}-{key:016x}",
+        ".tmp-{}-{}-{:032x}",
         std::process::id(),
-        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed),
+        key.as_u128()
     ));
     std::fs::write(&tmp, &bytes)?;
     std::fs::rename(&tmp, &path)?;
     Ok(true)
 }
 
-/// Load the state for `key`, if present and well-formed.
-pub(crate) fn load_state(dir: &Path, key: u64) -> Option<[Plane; 3]> {
+/// Load the state for `key`, if present, current-version and well-formed.
+pub(crate) fn load_state(dir: &Path, key: Key) -> Option<[Plane; 3]> {
     let bytes = std::fs::read(state_path(dir, key)).ok()?;
     if bytes.len() < 12 || &bytes[..4] != MAGIC {
         return None;
@@ -91,17 +125,21 @@ mod tests {
         [Plane::filled(v, 3, 2), Plane::filled(v + 1.0, 3, 2), Plane::filled(v + 2.0, 3, 2)]
     }
 
+    fn k(v: u64) -> Key {
+        Key::from(v)
+    }
+
     #[test]
     fn roundtrip_and_idempotent_store() {
         let dir = tmp_dir("rt");
         let s = state(4.0);
-        assert!(store_state(&dir, 0xabc, &s).unwrap(), "first store is new");
-        assert!(!store_state(&dir, 0xabc, &s).unwrap(), "second store is a no-op");
-        assert!(has_state(&dir, 0xabc));
-        let loaded = load_state(&dir, 0xabc).unwrap();
+        assert!(store_state(&dir, k(0xabc), &s).unwrap(), "first store is new");
+        assert!(!store_state(&dir, k(0xabc), &s).unwrap(), "second store is a no-op");
+        assert!(has_state(&dir, k(0xabc)));
+        let loaded = load_state(&dir, k(0xabc)).unwrap();
         assert_eq!(loaded[0].get(2, 1), 4.0);
         assert_eq!(loaded[2].get(0, 0), 6.0);
-        assert!(load_state(&dir, 0xdef).is_none(), "absent key misses");
+        assert!(load_state(&dir, k(0xdef)).is_none(), "absent key misses");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -109,10 +147,49 @@ mod tests {
     fn corrupt_files_read_as_misses() {
         let dir = tmp_dir("corrupt");
         std::fs::create_dir_all(&dir).unwrap();
-        std::fs::write(state_path(&dir, 7), b"RTC1garbage").unwrap();
-        assert!(load_state(&dir, 7).is_none());
-        std::fs::write(state_path(&dir, 8), b"XXXX").unwrap();
-        assert!(load_state(&dir, 8).is_none());
+        std::fs::write(state_path(&dir, k(7)), b"RTC2garbage").unwrap();
+        assert!(load_state(&dir, k(7)).is_none());
+        std::fs::write(state_path(&dir, k(8)), b"XXXX").unwrap();
+        assert!(load_state(&dir, k(8)).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn keys_differing_only_in_the_high_half_store_separately() {
+        let dir = tmp_dir("hi-lo");
+        let a = Key::from_parts(1, 42);
+        let b = Key::from_parts(2, 42);
+        store_state(&dir, a, &state(1.0)).unwrap();
+        store_state(&dir, b, &state(9.0)).unwrap();
+        assert_eq!(load_state(&dir, a).unwrap()[0].get(0, 0), 1.0);
+        assert_eq!(load_state(&dir, b).unwrap()[0].get(0, 0), 9.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mixed_version_dir_ignores_and_reclaims_stale_entries() {
+        let dir = tmp_dir("mixed");
+        std::fs::create_dir_all(&dir).unwrap();
+        let key = k(0xfeed);
+
+        // a pre-widening RTC1 file under its old 16-hex name: never
+        // probed (name widths differ), never an error
+        std::fs::write(dir.join(format!("{:016x}.state", 0xfeedu64)), b"RTC1oldpayload")
+            .unwrap();
+        assert!(!has_state(&dir, key), "old-format file must not read as a hit");
+        assert!(load_state(&dir, key).is_none());
+
+        // a stale-version file parked at the CURRENT path (e.g. a future
+        // downgrade/upgrade cycle): ignored on read, overwritten on store
+        std::fs::write(state_path(&dir, key), b"RTC1staleblob").unwrap();
+        assert!(!has_state(&dir, key), "stale magic must not read as a hit");
+        assert!(load_state(&dir, key).is_none(), "stale magic must not be misread");
+        assert!(
+            store_state(&dir, key, &state(3.0)).unwrap(),
+            "store must reclaim a stale-version path, not treat it as present"
+        );
+        assert!(has_state(&dir, key));
+        assert_eq!(load_state(&dir, key).unwrap()[0].get(0, 0), 3.0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -14,21 +14,86 @@
 //! vectors that differ by less than the grid resolution share keys (and
 //! therefore states). `q = 0` means exact reuse only.
 //!
-//! Keys are 64-bit FNV-1a chains: compact and fast, but not
-//! collision-resistant — a cross-key collision would silently alias two
-//! distinct computations. At study scale (≤ millions of distinct
-//! prefixes) the birthday bound keeps this negligible; widening to
-//! 128-bit keys before the multi-tenant/serving phase is tracked in
-//! ROADMAP.md.
+//! # 128-bit keys
+//!
+//! Keys are 128-bit FNV-1a chains ([`Key`]). A cross-key collision would
+//! silently alias two distinct computations — the cache would serve the
+//! wrong state, bit-for-bit plausibly. The original 64-bit chains were
+//! adequate for study-scale populations (≤ millions of distinct
+//! prefixes), but the long-lived multi-tenant service ([`crate::serve`])
+//! accumulates keys for the lifetime of the process across every tenant:
+//! at 2⁶⁴ the birthday bound reaches a 50% collision chance near 5·10⁹
+//! entries, while at 2¹²⁸ it stays negligible (< 10⁻¹⁸) past 10²⁰
+//! entries. Task *signatures* ([`task_cache_sig`]) remain 64-bit words —
+//! they are ingredients folded into the 128-bit chain, not cache keys
+//! themselves.
+//!
+//! Disk-tier entries written under the old 64-bit format are versioned
+//! out, not silently orphaned: see [`crate::cache`]'s `disk` module
+//! (`RTC2` magic, 32-hex file names).
 
 use std::collections::HashMap;
+use std::fmt;
 
 use crate::data::Plane;
 use crate::merging::CompactGraph;
 use crate::workflow::{sig_hash, str_bits, StageInstance, TaskInstance};
 
+/// A 128-bit content-addressed cache key.
+///
+/// Constructed only by the chaining/fingerprint functions of this module
+/// (plus the zero-extending [`From<u64>`] embedding used for key roots
+/// and tests). Ordered and hashable so key sets can be compared in
+/// tests; displayed as 32 hex digits — the disk tier's file-name format.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Key(u128);
+
+impl Key {
+    /// The two 64-bit halves, `(hi, lo)`.
+    pub fn from_parts(hi: u64, lo: u64) -> Key {
+        Key(((hi as u128) << 64) | lo as u128)
+    }
+
+    /// Low 64 bits — what the pre-widening cache would have keyed on.
+    pub fn lo(self) -> u64 {
+        self.0 as u64
+    }
+
+    /// High 64 bits.
+    pub fn hi(self) -> u64 {
+        (self.0 >> 64) as u64
+    }
+
+    /// The raw 128-bit value (disk file names, diagnostics).
+    pub fn as_u128(self) -> u128 {
+        self.0
+    }
+}
+
+/// Zero-extending embedding of a 64-bit word (key roots such as the
+/// artifact fingerprint, and test keys). This is an *identity* embedding,
+/// not a hash — every derived key runs through [`Fnv128`] anyway.
+impl From<u64> for Key {
+    fn from(v: u64) -> Key {
+        Key(v as u128)
+    }
+}
+
+impl fmt::Debug for Key {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Key({:032x})", self.0)
+    }
+}
+
+impl fmt::Display for Key {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:032x}", self.0)
+    }
+}
+
 /// Streaming FNV-1a over 64-bit words (byte-compatible with
-/// [`sig_hash`] over the same word sequence).
+/// [`sig_hash`] over the same word sequence). Still used for 64-bit task
+/// signatures; cache keys chain through [`Fnv128`].
 pub struct Fnv(u64);
 
 impl Fnv {
@@ -54,6 +119,38 @@ impl Default for Fnv {
     }
 }
 
+/// FNV-1a 128 offset basis.
+const FNV128_OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+/// FNV-1a 128 prime: 2¹²⁸-domain FNV prime, 2⁸⁸ + 2⁸ + 0x3b.
+const FNV128_PRIME: u128 = (1 << 88) + (1 << 8) + 0x3b;
+
+/// Streaming 128-bit FNV-1a over 64-bit words — the key-derivation hash.
+pub struct Fnv128(u128);
+
+impl Fnv128 {
+    pub fn new() -> Self {
+        Fnv128(FNV128_OFFSET)
+    }
+
+    /// Absorb one 64-bit word (little-endian bytes, matching [`Fnv`]).
+    pub fn mix(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 ^= b as u128;
+            self.0 = self.0.wrapping_mul(FNV128_PRIME);
+        }
+    }
+
+    pub fn finish(&self) -> Key {
+        Key(self.0)
+    }
+}
+
+impl Default for Fnv128 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Snap a parameter value onto the quantization grid (`step = 0` keeps
 /// the value exact).
 pub fn quantize(v: f64, step: f64) -> f64 {
@@ -65,23 +162,50 @@ pub fn quantize(v: f64, step: f64) -> f64 {
 }
 
 /// Cache signature of one task instance: task identity + quantized
-/// parameter values.
+/// parameter values. A 64-bit ingredient word, not a cache key — it is
+/// folded into the 128-bit chain by [`chain_key`].
 pub fn task_cache_sig(task: &TaskInstance, step: f64) -> u64 {
     let mut parts = vec![str_bits(&task.name), str_bits(&task.lib_call)];
     parts.extend(task.params.iter().map(|&v| quantize(v, step).to_bits()));
     sig_hash(&parts)
 }
 
-/// Extend a chain key by one executed task.
-pub fn chain_key(prev: u64, task_sig: u64) -> u64 {
-    sig_hash(&[prev, task_sig])
+/// Extend a chain key by one executed task: FNV-1a 128 over the previous
+/// key's two halves and the task signature word.
+pub fn chain_key(prev: Key, task_sig: u64) -> Key {
+    let mut h = Fnv128::new();
+    h.mix(prev.lo());
+    h.mix(prev.hi());
+    h.mix(task_sig);
+    h.finish()
+}
+
+/// Fold two full keys into one (artifact fingerprint × tile fingerprint
+/// roots; chain key × reference fingerprint for metric keys). Order-
+/// sensitive, like [`chain_key`].
+pub fn fold_keys(a: Key, b: Key) -> Key {
+    let mut h = Fnv128::new();
+    h.mix(a.lo());
+    h.mix(a.hi());
+    h.mix(b.lo());
+    h.mix(b.hi());
+    h.finish()
+}
+
+/// The key comparison metrics are memoized under: the unit's input key
+/// extended by the compare task's signature, folded with the
+/// reference-mask fingerprint. Defined ONCE here so the executor
+/// (`coordinator/exec.rs`) and the planning probe
+/// (`merging/study.rs::prune_cached`) can never drift.
+pub fn metrics_key(base: Key, compare_sig: u64, ref_fp: Key) -> Key {
+    fold_keys(chain_key(base, compare_sig), ref_fp)
 }
 
 /// Content fingerprint of a set of planes (shape + every pixel's bits) —
 /// the key root for tiles and the reference-mask discriminator for
 /// cached metrics.
-pub fn content_fingerprint(planes: &[&Plane]) -> u64 {
-    let mut h = Fnv::new();
+pub fn content_fingerprint(planes: &[&Plane]) -> Key {
+    let mut h = Fnv128::new();
     for p in planes {
         h.mix(p.height() as u64);
         h.mix(p.width() as u64);
@@ -99,9 +223,9 @@ pub fn node_input_key(
     graph: &CompactGraph,
     instances: &[StageInstance],
     node: usize,
-    tile_fp: u64,
+    tile_fp: Key,
     step: f64,
-) -> u64 {
+) -> Key {
     let mut chain = Vec::new();
     let mut cur = graph.nodes[node].parent;
     while let Some(p) = cur {
@@ -118,7 +242,7 @@ pub fn node_input_key(
 }
 
 /// Content fingerprints of a study's tiles, keyed by tile id.
-pub fn tile_fingerprints(tiles: &HashMap<u64, crate::data::TileSet>) -> HashMap<u64, u64> {
+pub fn tile_fingerprints(tiles: &HashMap<u64, crate::data::TileSet>) -> HashMap<u64, Key> {
     tiles
         .iter()
         .map(|(&id, t)| (id, content_fingerprint(&[&t.r, &t.g, &t.b])))
@@ -126,7 +250,7 @@ pub fn tile_fingerprints(tiles: &HashMap<u64, crate::data::TileSet>) -> HashMap<
 }
 
 /// Content fingerprints of a study's reference masks, keyed by tile id.
-pub fn reference_fingerprints(references: &HashMap<u64, Plane>) -> HashMap<u64, u64> {
+pub fn reference_fingerprints(references: &HashMap<u64, Plane>) -> HashMap<u64, Key> {
     references.iter().map(|(&id, p)| (id, content_fingerprint(&[p]))).collect()
 }
 
@@ -161,10 +285,48 @@ mod tests {
 
     #[test]
     fn chain_keys_are_order_sensitive() {
-        let x = chain_key(chain_key(7, 1), 2);
-        let y = chain_key(chain_key(7, 2), 1);
+        let root = Key::from(7u64);
+        let x = chain_key(chain_key(root, 1), 2);
+        let y = chain_key(chain_key(root, 2), 1);
         assert_ne!(x, y);
-        assert_ne!(chain_key(7, 1), chain_key(8, 1));
+        assert_ne!(chain_key(root, 1), chain_key(Key::from(8u64), 1));
+    }
+
+    #[test]
+    fn chain_keys_populate_both_halves() {
+        // the widened chain must disperse into the high 64 bits too —
+        // otherwise the widening is cosmetic and the collision margin
+        // is still the old 64-bit one
+        let k = chain_key(Key::from(7u64), 1);
+        assert_ne!(k.hi(), 0, "high half unused: widening is cosmetic");
+        assert_ne!(k.lo(), 0);
+        let l = chain_key(Key::from(7u64), 2);
+        assert_ne!(k.hi(), l.hi(), "distinct chains differ in the high half");
+        assert_ne!(k.lo(), l.lo(), "distinct chains differ in the low half");
+    }
+
+    #[test]
+    fn key_parts_roundtrip_and_format() {
+        let k = Key::from_parts(0xdead_beef, 0x1234_5678);
+        assert_eq!(k.hi(), 0xdead_beef);
+        assert_eq!(k.lo(), 0x1234_5678);
+        assert_eq!(format!("{k}"), format!("{:032x}", k.as_u128()));
+        assert_eq!(Key::from(5u64), Key::from_parts(0, 5));
+    }
+
+    #[test]
+    fn fold_keys_is_order_sensitive() {
+        let a = Key::from(1u64);
+        let b = Key::from(2u64);
+        assert_ne!(fold_keys(a, b), fold_keys(b, a));
+        assert_ne!(fold_keys(a, b), fold_keys(a, a));
+        // metrics_key folds the reference fingerprint after the chain
+        let m1 = metrics_key(a, 9, b);
+        let m2 = metrics_key(a, 9, a);
+        let m3 = metrics_key(b, 9, b);
+        assert_ne!(m1, m2);
+        assert_ne!(m1, m3);
+        assert_eq!(m1, fold_keys(chain_key(a, 9), b));
     }
 
     #[test]
@@ -184,5 +346,20 @@ mod tests {
         h.mix(3);
         h.mix(9);
         assert_eq!(h.finish(), sig_hash(&[3, 9]));
+    }
+
+    #[test]
+    fn fnv128_word_streaming_is_deterministic() {
+        let mut a = Fnv128::new();
+        a.mix(3);
+        a.mix(9);
+        let mut b = Fnv128::new();
+        b.mix(3);
+        b.mix(9);
+        assert_eq!(a.finish(), b.finish());
+        let mut c = Fnv128::new();
+        c.mix(9);
+        c.mix(3);
+        assert_ne!(a.finish(), c.finish(), "word order matters");
     }
 }

@@ -9,19 +9,26 @@
 //! most of their task chains (arXiv:1910.14548 measures the biggest wins
 //! there). This module makes that reuse first-class:
 //!
-//! * [`key`] — content-addressed keys: tile-content fingerprint chained
-//!   through the (optionally quantized) signature of every executed task.
-//!   Keys are stable across studies, seeds and processes.
+//! * [`key`] — content-addressed 128-bit keys ([`Key`]): tile-content
+//!   fingerprint chained through the (optionally quantized) signature of
+//!   every executed task. Keys are stable across studies, seeds,
+//!   processes and tenants; the width gives the collision margin a
+//!   process-lifetime multi-tenant cache needs.
 //! * [`ReuseCache`] — a sharded, byte-bounded LRU over 3-plane states,
 //!   with an optional write-through disk tier for persistence, plus a
-//!   side map of cached comparison metrics.
+//!   side map of cached comparison metrics. Concurrency-safe by design:
+//!   zero-copy `Arc` hits, single-flight miss claims
+//!   ([`ReuseCache::lookup_or_claim`]) so concurrent studies never
+//!   duplicate a backend launch, and per-tenant [`ScopedCounters`]
+//!   that sum exactly to the global [`CacheStats`].
 //!
 //! Integration points: [`crate::runtime::PjrtEngine`] consults/populates
 //! the cache at task granularity, [`crate::coordinator`] shares one cache
 //! across worker threads and fingerprints tiles/references,
 //! [`crate::merging::prune_cached`] subtracts already-cached prefixes
-//! from unit costs at planning time, and [`crate::config::CacheSettings`]
-//! exposes the knobs.
+//! from unit costs at planning time, [`crate::config::CacheSettings`]
+//! exposes the knobs, and [`crate::serve`] holds one process-lifetime
+//! cache across every tenant's studies.
 //!
 //! Cost model: a cache-cold run pays for its future reuse — every task
 //! miss materializes the output state host-side for insertion (plus a
@@ -39,7 +46,10 @@ mod disk;
 mod store;
 
 pub use key::{
-    chain_key, content_fingerprint, node_input_key, quantize, reference_fingerprints,
-    task_cache_sig, tile_fingerprints,
+    chain_key, content_fingerprint, fold_keys, metrics_key, node_input_key, quantize,
+    reference_fingerprints, task_cache_sig, tile_fingerprints, Key,
 };
-pub use store::{CacheConfig, CacheStats, CachedState, ReuseCache};
+pub use store::{
+    CacheConfig, CacheStats, CachedState, FlightClaims, MetricsClaim, ReuseCache, ScopedCounters,
+    StateClaim,
+};

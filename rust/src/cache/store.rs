@@ -1,23 +1,44 @@
 //! The sharded, byte-bounded, LRU reuse store.
 //!
 //! One [`ReuseCache`] is shared by every worker thread of a study — and,
-//! crucially, by every *study* that runs while it lives. Lock contention
-//! is kept off the hot path by sharding: keys map to one of N independent
-//! mutex-protected shards, so concurrent workers almost always lock
-//! disjoint shards. Each shard enforces its slice of the byte budget with
-//! LRU eviction; with a disk tier configured, entries are written through
-//! on insert, evictions become cheap drops, and lookups fall back to disk
-//! before declaring a miss.
+//! crucially, by every *study* that runs while it lives: the multi-tenant
+//! service ([`crate::serve`]) holds exactly one for the whole process.
+//! Lock contention is kept off the hot path by sharding: keys map to one
+//! of N independent mutex-protected shards, so concurrent workers almost
+//! always lock disjoint shards. Each shard enforces its slice of the byte
+//! budget with LRU eviction; with a disk tier configured, entries are
+//! written through on insert, evictions become cheap drops, and lookups
+//! fall back to disk before declaring a miss.
+//!
+//! # Concurrency invariants
+//!
+//! * **Zero-copy hits.** Stored states are `Arc<[Plane; 3]>`
+//!   ([`CachedState`]); a hit hands back a refcount bump, never a
+//!   ~3×H×W f32 deep copy, and concurrent readers share one allocation.
+//! * **Single-flight misses.** [`ReuseCache::lookup_or_claim`] registers
+//!   a miss as an in-flight computation; concurrent lookups of the same
+//!   key observe [`StateClaim::InFlight`] and wait
+//!   ([`ReuseCache::wait_for_flight`]) instead of duplicating the
+//!   backend launch. Publication ([`ReuseCache::put_state`]) releases
+//!   the flight and wakes the waiters. Claimants must never block on
+//!   another flight while holding an unpublished claim — the engine
+//!   executes and publishes all of its claims before waiting (see
+//!   `runtime/engine.rs`), which rules out claim/wait cycles.
+//! * **Scoped accounting.** Every counted operation takes an optional
+//!   [`ScopedCounters`] and bumps the scope *and* the global counters
+//!   with the same increments, so per-tenant counters sum exactly to the
+//!   global [`CacheStats`] when every operation carries a scope.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::fmt;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::data::Plane;
 
 use super::disk;
+use super::key::Key;
 
 /// The 3-plane chain state the cache stores (same shape the coordinator's
 /// node store moves between stages), refcount-shared: a cache hit hands
@@ -102,6 +123,68 @@ impl CacheStats {
     }
 }
 
+/// Per-scope (per-tenant, per-study — the caller decides the scope)
+/// mirror of the lookup/publication counters. Every counted cache
+/// operation that carries a scope bumps the scope and the global
+/// counters identically, so the sum of all scopes equals the global
+/// [`CacheStats`] on the fields a scope tracks (hits, disk hits, misses,
+/// inserts, metric hits/misses); eviction/residency remain global-only.
+#[derive(Debug, Default)]
+pub struct ScopedCounters {
+    hits: AtomicU64,
+    disk_hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    metric_hits: AtomicU64,
+    metric_misses: AtomicU64,
+    bytes_served: AtomicU64,
+}
+
+impl ScopedCounters {
+    /// Snapshot as a [`CacheStats`] (global-only fields stay zero).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            disk_hits: self.disk_hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            metric_hits: self.metric_hits.load(Ordering::Relaxed),
+            metric_misses: self.metric_misses.load(Ordering::Relaxed),
+            ..CacheStats::default()
+        }
+    }
+
+    /// Bytes of cached state this scope was served (hit payload sizes —
+    /// the per-tenant "data moved out of the shared cache" figure; the
+    /// states themselves are shared `Arc`s, so these bytes were *not*
+    /// copied, merely made available).
+    pub fn state_bytes_served(&self) -> u64 {
+        self.bytes_served.load(Ordering::Relaxed)
+    }
+}
+
+/// Outcome of [`ReuseCache::lookup_or_claim`].
+pub enum StateClaim {
+    /// The state was cached (any tier) — served zero-copy.
+    Ready(CachedState),
+    /// Nothing cached and no one computing: the caller now owns the
+    /// flight and MUST publish ([`ReuseCache::put_state`]) or release
+    /// ([`ReuseCache::release_flight`]) it, on every path. Use
+    /// [`FlightClaims`] for panic/error safety.
+    Claimed,
+    /// Another worker is computing this key; wait with
+    /// [`ReuseCache::wait_for_flight`] and look up again.
+    InFlight,
+}
+
+/// Outcome of [`ReuseCache::lookup_or_claim_metrics`] (same protocol as
+/// [`StateClaim`], for the comparison-metric side map).
+pub enum MetricsClaim {
+    Ready([f32; 3]),
+    Claimed,
+    InFlight,
+}
+
 struct Entry {
     state: CachedState,
     bytes: usize,
@@ -110,15 +193,26 @@ struct Entry {
 
 #[derive(Default)]
 struct Shard {
-    map: HashMap<u64, Entry>,
+    map: HashMap<Key, Entry>,
     bytes: usize,
+}
+
+/// In-flight miss registry (single-flight): keys currently being
+/// computed by some worker. Guards both the state and the metric maps —
+/// the keyspaces are derived differently and never overlap in practice;
+/// a spurious cross-map wait would only delay, never corrupt.
+#[derive(Default)]
+struct Flights {
+    set: Mutex<HashSet<Key>>,
+    cv: Condvar,
 }
 
 /// The cross-study, content-addressed reuse cache.
 pub struct ReuseCache {
     cfg: CacheConfig,
     shards: Vec<Mutex<Shard>>,
-    metrics: Mutex<HashMap<u64, [f32; 3]>>,
+    metrics: Mutex<HashMap<Key, [f32; 3]>>,
+    flights: Flights,
     tick: AtomicU64,
     hits: AtomicU64,
     disk_hits: AtomicU64,
@@ -148,6 +242,7 @@ impl ReuseCache {
             cfg,
             shards: (0..n).map(|_| Mutex::new(Shard::default())).collect(),
             metrics: Mutex::new(HashMap::new()),
+            flights: Flights::default(),
             tick: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             disk_hits: AtomicU64::new(0),
@@ -177,8 +272,9 @@ impl ReuseCache {
         self.cfg.quantize
     }
 
-    fn shard_of(&self, key: u64) -> &Mutex<Shard> {
-        let i = ((key ^ (key >> 32)) as usize) % self.shards.len();
+    fn shard_of(&self, key: Key) -> &Mutex<Shard> {
+        let x = key.lo() ^ key.hi();
+        let i = ((x ^ (x >> 32)) as usize) % self.shards.len();
         &self.shards[i]
     }
 
@@ -190,42 +286,171 @@ impl ReuseCache {
         self.tick.fetch_add(1, Ordering::Relaxed) + 1
     }
 
+    /// Resident-memory probe: bumps the LRU tick, touches no counters.
+    fn probe_resident(&self, key: Key) -> Option<CachedState> {
+        let mut s = self.shard_of(key).lock().unwrap();
+        if let Some(e) = s.map.get_mut(&key) {
+            e.tick = self.next_tick();
+            Some(Arc::clone(&e.state))
+        } else {
+            None
+        }
+    }
+
+    fn bump(global: &AtomicU64, scoped: Option<&AtomicU64>) {
+        global.fetch_add(1, Ordering::Relaxed);
+        if let Some(s) = scoped {
+            s.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Credit a served state's payload size to the scope (per-tenant
+    /// byte accounting; no global counterpart — globals track residency).
+    fn credit_bytes(scope: Option<&ScopedCounters>, state: &CachedState) {
+        if let Some(s) = scope {
+            let bytes: usize = state.iter().map(Plane::nbytes).sum();
+            s.bytes_served.fetch_add(bytes as u64, Ordering::Relaxed);
+        }
+    }
+
     /// Look up the state for `key`: memory first, then the disk tier.
     /// A memory hit is a refcount bump (the returned `Arc` shares the
     /// resident allocation); a disk hit is promoted back into memory.
-    pub fn get_state(&self, key: u64) -> Option<CachedState> {
-        {
-            let mut s = self.shard_of(key).lock().unwrap();
-            if let Some(e) = s.map.get_mut(&key) {
-                e.tick = self.next_tick();
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                return Some(Arc::clone(&e.state));
-            }
+    pub fn get_state(&self, key: Key) -> Option<CachedState> {
+        self.get_state_scoped(key, None)
+    }
+
+    /// [`ReuseCache::get_state`] mirroring the counters into `scope`.
+    pub fn get_state_scoped(
+        &self,
+        key: Key,
+        scope: Option<&ScopedCounters>,
+    ) -> Option<CachedState> {
+        if let Some(state) = self.probe_resident(key) {
+            Self::bump(&self.hits, scope.map(|s| &s.hits));
+            Self::credit_bytes(scope, &state);
+            return Some(state);
         }
         if let Some(dir) = &self.cfg.spill_dir {
             if let Some(state) = disk::load_state(dir, key) {
                 let state: CachedState = Arc::new(state);
-                self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                Self::bump(&self.disk_hits, scope.map(|s| &s.disk_hits));
+                Self::credit_bytes(scope, &state);
                 self.insert_resident(key, Arc::clone(&state));
                 return Some(state);
             }
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        Self::bump(&self.misses, scope.map(|s| &s.misses));
         None
     }
 
-    /// Count a state hit that was served outside [`ReuseCache::get_state`]
-    /// — the batched executor serving a lane from a sibling lane's
+    /// Single-flight lookup: a hit is served zero-copy; a miss *claims*
+    /// the key (registering it in flight, counted as a miss — so under
+    /// full single-flight discipline, `misses` equals backend
+    /// computations); a key someone else is computing returns
+    /// [`StateClaim::InFlight`] without touching any counter — the
+    /// caller waits and retries, and the eventual resolution is what
+    /// gets counted.
+    pub fn lookup_or_claim(&self, key: Key, scope: Option<&ScopedCounters>) -> StateClaim {
+        if let Some(state) = self.probe_resident(key) {
+            Self::bump(&self.hits, scope.map(|s| &s.hits));
+            Self::credit_bytes(scope, &state);
+            return StateClaim::Ready(state);
+        }
+        {
+            let mut flights = self.flights.set.lock().unwrap();
+            if flights.contains(&key) {
+                return StateClaim::InFlight;
+            }
+            // the owner may have published between the probe and the lock
+            if let Some(state) = self.probe_resident(key) {
+                Self::bump(&self.hits, scope.map(|s| &s.hits));
+                Self::credit_bytes(scope, &state);
+                return StateClaim::Ready(state);
+            }
+            // claim BEFORE the disk probe, so the (slow) file read below
+            // runs without the global flight lock — concurrent lookups of
+            // this key wait on the claim; everyone else proceeds
+            flights.insert(key);
+        }
+        if let Some(dir) = &self.cfg.spill_dir {
+            if let Some(state) = disk::load_state(dir, key) {
+                let state: CachedState = Arc::new(state);
+                Self::bump(&self.disk_hits, scope.map(|s| &s.disk_hits));
+                Self::credit_bytes(scope, &state);
+                self.insert_resident(key, Arc::clone(&state));
+                // promoted to memory: waiters re-probe and hit
+                self.release_flight(key);
+                return StateClaim::Ready(state);
+            }
+        }
+        Self::bump(&self.misses, scope.map(|s| &s.misses));
+        StateClaim::Claimed
+    }
+
+    /// Single-flight lookup on the comparison-metric map (see
+    /// [`ReuseCache::lookup_or_claim`] for the protocol).
+    pub fn lookup_or_claim_metrics(
+        &self,
+        key: Key,
+        scope: Option<&ScopedCounters>,
+    ) -> MetricsClaim {
+        if let Some(m) = self.metrics.lock().unwrap().get(&key) {
+            Self::bump(&self.metric_hits, scope.map(|s| &s.metric_hits));
+            return MetricsClaim::Ready(*m);
+        }
+        let mut flights = self.flights.set.lock().unwrap();
+        if flights.contains(&key) {
+            return MetricsClaim::InFlight;
+        }
+        if let Some(m) = self.metrics.lock().unwrap().get(&key) {
+            Self::bump(&self.metric_hits, scope.map(|s| &s.metric_hits));
+            return MetricsClaim::Ready(*m);
+        }
+        flights.insert(key);
+        Self::bump(&self.metric_misses, scope.map(|s| &s.metric_misses));
+        MetricsClaim::Claimed
+    }
+
+    /// Release an in-flight claim without publishing (error/abandon
+    /// path). Idempotent; wakes every waiter so one of them can
+    /// re-claim. [`ReuseCache::put_state`] / [`ReuseCache::put_metrics`]
+    /// release automatically on publication.
+    pub fn release_flight(&self, key: Key) {
+        let mut flights = self.flights.set.lock().unwrap();
+        if flights.remove(&key) {
+            self.flights.cv.notify_all();
+        }
+    }
+
+    /// Block until `key` is no longer in flight (it may be published,
+    /// abandoned, or even already evicted — the caller must look up
+    /// again and, on a miss, claim for itself). Callers must not hold
+    /// any unpublished claim of their own while waiting.
+    pub fn wait_for_flight(&self, key: Key) {
+        let mut flights = self.flights.set.lock().unwrap();
+        while flights.contains(&key) {
+            flights = self.flights.cv.wait(flights).unwrap();
+        }
+    }
+
+    /// Count a state hit that was served outside the cache's own lookup
+    /// paths — the batched executor serving a lane from a sibling lane's
     /// just-computed result records it here, exactly as the sequential
     /// path's lookup-after-publication would have counted a hit.
     pub fn note_state_hit(&self) {
-        self.hits.fetch_add(1, Ordering::Relaxed);
+        self.note_state_hit_scoped(None)
+    }
+
+    /// [`ReuseCache::note_state_hit`] mirroring into `scope`.
+    pub fn note_state_hit_scoped(&self, scope: Option<&ScopedCounters>) {
+        Self::bump(&self.hits, scope.map(|s| &s.hits));
     }
 
     /// Probe without fetching (planning-time check): true when the key is
     /// resident in memory or present on disk. Does not touch LRU order or
     /// the hit/miss counters.
-    pub fn contains_state(&self, key: u64) -> bool {
+    pub fn contains_state(&self, key: Key) -> bool {
         if self.shard_of(key).lock().unwrap().map.contains_key(&key) {
             return true;
         }
@@ -240,8 +465,20 @@ impl ReuseCache {
     /// fresh `Arc`). With a disk tier the entry is written through
     /// immediately; the in-memory copy is subject to LRU. The `inserts`
     /// counter tracks newly published keys (approximate under concurrent
-    /// duplicate publication of the same key).
-    pub fn put_state(&self, key: u64, state: impl Into<CachedState>) {
+    /// duplicate publication of the same key). Publication releases any
+    /// in-flight claim on `key` and wakes its waiters.
+    pub fn put_state(&self, key: Key, state: impl Into<CachedState>) {
+        self.put_state_scoped(key, state, None)
+    }
+
+    /// [`ReuseCache::put_state`] mirroring the insert counter into
+    /// `scope`.
+    pub fn put_state_scoped(
+        &self,
+        key: Key,
+        state: impl Into<CachedState>,
+        scope: Option<&ScopedCounters>,
+    ) {
         let state = state.into();
         let mut new_on_disk = false;
         if let Some(dir) = &self.cfg.spill_dir {
@@ -251,12 +488,13 @@ impl ReuseCache {
             }
         }
         if self.insert_resident(key, state) || new_on_disk {
-            self.inserts.fetch_add(1, Ordering::Relaxed);
+            Self::bump(&self.inserts, scope.map(|s| &s.inserts));
         }
+        self.release_flight(key);
     }
 
     /// Returns true when `key` was newly added to the resident map.
-    fn insert_resident(&self, key: u64, state: CachedState) -> bool {
+    fn insert_resident(&self, key: Key, state: CachedState) -> bool {
         let bytes: usize = state.iter().map(Plane::nbytes).sum();
         let budget = self.per_shard_budget();
         if bytes > budget {
@@ -300,27 +538,38 @@ impl ReuseCache {
     }
 
     /// Look up cached comparison metrics.
-    pub fn get_metrics(&self, key: u64) -> Option<[f32; 3]> {
+    pub fn get_metrics(&self, key: Key) -> Option<[f32; 3]> {
+        self.get_metrics_scoped(key, None)
+    }
+
+    /// [`ReuseCache::get_metrics`] mirroring the counters into `scope`.
+    pub fn get_metrics_scoped(
+        &self,
+        key: Key,
+        scope: Option<&ScopedCounters>,
+    ) -> Option<[f32; 3]> {
         let m = self.metrics.lock().unwrap();
         match m.get(&key) {
             Some(v) => {
-                self.metric_hits.fetch_add(1, Ordering::Relaxed);
+                Self::bump(&self.metric_hits, scope.map(|s| &s.metric_hits));
                 Some(*v)
             }
             None => {
-                self.metric_misses.fetch_add(1, Ordering::Relaxed);
+                Self::bump(&self.metric_misses, scope.map(|s| &s.metric_misses));
                 None
             }
         }
     }
 
     /// Publish comparison metrics (tiny; memory-only, unbounded).
-    pub fn put_metrics(&self, key: u64, metrics: [f32; 3]) {
+    /// Releases any in-flight claim on `key`.
+    pub fn put_metrics(&self, key: Key, metrics: [f32; 3]) {
         self.metrics.lock().unwrap().insert(key, metrics);
+        self.release_flight(key);
     }
 
     /// True when the metrics map holds `key` (planning-time probe).
-    pub fn contains_metrics(&self, key: u64) -> bool {
+    pub fn contains_metrics(&self, key: Key) -> bool {
         self.metrics.lock().unwrap().contains_key(&key)
     }
 
@@ -341,8 +590,8 @@ impl ReuseCache {
     /// Sorted keys of every state resident in memory (diagnostic / test
     /// aid: two runs that must leave the cache in the same state compare
     /// these).
-    pub fn resident_keys(&self) -> Vec<u64> {
-        let mut keys: Vec<u64> = self
+    pub fn resident_keys(&self) -> Vec<Key> {
+        let mut keys: Vec<Key> = self
             .shards
             .iter()
             .flat_map(|s| s.lock().unwrap().map.keys().copied().collect::<Vec<_>>())
@@ -352,8 +601,8 @@ impl ReuseCache {
     }
 
     /// Sorted keys of every cached comparison metric.
-    pub fn metric_keys(&self) -> Vec<u64> {
-        let mut keys: Vec<u64> = self.metrics.lock().unwrap().keys().copied().collect();
+    pub fn metric_keys(&self) -> Vec<Key> {
+        let mut keys: Vec<Key> = self.metrics.lock().unwrap().keys().copied().collect();
         keys.sort_unstable();
         keys
     }
@@ -375,6 +624,41 @@ impl ReuseCache {
     }
 }
 
+/// RAII holder for claimed flights: any key still held when this drops
+/// (error or panic on the compute path) is released so waiters wake and
+/// re-claim instead of blocking forever. Keys published via
+/// [`ReuseCache::put_state`] / [`ReuseCache::put_metrics`] are already
+/// released; [`FlightClaims::settle`] additionally forgets them here so
+/// the drop cannot race a later claimant of the same key.
+pub struct FlightClaims {
+    cache: Arc<ReuseCache>,
+    keys: Vec<Key>,
+}
+
+impl FlightClaims {
+    pub fn new(cache: Arc<ReuseCache>) -> Self {
+        Self { cache, keys: Vec::new() }
+    }
+
+    /// Track a key this caller just claimed.
+    pub fn add(&mut self, key: Key) {
+        self.keys.push(key);
+    }
+
+    /// The key was published (flight already released) — stop tracking.
+    pub fn settle(&mut self, key: Key) {
+        self.keys.retain(|&k| k != key);
+    }
+}
+
+impl Drop for FlightClaims {
+    fn drop(&mut self) {
+        for &k in &self.keys {
+            self.cache.release_flight(k);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -387,17 +671,21 @@ mod tests {
         ]
     }
 
+    fn k(v: u64) -> Key {
+        Key::from(v)
+    }
+
     #[test]
     fn hits_share_the_resident_allocation() {
         let c = ReuseCache::with_capacity(1 << 20);
-        c.put_state(7, state(3.0, 4));
-        let a = c.get_state(7).expect("hit");
-        let b = c.get_state(7).expect("hit");
+        c.put_state(k(7), state(3.0, 4));
+        let a = c.get_state(k(7)).expect("hit");
+        let b = c.get_state(k(7)).expect("hit");
         // zero-copy: both hits point at the same [Plane; 3] allocation
         assert!(Arc::ptr_eq(&a, &b), "cache hits must be refcount bumps");
-        assert_eq!(c.resident_keys(), vec![7]);
-        c.put_metrics(9, [1.0, 1.0, 0.0]);
-        assert_eq!(c.metric_keys(), vec![9]);
+        assert_eq!(c.resident_keys(), vec![k(7)]);
+        c.put_metrics(k(9), [1.0, 1.0, 0.0]);
+        assert_eq!(c.metric_keys(), vec![k(9)]);
     }
 
     /// Bytes of one `state(v, 4)`: 3 planes x 16 px x 4 B.
@@ -406,15 +694,31 @@ mod tests {
     #[test]
     fn put_get_roundtrip_and_counters() {
         let c = ReuseCache::with_capacity(1 << 20);
-        assert!(c.get_state(1).is_none());
-        c.put_state(1, state(5.0, 4));
-        let got = c.get_state(1).expect("hit");
+        assert!(c.get_state(k(1)).is_none());
+        c.put_state(k(1), state(5.0, 4));
+        let got = c.get_state(k(1)).expect("hit");
         assert_eq!(got[0].get(0, 0), 5.0);
         let st = c.stats();
         assert_eq!((st.hits, st.misses, st.inserts), (1, 1, 1));
         assert_eq!(st.resident_bytes as usize, S4);
-        assert!(c.contains_state(1));
-        assert!(!c.contains_state(2));
+        assert!(c.contains_state(k(1)));
+        assert!(!c.contains_state(k(2)));
+    }
+
+    #[test]
+    fn keys_equal_in_the_low_64_bits_are_distinct_entries() {
+        // the aliasing the 64-bit keys risked: two distinct computations
+        // whose (old, truncated) keys collide. With 128-bit keys they are
+        // separate entries; the old u64-keyed map stored exactly one.
+        let c = ReuseCache::with_capacity(1 << 20);
+        let a = Key::from_parts(0xAAAA, 0x42);
+        let b = Key::from_parts(0xBBBB, 0x42);
+        assert_eq!(a.lo(), b.lo(), "constructed to collide at 64 bits");
+        c.put_state(a, state(1.0, 4));
+        c.put_state(b, state(2.0, 4));
+        assert_eq!(c.len(), 2, "no aliasing: both chains keep their state");
+        assert_eq!(c.get_state(a).unwrap()[0].get(0, 0), 1.0);
+        assert_eq!(c.get_state(b).unwrap()[0].get(0, 0), 2.0);
     }
 
     #[test]
@@ -425,14 +729,14 @@ mod tests {
             shards: 1,
             ..CacheConfig::default()
         });
-        c.put_state(1, state(1.0, 4));
-        c.put_state(2, state(2.0, 4));
-        let _ = c.get_state(1); // 1 is now more recent than 2
-        c.put_state(3, state(3.0, 4));
+        c.put_state(k(1), state(1.0, 4));
+        c.put_state(k(2), state(2.0, 4));
+        let _ = c.get_state(k(1)); // 1 is now more recent than 2
+        c.put_state(k(3), state(3.0, 4));
         assert!(c.resident_bytes() <= 2 * S4, "bound holds: {}", c.resident_bytes());
-        assert!(c.get_state(2).is_none(), "LRU victim was 2");
-        assert!(c.get_state(1).is_some());
-        assert!(c.get_state(3).is_some());
+        assert!(c.get_state(k(2)).is_none(), "LRU victim was 2");
+        assert!(c.get_state(k(1)).is_some());
+        assert!(c.get_state(k(3)).is_some());
         assert_eq!(c.stats().evictions, 1);
     }
 
@@ -443,18 +747,18 @@ mod tests {
             shards: 1,
             ..CacheConfig::default()
         });
-        c.put_state(9, state(1.0, 4));
+        c.put_state(k(9), state(1.0, 4));
         assert_eq!(c.len(), 0, "state larger than the shard budget stays out");
-        assert!(c.get_state(9).is_none());
+        assert!(c.get_state(k(9)).is_none());
     }
 
     #[test]
     fn metrics_roundtrip() {
         let c = ReuseCache::with_capacity(1024);
-        assert!(c.get_metrics(5).is_none());
-        c.put_metrics(5, [0.9, 0.8, 0.01]);
-        assert_eq!(c.get_metrics(5), Some([0.9, 0.8, 0.01]));
-        assert!(c.contains_metrics(5));
+        assert!(c.get_metrics(k(5)).is_none());
+        c.put_metrics(k(5), [0.9, 0.8, 0.01]);
+        assert_eq!(c.get_metrics(k(5)), Some([0.9, 0.8, 0.01]));
+        assert!(c.contains_metrics(k(5)));
         let st = c.stats();
         assert_eq!((st.metric_hits, st.metric_misses), (1, 1));
     }
@@ -469,9 +773,9 @@ mod tests {
             spill_dir: Some(dir.clone()),
             ..CacheConfig::default()
         });
-        c.put_state(1, state(1.0, 4));
-        c.put_state(2, state(2.0, 4)); // evicts 1 from memory
-        let back = c.get_state(1).expect("served from disk");
+        c.put_state(k(1), state(1.0, 4));
+        c.put_state(k(2), state(2.0, 4)); // evicts 1 from memory
+        let back = c.get_state(k(1)).expect("served from disk");
         assert_eq!(back[1].get(3, 3), 1.0);
         let st = c.stats();
         assert!(st.disk_hits >= 1, "stats: {st:?}");
@@ -482,9 +786,69 @@ mod tests {
     #[test]
     fn stats_summary_is_labeled() {
         let c = ReuseCache::with_capacity(1024);
-        c.put_state(1, state(1.0, 2));
+        c.put_state(k(1), state(1.0, 2));
         let rows = c.stats().summary();
-        assert!(rows.iter().any(|(k, v)| k == "cache.inserts" && *v == 1));
+        assert!(rows.iter().any(|(key, v)| key == "cache.inserts" && *v == 1));
         assert_eq!(rows.len(), 10);
+    }
+
+    #[test]
+    fn claim_protocol_single_thread() {
+        let c = ReuseCache::with_capacity(1 << 20);
+        // first lookup claims
+        assert!(matches!(c.lookup_or_claim(k(1), None), StateClaim::Claimed));
+        // a second lookup (another worker) observes the flight
+        assert!(matches!(c.lookup_or_claim(k(1), None), StateClaim::InFlight));
+        // publication resolves the flight; the next lookup is a hit
+        c.put_state(k(1), state(1.0, 4));
+        assert!(matches!(c.lookup_or_claim(k(1), None), StateClaim::Ready(_)));
+        // abandoned claims release: the next lookup re-claims
+        assert!(matches!(c.lookup_or_claim(k(2), None), StateClaim::Claimed));
+        c.release_flight(k(2));
+        assert!(matches!(c.lookup_or_claim(k(2), None), StateClaim::Claimed));
+        c.release_flight(k(2));
+        let st = c.stats();
+        assert_eq!(st.misses, 3, "each claim counts one miss");
+        assert_eq!(st.hits, 1);
+    }
+
+    #[test]
+    fn scoped_counters_mirror_globals() {
+        let c = ReuseCache::with_capacity(1 << 20);
+        let a = ScopedCounters::default();
+        let b = ScopedCounters::default();
+        // tenant a: one miss-claim + publish + one hit
+        assert!(matches!(c.lookup_or_claim(k(1), Some(&a)), StateClaim::Claimed));
+        c.put_state_scoped(k(1), state(1.0, 4), Some(&a));
+        assert!(c.get_state_scoped(k(1), Some(&a)).is_some());
+        // tenant b: hits a's state; one metric miss-claim + publish
+        assert!(c.get_state_scoped(k(1), Some(&b)).is_some());
+        assert!(matches!(c.lookup_or_claim_metrics(k(9), Some(&b)), MetricsClaim::Claimed));
+        c.put_metrics(k(9), [1.0, 1.0, 0.0]);
+        assert!(c.get_metrics_scoped(k(9), Some(&b)).is_some());
+
+        let (sa, sb, g) = (a.stats(), b.stats(), c.stats());
+        assert_eq!((sa.misses, sa.inserts, sa.hits), (1, 1, 1));
+        assert_eq!((sb.hits, sb.metric_misses, sb.metric_hits), (1, 1, 1));
+        // the scopes partition the global counters exactly
+        assert_eq!(sa.hits + sb.hits, g.hits);
+        assert_eq!(sa.misses + sb.misses, g.misses);
+        assert_eq!(sa.inserts + sb.inserts, g.inserts);
+        assert_eq!(sa.metric_hits + sb.metric_hits, g.metric_hits);
+        assert_eq!(sa.metric_misses + sb.metric_misses, g.metric_misses);
+    }
+
+    #[test]
+    fn flight_claims_release_on_drop() {
+        let c = Arc::new(ReuseCache::with_capacity(1 << 20));
+        {
+            let mut claims = FlightClaims::new(c.clone());
+            assert!(matches!(c.lookup_or_claim(k(5), None), StateClaim::Claimed));
+            claims.add(k(5));
+            // simulated error path: claims dropped without publishing
+        }
+        // the flight is gone: a new worker can claim
+        assert!(matches!(c.lookup_or_claim(k(5), None), StateClaim::Claimed));
+        c.release_flight(k(5));
     }
 }

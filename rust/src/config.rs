@@ -102,6 +102,20 @@ impl Default for CacheSettings {
     }
 }
 
+impl CacheSettings {
+    /// The construction-time [`crate::cache::CacheConfig`] these
+    /// settings describe (used by the per-study driver and the
+    /// multi-tenant service alike; ignores `enabled`).
+    pub fn to_cache_config(&self) -> crate::cache::CacheConfig {
+        crate::cache::CacheConfig {
+            capacity_bytes: self.capacity_mb * 1024 * 1024,
+            shards: self.shards,
+            quantize: self.quantize,
+            spill_dir: self.spill_dir.as_ref().map(std::path::PathBuf::from),
+        }
+    }
+}
+
 /// The full study configuration.
 #[derive(Clone, Debug)]
 pub struct StudyConfig {

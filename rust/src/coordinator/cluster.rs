@@ -7,8 +7,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::cache::{chain_key, node_input_key, reference_fingerprints, tile_fingerprints};
-use crate::cache::{CacheStats, ReuseCache};
+use crate::cache::{fold_keys, node_input_key, reference_fingerprints, tile_fingerprints};
+use crate::cache::{CacheStats, Key, ReuseCache, ScopedCounters};
 use crate::data::{Plane, TileSet};
 use crate::merging::{CompactGraph, StudyPlan};
 use crate::runtime::{ArtifactManifest, PjrtEngine, TaskTimer};
@@ -46,6 +46,10 @@ pub struct ExecuteOptions {
     /// Cross-study reuse cache, shared by every worker engine (and, when
     /// the caller holds it across studies, by successive executions).
     pub cache: Option<Arc<ReuseCache>>,
+    /// Per-tenant counter scope this execution accounts its cache
+    /// traffic under (multi-tenant serving; see [`crate::serve`]).
+    /// `None` leaves only the cache's global counters.
+    pub cache_scope: Option<Arc<ScopedCounters>>,
     /// How workers batch reuse-tree frontier siblings into kernel
     /// launches (see [`BatchPolicy`]).
     pub batch: BatchPolicy,
@@ -58,6 +62,7 @@ impl ExecuteOptions {
             artifacts_dir: artifacts_dir.into(),
             state_limit_bytes: None,
             cache: None,
+            cache_scope: None,
             batch: BatchPolicy::default(),
         }
     }
@@ -71,6 +76,15 @@ impl ExecuteOptions {
     /// Share a cross-study reuse cache with the worker engines.
     pub fn with_cache(mut self, cache: Arc<ReuseCache>) -> Self {
         self.cache = Some(cache);
+        self
+    }
+
+    /// Account this execution's cache traffic under a per-tenant scope
+    /// (every worker engine mirrors its counted cache operations into
+    /// it). The multi-tenant service gives each tenant one scope, so
+    /// tenant counters sum exactly to the shared cache's globals.
+    pub fn with_cache_scope(mut self, scope: Arc<ScopedCounters>) -> Self {
+        self.cache_scope = Some(scope);
         self
     }
 
@@ -192,10 +206,10 @@ pub fn execute_study(
     // different kernel versions never alias
     let fps = match &opts.cache {
         Some(_) => {
-            let art = ArtifactManifest::load(&opts.artifacts_dir)?.fingerprint();
+            let art = Key::from(ArtifactManifest::load(&opts.artifacts_dir)?.fingerprint());
             let mut tile_fps = tile_fingerprints(tiles);
             for fp in tile_fps.values_mut() {
-                *fp = chain_key(art, *fp);
+                *fp = fold_keys(art, *fp);
             }
             Some((tile_fps, reference_fingerprints(references)))
         }
@@ -265,7 +279,7 @@ fn worker_loop(
     metrics_map: &Mutex<HashMap<usize, [f32; 3]>>,
     timers: &Mutex<Vec<(String, f64, u64)>>,
     consumers: &[usize],
-    fps: Option<&(HashMap<u64, u64>, HashMap<u64, u64>)>,
+    fps: Option<&(HashMap<u64, Key>, HashMap<u64, Key>)>,
 ) {
     let fail = |msg: String| {
         let mut s = sched.lock().unwrap();
@@ -281,6 +295,9 @@ fn worker_loop(
     };
     if let Some(cache) = &opts.cache {
         engine.set_cache(cache.clone());
+        if let Some(scope) = &opts.cache_scope {
+            engine.set_cache_scope(scope.clone());
+        }
     }
     let quantize = opts.cache.as_ref().map(|c| c.quantize_step()).unwrap_or(0.0);
 
@@ -323,10 +340,10 @@ fn worker_loop(
                 graph,
                 instances,
                 unit.nodes[0],
-                tile_fps.get(&rep.tile).copied().unwrap_or(0),
+                tile_fps.get(&rep.tile).copied().unwrap_or(Key::from(0u64)),
                 quantize,
             ),
-            ref_fp: ref_fps.get(&rep.tile).copied().unwrap_or(0),
+            ref_fp: ref_fps.get(&rep.tile).copied().unwrap_or(Key::from(0u64)),
         });
         let result = execute_unit(
             &mut engine,

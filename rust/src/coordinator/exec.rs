@@ -19,7 +19,7 @@
 //! At study tile sizes this is a few MiB per worker; the policy width
 //! caps how many *outputs* a single launch materializes at once.
 
-use crate::cache::{chain_key, task_cache_sig};
+use crate::cache::{metrics_key, task_cache_sig, Key};
 use crate::data::Plane;
 use crate::merging::reuse_tree::{ReuseTree, WalkNode};
 use crate::merging::{unit_stages, CompactGraph, ScheduleUnit};
@@ -70,8 +70,8 @@ pub enum UnitOutput {
 /// and the fingerprint of the tile's reference mask (for metric keys).
 #[derive(Clone, Copy, Debug)]
 pub struct UnitCacheCtx {
-    pub base_key: u64,
-    pub ref_fp: u64,
+    pub base_key: Key,
+    pub ref_fp: Key,
 }
 
 /// Everything the frontier walk needs besides the engine and the
@@ -118,8 +118,9 @@ pub fn execute_unit(
             Error::Coordinator(format!("unit {} (comparison) needs a reference mask", unit.id))
         })?;
         let key = match cache_ctx {
-            Some(ctx) if keyed => Some(chain_key(
-                chain_key(ctx.base_key, task_cache_sig(&rep.tasks[0], quantize)),
+            Some(ctx) if keyed => Some(metrics_key(
+                ctx.base_key,
+                task_cache_sig(&rep.tasks[0], quantize),
                 ctx.ref_fp,
             )),
             _ => None,
@@ -139,7 +140,7 @@ pub fn execute_unit(
     let cx = FrontierCtx { tree: &tree, unit, graph, instances };
     let levels = tree.walk();
     // per-node content chain keys, over the same walk the planner probes
-    let keys: Option<Vec<u64>> = match cache_ctx {
+    let keys: Option<Vec<Key>> = match cache_ctx {
         Some(ctx) if keyed => Some(
             tree.chain_keys(&levels, ctx.base_key, |level, member| {
                 task_cache_sig(cx.task_of(level, member), quantize)
@@ -171,7 +172,7 @@ fn frontier(
     cx: &FrontierCtx,
     levels: &[Vec<WalkNode>],
     input: [xla::Literal; 3],
-    keys: Option<&[u64]>,
+    keys: Option<&[Key]>,
     batch: BatchPolicy,
     out: &mut Vec<(usize, State)>,
 ) -> Result<()> {
@@ -216,14 +217,14 @@ fn run_chunk(
     cx: &FrontierCtx,
     id: TaskId,
     chunk: &[WalkNode],
-    keys: Option<&[u64]>,
+    keys: Option<&[Key]>,
     states: &mut [Option<[xla::Literal; 3]>],
 ) -> Result<()> {
     let params: Vec<Vec<f32>> = chunk
         .iter()
         .map(|n| cx.task_of(n.level, n.member).params.iter().map(|&v| v as f32).collect())
         .collect();
-    let node_keys: Vec<Option<u64>> = chunk.iter().map(|n| keys.map(|k| k[n.node])).collect();
+    let node_keys: Vec<Option<Key>> = chunk.iter().map(|n| keys.map(|k| k[n.node])).collect();
     let missing = |n: &WalkNode| {
         Error::Coordinator(format!("unit {}: state of parent {} missing", cx.unit.id, n.parent))
     };

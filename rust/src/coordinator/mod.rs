@@ -1,7 +1,8 @@
 //! The RTF manager/worker runtime (paper §2.3) executing study plans on
 //! real PJRT engines.
 //!
-//! The **manager** owns the dependency state of the [`StudyPlan`] and a
+//! The **manager** owns the dependency state of the
+//! [`StudyPlan`](crate::merging::StudyPlan) and a
 //! FIFO ready queue; **workers** (one OS thread each, with a private
 //! [`crate::runtime::PjrtEngine`] — PJRT handles are not `Send`, and one
 //! engine per worker is also the faithful topology) request schedule

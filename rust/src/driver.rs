@@ -4,11 +4,12 @@
 //! chosen engine.
 
 use std::collections::HashMap;
-use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::analysis::{moat_effects, screen_top_k, MoatIndices};
-use crate::cache::{chain_key, reference_fingerprints, tile_fingerprints, CacheConfig, ReuseCache};
+use crate::cache::{
+    fold_keys, reference_fingerprints, tile_fingerprints, Key, ReuseCache, ScopedCounters,
+};
 use crate::config::{SaMethod, StudyConfig};
 use crate::coordinator::{execute_study, BatchPolicy, ExecuteOptions, StudyOutcome};
 use crate::data::{synth_tile, Plane, SynthConfig, TileSet};
@@ -172,12 +173,7 @@ pub fn build_cache(cfg: &StudyConfig) -> Option<Arc<ReuseCache>> {
     if !cfg.cache.enabled {
         return None;
     }
-    Some(Arc::new(ReuseCache::new(CacheConfig {
-        capacity_bytes: cfg.cache.capacity_mb * 1024 * 1024,
-        shards: cfg.cache.shards,
-        quantize: cfg.cache.quantize,
-        spill_dir: cfg.cache.spill_dir.as_ref().map(PathBuf::from),
-    })))
+    Some(Arc::new(ReuseCache::new(cfg.cache.to_cache_config())))
 }
 
 /// The fixed per-study runtime inputs: synthetic tiles, reference masks,
@@ -193,12 +189,24 @@ pub struct StudyInputs {
 }
 
 /// Build the runtime inputs for a prepared study (tiles, reference
-/// masks, artifact fingerprint).
+/// masks, artifact fingerprint), loading a fresh engine.
 pub fn make_inputs(cfg: &StudyConfig, prepared: &PreparedStudy) -> Result<StudyInputs> {
     let mut engine = PjrtEngine::load(&cfg.artifacts_dir)?;
+    make_inputs_with_engine(cfg, prepared, &mut engine)
+}
+
+/// [`make_inputs`] over an already-loaded engine — the multi-tenant
+/// service reuses its process-lifetime leader engine here instead of
+/// paying a load + compile per study. The engine must have been loaded
+/// from the same artifacts the study will execute with.
+pub fn make_inputs_with_engine(
+    cfg: &StudyConfig,
+    prepared: &PreparedStudy,
+    engine: &mut PjrtEngine,
+) -> Result<StudyInputs> {
     let (h, w) = engine.tile_shape();
     let tiles = make_tiles(cfg, h, w);
-    let references = reference_masks(&mut engine, &prepared.space, &prepared.workflow, &tiles)?;
+    let references = reference_masks(engine, &prepared.space, &prepared.workflow, &tiles)?;
     Ok(StudyInputs {
         tiles,
         references,
@@ -209,10 +217,10 @@ pub fn make_inputs(cfg: &StudyConfig, prepared: &PreparedStudy) -> Result<StudyI
 
 /// Tile content fingerprints folded with the artifact fingerprint — the
 /// exact cache-key roots `execute_study` derives internally.
-fn keyed_tile_fps(inputs: &StudyInputs) -> HashMap<u64, u64> {
+fn keyed_tile_fps(inputs: &StudyInputs) -> HashMap<u64, Key> {
     let mut fps = tile_fingerprints(&inputs.tiles);
     for fp in fps.values_mut() {
-        *fp = chain_key(inputs.art_fp, *fp);
+        *fp = fold_keys(Key::from(inputs.art_fp), *fp);
     }
     fps
 }
@@ -250,10 +258,27 @@ pub fn run_pjrt_with_inputs(
     cache: Option<Arc<ReuseCache>>,
     inputs: &StudyInputs,
 ) -> Result<StudyOutcome> {
+    run_pjrt_with_inputs_scoped(cfg, prepared, plan, cache, None, inputs)
+}
+
+/// [`run_pjrt_with_inputs`] accounting the execution's cache traffic
+/// under a per-tenant [`ScopedCounters`] scope (multi-tenant serving;
+/// see [`crate::serve`]). `scope` is ignored without a cache.
+pub fn run_pjrt_with_inputs_scoped(
+    cfg: &StudyConfig,
+    prepared: &PreparedStudy,
+    plan: &StudyPlan,
+    cache: Option<Arc<ReuseCache>>,
+    scope: Option<Arc<ScopedCounters>>,
+    inputs: &StudyInputs,
+) -> Result<StudyOutcome> {
     let mut opts = ExecuteOptions::new(cfg.workers, &cfg.artifacts_dir)
         .with_batch(BatchPolicy::new(cfg.batch_width));
     if let Some(cache) = cache {
         opts = opts.with_cache(cache);
+        if let Some(scope) = scope {
+            opts = opts.with_cache_scope(scope);
+        }
     }
     execute_study(
         &opts,

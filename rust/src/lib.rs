@@ -23,6 +23,9 @@
 //!   artifacts (`artifacts/*.hlo.txt`); python never runs at request time.
 //! * [`coordinator`] — demand-driven manager/worker execution of merged
 //!   plans with per-worker task scheduling and dependency resolution.
+//! * [`serve`] — the multi-tenant study service: one process-lifetime
+//!   shared cache + engine serving many concurrent studies, with fair
+//!   admission, per-tenant accounting and graceful drain.
 //! * [`simulate`] — discrete-event cluster simulator used for the
 //!   8–256-worker scalability studies (Figs. 22/23, Table 5).
 //! * [`analysis`] — elementary effects (MOAT) and Sobol indices (VBD),
@@ -30,8 +33,9 @@
 //! * [`data`] — region-template data abstraction and the synthetic tissue
 //!   tile generator standing in for the paper's WSI dataset.
 //!
-//! See `DESIGN.md` for the full system inventory and the experiment index
-//! mapping every table/figure of the paper to a driver in this crate.
+//! See `ARCHITECTURE.md` (repository root) for the top-to-bottom tour —
+//! data-flow diagram, life of a study, and the map from every paper
+//! section/table to the module that reproduces it.
 
 pub mod analysis;
 pub mod benchx;
@@ -45,6 +49,7 @@ pub mod jsonx;
 pub mod merging;
 pub mod runtime;
 pub mod sampling;
+pub mod serve;
 pub mod simulate;
 pub mod workflow;
 

@@ -3,6 +3,8 @@
 //! Subcommands (all take `key=value` options; see `rtf-reuse help`):
 //!
 //! * `run-sa`             — execute an SA study for real on PJRT workers
+//! * `serve`              — multi-tenant study service: many studies,
+//!                          one shared reuse cache
 //! * `simulate`           — same plan through the discrete-event cluster
 //! * `merge-plan`         — print the reuse plan an algorithm produces
 //! * `reuse-audit`        — maximum reuse potential per sampler (Table 4)
@@ -31,6 +33,7 @@ fn main() {
     let rest = if args.is_empty() { &[][..] } else { &args[1..] };
     let r = match cmd {
         "run-sa" => cmd_run_sa(rest),
+        "serve" => cmd_serve(rest),
         "simulate" => cmd_simulate(rest),
         "merge-plan" => cmd_merge_plan(rest),
         "reuse-audit" => cmd_reuse_audit(rest),
@@ -58,6 +61,7 @@ fn print_help() {
          \n\
          commands:\n\
            run-sa             run an SA study on real PJRT workers\n\
+           serve              run many tenants' studies against ONE shared cache\n\
            simulate           run the study through the cluster simulator\n\
            merge-plan         print the reuse plan for a config\n\
            reuse-audit        reuse potential per sampler (paper Table 4)\n\
@@ -72,7 +76,14 @@ fn print_help() {
            coarse=on|off  engine=pjrt|sim  workers=2  batch-width=16\n\
            tiles=1  seed=42\n\
            artifacts=DIR (default: the crate's artifacts/ dir)\n\
-           cache=on|off  cache-mb=256  cache-quant=0  cache-shards=8  cache-dir=DIR"
+           cache=on|off  cache-mb=256  cache-quant=0  cache-shards=8  cache-dir=DIR\n\
+         \n\
+         serve options (plus any study option above as the per-job default):\n\
+           serve-workers=2    concurrent studies in flight\n\
+           tenant-cap=1       max in-flight studies per tenant (fair admission)\n\
+           tenants=2          demo mode: N tenants ...\n\
+           jobs-per-tenant=1  ... each submitting this many identical studies\n\
+           jobs=FILE          submit per-line jobs: `tenant=NAME [study opts]`"
     );
 }
 
@@ -146,6 +157,148 @@ fn cmd_run_sa(args: &[String]) -> Result<()> {
             }
             t.print("VBD Sobol indices (paper Table 2, right)");
         }
+    }
+    Ok(())
+}
+
+/// `serve`: run a multi-tenant study service to completion. Demo mode
+/// (`tenants=N jobs-per-tenant=M`) submits N tenants' worth of the same
+/// study; `jobs=FILE` reads one job per line (`tenant=NAME [study
+/// options]`). Every job runs against ONE shared reuse cache; the
+/// per-tenant table shows who paid for launches and who rode the cache.
+fn cmd_serve(args: &[String]) -> Result<()> {
+    use rtf_reuse::serve::{ServeOptions, StudyJob, StudyService};
+
+    let mut serve_workers = 2usize;
+    let mut tenant_cap = 1usize;
+    let mut tenants = 2usize;
+    let mut jobs_per_tenant = 1usize;
+    let mut jobs_file: Option<String> = None;
+    let mut study_args: Vec<String> = Vec::new();
+    for a in args {
+        let uint = |v: &str| -> Result<usize> {
+            v.parse().map_err(|_| Error::Config(format!("`{a}` needs an integer")))
+        };
+        match a.split_once('=') {
+            Some(("serve-workers", v)) => serve_workers = uint(v)?.max(1),
+            Some(("tenant-cap", v)) => tenant_cap = uint(v)?.max(1),
+            Some(("tenants", v)) => tenants = uint(v)?.max(1),
+            Some(("jobs-per-tenant", v)) => jobs_per_tenant = uint(v)?.max(1),
+            Some(("jobs", v)) => jobs_file = Some(v.to_string()),
+            _ => study_args.push(a.clone()),
+        }
+    }
+    // the service exists to share one cache across tenants; a cacheless
+    // service is a contradiction, so reject rather than silently ignore
+    if study_args.iter().any(|a| a == "cache=off" || a == "cache=false") {
+        return Err(Error::Config(
+            "serve shares one reuse cache across tenants; `cache=off` is not supported here \
+             (tune cache-mb / cache-shards / cache-dir instead)"
+                .into(),
+        ));
+    }
+    let mut base = StudyConfig::from_args(&study_args)?;
+    base.cache.enabled = true;
+
+    let opts = ServeOptions {
+        service_workers: serve_workers,
+        tenant_inflight_cap: tenant_cap,
+        study_workers: base.workers,
+        batch_width: base.batch_width,
+        artifacts_dir: base.artifacts_dir.clone(),
+        cache: base.cache.to_cache_config(),
+    };
+    println!(
+        "serve: {} service workers, tenant cap {}, {} study workers, cache {} MiB",
+        opts.service_workers,
+        opts.tenant_inflight_cap,
+        opts.study_workers,
+        opts.cache.capacity_bytes / (1024 * 1024)
+    );
+    let svc = StudyService::start(opts)?;
+
+    let mut submitted = 0usize;
+    match &jobs_file {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            for (lineno, line) in text.lines().enumerate() {
+                let line = line.trim();
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                let mut tenant = None;
+                let mut job_args: Vec<String> = Vec::new();
+                for tok in line.split_whitespace() {
+                    match tok.split_once('=') {
+                        Some(("tenant", v)) => tenant = Some(v.to_string()),
+                        _ => job_args.push(tok.to_string()),
+                    }
+                }
+                let tenant = tenant.ok_or_else(|| {
+                    Error::Config(format!("{path}:{}: missing tenant=NAME", lineno + 1))
+                })?;
+                // CLI study options are the per-job defaults; the line's
+                // own options override them
+                let mut merged = study_args.clone();
+                merged.extend(job_args);
+                let cfg = StudyConfig::from_args(&merged)?;
+                svc.submit(StudyJob { tenant, cfg })?;
+                submitted += 1;
+            }
+        }
+        None => {
+            for t in 0..tenants {
+                for _ in 0..jobs_per_tenant {
+                    svc.submit(StudyJob { tenant: format!("tenant-{t}"), cfg: base.clone() })?;
+                }
+                submitted += jobs_per_tenant;
+            }
+        }
+    }
+    println!("submitted {submitted} studies; draining...");
+    let report = svc.drain();
+
+    let mut t = Table::new(&[
+        "tenant", "jobs", "failed", "launches", "cached", "hits", "misses", "hit %",
+        "served KiB", "exec wall",
+    ]);
+    for ten in &report.tenants {
+        t.row(&[
+            ten.tenant.clone(),
+            ten.jobs.to_string(),
+            ten.failed.to_string(),
+            ten.launches.to_string(),
+            ten.cached_tasks.to_string(),
+            (ten.cache.hits + ten.cache.disk_hits).to_string(),
+            ten.cache.misses.to_string(),
+            format!("{:.1}", ten.cache.hit_rate() * 100.0),
+            (ten.bytes_served / 1024).to_string(),
+            fmt_secs(ten.exec_wall.as_secs_f64()),
+        ]);
+    }
+    t.print("per-tenant bill (one shared reuse cache)");
+    println!(
+        "service: {} jobs, {} total launches ({} shared input launches), wall {}",
+        report.jobs.len(),
+        report.total_launches(),
+        report.input_launches,
+        fmt_secs(report.wall.as_secs_f64())
+    );
+    let g = report.cache;
+    println!(
+        "shared cache: {} state hits ({} disk), {} misses, {} metric hits, {:.1}% hit rate, \
+         resident {} KiB (peak {} KiB)",
+        g.hits + g.disk_hits,
+        g.disk_hits,
+        g.misses,
+        g.metric_hits,
+        g.hit_rate() * 100.0,
+        g.resident_bytes / 1024,
+        g.peak_bytes / 1024
+    );
+    for j in report.jobs.iter().filter(|j| !j.ok()) {
+        let reason = j.error.as_deref().unwrap_or("?");
+        println!("job {} (tenant {}) FAILED: {reason}", j.job, j.tenant);
     }
     Ok(())
 }

@@ -173,9 +173,9 @@ impl ReuseTree {
     pub fn chain_keys(
         &self,
         levels: &[Vec<WalkNode>],
-        base: u64,
+        base: crate::cache::Key,
         mut task_sig: impl FnMut(usize, usize) -> u64,
-    ) -> Vec<u64> {
+    ) -> Vec<crate::cache::Key> {
         let mut keys = vec![base; self.nodes.len()];
         for level in levels {
             for n in level {
@@ -332,13 +332,16 @@ mod tests {
 
     #[test]
     fn chain_keys_fold_parent_keys_through_task_sigs() {
+        use crate::cache::Key;
         let stages = mk_stages(&[&[1, 2], &[1, 3]]);
         let t = ReuseTree::build(&stages);
         // sig = level * 100 + member-resolved path entry
         let levels = t.walk();
-        let keys = t.chain_keys(&levels, 7, |level, member| stages[member].path[level - 1] * 100);
+        let base = Key::from(7u64);
+        let keys =
+            t.chain_keys(&levels, base, |level, member| stages[member].path[level - 1] * 100);
         // manual recursion over the same definition
-        fn expect(t: &ReuseTree, node: usize, key: u64, stages: &[MergeStage], keys: &[u64]) {
+        fn expect(t: &ReuseTree, node: usize, key: Key, stages: &[MergeStage], keys: &[Key]) {
             assert_eq!(keys[node], key);
             for &c in &t.nodes[node].children {
                 if t.nodes[c].stage.is_some() {
@@ -349,7 +352,7 @@ mod tests {
                 expect(t, c, crate::cache::chain_key(key, sig), stages, keys);
             }
         }
-        expect(&t, t.root, 7, &stages, &keys);
+        expect(&t, t.root, base, &stages, &keys);
         // shared prefix node -> shared key; divergent second level -> distinct
         let l1 = &t.walk()[0];
         assert_eq!(l1.len(), 1, "both stages share the level-1 node");

@@ -12,7 +12,7 @@
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
-use crate::cache::{chain_key, node_input_key, task_cache_sig, ReuseCache};
+use crate::cache::{metrics_key, node_input_key, task_cache_sig, Key, ReuseCache};
 use crate::workflow::StageInstance;
 
 use super::plan::{unique_tasks, Bucket, MergeStage, PlanStats};
@@ -292,19 +292,19 @@ pub fn prune_cached(
     graph: &CompactGraph,
     instances: &[StageInstance],
     cache: &ReuseCache,
-    tile_fps: &HashMap<u64, u64>,
-    ref_fps: &HashMap<u64, u64>,
+    tile_fps: &HashMap<u64, Key>,
+    ref_fps: &HashMap<u64, Key>,
     compare_task: &str,
 ) -> usize {
     let step = cache.quantize_step();
     let mut pruned_total = 0usize;
     for u in plan.units.iter_mut() {
         let rep = &instances[graph.nodes[u.nodes[0]].rep];
-        let tile_fp = tile_fps.get(&rep.tile).copied().unwrap_or(0);
+        let tile_fp = tile_fps.get(&rep.tile).copied().unwrap_or(Key::from(0u64));
         let base = node_input_key(graph, instances, u.nodes[0], tile_fp, step);
         let pruned = if rep.tasks.len() == 1 && rep.tasks[0].name == compare_task {
-            let ref_fp = ref_fps.get(&rep.tile).copied().unwrap_or(0);
-            let key = chain_key(chain_key(base, task_cache_sig(&rep.tasks[0], step)), ref_fp);
+            let ref_fp = ref_fps.get(&rep.tile).copied().unwrap_or(Key::from(0u64));
+            let key = metrics_key(base, task_cache_sig(&rep.tasks[0], step), ref_fp);
             usize::from(cache.contains_metrics(key))
         } else {
             count_cached(u, graph, instances, cache, base, step)
@@ -344,7 +344,7 @@ fn count_cached(
     graph: &CompactGraph,
     instances: &[StageInstance],
     cache: &ReuseCache,
-    base: u64,
+    base: Key,
     step: f64,
 ) -> usize {
     let stages = unit_stages(unit, graph, instances);

@@ -1,10 +1,40 @@
 //! The PJRT engine: compile once, execute many.
+//!
+//! One engine per worker thread owns the compiled executables and runs
+//! tasks against them. Invariants the rest of the stack builds on:
+//!
+//! * **Task interning.** Task names resolve once to a [`TaskId`]
+//!   (manifest order); the hot execution path is an array index plus an
+//!   allocation-free [`TaskTimer::record`], never a string hash.
+//! * **Literal residency.** Chained tasks feed each other's output
+//!   literals directly (`execute_task_lit*`); the host round-trip
+//!   (literal → `Plane` → literal) happens only at unit boundaries and
+//!   at cache insertion.
+//! * **Hit/miss partition.** The keyed paths split work into cache hits
+//!   — served as refcount bumps on the stored `Arc` states (zero-copy;
+//!   see [`crate::cache::CachedState`]) and recorded as zero-cost
+//!   `<task>#cached` timer rows — and misses, which execute and publish
+//!   exactly their own keys. Batched misses run as ONE backend call with
+//!   the per-pixel loops vectorized across lanes (lane-interleaved
+//!   layout in the backend; see `rust/xla/src/kernels.rs`).
+//! * **Single-flight misses.** Every keyed miss is claimed through
+//!   [`crate::cache::ReuseCache::lookup_or_claim`] before executing, so
+//!   concurrent engines — other workers of this study, or other tenants
+//!   of a shared service — never duplicate a launch for the same key.
+//!   The engine publishes all of its own claims before it ever waits on
+//!   a foreign flight, which rules out claim/wait deadlock cycles, and
+//!   releases claims on error paths via
+//!   [`crate::cache::FlightClaims`].
+//! * **Scoped accounting.** With [`PjrtEngine::set_cache_scope`], every
+//!   counted cache operation is mirrored into a per-tenant
+//!   [`crate::cache::ScopedCounters`] — the multi-tenant service's
+//!   per-tenant ledger.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::cache::ReuseCache;
+use crate::cache::{FlightClaims, Key, MetricsClaim, ReuseCache, ScopedCounters, StateClaim};
 use crate::data::Plane;
 use crate::{Error, Result};
 
@@ -127,6 +157,9 @@ pub struct PjrtEngine {
     /// Cross-study reuse cache, shared between worker engines. When set,
     /// the keyed execution paths consult/populate it at task granularity.
     cache: Option<Arc<ReuseCache>>,
+    /// Per-tenant counter scope every counted cache operation mirrors
+    /// into (multi-tenant serving); `None` = global counters only.
+    scope: Option<Arc<ScopedCounters>>,
 }
 
 impl PjrtEngine {
@@ -152,13 +185,28 @@ impl PjrtEngine {
             .get(&manifest.compare_task)
             .ok_or_else(|| Error::Artifact("manifest lacks the compare task".into()))?;
         let timer = TaskTimer::with_tasks(manifest.tasks.iter().map(|t| t.name.clone()).collect());
-        Ok(Self { manifest, _client: client, execs, ids, compare_id, timer, cache: None })
+        Ok(Self {
+            manifest,
+            _client: client,
+            execs,
+            ids,
+            compare_id,
+            timer,
+            cache: None,
+            scope: None,
+        })
     }
 
     /// Attach a (shared) cross-study reuse cache; keyed executions will
     /// consult it before running and publish what they compute.
     pub fn set_cache(&mut self, cache: Arc<ReuseCache>) {
         self.cache = Some(cache);
+    }
+
+    /// Account this engine's cache traffic under a per-tenant scope
+    /// (see [`ScopedCounters`]); only meaningful with a cache attached.
+    pub fn set_cache_scope(&mut self, scope: Arc<ScopedCounters>) {
+        self.scope = Some(scope);
     }
 
     /// The attached reuse cache, if any.
@@ -277,13 +325,15 @@ impl PjrtEngine {
     /// Cache-aware chain-task execution: when a cache is attached and a
     /// content key is supplied, a cached state short-circuits the PJRT
     /// execution entirely (recorded as a zero-cost `<task>#cached` timer
-    /// row so study summaries report reuse per task); a miss executes and
-    /// publishes the result. Returns the output state and whether it was
-    /// served from the cache.
+    /// row so study summaries report reuse per task); a miss *claims* the
+    /// key (single-flight), executes, and publishes the result — a
+    /// concurrent engine missing the same key waits for the publication
+    /// instead of duplicating the launch. Returns the output state and
+    /// whether it was served from the cache.
     pub fn execute_task_lit_keyed(
         &mut self,
         name: &str,
-        key: Option<u64>,
+        key: Option<Key>,
         state: &[xla::Literal; 3],
         params: &[f32],
     ) -> Result<([xla::Literal; 3], bool)> {
@@ -296,35 +346,52 @@ impl PjrtEngine {
     pub fn execute_task_lit_keyed_id(
         &mut self,
         id: TaskId,
-        key: Option<u64>,
+        key: Option<Key>,
         state: &[xla::Literal; 3],
         params: &[f32],
     ) -> Result<([xla::Literal; 3], bool)> {
         if let (Some(cache), Some(k)) = (self.cache.clone(), key) {
-            if let Some(planes) = cache.get_state(k) {
-                let lits = self.lit_state(&planes)?;
-                self.timer.record(id, true, Duration::ZERO);
-                return Ok((lits, true));
+            loop {
+                match cache.lookup_or_claim(k, self.scope.as_deref()) {
+                    StateClaim::Ready(planes) => {
+                        let lits = self.lit_state(&planes)?;
+                        self.timer.record(id, true, Duration::ZERO);
+                        return Ok((lits, true));
+                    }
+                    StateClaim::Claimed => {
+                        // release the claim if execution errors, so
+                        // waiters re-claim instead of blocking forever
+                        let mut claims = FlightClaims::new(cache.clone());
+                        claims.add(k);
+                        let out = self.execute_task_lit_id(id, state, params)?;
+                        let planes = self.plane_state(&out)?;
+                        cache.put_state_scoped(k, planes, self.scope.as_deref());
+                        claims.settle(k);
+                        return Ok((out, false));
+                    }
+                    // holding no claim of our own: safe to block
+                    StateClaim::InFlight => cache.wait_for_flight(k),
+                }
             }
-            let out = self.execute_task_lit_id(id, state, params)?;
-            let planes = self.plane_state(&out)?;
-            cache.put_state(k, planes);
-            return Ok((out, false));
         }
         Ok((self.execute_task_lit_id(id, state, params)?, false))
     }
 
     /// Cache-aware **batched** chain-task execution: partitions the
     /// batch into cache hits and misses, serves every hit from the cache
-    /// (a refcount bump on the stored state), executes all misses in ONE
-    /// backend call with the per-pixel loops vectorized across the
-    /// batch, publishes exactly the miss results, and returns per-lane
-    /// `(state, served_from_cache)` in input order. Lanes without a key
-    /// (or with no cache attached) count as misses.
+    /// (a refcount bump on the stored state), executes the misses it
+    /// *claims* (single-flight) in one backend call per round with the
+    /// per-pixel loops vectorized across the batch, publishes exactly
+    /// the claimed results, and returns per-lane
+    /// `(state, served_from_cache)` in input order. Lanes whose key is
+    /// in flight on another engine wait for that publication — after
+    /// this call has published every claim of its own, so claim/wait
+    /// cycles cannot form — and are then served as hits. Lanes without a
+    /// key (or with no cache attached) always execute.
     pub fn execute_task_batch_keyed(
         &mut self,
         id: TaskId,
-        keys: &[Option<u64>],
+        keys: &[Option<Key>],
         states: &[&[xla::Literal; 3]],
         params: &[&[f32]],
     ) -> Result<Vec<([xla::Literal; 3], bool)>> {
@@ -338,72 +405,96 @@ impl PjrtEngine {
         }
         self.require_chain(id)?;
         let cache = self.cache.clone();
+        let scope = self.scope.clone();
         let mut out: Vec<Option<([xla::Literal; 3], bool)>> = (0..n).map(|_| None).collect();
-        let mut miss: Vec<usize> = Vec::with_capacity(n);
-        // intra-batch dedup: a later lane whose (quantized) key equals an
-        // earlier miss lane's key is served that lane's result — exactly
-        // what the sequential path does, where the earlier node publishes
-        // before the later one looks up. Without this, width > 1 could
-        // diverge from width 1 under quantized keys.
+        // intra-batch dedup: a later lane whose (quantized) key equals a
+        // key this call already claimed is served the claimant's result —
+        // exactly what the sequential path does, where the earlier node
+        // publishes before the later one looks up. Without this, width >
+        // 1 could diverge from width 1 under quantized keys (and a lane
+        // would deadlock waiting on its own sibling's claim).
         let mut dup_of: Vec<(usize, usize)> = Vec::new();
-        let mut first_missed: HashMap<u64, usize> = HashMap::new();
-        for i in 0..n {
-            match (&cache, keys[i]) {
-                (Some(c), Some(k)) => {
-                    if let Some(&src) = first_missed.get(&k) {
-                        // sibling lane already owns this key: served from
-                        // its result below, without a second miss lookup
-                        dup_of.push((i, src));
-                        continue;
-                    }
-                    match c.get_state(k) {
-                        Some(planes) => {
-                            let lits = self.lit_state(&planes)?;
-                            self.timer.record(id, true, Duration::ZERO);
-                            out[i] = Some((lits, true));
+        let mut claimed_by: HashMap<Key, usize> = HashMap::new();
+        // claims this call owns; released on publication, or on drop if
+        // execution errors, so waiters re-claim instead of blocking
+        let mut claims = cache.as_ref().map(|c| FlightClaims::new(c.clone()));
+
+        let mut pending: Vec<usize> = (0..n).collect();
+        loop {
+            let mut exec: Vec<usize> = Vec::new();
+            let mut waiting: Vec<usize> = Vec::new();
+            for &i in &pending {
+                match (&cache, keys[i]) {
+                    (Some(c), Some(k)) => {
+                        if let Some(&src) = claimed_by.get(&k) {
+                            dup_of.push((i, src));
+                            continue;
                         }
-                        None => {
-                            first_missed.insert(k, i);
-                            miss.push(i);
+                        match c.lookup_or_claim(k, scope.as_deref()) {
+                            StateClaim::Ready(planes) => {
+                                let lits = self.lit_state(&planes)?;
+                                self.timer.record(id, true, Duration::ZERO);
+                                out[i] = Some((lits, true));
+                            }
+                            StateClaim::Claimed => {
+                                claimed_by.insert(k, i);
+                                if let Some(cl) = claims.as_mut() {
+                                    cl.add(k);
+                                }
+                                exec.push(i);
+                            }
+                            StateClaim::InFlight => waiting.push(i),
                         }
                     }
+                    _ => exec.push(i),
                 }
-                _ => miss.push(i),
             }
-        }
-        if !miss.is_empty() {
-            let start = Instant::now();
-            let mut padded: Vec<Vec<f32>> = Vec::with_capacity(miss.len());
-            for &i in &miss {
-                padded.push(self.padded_params(params[i])?);
-            }
-            let p_refs: Vec<&[f32]> = padded.iter().map(|p| p.as_slice()).collect();
-            let s_refs: Vec<&[xla::Literal; 3]> = miss.iter().map(|&i| states[i]).collect();
-            let exe = &self.execs[id];
-            let results = exe.execute_batch(&s_refs, &p_refs)?;
-            let elapsed = start.elapsed();
-            if results.len() != miss.len() {
-                return Err(Error::Xla(format!(
-                    "batch returned {} states for {} lanes",
-                    results.len(),
-                    miss.len()
-                )));
-            }
-            // per-task accounting: the launch cost amortizes over lanes
-            let per_lane = elapsed / miss.len() as u32;
-            for (&i, lits) in miss.iter().zip(results) {
-                if let (Some(c), Some(k)) = (&cache, keys[i]) {
-                    c.put_state(k, self.plane_state(&lits)?);
+            if !exec.is_empty() {
+                let start = Instant::now();
+                let mut padded: Vec<Vec<f32>> = Vec::with_capacity(exec.len());
+                for &i in &exec {
+                    padded.push(self.padded_params(params[i])?);
                 }
-                self.timer.record(id, false, per_lane);
-                out[i] = Some((lits, false));
+                let p_refs: Vec<&[f32]> = padded.iter().map(|p| p.as_slice()).collect();
+                let s_refs: Vec<&[xla::Literal; 3]> = exec.iter().map(|&i| states[i]).collect();
+                let exe = &self.execs[id];
+                let results = exe.execute_batch(&s_refs, &p_refs)?;
+                let elapsed = start.elapsed();
+                if results.len() != exec.len() {
+                    return Err(Error::Xla(format!(
+                        "batch returned {} states for {} lanes",
+                        results.len(),
+                        exec.len()
+                    )));
+                }
+                // per-task accounting: the launch cost amortizes over lanes
+                let per_lane = elapsed / exec.len() as u32;
+                for (&i, lits) in exec.iter().zip(results) {
+                    if let (Some(c), Some(k)) = (&cache, keys[i]) {
+                        c.put_state_scoped(k, self.plane_state(&lits)?, scope.as_deref());
+                        if let Some(cl) = claims.as_mut() {
+                            cl.settle(k);
+                        }
+                    }
+                    self.timer.record(id, false, per_lane);
+                    out[i] = Some((lits, false));
+                }
             }
+            if waiting.is_empty() {
+                break;
+            }
+            // every claim of this call is published: safe to block on a
+            // foreign flight, then re-resolve the still-pending lanes
+            if let (Some(c), Some(k)) = (&cache, keys[waiting[0]]) {
+                c.wait_for_flight(k);
+            }
+            pending = waiting;
         }
         for (i, src) in dup_of {
-            let lits = out[src].as_ref().expect("dedup source executed").0.clone();
+            let lits = out[src].as_ref().expect("dedup source resolved").0.clone();
             if let Some(c) = &cache {
                 // the sequential path would hit the just-published key
-                c.note_state_hit();
+                c.note_state_hit_scoped(scope.as_deref());
             }
             self.timer.record(id, true, Duration::ZERO);
             out[i] = Some((lits, true));
@@ -412,21 +503,33 @@ impl PjrtEngine {
     }
 
     /// Cache-aware comparison execution (metrics are memoized under the
-    /// full chain key folded with the reference-mask fingerprint).
+    /// full chain key folded with the reference-mask fingerprint —
+    /// [`crate::cache::metrics_key`]), single-flight like the state
+    /// paths.
     pub fn execute_compare_keyed(
         &mut self,
-        key: Option<u64>,
+        key: Option<Key>,
         state: &[Plane; 3],
         reference: &Plane,
     ) -> Result<([f32; 3], bool)> {
         if let (Some(cache), Some(k)) = (self.cache.clone(), key) {
-            if let Some(m) = cache.get_metrics(k) {
-                self.timer.record(self.compare_id, true, Duration::ZERO);
-                return Ok((m, true));
+            loop {
+                match cache.lookup_or_claim_metrics(k, self.scope.as_deref()) {
+                    MetricsClaim::Ready(m) => {
+                        self.timer.record(self.compare_id, true, Duration::ZERO);
+                        return Ok((m, true));
+                    }
+                    MetricsClaim::Claimed => {
+                        let mut claims = FlightClaims::new(cache.clone());
+                        claims.add(k);
+                        let m = self.execute_compare(state, reference)?;
+                        cache.put_metrics(k, m);
+                        claims.settle(k);
+                        return Ok((m, false));
+                    }
+                    MetricsClaim::InFlight => cache.wait_for_flight(k),
+                }
             }
-            let m = self.execute_compare(state, reference)?;
-            cache.put_metrics(k, m);
-            return Ok((m, false));
         }
         Ok((self.execute_compare(state, reference)?, false))
     }

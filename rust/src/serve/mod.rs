@@ -1,0 +1,43 @@
+//! The multi-tenant study service: one long-lived process serving many
+//! concurrent SA studies from ONE shared reuse cache.
+//!
+//! Everything below this module runs *per study*; this module is the
+//! layer that makes the per-study machinery multi-tenant. A
+//! [`StudyService`] owns, for the lifetime of the process:
+//!
+//! * one [`crate::cache::ReuseCache`] — every tenant's studies read and
+//!   populate the same content-addressed store, so one tenant's Morris
+//!   screen warms the next tenant's VBD refinement (the run-time
+//!   cross-study reuse of arXiv:1910.14548, lifted across tenants);
+//! * one *leader* [`crate::runtime::PjrtEngine`] — loaded and compiled
+//!   once, it builds the memoized per-workload [`StudyInputs`]
+//!   (synthetic tiles + reference masks), so concurrent tenants running
+//!   the same workload never duplicate the reference-chain launches;
+//! * a bounded pool of service workers pulling [`StudyJob`]s from a
+//!   submission queue, with **fair admission** (a per-tenant in-flight
+//!   cap keeps one noisy tenant from monopolizing the pool) and
+//!   **graceful drain** (no new submissions, queued work completes,
+//!   workers join).
+//!
+//! Correctness under tenancy rests on three cache properties
+//! (see [`crate::cache`]): 128-bit content keys (collision margin for a
+//! process-lifetime key population), single-flight miss claims (two
+//! tenants missing the same key execute it once), and per-tenant
+//! [`crate::cache::ScopedCounters`] whose sums equal the global
+//! counters — the accounting the per-tenant bill is built from.
+//!
+//! `rtf-reuse serve` is the CLI entry; `benches/multi_tenant.rs` is the
+//! acceptance benchmark (N identical tenants ⇒ aggregate backend
+//! launches ≤ 1.25× one cold tenant).
+//!
+//! Backend note: the leader engine is held in a `Mutex` across service
+//! threads, which requires the engine to be `Send`. The in-tree native
+//! backend satisfies this; substituting the published `xla` binding
+//! (whose PJRT handles are thread-bound) would need a
+//! load-per-build fallback here.
+//!
+//! [`StudyInputs`]: crate::driver::StudyInputs
+
+mod service;
+
+pub use service::{JobReport, ServeOptions, ServiceReport, StudyJob, StudyService, TenantReport};

@@ -1,0 +1,543 @@
+//! The service proper: submission queue, fair admission, worker pool,
+//! per-tenant accounting, graceful drain.
+
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::cache::{CacheConfig, CacheStats, ReuseCache, ScopedCounters};
+use crate::config::{EngineMode, StudyConfig};
+use crate::driver::{
+    make_inputs_with_engine, prepare, prune_plan_with_inputs, run_pjrt_with_inputs_scoped,
+    PreparedStudy, StudyInputs,
+};
+use crate::runtime::{PjrtEngine, TaskTimer};
+use crate::{Error, Result};
+
+/// Service shape. The service pins the execution-environment knobs
+/// (artifacts, per-study worker count, batch width, cache); per-job
+/// [`StudyConfig`]s choose the *study* (method, sampler, algorithm,
+/// seed, tiles) and have their environment fields overridden.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Concurrent studies in flight (service worker threads).
+    pub service_workers: usize,
+    /// Fair-admission cap: studies one tenant may have in flight at
+    /// once; excess jobs wait in the queue behind other tenants' work.
+    pub tenant_inflight_cap: usize,
+    /// PJRT worker threads each study executes with.
+    pub study_workers: usize,
+    /// Frontier batch width for study execution.
+    pub batch_width: usize,
+    /// Artifact directory the process serves (one artifact set per
+    /// service; the leader engine compiles it once).
+    pub artifacts_dir: String,
+    /// The process-lifetime shared cache.
+    pub cache: CacheConfig,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        let cfg = StudyConfig::default();
+        Self {
+            service_workers: 2,
+            tenant_inflight_cap: 1,
+            study_workers: cfg.workers,
+            batch_width: cfg.batch_width,
+            artifacts_dir: cfg.artifacts_dir,
+            cache: CacheConfig::default(),
+        }
+    }
+}
+
+/// One unit of tenant work: a study to run under a tenant's account.
+#[derive(Clone, Debug)]
+pub struct StudyJob {
+    pub tenant: String,
+    pub cfg: StudyConfig,
+}
+
+/// What one job produced (returned inside [`ServiceReport::jobs`]).
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    pub job: u64,
+    pub tenant: String,
+    /// `None` on success, the failure message otherwise.
+    pub error: Option<String>,
+    pub n_evals: usize,
+    /// Backend launches this job paid for (non-cached task executions,
+    /// comparison included). Cache-served work is in `cached_tasks`.
+    pub launches: u64,
+    pub cached_tasks: u64,
+    /// Per-evaluation scalar outputs (the SA estimator inputs).
+    pub y: Vec<f64>,
+    /// Time spent queued before a worker picked the job up.
+    pub queue_wait: Duration,
+    /// Wall time of the study execution itself.
+    pub exec_wall: Duration,
+}
+
+impl JobReport {
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+/// A tenant's aggregate bill.
+#[derive(Clone, Debug)]
+pub struct TenantReport {
+    pub tenant: String,
+    pub jobs: u64,
+    pub failed: u64,
+    pub launches: u64,
+    pub cached_tasks: u64,
+    /// This tenant's scoped cache counters (hits/misses/inserts/metric
+    /// rows; global-only fields zero). Tenant scopes sum exactly to the
+    /// service's global [`ServiceReport::cache`] on those fields.
+    pub cache: CacheStats,
+    /// Bytes of cached state served to this tenant (shared `Arc`
+    /// payloads made available, not copies).
+    pub bytes_served: u64,
+    pub queue_wait: Duration,
+    pub exec_wall: Duration,
+}
+
+/// Everything a drained service knows.
+#[derive(Clone, Debug)]
+pub struct ServiceReport {
+    /// Per-job outcomes, submission order.
+    pub jobs: Vec<JobReport>,
+    /// Per-tenant aggregates, sorted by tenant name.
+    pub tenants: Vec<TenantReport>,
+    /// The shared cache's global counters at drain time.
+    pub cache: CacheStats,
+    /// Backend launches spent building memoized study inputs (reference
+    /// chains) — shared across tenants, so accounted globally.
+    pub input_launches: u64,
+    /// Service lifetime, start to drain.
+    pub wall: Duration,
+}
+
+impl ServiceReport {
+    /// Total backend launches the whole service paid: every tenant's
+    /// study launches plus the shared input building. THE multi-tenant
+    /// acceptance metric — N warm tenants must keep this near one cold
+    /// tenant's count.
+    pub fn total_launches(&self) -> u64 {
+        self.input_launches + self.jobs.iter().map(|j| j.launches).sum::<u64>()
+    }
+
+    /// Sum of every tenant's scoped counters — equals [`Self::cache`] on
+    /// the scoped fields (hits, disk hits, misses, inserts, metric
+    /// hits/misses) when all traffic ran under tenant scopes.
+    pub fn scoped_totals(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for t in &self.tenants {
+            total.hits += t.cache.hits;
+            total.disk_hits += t.cache.disk_hits;
+            total.misses += t.cache.misses;
+            total.inserts += t.cache.inserts;
+            total.metric_hits += t.cache.metric_hits;
+            total.metric_misses += t.cache.metric_misses;
+        }
+        total
+    }
+
+    pub fn tenant(&self, name: &str) -> Option<&TenantReport> {
+        self.tenants.iter().find(|t| t.tenant == name)
+    }
+}
+
+struct Queued {
+    id: u64,
+    job: StudyJob,
+    submitted: Instant,
+}
+
+#[derive(Default)]
+struct ServiceState {
+    queue: VecDeque<Queued>,
+    inflight: HashMap<String, usize>,
+    draining: bool,
+    results: Vec<JobReport>,
+    next_id: u64,
+}
+
+struct Inner {
+    opts: ServeOptions,
+    cache: Arc<ReuseCache>,
+    state: Mutex<ServiceState>,
+    cv: Condvar,
+    /// One counter scope per tenant, service-lifetime.
+    scopes: Mutex<HashMap<String, Arc<ScopedCounters>>>,
+    /// Memoized per-workload study inputs (tiles + reference masks),
+    /// keyed by the input-determining config fields.
+    inputs: Mutex<HashMap<String, Arc<StudyInputs>>>,
+    /// The process-lifetime leader engine (input building).
+    leader: Mutex<PjrtEngine>,
+    input_launches: AtomicU64,
+}
+
+/// Backend launches a timer has recorded (non-`#cached` rows).
+fn timer_launches(timer: &TaskTimer) -> u64 {
+    timer
+        .summary()
+        .iter()
+        .filter(|(name, _, _)| !name.ends_with("#cached"))
+        .map(|(_, _, n)| n)
+        .sum()
+}
+
+/// Cache-served executions a timer has recorded (`#cached` rows).
+fn timer_cached(timer: &TaskTimer) -> u64 {
+    timer
+        .summary()
+        .iter()
+        .filter(|(name, _, _)| name.ends_with("#cached"))
+        .map(|(_, _, n)| n)
+        .sum()
+}
+
+/// The long-lived multi-tenant study service (see the module docs).
+pub struct StudyService {
+    inner: Arc<Inner>,
+    threads: Vec<JoinHandle<()>>,
+    started: Instant,
+}
+
+impl StudyService {
+    /// Build the shared cache, load + compile the leader engine, and
+    /// start the worker pool.
+    pub fn start(opts: ServeOptions) -> Result<StudyService> {
+        let leader = PjrtEngine::load(&opts.artifacts_dir)?;
+        let cache = Arc::new(ReuseCache::new(opts.cache.clone()));
+        let workers = opts.service_workers.max(1);
+        let inner = Arc::new(Inner {
+            opts,
+            cache,
+            state: Mutex::new(ServiceState::default()),
+            cv: Condvar::new(),
+            scopes: Mutex::new(HashMap::new()),
+            inputs: Mutex::new(HashMap::new()),
+            leader: Mutex::new(leader),
+            input_launches: AtomicU64::new(0),
+        });
+        let threads = (0..workers)
+            .map(|_| {
+                let inner = Arc::clone(&inner);
+                std::thread::spawn(move || worker_loop(inner))
+            })
+            .collect();
+        Ok(StudyService { inner, threads, started: Instant::now() })
+    }
+
+    /// The shared cache (diagnostics; the service owns its lifetime).
+    pub fn cache(&self) -> &Arc<ReuseCache> {
+        &self.inner.cache
+    }
+
+    /// Enqueue a job. Returns its id, or an error once draining started.
+    pub fn submit(&self, job: StudyJob) -> Result<u64> {
+        let mut st = self.inner.state.lock().unwrap();
+        if st.draining {
+            return Err(Error::Coordinator(format!(
+                "service is draining; job for tenant `{}` rejected",
+                job.tenant
+            )));
+        }
+        let id = st.next_id;
+        st.next_id += 1;
+        st.queue.push_back(Queued { id, job, submitted: Instant::now() });
+        self.inner.cv.notify_all();
+        Ok(id)
+    }
+
+    /// Jobs currently queued (not yet picked up by a worker).
+    pub fn queued(&self) -> usize {
+        self.inner.state.lock().unwrap().queue.len()
+    }
+
+    /// Graceful drain: stop admitting, let every queued/in-flight study
+    /// finish, join the workers, and report.
+    pub fn drain(mut self) -> ServiceReport {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.draining = true;
+            self.inner.cv.notify_all();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        let mut jobs = {
+            let st = self.inner.state.lock().unwrap();
+            st.results.clone()
+        };
+        jobs.sort_by_key(|j| j.job);
+
+        let scopes = self.inner.scopes.lock().unwrap();
+        let mut tenants: Vec<TenantReport> = scopes
+            .iter()
+            .map(|(name, scope)| {
+                let mine: Vec<&JobReport> = jobs.iter().filter(|j| &j.tenant == name).collect();
+                TenantReport {
+                    tenant: name.clone(),
+                    jobs: mine.len() as u64,
+                    failed: mine.iter().filter(|j| !j.ok()).count() as u64,
+                    launches: mine.iter().map(|j| j.launches).sum(),
+                    cached_tasks: mine.iter().map(|j| j.cached_tasks).sum(),
+                    cache: scope.stats(),
+                    bytes_served: scope.state_bytes_served(),
+                    queue_wait: mine.iter().map(|j| j.queue_wait).sum(),
+                    exec_wall: mine.iter().map(|j| j.exec_wall).sum(),
+                }
+            })
+            .collect();
+        tenants.sort_by(|a, b| a.tenant.cmp(&b.tenant));
+
+        ServiceReport {
+            jobs,
+            tenants,
+            cache: self.inner.cache.stats(),
+            input_launches: self.inner.input_launches.load(Ordering::Relaxed),
+            wall: self.started.elapsed(),
+        }
+    }
+}
+
+impl Drop for StudyService {
+    /// A service dropped without [`StudyService::drain`] still stops
+    /// accepting work and joins its pool, so worker threads never
+    /// outlive the handle.
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.draining = true;
+            self.inner.cv.notify_all();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>) {
+    loop {
+        let queued = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                let cap = inner.opts.tenant_inflight_cap.max(1);
+                let pos = st.queue.iter().position(|q| {
+                    st.inflight.get(&q.job.tenant).copied().unwrap_or(0) < cap
+                });
+                if let Some(pos) = pos {
+                    let q = st.queue.remove(pos).expect("position just found");
+                    *st.inflight.entry(q.job.tenant.clone()).or_insert(0) += 1;
+                    break q;
+                }
+                if st.draining && st.queue.is_empty() {
+                    return;
+                }
+                st = inner.cv.wait(st).unwrap();
+            }
+        };
+        let tenant = queued.job.tenant.clone();
+        let report = inner.run_job(queued);
+        let mut st = inner.state.lock().unwrap();
+        st.results.push(report);
+        if let Some(n) = st.inflight.get_mut(&tenant) {
+            *n = n.saturating_sub(1);
+        }
+        inner.cv.notify_all();
+    }
+}
+
+impl Inner {
+    fn scope_of(&self, tenant: &str) -> Arc<ScopedCounters> {
+        let mut scopes = self.scopes.lock().unwrap();
+        Arc::clone(scopes.entry(tenant.to_string()).or_default())
+    }
+
+    /// Memoized study inputs: built once per distinct workload on the
+    /// leader engine. The map lock is held only for get/insert, so jobs
+    /// whose inputs are already built never wait behind someone else's
+    /// build; same-key racers dedup on the leader lock (the build is
+    /// re-checked after acquiring it), which serializes *builds* anyway —
+    /// there is exactly one leader engine.
+    fn inputs_for(&self, cfg: &StudyConfig, prepared: &PreparedStudy) -> Result<Arc<StudyInputs>> {
+        let key = format!("{}|{}|{:?}", cfg.seed, cfg.tiles, cfg.workflow_file);
+        if let Some(inputs) = self.inputs.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(inputs));
+        }
+        let mut leader = self.leader.lock().unwrap();
+        // a same-key racer may have built while we waited for the engine
+        if let Some(inputs) = self.inputs.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(inputs));
+        }
+        let before = timer_launches(leader.timer());
+        let inputs = make_inputs_with_engine(cfg, prepared, &mut leader)?;
+        let built = timer_launches(leader.timer()) - before;
+        let inputs = Arc::new(inputs);
+        // publish under the leader lock: a same-key racer's re-check
+        // above cannot miss it and rebuild
+        self.inputs.lock().unwrap().insert(key, Arc::clone(&inputs));
+        drop(leader);
+        self.input_launches.fetch_add(built, Ordering::Relaxed);
+        Ok(inputs)
+    }
+
+    fn run_job(&self, queued: Queued) -> JobReport {
+        let Queued { id, job, submitted } = queued;
+        let queue_wait = submitted.elapsed();
+        let mut report = JobReport {
+            job: id,
+            tenant: job.tenant.clone(),
+            error: None,
+            n_evals: 0,
+            launches: 0,
+            cached_tasks: 0,
+            y: Vec::new(),
+            queue_wait,
+            exec_wall: Duration::ZERO,
+        };
+        // a panicking study must not take the worker (and the tenant's
+        // in-flight slot) down with it
+        let outcome = catch_unwind(AssertUnwindSafe(|| self.execute_job(&job)));
+        match outcome {
+            Ok(Ok((n_evals, launches, cached, y, wall))) => {
+                report.n_evals = n_evals;
+                report.launches = launches;
+                report.cached_tasks = cached;
+                report.y = y;
+                report.exec_wall = wall;
+            }
+            Ok(Err(e)) => report.error = Some(e.to_string()),
+            Err(panic) => {
+                let msg = panic
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "study panicked".into());
+                report.error = Some(format!("panic: {msg}"));
+            }
+        }
+        report
+    }
+
+    /// Returns `(n_evals, launches, cached_tasks, y, exec_wall)`.
+    #[allow(clippy::type_complexity)]
+    fn execute_job(&self, job: &StudyJob) -> Result<(usize, u64, u64, Vec<f64>, Duration)> {
+        // pin the execution environment to the service's
+        let mut cfg = job.cfg.clone();
+        cfg.engine = EngineMode::Pjrt;
+        cfg.artifacts_dir = self.opts.artifacts_dir.clone();
+        cfg.workers = self.opts.study_workers;
+        cfg.batch_width = self.opts.batch_width;
+
+        let prepared = prepare(&cfg);
+        let mut plan = prepared.plan(&cfg);
+        let inputs = self.inputs_for(&cfg, &prepared)?;
+        // planning-time probe: LPT orders by work that will actually run
+        let _ = prune_plan_with_inputs(&prepared, &mut plan, &self.cache, &inputs);
+        let scope = self.scope_of(&job.tenant);
+        let outcome = run_pjrt_with_inputs_scoped(
+            &cfg,
+            &prepared,
+            &plan,
+            Some(Arc::clone(&self.cache)),
+            Some(scope),
+            &inputs,
+        )?;
+        Ok((
+            prepared.n_evals(),
+            timer_launches(&outcome.timer),
+            timer_cached(&outcome.timer),
+            outcome.y,
+            outcome.wall,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SaMethod;
+    use crate::merging::FineAlgorithm;
+
+    fn small_cfg() -> StudyConfig {
+        StudyConfig {
+            method: SaMethod::Moat { r: 1 }, // 16 evaluations
+            algorithm: FineAlgorithm::Rtma(7),
+            ..StudyConfig::default()
+        }
+    }
+
+    fn opts(service_workers: usize) -> ServeOptions {
+        ServeOptions {
+            service_workers,
+            tenant_inflight_cap: 1,
+            study_workers: 2,
+            cache: CacheConfig { capacity_bytes: 512 * 1024 * 1024, ..CacheConfig::default() },
+            ..ServeOptions::default()
+        }
+    }
+
+    #[test]
+    fn two_tenants_share_the_cache_and_account_separately() {
+        let svc = StudyService::start(opts(2)).expect("service starts");
+        svc.submit(StudyJob { tenant: "alice".into(), cfg: small_cfg() }).unwrap();
+        svc.submit(StudyJob { tenant: "bob".into(), cfg: small_cfg() }).unwrap();
+        let report = svc.drain();
+
+        assert_eq!(report.jobs.len(), 2);
+        assert!(report.jobs.iter().all(|j| j.ok()), "jobs: {:?}", report.jobs);
+        // identical studies must produce identical results
+        assert_eq!(report.jobs[0].y, report.jobs[1].y);
+        assert_eq!(report.tenants.len(), 2);
+        // tenant scopes sum exactly to the shared cache's globals
+        let sums = report.scoped_totals();
+        assert_eq!(sums.hits, report.cache.hits);
+        assert_eq!(sums.disk_hits, report.cache.disk_hits);
+        assert_eq!(sums.misses, report.cache.misses);
+        assert_eq!(sums.inserts, report.cache.inserts);
+        assert_eq!(sums.metric_hits, report.cache.metric_hits);
+        assert_eq!(sums.metric_misses, report.cache.metric_misses);
+        // the pair shares one input build
+        assert!(report.input_launches > 0);
+        assert!(report.total_launches() > 0);
+    }
+
+    #[test]
+    fn drain_rejects_new_submissions() {
+        let svc = StudyService::start(opts(1)).expect("service starts");
+        let inner = Arc::clone(&svc.inner);
+        inner.state.lock().unwrap().draining = true;
+        assert!(svc.submit(StudyJob { tenant: "late".into(), cfg: small_cfg() }).is_err());
+        // un-drain so the Drop-join path exercises the empty queue
+        inner.state.lock().unwrap().draining = false;
+        drop(svc);
+    }
+
+    #[test]
+    fn tenant_cap_never_exceeds_inflight_limit() {
+        // cap 1, one service worker: three jobs of one tenant run
+        // strictly one at a time and all complete
+        let svc = StudyService::start(opts(1)).expect("service starts");
+        for _ in 0..3 {
+            svc.submit(StudyJob { tenant: "solo".into(), cfg: small_cfg() }).unwrap();
+        }
+        let report = svc.drain();
+        assert_eq!(report.jobs.len(), 3);
+        assert!(report.jobs.iter().all(|j| j.ok()));
+        let t = report.tenant("solo").expect("tenant report");
+        assert_eq!(t.jobs, 3);
+        assert_eq!(t.failed, 0);
+        assert!(t.bytes_served > 0, "warm runs are served real state bytes");
+        // the 2nd and 3rd runs are warm: far fewer launches than cold
+        let (first, rest): (u64, u64) =
+            (report.jobs[0].launches, report.jobs[1].launches + report.jobs[2].launches);
+        assert!(rest < first, "warm jobs must reuse: cold {first}, warm {rest}");
+    }
+}

@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use rtf_reuse::cache::ReuseCache;
+use rtf_reuse::cache::{Key, ReuseCache};
 use rtf_reuse::config::{SaMethod, SamplerKind, StudyConfig};
 use rtf_reuse::data::{synth_tile, SplitMix64, SynthConfig};
 use rtf_reuse::driver::{prepare, run_pjrt_with_cache};
@@ -108,7 +108,7 @@ fn batch_partition_publishes_exactly_the_miss_keys() {
         vec![200.0, 210.0, 215.0, 3.0, 5.0],
         vec![230.0, 205.0, 225.0, 4.0, 3.5],
     ];
-    let (k0, k1, k2) = (101u64, 202, 303);
+    let (k0, k1, k2) = (Key::from(101u64), Key::from(202u64), Key::from(303u64));
 
     // pre-populate lane 0's key
     let _ = engine.execute_task_lit_keyed_id(id, Some(k0), &state, &params[0]).unwrap();
@@ -151,7 +151,7 @@ fn duplicate_keys_within_a_batch_dedupe_like_the_sequential_path() {
     let id = engine.task_id("t1").unwrap();
     let p0: &[f32] = &[220.0, 220.0, 220.0, 4.0, 4.0];
     let p1: &[f32] = &[220.4, 220.0, 220.0, 4.0, 4.0]; // same quantized cell, say
-    let shared = 0xdeadu64;
+    let shared = Key::from(0xdeadu64);
     let before = cache.stats();
     let res = engine
         .execute_task_batch_keyed(id, &[Some(shared), Some(shared)], &[&state, &state], &[p0, p1])

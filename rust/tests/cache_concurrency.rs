@@ -1,0 +1,239 @@
+//! The shared cache under contention — the properties the multi-tenant
+//! service stands on: no lost updates when many threads hammer one
+//! `ReuseCache`, the byte bound honored under concurrent insertion,
+//! 128-bit keys separating chains that collide at 64 bits, and
+//! single-flight claims collapsing concurrent identical misses into one
+//! computation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use rtf_reuse::cache::{CacheConfig, Key, ReuseCache, ScopedCounters, StateClaim};
+use rtf_reuse::data::Plane;
+
+fn state(v: f32) -> [Plane; 3] {
+    [Plane::filled(v, 8, 8), Plane::filled(v, 8, 8), Plane::filled(v, 8, 8)]
+}
+
+/// Bytes of one `state(v)`: 3 planes x 64 px x 4 B.
+const SB: usize = 3 * 64 * 4;
+
+#[test]
+fn hammering_threads_lose_no_updates() {
+    // 8 threads race get/put over 64 fully shared keys; capacity is
+    // ample, so after the storm every key must be present with exactly
+    // the payload its key encodes — no lost updates, no cross-key
+    // corruption, every lookup counted.
+    let cache = Arc::new(ReuseCache::new(CacheConfig {
+        capacity_bytes: 1 << 22,
+        shards: 4,
+        ..CacheConfig::default()
+    }));
+    let threads = 8usize;
+    let keys = 64u64;
+    let rounds = 4u64;
+    std::thread::scope(|scope| {
+        for t in 0..threads as u64 {
+            let cache = &cache;
+            scope.spawn(move || {
+                for r in 0..rounds {
+                    for i in 0..keys {
+                        // interleave access order differently per thread
+                        let i = (i + t * 7 + r * 13) % keys;
+                        let key = Key::from_parts(0xC0FFEE, i);
+                        match cache.get_state(key) {
+                            Some(got) => assert_eq!(
+                                got[0].get(0, 0),
+                                i as f32,
+                                "cross-key corruption on {i}"
+                            ),
+                            None => cache.put_state(key, state(i as f32)),
+                        }
+                    }
+                }
+            });
+        }
+    });
+    for i in 0..keys {
+        let got = cache.get_state(Key::from_parts(0xC0FFEE, i)).expect("no lost update");
+        assert_eq!(got[0].get(0, 0), i as f32);
+    }
+    let st = cache.stats();
+    assert_eq!(
+        st.hits + st.disk_hits + st.misses,
+        threads as u64 * keys * rounds + keys,
+        "every lookup is counted exactly once"
+    );
+    assert_eq!(st.evictions, 0, "ample capacity: nothing evicted");
+}
+
+#[test]
+fn byte_bound_holds_under_concurrent_insertion() {
+    // tight budget (4 states per shard, 2 shards), 8 threads inserting
+    // 256 distinct keys: the resident total must settle within the
+    // configured capacity and the eviction counter must account for
+    // exactly the overflow
+    let cache = Arc::new(ReuseCache::new(CacheConfig {
+        capacity_bytes: 8 * SB,
+        shards: 2,
+        ..CacheConfig::default()
+    }));
+    std::thread::scope(|scope| {
+        for t in 0..8u64 {
+            let cache = &cache;
+            scope.spawn(move || {
+                for i in 0..32u64 {
+                    let key = Key::from_parts(t, i);
+                    cache.put_state(key, state((t * 32 + i) as f32));
+                }
+            });
+        }
+    });
+    let st = cache.stats();
+    assert!(
+        cache.resident_bytes() <= 8 * SB,
+        "byte bound violated: {} > {}",
+        cache.resident_bytes(),
+        8 * SB
+    );
+    assert_eq!(st.inserts, 256, "every distinct key inserted once");
+    assert_eq!(
+        st.inserts - st.evictions,
+        cache.len() as u64,
+        "evictions account exactly for the overflow"
+    );
+    // whatever survived is uncorrupted
+    for key in cache.resident_keys() {
+        let got = cache.get_state(key).expect("resident key readable");
+        assert_eq!(got[0].get(0, 0), (key.hi() * 32 + key.lo()) as f32);
+    }
+}
+
+#[test]
+fn chains_that_collide_at_64_bits_no_longer_alias() {
+    // THE widening regression test. Before the 128-bit migration the
+    // store keyed on u64: two distinct computations whose truncated keys
+    // matched were ONE entry — the second publisher silently poisoned
+    // the first chain's state, and lookups served wrong pixels as
+    // plausible hits. Construct exactly that collision (equal low
+    // halves) and prove the widened store keeps the chains apart.
+    let cache = ReuseCache::with_capacity(1 << 20);
+    let chain_a = Key::from_parts(0x1111_2222_3333_4444, 0xfeed_beef);
+    let chain_b = Key::from_parts(0x5555_6666_7777_8888, 0xfeed_beef);
+    assert_eq!(chain_a.lo(), chain_b.lo(), "64-bit views collide by construction");
+    assert_ne!(chain_a, chain_b, "128-bit keys distinguish the chains");
+
+    cache.put_state(chain_a, state(1.0));
+    cache.put_state(chain_b, state(2.0));
+    assert_eq!(cache.len(), 2, "two chains, two entries — no aliasing");
+    assert_eq!(cache.get_state(chain_a).unwrap()[0].get(0, 0), 1.0);
+    assert_eq!(cache.get_state(chain_b).unwrap()[0].get(0, 0), 2.0);
+
+    // and the derivation feeds the width: real chain keys disperse into
+    // both halves, so distinct task histories cannot recreate the old
+    // truncated collision by construction
+    use rtf_reuse::cache::chain_key;
+    let x = chain_key(Key::from(7u64), 1);
+    let y = chain_key(Key::from(7u64), 2);
+    assert_ne!(x.lo(), y.lo());
+    assert_ne!(x.hi(), y.hi());
+    assert_ne!(x.hi(), 0);
+}
+
+#[test]
+fn single_flight_collapses_concurrent_identical_misses() {
+    // 8 threads demand the same key at once. Exactly one claims and
+    // "computes" (slowly); the rest observe the flight, wait, and are
+    // served the published state. Computations == 1 is the property the
+    // multi-tenant launch bound rests on.
+    let cache = Arc::new(ReuseCache::with_capacity(1 << 20));
+    let key = Key::from(0xABCDu64);
+    let computes = AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..8 {
+            let cache = &cache;
+            let computes = &computes;
+            scope.spawn(move || loop {
+                match cache.lookup_or_claim(key, None) {
+                    StateClaim::Ready(got) => {
+                        assert_eq!(got[1].get(3, 3), 42.0);
+                        return;
+                    }
+                    StateClaim::Claimed => {
+                        computes.fetch_add(1, Ordering::Relaxed);
+                        // a deliberately slow compute: waiters must block,
+                        // not spin into their own claims
+                        std::thread::sleep(Duration::from_millis(50));
+                        cache.put_state(key, state(42.0));
+                        return;
+                    }
+                    StateClaim::InFlight => cache.wait_for_flight(key),
+                }
+            });
+        }
+    });
+    assert_eq!(computes.load(Ordering::Relaxed), 1, "exactly one computation");
+    let st = cache.stats();
+    assert_eq!(st.misses, 1, "one claim = one counted miss");
+    assert_eq!(st.hits, 7, "everyone else was served");
+}
+
+#[test]
+fn abandoned_flights_recover() {
+    // an owner that fails without publishing must not wedge the key:
+    // release wakes the waiter, which re-claims and completes
+    let cache = Arc::new(ReuseCache::with_capacity(1 << 20));
+    let key = Key::from(0x5105u64);
+    assert!(matches!(cache.lookup_or_claim(key, None), StateClaim::Claimed));
+    let waiter = {
+        let cache = Arc::clone(&cache);
+        std::thread::spawn(move || loop {
+            match cache.lookup_or_claim(key, None) {
+                StateClaim::Ready(got) => return got[0].get(0, 0),
+                StateClaim::Claimed => {
+                    cache.put_state(key, state(7.0));
+                    // continue looping: the next lookup serves Ready
+                }
+                StateClaim::InFlight => cache.wait_for_flight(key),
+            }
+        })
+    };
+    std::thread::sleep(Duration::from_millis(20));
+    cache.release_flight(key); // the simulated error path
+    assert_eq!(waiter.join().expect("waiter completes"), 7.0);
+}
+
+#[test]
+fn scoped_tenants_partition_the_global_counters_under_contention() {
+    // two "tenants" hammer overlapping keys concurrently; whatever the
+    // interleaving, the per-tenant scopes must sum exactly to the
+    // global counters on every scoped field
+    let cache = Arc::new(ReuseCache::with_capacity(1 << 22));
+    let scopes = [Arc::new(ScopedCounters::default()), Arc::new(ScopedCounters::default())];
+    std::thread::scope(|s| {
+        for (t, scope) in scopes.iter().enumerate() {
+            let cache = &cache;
+            s.spawn(move || {
+                for i in 0..64u64 {
+                    let key = Key::from(i % 48); // overlapping ranges
+                    match cache.lookup_or_claim(key, Some(scope.as_ref())) {
+                        StateClaim::Ready(_) => {}
+                        StateClaim::Claimed => {
+                            cache.put_state_scoped(key, state(t as f32), Some(scope.as_ref()))
+                        }
+                        StateClaim::InFlight => {
+                            cache.wait_for_flight(key);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let (a, b, g) = (scopes[0].stats(), scopes[1].stats(), cache.stats());
+    assert_eq!(a.hits + b.hits, g.hits);
+    assert_eq!(a.disk_hits + b.disk_hits, g.disk_hits);
+    assert_eq!(a.misses + b.misses, g.misses);
+    assert_eq!(a.inserts + b.inserts, g.inserts);
+    assert!(g.misses >= 48, "every first touch of a key is a counted miss");
+}

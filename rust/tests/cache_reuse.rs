@@ -6,7 +6,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use rtf_reuse::cache::{CacheConfig, ReuseCache};
+use rtf_reuse::cache::{CacheConfig, Key, ReuseCache};
 use rtf_reuse::config::{SaMethod, StudyConfig};
 use rtf_reuse::data::Plane;
 use rtf_reuse::driver::{prepare, prune_plan_with_cache, run_pjrt_with_cache};
@@ -60,7 +60,7 @@ fn lru_eviction_holds_the_byte_bound() {
         ..CacheConfig::default()
     });
     for k in 0..16u64 {
-        c.put_state(k, state(k as f32));
+        c.put_state(Key::from(k), state(k as f32));
         assert!(
             c.resident_bytes() <= 4 * SB,
             "bound violated at insert {k}: {}",
@@ -71,8 +71,8 @@ fn lru_eviction_holds_the_byte_bound() {
     assert_eq!(st.inserts, 16);
     assert_eq!(st.evictions, 12, "4 resident, 12 evicted");
     // the most recent entries survive, the oldest do not
-    assert!(c.get_state(15).is_some());
-    assert!(c.get_state(0).is_none());
+    assert!(c.get_state(Key::from(15u64)).is_some());
+    assert!(c.get_state(Key::from(0u64)).is_none());
 }
 
 #[test]
@@ -91,12 +91,13 @@ fn concurrent_scoped_workers_share_one_cache() {
                 for i in 0..per {
                     // half the keys are shared across all workers, half private
                     let shared = i % 2 == 0;
-                    let key = if shared { i } else { ((w + 1) << 32) | i };
+                    let raw = if shared { i } else { ((w + 1) << 32) | i };
+                    let key = Key::from(raw);
                     if cache.get_state(key).is_none() {
-                        cache.put_state(key, state(key as f32));
+                        cache.put_state(key, state(raw as f32));
                     }
                     let got = cache.get_state(key).expect("just inserted or present");
-                    assert_eq!(got[0].get(0, 0), key as f32, "no cross-key corruption");
+                    assert_eq!(got[0].get(0, 0), raw as f32, "no cross-key corruption");
                 }
             });
         }
@@ -117,15 +118,18 @@ fn disk_tier_persists_across_cache_instances() {
             spill_dir: Some(dir.clone()),
             ..CacheConfig::default()
         });
-        c.put_state(0xfeed, state(7.5));
+        c.put_state(Key::from(0xfeedu64), state(7.5));
     } // first "process" ends
     let c2 = ReuseCache::new(CacheConfig {
         capacity_bytes: 1 << 20,
         spill_dir: Some(dir.clone()),
         ..CacheConfig::default()
     });
-    assert!(c2.contains_state(0xfeed), "persistent tier visible to a fresh cache");
-    let got = c2.get_state(0xfeed).expect("served from disk");
+    assert!(
+        c2.contains_state(Key::from(0xfeedu64)),
+        "persistent tier visible to a fresh cache"
+    );
+    let got = c2.get_state(Key::from(0xfeedu64)).expect("served from disk");
     assert_eq!(got[2].get(7, 7), 7.5);
     assert_eq!(c2.stats().disk_hits, 1);
     let _ = std::fs::remove_dir_all(&dir);
