@@ -1,0 +1,106 @@
+//! Warm-start micro-benchmark: how much of a restarted service's first
+//! job the persisted disk tier pays for.
+//!
+//! Phase 1 runs one cold study on a service with a disk tier and drains
+//! it (populating the tier). Phase 2 measures `ReuseCache::warm_start`
+//! itself (scan + pre-admission wall time), then boots a fresh service
+//! with warm start on and runs the same study: its launch count and hit
+//! counters are the acceptance metrics. Because both metrics are
+//! *counts*, they are asserted in `--test` (CI smoke) mode too. Writes
+//! `BENCH_serve_warm.json` as the perf-trajectory artifact.
+
+use std::time::Instant;
+
+use rtf_reuse::benchx::fmt_secs;
+use rtf_reuse::cache::{CacheConfig, ReuseCache};
+use rtf_reuse::config::{SaMethod, StudyConfig};
+use rtf_reuse::merging::FineAlgorithm;
+use rtf_reuse::serve::{ServeOptions, StudyJob, StudyService};
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    let cfg = StudyConfig {
+        method: SaMethod::Moat { r: if test_mode { 1 } else { 2 } },
+        algorithm: FineAlgorithm::Rtma(7),
+        ..StudyConfig::default()
+    };
+    let dir = std::env::temp_dir().join(format!("rtf-serve-warm-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let disk_cache = CacheConfig {
+        capacity_bytes: 512 * 1024 * 1024,
+        spill_dir: Some(dir.clone()),
+        ..CacheConfig::default()
+    };
+    let opts = |warm_start: bool| ServeOptions {
+        service_workers: 1,
+        study_workers: 2,
+        cache: disk_cache.clone(),
+        warm_start,
+        ..ServeOptions::default()
+    };
+
+    // phase 1: a cold service populates the disk tier
+    let day1 = StudyService::start(opts(false)).expect("cold service starts");
+    day1.submit(StudyJob { tenant: "day1".into(), cfg: cfg.clone() }).expect("submit");
+    let cold = day1.drain();
+    assert!(cold.jobs[0].ok(), "cold job failed: {:?}", cold.jobs[0].error);
+    let cold_launches = cold.jobs[0].launches;
+    assert!(cold.cache.spilled > 0, "disk tier must be populated");
+
+    // phase 2a: the warm-start pass itself, measured in isolation
+    let probe = ReuseCache::new(disk_cache.clone());
+    let t0 = Instant::now();
+    let scan = probe.warm_start();
+    let scan_secs = t0.elapsed().as_secs_f64();
+    assert!(scan.admitted > 0, "warm start must admit persisted entries");
+    drop(probe);
+
+    // phase 2b: a restarted service with warm start on — the first job
+    // of the day is served memory hits
+    let day2 = StudyService::start(opts(true)).expect("warm service starts");
+    let warm_report = day2.warm_start_report();
+    day2.submit(StudyJob { tenant: "day2".into(), cfg }).expect("submit");
+    let warm = day2.drain();
+    assert!(warm.jobs[0].ok(), "warm job failed: {:?}", warm.jobs[0].error);
+    let warm_launches = warm.jobs[0].launches;
+    let warm_hits = warm.cache.hits;
+
+    println!(
+        "cold: {cold_launches} launches | warm-start: {} of {} entries ({} KiB) in {} | \
+         warm job: {warm_launches} launches, {warm_hits} memory hits",
+        warm_report.admitted,
+        warm_report.scanned,
+        warm_report.admitted_bytes / 1024,
+        fmt_secs(scan_secs)
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"serve_warm\",\n  \"mode\": \"{}\",\n  \
+         \"evals\": {},\n  \"scanned\": {},\n  \"admitted\": {},\n  \
+         \"admitted_kib\": {},\n  \"warm_start_secs\": {scan_secs:.6},\n  \
+         \"cold_launches\": {cold_launches},\n  \"warm_launches\": {warm_launches},\n  \
+         \"warm_memory_hits\": {warm_hits},\n  \"cold_wall_secs\": {:.6},\n  \
+         \"warm_wall_secs\": {:.6}\n}}\n",
+        if test_mode { "test" } else { "full" },
+        warm.jobs[0].n_evals,
+        warm_report.scanned,
+        warm_report.admitted,
+        warm_report.admitted_bytes / 1024,
+        cold.jobs[0].exec_wall.as_secs_f64(),
+        warm.jobs[0].exec_wall.as_secs_f64(),
+    );
+    std::fs::write("BENCH_serve_warm.json", &json).expect("write BENCH_serve_warm.json");
+    println!("wrote BENCH_serve_warm.json");
+
+    println!(
+        "ACCEPTANCE: restarted service's first job paid {warm_launches} launches vs cold \
+         {cold_launches}, with {warm_hits} memory hits — {}",
+        if warm_hits > 0 && warm_launches < cold_launches { "PASS" } else { "FAIL" }
+    );
+    assert!(warm_hits > 0, "the first job after a warm start must find memory hits");
+    assert!(
+        warm_launches < cold_launches,
+        "warm-started job must reuse persisted work: {warm_launches} >= {cold_launches}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

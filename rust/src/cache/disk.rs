@@ -89,6 +89,40 @@ pub(crate) fn store_state(dir: &Path, key: Key, state: &[Plane; 3]) -> std::io::
     Ok(true)
 }
 
+/// Scan a spill directory for current-format entries: every
+/// `{key:032x}.state` file, with its modification time and byte length.
+/// Used by the service's warm-start pass to pre-admit recently written
+/// states into the memory tier. Unreadable entries, foreign files and
+/// old-format (16-hex) names are skipped silently; the magic of each
+/// candidate is checked later by [`load_state`], not here.
+pub(crate) fn scan_states(dir: &Path) -> Vec<(Key, std::time::SystemTime, u64)> {
+    let mut out = Vec::new();
+    let Ok(read) = std::fs::read_dir(dir) else {
+        return out;
+    };
+    for entry in read.flatten() {
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("state") {
+            continue;
+        }
+        let Some(stem) = path.file_stem().and_then(|s| s.to_str()) else {
+            continue;
+        };
+        if stem.len() != 32 {
+            continue; // old-format (16-hex) or foreign name
+        }
+        let Ok(raw) = u128::from_str_radix(stem, 16) else {
+            continue;
+        };
+        let Ok(meta) = entry.metadata() else {
+            continue;
+        };
+        let mtime = meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+        out.push((Key::from_parts((raw >> 64) as u64, raw as u64), mtime, meta.len()));
+    }
+    out
+}
+
 /// Load the state for `key`, if present, current-version and well-formed.
 pub(crate) fn load_state(dir: &Path, key: Key) -> Option<[Plane; 3]> {
     let bytes = std::fs::read(state_path(dir, key)).ok()?;
@@ -163,6 +197,24 @@ mod tests {
         store_state(&dir, b, &state(9.0)).unwrap();
         assert_eq!(load_state(&dir, a).unwrap()[0].get(0, 0), 1.0);
         assert_eq!(load_state(&dir, b).unwrap()[0].get(0, 0), 9.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scan_lists_current_format_entries_only() {
+        let dir = tmp_dir("scan");
+        std::fs::create_dir_all(&dir).unwrap();
+        store_state(&dir, k(1), &state(1.0)).unwrap();
+        store_state(&dir, Key::from_parts(9, 2), &state(2.0)).unwrap();
+        // noise the scan must skip: old-format name, foreign file, junk hex
+        std::fs::write(dir.join(format!("{:016x}.state", 3u64)), b"RTC1old").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"hello").unwrap();
+        std::fs::write(dir.join(format!("{:0>32}.state", "zz")), b"RTC2").unwrap();
+        let mut keys: Vec<Key> = scan_states(&dir).iter().map(|(k, _, _)| *k).collect();
+        keys.sort_unstable();
+        assert_eq!(keys, vec![k(1), Key::from_parts(9, 2)]);
+        let (_, _, len) = scan_states(&dir)[0];
+        assert_eq!(len as usize, 12 + 3 * 6 * 4, "scan reports the file length");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

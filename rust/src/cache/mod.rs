@@ -20,7 +20,12 @@
 //!   zero-copy `Arc` hits, single-flight miss claims
 //!   ([`ReuseCache::lookup_or_claim`]) so concurrent studies never
 //!   duplicate a backend launch, and per-tenant [`ScopedCounters`]
-//!   that sum exactly to the global [`CacheStats`].
+//!   that sum exactly to the global [`CacheStats`]. Scopes built with
+//!   [`ScopedCounters::with_quota`] bound how much of the shared memory
+//!   tier a tenant's entries may occupy (quota-aware admission; each
+//!   eviction is charged to the entry's *owning* scope), and
+//!   [`ReuseCache::warm_start`] pre-admits persisted disk-tier entries
+//!   at process start so the first lookups of the day are memory hits.
 //!
 //! Integration points: [`crate::runtime::PjrtEngine`] consults/populates
 //! the cache at task granularity, [`crate::coordinator`] shares one cache
@@ -51,5 +56,5 @@ pub use key::{
 };
 pub use store::{
     CacheConfig, CacheStats, CachedState, FlightClaims, MetricsClaim, ReuseCache, ScopedCounters,
-    StateClaim,
+    StateClaim, WarmStartReport,
 };

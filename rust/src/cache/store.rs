@@ -28,6 +28,14 @@
 //!   [`ScopedCounters`] and bumps the scope *and* the global counters
 //!   with the same increments, so per-tenant counters sum exactly to the
 //!   global [`CacheStats`] when every operation carries a scope.
+//! * **Quota-aware admission.** Entries inserted under a scope are
+//!   *owned* by it: the owner's resident-byte counter grows on insert and
+//!   shrinks on eviction (whoever triggers the eviction, the *owner* is
+//!   charged). A scope built with [`ScopedCounters::with_quota`] is a
+//!   byte-bounded tenant: admitting past the quota evicts the tenant's
+//!   own least-recently-used entries first, so one tenant can never
+//!   crowd the shared memory tier beyond its allowance — its states
+//!   remain reachable through the disk tier.
 
 use std::collections::{HashMap, HashSet};
 use std::fmt;
@@ -124,32 +132,66 @@ impl CacheStats {
 }
 
 /// Per-scope (per-tenant, per-study — the caller decides the scope)
-/// mirror of the lookup/publication counters. Every counted cache
-/// operation that carries a scope bumps the scope and the global
-/// counters identically, so the sum of all scopes equals the global
-/// [`CacheStats`] on the fields a scope tracks (hits, disk hits, misses,
-/// inserts, metric hits/misses); eviction/residency remain global-only.
+/// mirror of the lookup/publication counters, plus the scope's resident
+/// footprint and optional byte quota. Every counted cache operation that
+/// carries a scope bumps the scope and the global counters identically,
+/// so the sum of all scopes equals the global [`CacheStats`] on the
+/// fields a scope tracks (hits, disk hits, misses, inserts, metric
+/// hits/misses — and evictions/resident bytes when *every* insert was
+/// scoped); peak residency remains global-only.
+///
+/// A scope handed to [`ReuseCache::put_state_scoped`] (or to a lookup
+/// that promotes a disk entry) becomes the **owner** of the admitted
+/// entry: the entry's bytes count against this scope's
+/// [`ScopedCounters::resident_bytes`] until the entry is evicted, and
+/// the eviction — whoever triggers it — is charged to this scope's
+/// eviction counter. Scope identity is the `Arc` pointer, which is why
+/// the owning entry points take `&Arc<ScopedCounters>`.
 #[derive(Debug, Default)]
 pub struct ScopedCounters {
     hits: AtomicU64,
     disk_hits: AtomicU64,
     misses: AtomicU64,
     inserts: AtomicU64,
+    evictions: AtomicU64,
     metric_hits: AtomicU64,
     metric_misses: AtomicU64,
     bytes_served: AtomicU64,
+    resident: AtomicU64,
+    /// Memory-tier byte allowance for entries this scope owns
+    /// (0 = unlimited). Fixed at construction.
+    quota: u64,
+    /// Keys of entries this scope currently owns — the quota-eviction
+    /// index, so over-quota eviction scans the owner's few entries, not
+    /// the whole shared cache. Maintained outside the shard locks (no
+    /// lock nesting), so briefly stale keys are possible; eviction
+    /// verifies against the shard and prunes stale keys lazily.
+    owned: Mutex<HashSet<Key>>,
 }
 
 impl ScopedCounters {
-    /// Snapshot as a [`CacheStats`] (global-only fields stay zero).
+    /// A scope whose owned entries may occupy at most `quota_bytes` of
+    /// the shared memory tier. Admission past the quota evicts this
+    /// scope's own LRU entries (never another tenant's); an entry larger
+    /// than the whole quota is not admitted to memory at all (it still
+    /// reaches the disk tier, where lookups find it). `0` means
+    /// unlimited — identical to the `Default` construction.
+    pub fn with_quota(quota_bytes: u64) -> Self {
+        Self { quota: quota_bytes, ..Self::default() }
+    }
+
+    /// Snapshot as a [`CacheStats`] (the global-only `peak_bytes` and
+    /// `spilled` fields stay zero).
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             disk_hits: self.disk_hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             inserts: self.inserts.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
             metric_hits: self.metric_hits.load(Ordering::Relaxed),
             metric_misses: self.metric_misses.load(Ordering::Relaxed),
+            resident_bytes: self.resident.load(Ordering::Relaxed),
             ..CacheStats::default()
         }
     }
@@ -160,6 +202,24 @@ impl ScopedCounters {
     /// copied, merely made available).
     pub fn state_bytes_served(&self) -> u64 {
         self.bytes_served.load(Ordering::Relaxed)
+    }
+
+    /// Memory-tier bytes currently occupied by entries this scope owns.
+    /// After every `put_state_scoped` call returns, this is ≤
+    /// [`ScopedCounters::quota_bytes`] (when a quota is set).
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident.load(Ordering::Relaxed)
+    }
+
+    /// Entries of this scope evicted from the memory tier (by its own
+    /// quota or by the shared shard byte bound).
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// The byte quota this scope was built with (0 = unlimited).
+    pub fn quota_bytes(&self) -> u64 {
+        self.quota
     }
 }
 
@@ -189,6 +249,10 @@ struct Entry {
     state: CachedState,
     bytes: usize,
     tick: u64,
+    /// The scope whose residency this entry counts against (see
+    /// [`ScopedCounters`]); `None` for unscoped inserts (single-study
+    /// runs, warm-start pre-admission).
+    owner: Option<Arc<ScopedCounters>>,
 }
 
 #[derive(Default)]
@@ -306,7 +370,7 @@ impl ReuseCache {
 
     /// Credit a served state's payload size to the scope (per-tenant
     /// byte accounting; no global counterpart — globals track residency).
-    fn credit_bytes(scope: Option<&ScopedCounters>, state: &CachedState) {
+    fn credit_bytes(scope: Option<&Arc<ScopedCounters>>, state: &CachedState) {
         if let Some(s) = scope {
             let bytes: usize = state.iter().map(Plane::nbytes).sum();
             s.bytes_served.fetch_add(bytes as u64, Ordering::Relaxed);
@@ -320,11 +384,12 @@ impl ReuseCache {
         self.get_state_scoped(key, None)
     }
 
-    /// [`ReuseCache::get_state`] mirroring the counters into `scope`.
+    /// [`ReuseCache::get_state`] mirroring the counters into `scope`;
+    /// a disk hit is promoted into memory charged to (owned by) `scope`.
     pub fn get_state_scoped(
         &self,
         key: Key,
-        scope: Option<&ScopedCounters>,
+        scope: Option<&Arc<ScopedCounters>>,
     ) -> Option<CachedState> {
         if let Some(state) = self.probe_resident(key) {
             Self::bump(&self.hits, scope.map(|s| &s.hits));
@@ -336,7 +401,7 @@ impl ReuseCache {
                 let state: CachedState = Arc::new(state);
                 Self::bump(&self.disk_hits, scope.map(|s| &s.disk_hits));
                 Self::credit_bytes(scope, &state);
-                self.insert_resident(key, Arc::clone(&state));
+                self.insert_resident(key, Arc::clone(&state), scope);
                 return Some(state);
             }
         }
@@ -351,7 +416,7 @@ impl ReuseCache {
     /// [`StateClaim::InFlight`] without touching any counter — the
     /// caller waits and retries, and the eventual resolution is what
     /// gets counted.
-    pub fn lookup_or_claim(&self, key: Key, scope: Option<&ScopedCounters>) -> StateClaim {
+    pub fn lookup_or_claim(&self, key: Key, scope: Option<&Arc<ScopedCounters>>) -> StateClaim {
         if let Some(state) = self.probe_resident(key) {
             Self::bump(&self.hits, scope.map(|s| &s.hits));
             Self::credit_bytes(scope, &state);
@@ -378,7 +443,7 @@ impl ReuseCache {
                 let state: CachedState = Arc::new(state);
                 Self::bump(&self.disk_hits, scope.map(|s| &s.disk_hits));
                 Self::credit_bytes(scope, &state);
-                self.insert_resident(key, Arc::clone(&state));
+                self.insert_resident(key, Arc::clone(&state), scope);
                 // promoted to memory: waiters re-probe and hit
                 self.release_flight(key);
                 return StateClaim::Ready(state);
@@ -393,7 +458,7 @@ impl ReuseCache {
     pub fn lookup_or_claim_metrics(
         &self,
         key: Key,
-        scope: Option<&ScopedCounters>,
+        scope: Option<&Arc<ScopedCounters>>,
     ) -> MetricsClaim {
         if let Some(m) = self.metrics.lock().unwrap().get(&key) {
             Self::bump(&self.metric_hits, scope.map(|s| &s.metric_hits));
@@ -443,7 +508,7 @@ impl ReuseCache {
     }
 
     /// [`ReuseCache::note_state_hit`] mirroring into `scope`.
-    pub fn note_state_hit_scoped(&self, scope: Option<&ScopedCounters>) {
+    pub fn note_state_hit_scoped(&self, scope: Option<&Arc<ScopedCounters>>) {
         Self::bump(&self.hits, scope.map(|s| &s.hits));
     }
 
@@ -472,12 +537,14 @@ impl ReuseCache {
     }
 
     /// [`ReuseCache::put_state`] mirroring the insert counter into
-    /// `scope`.
+    /// `scope` and making `scope` the admitted entry's owner: the
+    /// entry's bytes count against the scope's residency (and quota, if
+    /// it has one) until eviction.
     pub fn put_state_scoped(
         &self,
         key: Key,
         state: impl Into<CachedState>,
-        scope: Option<&ScopedCounters>,
+        scope: Option<&Arc<ScopedCounters>>,
     ) {
         let state = state.into();
         let mut new_on_disk = false;
@@ -487,18 +554,108 @@ impl ReuseCache {
                 new_on_disk = true;
             }
         }
-        if self.insert_resident(key, state) || new_on_disk {
+        if self.insert_resident(key, state, scope) || new_on_disk {
             Self::bump(&self.inserts, scope.map(|s| &s.inserts));
         }
         self.release_flight(key);
     }
 
+    /// Remove an evicted entry's bytes from the books, charging the
+    /// *owning* scope (not whoever triggered the eviction).
+    fn charge_eviction(&self, entry: &Entry) {
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+        self.resident.fetch_sub(entry.bytes as u64, Ordering::Relaxed);
+        if let Some(o) = &entry.owner {
+            o.resident.fetch_sub(entry.bytes as u64, Ordering::Relaxed);
+            o.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Evict the least-recently-used entry *owned by* `owner`, using
+    /// the owner's key index — O(entries the owner holds), never a walk
+    /// of the whole shared cache; ticks are read live from the shards
+    /// (one lock at a time, never nested with the index lock) so the
+    /// choice is exact LRU. Returns false only when the owner has no
+    /// resident entries left; a concurrent removal of the chosen victim
+    /// counts as progress and returns true, letting the quota loop
+    /// re-check.
+    fn evict_scope_lru(&self, owner: &Arc<ScopedCounters>) -> bool {
+        let keys: Vec<Key> = owner.owned.lock().unwrap().iter().copied().collect();
+        let mut best: Option<(Key, u64)> = None;
+        let mut stale: Vec<Key> = Vec::new();
+        for key in keys {
+            let s = self.shard_of(key).lock().unwrap();
+            match s.map.get(&key) {
+                Some(e) if e.owner.as_ref().is_some_and(|o| Arc::ptr_eq(o, owner)) => {
+                    if best.is_none_or(|(_, t)| e.tick < t) {
+                        best = Some((key, e.tick));
+                    }
+                }
+                _ => stale.push(key), // evicted or re-owned since indexed
+            }
+        }
+        if !stale.is_empty() {
+            let mut owned = owner.owned.lock().unwrap();
+            for k in &stale {
+                owned.remove(k);
+            }
+        }
+        let Some((key, _)) = best else {
+            return false;
+        };
+        let removed = {
+            let mut s = self.shard_of(key).lock().unwrap();
+            let still_owned = s
+                .map
+                .get(&key)
+                .is_some_and(|e| e.owner.as_ref().is_some_and(|o| Arc::ptr_eq(o, owner)));
+            if still_owned {
+                if let Some(e) = s.map.remove(&key) {
+                    s.bytes -= e.bytes;
+                    self.charge_eviction(&e);
+                }
+                true
+            } else {
+                false // raced with another eviction: caller re-checks
+            }
+        };
+        if removed {
+            owner.owned.lock().unwrap().remove(&key);
+        }
+        true
+    }
+
+    /// Bring `owner`'s resident bytes back under its quota by evicting
+    /// its own LRU entries. Runs after every owned insert, so the quota
+    /// bound holds whenever no insert is mid-flight — each concurrent
+    /// inserter enforces its own addition before returning.
+    fn enforce_quota(&self, owner: &Arc<ScopedCounters>) {
+        if owner.quota == 0 {
+            return;
+        }
+        while owner.resident.load(Ordering::Relaxed) > owner.quota {
+            if !self.evict_scope_lru(owner) {
+                break;
+            }
+        }
+    }
+
     /// Returns true when `key` was newly added to the resident map.
-    fn insert_resident(&self, key: Key, state: CachedState) -> bool {
+    fn insert_resident(
+        &self,
+        key: Key,
+        state: CachedState,
+        owner: Option<&Arc<ScopedCounters>>,
+    ) -> bool {
         let bytes: usize = state.iter().map(Plane::nbytes).sum();
         let budget = self.per_shard_budget();
         if bytes > budget {
             return false; // larger than a whole shard: disk-only (if configured)
+        }
+        if let Some(o) = owner {
+            if o.quota > 0 && bytes as u64 > o.quota {
+                return false; // larger than the whole quota: disk-only
+            }
         }
         let tick = self.next_tick();
         let mut s = self.shard_of(key).lock().unwrap();
@@ -506,9 +663,13 @@ impl ReuseCache {
             e.tick = tick;
             return false;
         }
-        s.map.insert(key, Entry { state, bytes, tick });
+        s.map.insert(key, Entry { state, bytes, tick, owner: owner.cloned() });
         s.bytes += bytes;
+        if let Some(o) = owner {
+            o.resident.fetch_add(bytes as u64, Ordering::Relaxed);
+        }
         let mut freed = 0u64;
+        let mut evicted_owned: Vec<(Arc<ScopedCounters>, Key)> = Vec::new();
         while s.bytes > budget {
             // LRU victim: smallest tick. Shard maps stay small enough
             // (budget / state size) that a scan beats maintaining an
@@ -525,15 +686,34 @@ impl ReuseCache {
                         s.bytes -= e.bytes;
                         freed += e.bytes as u64;
                         self.evictions.fetch_add(1, Ordering::Relaxed);
+                        if let Some(o) = &e.owner {
+                            o.resident.fetch_sub(e.bytes as u64, Ordering::Relaxed);
+                            o.evictions.fetch_add(1, Ordering::Relaxed);
+                            evicted_owned.push((Arc::clone(o), v));
+                        }
                     }
                 }
                 None => break,
             }
         }
+        drop(s);
+        // index maintenance happens outside the shard lock (the owned
+        // set and the shards are never locked together)
+        for (o, k) in &evicted_owned {
+            o.owned.lock().unwrap().remove(k);
+        }
+        if let Some(o) = owner {
+            o.owned.lock().unwrap().insert(key);
+        }
         let grown = bytes as u64;
         let now = self.resident.fetch_add(grown, Ordering::Relaxed) + grown;
         self.resident.fetch_sub(freed, Ordering::Relaxed);
         self.peak.fetch_max(now.saturating_sub(freed), Ordering::Relaxed);
+        if let Some(o) = owner {
+            // after the shard lock is released: quota eviction re-locks
+            // shards one at a time
+            self.enforce_quota(o);
+        }
         true
     }
 
@@ -546,7 +726,7 @@ impl ReuseCache {
     pub fn get_metrics_scoped(
         &self,
         key: Key,
-        scope: Option<&ScopedCounters>,
+        scope: Option<&Arc<ScopedCounters>>,
     ) -> Option<[f32; 3]> {
         let m = self.metrics.lock().unwrap();
         match m.get(&key) {
@@ -622,6 +802,66 @@ impl ReuseCache {
             peak_bytes: self.peak.load(Ordering::Relaxed),
         }
     }
+
+    /// Pre-admit persisted disk-tier entries into the memory tier, so a
+    /// freshly started process serves *memory* hits from its first
+    /// lookup instead of paying a disk read per key (the service runs
+    /// this at boot — "the first tenant of the day is warm").
+    ///
+    /// The spill directory is scanned for current-format entries, which
+    /// are admitted newest-first (modification time, the best available
+    /// recency signal across a restart) until the next entry would push
+    /// resident bytes past the configured capacity; the remainder — and
+    /// any unreadable or stale-format file — is skipped and stays
+    /// disk-served. Admitted entries are unowned (no tenant is charged
+    /// for warmth shared by everyone) and touch none of the hit/miss
+    /// counters. A no-op without a disk tier.
+    pub fn warm_start(&self) -> WarmStartReport {
+        let mut report = WarmStartReport::default();
+        let Some(dir) = &self.cfg.spill_dir else {
+            return report;
+        };
+        let mut entries = disk::scan_states(dir);
+        entries.sort_by(|a, b| b.1.cmp(&a.1)); // newest first
+        report.scanned = entries.len() as u64;
+        let capacity = self.cfg.capacity_bytes as u64;
+        for (key, _, file_len) in entries {
+            // payload = file length minus the 12-byte header
+            let payload = file_len.saturating_sub(12);
+            if self.resident.load(Ordering::Relaxed) + payload > capacity {
+                report.skipped += 1;
+                continue;
+            }
+            match disk::load_state(dir, key) {
+                Some(state) => {
+                    let state: CachedState = Arc::new(state);
+                    let bytes: usize = state.iter().map(Plane::nbytes).sum();
+                    if self.insert_resident(key, state, None) {
+                        report.admitted += 1;
+                        report.admitted_bytes += bytes as u64;
+                    } else {
+                        report.skipped += 1;
+                    }
+                }
+                None => report.skipped += 1,
+            }
+        }
+        report
+    }
+}
+
+/// What [`ReuseCache::warm_start`] found and admitted.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WarmStartReport {
+    /// Current-format entries found in the spill directory.
+    pub scanned: u64,
+    /// Entries pre-admitted into the memory tier.
+    pub admitted: u64,
+    /// Bytes those entries occupy resident.
+    pub admitted_bytes: u64,
+    /// Entries left disk-only (capacity reached, unreadable, or already
+    /// resident).
+    pub skipped: u64,
 }
 
 /// RAII holder for claimed flights: any key still held when this drops
@@ -815,8 +1055,8 @@ mod tests {
     #[test]
     fn scoped_counters_mirror_globals() {
         let c = ReuseCache::with_capacity(1 << 20);
-        let a = ScopedCounters::default();
-        let b = ScopedCounters::default();
+        let a = Arc::new(ScopedCounters::default());
+        let b = Arc::new(ScopedCounters::default());
         // tenant a: one miss-claim + publish + one hit
         assert!(matches!(c.lookup_or_claim(k(1), Some(&a)), StateClaim::Claimed));
         c.put_state_scoped(k(1), state(1.0, 4), Some(&a));
@@ -836,6 +1076,130 @@ mod tests {
         assert_eq!(sa.inserts + sb.inserts, g.inserts);
         assert_eq!(sa.metric_hits + sb.metric_hits, g.metric_hits);
         assert_eq!(sa.metric_misses + sb.metric_misses, g.metric_misses);
+    }
+
+    #[test]
+    fn quota_evicts_the_owners_lru_first() {
+        // plenty of shared capacity, but the tenant may own at most 2
+        // states — its third insert evicts its own oldest entry
+        let c = ReuseCache::new(CacheConfig {
+            capacity_bytes: 1 << 20,
+            shards: 1,
+            ..CacheConfig::default()
+        });
+        let t = Arc::new(ScopedCounters::with_quota(2 * S4 as u64));
+        c.put_state_scoped(k(1), state(1.0, 4), Some(&t));
+        c.put_state_scoped(k(2), state(2.0, 4), Some(&t));
+        assert_eq!(t.resident_bytes(), 2 * S4 as u64);
+        c.put_state_scoped(k(3), state(3.0, 4), Some(&t));
+        assert_eq!(t.resident_bytes(), 2 * S4 as u64, "quota bound holds");
+        assert_eq!(t.evictions(), 1);
+        assert!(c.get_state(k(1)).is_none(), "the tenant's LRU entry was evicted");
+        assert!(c.get_state(k(2)).is_some());
+        assert!(c.get_state(k(3)).is_some());
+        // another tenant is untouched by the first one's quota
+        let u = Arc::new(ScopedCounters::default());
+        c.put_state_scoped(k(9), state(9.0, 4), Some(&u));
+        assert_eq!(u.resident_bytes(), S4 as u64);
+        assert_eq!(u.evictions(), 0);
+    }
+
+    #[test]
+    fn oversized_for_quota_stays_out_of_memory() {
+        let t = Arc::new(ScopedCounters::with_quota(S4 as u64 / 2));
+        let c = ReuseCache::with_capacity(1 << 20);
+        c.put_state_scoped(k(1), state(1.0, 4), Some(&t));
+        assert_eq!(c.len(), 0, "entry larger than the whole quota is not admitted");
+        assert_eq!(t.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn shard_eviction_charges_the_owning_scope() {
+        // one shard, room for exactly 2 states; A's entry is the LRU
+        // victim of B's second insert — A is charged, not B
+        let c = ReuseCache::new(CacheConfig {
+            capacity_bytes: 2 * S4,
+            shards: 1,
+            ..CacheConfig::default()
+        });
+        let a = Arc::new(ScopedCounters::default());
+        let b = Arc::new(ScopedCounters::default());
+        c.put_state_scoped(k(1), state(1.0, 4), Some(&a));
+        c.put_state_scoped(k(2), state(2.0, 4), Some(&b));
+        c.put_state_scoped(k(3), state(3.0, 4), Some(&b));
+        assert_eq!(a.resident_bytes(), 0, "A's entry was evicted");
+        assert_eq!(a.evictions(), 1, "the eviction is charged to the owner");
+        assert_eq!(b.resident_bytes(), 2 * S4 as u64);
+        assert_eq!(b.evictions(), 0);
+        // owners partition residency: scope sums equal the global gauge
+        assert_eq!(
+            a.resident_bytes() + b.resident_bytes(),
+            c.resident_bytes() as u64,
+            "scoped residency sums to the global counter"
+        );
+    }
+
+    #[test]
+    fn warm_start_preadmits_disk_entries() {
+        let dir = std::env::temp_dir().join(format!("rtf-cache-warm-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let cold = ReuseCache::new(CacheConfig {
+                capacity_bytes: 1 << 20,
+                spill_dir: Some(dir.clone()),
+                ..CacheConfig::default()
+            });
+            cold.put_state(k(1), state(1.0, 4));
+            cold.put_state(k(2), state(2.0, 4));
+        }
+        // a fresh process: nothing resident until warm_start pre-admits
+        let warm = ReuseCache::new(CacheConfig {
+            capacity_bytes: 1 << 20,
+            spill_dir: Some(dir.clone()),
+            ..CacheConfig::default()
+        });
+        assert_eq!(warm.len(), 0);
+        let report = warm.warm_start();
+        assert_eq!(report.scanned, 2);
+        assert_eq!(report.admitted, 2);
+        assert_eq!(report.admitted_bytes, 2 * S4 as u64);
+        assert_eq!(warm.len(), 2);
+        // the first lookup is a MEMORY hit, not a disk read
+        assert!(warm.get_state(k(1)).is_some());
+        let st = warm.stats();
+        assert_eq!((st.hits, st.disk_hits), (1, 0), "warm-start makes lookups memory hits");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn warm_start_respects_capacity_and_tolerates_junk() {
+        let dir = std::env::temp_dir().join(format!("rtf-cache-warmcap-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let cold = ReuseCache::new(CacheConfig {
+                capacity_bytes: 1 << 20,
+                spill_dir: Some(dir.clone()),
+                ..CacheConfig::default()
+            });
+            for i in 0..4 {
+                cold.put_state(k(i), state(i as f32, 4));
+            }
+        }
+        // junk the scanner must skip without erroring
+        std::fs::write(dir.join(format!("{:032x}.state", 0xbadu64)), b"XXXXjunk").unwrap();
+        let warm = ReuseCache::new(CacheConfig {
+            capacity_bytes: 2 * S4, // memory holds two of the four states
+            shards: 1,
+            spill_dir: Some(dir.clone()),
+            ..CacheConfig::default()
+        });
+        let report = warm.warm_start();
+        assert_eq!(report.scanned, 5);
+        assert_eq!(report.admitted, 2, "admission stops at capacity");
+        assert_eq!(report.skipped, 3);
+        assert!(warm.resident_bytes() <= 2 * S4);
+        assert_eq!(warm.stats().evictions, 0, "warm-start never thrashes the LRU");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -276,6 +276,124 @@ impl StudyConfig {
     }
 }
 
+/// Everything the `serve` CLI mode needs, parsed from `key=value`
+/// arguments: the service shape, the network endpoints, the per-tenant
+/// quota/priority tables, and the residual study options (which become
+/// the per-job defaults). See `docs/SERVING.md` for the operator-facing
+/// reference of every flag.
+#[derive(Clone, Debug, Default)]
+pub struct ServeConfig {
+    /// `serve-workers=N` — studies executed concurrently.
+    pub serve_workers: usize,
+    /// `tenant-cap=N` — max in-flight studies per tenant.
+    pub tenant_cap: usize,
+    /// `tenants=N` — demo mode: number of synthetic tenants.
+    pub tenants: usize,
+    /// `jobs-per-tenant=M` — demo mode: identical studies per tenant.
+    pub jobs_per_tenant: usize,
+    /// `jobs=FILE` — one job per line: `tenant=NAME [study options]`.
+    pub jobs_file: Option<String>,
+    /// `listen=ADDR` — serve the wire protocol on this TCP address
+    /// (`127.0.0.1:0` binds an OS-assigned port).
+    pub listen: Option<String>,
+    /// `addr-file=PATH` — with `listen=`, write the bound address here
+    /// once listening (scripts wait on this file).
+    pub addr_file: Option<String>,
+    /// `submit=ADDR` — client mode: submit `jobs=FILE` to a listening
+    /// service instead of running one in-process.
+    pub submit: Option<String>,
+    /// `drain=on` — client mode: drain the service after collecting the
+    /// results and print its bill (the server exits).
+    pub drain: bool,
+    /// `quota=MB` — default per-tenant memory-tier byte quota.
+    pub quota_mb: Option<usize>,
+    /// `quota=TENANT:MB` (repeatable) — per-tenant quota overrides.
+    pub quota_overrides_mb: Vec<(String, usize)>,
+    /// `priority=TENANT:W` (repeatable) — admission weights (default 1).
+    pub priorities: Vec<(String, u32)>,
+    /// `warm-start=on|off` — pre-admit disk-tier entries at boot.
+    /// Unset defaults to on exactly when `cache-dir=` is configured.
+    pub warm_start: Option<bool>,
+    /// The residual study options, kept raw for client mode (the server
+    /// parses per-job lines itself).
+    pub study_args: Vec<String>,
+    /// Those options parsed over the default [`StudyConfig`] — the
+    /// per-job default study, with the cache force-enabled.
+    pub study: StudyConfig,
+}
+
+impl ServeConfig {
+    /// Parse the `serve` argument list: serve-specific keys are consumed
+    /// here, everything else must parse as a study option (the per-job
+    /// default). Rejects `cache=off` — the service exists to share one
+    /// reuse cache — and `listen=` combined with `submit=`.
+    pub fn from_args(args: &[String]) -> Result<Self> {
+        let mut sc = ServeConfig {
+            serve_workers: 2,
+            tenant_cap: 1,
+            tenants: 2,
+            jobs_per_tenant: 1,
+            ..ServeConfig::default()
+        };
+        for a in args {
+            let uint = |v: &str| -> Result<usize> {
+                v.parse().map_err(|_| Error::Config(format!("`{a}` needs an integer")))
+            };
+            match a.split_once('=') {
+                Some(("serve-workers", v)) => sc.serve_workers = uint(v)?.max(1),
+                Some(("tenant-cap", v)) => sc.tenant_cap = uint(v)?.max(1),
+                Some(("tenants", v)) => sc.tenants = uint(v)?.max(1),
+                Some(("jobs-per-tenant", v)) => sc.jobs_per_tenant = uint(v)?.max(1),
+                Some(("jobs", v)) => sc.jobs_file = Some(v.to_string()),
+                Some(("listen", v)) => sc.listen = Some(v.to_string()),
+                Some(("addr-file", v)) => sc.addr_file = Some(v.to_string()),
+                Some(("submit", v)) => sc.submit = Some(v.to_string()),
+                Some(("drain", v)) => sc.drain = v == "on" || v == "true",
+                Some(("quota", v)) => match v.split_once(':') {
+                    Some((tenant, mb)) => {
+                        sc.quota_overrides_mb.push((tenant.to_string(), uint(mb)?))
+                    }
+                    None => sc.quota_mb = Some(uint(v)?),
+                },
+                Some(("priority", v)) => {
+                    let (tenant, w) = v.split_once(':').ok_or_else(|| {
+                        Error::Config(format!("`{a}`: expected priority=TENANT:WEIGHT"))
+                    })?;
+                    sc.priorities.push((tenant.to_string(), uint(w)?.max(1) as u32));
+                }
+                Some(("warm-start", v)) => sc.warm_start = Some(v == "on" || v == "true"),
+                _ => sc.study_args.push(a.clone()),
+            }
+        }
+        if sc.listen.is_some() && sc.submit.is_some() {
+            return Err(Error::Config(
+                "`listen=` (run a service) and `submit=` (be a client) are mutually \
+                 exclusive"
+                    .into(),
+            ));
+        }
+        // the service exists to share one cache across tenants; a
+        // cacheless service is a contradiction, so reject rather than
+        // silently ignore
+        if sc.study_args.iter().any(|a| a == "cache=off" || a == "cache=false") {
+            return Err(Error::Config(
+                "serve shares one reuse cache across tenants; `cache=off` is not supported \
+                 here (tune cache-mb / cache-shards / cache-dir / quota instead)"
+                    .into(),
+            ));
+        }
+        sc.study = StudyConfig::from_args(&sc.study_args)?;
+        sc.study.cache.enabled = true;
+        Ok(sc)
+    }
+
+    /// The effective warm-start switch: the explicit flag, defaulting to
+    /// on exactly when a persistent tier (`cache-dir=`) is configured.
+    pub fn warm_start_effective(&self) -> bool {
+        self.warm_start.unwrap_or(self.study.cache.spill_dir.is_some())
+    }
+}
+
 /// Parse a fine-grain algorithm name plus its size knob.
 pub fn parse_algorithm(name: &str, mbs: usize, max_buckets: usize) -> Result<FineAlgorithm> {
     Ok(match name {
@@ -383,6 +501,60 @@ mod tests {
         assert!(c.describe().contains("cache=on"));
         assert!(StudyConfig::from_args(&args(&["cache-quant=abc"])).is_err());
         assert!(StudyConfig::from_args(&args(&["cache-mb=x"])).is_err());
+    }
+
+    #[test]
+    fn serve_config_parses_all_flags() {
+        let sc = ServeConfig::from_args(&args(&[
+            "serve-workers=4",
+            "tenant-cap=2",
+            "listen=127.0.0.1:0",
+            "addr-file=/tmp/addr",
+            "quota=128",
+            "quota=alice:64",
+            "priority=alice:4",
+            "priority=bob:1",
+            "warm-start=on",
+            "method=moat",
+            "r=2",
+            "cache-mb=512",
+        ]))
+        .unwrap();
+        assert_eq!(sc.serve_workers, 4);
+        assert_eq!(sc.tenant_cap, 2);
+        assert_eq!(sc.listen.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(sc.addr_file.as_deref(), Some("/tmp/addr"));
+        assert_eq!(sc.quota_mb, Some(128));
+        assert_eq!(sc.quota_overrides_mb, vec![("alice".to_string(), 64)]);
+        assert_eq!(sc.priorities, vec![("alice".to_string(), 4), ("bob".to_string(), 1)]);
+        assert_eq!(sc.warm_start, Some(true));
+        assert!(sc.warm_start_effective());
+        assert_eq!(sc.study.method, SaMethod::Moat { r: 2 });
+        assert_eq!(sc.study.cache.capacity_mb, 512);
+        assert!(sc.study.cache.enabled, "serve force-enables the shared cache");
+        assert_eq!(sc.study_args, args(&["method=moat", "r=2", "cache-mb=512"]));
+    }
+
+    #[test]
+    fn serve_config_defaults_and_warm_start_follow_cache_dir() {
+        let sc = ServeConfig::from_args(&[]).unwrap();
+        let shape = (sc.serve_workers, sc.tenant_cap, sc.tenants, sc.jobs_per_tenant);
+        assert_eq!(shape, (2, 1, 2, 1));
+        assert!(!sc.warm_start_effective(), "no disk tier, no warm start");
+        let sc = ServeConfig::from_args(&args(&["cache-dir=/tmp/rtf-tier"])).unwrap();
+        assert!(sc.warm_start_effective(), "a disk tier warm-starts by default");
+        let sc = ServeConfig::from_args(&args(&["cache-dir=/tmp/rtf-tier", "warm-start=off"]))
+            .unwrap();
+        assert!(!sc.warm_start_effective(), "the explicit flag wins");
+    }
+
+    #[test]
+    fn serve_config_rejects_contradictions() {
+        assert!(ServeConfig::from_args(&args(&["cache=off"])).is_err());
+        assert!(ServeConfig::from_args(&args(&["listen=a:1", "submit=b:2"])).is_err());
+        assert!(ServeConfig::from_args(&args(&["priority=3"])).is_err(), "weight needs a tenant");
+        assert!(ServeConfig::from_args(&args(&["quota=alice:x"])).is_err());
+        assert!(ServeConfig::from_args(&args(&["bogus=1"])).is_err(), "unknown study key");
     }
 
     #[test]

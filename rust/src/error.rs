@@ -19,6 +19,9 @@ pub enum Error {
     Io(std::io::Error),
     /// JSON (de)serialization error.
     Json(String),
+    /// Wire-protocol violation (bad frame, unexpected message, version
+    /// mismatch) on the serve TCP protocol.
+    Protocol(String),
 }
 
 impl fmt::Display for Error {
@@ -31,6 +34,7 @@ impl fmt::Display for Error {
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Json(e) => write!(f, "json error: {e}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
         }
     }
 }

@@ -24,8 +24,10 @@
 //! * [`coordinator`] — demand-driven manager/worker execution of merged
 //!   plans with per-worker task scheduling and dependency resolution.
 //! * [`serve`] — the multi-tenant study service: one process-lifetime
-//!   shared cache + engine serving many concurrent studies, with fair
-//!   admission, per-tenant accounting and graceful drain.
+//!   shared cache + engine serving many concurrent studies, with
+//!   weighted-fair admission, per-tenant byte quotas and accounting,
+//!   disk warm-start, graceful drain, and a TCP wire protocol
+//!   (`docs/SERVING.md`) with an in-tree client.
 //! * [`simulate`] — discrete-event cluster simulator used for the
 //!   8–256-worker scalability studies (Figs. 22/23, Table 5).
 //! * [`analysis`] — elementary effects (MOAT) and Sobol indices (VBD),

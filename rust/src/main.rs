@@ -80,10 +80,19 @@ fn print_help() {
          \n\
          serve options (plus any study option above as the per-job default):\n\
            serve-workers=2    concurrent studies in flight\n\
-           tenant-cap=1       max in-flight studies per tenant (fair admission)\n\
+           tenant-cap=1       max in-flight studies per tenant\n\
+           priority=T:W       admission weight for tenant T (weighted fair, default 1)\n\
+           quota=MB           per-tenant memory-tier byte quota (quota=T:MB overrides)\n\
+           warm-start=on|off  pre-admit disk-tier entries at boot (default: on with cache-dir)\n\
            tenants=2          demo mode: N tenants ...\n\
            jobs-per-tenant=1  ... each submitting this many identical studies\n\
-           jobs=FILE          submit per-line jobs: `tenant=NAME [study opts]`"
+           jobs=FILE          submit per-line jobs: `tenant=NAME [study opts]`\n\
+           listen=ADDR        serve the wire protocol on ADDR (e.g. 127.0.0.1:7070)\n\
+           addr-file=PATH     with listen=: write the bound address to PATH\n\
+           submit=ADDR        client mode: send jobs=FILE to a listening service\n\
+           drain=on           client mode: drain the service and print its bill\n\
+         \n\
+         docs/SERVING.md is the operator's guide + wire-protocol spec"
     );
 }
 
@@ -161,106 +170,151 @@ fn cmd_run_sa(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// `serve`: run a multi-tenant study service to completion. Demo mode
-/// (`tenants=N jobs-per-tenant=M`) submits N tenants' worth of the same
-/// study; `jobs=FILE` reads one job per line (`tenant=NAME [study
-/// options]`). Every job runs against ONE shared reuse cache; the
-/// per-tenant table shows who paid for launches and who rode the cache.
+/// `serve`: three modes behind one command (see `docs/SERVING.md`).
+/// In-process (default): submit the demo workload or a `jobs=FILE` and
+/// drain. `listen=ADDR`: serve the wire protocol over TCP until a
+/// client drains. `submit=ADDR`: be the wire client for a `jobs=FILE`.
+/// Every served job runs against ONE shared reuse cache; the per-tenant
+/// bill shows who paid for launches and who rode the cache.
 fn cmd_serve(args: &[String]) -> Result<()> {
-    use rtf_reuse::serve::{ServeOptions, StudyJob, StudyService};
-
-    let mut serve_workers = 2usize;
-    let mut tenant_cap = 1usize;
-    let mut tenants = 2usize;
-    let mut jobs_per_tenant = 1usize;
-    let mut jobs_file: Option<String> = None;
-    let mut study_args: Vec<String> = Vec::new();
-    for a in args {
-        let uint = |v: &str| -> Result<usize> {
-            v.parse().map_err(|_| Error::Config(format!("`{a}` needs an integer")))
-        };
-        match a.split_once('=') {
-            Some(("serve-workers", v)) => serve_workers = uint(v)?.max(1),
-            Some(("tenant-cap", v)) => tenant_cap = uint(v)?.max(1),
-            Some(("tenants", v)) => tenants = uint(v)?.max(1),
-            Some(("jobs-per-tenant", v)) => jobs_per_tenant = uint(v)?.max(1),
-            Some(("jobs", v)) => jobs_file = Some(v.to_string()),
-            _ => study_args.push(a.clone()),
-        }
-    }
-    // the service exists to share one cache across tenants; a cacheless
-    // service is a contradiction, so reject rather than silently ignore
-    if study_args.iter().any(|a| a == "cache=off" || a == "cache=false") {
-        return Err(Error::Config(
-            "serve shares one reuse cache across tenants; `cache=off` is not supported here \
-             (tune cache-mb / cache-shards / cache-dir instead)"
-                .into(),
-        ));
-    }
-    let mut base = StudyConfig::from_args(&study_args)?;
-    base.cache.enabled = true;
-
-    let opts = ServeOptions {
-        service_workers: serve_workers,
-        tenant_inflight_cap: tenant_cap,
-        study_workers: base.workers,
-        batch_width: base.batch_width,
-        artifacts_dir: base.artifacts_dir.clone(),
-        cache: base.cache.to_cache_config(),
+    use rtf_reuse::config::ServeConfig;
+    use rtf_reuse::serve::{
+        parse_jobs_file, run_jobs, ServeOptions, StudyJob, StudyService, WireServer,
+        PROTOCOL_VERSION,
     };
+
+    let sc = ServeConfig::from_args(args)?;
+
+    // ---- client mode ------------------------------------------------
+    if let Some(addr) = &sc.submit {
+        let path = sc.jobs_file.as_ref().ok_or_else(|| {
+            Error::Config("client mode needs jobs=FILE (`tenant=NAME [opts]` per line)".into())
+        })?;
+        let text = std::fs::read_to_string(path)?;
+        let specs = parse_jobs_file(&text, &sc.study_args)?;
+        let n = specs.len();
+        println!("client: submitting {n} jobs to {addr} (protocol v{PROTOCOL_VERSION})");
+        let outcome = run_jobs(addr, &specs, sc.drain)?;
+        for j in &outcome.jobs {
+            let status = if j.ok() { "ok" } else { "FAILED" };
+            println!(
+                "job {} tenant={} {status} launches={} cached={} evals={} wall={}",
+                j.job,
+                j.tenant,
+                j.launches,
+                j.cached_tasks,
+                j.n_evals,
+                fmt_secs(j.exec_wall_secs)
+            );
+            if let Some(e) = &j.error {
+                println!("  error: {e}");
+            }
+        }
+        if let Some(bill) = &outcome.bill {
+            let mut t = Table::new(&[
+                "tenant", "jobs", "launches", "cached", "hits", "misses", "quota MiB",
+                "resident KiB",
+            ]);
+            for ten in &bill.tenants {
+                t.row(&[
+                    ten.tenant.clone(),
+                    ten.jobs.to_string(),
+                    ten.launches.to_string(),
+                    ten.cached_tasks.to_string(),
+                    (ten.cache.hits + ten.cache.disk_hits).to_string(),
+                    ten.cache.misses.to_string(),
+                    fmt_quota(ten.quota_bytes),
+                    (ten.cache.resident_bytes / 1024).to_string(),
+                ]);
+            }
+            t.print("drain bill (per tenant, from the drained service)");
+            println!(
+                "drain bill: {} jobs ({} failed), {} total launches, service wall {}",
+                bill.jobs,
+                bill.failed,
+                bill.total_launches,
+                fmt_secs(bill.wall_secs)
+            );
+        }
+        return Ok(());
+    }
+
+    // ---- service modes ----------------------------------------------
+    let opts = ServeOptions::from_config(&sc);
     println!(
-        "serve: {} service workers, tenant cap {}, {} study workers, cache {} MiB",
+        "serve: {} service workers, tenant cap {}, {} study workers, cache {} MiB{}{}",
         opts.service_workers,
         opts.tenant_inflight_cap,
         opts.study_workers,
-        opts.cache.capacity_bytes / (1024 * 1024)
+        opts.cache.capacity_bytes / (1024 * 1024),
+        match opts.tenant_quota_bytes {
+            Some(q) => format!(", tenant quota {} MiB", q / (1024 * 1024)),
+            None => String::new(),
+        },
+        if opts.warm_start { ", warm-start on" } else { "" }
     );
     let svc = StudyService::start(opts)?;
+    let warm = svc.warm_start_report();
+    if warm.scanned > 0 {
+        println!(
+            "warm-start: scanned {} disk entries, admitted {} ({} KiB) into memory",
+            warm.scanned,
+            warm.admitted,
+            warm.admitted_bytes / 1024
+        );
+    }
+
+    if let Some(listen_addr) = &sc.listen {
+        let server = WireServer::bind(svc, listen_addr)?;
+        let bound = server.local_addr()?;
+        println!("serve: listening on {bound} (protocol v{PROTOCOL_VERSION}); drain to stop");
+        if let Some(path) = &sc.addr_file {
+            std::fs::write(path, bound.to_string())?;
+        }
+        let report = server.run()?;
+        print_service_report(&report);
+        return Ok(());
+    }
 
     let mut submitted = 0usize;
-    match &jobs_file {
+    match &sc.jobs_file {
         Some(path) => {
             let text = std::fs::read_to_string(path)?;
-            for (lineno, line) in text.lines().enumerate() {
-                let line = line.trim();
-                if line.is_empty() || line.starts_with('#') {
-                    continue;
-                }
-                let mut tenant = None;
-                let mut job_args: Vec<String> = Vec::new();
-                for tok in line.split_whitespace() {
-                    match tok.split_once('=') {
-                        Some(("tenant", v)) => tenant = Some(v.to_string()),
-                        _ => job_args.push(tok.to_string()),
-                    }
-                }
-                let tenant = tenant.ok_or_else(|| {
-                    Error::Config(format!("{path}:{}: missing tenant=NAME", lineno + 1))
-                })?;
-                // CLI study options are the per-job defaults; the line's
-                // own options override them
-                let mut merged = study_args.clone();
-                merged.extend(job_args);
-                let cfg = StudyConfig::from_args(&merged)?;
-                svc.submit(StudyJob { tenant, cfg })?;
+            for spec in parse_jobs_file(&text, &sc.study_args)? {
+                let cfg = StudyConfig::from_args(&spec.args)?;
+                svc.submit(StudyJob { tenant: spec.tenant, cfg })?;
                 submitted += 1;
             }
         }
         None => {
-            for t in 0..tenants {
-                for _ in 0..jobs_per_tenant {
-                    svc.submit(StudyJob { tenant: format!("tenant-{t}"), cfg: base.clone() })?;
+            for t in 0..sc.tenants {
+                for _ in 0..sc.jobs_per_tenant {
+                    let job = StudyJob { tenant: format!("tenant-{t}"), cfg: sc.study.clone() };
+                    svc.submit(job)?;
                 }
-                submitted += jobs_per_tenant;
+                submitted += sc.jobs_per_tenant;
             }
         }
     }
     println!("submitted {submitted} studies; draining...");
     let report = svc.drain();
+    print_service_report(&report);
+    Ok(())
+}
 
+fn fmt_quota(quota_bytes: u64) -> String {
+    if quota_bytes == 0 {
+        "-".into()
+    } else {
+        (quota_bytes / (1024 * 1024)).to_string()
+    }
+}
+
+/// The drained service's bill, as printed by every serve mode.
+fn print_service_report(report: &rtf_reuse::serve::ServiceReport) {
     let mut t = Table::new(&[
         "tenant", "jobs", "failed", "launches", "cached", "hits", "misses", "hit %",
-        "served KiB", "exec wall",
+        "served KiB", "quota MiB", "resident KiB", "evict", "exec wall",
     ]);
     for ten in &report.tenants {
         t.row(&[
@@ -273,6 +327,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             ten.cache.misses.to_string(),
             format!("{:.1}", ten.cache.hit_rate() * 100.0),
             (ten.bytes_served / 1024).to_string(),
+            fmt_quota(ten.quota_bytes),
+            (ten.cache.resident_bytes / 1024).to_string(),
+            ten.cache.evictions.to_string(),
             fmt_secs(ten.exec_wall.as_secs_f64()),
         ]);
     }
@@ -284,6 +341,14 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         report.input_launches,
         fmt_secs(report.wall.as_secs_f64())
     );
+    if report.warm.scanned > 0 {
+        println!(
+            "warm-start: {} of {} scanned disk entries were pre-admitted ({} KiB)",
+            report.warm.admitted,
+            report.warm.scanned,
+            report.warm.admitted_bytes / 1024
+        );
+    }
     let g = report.cache;
     println!(
         "shared cache: {} state hits ({} disk), {} misses, {} metric hits, {:.1}% hit rate, \
@@ -300,7 +365,6 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         let reason = j.error.as_deref().unwrap_or("?");
         println!("job {} (tenant {}) FAILED: {reason}", j.job, j.tenant);
     }
-    Ok(())
 }
 
 fn cmd_simulate(args: &[String]) -> Result<()> {

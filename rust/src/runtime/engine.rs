@@ -352,7 +352,7 @@ impl PjrtEngine {
     ) -> Result<([xla::Literal; 3], bool)> {
         if let (Some(cache), Some(k)) = (self.cache.clone(), key) {
             loop {
-                match cache.lookup_or_claim(k, self.scope.as_deref()) {
+                match cache.lookup_or_claim(k, self.scope.as_ref()) {
                     StateClaim::Ready(planes) => {
                         let lits = self.lit_state(&planes)?;
                         self.timer.record(id, true, Duration::ZERO);
@@ -365,7 +365,7 @@ impl PjrtEngine {
                         claims.add(k);
                         let out = self.execute_task_lit_id(id, state, params)?;
                         let planes = self.plane_state(&out)?;
-                        cache.put_state_scoped(k, planes, self.scope.as_deref());
+                        cache.put_state_scoped(k, planes, self.scope.as_ref());
                         claims.settle(k);
                         return Ok((out, false));
                     }
@@ -430,7 +430,7 @@ impl PjrtEngine {
                             dup_of.push((i, src));
                             continue;
                         }
-                        match c.lookup_or_claim(k, scope.as_deref()) {
+                        match c.lookup_or_claim(k, scope.as_ref()) {
                             StateClaim::Ready(planes) => {
                                 let lits = self.lit_state(&planes)?;
                                 self.timer.record(id, true, Duration::ZERO);
@@ -471,7 +471,7 @@ impl PjrtEngine {
                 let per_lane = elapsed / exec.len() as u32;
                 for (&i, lits) in exec.iter().zip(results) {
                     if let (Some(c), Some(k)) = (&cache, keys[i]) {
-                        c.put_state_scoped(k, self.plane_state(&lits)?, scope.as_deref());
+                        c.put_state_scoped(k, self.plane_state(&lits)?, scope.as_ref());
                         if let Some(cl) = claims.as_mut() {
                             cl.settle(k);
                         }
@@ -494,7 +494,7 @@ impl PjrtEngine {
             let lits = out[src].as_ref().expect("dedup source resolved").0.clone();
             if let Some(c) = &cache {
                 // the sequential path would hit the just-published key
-                c.note_state_hit_scoped(scope.as_deref());
+                c.note_state_hit_scoped(scope.as_ref());
             }
             self.timer.record(id, true, Duration::ZERO);
             out[i] = Some((lits, true));
@@ -514,7 +514,7 @@ impl PjrtEngine {
     ) -> Result<([f32; 3], bool)> {
         if let (Some(cache), Some(k)) = (self.cache.clone(), key) {
             loop {
-                match cache.lookup_or_claim_metrics(k, self.scope.as_deref()) {
+                match cache.lookup_or_claim_metrics(k, self.scope.as_ref()) {
                     MetricsClaim::Ready(m) => {
                         self.timer.record(self.compare_id, true, Duration::ZERO);
                         return Ok((m, true));

@@ -1,0 +1,164 @@
+//! The in-tree wire client: submit a jobs file to a listening service,
+//! collect every result, optionally drain and fetch the bill.
+//!
+//! This is the reference implementation of the client side of
+//! `docs/SERVING.md` (and what `rtf-reuse serve submit=ADDR jobs=FILE`
+//! runs): one TCP connection, a `hello` handshake, pipelined `submit`s,
+//! then a blocking `result` per job in submission order. Third-party
+//! clients only need the protocol module's frame layout to
+//! interoperate.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+
+use crate::config::StudyConfig;
+use crate::{Error, Result};
+
+use super::protocol::{
+    read_frame, write_frame, Message, WireBill, WireJobReport, PROTOCOL_VERSION,
+};
+
+/// One job to submit: a tenant plus the study's `key=value` options
+/// (already merged with any client-side defaults).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JobSpec {
+    pub tenant: String,
+    pub args: Vec<String>,
+}
+
+/// What a client run brought back.
+#[derive(Clone, Debug, Default)]
+pub struct ClientOutcome {
+    /// One report per submitted job, submission order.
+    pub jobs: Vec<WireJobReport>,
+    /// The service's final bill, when the run drained it.
+    pub bill: Option<WireBill>,
+}
+
+/// Parse a jobs file: one job per line, `tenant=NAME [study options]`;
+/// blank lines and `#` comments are skipped. `defaults` (the CLI's
+/// residual study options) are prepended to every line's options, so a
+/// line's own `key=value` pairs override them. Each merged option list
+/// is validated client-side with [`StudyConfig::from_args`] — a typo
+/// fails fast here instead of round-tripping to the server.
+pub fn parse_jobs_file(text: &str, defaults: &[String]) -> Result<Vec<JobSpec>> {
+    let mut specs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut tenant = None;
+        let mut args: Vec<String> = defaults.to_vec();
+        for tok in line.split_whitespace() {
+            match tok.split_once('=') {
+                Some(("tenant", v)) => tenant = Some(v.to_string()),
+                _ => args.push(tok.to_string()),
+            }
+        }
+        let tenant = tenant.ok_or_else(|| {
+            Error::Config(format!("jobs file line {}: missing tenant=NAME", lineno + 1))
+        })?;
+        StudyConfig::from_args(&args)
+            .map_err(|e| Error::Config(format!("jobs file line {}: {e}", lineno + 1)))?;
+        specs.push(JobSpec { tenant, args });
+    }
+    Ok(specs)
+}
+
+/// Submit `specs` to the service at `addr`, wait for every result, and
+/// — when `drain` is set — drain the service and return its bill (the
+/// server exits afterwards). Any protocol-level `error` reply aborts
+/// the run as [`Error::Protocol`].
+pub fn run_jobs(addr: &str, specs: &[JobSpec], drain: bool) -> Result<ClientOutcome> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| Error::Protocol(format!("cannot connect to {addr}: {e}")))?;
+    let mut reader = BufReader::new(stream.try_clone().map_err(Error::Io)?);
+    let mut writer = BufWriter::new(stream);
+
+    let hello = Message::Hello { version: PROTOCOL_VERSION, role: "client".into() };
+    write_frame(&mut writer, &hello)?;
+    writer.flush().map_err(Error::Io)?;
+    match expect_reply(&mut reader)? {
+        Message::Hello { version, .. } if version == PROTOCOL_VERSION => {}
+        Message::Hello { version, .. } => {
+            return Err(Error::Protocol(format!(
+                "server speaks protocol v{version}, this client v{PROTOCOL_VERSION}"
+            )));
+        }
+        other => return Err(unexpected("hello", &other)),
+    }
+
+    let mut ids = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let submit = Message::Submit { tenant: spec.tenant.clone(), study: spec.args.clone() };
+        write_frame(&mut writer, &submit)?;
+        writer.flush().map_err(Error::Io)?;
+        match expect_reply(&mut reader)? {
+            Message::Accepted { job } => ids.push(job),
+            other => return Err(unexpected("accepted", &other)),
+        }
+    }
+
+    let mut jobs = Vec::with_capacity(ids.len());
+    for id in ids {
+        write_frame(&mut writer, &Message::Result { job: id })?;
+        writer.flush().map_err(Error::Io)?;
+        match expect_reply(&mut reader)? {
+            Message::JobDone(report) => jobs.push(*report),
+            other => return Err(unexpected("job-report", &other)),
+        }
+    }
+
+    let bill = if drain {
+        write_frame(&mut writer, &Message::Drain)?;
+        writer.flush().map_err(Error::Io)?;
+        match expect_reply(&mut reader)? {
+            Message::Bill(bill) => Some(*bill),
+            other => return Err(unexpected("bill", &other)),
+        }
+    } else {
+        None
+    };
+    Ok(ClientOutcome { jobs, bill })
+}
+
+/// Read the next frame, turning EOF and `error` replies into errors.
+fn expect_reply<R: std::io::BufRead>(reader: &mut R) -> Result<Message> {
+    match read_frame(reader)? {
+        Some(Message::Error { code, message }) => {
+            Err(Error::Protocol(format!("server refused [{code}]: {message}")))
+        }
+        Some(msg) => Ok(msg),
+        None => Err(Error::Protocol("server closed the connection".into())),
+    }
+}
+
+fn unexpected(wanted: &str, got: &Message) -> Error {
+    Error::Protocol(format!("expected `{wanted}`, got `{}`", got.type_name()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jobs_file_parses_defaults_and_overrides() {
+        let text = "\n# comment\ntenant=alice method=moat r=2\ntenant=bob seed=7\n";
+        let defaults = vec!["workers=2".to_string()];
+        let specs = parse_jobs_file(text, &defaults).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].tenant, "alice");
+        assert_eq!(specs[0].args, vec!["workers=2", "method=moat", "r=2"]);
+        assert_eq!(specs[1].tenant, "bob");
+        assert_eq!(specs[1].args, vec!["workers=2", "seed=7"]);
+    }
+
+    #[test]
+    fn jobs_file_rejects_bad_lines() {
+        assert!(parse_jobs_file("method=moat\n", &[]).is_err(), "missing tenant");
+        assert!(parse_jobs_file("tenant=a bogus=1\n", &[]).is_err(), "bad study option");
+        let err = parse_jobs_file("tenant=a\ntenant=b frob=1\n", &[]).unwrap_err();
+        assert!(err.to_string().contains("line 2"), "errors carry line numbers: {err}");
+    }
+}

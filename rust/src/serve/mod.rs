@@ -1,5 +1,6 @@
 //! The multi-tenant study service: one long-lived process serving many
-//! concurrent SA studies from ONE shared reuse cache.
+//! concurrent SA studies from ONE shared reuse cache — in-process or
+//! over TCP.
 //!
 //! Everything below this module runs *per study*; this module is the
 //! layer that makes the per-study machinery multi-tenant. A
@@ -8,27 +9,43 @@
 //! * one [`crate::cache::ReuseCache`] — every tenant's studies read and
 //!   populate the same content-addressed store, so one tenant's Morris
 //!   screen warms the next tenant's VBD refinement (the run-time
-//!   cross-study reuse of arXiv:1910.14548, lifted across tenants);
+//!   cross-study reuse of arXiv:1910.14548, lifted across tenants).
+//!   Tenants are byte-bounded: each tenant's counter scope may carry a
+//!   **memory-tier quota** ([`crate::cache::ScopedCounters::with_quota`])
+//!   that its owned entries cannot exceed, and at boot the cache can be
+//!   **warm-started** from the persistent disk tier
+//!   ([`crate::cache::ReuseCache::warm_start`]) so the first tenant of
+//!   the day already finds memory hits;
 //! * one *leader* [`crate::runtime::PjrtEngine`] — loaded and compiled
 //!   once, it builds the memoized per-workload [`StudyInputs`]
 //!   (synthetic tiles + reference masks), so concurrent tenants running
 //!   the same workload never duplicate the reference-chain launches;
 //! * a bounded pool of service workers pulling [`StudyJob`]s from a
-//!   submission queue, with **fair admission** (a per-tenant in-flight
-//!   cap keeps one noisy tenant from monopolizing the pool) and
-//!   **graceful drain** (no new submissions, queued work completes,
-//!   workers join).
+//!   submission queue with **weighted-fair admission** — a stride
+//!   scheduler serves tenants proportionally to their configured
+//!   priority weights (starvation-free; FIFO within a tenant) under a
+//!   per-tenant in-flight cap — and **graceful drain** (no new
+//!   submissions, queued work completes, workers join).
 //!
-//! Correctness under tenancy rests on three cache properties
-//! (see [`crate::cache`]): 128-bit content keys (collision margin for a
+//! The network layer on top ([`protocol`], [`server`], [`client`])
+//! turns the in-process queue into a service remote clients drive over
+//! TCP: `rtf-reuse serve listen=ADDR` accepts length-delimited JSONL
+//! frames (`submit` / `status` / `result` / `drain`), and `rtf-reuse
+//! serve submit=ADDR jobs=FILE` is the in-tree client. `docs/SERVING.md`
+//! is the operator's guide and the normative protocol spec.
+//!
+//! Correctness under tenancy rests on the cache properties of
+//! [`crate::cache`]: 128-bit content keys (collision margin for a
 //! process-lifetime key population), single-flight miss claims (two
-//! tenants missing the same key execute it once), and per-tenant
+//! tenants missing the same key execute it once), per-tenant
 //! [`crate::cache::ScopedCounters`] whose sums equal the global
-//! counters — the accounting the per-tenant bill is built from.
+//! counters — the accounting the per-tenant bill is built from — and
+//! quota eviction that charges the entry's *owning* scope.
 //!
-//! `rtf-reuse serve` is the CLI entry; `benches/multi_tenant.rs` is the
-//! acceptance benchmark (N identical tenants ⇒ aggregate backend
-//! launches ≤ 1.25× one cold tenant).
+//! `benches/multi_tenant.rs` (N identical tenants ⇒ aggregate backend
+//! launches ≤ 1.25× one cold tenant) and `benches/serve_warm.rs`
+//! (restart ⇒ first job already hits) are the acceptance benchmarks;
+//! `tests/serve_wire.rs` drives a loopback client/server end to end.
 //!
 //! Backend note: the leader engine is held in a `Mutex` across service
 //! threads, which requires the engine to be `Send`. The in-tree native
@@ -38,6 +55,12 @@
 //!
 //! [`StudyInputs`]: crate::driver::StudyInputs
 
+pub mod client;
+pub mod protocol;
+pub mod server;
 mod service;
 
+pub use client::{parse_jobs_file, run_jobs, ClientOutcome, JobSpec};
+pub use protocol::{WireBill, WireJobReport, WireTenantBill, PROTOCOL_VERSION};
+pub use server::WireServer;
 pub use service::{JobReport, ServeOptions, ServiceReport, StudyJob, StudyService, TenantReport};

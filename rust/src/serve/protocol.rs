@@ -1,0 +1,731 @@
+//! The serve wire protocol: versioned, length-delimited JSONL frames
+//! over TCP.
+//!
+//! `docs/SERVING.md` is the normative spec (frame layout, message
+//! grammar, error codes, version negotiation); this module is its
+//! implementation, shared by the server ([`crate::serve::server`]) and
+//! the in-tree client ([`crate::serve::client`]).
+//!
+//! # Frames
+//!
+//! Every message travels in one frame:
+//!
+//! ```text
+//! rtfp1 <len>\n<body>\n
+//! ```
+//!
+//! where `rtfp1` is the frame tag (protocol name + frame-format
+//! version), `<len>` is the decimal byte length of `<body>`, and
+//! `<body>` is exactly `len` bytes of UTF-8 JSON — one JSON object per
+//! frame (JSONL with an explicit length, so readers never have to scan
+//! for unescaped newlines). Frames larger than [`MAX_FRAME_BYTES`] are
+//! rejected. An incompatible frame format bumps the tag (`rtfp2`), so
+//! old readers fail fast at the header instead of misparsing bodies.
+//!
+//! # Messages
+//!
+//! Each body is an object with a `"type"` field. Clients send `hello`,
+//! `submit`, `status`, `result`, `drain`; servers reply `hello`,
+//! `accepted`, `status-report`, `job-report`, `bill`, `error`. The
+//! conversation starts with a `hello`/`hello` version handshake
+//! ([`PROTOCOL_VERSION`]); a server that cannot speak the client's
+//! version answers `error` with code [`codes::VERSION_MISMATCH`] and
+//! closes.
+//!
+//! # Encode/decode
+//!
+//! ```
+//! use rtf_reuse::serve::protocol::{decode_frame, encode_frame, Message};
+//!
+//! let msg = Message::Accepted { job: 7 };
+//! let bytes = encode_frame(&msg);
+//! assert_eq!(bytes, b"rtfp1 27\n{\"job\":7,\"type\":\"accepted\"}\n");
+//! let (back, consumed) = decode_frame(&bytes).unwrap();
+//! assert_eq!(back, msg);
+//! assert_eq!(consumed, bytes.len());
+//! ```
+
+use std::io::{BufRead, Write};
+
+use crate::cache::CacheStats;
+use crate::jsonx::{obj, Json};
+use crate::{Error, Result};
+
+use super::service::{JobReport, ServiceReport};
+
+/// Version negotiated by the `hello` handshake. Bump on any message-set
+/// or semantics change; the frame tag ([`FRAME_TAG`]) only bumps when
+/// the *frame layout* changes.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Frame tag: protocol name plus frame-format version.
+pub const FRAME_TAG: &str = "rtfp1";
+
+/// Upper bound on one frame's JSON body. A `job-report` for a large
+/// study carries its full `y` vector; 16 MiB bounds that at ~2M
+/// evaluations while keeping a malicious header harmless.
+pub const MAX_FRAME_BYTES: usize = 16 * 1024 * 1024;
+
+/// Error codes carried by [`Message::Error`] (spelled out in
+/// `docs/SERVING.md`).
+pub mod codes {
+    /// The frame header or body could not be parsed.
+    pub const BAD_FRAME: &str = "bad-frame";
+    /// A well-formed frame carried an unknown or out-of-place message.
+    pub const BAD_MESSAGE: &str = "bad-message";
+    /// The `hello` versions do not match.
+    pub const VERSION_MISMATCH: &str = "version-mismatch";
+    /// A `submit`'s study options did not parse.
+    pub const BAD_STUDY: &str = "bad-study";
+    /// The service is draining and admits no new work.
+    pub const DRAINING: &str = "draining";
+    /// A `result` asked for a job id the service never issued.
+    pub const UNKNOWN_JOB: &str = "unknown-job";
+    /// Unexpected server-side failure.
+    pub const INTERNAL: &str = "internal";
+}
+
+/// One wire message (see the module docs for who sends what).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Version handshake, first frame in each direction. `role` is
+    /// `"client"` or `"server"` (informational).
+    Hello { version: u32, role: String },
+    /// Submit one study under a tenant's account. `study` is the
+    /// `key=value` option list a job line would carry (parsed
+    /// server-side by `StudyConfig::from_args`; execution-environment
+    /// fields are pinned by the service).
+    Submit { tenant: String, study: Vec<String> },
+    /// The job was queued under this service-assigned id.
+    Accepted { job: u64 },
+    /// Ask for service-level queue counts.
+    Status,
+    /// Reply to [`Message::Status`].
+    StatusReport { queued: u64, running: u64, done: u64 },
+    /// Block until the job finishes, then receive its report.
+    Result { job: u64 },
+    /// Reply to [`Message::Result`]: the finished job's outcome.
+    JobDone(Box<WireJobReport>),
+    /// Drain the service: no new admissions, queued work completes, the
+    /// final bill comes back and the server exits.
+    Drain,
+    /// Reply to [`Message::Drain`]: the full per-tenant bill.
+    Bill(Box<WireBill>),
+    /// Any failure; `code` is one of [`codes`].
+    Error { code: String, message: String },
+}
+
+/// A finished job as reported over the wire (mirror of the in-process
+/// `JobReport`, durations flattened to seconds).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WireJobReport {
+    pub job: u64,
+    pub tenant: String,
+    /// `None` on success, the failure message otherwise.
+    pub error: Option<String>,
+    pub n_evals: u64,
+    /// Backend launches this job paid for.
+    pub launches: u64,
+    /// Task executions served from the shared cache.
+    pub cached_tasks: u64,
+    pub queue_wait_secs: f64,
+    pub exec_wall_secs: f64,
+    /// Per-evaluation scalar outputs (the SA estimator inputs).
+    pub y: Vec<f64>,
+}
+
+impl WireJobReport {
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+impl From<&JobReport> for WireJobReport {
+    fn from(j: &JobReport) -> Self {
+        WireJobReport {
+            job: j.job,
+            tenant: j.tenant.clone(),
+            error: j.error.clone(),
+            n_evals: j.n_evals as u64,
+            launches: j.launches,
+            cached_tasks: j.cached_tasks,
+            queue_wait_secs: j.queue_wait.as_secs_f64(),
+            exec_wall_secs: j.exec_wall.as_secs_f64(),
+            y: j.y.clone(),
+        }
+    }
+}
+
+/// One tenant's row of the drain bill. `cache` carries the tenant's
+/// scoped counters (hits/misses/inserts/evictions/resident bytes);
+/// `quota_bytes` is its memory-tier allowance (0 = unlimited).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WireTenantBill {
+    pub tenant: String,
+    pub jobs: u64,
+    pub failed: u64,
+    pub launches: u64,
+    pub cached_tasks: u64,
+    pub bytes_served: u64,
+    pub quota_bytes: u64,
+    pub queue_wait_secs: f64,
+    pub exec_wall_secs: f64,
+    pub cache: CacheStats,
+}
+
+/// The drained service's full bill: per-tenant rows plus the shared
+/// cache's global counters and the boot warm-start summary.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WireBill {
+    pub jobs: u64,
+    pub failed: u64,
+    /// Launches spent building shared study inputs (not billed to any
+    /// tenant).
+    pub input_launches: u64,
+    /// Input launches plus every job's launches — THE service-wide cost.
+    pub total_launches: u64,
+    pub wall_secs: f64,
+    pub tenants: Vec<WireTenantBill>,
+    /// The shared cache's global counters at drain time.
+    pub cache: CacheStats,
+    /// What the boot-time warm start scanned/admitted (zeros when off).
+    pub warm_scanned: u64,
+    pub warm_admitted: u64,
+    pub warm_admitted_bytes: u64,
+}
+
+impl From<&ServiceReport> for WireBill {
+    fn from(r: &ServiceReport) -> Self {
+        WireBill {
+            jobs: r.jobs.len() as u64,
+            failed: r.jobs.iter().filter(|j| !j.ok()).count() as u64,
+            input_launches: r.input_launches,
+            total_launches: r.total_launches(),
+            wall_secs: r.wall.as_secs_f64(),
+            tenants: r
+                .tenants
+                .iter()
+                .map(|t| WireTenantBill {
+                    tenant: t.tenant.clone(),
+                    jobs: t.jobs,
+                    failed: t.failed,
+                    launches: t.launches,
+                    cached_tasks: t.cached_tasks,
+                    bytes_served: t.bytes_served,
+                    quota_bytes: t.quota_bytes,
+                    queue_wait_secs: t.queue_wait.as_secs_f64(),
+                    exec_wall_secs: t.exec_wall.as_secs_f64(),
+                    cache: t.cache,
+                })
+                .collect(),
+            cache: r.cache,
+            warm_scanned: r.warm.scanned,
+            warm_admitted: r.warm.admitted,
+            warm_admitted_bytes: r.warm.admitted_bytes,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------
+
+/// Serialize one message into its complete frame
+/// (`rtfp1 <len>\n<body>\n`).
+pub fn encode_frame(msg: &Message) -> Vec<u8> {
+    let body = msg.to_json().to_string_compact();
+    let mut out = Vec::with_capacity(FRAME_TAG.len() + body.len() + 16);
+    out.extend_from_slice(FRAME_TAG.as_bytes());
+    out.push(b' ');
+    out.extend_from_slice(body.len().to_string().as_bytes());
+    out.push(b'\n');
+    out.extend_from_slice(body.as_bytes());
+    out.push(b'\n');
+    out
+}
+
+/// Decode one frame from the front of `bytes`, returning the message
+/// and the number of bytes consumed. Errors on a bad tag, an oversized
+/// or unparsable length, a truncated body, or an invalid message.
+///
+/// ```
+/// use rtf_reuse::serve::protocol::{decode_frame, encode_frame, Message};
+///
+/// let mut stream = encode_frame(&Message::Drain);
+/// stream.extend_from_slice(&encode_frame(&Message::Status));
+/// let (first, used) = decode_frame(&stream).unwrap();
+/// assert_eq!(first, Message::Drain);
+/// let (second, _) = decode_frame(&stream[used..]).unwrap();
+/// assert_eq!(second, Message::Status);
+/// assert!(decode_frame(b"rtfp9 2\n{}\n").is_err(), "wrong frame version");
+/// ```
+pub fn decode_frame(bytes: &[u8]) -> Result<(Message, usize)> {
+    let nl = bytes
+        .iter()
+        .position(|&b| b == b'\n')
+        .ok_or_else(|| Error::Protocol("frame header not terminated".into()))?;
+    let header = std::str::from_utf8(&bytes[..nl])
+        .map_err(|_| Error::Protocol("frame header is not UTF-8".into()))?;
+    // same CRLF tolerance as the stream reader (`read_frame`)
+    let len = parse_header(header.trim_end_matches('\r'))?;
+    let body_start = nl + 1;
+    let end = body_start + len + 1;
+    if bytes.len() < end {
+        return Err(Error::Protocol(format!(
+            "truncated frame: need {end} bytes, have {}",
+            bytes.len()
+        )));
+    }
+    if bytes[end - 1] != b'\n' {
+        return Err(Error::Protocol("frame body not newline-terminated".into()));
+    }
+    let msg = parse_body(&bytes[body_start..end - 1])?;
+    Ok((msg, end))
+}
+
+/// Write one message as a frame. Does not flush — callers flush once
+/// per logical round trip.
+pub fn write_frame<W: Write>(w: &mut W, msg: &Message) -> Result<()> {
+    w.write_all(&encode_frame(msg)).map_err(Error::Io)
+}
+
+/// Read one frame; `Ok(None)` on clean EOF at a frame boundary. I/O
+/// errors surface as [`Error::Io`], malformed frames as
+/// [`Error::Protocol`].
+pub fn read_frame<R: BufRead>(r: &mut R) -> Result<Option<Message>> {
+    let mut header = String::new();
+    let n = r.read_line(&mut header).map_err(Error::Io)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    let len = parse_header(header.trim_end_matches(['\r', '\n']))?;
+    let mut body = vec![0u8; len + 1];
+    r.read_exact(&mut body).map_err(Error::Io)?;
+    if body[len] != b'\n' {
+        return Err(Error::Protocol("frame body not newline-terminated".into()));
+    }
+    parse_body(&body[..len]).map(Some)
+}
+
+fn parse_header(header: &str) -> Result<usize> {
+    let rest = header.strip_prefix(FRAME_TAG).ok_or_else(|| {
+        Error::Protocol(format!("bad frame tag (expected `{FRAME_TAG}`): `{header}`"))
+    })?;
+    let rest = rest
+        .strip_prefix(' ')
+        .ok_or_else(|| Error::Protocol(format!("bad frame header: `{header}`")))?;
+    let len: usize = rest
+        .parse()
+        .map_err(|_| Error::Protocol(format!("bad frame length: `{rest}`")))?;
+    if len > MAX_FRAME_BYTES {
+        return Err(Error::Protocol(format!(
+            "frame of {len} bytes exceeds the {MAX_FRAME_BYTES}-byte limit"
+        )));
+    }
+    Ok(len)
+}
+
+fn parse_body(body: &[u8]) -> Result<Message> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| Error::Protocol("frame body is not UTF-8".into()))?;
+    let json = Json::parse(text).map_err(|e| Error::Protocol(format!("frame body: {e}")))?;
+    Message::from_json(&json)
+}
+
+// ---------------------------------------------------------------------
+// message <-> json
+// ---------------------------------------------------------------------
+
+fn ju(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+fn jf(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn js(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn field<'a>(o: &'a Json, key: &str) -> Result<&'a Json> {
+    o.get(key).ok_or_else(|| Error::Protocol(format!("missing field `{key}`")))
+}
+
+fn str_field(o: &Json, key: &str) -> Result<String> {
+    match field(o, key)?.as_str() {
+        Some(s) => Ok(s.to_string()),
+        None => Err(Error::Protocol(format!("field `{key}` must be a string"))),
+    }
+}
+
+fn u64_field(o: &Json, key: &str) -> Result<u64> {
+    match field(o, key)?.as_f64() {
+        Some(n) if n >= 0.0 => Ok(n as u64),
+        _ => Err(Error::Protocol(format!("field `{key}` must be a non-negative number"))),
+    }
+}
+
+fn f64_field(o: &Json, key: &str) -> Result<f64> {
+    field(o, key)?
+        .as_f64()
+        .ok_or_else(|| Error::Protocol(format!("field `{key}` must be a number")))
+}
+
+fn arr_field<'a>(o: &'a Json, key: &str) -> Result<&'a [Json]> {
+    field(o, key)?
+        .as_arr()
+        .ok_or_else(|| Error::Protocol(format!("field `{key}` must be an array")))
+}
+
+fn str_arr(o: &Json, key: &str) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    for v in arr_field(o, key)? {
+        match v.as_str() {
+            Some(s) => out.push(s.to_string()),
+            None => return Err(Error::Protocol(format!("field `{key}` must hold strings"))),
+        }
+    }
+    Ok(out)
+}
+
+fn f64_arr(o: &Json, key: &str) -> Result<Vec<f64>> {
+    let mut out = Vec::new();
+    for v in arr_field(o, key)? {
+        match v.as_f64() {
+            Some(n) => out.push(n),
+            None => return Err(Error::Protocol(format!("field `{key}` must hold numbers"))),
+        }
+    }
+    Ok(out)
+}
+
+fn opt_str_field(o: &Json, key: &str) -> Result<Option<String>> {
+    match o.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => match v.as_str() {
+            Some(s) => Ok(Some(s.to_string())),
+            None => Err(Error::Protocol(format!("field `{key}` must be a string"))),
+        },
+    }
+}
+
+fn cache_stats_json(s: &CacheStats) -> Json {
+    obj(vec![
+        ("hits", ju(s.hits)),
+        ("disk_hits", ju(s.disk_hits)),
+        ("misses", ju(s.misses)),
+        ("inserts", ju(s.inserts)),
+        ("evictions", ju(s.evictions)),
+        ("spilled", ju(s.spilled)),
+        ("metric_hits", ju(s.metric_hits)),
+        ("metric_misses", ju(s.metric_misses)),
+        ("resident_bytes", ju(s.resident_bytes)),
+        ("peak_bytes", ju(s.peak_bytes)),
+    ])
+}
+
+fn cache_stats_from_json(o: &Json) -> Result<CacheStats> {
+    Ok(CacheStats {
+        hits: u64_field(o, "hits")?,
+        disk_hits: u64_field(o, "disk_hits")?,
+        misses: u64_field(o, "misses")?,
+        inserts: u64_field(o, "inserts")?,
+        evictions: u64_field(o, "evictions")?,
+        spilled: u64_field(o, "spilled")?,
+        metric_hits: u64_field(o, "metric_hits")?,
+        metric_misses: u64_field(o, "metric_misses")?,
+        resident_bytes: u64_field(o, "resident_bytes")?,
+        peak_bytes: u64_field(o, "peak_bytes")?,
+    })
+}
+
+impl WireJobReport {
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("type", js("job-report")),
+            ("job", ju(self.job)),
+            ("tenant", js(&self.tenant)),
+            ("n_evals", ju(self.n_evals)),
+            ("launches", ju(self.launches)),
+            ("cached_tasks", ju(self.cached_tasks)),
+            ("queue_wait_secs", jf(self.queue_wait_secs)),
+            ("exec_wall_secs", jf(self.exec_wall_secs)),
+            ("y", Json::Arr(self.y.iter().map(|&v| Json::Num(v)).collect())),
+        ];
+        if let Some(e) = &self.error {
+            fields.push(("error", js(e)));
+        }
+        obj(fields)
+    }
+
+    fn from_json(o: &Json) -> Result<WireJobReport> {
+        Ok(WireJobReport {
+            job: u64_field(o, "job")?,
+            tenant: str_field(o, "tenant")?,
+            error: opt_str_field(o, "error")?,
+            n_evals: u64_field(o, "n_evals")?,
+            launches: u64_field(o, "launches")?,
+            cached_tasks: u64_field(o, "cached_tasks")?,
+            queue_wait_secs: f64_field(o, "queue_wait_secs")?,
+            exec_wall_secs: f64_field(o, "exec_wall_secs")?,
+            y: f64_arr(o, "y")?,
+        })
+    }
+}
+
+impl WireTenantBill {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("tenant", js(&self.tenant)),
+            ("jobs", ju(self.jobs)),
+            ("failed", ju(self.failed)),
+            ("launches", ju(self.launches)),
+            ("cached_tasks", ju(self.cached_tasks)),
+            ("bytes_served", ju(self.bytes_served)),
+            ("quota_bytes", ju(self.quota_bytes)),
+            ("queue_wait_secs", jf(self.queue_wait_secs)),
+            ("exec_wall_secs", jf(self.exec_wall_secs)),
+            ("cache", cache_stats_json(&self.cache)),
+        ])
+    }
+
+    fn from_json(o: &Json) -> Result<WireTenantBill> {
+        Ok(WireTenantBill {
+            tenant: str_field(o, "tenant")?,
+            jobs: u64_field(o, "jobs")?,
+            failed: u64_field(o, "failed")?,
+            launches: u64_field(o, "launches")?,
+            cached_tasks: u64_field(o, "cached_tasks")?,
+            bytes_served: u64_field(o, "bytes_served")?,
+            quota_bytes: u64_field(o, "quota_bytes")?,
+            queue_wait_secs: f64_field(o, "queue_wait_secs")?,
+            exec_wall_secs: f64_field(o, "exec_wall_secs")?,
+            cache: cache_stats_from_json(field(o, "cache")?)?,
+        })
+    }
+}
+
+impl WireBill {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("type", js("bill")),
+            ("jobs", ju(self.jobs)),
+            ("failed", ju(self.failed)),
+            ("input_launches", ju(self.input_launches)),
+            ("total_launches", ju(self.total_launches)),
+            ("wall_secs", jf(self.wall_secs)),
+            ("tenants", Json::Arr(self.tenants.iter().map(WireTenantBill::to_json).collect())),
+            ("cache", cache_stats_json(&self.cache)),
+            ("warm_scanned", ju(self.warm_scanned)),
+            ("warm_admitted", ju(self.warm_admitted)),
+            ("warm_admitted_bytes", ju(self.warm_admitted_bytes)),
+        ])
+    }
+
+    fn from_json(o: &Json) -> Result<WireBill> {
+        let mut tenants = Vec::new();
+        for t in arr_field(o, "tenants")? {
+            tenants.push(WireTenantBill::from_json(t)?);
+        }
+        Ok(WireBill {
+            jobs: u64_field(o, "jobs")?,
+            failed: u64_field(o, "failed")?,
+            input_launches: u64_field(o, "input_launches")?,
+            total_launches: u64_field(o, "total_launches")?,
+            wall_secs: f64_field(o, "wall_secs")?,
+            tenants,
+            cache: cache_stats_from_json(field(o, "cache")?)?,
+            warm_scanned: u64_field(o, "warm_scanned")?,
+            warm_admitted: u64_field(o, "warm_admitted")?,
+            warm_admitted_bytes: u64_field(o, "warm_admitted_bytes")?,
+        })
+    }
+}
+
+impl Message {
+    /// The wire `"type"` string of this message.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Message::Hello { .. } => "hello",
+            Message::Submit { .. } => "submit",
+            Message::Accepted { .. } => "accepted",
+            Message::Status => "status",
+            Message::StatusReport { .. } => "status-report",
+            Message::Result { .. } => "result",
+            Message::JobDone(_) => "job-report",
+            Message::Drain => "drain",
+            Message::Bill(_) => "bill",
+            Message::Error { .. } => "error",
+        }
+    }
+
+    /// Serialize as the frame-body JSON object.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Message::Hello { version, role } => obj(vec![
+                ("type", js("hello")),
+                ("version", ju(u64::from(*version))),
+                ("role", js(role)),
+            ]),
+            Message::Submit { tenant, study } => obj(vec![
+                ("type", js("submit")),
+                ("tenant", js(tenant)),
+                ("study", Json::Arr(study.iter().map(|s| js(s.as_str())).collect())),
+            ]),
+            Message::Accepted { job } => {
+                obj(vec![("type", js("accepted")), ("job", ju(*job))])
+            }
+            Message::Status => obj(vec![("type", js("status"))]),
+            Message::StatusReport { queued, running, done } => obj(vec![
+                ("type", js("status-report")),
+                ("queued", ju(*queued)),
+                ("running", ju(*running)),
+                ("done", ju(*done)),
+            ]),
+            Message::Result { job } => obj(vec![("type", js("result")), ("job", ju(*job))]),
+            Message::JobDone(report) => report.to_json(),
+            Message::Drain => obj(vec![("type", js("drain"))]),
+            Message::Bill(bill) => bill.to_json(),
+            Message::Error { code, message } => obj(vec![
+                ("type", js("error")),
+                ("code", js(code)),
+                ("message", js(message)),
+            ]),
+        }
+    }
+
+    /// Parse a frame-body JSON object back into a message.
+    pub fn from_json(o: &Json) -> Result<Message> {
+        match str_field(o, "type")?.as_str() {
+            "hello" => Ok(Message::Hello {
+                version: u64_field(o, "version")? as u32,
+                role: str_field(o, "role").unwrap_or_default(),
+            }),
+            "submit" => Ok(Message::Submit {
+                tenant: str_field(o, "tenant")?,
+                study: str_arr(o, "study")?,
+            }),
+            "accepted" => Ok(Message::Accepted { job: u64_field(o, "job")? }),
+            "status" => Ok(Message::Status),
+            "status-report" => Ok(Message::StatusReport {
+                queued: u64_field(o, "queued")?,
+                running: u64_field(o, "running")?,
+                done: u64_field(o, "done")?,
+            }),
+            "result" => Ok(Message::Result { job: u64_field(o, "job")? }),
+            "job-report" => Ok(Message::JobDone(Box::new(WireJobReport::from_json(o)?))),
+            "drain" => Ok(Message::Drain),
+            "bill" => Ok(Message::Bill(Box::new(WireBill::from_json(o)?))),
+            "error" => Ok(Message::Error {
+                code: str_field(o, "code")?,
+                message: str_field(o, "message")?,
+            }),
+            other => Err(Error::Protocol(format!("unknown message type `{other}`"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Message) {
+        let bytes = encode_frame(&msg);
+        let (back, used) = decode_frame(&bytes).expect("frame decodes");
+        assert_eq!(used, bytes.len(), "whole frame consumed");
+        assert_eq!(back, msg);
+        // and through the streaming reader
+        let mut r = std::io::BufReader::new(&bytes[..]);
+        assert_eq!(read_frame(&mut r).unwrap(), Some(msg));
+        assert_eq!(read_frame(&mut r).unwrap(), None, "clean EOF after the frame");
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        roundtrip(Message::Hello { version: PROTOCOL_VERSION, role: "client".into() });
+        roundtrip(Message::Submit {
+            tenant: "alice".into(),
+            study: vec!["method=moat".into(), "r=2".into()],
+        });
+        roundtrip(Message::Accepted { job: 42 });
+        roundtrip(Message::Status);
+        roundtrip(Message::StatusReport { queued: 3, running: 2, done: 7 });
+        roundtrip(Message::Result { job: 42 });
+        roundtrip(Message::JobDone(Box::new(WireJobReport {
+            job: 42,
+            tenant: "alice".into(),
+            error: None,
+            n_evals: 16,
+            launches: 120,
+            cached_tasks: 40,
+            queue_wait_secs: 0.25,
+            exec_wall_secs: 1.5,
+            y: vec![0.5, 0.25],
+        })));
+        roundtrip(Message::JobDone(Box::new(WireJobReport {
+            error: Some("panic: boom".into()),
+            ..WireJobReport::default()
+        })));
+        roundtrip(Message::Drain);
+        roundtrip(Message::Bill(Box::new(WireBill {
+            jobs: 2,
+            total_launches: 99,
+            tenants: vec![WireTenantBill {
+                tenant: "alice".into(),
+                jobs: 1,
+                launches: 90,
+                quota_bytes: 1 << 20,
+                cache: CacheStats { hits: 5, misses: 4, ..CacheStats::default() },
+                ..WireTenantBill::default()
+            }],
+            warm_admitted: 12,
+            ..WireBill::default()
+        })));
+        roundtrip(Message::Error { code: codes::DRAINING.into(), message: "late".into() });
+    }
+
+    #[test]
+    fn malformed_frames_are_rejected() {
+        assert!(decode_frame(b"").is_err(), "empty input has no header");
+        assert!(decode_frame(b"rtfp1 5").is_err(), "unterminated header");
+        assert!(decode_frame(b"http1 2\n{}\n").is_err(), "foreign tag");
+        assert!(decode_frame(b"rtfp2 2\n{}\n").is_err(), "future frame version");
+        assert!(decode_frame(b"rtfp1 xx\n{}\n").is_err(), "non-numeric length");
+        assert!(decode_frame(b"rtfp1 999\n{}\n").is_err(), "truncated body");
+        assert!(decode_frame(b"rtfp1 2\n{}X").is_err(), "missing body terminator");
+        assert!(decode_frame(b"rtfp1 2\n[]\n").is_err(), "body must be a typed object");
+        let huge = format!("rtfp1 {}\n", MAX_FRAME_BYTES + 1);
+        assert!(decode_frame(huge.as_bytes()).is_err(), "oversized length rejected early");
+    }
+
+    #[test]
+    fn crlf_after_the_header_is_tolerated_by_both_decoders() {
+        let frame = b"rtfp1 16\r\n{\"type\":\"drain\"}\n";
+        let (msg, used) = decode_frame(frame).unwrap();
+        assert_eq!(msg, Message::Drain);
+        assert_eq!(used, frame.len());
+        let mut r = std::io::BufReader::new(&frame[..]);
+        assert_eq!(read_frame(&mut r).unwrap(), Some(Message::Drain));
+    }
+
+    #[test]
+    fn unknown_fields_are_tolerated_unknown_types_are_not() {
+        let (msg, _) =
+            decode_frame(b"rtfp1 38\n{\"type\":\"accepted\",\"job\":1,\"new\":true}\n").unwrap();
+        assert_eq!(msg, Message::Accepted { job: 1 });
+        assert!(decode_frame(b"rtfp1 17\n{\"type\":\"gossip\"}\n").is_err());
+    }
+
+    #[test]
+    fn type_names_match_the_spec() {
+        for (msg, name) in [
+            (Message::Status, "status"),
+            (Message::Drain, "drain"),
+            (Message::Accepted { job: 0 }, "accepted"),
+        ] {
+            assert_eq!(msg.type_name(), name);
+            assert_eq!(msg.to_json().get("type").and_then(|t| t.as_str()), Some(name));
+        }
+    }
+}

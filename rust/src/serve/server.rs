@@ -1,0 +1,176 @@
+//! The TCP side of the service: a [`WireServer`] accepts connections,
+//! speaks the frame protocol of [`super::protocol`], and translates
+//! messages into [`StudyService`] calls.
+//!
+//! One handler thread per connection; the service itself is shared
+//! behind an `Arc`, so any number of clients can submit and wait
+//! concurrently — admission fairness, quotas and accounting all happen
+//! in the service layer, exactly as for in-process submission. A
+//! `drain` message from any client drains the service (queued work
+//! completes), answers with the final `bill`, and shuts the listener
+//! down; [`WireServer::run`] then returns the same [`ServiceReport`]
+//! the in-process path gets, so the operator's exit report is identical
+//! either way.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::StudyConfig;
+use crate::{Error, Result};
+
+use super::protocol::{
+    codes, read_frame, write_frame, Message, WireBill, WireJobReport, PROTOCOL_VERSION,
+};
+use super::service::{ServiceReport, StudyJob, StudyService};
+
+/// A bound-but-not-yet-serving wire server. [`WireServer::bind`] then
+/// [`WireServer::run`]; [`WireServer::local_addr`] in between is how
+/// callers learn an OS-assigned port (`listen=127.0.0.1:0`).
+pub struct WireServer {
+    svc: Arc<StudyService>,
+    listener: TcpListener,
+    shutdown: Arc<AtomicBool>,
+    report: Arc<Mutex<Option<ServiceReport>>>,
+}
+
+impl WireServer {
+    /// Bind the listening socket (the service keeps running either way;
+    /// binding only fails on address errors).
+    pub fn bind(svc: StudyService, addr: &str) -> Result<WireServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Protocol(format!("cannot listen on {addr}: {e}")))?;
+        Ok(WireServer {
+            svc: Arc::new(svc),
+            listener,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            report: Arc::new(Mutex::new(None)),
+        })
+    }
+
+    /// The actually bound address (resolves port 0).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().map_err(Error::Io)
+    }
+
+    /// The shared service (diagnostics; submission still works through
+    /// it while the server runs).
+    pub fn service(&self) -> &Arc<StudyService> {
+        &self.svc
+    }
+
+    /// Serve connections until a client drains the service, then return
+    /// the drained [`ServiceReport`]. Handler threads for connections
+    /// that are still open when the drain completes are left to exit on
+    /// their own (they can only observe a drained service); the process
+    /// typically exits right after this returns.
+    pub fn run(self) -> Result<ServiceReport> {
+        let self_addr = self.local_addr()?;
+        for conn in self.listener.incoming() {
+            if self.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            let Ok(stream) = conn else { continue };
+            let svc = Arc::clone(&self.svc);
+            let shutdown = Arc::clone(&self.shutdown);
+            let report = Arc::clone(&self.report);
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, svc, shutdown, report, self_addr);
+            });
+        }
+        let report = self.report.lock().unwrap().take();
+        report.ok_or_else(|| Error::Protocol("listener stopped without a drain".into()))
+    }
+}
+
+/// Serve one connection to completion. I/O errors end the connection
+/// silently (the peer is gone); protocol errors are answered with an
+/// `error` frame first when the socket still writes.
+fn handle_conn(
+    stream: TcpStream,
+    svc: Arc<StudyService>,
+    shutdown: Arc<AtomicBool>,
+    report: Arc<Mutex<Option<ServiceReport>>>,
+    self_addr: SocketAddr,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone().map_err(Error::Io)?);
+    let mut writer = BufWriter::new(stream);
+
+    // hello/hello version handshake, first frame in each direction
+    match read_frame(&mut reader) {
+        Ok(Some(Message::Hello { version, .. })) if version == PROTOCOL_VERSION => {
+            let hello = Message::Hello { version: PROTOCOL_VERSION, role: "server".into() };
+            write_frame(&mut writer, &hello)?;
+            writer.flush().map_err(Error::Io)?;
+        }
+        Ok(Some(Message::Hello { version, .. })) => {
+            let msg = format!("server speaks v{PROTOCOL_VERSION}, client sent v{version}");
+            return refuse(&mut writer, codes::VERSION_MISMATCH, &msg);
+        }
+        Ok(Some(other)) => {
+            let msg = format!("expected hello, got {}", other.type_name());
+            return refuse(&mut writer, codes::BAD_MESSAGE, &msg);
+        }
+        Ok(None) => return Ok(()), // connected and left
+        Err(e) => return refuse(&mut writer, codes::BAD_FRAME, &e.to_string()),
+    }
+
+    loop {
+        let msg = match read_frame(&mut reader) {
+            Ok(Some(m)) => m,
+            Ok(None) => return Ok(()), // clean close
+            Err(Error::Io(_)) => return Ok(()),
+            Err(e) => return refuse(&mut writer, codes::BAD_FRAME, &e.to_string()),
+        };
+        let reply = match msg {
+            Message::Submit { tenant, study } => match StudyConfig::from_args(&study) {
+                Ok(cfg) => match svc.submit(StudyJob { tenant, cfg }) {
+                    Ok(job) => Message::Accepted { job },
+                    Err(e) => error_msg(codes::DRAINING, &e.to_string()),
+                },
+                Err(e) => error_msg(codes::BAD_STUDY, &e.to_string()),
+            },
+            Message::Status => Message::StatusReport {
+                queued: svc.queued() as u64,
+                running: svc.in_flight() as u64,
+                done: svc.completed() as u64,
+            },
+            Message::Result { job } => match svc.wait_job(job) {
+                Some(done) => Message::JobDone(Box::new(WireJobReport::from(&done))),
+                None => error_msg(codes::UNKNOWN_JOB, &format!("no job with id {job}")),
+            },
+            Message::Drain => {
+                // drain blocks until every queued/in-flight study is
+                // done, then the bill goes out before the listener stops
+                let service_report = svc.drain();
+                let bill = Message::Bill(Box::new(WireBill::from(&service_report)));
+                *report.lock().unwrap() = Some(service_report);
+                // best-effort bill delivery: the listener must stop even
+                // if this client went away while the drain ran
+                let sent = write_frame(&mut writer, &bill)
+                    .and_then(|()| writer.flush().map_err(Error::Io));
+                shutdown.store(true, Ordering::Release);
+                // wake the accept loop so it observes the flag
+                let _ = TcpStream::connect(self_addr);
+                return sent;
+            }
+            other => {
+                let msg = format!("unexpected message `{}` from a client", other.type_name());
+                error_msg(codes::BAD_MESSAGE, &msg)
+            }
+        };
+        write_frame(&mut writer, &reply)?;
+        writer.flush().map_err(Error::Io)?;
+    }
+}
+
+fn error_msg(code: &str, message: &str) -> Message {
+    Message::Error { code: code.into(), message: message.into() }
+}
+
+/// Send one `error` frame and end the connection.
+fn refuse<W: Write>(writer: &mut W, code: &str, message: &str) -> Result<()> {
+    write_frame(writer, &error_msg(code, message))?;
+    writer.flush().map_err(Error::Io)
+}

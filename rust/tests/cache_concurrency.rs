@@ -217,10 +217,10 @@ fn scoped_tenants_partition_the_global_counters_under_contention() {
             s.spawn(move || {
                 for i in 0..64u64 {
                     let key = Key::from(i % 48); // overlapping ranges
-                    match cache.lookup_or_claim(key, Some(scope.as_ref())) {
+                    match cache.lookup_or_claim(key, Some(scope)) {
                         StateClaim::Ready(_) => {}
                         StateClaim::Claimed => {
-                            cache.put_state_scoped(key, state(t as f32), Some(scope.as_ref()))
+                            cache.put_state_scoped(key, state(t as f32), Some(scope))
                         }
                         StateClaim::InFlight => {
                             cache.wait_for_flight(key);

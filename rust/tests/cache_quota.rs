@@ -1,0 +1,175 @@
+//! Per-tenant quota enforcement under contention, eviction-owner
+//! accounting, and disk warm-start — at the cache layer and through the
+//! full multi-tenant service.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use rtf_reuse::cache::{CacheConfig, Key, ReuseCache, ScopedCounters};
+use rtf_reuse::config::{SaMethod, StudyConfig};
+use rtf_reuse::data::Plane;
+use rtf_reuse::merging::FineAlgorithm;
+use rtf_reuse::serve::{ServeOptions, StudyJob, StudyService};
+
+fn state(v: f32) -> [Plane; 3] {
+    [Plane::filled(v, 8, 8), Plane::filled(v, 8, 8), Plane::filled(v, 8, 8)]
+}
+
+/// Bytes of one `state()`: 3 planes x 64 px x 4 B.
+const S: u64 = 3 * 64 * 4;
+
+#[test]
+fn quota_holds_under_concurrent_inserts() {
+    // four threads hammer one tenant scope with distinct keys; whenever
+    // all puts have returned, the tenant is within its quota — over-
+    // admission was evicted from its own entries, not anyone else's
+    let cache = Arc::new(ReuseCache::with_capacity(1 << 22));
+    let tenant = Arc::new(ScopedCounters::with_quota(4 * S));
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let cache = &cache;
+            let tenant = &tenant;
+            s.spawn(move || {
+                for i in 0..32u64 {
+                    cache.put_state_scoped(Key::from(t * 100 + i), state(t as f32), Some(tenant));
+                }
+            });
+        }
+    });
+    assert!(
+        tenant.resident_bytes() <= 4 * S,
+        "quota exceeded: {} > {}",
+        tenant.resident_bytes(),
+        4 * S
+    );
+    // the books balance: the only owner's residency is the cache's
+    assert_eq!(tenant.resident_bytes(), cache.resident_bytes() as u64);
+    let st = cache.stats();
+    assert_eq!(tenant.evictions(), st.evictions, "every eviction was charged to the owner");
+    assert_eq!(st.inserts, 128, "distinct keys all count as inserts");
+    assert!(st.evictions >= 128 - 4, "over-quota admissions were evicted again");
+}
+
+#[test]
+fn contended_eviction_charges_the_owning_scope() {
+    // two tenants share one shard whose byte bound forces cross-tenant
+    // evictions; whatever the interleaving, the owner ledgers balance
+    let cache = Arc::new(ReuseCache::new(CacheConfig {
+        capacity_bytes: 8 * S as usize,
+        shards: 1,
+        ..CacheConfig::default()
+    }));
+    let a = Arc::new(ScopedCounters::default());
+    let b = Arc::new(ScopedCounters::default());
+    std::thread::scope(|s| {
+        for (t, scope) in [(0u64, &a), (1u64, &b)] {
+            let cache = &cache;
+            s.spawn(move || {
+                for i in 0..64u64 {
+                    cache.put_state_scoped(Key::from(t * 1000 + i), state(i as f32), Some(scope));
+                }
+            });
+        }
+    });
+    let st = cache.stats();
+    assert_eq!(
+        a.resident_bytes() + b.resident_bytes(),
+        st.resident_bytes,
+        "scoped residency partitions the global gauge"
+    );
+    assert_eq!(
+        a.evictions() + b.evictions(),
+        st.evictions,
+        "every eviction is charged to exactly one owner"
+    );
+    assert_eq!(a.stats().inserts + b.stats().inserts, st.inserts);
+    assert!(st.resident_bytes <= 8 * S, "the shard byte bound held");
+}
+
+fn small_cfg() -> StudyConfig {
+    StudyConfig {
+        method: SaMethod::Moat { r: 1 }, // 16 evaluations
+        algorithm: FineAlgorithm::Rtma(7),
+        ..StudyConfig::default()
+    }
+}
+
+fn service_opts() -> ServeOptions {
+    ServeOptions {
+        service_workers: 1,
+        tenant_inflight_cap: 1,
+        study_workers: 2,
+        cache: CacheConfig { capacity_bytes: 512 * 1024 * 1024, ..CacheConfig::default() },
+        ..ServeOptions::default()
+    }
+}
+
+#[test]
+fn service_enforces_tenant_quotas_end_to_end() {
+    // a tight quota (2 MiB ~ a handful of 128x128 states) cannot be
+    // exceeded even while a real study hammers the cache; the job still
+    // completes, spilling its own LRU entries instead
+    let quota: u64 = 2 * 1024 * 1024;
+    let opts = ServeOptions { tenant_quota_bytes: Some(quota), ..service_opts() };
+    let svc = StudyService::start(opts).expect("service starts");
+    svc.submit(StudyJob { tenant: "capped".into(), cfg: small_cfg() }).unwrap();
+    let report = svc.drain();
+    assert!(report.jobs.iter().all(|j| j.ok()), "jobs: {:?}", report.jobs);
+    let t = report.tenant("capped").expect("tenant report");
+    assert_eq!(t.quota_bytes, quota);
+    assert!(
+        t.cache.resident_bytes <= quota,
+        "tenant resident {} exceeds its quota {quota}",
+        t.cache.resident_bytes
+    );
+    assert!(t.cache.evictions > 0, "a tight quota must have evicted something");
+    // scoped sums still equal the globals with quotas active
+    let sums = report.scoped_totals();
+    assert_eq!(sums.hits, report.cache.hits);
+    assert_eq!(sums.misses, report.cache.misses);
+    assert_eq!(sums.inserts, report.cache.inserts);
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("rtf-quota-{tag}-{}", std::process::id()))
+}
+
+#[test]
+fn warm_start_makes_the_first_job_of_a_restarted_service_warm() {
+    let dir = temp_dir("warm");
+    let _ = std::fs::remove_dir_all(&dir);
+    let disk_cache = CacheConfig {
+        capacity_bytes: 512 * 1024 * 1024,
+        spill_dir: Some(dir.clone()),
+        ..CacheConfig::default()
+    };
+
+    // day 1: a cold service persists its work to the disk tier
+    let opts = ServeOptions { cache: disk_cache.clone(), ..service_opts() };
+    let day1 = StudyService::start(opts).expect("service starts");
+    day1.submit(StudyJob { tenant: "early".into(), cfg: small_cfg() }).unwrap();
+    let cold = day1.drain();
+    assert!(cold.jobs[0].ok(), "cold job: {:?}", cold.jobs[0].error);
+    assert_eq!(cold.warm.admitted, 0, "warm start was off on day 1");
+    assert!(cold.cache.spilled > 0, "the disk tier was populated");
+
+    // day 2: a fresh process warm-starts from the same tier; its first
+    // job is served memory hits and pays far fewer launches
+    let opts = ServeOptions { cache: disk_cache, warm_start: true, ..service_opts() };
+    let day2 = StudyService::start(opts).expect("service restarts");
+    assert!(day2.warm_start_report().admitted > 0, "warm start admitted disk entries");
+    day2.submit(StudyJob { tenant: "early".into(), cfg: small_cfg() }).unwrap();
+    let warm = day2.drain();
+    assert!(warm.jobs[0].ok(), "warm job: {:?}", warm.jobs[0].error);
+    assert_eq!(warm.warm, day2.warm_start_report());
+    assert!(warm.cache.hits > 0, "the first job of the day found memory hits");
+    assert!(
+        warm.jobs[0].launches < cold.jobs[0].launches,
+        "warm-started job must reuse: cold {} vs warm {}",
+        cold.jobs[0].launches,
+        warm.jobs[0].launches
+    );
+    // identical study, identical results across the restart
+    assert_eq!(cold.jobs[0].y, warm.jobs[0].y);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,236 @@
+//! Loopback end-to-end tests of the serve wire protocol: a real
+//! `StudyService` behind a real TCP listener, driven by the in-tree
+//! client — reuse across the wire, per-tenant accounting in the drain
+//! bill, and the protocol's error paths.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::thread;
+
+use rtf_reuse::cache::CacheConfig;
+use rtf_reuse::serve::protocol::{self, codes, Message};
+use rtf_reuse::serve::{
+    run_jobs, JobSpec, ServeOptions, ServiceReport, StudyService, WireServer, PROTOCOL_VERSION,
+};
+
+fn serve_opts(service_workers: usize) -> ServeOptions {
+    ServeOptions {
+        service_workers,
+        tenant_inflight_cap: 1,
+        study_workers: 2,
+        cache: CacheConfig { capacity_bytes: 512 * 1024 * 1024, ..CacheConfig::default() },
+        ..ServeOptions::default()
+    }
+}
+
+/// Bind a loopback server and run it on a background thread; returns
+/// the address and the join handle yielding the drained report.
+fn spawn_server(opts: ServeOptions) -> (String, thread::JoinHandle<ServiceReport>) {
+    let svc = StudyService::start(opts).expect("service starts");
+    let server = WireServer::bind(svc, "127.0.0.1:0").expect("bind loopback");
+    let addr = server.local_addr().expect("bound address").to_string();
+    let handle = thread::spawn(move || server.run().expect("server drains cleanly"));
+    (addr, handle)
+}
+
+fn study_args() -> Vec<String> {
+    vec!["method=moat".into(), "r=1".into()]
+}
+
+#[test]
+fn two_tenants_over_tcp_share_the_cache_and_drain_a_bill() {
+    let (addr, server) = spawn_server(serve_opts(1));
+    let specs = vec![
+        JobSpec { tenant: "alice".into(), args: study_args() },
+        JobSpec { tenant: "bob".into(), args: study_args() },
+    ];
+    let outcome = run_jobs(&addr, &specs, true).expect("client run succeeds");
+
+    // both results came back, in submission order, successfully
+    assert_eq!(outcome.jobs.len(), 2);
+    assert!(outcome.jobs.iter().all(|j| j.ok()), "jobs: {:?}", outcome.jobs);
+    assert_eq!(outcome.jobs[0].tenant, "alice");
+    assert_eq!(outcome.jobs[1].tenant, "bob");
+    // identical studies agree bit-for-bit across the wire
+    assert_eq!(outcome.jobs[0].y, outcome.jobs[1].y);
+    // reuse across the wire: the second tenant rides the first's cache
+    assert!(
+        outcome.jobs[1].launches < outcome.jobs[0].launches,
+        "bob must reuse alice's work: alice {} vs bob {}",
+        outcome.jobs[0].launches,
+        outcome.jobs[1].launches
+    );
+    assert!(outcome.jobs[1].cached_tasks > 0);
+
+    // the drain bill is complete and internally consistent
+    let bill = outcome.bill.expect("drain returns the bill");
+    assert_eq!(bill.jobs, 2);
+    assert_eq!(bill.failed, 0);
+    assert_eq!(bill.tenants.len(), 2);
+    let job_launches: u64 = outcome.jobs.iter().map(|j| j.launches).sum();
+    assert_eq!(bill.total_launches, bill.input_launches + job_launches);
+    // per-tenant scoped counters sum exactly to the shared globals
+    let (hits, misses, inserts) = bill.tenants.iter().fold((0, 0, 0), |acc, t| {
+        (acc.0 + t.cache.hits, acc.1 + t.cache.misses, acc.2 + t.cache.inserts)
+    });
+    assert_eq!(hits, bill.cache.hits);
+    assert_eq!(misses, bill.cache.misses);
+    assert_eq!(inserts, bill.cache.inserts);
+
+    // the server side drained with the same totals
+    let report = server.join().expect("server thread joins");
+    assert_eq!(report.jobs.len(), 2);
+    assert_eq!(report.total_launches(), bill.total_launches);
+}
+
+#[test]
+fn protocol_errors_are_reported_not_fatal() {
+    let (addr, server) = spawn_server(serve_opts(1));
+
+    // a client speaking a future protocol version is refused
+    {
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        let hello = Message::Hello { version: PROTOCOL_VERSION + 1, role: "client".into() };
+        protocol::write_frame(&mut writer, &hello).unwrap();
+        writer.flush().unwrap();
+        match protocol::read_frame(&mut reader).unwrap() {
+            Some(Message::Error { code, .. }) => assert_eq!(code, codes::VERSION_MISMATCH),
+            other => panic!("expected version-mismatch error, got {other:?}"),
+        }
+    }
+
+    // garbage on the wire gets a bad-frame error, not a hang
+    {
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        writer.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        writer.flush().unwrap();
+        match protocol::read_frame(&mut reader).unwrap() {
+            Some(Message::Error { code, .. }) => assert_eq!(code, codes::BAD_FRAME),
+            other => panic!("expected bad-frame error, got {other:?}"),
+        }
+    }
+
+    // a good connection: status works, unknown job ids are refused,
+    // and drain shuts the service down cleanly
+    {
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        let hello = Message::Hello { version: PROTOCOL_VERSION, role: "client".into() };
+        protocol::write_frame(&mut writer, &hello).unwrap();
+        writer.flush().unwrap();
+        assert!(matches!(
+            protocol::read_frame(&mut reader).unwrap(),
+            Some(Message::Hello { version: PROTOCOL_VERSION, .. })
+        ));
+
+        protocol::write_frame(&mut writer, &Message::Status).unwrap();
+        writer.flush().unwrap();
+        match protocol::read_frame(&mut reader).unwrap() {
+            Some(Message::StatusReport { queued, running, done }) => {
+                assert_eq!((queued, running, done), (0, 0, 0));
+            }
+            other => panic!("expected status-report, got {other:?}"),
+        }
+
+        protocol::write_frame(&mut writer, &Message::Result { job: 999 }).unwrap();
+        writer.flush().unwrap();
+        match protocol::read_frame(&mut reader).unwrap() {
+            Some(Message::Error { code, .. }) => assert_eq!(code, codes::UNKNOWN_JOB),
+            other => panic!("expected unknown-job error, got {other:?}"),
+        }
+
+        protocol::write_frame(&mut writer, &Message::Drain).unwrap();
+        writer.flush().unwrap();
+        match protocol::read_frame(&mut reader).unwrap() {
+            Some(Message::Bill(bill)) => assert_eq!(bill.jobs, 0),
+            other => panic!("expected the bill, got {other:?}"),
+        }
+    }
+    let report = server.join().expect("server thread joins");
+    assert_eq!(report.jobs.len(), 0);
+}
+
+#[test]
+fn submissions_with_bad_studies_are_refused_but_the_job_stream_continues() {
+    let (addr, server) = spawn_server(serve_opts(1));
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = BufWriter::new(stream);
+    let hello = Message::Hello { version: PROTOCOL_VERSION, role: "client".into() };
+    protocol::write_frame(&mut writer, &hello).unwrap();
+    writer.flush().unwrap();
+    protocol::read_frame(&mut reader).unwrap();
+
+    // a submit whose study options do not parse is refused with
+    // bad-study; the connection stays usable
+    let bad = Message::Submit { tenant: "eve".into(), study: vec!["bogus=1".into()] };
+    protocol::write_frame(&mut writer, &bad).unwrap();
+    writer.flush().unwrap();
+    match protocol::read_frame(&mut reader).unwrap() {
+        Some(Message::Error { code, .. }) => assert_eq!(code, codes::BAD_STUDY),
+        other => panic!("expected bad-study error, got {other:?}"),
+    }
+
+    // a good submit on the same connection still works end to end
+    let good = Message::Submit { tenant: "alice".into(), study: study_args() };
+    protocol::write_frame(&mut writer, &good).unwrap();
+    writer.flush().unwrap();
+    let job = match protocol::read_frame(&mut reader).unwrap() {
+        Some(Message::Accepted { job }) => job,
+        other => panic!("expected accepted, got {other:?}"),
+    };
+    protocol::write_frame(&mut writer, &Message::Result { job }).unwrap();
+    writer.flush().unwrap();
+    match protocol::read_frame(&mut reader).unwrap() {
+        Some(Message::JobDone(report)) => {
+            assert!(report.ok(), "job failed: {:?}", report.error);
+            assert_eq!(report.job, job);
+            assert!(report.launches > 0);
+        }
+        other => panic!("expected job-report, got {other:?}"),
+    }
+
+    protocol::write_frame(&mut writer, &Message::Drain).unwrap();
+    writer.flush().unwrap();
+    match protocol::read_frame(&mut reader).unwrap() {
+        Some(Message::Bill(bill)) => {
+            assert_eq!(bill.jobs, 1);
+            assert_eq!(bill.tenants.len(), 1, "the refused tenant never got a scope");
+        }
+        other => panic!("expected the bill, got {other:?}"),
+    }
+    let report = server.join().expect("server thread joins");
+    assert_eq!(report.jobs.len(), 1);
+}
+
+#[test]
+fn demo_workload_matches_in_process_semantics() {
+    // the same two-tenant demo the README quickstart runs, but over
+    // TCP: on one service worker the first job is the only cold one,
+    // and the three warm jobs stay within the multi-tenant launch bound
+    let (addr, server) = spawn_server(serve_opts(1));
+    let args = study_args();
+    let specs = vec![
+        JobSpec { tenant: "t0".into(), args: args.clone() },
+        JobSpec { tenant: "t0".into(), args: args.clone() },
+        JobSpec { tenant: "t1".into(), args: args.clone() },
+        JobSpec { tenant: "t1".into(), args },
+    ];
+    let outcome = run_jobs(&addr, &specs, true).expect("client run succeeds");
+    assert_eq!(outcome.jobs.len(), 4);
+    assert!(outcome.jobs.iter().all(|j| j.ok()));
+    let bill = outcome.bill.expect("bill");
+    let cold = outcome.jobs[0].launches + bill.input_launches;
+    let limit = (cold as f64 * 1.25).ceil() as u64;
+    assert!(
+        bill.total_launches <= limit,
+        "3 warm jobs must ride the first's cache: {} > {limit}",
+        bill.total_launches
+    );
+    server.join().expect("server joins");
+}
