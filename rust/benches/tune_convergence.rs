@@ -1,0 +1,116 @@
+//! Tuning acceptance bench: a genetic search over (G1, G2), started
+//! deliberately away from the incumbent defaults, must (a) strictly
+//! improve on the best initial-population candidate and (b) pay fewer
+//! kernel launches when re-run against the warm shared cache — the
+//! "optimizers revisit quantized points" reuse claim, count-asserted.
+//!
+//! Both acceptance metrics are *counts/scores*, not wall times, so they
+//! are asserted in `--test` (CI smoke) mode too. Writes
+//! `BENCH_tune.json` as the perf-trajectory artifact.
+
+use rtf_reuse::benchx::{fmt_secs, time_once, Table};
+use rtf_reuse::config::{CacheSettings, StudyConfig};
+use rtf_reuse::driver::{build_cache, make_inputs, prepare_candidates};
+use rtf_reuse::sampling::default_space;
+use rtf_reuse::tune::{run_tune, ObjectiveKind, TuneOptions, TunerKind};
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    let cfg = StudyConfig {
+        cache: CacheSettings { enabled: true, capacity_mb: 512, ..CacheSettings::default() },
+        workers: 2,
+        ..StudyConfig::default()
+    };
+    let opts = TuneOptions {
+        method: TunerKind::Genetic,
+        budget: if test_mode { 32 } else { 64 },
+        population: 8,
+        active: vec![5, 6], // G1, G2: monotone mask response, steep near the top
+        objective: ObjectiveKind::Dice,
+        // start in the top third of each grid — away from the mid-grid
+        // defaults the reference masks were built with, the way an
+        // operator tunes *from* a known-bad incumbent
+        init_window: (0.7, 1.0),
+        mutation: 0.35,
+        ..TuneOptions::default()
+    };
+
+    let cache = build_cache(&cfg).expect("cache enabled");
+    let probe = prepare_candidates(&cfg, &[default_space().defaults()]);
+    let inputs = make_inputs(&cfg, &probe).expect("inputs build");
+
+    let (cold, cold_secs) = time_once(|| {
+        run_tune(&cfg, &opts, Some(cache.clone()), None, &inputs).expect("cold tuning run")
+    });
+    // the same run again: a fresh tuner + memo, but a warm shared cache
+    let (warm, warm_secs) = time_once(|| {
+        run_tune(&cfg, &opts, Some(cache.clone()), None, &inputs).expect("warm tuning run")
+    });
+
+    let mut t = Table::new(&["run", "gens", "evaluated", "memo hits", "launches", "best"]);
+    for (name, o) in [("cold", &cold), ("warm", &warm)] {
+        t.row(&[
+            name.to_string(),
+            o.history.len().to_string(),
+            o.evaluated.to_string(),
+            o.memo_hits.to_string(),
+            o.launches.to_string(),
+            format!("{:.6}", o.best_score),
+        ]);
+    }
+    t.print("tune convergence (genetic over G1, G2; dice vs. reference)");
+    println!(
+        "cold: initial best {:.6} -> tuned {:.6} in {}  |  warm rerun: {} launches in {}",
+        cold.initial_best_score,
+        cold.best_score,
+        fmt_secs(cold_secs.as_secs_f64()),
+        warm.launches,
+        fmt_secs(warm_secs.as_secs_f64())
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"tune_convergence\",\n  \"mode\": \"{}\",\n  \
+         \"budget\": {},\n  \"generations\": {},\n  \"evaluated\": {},\n  \
+         \"memo_hits\": {},\n  \"initial_best\": {:.6},\n  \"tuned_best\": {:.6},\n  \
+         \"cold_launches\": {},\n  \"warm_launches\": {},\n  \
+         \"cold_wall_secs\": {:.6},\n  \"warm_wall_secs\": {:.6}\n}}\n",
+        if test_mode { "test" } else { "full" },
+        opts.budget,
+        cold.history.len(),
+        cold.evaluated,
+        cold.memo_hits,
+        cold.initial_best_score,
+        cold.best_score,
+        cold.launches,
+        warm.launches,
+        cold_secs.as_secs_f64(),
+        warm_secs.as_secs_f64(),
+    );
+    std::fs::write("BENCH_tune.json", &json).expect("write BENCH_tune.json");
+    println!("wrote BENCH_tune.json");
+
+    let improved = cold.best_score > cold.initial_best_score;
+    let reused = warm.launches < cold.launches;
+    println!(
+        "ACCEPTANCE: tuned {:.6} vs initial {:.6}; warm {} vs cold {} launches — {}",
+        cold.best_score,
+        cold.initial_best_score,
+        warm.launches,
+        cold.launches,
+        if improved && reused { "PASS" } else { "FAIL" }
+    );
+    assert!(cold.launches > 0, "the cold run must execute kernels");
+    assert!(
+        improved,
+        "tuning must strictly improve on the best initial candidate: {:.6} <= {:.6}",
+        cold.best_score, cold.initial_best_score
+    );
+    assert!(
+        reused,
+        "a warm tuner must ride the shared cache: {} >= {} launches",
+        warm.launches, cold.launches
+    );
+    // same seed, same search: the warm run reproduces the cold result
+    assert_eq!(warm.best_params, cold.best_params, "warm rerun must be bit-identical");
+    assert_eq!(warm.best_score.to_bits(), cold.best_score.to_bits());
+}

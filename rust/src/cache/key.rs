@@ -201,6 +201,23 @@ pub fn metrics_key(base: Key, compare_sig: u64, ref_fp: Key) -> Key {
     fold_keys(chain_key(base, compare_sig), ref_fp)
 }
 
+/// Quantized identity of one candidate parameter vector — the tuning
+/// subsystem's per-run memo key ([`crate::tune`]). With step `q > 0`
+/// every value snaps to the `q`-grid before hashing, so optimizer
+/// iterates that land in the same grid cell share a key (and therefore a
+/// memoized score) — the "revisited quantized points" reuse of run-time
+/// SA/tuning optimization. `q = 0` keys exactly. These are namespace-
+/// disjoint from task-chain keys by construction: chain keys always pass
+/// through [`chain_key`]/[`fold_keys`], candidate keys never do.
+pub fn candidate_key(params: &[f64], step: f64) -> Key {
+    let mut h = Fnv128::new();
+    h.mix(params.len() as u64);
+    for &v in params {
+        h.mix(quantize(v, step).to_bits());
+    }
+    h.finish()
+}
+
 /// Content fingerprint of a set of planes (shape + every pixel's bits) —
 /// the key root for tiles and the reference-mask discriminator for
 /// cached metrics.
@@ -327,6 +344,19 @@ mod tests {
         assert_ne!(m1, m2);
         assert_ne!(m1, m3);
         assert_eq!(m1, fold_keys(chain_key(a, 9), b));
+    }
+
+    #[test]
+    fn candidate_keys_quantize_and_discriminate() {
+        let a = [40.0, 8.0];
+        let b = [40.4, 8.0];
+        let c = [8.0, 40.0];
+        assert_ne!(candidate_key(&a, 0.0), candidate_key(&b, 0.0), "exact keys differ");
+        assert_eq!(candidate_key(&a, 1.0), candidate_key(&b, 1.0), "grid cell shared");
+        assert_ne!(candidate_key(&a, 1.0), candidate_key(&c, 1.0), "order matters");
+        // length is part of the identity: a prefix never aliases
+        assert_ne!(candidate_key(&a, 0.0), candidate_key(&a[..1], 0.0));
+        assert_eq!(candidate_key(&a, 0.0), candidate_key(&[40.0, 8.0], 0.0));
     }
 
     #[test]

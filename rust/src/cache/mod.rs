@@ -51,8 +51,8 @@ mod disk;
 mod store;
 
 pub use key::{
-    chain_key, content_fingerprint, fold_keys, metrics_key, node_input_key, quantize,
-    reference_fingerprints, task_cache_sig, tile_fingerprints, Key,
+    candidate_key, chain_key, content_fingerprint, fold_keys, metrics_key, node_input_key,
+    quantize, reference_fingerprints, task_cache_sig, tile_fingerprints, Key,
 };
 pub use store::{
     CacheConfig, CacheStats, CachedState, FlightClaims, MetricsClaim, ReuseCache, ScopedCounters,

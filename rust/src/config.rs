@@ -394,6 +394,100 @@ impl ServeConfig {
     }
 }
 
+/// Everything the `tune` CLI mode (and the serve tuning job kind) needs,
+/// parsed from `key=value` arguments: the optimizer-loop knobs plus the
+/// residual study options (the per-candidate execution environment).
+#[derive(Clone, Debug)]
+pub struct TuneConfig {
+    /// The optimizer-loop knobs (method, budget, population, objective).
+    pub options: crate::tune::TuneOptions,
+    /// The residual study options, kept raw for the serve client (the
+    /// server re-parses per-job argument lists itself).
+    pub study_args: Vec<String>,
+    /// Those options parsed over the defaults — the per-candidate study
+    /// config. The reuse cache defaults ON here (tuning is the
+    /// highest-reuse workload); an explicit `cache=off` opts out.
+    pub study: StudyConfig,
+}
+
+impl TuneConfig {
+    /// Parse the `tune` argument list. Tune-specific keys: `tuner`
+    /// (nm|simplex|ga|genetic), `budget`, `population`, `k-active`,
+    /// `active` (comma-separated parameter names), `objective`
+    /// (dice|jaccard), `cost-lambda`, `mutation`, `init` (LO:HI grid
+    /// fractions). Everything else must parse as a study option; the
+    /// study's `method`/`sampler` are ignored by tuning.
+    pub fn from_args(args: &[String]) -> Result<Self> {
+        use crate::tune::{ObjectiveKind, TuneOptions, TunerKind};
+        let mut opts = TuneOptions::default();
+        let mut study_args: Vec<String> = Vec::new();
+        for a in args {
+            let uint = |v: &str| -> Result<usize> {
+                v.parse().map_err(|_| Error::Config(format!("`{a}` needs an integer")))
+            };
+            let float = |v: &str| -> Result<f64> {
+                v.parse().map_err(|_| Error::Config(format!("`{a}` needs a number")))
+            };
+            match a.split_once('=') {
+                Some(("tuner", v)) => opts.method = TunerKind::parse(v)?,
+                Some(("budget", v)) => opts.budget = uint(v)?.max(1),
+                Some(("population", v)) => opts.population = uint(v)?.max(2),
+                Some(("k-active", v)) => {
+                    let k = uint(v)?;
+                    if !(1..=8).contains(&k) {
+                        return Err(Error::Config(format!(
+                            "`{a}`: the canonical MOAT screen ranks 8 parameters \
+                             (use active=NAMES for a custom set)"
+                        )));
+                    }
+                    opts.k_active = k;
+                }
+                Some(("active", v)) => {
+                    let space = crate::sampling::default_space();
+                    let mut active = Vec::new();
+                    for name in v.split(',').filter(|n| !n.is_empty()) {
+                        let p = space.index_of(name)?;
+                        if active.contains(&p) {
+                            return Err(Error::Config(format!(
+                                "`{a}`: parameter `{name}` listed twice"
+                            )));
+                        }
+                        active.push(p);
+                    }
+                    if active.is_empty() {
+                        return Err(Error::Config("`active=` names no parameters".into()));
+                    }
+                    opts.active = active;
+                }
+                Some(("objective", v)) => opts.objective = ObjectiveKind::parse(v)?,
+                Some(("cost-lambda", v)) => opts.cost_lambda = float(v)?.max(0.0),
+                Some(("mutation", v)) => opts.mutation = float(v)?.clamp(0.0, 1.0),
+                Some(("init", v)) => {
+                    let (lo, hi) = v.split_once(':').ok_or_else(|| {
+                        Error::Config(format!("`{a}`: expected init=LO:HI fractions"))
+                    })?;
+                    let (lo, hi) = (float(lo)?, float(hi)?);
+                    if !(0.0..=1.0).contains(&lo) || !(0.0..=1.0).contains(&hi) || lo >= hi {
+                        return Err(Error::Config(format!(
+                            "`{a}`: init window needs 0 <= LO < HI <= 1"
+                        )));
+                    }
+                    opts.init_window = (lo, hi);
+                }
+                _ => study_args.push(a.clone()),
+            }
+        }
+        let mut study = StudyConfig::from_args(&study_args)?;
+        // tuning is the highest-reuse workload: the cache defaults on,
+        // and only an explicit cache=off (e.g. for A/B comparisons or
+        // the determinism tests) turns it off
+        if !study_args.iter().any(|a| a.starts_with("cache=")) {
+            study.cache.enabled = true;
+        }
+        Ok(TuneConfig { options: opts, study_args, study })
+    }
+}
+
 /// Parse a fine-grain algorithm name plus its size knob.
 pub fn parse_algorithm(name: &str, mbs: usize, max_buckets: usize) -> Result<FineAlgorithm> {
     Ok(match name {
@@ -555,6 +649,55 @@ mod tests {
         assert!(ServeConfig::from_args(&args(&["priority=3"])).is_err(), "weight needs a tenant");
         assert!(ServeConfig::from_args(&args(&["quota=alice:x"])).is_err());
         assert!(ServeConfig::from_args(&args(&["bogus=1"])).is_err(), "unknown study key");
+    }
+
+    #[test]
+    fn tune_config_parses_and_defaults_cache_on() {
+        use crate::tune::{ObjectiveKind, TunerKind};
+        let tc = TuneConfig::from_args(&args(&[
+            "tuner=nm",
+            "budget=32",
+            "population=6",
+            "active=G1,G2",
+            "objective=jaccard",
+            "cost-lambda=0.01",
+            "init=0.5:1.0",
+            "seed=9",
+            "tiles=2",
+        ]))
+        .unwrap();
+        assert_eq!(tc.options.method, TunerKind::Simplex);
+        assert_eq!(tc.options.budget, 32);
+        assert_eq!(tc.options.population, 6);
+        assert_eq!(tc.options.active, vec![5, 6]);
+        assert_eq!(tc.options.objective, ObjectiveKind::Jaccard);
+        assert_eq!(tc.options.cost_lambda, 0.01);
+        assert_eq!(tc.options.init_window, (0.5, 1.0));
+        assert_eq!(tc.study.seed, 9);
+        assert_eq!(tc.study.tiles, 2);
+        assert!(tc.study.cache.enabled, "tune defaults the cache on");
+        assert_eq!(tc.study_args, args(&["seed=9", "tiles=2"]));
+
+        let tc = TuneConfig::from_args(&args(&["cache=off"])).unwrap();
+        assert!(!tc.study.cache.enabled, "an explicit cache=off wins");
+        assert_eq!(tc.options.active_params().len(), 8, "canonical actives by default");
+        let tc = TuneConfig::from_args(&args(&["k-active=3"])).unwrap();
+        assert_eq!(tc.options.active_params(), vec![4, 5, 6]);
+    }
+
+    #[test]
+    fn tune_config_rejects_bad_knobs() {
+        assert!(TuneConfig::from_args(&args(&["tuner=annealing"])).is_err());
+        assert!(TuneConfig::from_args(&args(&["objective=speed"])).is_err());
+        assert!(TuneConfig::from_args(&args(&["active=NoSuchParam"])).is_err());
+        assert!(TuneConfig::from_args(&args(&["active="])).is_err());
+        assert!(TuneConfig::from_args(&args(&["active=G1,G1"])).is_err(), "duplicate dim");
+        assert!(TuneConfig::from_args(&args(&["init=0.9:0.1"])).is_err(), "window inverted");
+        assert!(TuneConfig::from_args(&args(&["init=0.5"])).is_err(), "missing colon");
+        assert!(TuneConfig::from_args(&args(&["k-active=12"])).is_err(), "screen ranks 8");
+        assert!(TuneConfig::from_args(&args(&["k-active=0"])).is_err());
+        assert!(TuneConfig::from_args(&args(&["budget=x"])).is_err());
+        assert!(TuneConfig::from_args(&args(&["bogus=1"])).is_err(), "unknown study key");
     }
 
     #[test]

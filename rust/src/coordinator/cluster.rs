@@ -10,7 +10,10 @@ use std::time::{Duration, Instant};
 use crate::cache::{fold_keys, node_input_key, reference_fingerprints, tile_fingerprints};
 use crate::cache::{CacheStats, Key, ReuseCache, ScopedCounters};
 use crate::data::{Plane, TileSet};
-use crate::merging::{CompactGraph, StudyPlan};
+use crate::merging::{
+    batched_unit_cost, unit_launch_count, CompactGraph, StudyPlan, DEFAULT_LAUNCH_COST_SECS,
+    DEFAULT_MARGINAL_COST_SECS,
+};
 use crate::runtime::{ArtifactManifest, PjrtEngine, TaskTimer};
 use crate::workflow::StageInstance;
 use crate::{Error, Result};
@@ -119,10 +122,11 @@ pub struct StudyOutcome {
 }
 
 /// Scheduler state shared between the manager and the workers. Ready
-/// units are dispatched costliest-first (LPT), keeping long merged
-/// buckets off the straggler tail at low units-per-worker ratios.
+/// units are dispatched costliest-first (LPT) by their *batched*
+/// execution cost (see [`unit_priority`]), keeping long merged buckets
+/// off the straggler tail at low units-per-worker ratios.
 struct Sched {
-    ready: BinaryHeap<(usize, std::cmp::Reverse<usize>)>,
+    ready: BinaryHeap<(u64, std::cmp::Reverse<usize>)>,
     indeg: Vec<usize>,
     children: Vec<Vec<usize>>,
     done: usize,
@@ -163,10 +167,21 @@ pub fn execute_study(
         }
     }
 
+    // LPT prices a ready unit by its batched execution cost — launches
+    // at the configured width plus marginal per task — not its raw task
+    // count: a merged bucket whose reuse tree batches into few launches
+    // no longer outranks launch-heavy work of equal task count. Pricing
+    // builds one reuse tree per unit at setup (the same trees the
+    // planner probe and the executor build again later); folding launch
+    // counts into ScheduleUnit at plan time would need the batch width
+    // there, which is an execution-time knob
+    let priority: Vec<u64> =
+        plan.units.iter().map(|u| unit_priority(u, graph, instances, opts.batch.width)).collect();
+
     let sched = Mutex::new(Sched {
         ready: (0..n)
             .filter(|&i| plan.units[i].deps.is_empty())
-            .map(|i| (plan.units[i].task_cost, std::cmp::Reverse(i)))
+            .map(|i| (priority[i], std::cmp::Reverse(i)))
             .collect(),
         indeg: plan.units.iter().map(|u| u.deps.len()).collect(),
         children: {
@@ -221,7 +236,7 @@ pub fn execute_study(
             scope.spawn(|| {
                 worker_loop(
                     opts, plan, graph, instances, tiles, references, &sched, &cv, &store,
-                    &metrics_map, &timers, &consumers, fps.as_ref(),
+                    &metrics_map, &timers, &consumers, &priority, fps.as_ref(),
                 );
             });
         }
@@ -265,6 +280,25 @@ pub fn execute_study(
     })
 }
 
+/// LPT dispatch priority of one unit: its [`batched_unit_cost`] under
+/// the execution's frontier batch width (default launch/marginal
+/// pricing), in integer microseconds so the ready heap stays `Ord`.
+fn unit_priority(
+    unit: &crate::merging::ScheduleUnit,
+    graph: &CompactGraph,
+    instances: &[StageInstance],
+    width: usize,
+) -> u64 {
+    let launches = unit_launch_count(unit, graph, instances, width);
+    let cost = batched_unit_cost(
+        launches,
+        unit.task_cost,
+        DEFAULT_LAUNCH_COST_SECS,
+        DEFAULT_MARGINAL_COST_SECS,
+    );
+    (cost * 1e6).round() as u64
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     opts: &ExecuteOptions,
@@ -279,6 +313,7 @@ fn worker_loop(
     metrics_map: &Mutex<HashMap<usize, [f32; 3]>>,
     timers: &Mutex<Vec<(String, f64, u64)>>,
     consumers: &[usize],
+    priority: &[u64],
     fps: Option<&(HashMap<u64, Key>, HashMap<u64, Key>)>,
 ) {
     let fail = |msg: String| {
@@ -375,7 +410,7 @@ fn worker_loop(
             for c in children {
                 s.indeg[c] -= 1;
                 if s.indeg[c] == 0 {
-                    s.ready.push((plan.units[c].task_cost, std::cmp::Reverse(c)));
+                    s.ready.push((priority[c], std::cmp::Reverse(c)));
                 }
             }
             cv.notify_all();

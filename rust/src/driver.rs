@@ -15,8 +15,8 @@ use crate::coordinator::{execute_study, BatchPolicy, ExecuteOptions, StudyOutcom
 use crate::data::{synth_tile, Plane, SynthConfig, TileSet};
 use crate::merging::{plan_study_weighted, prune_cached, CompactGraph, FineAlgorithm, StudyPlan};
 use crate::runtime::PjrtEngine;
-use crate::sampling::{default_space, MoatSample, ParamSpace, VbdSample};
-use crate::sampling::{MoatDesign, VbdDesign};
+use crate::sampling::{default_space, MoatSample, ParamSet, ParamSpace, VbdSample};
+use crate::sampling::{MoatDesign, VbdDesign, CANONICAL_ACTIVE};
 use crate::simulate::{simulate_plan, CostModel, SimOptions, SimReport};
 use crate::workflow::{instantiate_study, paper_workflow, Evaluation, StageInstance, WorkflowSpec};
 use crate::Result;
@@ -25,6 +25,10 @@ use crate::Result;
 pub enum SampleInfo {
     Moat(MoatSample),
     Vbd(VbdSample, Vec<usize>),
+    /// An explicit candidate list (no SA estimator applies) — what the
+    /// tuning subsystem ([`crate::tune`]) prepares each optimizer
+    /// generation as. Carries the number of candidate sets.
+    Explicit(usize),
 }
 
 impl SampleInfo {
@@ -33,6 +37,7 @@ impl SampleInfo {
         match self {
             SampleInfo::Moat(s) => s.sets.len(),
             SampleInfo::Vbd(s, _) => s.sets.len(),
+            SampleInfo::Explicit(n) => *n,
         }
     }
 }
@@ -83,15 +88,7 @@ pub fn prepare(cfg: &StudyConfig) -> PreparedStudy {
 /// Like [`prepare`], with an explicit VBD active-parameter set.
 pub fn prepare_with_active(cfg: &StudyConfig, active: Option<Vec<usize>>) -> PreparedStudy {
     let space = default_space();
-    let workflow = match &cfg.workflow_file {
-        Some(path) => {
-            let text = std::fs::read_to_string(path)
-                .unwrap_or_else(|e| panic!("cannot read workflow file `{path}`: {e}"));
-            crate::workflow::parse_workflow_file(&text, &space)
-                .unwrap_or_else(|e| panic!("invalid workflow file `{path}`: {e}"))
-        }
-        None => paper_workflow(),
-    };
+    let workflow = study_workflow(cfg, &space);
     let mut sampler = cfg.sampler.build(cfg.seed);
 
     let (sets, sample) = match cfg.method {
@@ -102,15 +99,51 @@ pub fn prepare_with_active(cfg: &StudyConfig, active: Option<Vec<usize>>) -> Pre
         SaMethod::Vbd { n, k_active } => {
             // paper Table 2: the 8 most influential parameters survive the
             // MOAT screen — T2, G1, G2, minS, maxS, minSPL, RC, WConn
-            let act = active.unwrap_or_else(|| {
-                let canonical = [4usize, 5, 6, 7, 8, 9, 13, 14];
-                canonical.iter().copied().take(k_active).collect()
-            });
+            let act = active
+                .unwrap_or_else(|| CANONICAL_ACTIVE.iter().copied().take(k_active).collect());
             let s = VbdDesign::new(n).generate(&space, &act, sampler.as_mut());
             (s.sets.clone(), SampleInfo::Vbd(s, act))
         }
     };
+    finish_prepare(cfg, space, workflow, &sets, sample)
+}
 
+/// Prepare an explicit candidate list as one study — the tuning
+/// subsystem's entry point ([`crate::tune`]): a whole optimizer
+/// generation becomes ONE multi-unit study, so stage/task merging and
+/// frontier batching stack sibling candidates exactly as they stack an
+/// SA design's parameter sets. `cfg.method`/`cfg.sampler` are ignored.
+pub fn prepare_candidates(cfg: &StudyConfig, sets: &[ParamSet]) -> PreparedStudy {
+    let space = default_space();
+    let workflow = study_workflow(cfg, &space);
+    finish_prepare(cfg, space, workflow, sets, SampleInfo::Explicit(sets.len()))
+}
+
+/// The workflow a config names: an explicit descriptor file, or the
+/// built-in paper workflow. Public so the tuning objective
+/// ([`crate::tune`]) can price a candidate's task chain with a
+/// [`CostModel`] without preparing a study first.
+pub fn study_workflow(cfg: &StudyConfig, space: &ParamSpace) -> WorkflowSpec {
+    match &cfg.workflow_file {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .unwrap_or_else(|e| panic!("cannot read workflow file `{path}`: {e}"));
+            crate::workflow::parse_workflow_file(&text, space)
+                .unwrap_or_else(|e| panic!("invalid workflow file `{path}`: {e}"))
+        }
+        None => paper_workflow(),
+    }
+}
+
+/// Shared tail of every `prepare*` flavor: lay the parameter sets out
+/// set-major over the tiles, instantiate, and build the compact graph.
+fn finish_prepare(
+    cfg: &StudyConfig,
+    space: ParamSpace,
+    workflow: WorkflowSpec,
+    sets: &[ParamSet],
+    sample: SampleInfo,
+) -> PreparedStudy {
     // set-major evaluation layout: eval(set s, tile t) = s·tiles + t
     let mut evals = Vec::with_capacity(sets.len() * cfg.tiles);
     for (s, set) in sets.iter().enumerate() {
@@ -390,6 +423,22 @@ mod tests {
         let SampleInfo::Vbd(s, act) = &p.sample else { panic!() };
         assert_eq!(act, &vec![4, 5, 6, 7, 8, 9, 13, 14]);
         assert_eq!(s.sample_size(), 10 * 10);
+    }
+
+    #[test]
+    fn prepare_candidates_layout_matches_explicit_sets() {
+        let cfg = StudyConfig { tiles: 2, ..StudyConfig::default() };
+        let space = default_space();
+        let mut varied = space.defaults();
+        varied[5] = 10.0;
+        let sets = vec![space.defaults(), varied];
+        let p = prepare_candidates(&cfg, &sets);
+        assert_eq!(p.sample.n_sets(), 2);
+        assert_eq!(p.n_evals(), 4);
+        assert_eq!(p.evals[1].tile, 1);
+        assert_eq!(p.evals[2].params, sets[1]);
+        let plan = p.plan(&cfg);
+        plan.assert_valid(&p.graph);
     }
 
     #[test]

@@ -28,6 +28,10 @@
 //!   weighted-fair admission, per-tenant byte quotas and accounting,
 //!   disk warm-start, graceful drain, and a TCP wire protocol
 //!   (`docs/SERVING.md`) with an in-tree client.
+//! * [`tune`] — parameter auto-tuning: Nelder-Mead and genetic
+//!   optimizers that score candidate parameter sets by running them as
+//!   batched studies, memoize revisited quantized points, and ride the
+//!   shared reuse cache (a `tune` CLI mode and a serve job kind).
 //! * [`simulate`] — discrete-event cluster simulator used for the
 //!   8–256-worker scalability studies (Figs. 22/23, Table 5).
 //! * [`analysis`] — elementary effects (MOAT) and Sobol indices (VBD),
@@ -53,6 +57,7 @@ pub mod runtime;
 pub mod sampling;
 pub mod serve;
 pub mod simulate;
+pub mod tune;
 pub mod workflow;
 
 pub use error::{Error, Result};

@@ -3,6 +3,8 @@
 //! Subcommands (all take `key=value` options; see `rtf-reuse help`):
 //!
 //! * `run-sa`             — execute an SA study for real on PJRT workers
+//! * `tune`               — optimizer-driven parameter search (simplex
+//!                          or genetic) riding the reuse cache
 //! * `serve`              — multi-tenant study service: many studies,
 //!                          one shared reuse cache
 //! * `simulate`           — same plan through the discrete-event cluster
@@ -33,6 +35,7 @@ fn main() {
     let rest = if args.is_empty() { &[][..] } else { &args[1..] };
     let r = match cmd {
         "run-sa" => cmd_run_sa(rest),
+        "tune" => cmd_tune(rest),
         "serve" => cmd_serve(rest),
         "simulate" => cmd_simulate(rest),
         "merge-plan" => cmd_merge_plan(rest),
@@ -45,7 +48,10 @@ fn main() {
             print_help();
             Ok(())
         }
-        other => Err(Error::Config(format!("unknown command `{other}` (try `help`)"))),
+        other => Err(Error::Config(format!(
+            "unknown command `{other}` (commands: run-sa, tune, serve, simulate, merge-plan, \
+             reuse-audit, profile-tasks, gen-tiles, gen-stage, inspect-artifacts; try `help`)"
+        ))),
     };
     if let Err(e) = r {
         eprintln!("rtf-reuse: {e}");
@@ -61,6 +67,7 @@ fn print_help() {
          \n\
          commands:\n\
            run-sa             run an SA study on real PJRT workers\n\
+           tune               optimize the parameters (simplex/genetic) on the cache\n\
            serve              run many tenants' studies against ONE shared cache\n\
            simulate           run the study through the cluster simulator\n\
            merge-plan         print the reuse plan for a config\n\
@@ -78,6 +85,17 @@ fn print_help() {
            artifacts=DIR (default: the crate's artifacts/ dir)\n\
            cache=on|off  cache-mb=256  cache-quant=0  cache-shards=8  cache-dir=DIR\n\
          \n\
+         tune options (plus any study option above; cache defaults ON here):\n\
+           tuner=ga|nm        genetic algorithm / Nelder-Mead simplex\n\
+           budget=64          candidate-evaluation budget (generations are atomic)\n\
+           population=12      GA population size\n\
+           k-active=8         tune the top-k MOAT-screened parameters ...\n\
+           active=G1,G2       ... or an explicit comma-separated name list\n\
+           objective=dice     dice|jaccard vs. the reference masks\n\
+           cost-lambda=0      chain-cost penalty (constant within one fixed workflow)\n\
+           mutation=0.25      GA per-gene mutation probability\n\
+           init=LO:HI         initial-population grid-fraction window (default 0:1)\n\
+         \n\
          serve options (plus any study option above as the per-job default):\n\
            serve-workers=2    concurrent studies in flight\n\
            tenant-cap=1       max in-flight studies per tenant\n\
@@ -86,7 +104,7 @@ fn print_help() {
            warm-start=on|off  pre-admit disk-tier entries at boot (default: on with cache-dir)\n\
            tenants=2          demo mode: N tenants ...\n\
            jobs-per-tenant=1  ... each submitting this many identical studies\n\
-           jobs=FILE          submit per-line jobs: `tenant=NAME [study opts]`\n\
+           jobs=FILE          per-line jobs: `tenant=NAME [kind=study|tune] [opts]`\n\
            listen=ADDR        serve the wire protocol on ADDR (e.g. 127.0.0.1:7070)\n\
            addr-file=PATH     with listen=: write the bound address to PATH\n\
            submit=ADDR        client mode: send jobs=FILE to a listening service\n\
@@ -104,7 +122,9 @@ fn cmd_run_sa(args: &[String]) -> Result<()> {
     print_plan_summary(&cfg, &prepared, &plan);
 
     if cfg.engine == EngineMode::Sim {
-        let opts = rtf_reuse::simulate::SimOptions::new(cfg.workers).with_cores(cfg.cores);
+        let opts = rtf_reuse::simulate::SimOptions::new(cfg.workers)
+            .with_cores(cfg.cores)
+            .with_batch(cfg.batch_width, rtf_reuse::merging::DEFAULT_LAUNCH_COST_SECS);
         let report = run_sim(&prepared, &plan, &default_cost_model(), &opts);
         println!(
             "simulated: makespan {}  utilization {:.1}%  tasks {}",
@@ -166,6 +186,91 @@ fn cmd_run_sa(args: &[String]) -> Result<()> {
             }
             t.print("VBD Sobol indices (paper Table 2, right)");
         }
+        SampleInfo::Explicit(n) => {
+            // run-sa never prepares explicit candidate lists (that is
+            // the tune subsystem's entry), but the match stays total
+            println!("explicit candidate study: {n} sets (no SA estimator applies)");
+        }
+    }
+    Ok(())
+}
+
+/// `tune`: optimizer-driven parameter search — a Nelder-Mead simplex or
+/// a genetic algorithm proposes candidate parameter sets, each
+/// generation runs as ONE batched study, revisited quantized points are
+/// memoized, and the whole loop rides the (default-on) reuse cache.
+fn cmd_tune(args: &[String]) -> Result<()> {
+    use rtf_reuse::config::TuneConfig;
+    use rtf_reuse::tune::run_tune_standalone;
+
+    let tc = TuneConfig::from_args(args)?;
+    let opts = &tc.options;
+    let space = default_space();
+    let active = opts.active_params();
+    let names: Vec<&str> = active.iter().map(|&p| space.params[p].name.as_str()).collect();
+    println!(
+        "tune: {} budget={} population={} objective={} lambda={} active=[{}]",
+        opts.method.name(),
+        opts.budget,
+        opts.population,
+        opts.objective.name(),
+        opts.cost_lambda,
+        names.join(", ")
+    );
+    println!("candidate study: {}", tc.study.describe());
+
+    let outcome = run_tune_standalone(&tc.study, &tc.options)?;
+
+    let mut t = Table::new(&["gen", "asked", "evaluated", "memo hits", "best score"]);
+    for g in &outcome.history {
+        t.row(&[
+            g.gen.to_string(),
+            g.asked.to_string(),
+            g.evaluated.to_string(),
+            g.memo_hits.to_string(),
+            format!("{:.6}", g.best_score),
+        ]);
+    }
+    t.print("tuning progress (one batched study per generation)");
+
+    let defaults = space.defaults();
+    let mut p = Table::new(&["param", "tuned", "default"]);
+    for (i, def) in space.params.iter().enumerate() {
+        let marker = if active.contains(&i) { "" } else { " (pinned)" };
+        p.row(&[
+            format!("{}{marker}", def.name),
+            outcome.best_params[i].to_string(),
+            defaults[i].to_string(),
+        ]);
+    }
+    p.print("best parameter set");
+
+    println!(
+        "best {}: {:.6} (initial best {:.6}, improved: {})",
+        opts.objective.name(),
+        outcome.best_score,
+        outcome.initial_best_score,
+        if outcome.improved() { "yes" } else { "no" }
+    );
+    println!(
+        "evaluated {} of {} proposed candidates ({} memo hits) in {} launches \
+         ({} cache-served), wall {}",
+        outcome.evaluated,
+        outcome.asked,
+        outcome.memo_hits,
+        outcome.launches,
+        outcome.cached_tasks,
+        fmt_secs(outcome.wall.as_secs_f64())
+    );
+    if let Some(stats) = &outcome.cache {
+        println!(
+            "cache: {} state hits ({} from disk), {} misses, {} metric hits, {:.1}% hit rate",
+            stats.hits + stats.disk_hits,
+            stats.disk_hits,
+            stats.misses,
+            stats.metric_hits,
+            stats.hit_rate() * 100.0
+        );
     }
     Ok(())
 }
@@ -208,6 +313,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             );
             if let Some(e) = &j.error {
                 println!("  error: {e}");
+            }
+            if let Some(ts) = &j.tune {
+                println!(
+                    "  tuned[{}]: best {:.4} (initial {:.4}) over {} generations, \
+                     {} evaluated, {} memo hits",
+                    ts.method,
+                    ts.best_score,
+                    ts.initial_best_score,
+                    ts.generations,
+                    ts.evaluated,
+                    ts.memo_hits
+                );
             }
         }
         if let Some(bill) = &outcome.bill {
@@ -281,8 +398,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         Some(path) => {
             let text = std::fs::read_to_string(path)?;
             for spec in parse_jobs_file(&text, &sc.study_args)? {
-                let cfg = StudyConfig::from_args(&spec.args)?;
-                svc.submit(StudyJob { tenant: spec.tenant, cfg })?;
+                if spec.tune {
+                    let tc = rtf_reuse::config::TuneConfig::from_args(&spec.args)?;
+                    svc.submit_tune(spec.tenant, tc.study, tc.options)?;
+                } else {
+                    let cfg = StudyConfig::from_args(&spec.args)?;
+                    svc.submit(StudyJob { tenant: spec.tenant, cfg })?;
+                }
                 submitted += 1;
             }
         }
@@ -375,7 +497,14 @@ fn cmd_simulate(args: &[String]) -> Result<()> {
     let plan = prepared.plan(&cfg);
     print_plan_summary(&cfg, &prepared, &plan);
     let model = load_cost_model();
-    let opts = rtf_reuse::simulate::SimOptions::new(cfg.workers).with_cores(cfg.cores);
+    // the simulated cluster models frontier batching like the real one:
+    // one launch-overhead charge per width-sized cohort. batch-width=1
+    // prices node-at-a-time launches (one per task node) — launch-aware,
+    // unlike the overhead-free pre-batching model that SimOptions::new
+    // still defaults to for API users
+    let opts = rtf_reuse::simulate::SimOptions::new(cfg.workers)
+        .with_cores(cfg.cores)
+        .with_batch(cfg.batch_width, rtf_reuse::merging::DEFAULT_LAUNCH_COST_SECS);
     let report = run_sim(&prepared, &plan, &model, &opts);
     println!(
         "simulated on {} workers: makespan {}  total work {}  utilization {:.1}%",

@@ -36,6 +36,7 @@ pub use sca::sca_merge;
 pub use stage::{CompactGraph, CompactNode};
 pub use study::{
     batched_unit_cost, plan_study, plan_study_weighted, prune_cached, unit_launch_count,
-    unit_stages, FineAlgorithm, ScheduleUnit, StudyPlan, UnitKind,
+    unit_stages, FineAlgorithm, ScheduleUnit, StudyPlan, UnitKind, DEFAULT_LAUNCH_COST_SECS,
+    DEFAULT_MARGINAL_COST_SECS,
 };
 pub use trtma::{trtma_merge, trtma_merge_weighted, TrtmaOptions};

@@ -398,6 +398,17 @@ pub fn batched_unit_cost(launches: usize, tasks: usize, launch_cost: f64, margin
     launches as f64 * launch_cost + tasks as f64 * marginal
 }
 
+/// Default per-launch overhead (seconds) for [`batched_unit_cost`]
+/// pricing when no measured model is available — what LPT dispatch
+/// (`coordinator/cluster.rs`) and the DES simulator's batching model
+/// (`simulate/des.rs`) charge per kernel launch. Only the *ratio*
+/// against [`DEFAULT_MARGINAL_COST_SECS`] matters for ordering.
+pub const DEFAULT_LAUNCH_COST_SECS: f64 = 0.05;
+
+/// Default marginal per-task cost (seconds) for [`batched_unit_cost`]
+/// pricing: on the order of the Table-6 mean task cost (~1 s).
+pub const DEFAULT_MARGINAL_COST_SECS: f64 = 1.0;
+
 #[cfg(test)]
 mod tests {
     use super::*;

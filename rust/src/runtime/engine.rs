@@ -114,6 +114,33 @@ impl TaskTimer {
         }
     }
 
+    /// Total backend launches recorded — every non-cached execution of
+    /// every task, comparison included. The launch-count acceptance
+    /// metrics (multi-tenant bill, warm-start and tuning benches) are
+    /// all built from this.
+    pub fn launches(&self) -> u64 {
+        let live: u64 = (0..self.names.len()).map(|id| self.slots[id * 2].1).sum();
+        let extra: u64 = self
+            .extra
+            .iter()
+            .filter(|(name, _)| !name.ends_with("#cached"))
+            .map(|(_, (_, n))| *n)
+            .sum();
+        live + extra
+    }
+
+    /// Executions served from the reuse cache (`<task>#cached` rows).
+    pub fn cached_served(&self) -> u64 {
+        let live: u64 = (0..self.names.len()).map(|id| self.slots[id * 2 + 1].1).sum();
+        let extra: u64 = self
+            .extra
+            .iter()
+            .filter(|(name, _)| name.ends_with("#cached"))
+            .map(|(_, (_, n))| *n)
+            .sum();
+        live + extra
+    }
+
     /// (task, mean seconds, count) for all tasks, sorted by task name.
     /// Cache-served executions report as `<task>#cached` rows.
     pub fn summary(&self) -> Vec<(String, f64, u64)> {
@@ -136,6 +163,44 @@ impl TaskTimer {
         rows.sort_by(|a, b| a.0.cmp(&b.0));
         rows
     }
+}
+
+/// One batched backend call. With the in-tree native backend this is
+/// the vectorized `execute_batch` extension; under the `xla-upstream`
+/// cargo feature — for builds against the published `xla` binding,
+/// whose API has no batched entry point — it degrades to a loop over
+/// `execute` with bit-identical per-lane results (the batching
+/// *speedup* is lost, the semantics are not; `tests/batch_exec.rs`
+/// width-invariance holds under either path).
+#[cfg(not(feature = "xla-upstream"))]
+fn backend_execute_batch(
+    exe: &xla::PjRtLoadedExecutable,
+    states: &[&[xla::Literal; 3]],
+    params: &[&[f32]],
+) -> Result<Vec<[xla::Literal; 3]>> {
+    Ok(exe.execute_batch(states, params)?)
+}
+
+/// The `execute_batch` shim for the published `xla` binding: loop over
+/// the standard `execute` entry point (see the non-feature twin above).
+#[cfg(feature = "xla-upstream")]
+fn backend_execute_batch(
+    exe: &xla::PjRtLoadedExecutable,
+    states: &[&[xla::Literal; 3]],
+    params: &[&[f32]],
+) -> Result<Vec<[xla::Literal; 3]>> {
+    let mut out = Vec::with_capacity(states.len());
+    for (state, p) in states.iter().zip(params) {
+        let pl = xla::Literal::vec1(p);
+        let inputs: [&xla::Literal; 4] = [&state[0], &state[1], &state[2], &pl];
+        let result = exe.execute(&inputs)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let lane: [xla::Literal; 3] = parts
+            .try_into()
+            .map_err(|_| Error::Xla("batched task did not return 3 outputs".into()))?;
+        out.push(lane);
+    }
+    Ok(out)
 }
 
 /// Loads every artifact, compiles it once on a PJRT CPU client, and
@@ -457,8 +522,7 @@ impl PjrtEngine {
                 }
                 let p_refs: Vec<&[f32]> = padded.iter().map(|p| p.as_slice()).collect();
                 let s_refs: Vec<&[xla::Literal; 3]> = exec.iter().map(|&i| states[i]).collect();
-                let exe = &self.execs[id];
-                let results = exe.execute_batch(&s_refs, &p_refs)?;
+                let results = backend_execute_batch(&self.execs[id], &s_refs, &p_refs)?;
                 let elapsed = start.elapsed();
                 if results.len() != exec.len() {
                     return Err(Error::Xla(format!(

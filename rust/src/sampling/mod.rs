@@ -21,7 +21,7 @@ pub use lhs::LatinHypercube;
 pub use mc::MonteCarlo;
 pub use moat::{MoatDesign, MoatSample};
 pub use qmc::{halton, HaltonSampler};
-pub use space::{default_space, ParamDef, ParamSpace, ParamSet};
+pub use space::{default_space, ParamDef, ParamSpace, ParamSet, CANONICAL_ACTIVE};
 pub use vbd::{VbdDesign, VbdSample};
 
 /// A base sampler draws points (as per-parameter *level fractions* in

@@ -128,6 +128,22 @@ pub mod idx {
     pub const WATERSHED: usize = 14;
 }
 
+/// The paper's Table-2 MOAT screen outcome: the 8 most influential
+/// parameters (T2, G1, G2, minS, maxS, minSPL, RC, WConn) in canonical
+/// index order. VBD refinement restricts its design to these; the tuning
+/// subsystem ([`crate::tune`]) searches over a prefix of this list by
+/// default.
+pub const CANONICAL_ACTIVE: [usize; 8] = [
+    idx::T2,
+    idx::G1,
+    idx::G2,
+    idx::MIN_SIZE,
+    idx::MAX_SIZE,
+    idx::MIN_SIZE_PL,
+    idx::RECON,
+    idx::WATERSHED,
+];
+
 /// Build the Table-1 space: B/G/R ∈ {210..240 step 10}, T1/T2 ∈
 /// {2.5..7.5 step 0.5}, G1/minSPL ∈ {5..80 step 5}, G2/minS/minSS ∈
 /// {2..40 step 2}, maxS/maxSS ∈ {900..1500 step 50}, and the three
@@ -188,6 +204,13 @@ mod tests {
         let set0 = s.snap(&vec![0.0; 15]);
         assert_eq!(set0[idx::B], 210.0);
         assert_eq!(set0[idx::G2], 2.0);
+    }
+
+    #[test]
+    fn canonical_active_matches_table2() {
+        assert_eq!(CANONICAL_ACTIVE, [4, 5, 6, 7, 8, 9, 13, 14]);
+        let s = default_space();
+        assert!(CANONICAL_ACTIVE.iter().all(|&p| p < s.dim()));
     }
 
     #[test]

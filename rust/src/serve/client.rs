@@ -11,19 +11,21 @@
 use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
 
-use crate::config::StudyConfig;
+use crate::config::{StudyConfig, TuneConfig};
 use crate::{Error, Result};
 
 use super::protocol::{
     read_frame, write_frame, Message, WireBill, WireJobReport, PROTOCOL_VERSION,
 };
 
-/// One job to submit: a tenant plus the study's `key=value` options
-/// (already merged with any client-side defaults).
+/// One job to submit: a tenant plus the job's `key=value` options
+/// (already merged with any client-side defaults). `tune` selects the
+/// tuning job kind (a `kind=tune` token on the job line).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct JobSpec {
     pub tenant: String,
     pub args: Vec<String>,
+    pub tune: bool,
 }
 
 /// What a client run brought back.
@@ -35,12 +37,14 @@ pub struct ClientOutcome {
     pub bill: Option<WireBill>,
 }
 
-/// Parse a jobs file: one job per line, `tenant=NAME [study options]`;
-/// blank lines and `#` comments are skipped. `defaults` (the CLI's
-/// residual study options) are prepended to every line's options, so a
-/// line's own `key=value` pairs override them. Each merged option list
-/// is validated client-side with [`StudyConfig::from_args`] — a typo
-/// fails fast here instead of round-tripping to the server.
+/// Parse a jobs file: one job per line, `tenant=NAME [kind=study|tune]
+/// [job options]`; blank lines and `#` comments are skipped. `defaults`
+/// (the CLI's residual study options) are prepended to every line's
+/// options, so a line's own `key=value` pairs override them. Each
+/// merged option list is validated client-side —
+/// [`StudyConfig::from_args`] for studies, [`TuneConfig::from_args`]
+/// for `kind=tune` lines — so a typo fails fast here instead of
+/// round-tripping to the server.
 pub fn parse_jobs_file(text: &str, defaults: &[String]) -> Result<Vec<JobSpec>> {
     let mut specs = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
@@ -48,20 +52,32 @@ pub fn parse_jobs_file(text: &str, defaults: &[String]) -> Result<Vec<JobSpec>> 
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
+        let bad = |e: Error| Error::Config(format!("jobs file line {}: {e}", lineno + 1));
         let mut tenant = None;
+        let mut tune = false;
         let mut args: Vec<String> = defaults.to_vec();
         for tok in line.split_whitespace() {
             match tok.split_once('=') {
                 Some(("tenant", v)) => tenant = Some(v.to_string()),
+                Some(("kind", "study")) => tune = false,
+                Some(("kind", "tune")) => tune = true,
+                Some(("kind", other)) => {
+                    return Err(bad(Error::Config(format!(
+                        "unknown job kind `{other}` (study|tune)"
+                    ))));
+                }
                 _ => args.push(tok.to_string()),
             }
         }
         let tenant = tenant.ok_or_else(|| {
             Error::Config(format!("jobs file line {}: missing tenant=NAME", lineno + 1))
         })?;
-        StudyConfig::from_args(&args)
-            .map_err(|e| Error::Config(format!("jobs file line {}: {e}", lineno + 1)))?;
-        specs.push(JobSpec { tenant, args });
+        if tune {
+            TuneConfig::from_args(&args).map_err(bad)?;
+        } else {
+            StudyConfig::from_args(&args).map_err(bad)?;
+        }
+        specs.push(JobSpec { tenant, args, tune });
     }
     Ok(specs)
 }
@@ -91,7 +107,11 @@ pub fn run_jobs(addr: &str, specs: &[JobSpec], drain: bool) -> Result<ClientOutc
 
     let mut ids = Vec::with_capacity(specs.len());
     for spec in specs {
-        let submit = Message::Submit { tenant: spec.tenant.clone(), study: spec.args.clone() };
+        let submit = if spec.tune {
+            Message::SubmitTune { tenant: spec.tenant.clone(), tune: spec.args.clone() }
+        } else {
+            Message::Submit { tenant: spec.tenant.clone(), study: spec.args.clone() }
+        };
         write_frame(&mut writer, &submit)?;
         writer.flush().map_err(Error::Io)?;
         match expect_reply(&mut reader)? {
@@ -150,14 +170,32 @@ mod tests {
         assert_eq!(specs.len(), 2);
         assert_eq!(specs[0].tenant, "alice");
         assert_eq!(specs[0].args, vec!["workers=2", "method=moat", "r=2"]);
+        assert!(!specs[0].tune, "study is the default job kind");
         assert_eq!(specs[1].tenant, "bob");
         assert_eq!(specs[1].args, vec!["workers=2", "seed=7"]);
+    }
+
+    #[test]
+    fn jobs_file_parses_tune_lines() {
+        let text = "tenant=alice kind=tune tuner=ga budget=8\ntenant=bob kind=study r=1\n";
+        let specs = parse_jobs_file(text, &[]).unwrap();
+        assert!(specs[0].tune);
+        assert_eq!(specs[0].args, vec!["tuner=ga", "budget=8"]);
+        assert!(!specs[1].tune);
+        // tune knobs on a study line are rejected client-side
+        assert!(parse_jobs_file("tenant=a tuner=ga\n", &[]).is_err());
+        assert!(parse_jobs_file("tenant=a kind=sweep\n", &[]).is_err(), "unknown kind");
+        // study defaults merge into tune lines too
+        let specs =
+            parse_jobs_file("tenant=a kind=tune budget=4\n", &["seed=9".to_string()]).unwrap();
+        assert_eq!(specs[0].args, vec!["seed=9", "budget=4"]);
     }
 
     #[test]
     fn jobs_file_rejects_bad_lines() {
         assert!(parse_jobs_file("method=moat\n", &[]).is_err(), "missing tenant");
         assert!(parse_jobs_file("tenant=a bogus=1\n", &[]).is_err(), "bad study option");
+        assert!(parse_jobs_file("tenant=a kind=tune bogus=1\n", &[]).is_err(), "bad tune option");
         let err = parse_jobs_file("tenant=a\ntenant=b frob=1\n", &[]).unwrap_err();
         assert!(err.to_string().contains("line 2"), "errors carry line numbers: {err}");
     }

@@ -27,12 +27,21 @@
 //!   per-tenant in-flight cap — and **graceful drain** (no new
 //!   submissions, queued work completes, workers join).
 //!
+//! The service runs two job kinds against that one cache: plain SA
+//! **studies** ([`StudyService::submit`]) and **tuning runs**
+//! ([`StudyService::submit_tune`], [`crate::tune`]) — optimizer loops
+//! whose candidate generations execute as batched studies under the
+//! tenant's account. Tuning is the highest-reuse workload of all
+//! (optimizers revisit quantized points constantly), so concurrent
+//! tuning tenants lean on the shared cache hardest.
+//!
 //! The network layer on top ([`protocol`], [`server`], [`client`])
 //! turns the in-process queue into a service remote clients drive over
 //! TCP: `rtf-reuse serve listen=ADDR` accepts length-delimited JSONL
-//! frames (`submit` / `status` / `result` / `drain`), and `rtf-reuse
-//! serve submit=ADDR jobs=FILE` is the in-tree client. `docs/SERVING.md`
-//! is the operator's guide and the normative protocol spec.
+//! frames (`submit` / `submit-tune` / `status` / `result` / `drain`),
+//! and `rtf-reuse serve submit=ADDR jobs=FILE` is the in-tree client.
+//! `docs/SERVING.md` is the operator's guide and the normative protocol
+//! spec.
 //!
 //! Correctness under tenancy rests on the cache properties of
 //! [`crate::cache`]: 128-bit content keys (collision margin for a

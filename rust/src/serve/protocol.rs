@@ -25,9 +25,9 @@
 //! # Messages
 //!
 //! Each body is an object with a `"type"` field. Clients send `hello`,
-//! `submit`, `status`, `result`, `drain`; servers reply `hello`,
-//! `accepted`, `status-report`, `job-report`, `bill`, `error`. The
-//! conversation starts with a `hello`/`hello` version handshake
+//! `submit`, `submit-tune`, `status`, `result`, `drain`; servers reply
+//! `hello`, `accepted`, `status-report`, `job-report`, `bill`, `error`.
+//! The conversation starts with a `hello`/`hello` version handshake
 //! ([`PROTOCOL_VERSION`]); a server that cannot speak the client's
 //! version answers `error` with code [`codes::VERSION_MISMATCH`] and
 //! closes.
@@ -49,6 +49,7 @@ use std::io::{BufRead, Write};
 
 use crate::cache::CacheStats;
 use crate::jsonx::{obj, Json};
+use crate::tune::TuneSummary;
 use crate::{Error, Result};
 
 use super::service::{JobReport, ServiceReport};
@@ -56,7 +57,11 @@ use super::service::{JobReport, ServiceReport};
 /// Version negotiated by the `hello` handshake. Bump on any message-set
 /// or semantics change; the frame tag ([`FRAME_TAG`]) only bumps when
 /// the *frame layout* changes.
-pub const PROTOCOL_VERSION: u32 = 1;
+///
+/// History: v1 — the original study message set; v2 — adds the
+/// `submit-tune` job kind and the optional `tune` block on
+/// `job-report`.
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Frame tag: protocol name plus frame-format version.
 pub const FRAME_TAG: &str = "rtfp1";
@@ -96,6 +101,11 @@ pub enum Message {
     /// server-side by `StudyConfig::from_args`; execution-environment
     /// fields are pinned by the service).
     Submit { tenant: String, study: Vec<String> },
+    /// Submit one *tuning* job (protocol v2): `tune` is the `key=value`
+    /// option list of a `tune` CLI invocation (parsed server-side by
+    /// `TuneConfig::from_args`). Replied to with [`Message::Accepted`];
+    /// the finished job's `job-report` carries a `tune` block.
+    SubmitTune { tenant: String, tune: Vec<String> },
     /// The job was queued under this service-assigned id.
     Accepted { job: u64 },
     /// Ask for service-level queue counts.
@@ -130,8 +140,11 @@ pub struct WireJobReport {
     pub cached_tasks: u64,
     pub queue_wait_secs: f64,
     pub exec_wall_secs: f64,
-    /// Per-evaluation scalar outputs (the SA estimator inputs).
+    /// Per-evaluation scalar outputs (the SA estimator inputs). For a
+    /// tuning job: the per-generation best objective scores.
     pub y: Vec<f64>,
+    /// Tuning jobs only (protocol v2): what the optimizer found.
+    pub tune: Option<TuneSummary>,
 }
 
 impl WireJobReport {
@@ -152,6 +165,7 @@ impl From<&JobReport> for WireJobReport {
             queue_wait_secs: j.queue_wait.as_secs_f64(),
             exec_wall_secs: j.exec_wall.as_secs_f64(),
             y: j.y.clone(),
+            tune: j.tune.clone(),
         }
     }
 }
@@ -440,6 +454,30 @@ fn cache_stats_from_json(o: &Json) -> Result<CacheStats> {
     })
 }
 
+fn tune_summary_json(t: &TuneSummary) -> Json {
+    obj(vec![
+        ("method", js(&t.method)),
+        ("best_score", jf(t.best_score)),
+        ("initial_best_score", jf(t.initial_best_score)),
+        ("best_params", Json::Arr(t.best_params.iter().map(|&v| Json::Num(v)).collect())),
+        ("evaluated", ju(t.evaluated)),
+        ("memo_hits", ju(t.memo_hits)),
+        ("generations", ju(t.generations)),
+    ])
+}
+
+fn tune_summary_from_json(o: &Json) -> Result<TuneSummary> {
+    Ok(TuneSummary {
+        method: str_field(o, "method")?,
+        best_score: f64_field(o, "best_score")?,
+        initial_best_score: f64_field(o, "initial_best_score")?,
+        best_params: f64_arr(o, "best_params")?,
+        evaluated: u64_field(o, "evaluated")?,
+        memo_hits: u64_field(o, "memo_hits")?,
+        generations: u64_field(o, "generations")?,
+    })
+}
+
 impl WireJobReport {
     fn to_json(&self) -> Json {
         let mut fields = vec![
@@ -456,10 +494,17 @@ impl WireJobReport {
         if let Some(e) = &self.error {
             fields.push(("error", js(e)));
         }
+        if let Some(t) = &self.tune {
+            fields.push(("tune", tune_summary_json(t)));
+        }
         obj(fields)
     }
 
     fn from_json(o: &Json) -> Result<WireJobReport> {
+        let tune = match o.get("tune") {
+            None | Some(Json::Null) => None,
+            Some(t) => Some(tune_summary_from_json(t)?),
+        };
         Ok(WireJobReport {
             job: u64_field(o, "job")?,
             tenant: str_field(o, "tenant")?,
@@ -470,6 +515,7 @@ impl WireJobReport {
             queue_wait_secs: f64_field(o, "queue_wait_secs")?,
             exec_wall_secs: f64_field(o, "exec_wall_secs")?,
             y: f64_arr(o, "y")?,
+            tune,
         })
     }
 }
@@ -549,6 +595,7 @@ impl Message {
         match self {
             Message::Hello { .. } => "hello",
             Message::Submit { .. } => "submit",
+            Message::SubmitTune { .. } => "submit-tune",
             Message::Accepted { .. } => "accepted",
             Message::Status => "status",
             Message::StatusReport { .. } => "status-report",
@@ -572,6 +619,11 @@ impl Message {
                 ("type", js("submit")),
                 ("tenant", js(tenant)),
                 ("study", Json::Arr(study.iter().map(|s| js(s.as_str())).collect())),
+            ]),
+            Message::SubmitTune { tenant, tune } => obj(vec![
+                ("type", js("submit-tune")),
+                ("tenant", js(tenant)),
+                ("tune", Json::Arr(tune.iter().map(|s| js(s.as_str())).collect())),
             ]),
             Message::Accepted { job } => {
                 obj(vec![("type", js("accepted")), ("job", ju(*job))])
@@ -605,6 +657,10 @@ impl Message {
             "submit" => Ok(Message::Submit {
                 tenant: str_field(o, "tenant")?,
                 study: str_arr(o, "study")?,
+            }),
+            "submit-tune" => Ok(Message::SubmitTune {
+                tenant: str_field(o, "tenant")?,
+                tune: str_arr(o, "tune")?,
             }),
             "accepted" => Ok(Message::Accepted { job: u64_field(o, "job")? }),
             "status" => Ok(Message::Status),
@@ -648,6 +704,10 @@ mod tests {
             tenant: "alice".into(),
             study: vec!["method=moat".into(), "r=2".into()],
         });
+        roundtrip(Message::SubmitTune {
+            tenant: "alice".into(),
+            tune: vec!["tuner=ga".into(), "budget=32".into()],
+        });
         roundtrip(Message::Accepted { job: 42 });
         roundtrip(Message::Status);
         roundtrip(Message::StatusReport { queued: 3, running: 2, done: 7 });
@@ -662,6 +722,22 @@ mod tests {
             queue_wait_secs: 0.25,
             exec_wall_secs: 1.5,
             y: vec![0.5, 0.25],
+            tune: None,
+        })));
+        roundtrip(Message::JobDone(Box::new(WireJobReport {
+            job: 43,
+            tenant: "alice".into(),
+            y: vec![0.8, 0.9],
+            tune: Some(TuneSummary {
+                method: "genetic".into(),
+                best_score: 0.9,
+                initial_best_score: 0.8,
+                best_params: vec![45.0, 22.0],
+                evaluated: 20,
+                memo_hits: 12,
+                generations: 4,
+            }),
+            ..WireJobReport::default()
         })));
         roundtrip(Message::JobDone(Box::new(WireJobReport {
             error: Some("panic: boom".into()),

@@ -17,7 +17,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::config::StudyConfig;
+use crate::config::{StudyConfig, TuneConfig};
 use crate::{Error, Result};
 
 use super::protocol::{
@@ -126,6 +126,13 @@ fn handle_conn(
         let reply = match msg {
             Message::Submit { tenant, study } => match StudyConfig::from_args(&study) {
                 Ok(cfg) => match svc.submit(StudyJob { tenant, cfg }) {
+                    Ok(job) => Message::Accepted { job },
+                    Err(e) => error_msg(codes::DRAINING, &e.to_string()),
+                },
+                Err(e) => error_msg(codes::BAD_STUDY, &e.to_string()),
+            },
+            Message::SubmitTune { tenant, tune } => match TuneConfig::from_args(&tune) {
+                Ok(tc) => match svc.submit_tune(tenant, tc.study, tc.options) {
                     Ok(job) => Message::Accepted { job },
                     Err(e) => error_msg(codes::DRAINING, &e.to_string()),
                 },

@@ -12,10 +12,12 @@ use std::time::{Duration, Instant};
 use crate::cache::{CacheConfig, CacheStats, ReuseCache, ScopedCounters, WarmStartReport};
 use crate::config::{EngineMode, ServeConfig, StudyConfig};
 use crate::driver::{
-    make_inputs_with_engine, prepare, prune_plan_with_inputs, run_pjrt_with_inputs_scoped,
-    PreparedStudy, StudyInputs,
+    make_inputs_with_engine, prepare, prepare_candidates, prune_plan_with_inputs,
+    run_pjrt_with_inputs_scoped, PreparedStudy, StudyInputs,
 };
-use crate::runtime::{PjrtEngine, TaskTimer};
+use crate::runtime::PjrtEngine;
+use crate::sampling::default_space;
+use crate::tune::{run_tune, TuneOptions, TuneSummary};
 use crate::{Error, Result};
 
 /// Service shape. The service pins the execution-environment knobs
@@ -116,6 +118,16 @@ pub struct StudyJob {
     pub cfg: StudyConfig,
 }
 
+/// What a queued job runs: a one-shot SA study, or an optimizer-driven
+/// tuning loop of studies ([`crate::tune`]). Both kinds share the
+/// worker pool, the fair-admission scheduler, the per-tenant scopes and
+/// ONE reuse cache — a tenant's tuning run warms another tenant's SA
+/// study and vice versa.
+enum JobPayload {
+    Study(StudyConfig),
+    Tune(StudyConfig, TuneOptions),
+}
+
 /// What one job produced (returned inside [`ServiceReport::jobs`]).
 #[derive(Clone, Debug)]
 pub struct JobReport {
@@ -128,8 +140,11 @@ pub struct JobReport {
     /// comparison included). Cache-served work is in `cached_tasks`.
     pub launches: u64,
     pub cached_tasks: u64,
-    /// Per-evaluation scalar outputs (the SA estimator inputs).
+    /// Per-evaluation scalar outputs (the SA estimator inputs). For a
+    /// tuning job: the per-generation best objective scores.
     pub y: Vec<f64>,
+    /// Tuning jobs only: what the optimizer found.
+    pub tune: Option<TuneSummary>,
     /// Time spent queued before a worker picked the job up.
     pub queue_wait: Duration,
     /// Wall time of the study execution itself.
@@ -215,7 +230,8 @@ impl ServiceReport {
 
 struct Queued {
     id: u64,
-    job: StudyJob,
+    tenant: String,
+    payload: JobPayload,
     submitted: Instant,
 }
 
@@ -255,7 +271,7 @@ fn pop_next(st: &mut ServiceState, opts: &ServeOptions) -> Option<Queued> {
     let mut seen: HashSet<&str> = HashSet::new();
     let mut best: Option<(u64, usize)> = None;
     for (pos, q) in st.queue.iter().enumerate() {
-        let tenant = q.job.tenant.as_str();
+        let tenant = q.tenant.as_str();
         if !seen.insert(tenant) {
             continue; // only a tenant's oldest job is a candidate
         }
@@ -269,7 +285,7 @@ fn pop_next(st: &mut ServiceState, opts: &ServeOptions) -> Option<Queued> {
     }
     let (pass, pos) = best?;
     let q = st.queue.remove(pos).expect("candidate position is in the queue");
-    let tenant = q.job.tenant.clone();
+    let tenant = q.tenant.clone();
     st.virtual_time = st.virtual_time.max(pass);
     st.pass.insert(tenant.clone(), pass + STRIDE / opts.weight_of(&tenant));
     *st.inflight.entry(tenant).or_insert(0) += 1;
@@ -291,26 +307,6 @@ struct Inner {
     input_launches: AtomicU64,
     /// What the boot-time warm start admitted.
     warm: WarmStartReport,
-}
-
-/// Backend launches a timer has recorded (non-`#cached` rows).
-fn timer_launches(timer: &TaskTimer) -> u64 {
-    timer
-        .summary()
-        .iter()
-        .filter(|(name, _, _)| !name.ends_with("#cached"))
-        .map(|(_, _, n)| n)
-        .sum()
-}
-
-/// Cache-served executions a timer has recorded (`#cached` rows).
-fn timer_cached(timer: &TaskTimer) -> u64 {
-    timer
-        .summary()
-        .iter()
-        .filter(|(name, _, _)| name.ends_with("#cached"))
-        .map(|(_, _, n)| n)
-        .sum()
 }
 
 /// The long-lived multi-tenant study service (see the module docs).
@@ -371,28 +367,43 @@ impl StudyService {
         self.inner.warm
     }
 
-    /// Enqueue a job. Returns its id, or an error once draining started.
+    /// Enqueue a study job. Returns its id, or an error once draining
+    /// started.
     pub fn submit(&self, job: StudyJob) -> Result<u64> {
+        self.submit_payload(job.tenant, JobPayload::Study(job.cfg))
+    }
+
+    /// Enqueue a tuning job ([`crate::tune`]): an optimizer loop whose
+    /// candidate studies all ride the service's shared cache under the
+    /// tenant's account. Same admission, caps and billing as studies.
+    pub fn submit_tune(
+        &self,
+        tenant: impl Into<String>,
+        cfg: StudyConfig,
+        opts: TuneOptions,
+    ) -> Result<u64> {
+        self.submit_payload(tenant.into(), JobPayload::Tune(cfg, opts))
+    }
+
+    fn submit_payload(&self, tenant: String, payload: JobPayload) -> Result<u64> {
         let mut st = self.inner.state.lock().unwrap();
         if st.draining {
             return Err(Error::Coordinator(format!(
-                "service is draining; job for tenant `{}` rejected",
-                job.tenant
+                "service is draining; job for tenant `{tenant}` rejected"
             )));
         }
         let id = st.next_id;
         st.next_id += 1;
         // a tenant going from idle to busy starts at the current
         // virtual time: waiting earns priority, idling does not
-        let tenant = job.tenant.clone();
         let busy = st.inflight.get(&tenant).copied().unwrap_or(0) > 0
-            || st.queue.iter().any(|q| q.job.tenant == tenant);
+            || st.queue.iter().any(|q| q.tenant == tenant);
         if !busy {
             let vt = st.virtual_time;
-            let pass = st.pass.entry(tenant).or_insert(vt);
+            let pass = st.pass.entry(tenant.clone()).or_insert(vt);
             *pass = (*pass).max(vt);
         }
-        st.queue.push_back(Queued { id, job, submitted: Instant::now() });
+        st.queue.push_back(Queued { id, tenant, payload, submitted: Instant::now() });
         self.inner.cv.notify_all();
         Ok(id)
     }
@@ -519,7 +530,7 @@ fn worker_loop(inner: Arc<Inner>) {
                 st = inner.cv.wait(st).unwrap();
             }
         };
-        let tenant = queued.job.tenant.clone();
+        let tenant = queued.tenant.clone();
         let report = inner.run_job(queued);
         let mut st = inner.state.lock().unwrap();
         st.results.push(report);
@@ -559,9 +570,9 @@ impl Inner {
         if let Some(inputs) = self.inputs.lock().unwrap().get(&key) {
             return Ok(Arc::clone(inputs));
         }
-        let before = timer_launches(leader.timer());
+        let before = leader.timer().launches();
         let inputs = make_inputs_with_engine(cfg, prepared, &mut leader)?;
-        let built = timer_launches(leader.timer()) - before;
+        let built = leader.timer().launches() - before;
         let inputs = Arc::new(inputs);
         // publish under the leader lock: a same-key racer's re-check
         // above cannot miss it and rebuild
@@ -572,29 +583,31 @@ impl Inner {
     }
 
     fn run_job(&self, queued: Queued) -> JobReport {
-        let Queued { id, job, submitted } = queued;
+        let Queued { id, tenant, payload, submitted } = queued;
         let queue_wait = submitted.elapsed();
         let mut report = JobReport {
             job: id,
-            tenant: job.tenant.clone(),
+            tenant: tenant.clone(),
             error: None,
             n_evals: 0,
             launches: 0,
             cached_tasks: 0,
             y: Vec::new(),
+            tune: None,
             queue_wait,
             exec_wall: Duration::ZERO,
         };
         // a panicking study must not take the worker (and the tenant's
         // in-flight slot) down with it
-        let outcome = catch_unwind(AssertUnwindSafe(|| self.execute_job(&job)));
+        let outcome = catch_unwind(AssertUnwindSafe(|| self.execute_job(&tenant, &payload)));
         match outcome {
-            Ok(Ok((n_evals, launches, cached, y, wall))) => {
-                report.n_evals = n_evals;
-                report.launches = launches;
-                report.cached_tasks = cached;
-                report.y = y;
-                report.exec_wall = wall;
+            Ok(Ok(out)) => {
+                report.n_evals = out.n_evals;
+                report.launches = out.launches;
+                report.cached_tasks = out.cached_tasks;
+                report.y = out.y;
+                report.tune = out.tune;
+                report.exec_wall = out.exec_wall;
             }
             Ok(Err(e)) => report.error = Some(e.to_string()),
             Err(panic) => {
@@ -609,38 +622,72 @@ impl Inner {
         report
     }
 
-    /// Returns `(n_evals, launches, cached_tasks, y, exec_wall)`.
-    #[allow(clippy::type_complexity)]
-    fn execute_job(&self, job: &StudyJob) -> Result<(usize, u64, u64, Vec<f64>, Duration)> {
+    fn execute_job(&self, tenant: &str, payload: &JobPayload) -> Result<ExecOut> {
         // pin the execution environment to the service's
-        let mut cfg = job.cfg.clone();
+        let base = match payload {
+            JobPayload::Study(cfg) => cfg,
+            JobPayload::Tune(cfg, _) => cfg,
+        };
+        let mut cfg = base.clone();
         cfg.engine = EngineMode::Pjrt;
         cfg.artifacts_dir = self.opts.artifacts_dir.clone();
         cfg.workers = self.opts.study_workers;
         cfg.batch_width = self.opts.batch_width;
 
-        let prepared = prepare(&cfg);
-        let mut plan = prepared.plan(&cfg);
-        let inputs = self.inputs_for(&cfg, &prepared)?;
-        // planning-time probe: LPT orders by work that will actually run
-        let _ = prune_plan_with_inputs(&prepared, &mut plan, &self.cache, &inputs);
-        let scope = self.scope_of(&job.tenant);
-        let outcome = run_pjrt_with_inputs_scoped(
-            &cfg,
-            &prepared,
-            &plan,
-            Some(Arc::clone(&self.cache)),
-            Some(scope),
-            &inputs,
-        )?;
-        Ok((
-            prepared.n_evals(),
-            timer_launches(&outcome.timer),
-            timer_cached(&outcome.timer),
-            outcome.y,
-            outcome.wall,
-        ))
+        match payload {
+            JobPayload::Study(_) => {
+                let prepared = prepare(&cfg);
+                let mut plan = prepared.plan(&cfg);
+                let inputs = self.inputs_for(&cfg, &prepared)?;
+                // planning-time probe: LPT orders by work that will run
+                let _ = prune_plan_with_inputs(&prepared, &mut plan, &self.cache, &inputs);
+                let scope = self.scope_of(tenant);
+                let outcome = run_pjrt_with_inputs_scoped(
+                    &cfg,
+                    &prepared,
+                    &plan,
+                    Some(Arc::clone(&self.cache)),
+                    Some(scope),
+                    &inputs,
+                )?;
+                Ok(ExecOut {
+                    n_evals: prepared.n_evals(),
+                    launches: outcome.timer.launches(),
+                    cached_tasks: outcome.timer.cached_served(),
+                    y: outcome.y,
+                    tune: None,
+                    exec_wall: outcome.wall,
+                })
+            }
+            JobPayload::Tune(_, topts) => {
+                // the tuning loop shares the leader-built study inputs
+                // with plain studies of the same workload (same memo key)
+                let probe = prepare_candidates(&cfg, &[default_space().defaults()]);
+                let inputs = self.inputs_for(&cfg, &probe)?;
+                let scope = self.scope_of(tenant);
+                let outcome =
+                    run_tune(&cfg, topts, Some(Arc::clone(&self.cache)), Some(scope), &inputs)?;
+                Ok(ExecOut {
+                    n_evals: outcome.evaluated * cfg.tiles.max(1),
+                    launches: outcome.launches,
+                    cached_tasks: outcome.cached_tasks,
+                    y: outcome.history.iter().map(|g| g.best_score).collect(),
+                    tune: Some(outcome.summary()),
+                    exec_wall: outcome.wall,
+                })
+            }
+        }
     }
+}
+
+/// What [`Inner::execute_job`] hands back to the report builder.
+struct ExecOut {
+    n_evals: usize,
+    launches: u64,
+    cached_tasks: u64,
+    y: Vec<f64>,
+    tune: Option<TuneSummary>,
+    exec_wall: Duration,
 }
 
 #[cfg(test)]
@@ -706,7 +753,8 @@ mod tests {
     fn queued_job(id: u64, tenant: &str) -> Queued {
         Queued {
             id,
-            job: StudyJob { tenant: tenant.into(), cfg: StudyConfig::default() },
+            tenant: tenant.into(),
+            payload: JobPayload::Study(StudyConfig::default()),
             submitted: Instant::now(),
         }
     }
@@ -733,7 +781,7 @@ mod tests {
         }
         let mut popped = Vec::new();
         for _ in 0..10 {
-            popped.push(pop_next(&mut st, &opts).expect("work available").job.tenant);
+            popped.push(pop_next(&mut st, &opts).expect("work available").tenant);
         }
         let a = popped.iter().filter(|t| *t == "a").count();
         let b = popped.iter().filter(|t| *t == "b").count();
@@ -759,13 +807,13 @@ mod tests {
         let mut light_served_at = None;
         for n in 0..201 {
             let q = pop_next(&mut st, &opts).expect("work available");
-            if q.job.tenant == "light" {
+            if q.tenant == "light" {
                 light_served_at = Some(n);
                 break;
             }
         }
         assert!(light_served_at.is_some(), "the weight-1 tenant must be served eventually");
-        assert!(st.queue.iter().all(|q| q.job.tenant == "heavy"));
+        assert!(st.queue.iter().all(|q| q.tenant == "heavy"));
     }
 
     #[test]
@@ -777,8 +825,8 @@ mod tests {
         st.queue.push_back(queued_job(2, "b"));
         // a's first job takes its only in-flight slot; the next pop must
         // skip a's queued job and serve b despite a's huge weight
-        assert_eq!(pop_next(&mut st, &opts).unwrap().job.tenant, "a");
-        assert_eq!(pop_next(&mut st, &opts).unwrap().job.tenant, "b");
+        assert_eq!(pop_next(&mut st, &opts).unwrap().tenant, "a");
+        assert_eq!(pop_next(&mut st, &opts).unwrap().tenant, "b");
         assert!(pop_next(&mut st, &opts).is_none(), "a is capped, nothing is eligible");
         // a's job finishing frees the slot
         *st.inflight.get_mut("a").unwrap() -= 1;
@@ -804,7 +852,7 @@ mod tests {
         st.queue.push_back(queued_job(50, "a"));
         st.queue.push_back(queued_job(51, "b"));
         let order: Vec<String> =
-            (0..2).map(|_| pop_next(&mut st, &opts).unwrap().job.tenant).collect();
+            (0..2).map(|_| pop_next(&mut st, &opts).unwrap().tenant).collect();
         // equal weights from a shared starting point: strict alternation,
         // not a burst of b catching up on banked time
         assert_eq!(order.iter().filter(|t| *t == "b").count(), 1);

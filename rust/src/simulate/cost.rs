@@ -26,7 +26,23 @@ impl CostModel {
         self.costs.get(task).copied().unwrap_or(self.default_cost)
     }
 
-    /// Build from real measurements (`rtf-reuse profile-tasks`).
+    /// Build from real measurements (`rtf-reuse profile-tasks`); the
+    /// tuning objective layer ([`crate::tune::Objective`]) prices
+    /// candidate task chains with the resulting model.
+    ///
+    /// ```
+    /// use std::time::Duration;
+    ///
+    /// use rtf_reuse::runtime::TaskTimer;
+    /// use rtf_reuse::simulate::CostModel;
+    ///
+    /// let mut timer = TaskTimer::with_tasks(vec!["t1".into()]);
+    /// timer.record(0, false, Duration::from_millis(200));
+    /// timer.record(0, false, Duration::from_millis(400));
+    /// let model = CostModel::from_timer(&timer);
+    /// assert!((model.cost_of("t1") - 0.3).abs() < 1e-9);
+    /// assert_eq!(model.cost_of("unmeasured"), model.default_cost);
+    /// ```
     pub fn from_timer(timer: &TaskTimer) -> Self {
         let mut costs = HashMap::new();
         for (name, mean, _) in timer.summary() {

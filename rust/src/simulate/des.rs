@@ -26,11 +26,18 @@ pub struct SimOptions {
     pub cost_cv: f64,
     /// Seed for the cost jitter.
     pub seed: u64,
+    /// Frontier batch width the simulated workers execute with (≥ 1): a
+    /// unit's per-level task nodes run in `ceil(n / width)` batched
+    /// launches, each paying `launch_overhead` once.
+    pub batch_width: usize,
+    /// Fixed per-launch overhead in seconds. 0 (the default) restores
+    /// the pre-batching cost model exactly.
+    pub launch_overhead: f64,
 }
 
 impl SimOptions {
     pub fn new(workers: usize) -> Self {
-        Self { workers, cores: 1, cost_cv: 0.0, seed: 0 }
+        Self { workers, cores: 1, cost_cv: 0.0, seed: 0, batch_width: 1, launch_overhead: 0.0 }
     }
 
     pub fn with_cores(mut self, cores: usize) -> Self {
@@ -41,6 +48,17 @@ impl SimOptions {
     pub fn with_cv(mut self, cv: f64, seed: u64) -> Self {
         self.cost_cv = cv;
         self.seed = seed;
+        self
+    }
+
+    /// Model frontier batching: `width`-wide launches, each charging
+    /// `launch_overhead` seconds once — the `launch + B·marginal` model
+    /// of [`crate::merging::batched_unit_cost`]. Unit durations (and
+    /// therefore the LPT dispatch order of the simulation) then price
+    /// batched cost, not task count.
+    pub fn with_batch(mut self, width: usize, launch_overhead: f64) -> Self {
+        self.batch_width = width.max(1);
+        self.launch_overhead = launch_overhead.max(0.0);
         self
     }
 }
@@ -151,6 +169,25 @@ fn unit_duration(
                 ready.push_back(c);
             }
         }
+    }
+    if opts.launch_overhead > 0.0 {
+        // frontier batching: the unit's tree levels execute in
+        // width-sized cohorts, one fixed launch charge each — the same
+        // launch + B·marginal pricing LPT dispatch orders units by
+        // (`merging::unit_launch_count` semantics, counted on the tree
+        // this function already built; empty task paths cost 1 launch)
+        let launches: usize = if stages.first().map(|s| s.path.is_empty()).unwrap_or(true) {
+            1
+        } else {
+            tree.walk()
+                .iter()
+                .map(|level| {
+                    let tasks = level.iter().filter(|n| n.stage.is_none()).count();
+                    tasks.div_ceil(opts.batch_width)
+                })
+                .sum()
+        };
+        now += launches as f64 * opts.launch_overhead;
     }
     now
 }
@@ -331,6 +368,30 @@ mod tests {
             r_rt.makespan,
             r_nr.makespan
         );
+    }
+
+    #[test]
+    fn launch_overhead_prices_batching() {
+        let (g, insts) = study(12, |id, p| p[5] = 5.0 * (id % 6 + 1) as f64);
+        let plan = plan_study(&g, &insts, FineAlgorithm::Rtma(4));
+        let model = default_cost_model();
+        let base = simulate_plan(&plan, &g, &insts, &model, &SimOptions::new(1));
+        let narrow =
+            simulate_plan(&plan, &g, &insts, &model, &SimOptions::new(1).with_batch(1, 0.05));
+        let wide =
+            simulate_plan(&plan, &g, &insts, &model, &SimOptions::new(1).with_batch(16, 0.05));
+        // overhead costs something, wider batches amortize it away
+        assert!(narrow.makespan > base.makespan);
+        assert!(
+            wide.makespan < narrow.makespan,
+            "wide {} narrow {}",
+            wide.makespan,
+            narrow.makespan
+        );
+        assert!(wide.makespan >= base.makespan);
+        // the default options reproduce the pre-batching model exactly
+        let default_again = simulate_plan(&plan, &g, &insts, &model, &SimOptions::new(1));
+        assert_eq!(base.makespan, default_again.makespan);
     }
 
     #[test]

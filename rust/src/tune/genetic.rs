@@ -1,0 +1,228 @@
+//! Genetic-algorithm tuner: (μ+λ) selection with uniform crossover and
+//! level-jitter mutation over **grid-level genomes** — every gene is an
+//! index into one active parameter's discrete Table-1 grid, so the
+//! population lives on exactly the quantized points the memo table and
+//! the chain cache key on. Crossover recombines grid cells two good
+//! parents already paid for; mutation moves at most two levels, so
+//! children's task chains share long prefixes with their parents' —
+//! which is what makes GA generations the highest-reuse workload of the
+//! study cache.
+//!
+//! Determinism: all randomness flows from one [`SplitMix64`] seeded by
+//! the study seed; survivor selection sorts by score with a stable
+//! sort, so ties resolve by insertion order. Same seed + same scores ⇒
+//! the same ask/tell trajectory, whatever the cache or batch width did.
+
+use crate::data::SplitMix64;
+use crate::sampling::{ParamSet, ParamSpace};
+
+use super::{TuneOptions, Tuner};
+
+/// One genome: a grid-level index per active parameter.
+type Genome = Vec<usize>;
+
+/// The GA tuner (see the module docs).
+pub struct Genetic {
+    space: ParamSpace,
+    active: Vec<usize>,
+    defaults: ParamSet,
+    pop_size: usize,
+    budget: usize,
+    mutation: f64,
+    init_window: (f64, f64),
+    rng: SplitMix64,
+    asked_total: usize,
+    /// Scored survivors, best first.
+    population: Vec<(Genome, f64)>,
+    /// The generation awaiting scores.
+    pending: Vec<Genome>,
+}
+
+impl Genetic {
+    /// A GA over `active` parameter indices of `space`; everything else
+    /// stays at the space defaults.
+    pub fn new(space: ParamSpace, active: Vec<usize>, opts: &TuneOptions, seed: u64) -> Self {
+        assert!(!active.is_empty(), "GA needs at least one active parameter");
+        let defaults = space.defaults();
+        Self {
+            space,
+            active,
+            defaults,
+            pop_size: opts.population.max(2),
+            budget: opts.budget.max(1),
+            mutation: opts.mutation.clamp(0.0, 1.0),
+            init_window: opts.init_window,
+            rng: SplitMix64::new(seed ^ 0x6761), // domain-separated from the samplers
+            asked_total: 0,
+            population: Vec::new(),
+            pending: Vec::new(),
+        }
+    }
+
+    fn levels_of(&self, gene: usize) -> usize {
+        self.space.params[self.active[gene]].levels()
+    }
+
+    fn random_genome(&mut self) -> Genome {
+        let (lo, hi) = self.init_window;
+        let mut genome = Vec::with_capacity(self.active.len());
+        for &p in &self.active {
+            let f = self.rng.uniform(lo, hi);
+            genome.push(self.space.params[p].level_of_fraction(f));
+        }
+        genome
+    }
+
+    fn params_of(&self, genome: &[usize]) -> ParamSet {
+        let mut params = self.defaults.clone();
+        for (gene, &level) in genome.iter().enumerate() {
+            let p = self.active[gene];
+            params[p] = self.space.params[p].value_at(level);
+        }
+        params
+    }
+
+    /// Binary tournament on the (best-first) population: the better —
+    /// i.e. lower-indexed — of two uniform draws.
+    fn tournament(&mut self) -> Genome {
+        let n = self.population.len();
+        let a = self.rng.uniform_usize(0, n);
+        let b = self.rng.uniform_usize(0, n);
+        self.population[a.min(b)].0.clone()
+    }
+
+    fn child(&mut self) -> Genome {
+        let pa = self.tournament();
+        let pb = self.tournament();
+        let mut genome = Vec::with_capacity(pa.len());
+        for gene in 0..pa.len() {
+            let from_a = self.rng.next_f64() < 0.5;
+            genome.push(if from_a { pa[gene] } else { pb[gene] });
+        }
+        for gene in 0..genome.len() {
+            if self.rng.next_f64() < self.mutation {
+                let span = self.levels_of(gene);
+                let step = 1 + self.rng.uniform_usize(0, 2); // one or two levels
+                genome[gene] = if self.rng.next_f64() < 0.5 {
+                    genome[gene].saturating_sub(step)
+                } else {
+                    (genome[gene] + step).min(span - 1)
+                };
+            }
+        }
+        genome
+    }
+}
+
+impl Tuner for Genetic {
+    fn name(&self) -> &'static str {
+        "genetic"
+    }
+
+    fn ask(&mut self) -> Vec<ParamSet> {
+        assert!(self.pending.is_empty(), "tell() the previous generation first");
+        if self.asked_total >= self.budget {
+            return Vec::new();
+        }
+        let n = if self.population.is_empty() {
+            self.pop_size // the initial population
+        } else {
+            self.pop_size - 1 // survivors carry the elite over unchanged
+        };
+        let mut generation: Vec<Genome> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let g = if self.population.is_empty() {
+                self.random_genome()
+            } else {
+                self.child()
+            };
+            generation.push(g);
+        }
+        self.asked_total += generation.len();
+        let sets = generation.iter().map(|g| self.params_of(g)).collect();
+        self.pending = generation;
+        sets
+    }
+
+    fn tell(&mut self, scores: &[f64]) {
+        assert_eq!(scores.len(), self.pending.len(), "scores must match the asked generation");
+        let children = std::mem::take(&mut self.pending);
+        self.population.extend(children.into_iter().zip(scores.iter().copied()));
+        // (μ+λ): parents and children compete; stable sort keeps the
+        // earlier-ranked genome on score ties, so selection is
+        // deterministic
+        self.population.sort_by(|a, b| b.1.total_cmp(&a.1));
+        self.population.truncate(self.pop_size);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::default_space;
+    use crate::tune::TunerKind;
+
+    fn opts(budget: usize, population: usize) -> TuneOptions {
+        TuneOptions { method: TunerKind::Genetic, budget, population, ..TuneOptions::default() }
+    }
+
+    #[test]
+    fn fixed_seed_trajectories_are_identical() {
+        // a deterministic pseudo-score peaking at the defaults
+        fn score(s: &[f64]) -> f64 {
+            -(s[5] - 45.0).abs() - (s[6] - 22.0).abs()
+        }
+        let run = || {
+            let mut ga = Genetic::new(default_space(), vec![5, 6], &opts(12, 4), 7);
+            let mut asked = Vec::new();
+            loop {
+                let generation = ga.ask();
+                if generation.is_empty() {
+                    break;
+                }
+                let scores: Vec<f64> = generation.iter().map(|s| score(s)).collect();
+                asked.push(generation);
+                ga.tell(&scores);
+            }
+            asked
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "same seed, same trajectory");
+        assert!(a.len() >= 3, "budget 12 at population 4 runs several generations");
+        assert_eq!(a[0].len(), 4);
+        assert_eq!(a[1].len(), 3, "later generations re-breed around the elite");
+    }
+
+    #[test]
+    fn genomes_stay_on_grid_and_respect_active_dims() {
+        let space = default_space();
+        let mut ga = Genetic::new(space.clone(), vec![5], &opts(8, 4), 1);
+        let generation = ga.ask();
+        for set in &generation {
+            space.validate(set).expect("candidates lie on the grids");
+            for (i, v) in set.iter().enumerate() {
+                if i != 5 {
+                    assert_eq!(*v, space.defaults()[i], "inactive dims stay at defaults");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn budget_bounds_total_asks() {
+        let mut ga = Genetic::new(default_space(), vec![5, 6], &opts(5, 4), 3);
+        let mut total = 0;
+        loop {
+            let generation = ga.ask();
+            if generation.is_empty() {
+                break;
+            }
+            total += generation.len();
+            let scores = vec![0.0; generation.len()];
+            ga.tell(&scores);
+        }
+        // generations are atomic: the last may overshoot by < population
+        assert!(total >= 5 && total < 5 + 4, "asked {total}");
+    }
+}

@@ -1,0 +1,307 @@
+//! Parameter auto-tuning: optimizer-driven studies riding the shared
+//! reuse cache.
+//!
+//! The paper's SA studies *measure* parameter influence; the natural
+//! next workload — the one its successors run ("Tuning for Tissue Image
+//! Segmentation Workflows for Accuracy and Performance") — *optimizes*
+//! the parameters, and run-time analyses of those searches show
+//! Nelder-Mead and genetic optimizers revisit quantized parameter
+//! points constantly, making tuning the highest-reuse workload of all.
+//! This module wraps the existing study machinery in that loop:
+//!
+//! * a [`Tuner`] trait (ask a generation of candidates / tell their
+//!   scores) with two implementations — [`NelderMead`] (speculatively
+//!   batched downhill simplex) and [`Genetic`] (crossover + mutation
+//!   over grid-level genomes);
+//! * an objective layer ([`Objective`], [`CandidateEvaluator`]) that
+//!   scores each generation by running it as ONE multi-unit study
+//!   through [`crate::driver::run_pjrt_with_inputs_scoped`] — Dice or
+//!   Jaccard against the reference masks, optionally cost-penalized by
+//!   a [`crate::simulate::CostModel`] — so frontier batching stacks
+//!   sibling candidates into batched kernel launches;
+//! * a per-run **memo table** keyed by the quantized 128-bit
+//!   [`crate::cache::candidate_key`], so a revisited point skips even
+//!   the study setup, while partial chain overlap between neighboring
+//!   candidates hits the shared [`crate::cache::ReuseCache`] exactly as
+//!   the paper predicts.
+//!
+//! Entry points: [`run_tune`] (explicit cache/scope/inputs — what the
+//! multi-tenant service's tuning job kind calls) and
+//! [`run_tune_standalone`] (builds its own; the `tune` CLI mode).
+//! Determinism: for a fixed seed the whole run is bit-identical across
+//! batch widths and cache on/off — caching and batching change launch
+//! counts, never results (`tests/tune_reuse.rs` asserts this; the
+//! acceptance bench is `benches/tune_convergence.rs`).
+
+mod genetic;
+mod objective;
+mod simplex;
+
+pub use genetic::Genetic;
+pub use objective::{CandidateEvaluator, Objective, ObjectiveKind};
+pub use simplex::NelderMead;
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::cache::{CacheStats, ReuseCache, ScopedCounters};
+use crate::config::StudyConfig;
+use crate::driver::{build_cache, make_inputs, prepare_candidates, StudyInputs};
+use crate::sampling::{default_space, ParamSet, CANONICAL_ACTIVE};
+use crate::{Error, Result};
+
+/// Which optimizer drives the search.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TunerKind {
+    /// Nelder-Mead downhill simplex with speculatively batched probes.
+    Simplex,
+    /// Genetic algorithm over grid-level genomes.
+    Genetic,
+}
+
+impl TunerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TunerKind::Simplex => "simplex",
+            TunerKind::Genetic => "genetic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "nm" | "simplex" | "nelder-mead" => Ok(TunerKind::Simplex),
+            "ga" | "genetic" => Ok(TunerKind::Genetic),
+            other => Err(Error::Config(format!("unknown tuner `{other}`"))),
+        }
+    }
+}
+
+/// Tuning-run knobs, orthogonal to the per-candidate [`StudyConfig`]
+/// (which supplies tiles, seed, cache, batch width, workers — its
+/// `method`/`sampler` are ignored by tuning).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneOptions {
+    pub method: TunerKind,
+    /// Evaluation budget: the loop stops asking once this many
+    /// candidates were proposed (generations are atomic, so the last
+    /// one may overshoot by less than one generation).
+    pub budget: usize,
+    /// GA population size (the simplex ignores it).
+    pub population: usize,
+    /// Search over the first `k_active` parameters of the canonical
+    /// MOAT-screen ranking ([`CANONICAL_ACTIVE`]); ignored when
+    /// `active` names explicit indices.
+    pub k_active: usize,
+    /// Explicit active parameter indices (empty = canonical top-k).
+    pub active: Vec<usize>,
+    pub objective: ObjectiveKind,
+    /// Cost-penalty weight of the objective (see [`Objective`]).
+    pub cost_lambda: f64,
+    /// Initial candidates draw their per-dimension grid fractions from
+    /// this window of [0, 1] — `(0.0, 1.0)` spans each grid; a narrow
+    /// window starts the search in a known region (e.g. away from the
+    /// incumbent defaults).
+    pub init_window: (f64, f64),
+    /// GA per-gene mutation probability.
+    pub mutation: f64,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        Self {
+            method: TunerKind::Genetic,
+            budget: 64,
+            population: 12,
+            k_active: 8,
+            active: Vec::new(),
+            objective: ObjectiveKind::Dice,
+            cost_lambda: 0.0,
+            init_window: (0.0, 1.0),
+            mutation: 0.25,
+        }
+    }
+}
+
+impl TuneOptions {
+    /// The active parameter indices this run searches over.
+    pub fn active_params(&self) -> Vec<usize> {
+        if self.active.is_empty() {
+            CANONICAL_ACTIVE.iter().copied().take(self.k_active.clamp(1, 8)).collect()
+        } else {
+            self.active.clone()
+        }
+    }
+}
+
+/// An optimizer over parameter sets: propose a generation, learn its
+/// scores, repeat. Scores are maximized. Implementations must be
+/// deterministic in (construction seed, told scores) — the tuning
+/// loop's bit-reproducibility rests on it.
+pub trait Tuner {
+    fn name(&self) -> &'static str;
+    /// The next generation of candidates (empty = converged or budget
+    /// exhausted). Every `ask` must be answered by one `tell` before
+    /// the next `ask`.
+    fn ask(&mut self) -> Vec<ParamSet>;
+    /// Scores for the last asked generation, same order, higher better.
+    fn tell(&mut self, scores: &[f64]);
+}
+
+/// Build the tuner a [`TuneOptions`] describes, seeded for determinism.
+pub fn build_tuner(opts: &TuneOptions, seed: u64) -> Box<dyn Tuner> {
+    let space = default_space();
+    let active = opts.active_params();
+    match opts.method {
+        TunerKind::Genetic => Box::new(Genetic::new(space, active, opts, seed)),
+        TunerKind::Simplex => Box::new(NelderMead::new(space, active, opts, seed)),
+    }
+}
+
+/// One generation's progress row.
+#[derive(Clone, Debug)]
+pub struct GenerationReport {
+    pub gen: usize,
+    /// Candidates the tuner proposed.
+    pub asked: usize,
+    /// Of those, how many actually ran as studies...
+    pub evaluated: usize,
+    /// ...and how many the per-run memo table served.
+    pub memo_hits: usize,
+    /// Best score seen so far (cumulative).
+    pub best_score: f64,
+}
+
+/// What a tuning run found.
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    pub method: TunerKind,
+    /// The best candidate (full parameter set, on the Table-1 grids).
+    pub best_params: ParamSet,
+    pub best_score: f64,
+    /// Best score of the *initial* generation — the convergence
+    /// baseline the acceptance bench measures improvement against.
+    pub initial_best_score: f64,
+    pub history: Vec<GenerationReport>,
+    /// Candidates proposed / actually executed / memo-served.
+    pub asked: usize,
+    pub evaluated: usize,
+    pub memo_hits: usize,
+    /// Backend launches paid / executions served by the shared cache.
+    pub launches: u64,
+    pub cached_tasks: u64,
+    pub wall: Duration,
+    /// Shared-cache counters at the end of the run (when attached).
+    pub cache: Option<CacheStats>,
+}
+
+impl TuneOutcome {
+    /// Did the search strictly improve on the best initial candidate?
+    pub fn improved(&self) -> bool {
+        self.best_score > self.initial_best_score
+    }
+
+    /// The compact summary serve job reports carry over the wire.
+    pub fn summary(&self) -> TuneSummary {
+        TuneSummary {
+            method: self.method.name().to_string(),
+            best_score: self.best_score,
+            initial_best_score: self.initial_best_score,
+            best_params: self.best_params.clone(),
+            evaluated: self.evaluated as u64,
+            memo_hits: self.memo_hits as u64,
+            generations: self.history.len() as u64,
+        }
+    }
+}
+
+/// Compact tuning-run summary attached to serve job reports (in-process
+/// and over the wire — `serve/protocol.rs` serializes it verbatim).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TuneSummary {
+    pub method: String,
+    pub best_score: f64,
+    pub initial_best_score: f64,
+    pub best_params: Vec<f64>,
+    pub evaluated: u64,
+    pub memo_hits: u64,
+    pub generations: u64,
+}
+
+/// Run one tuning loop: ask generations, score each as one batched
+/// study, tell the scores back, until the tuner converges or the budget
+/// runs out. `cache`/`scope`/`inputs` follow the
+/// [`crate::driver::run_pjrt_with_inputs_scoped`] contract — the
+/// multi-tenant service passes its process-lifetime cache and the
+/// tenant's counter scope here, so concurrent tuning runs share one
+/// cache and bill separately.
+pub fn run_tune(
+    cfg: &StudyConfig,
+    opts: &TuneOptions,
+    cache: Option<Arc<ReuseCache>>,
+    scope: Option<Arc<ScopedCounters>>,
+    inputs: &StudyInputs,
+) -> Result<TuneOutcome> {
+    let start = Instant::now();
+    let mut tuner = build_tuner(opts, cfg.seed);
+    let objective = Objective::for_study(cfg, opts.objective, opts.cost_lambda);
+    let mut ev = CandidateEvaluator::new(cfg, objective, cache.clone(), scope, inputs);
+
+    let mut history: Vec<GenerationReport> = Vec::new();
+    let mut best: Option<(f64, ParamSet)> = None;
+    let mut initial_best = f64::NEG_INFINITY;
+    let mut asked_total = 0usize;
+    loop {
+        if asked_total >= opts.budget {
+            break;
+        }
+        let generation = tuner.ask();
+        if generation.is_empty() {
+            break;
+        }
+        let (ev_before, memo_before) = (ev.evaluated, ev.memo_hits);
+        let scores = ev.score_batch(&generation)?;
+        for (set, &score) in generation.iter().zip(&scores) {
+            if best.as_ref().is_none_or(|(b, _)| score > *b) {
+                best = Some((score, set.clone()));
+            }
+        }
+        if history.is_empty() {
+            initial_best = scores.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        }
+        asked_total += generation.len();
+        history.push(GenerationReport {
+            gen: history.len(),
+            asked: generation.len(),
+            evaluated: ev.evaluated - ev_before,
+            memo_hits: ev.memo_hits - memo_before,
+            best_score: best.as_ref().expect("scored at least one candidate").0,
+        });
+        tuner.tell(&scores);
+    }
+    let (best_score, best_params) =
+        best.ok_or_else(|| Error::Config("tuning evaluated no candidates (budget 0?)".into()))?;
+    Ok(TuneOutcome {
+        method: opts.method,
+        best_params,
+        best_score,
+        initial_best_score: initial_best,
+        history,
+        asked: asked_total,
+        evaluated: ev.evaluated,
+        memo_hits: ev.memo_hits,
+        launches: ev.launches,
+        cached_tasks: ev.cached_tasks,
+        wall: start.elapsed(),
+        cache: cache.map(|c| c.stats()),
+    })
+}
+
+/// [`run_tune`] building its own cache (per `cfg.cache`) and study
+/// inputs — the `tune` CLI mode's entry. Pays one engine load plus a
+/// reference-chain run per tile before the loop starts.
+pub fn run_tune_standalone(cfg: &StudyConfig, opts: &TuneOptions) -> Result<TuneOutcome> {
+    let cache = build_cache(cfg);
+    let probe = prepare_candidates(cfg, &[default_space().defaults()]);
+    let inputs = make_inputs(cfg, &probe)?;
+    run_tune(cfg, opts, cache, None, &inputs)
+}

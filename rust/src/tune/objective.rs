@@ -1,0 +1,215 @@
+//! The objective layer: what a candidate parameter set *scores*, and
+//! the evaluator that produces those scores by running candidates as
+//! real studies.
+//!
+//! One [`CandidateEvaluator`] lives for one tuning run. It batches every
+//! generation it is handed into ONE multi-unit study
+//! ([`crate::driver::prepare_candidates`] →
+//! [`crate::driver::run_pjrt_with_inputs_scoped`]), so stage/task
+//! merging and frontier batching stack sibling candidates into batched
+//! kernel launches, and partial chain overlap between neighboring
+//! candidates hits the shared [`crate::cache::ReuseCache`]. On top of
+//! the chain-level cache it keeps a per-run **memo table** keyed by the
+//! quantized 128-bit [`candidate_key`] of each parameter vector:
+//! optimizer iterates that revisit a quantized point skip even the study
+//! setup — the highest-frequency reuse event of Nelder-Mead and GA
+//! searches over discrete parameter grids.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::cache::{candidate_key, Key, ReuseCache, ScopedCounters};
+use crate::config::StudyConfig;
+use crate::driver::{
+    prepare_candidates, prune_plan_with_inputs, run_pjrt_with_inputs_scoped, study_workflow,
+    StudyInputs,
+};
+use crate::sampling::{default_space, ParamSet};
+use crate::simulate::{default_cost_model, CostModel};
+use crate::workflow::WorkflowSpec;
+use crate::{Error, Result};
+
+/// Which mask-similarity metric the tuner maximizes (always against the
+/// reference masks the study inputs carry — the workflow run with the
+/// application-default parameters, paper §4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObjectiveKind {
+    /// Dice coefficient of the final mask vs. the reference.
+    Dice,
+    /// Jaccard index of the final mask vs. the reference.
+    Jaccard,
+}
+
+impl ObjectiveKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ObjectiveKind::Dice => "dice",
+            ObjectiveKind::Jaccard => "jaccard",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "dice" => Ok(ObjectiveKind::Dice),
+            "jaccard" | "iou" => Ok(ObjectiveKind::Jaccard),
+            other => Err(Error::Config(format!("unknown objective `{other}`"))),
+        }
+    }
+}
+
+/// The scalar a tuner maximizes: a mask metric, optionally penalized by
+/// the predicted execution cost of the candidate's task chain.
+#[derive(Clone, Debug)]
+pub struct Objective {
+    pub kind: ObjectiveKind,
+    /// Score = metric − `cost_lambda` × predicted chain cost (seconds,
+    /// from a [`CostModel`] over the workflow's task path). 0 = pure
+    /// accuracy. The model prices task *names*, so with the fixed paper
+    /// workflow the penalty is a constant offset; it discriminates when
+    /// candidates run different workflows (descriptor files) or when a
+    /// measured, input-dependent model is supplied.
+    pub cost_lambda: f64,
+    chain_cost_secs: f64,
+}
+
+impl Objective {
+    /// An objective pricing `workflow`'s full task chain with `model`.
+    pub fn new(
+        kind: ObjectiveKind,
+        cost_lambda: f64,
+        model: &CostModel,
+        workflow: &WorkflowSpec,
+    ) -> Self {
+        let chain_cost_secs = workflow
+            .stages
+            .iter()
+            .flat_map(|s| s.tasks.iter())
+            .map(|t| model.cost_of(&t.name))
+            .sum();
+        Self { kind, cost_lambda: cost_lambda.max(0.0), chain_cost_secs }
+    }
+
+    /// [`Objective::new`] over the study's workflow and the default
+    /// (Table-6) cost model — what the CLI and the serve job kind use.
+    pub fn for_study(cfg: &StudyConfig, kind: ObjectiveKind, cost_lambda: f64) -> Self {
+        let space = default_space();
+        let workflow = study_workflow(cfg, &space);
+        Self::new(kind, cost_lambda, &default_cost_model(), &workflow)
+    }
+
+    /// Score one candidate from its mean `(dice, jaccard)` pair. Higher
+    /// is better.
+    pub fn score(&self, dice: f64, jaccard: f64) -> f64 {
+        let metric = match self.kind {
+            ObjectiveKind::Dice => dice,
+            ObjectiveKind::Jaccard => jaccard,
+        };
+        metric - self.cost_lambda * self.chain_cost_secs
+    }
+
+    /// The priced chain cost (seconds) the penalty multiplies.
+    pub fn chain_cost_secs(&self) -> f64 {
+        self.chain_cost_secs
+    }
+}
+
+/// Scores candidate parameter sets by running them as studies (see the
+/// module docs). Counters are public so callers (the tuning loop, the
+/// reuse tests, the convergence bench) can assert on them.
+pub struct CandidateEvaluator<'a> {
+    cfg: &'a StudyConfig,
+    objective: Objective,
+    cache: Option<Arc<ReuseCache>>,
+    scope: Option<Arc<ScopedCounters>>,
+    inputs: &'a StudyInputs,
+    memo: HashMap<Key, f64>,
+    /// Quantization step of the memo keys — the attached cache's step,
+    /// so memo identity and chain-key identity can never disagree.
+    step: f64,
+    /// Distinct candidates actually executed as studies.
+    pub evaluated: usize,
+    /// Requests served by the per-run memo table.
+    pub memo_hits: usize,
+    /// Backend launches paid across every executed generation.
+    pub launches: u64,
+    /// Task executions served from the shared reuse cache.
+    pub cached_tasks: u64,
+}
+
+impl<'a> CandidateEvaluator<'a> {
+    /// Build an evaluator over pre-built study inputs. `inputs` must
+    /// come from the same artifacts/tile configuration as `cfg` (the
+    /// usual [`crate::driver::make_inputs`] contract).
+    pub fn new(
+        cfg: &'a StudyConfig,
+        objective: Objective,
+        cache: Option<Arc<ReuseCache>>,
+        scope: Option<Arc<ScopedCounters>>,
+        inputs: &'a StudyInputs,
+    ) -> Self {
+        let step = cache.as_ref().map(|c| c.quantize_step()).unwrap_or(cfg.cache.quantize);
+        Self {
+            cfg,
+            objective,
+            cache,
+            scope,
+            inputs,
+            memo: HashMap::new(),
+            step,
+            evaluated: 0,
+            memo_hits: 0,
+            launches: 0,
+            cached_tasks: 0,
+        }
+    }
+
+    /// The objective this evaluator scores with.
+    pub fn objective(&self) -> &Objective {
+        &self.objective
+    }
+
+    /// Score a generation: memo-served candidates (and within-batch
+    /// duplicates) cost nothing; the remaining fresh candidates run as
+    /// ONE batched study. Returns one score per requested set, in
+    /// order. Scores are bit-deterministic for a fixed config: batch
+    /// width and cache on/off change launch counts, never results.
+    pub fn score_batch(&mut self, sets: &[ParamSet]) -> Result<Vec<f64>> {
+        let keys: Vec<Key> = sets.iter().map(|s| candidate_key(s, self.step)).collect();
+        let mut fresh: Vec<ParamSet> = Vec::new();
+        let mut fresh_keys: Vec<Key> = Vec::new();
+        for (set, key) in sets.iter().zip(&keys) {
+            if !self.memo.contains_key(key) && !fresh_keys.contains(key) {
+                fresh.push(set.clone());
+                fresh_keys.push(*key);
+            }
+        }
+        self.memo_hits += sets.len() - fresh.len();
+        if !fresh.is_empty() {
+            let prepared = prepare_candidates(self.cfg, &fresh);
+            let mut plan = prepared.plan(self.cfg);
+            if let Some(cache) = &self.cache {
+                // planning-time probe: LPT orders by work that will run
+                let _ = prune_plan_with_inputs(&prepared, &mut plan, cache, self.inputs);
+            }
+            let outcome = run_pjrt_with_inputs_scoped(
+                self.cfg,
+                &prepared,
+                &plan,
+                self.cache.clone(),
+                self.scope.clone(),
+                self.inputs,
+            )?;
+            self.launches += outcome.timer.launches();
+            self.cached_tasks += outcome.timer.cached_served();
+            let tiles = self.cfg.tiles.max(1);
+            for (i, key) in fresh_keys.iter().enumerate() {
+                let per_tile = &outcome.metrics[i * tiles..(i + 1) * tiles];
+                let dice = per_tile.iter().map(|m| m[0] as f64).sum::<f64>() / tiles as f64;
+                let jaccard = per_tile.iter().map(|m| m[1] as f64).sum::<f64>() / tiles as f64;
+                self.memo.insert(*key, self.objective.score(dice, jaccard));
+            }
+            self.evaluated += fresh.len();
+        }
+        Ok(keys.iter().map(|k| self.memo[k]).collect())
+    }
+}

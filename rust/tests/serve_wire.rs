@@ -41,8 +41,8 @@ fn study_args() -> Vec<String> {
 fn two_tenants_over_tcp_share_the_cache_and_drain_a_bill() {
     let (addr, server) = spawn_server(serve_opts(1));
     let specs = vec![
-        JobSpec { tenant: "alice".into(), args: study_args() },
-        JobSpec { tenant: "bob".into(), args: study_args() },
+        JobSpec { tenant: "alice".into(), args: study_args(), tune: false },
+        JobSpec { tenant: "bob".into(), args: study_args(), tune: false },
     ];
     let outcome = run_jobs(&addr, &specs, true).expect("client run succeeds");
 
@@ -209,6 +209,33 @@ fn submissions_with_bad_studies_are_refused_but_the_job_stream_continues() {
 }
 
 #[test]
+fn tune_jobs_run_over_the_wire_next_to_studies() {
+    let (addr, server) = spawn_server(serve_opts(1));
+    let tune_args: Vec<String> = ["tuner=ga", "budget=6", "population=3", "k-active=1", "r=1"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let specs = vec![
+        JobSpec { tenant: "alice".into(), args: study_args(), tune: false },
+        JobSpec { tenant: "bob".into(), args: tune_args, tune: true },
+    ];
+    let outcome = run_jobs(&addr, &specs, true).expect("client run succeeds");
+    assert_eq!(outcome.jobs.len(), 2);
+    assert!(outcome.jobs.iter().all(|j| j.ok()), "jobs: {:?}", outcome.jobs);
+    assert!(outcome.jobs[0].tune.is_none(), "study reports carry no tune block");
+    let tune = outcome.jobs[1].tune.as_ref().expect("tune job reports its summary");
+    assert!(tune.evaluated > 0);
+    assert_eq!(tune.best_params.len(), 15, "a full Table-1 parameter set");
+    assert!(tune.best_score.is_finite());
+    assert!(tune.best_score >= tune.initial_best_score);
+    // the tune job's y carries the per-generation best scores
+    assert_eq!(outcome.jobs[1].y.len() as u64, tune.generations);
+    let bill = outcome.bill.expect("bill");
+    assert_eq!(bill.tenants.len(), 2, "both kinds bill under their tenants");
+    server.join().expect("server joins");
+}
+
+#[test]
 fn demo_workload_matches_in_process_semantics() {
     // the same two-tenant demo the README quickstart runs, but over
     // TCP: on one service worker the first job is the only cold one,
@@ -216,10 +243,10 @@ fn demo_workload_matches_in_process_semantics() {
     let (addr, server) = spawn_server(serve_opts(1));
     let args = study_args();
     let specs = vec![
-        JobSpec { tenant: "t0".into(), args: args.clone() },
-        JobSpec { tenant: "t0".into(), args: args.clone() },
-        JobSpec { tenant: "t1".into(), args: args.clone() },
-        JobSpec { tenant: "t1".into(), args },
+        JobSpec { tenant: "t0".into(), args: args.clone(), tune: false },
+        JobSpec { tenant: "t0".into(), args: args.clone(), tune: false },
+        JobSpec { tenant: "t1".into(), args: args.clone(), tune: false },
+        JobSpec { tenant: "t1".into(), args, tune: false },
     ];
     let outcome = run_jobs(&addr, &specs, true).expect("client run succeeds");
     assert_eq!(outcome.jobs.len(), 4);

@@ -1,0 +1,154 @@
+//! Tuning determinism and reuse acceptance:
+//!
+//! * fixed-seed tuning runs are **bit-identical** with the cache on vs
+//!   off and across frontier batch widths — caching and batching change
+//!   launch counts, never results;
+//! * revisited quantized parameter points cause **zero new kernel
+//!   launches** — within one run via the per-run memo table, and across
+//!   runs via the shared reuse cache;
+//! * two tenants tuning concurrently on one service keep the scoped
+//!   counter sums equal to the shared cache's globals.
+
+use std::sync::Arc;
+
+use rtf_reuse::cache::CacheConfig;
+use rtf_reuse::config::{CacheSettings, StudyConfig};
+use rtf_reuse::driver::{build_cache, make_inputs, prepare_candidates};
+use rtf_reuse::sampling::default_space;
+use rtf_reuse::serve::{ServeOptions, StudyService};
+use rtf_reuse::tune::{
+    run_tune_standalone, CandidateEvaluator, Objective, ObjectiveKind, TuneOptions, TunerKind,
+};
+
+fn study_cfg(cache: bool) -> StudyConfig {
+    StudyConfig {
+        cache: CacheSettings { enabled: cache, ..CacheSettings::default() },
+        workers: 2,
+        ..StudyConfig::default()
+    }
+}
+
+fn tune_opts(kind: TunerKind) -> TuneOptions {
+    TuneOptions {
+        method: kind,
+        budget: 10,
+        population: 4,
+        active: vec![5, 6], // G1, G2
+        init_window: (0.5, 1.0),
+        ..TuneOptions::default()
+    }
+}
+
+/// The bit-comparable fingerprint of a tuning outcome.
+fn fingerprint(o: &rtf_reuse::tune::TuneOutcome) -> (Vec<u64>, u64, Vec<u64>, usize, usize) {
+    (
+        o.best_params.iter().map(|v| v.to_bits()).collect(),
+        o.best_score.to_bits(),
+        o.history.iter().map(|g| g.best_score.to_bits()).collect(),
+        o.evaluated,
+        o.memo_hits,
+    )
+}
+
+#[test]
+fn fixed_seed_runs_are_bit_identical_across_cache_and_width() {
+    for kind in [TunerKind::Genetic, TunerKind::Simplex] {
+        let opts = tune_opts(kind);
+        let base = run_tune_standalone(&study_cfg(false), &opts).expect("cache-off run");
+        let cached = run_tune_standalone(&study_cfg(true), &opts).expect("cache-on run");
+        let narrow = {
+            let cfg = StudyConfig { batch_width: 1, ..study_cfg(true) };
+            run_tune_standalone(&cfg, &opts).expect("width-1 run")
+        };
+        assert_eq!(
+            fingerprint(&base),
+            fingerprint(&cached),
+            "{:?}: the cache must not change tuning results",
+            kind
+        );
+        assert_eq!(
+            fingerprint(&cached),
+            fingerprint(&narrow),
+            "{:?}: batch width must not change tuning results",
+            kind
+        );
+        assert!(base.evaluated > 0);
+        assert!(base.launches >= cached.launches, "caching never adds launches");
+    }
+}
+
+#[test]
+fn revisited_quantized_points_cause_zero_new_launches() {
+    let cfg = study_cfg(true);
+    let cache = build_cache(&cfg).expect("cache enabled");
+    let space = default_space();
+    let probe = prepare_candidates(&cfg, &[space.defaults()]);
+    let inputs = make_inputs(&cfg, &probe).expect("inputs build");
+    let objective = || Objective::for_study(&cfg, ObjectiveKind::Dice, 0.0);
+
+    let mut a = space.defaults();
+    a[5] = 10.0; // on-grid G1 variation
+    let mut b = space.defaults();
+    b[5] = 20.0;
+
+    // one tuning run: the second visit of each point is a memo hit
+    let mut ev =
+        CandidateEvaluator::new(&cfg, objective(), Some(Arc::clone(&cache)), None, &inputs);
+    let first = ev.score_batch(&[a.clone(), b.clone()]).expect("cold generation");
+    let cold_launches = ev.launches;
+    assert!(cold_launches > 0, "a cold generation must launch kernels");
+    assert_eq!(ev.evaluated, 2);
+    let again = ev.score_batch(&[b.clone(), a.clone()]).expect("revisit generation");
+    assert_eq!(ev.launches, cold_launches, "revisits must not launch");
+    assert_eq!(ev.evaluated, 2, "revisits never re-run studies");
+    assert_eq!(ev.memo_hits, 2);
+    assert_eq!(again, vec![first[1], first[0]]);
+    // duplicates inside one generation collapse onto one evaluation
+    let dup = ev.score_batch(&[a.clone(), a.clone()]).expect("duplicate generation");
+    assert_eq!(dup[0].to_bits(), dup[1].to_bits());
+    assert_eq!(ev.launches, cold_launches);
+
+    // a NEW tuning run (fresh memo) over the same shared cache: every
+    // chain task and metric is already cached — still zero launches
+    let mut warm =
+        CandidateEvaluator::new(&cfg, objective(), Some(Arc::clone(&cache)), None, &inputs);
+    let rerun = warm.score_batch(&[a, b]).expect("warm generation");
+    assert_eq!(warm.launches, 0, "a warm rerun must be fully cache-served");
+    assert!(warm.cached_tasks > 0);
+    assert_eq!(warm.evaluated, 2, "the warm run still scores through studies");
+    assert_eq!(rerun[0].to_bits(), first[0].to_bits());
+    assert_eq!(rerun[1].to_bits(), first[1].to_bits());
+}
+
+#[test]
+fn concurrent_tenant_tuning_keeps_scoped_sums_equal_to_globals() {
+    let opts = ServeOptions {
+        service_workers: 2,
+        tenant_inflight_cap: 1,
+        study_workers: 2,
+        cache: CacheConfig { capacity_bytes: 512 * 1024 * 1024, ..CacheConfig::default() },
+        ..ServeOptions::default()
+    };
+    let svc = StudyService::start(opts).expect("service starts");
+    let tune = TuneOptions { budget: 6, population: 3, ..tune_opts(TunerKind::Genetic) };
+    svc.submit_tune("alice", StudyConfig::default(), tune.clone()).expect("submit alice");
+    svc.submit_tune("bob", StudyConfig::default(), tune).expect("submit bob");
+    let report = svc.drain();
+
+    assert_eq!(report.jobs.len(), 2);
+    assert!(report.jobs.iter().all(|j| j.ok()), "jobs: {:?}", report.jobs);
+    let summaries: Vec<_> =
+        report.jobs.iter().map(|j| j.tune.clone().expect("tune summary")).collect();
+    // identical fixed-seed tuning jobs agree bit-for-bit across tenants
+    assert_eq!(summaries[0], summaries[1]);
+    assert!(summaries[0].evaluated > 0);
+
+    // per-tenant scoped counters sum exactly to the shared globals
+    let sums = report.scoped_totals();
+    assert_eq!(sums.hits, report.cache.hits);
+    assert_eq!(sums.disk_hits, report.cache.disk_hits);
+    assert_eq!(sums.misses, report.cache.misses);
+    assert_eq!(sums.inserts, report.cache.inserts);
+    assert_eq!(sums.metric_hits, report.cache.metric_hits);
+    assert_eq!(sums.metric_misses, report.cache.metric_misses);
+}
