@@ -1,0 +1,130 @@
+//! Two-node cluster-fabric benchmark: what the rendezvous-partitioned
+//! remote tier saves the second node of a cluster.
+//!
+//! Phase 1 runs the study on a plain single node — the cold-cache
+//! baseline, i.e. what node B would pay with no fabric. Phase 2 boots a
+//! two-node loopback cluster, runs the same study cold on node A (whose
+//! write-through publishes B-owned entries over `cache-put`), then on
+//! node B (whose misses come back over `cache-get`). Acceptance: node
+//! B's launches are strictly fewer than the cold baseline, its bill
+//! shows remote hits, and on both nodes the per-tenant scoped counters
+//! sum exactly to the globals. Counts, so asserted in `--test` (CI
+//! smoke) mode too. Writes `BENCH_cluster.json`.
+
+use std::net::TcpListener;
+use std::thread;
+use std::time::Instant;
+
+use rtf_reuse::benchx::fmt_secs;
+use rtf_reuse::cache::CacheConfig;
+use rtf_reuse::serve::{run_jobs, JobSpec, ServeOptions, ServiceReport, StudyService, WireServer};
+
+fn reserve_addr() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("reserve a port");
+    listener.local_addr().expect("reserved addr").to_string()
+}
+
+fn opts(peers: &[String], own: Option<&str>) -> ServeOptions {
+    ServeOptions {
+        service_workers: 1,
+        study_workers: 2,
+        cache: CacheConfig { capacity_bytes: 512 * 1024 * 1024, ..CacheConfig::default() },
+        peers: peers.to_vec(),
+        cluster_addr: own.map(str::to_string),
+        ..ServeOptions::default()
+    }
+}
+
+fn spawn_node(opts: ServeOptions, addr: &str) -> thread::JoinHandle<ServiceReport> {
+    let svc = StudyService::start(opts).expect("node starts");
+    let server = WireServer::bind(svc, addr).expect("node binds");
+    thread::spawn(move || server.run().expect("node drains cleanly"))
+}
+
+fn assert_scoped_sums(report: &ServiceReport, node: &str) {
+    let sums = report.scoped_totals();
+    assert_eq!(sums.hits, report.cache.hits, "{node}: scoped hits");
+    assert_eq!(sums.disk_hits, report.cache.disk_hits, "{node}: scoped disk hits");
+    assert_eq!(sums.remote_hits, report.cache.remote_hits, "{node}: scoped remote hits");
+    assert_eq!(sums.misses, report.cache.misses, "{node}: scoped misses");
+    assert_eq!(sums.inserts, report.cache.inserts, "{node}: scoped inserts");
+}
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    let args: Vec<String> =
+        vec!["method=moat".into(), format!("r={}", if test_mode { 1 } else { 2 })];
+    let spec = |tenant: &str| JobSpec { tenant: tenant.into(), args: args.clone(), tune: false };
+
+    // phase 1: cold-cache baseline — one plain node, no fabric
+    let solo_addr = reserve_addr();
+    let solo = spawn_node(opts(&[], None), &solo_addr);
+    let t0 = Instant::now();
+    run_jobs(&solo_addr, &[spec("solo")], true).expect("solo run");
+    let solo_wall = t0.elapsed().as_secs_f64();
+    let solo_report = solo.join().expect("solo joins");
+    assert!(solo_report.jobs[0].ok(), "solo job failed: {:?}", solo_report.jobs[0].error);
+    let baseline_launches = solo_report.jobs[0].launches;
+
+    // phase 2: a two-node cluster over loopback
+    let addr_a = reserve_addr();
+    let addr_b = reserve_addr();
+    let peers = vec![addr_a.clone(), addr_b.clone()];
+    let node_a = spawn_node(opts(&peers, Some(&addr_a)), &addr_a);
+    let node_b = spawn_node(opts(&peers, Some(&addr_b)), &addr_b);
+
+    let t0 = Instant::now();
+    run_jobs(&addr_a, &[spec("cold")], false).expect("run on node A");
+    let wall_a = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    run_jobs(&addr_b, &[spec("warm")], false).expect("run on node B");
+    let wall_b = t0.elapsed().as_secs_f64();
+
+    // drain B first (its shard of A-owned keys needs A alive), then A
+    run_jobs(&addr_b, &[], true).expect("drain B");
+    run_jobs(&addr_a, &[], true).expect("drain A");
+    let report_a = node_a.join().expect("node A joins");
+    let report_b = node_b.join().expect("node B joins");
+    assert!(report_a.jobs[0].ok(), "node A job failed: {:?}", report_a.jobs[0].error);
+    assert!(report_b.jobs[0].ok(), "node B job failed: {:?}", report_b.jobs[0].error);
+
+    let launches_a = report_a.jobs[0].launches;
+    let launches_b = report_b.jobs[0].launches;
+    let remote_hits_b = report_b.cache.remote_hits;
+    assert_eq!(solo_report.jobs[0].y, report_a.jobs[0].y, "node A matches the baseline");
+    assert_eq!(solo_report.jobs[0].y, report_b.jobs[0].y, "node B matches the baseline");
+    assert_scoped_sums(&report_a, "node A");
+    assert_scoped_sums(&report_b, "node B");
+
+    println!(
+        "baseline: {baseline_launches} launches in {} | node A (cold): {launches_a} in {} | \
+         node B (fabric): {launches_b} in {}, {remote_hits_b} remote hits",
+        fmt_secs(solo_wall),
+        fmt_secs(wall_a),
+        fmt_secs(wall_b),
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"cluster_fabric\",\n  \"mode\": \"{}\",\n  \
+         \"evals\": {},\n  \"baseline_launches\": {baseline_launches},\n  \
+         \"node_a_launches\": {launches_a},\n  \"node_b_launches\": {launches_b},\n  \
+         \"node_b_remote_hits\": {remote_hits_b},\n  \"baseline_wall_secs\": {solo_wall:.6},\n  \
+         \"node_a_wall_secs\": {wall_a:.6},\n  \"node_b_wall_secs\": {wall_b:.6}\n}}\n",
+        if test_mode { "test" } else { "full" },
+        report_b.jobs[0].n_evals,
+    );
+    std::fs::write("BENCH_cluster.json", &json).expect("write BENCH_cluster.json");
+    println!("wrote BENCH_cluster.json");
+
+    println!(
+        "ACCEPTANCE: node B paid {launches_b} launches vs its cold baseline \
+         {baseline_launches}, riding {remote_hits_b} remote hits — {}",
+        if launches_b < baseline_launches && remote_hits_b > 0 { "PASS" } else { "FAIL" }
+    );
+    assert!(remote_hits_b > 0, "node B must be served over the fabric");
+    assert!(
+        launches_b < baseline_launches,
+        "node B must launch strictly less than its cold baseline: \
+         {launches_b} >= {baseline_launches}"
+    );
+}

@@ -27,10 +27,69 @@
 use std::io::Read;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::data::Plane;
 
 use super::key::Key;
+use super::store::{CachedState, ScopedCounters};
+use super::tier::{CacheCtx, CacheTier, TierStats, DISK_TIER};
+
+/// The persistent tier as a [`CacheTier`]: wraps this module's
+/// free functions behind the trait the cache stack composes. The stack
+/// keys its counter mapping on [`CacheTier::name`] — a hit from this
+/// tier is billed as `disk_hits`, a fresh store as `spilled`.
+pub struct DiskTier {
+    dir: PathBuf,
+    hits: AtomicU64,
+    stores: AtomicU64,
+}
+
+impl DiskTier {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into(), hits: AtomicU64::new(0), stores: AtomicU64::new(0) }
+    }
+
+    /// The spill directory this tier reads and writes.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+impl CacheTier for DiskTier {
+    fn name(&self) -> &'static str {
+        DISK_TIER
+    }
+
+    fn lookup(&self, key: Key, _ctx: &CacheCtx) -> Option<CachedState> {
+        let state = load_state(&self.dir, key)?;
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(Arc::new(state))
+    }
+
+    fn store(&self, key: Key, state: &CachedState, _ctx: &CacheCtx) -> bool {
+        // Ok(false) (already present) and write errors are both "not
+        // newly stored"; the disk is an accelerator, not a ledger.
+        if matches!(store_state(&self.dir, key, state), Ok(true)) {
+            self.stores.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn evict_scope(&self, _scope: &Arc<ScopedCounters>) -> bool {
+        false // the disk tier has no scoped residency to reclaim
+    }
+
+    fn stats(&self) -> TierStats {
+        TierStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            stores: self.stores.load(Ordering::Relaxed),
+            resident_bytes: 0,
+        }
+    }
+}
 
 /// File magic + format version. `RTC1` was the 64-bit-key format; bump
 /// this whenever the on-disk layout or the key derivation changes

@@ -45,7 +45,7 @@ use crate::workflow::{sig_hash, str_bits, StageInstance, TaskInstance};
 /// (plus the zero-extending [`From<u64>`] embedding used for key roots
 /// and tests). Ordered and hashable so key sets can be compared in
 /// tests; displayed as 32 hex digits — the disk tier's file-name format.
-#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[derive(Clone, Copy, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Key(u128);
 
 impl Key {

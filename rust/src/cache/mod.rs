@@ -14,10 +14,17 @@
 //!   every executed task. Keys are stable across studies, seeds,
 //!   processes and tenants; the width gives the collision margin a
 //!   process-lifetime multi-tenant cache needs.
-//! * [`ReuseCache`] — a sharded, byte-bounded LRU over 3-plane states,
-//!   with an optional write-through disk tier for persistence, plus a
-//!   side map of cached comparison metrics. Concurrency-safe by design:
-//!   zero-copy `Arc` hits, single-flight miss claims
+//! * [`tier`] — the composable storage abstraction: every tier of the
+//!   cache implements [`CacheTier`] (lookup / store / evict-scope /
+//!   stats), and every cache call carries one [`CacheCtx`] — the
+//!   collapsed accounting context naming the tenant scope the operation
+//!   bills to.
+//! * [`ReuseCache`] — the tier *stack*: a sharded, byte-bounded LRU
+//!   memory tier over 3-plane states, composed over any number of lower
+//!   tiers — the write-through RTC2 disk tier for persistence and, in
+//!   cluster mode, the [`RemoteTier`] — plus a side map of cached
+//!   comparison metrics. Concurrency-safe by design: zero-copy `Arc`
+//!   hits, single-flight miss claims
 //!   ([`ReuseCache::lookup_or_claim`]) so concurrent studies never
 //!   duplicate a backend launch, and per-tenant [`ScopedCounters`]
 //!   that sum exactly to the global [`CacheStats`]. Scopes built with
@@ -26,6 +33,13 @@
 //!   eviction is charged to the entry's *owning* scope), and
 //!   [`ReuseCache::warm_start`] pre-admits persisted disk-tier entries
 //!   at process start so the first lookups of the day are memory hits.
+//! * [`remote`] — the cluster fabric: [`RemoteTier`] rendezvous-hashes
+//!   the 128-bit key space across the peer list ([`PeerRing`]) and, for
+//!   keys another node owns, fetches and publishes entries over the
+//!   serve wire protocol (`cache-get` / `cache-put`, rtfp v3). The
+//!   owner side ([`ReuseCache::serve_remote_get`] /
+//!   [`ReuseCache::serve_remote_put`]) extends single-flight claims
+//!   across the remote boundary, so two nodes never duplicate a launch.
 //!
 //! Integration points: [`crate::runtime::PjrtEngine`] consults/populates
 //! the cache at task granularity, [`crate::coordinator`] shares one cache
@@ -46,15 +60,20 @@
 //! exact and changes no results.
 
 pub mod key;
+pub mod remote;
+pub mod tier;
 
 mod disk;
 mod store;
 
+pub use disk::DiskTier;
 pub use key::{
     candidate_key, chain_key, content_fingerprint, fold_keys, metrics_key, node_input_key,
     quantize, reference_fingerprints, task_cache_sig, tile_fingerprints, Key,
 };
+pub use remote::{PeerRing, RemoteTier};
 pub use store::{
-    CacheConfig, CacheStats, CachedState, FlightClaims, MetricsClaim, ReuseCache, ScopedCounters,
-    StateClaim, WarmStartReport,
+    CacheConfig, CacheStats, CachedState, FlightClaims, MemoryTier, MetricsClaim, RemoteServe,
+    ReuseCache, ScopedCounters, StateClaim, WarmStartReport,
 };
+pub use tier::{CacheCtx, CacheTier, TierStats};

@@ -1,0 +1,380 @@
+//! The cluster cache fabric: a [`CacheTier`] backed by peer nodes.
+//!
+//! In cluster mode (`serve peers=ADDR,...`) every node runs the same
+//! tier stack locally — memory over disk — and attaches one
+//! [`RemoteTier`] below them. The 128-bit key space is partitioned
+//! across the peer list by rendezvous hashing ([`PeerRing`]): each key
+//! has exactly one *owning* node, every node computes the same owner
+//! from the same sorted peer list, and adding a peer moves only the
+//! keys it wins. For keys this node owns the remote tier is inert
+//! (lookups and stores return immediately); for keys another node owns
+//! it speaks the serve wire protocol (rtfp v3) to the owner:
+//!
+//! * `lookup` sends `cache-get` and blocks until the owner answers
+//!   `cache-state` — either `found` with the 3-plane payload, or
+//!   `claimed`, meaning this node now holds the **cross-node
+//!   single-flight claim** and must compute locally. While another node
+//!   holds the claim the owner parks the request
+//!   ([`super::ReuseCache::serve_remote_get`]), so two nodes never
+//!   duplicate a launch.
+//! * `store` publishes the computed state with `cache-put`, settling
+//!   the claim on the owner so parked peers wake to a `found` reply.
+//!
+//! Failure model: the fabric is an *optimization*, never a correctness
+//! dependency. Any connect, send, or decode failure degrades the call
+//! to a plain miss (`lookup → None`, `store → false`) and the engine
+//! falls through to a local launch; broken connections are dropped and
+//! re-dialed on the next call. Results stay bit-identical between
+//! 1-node and N-node runs because a remote hit returns the exact bytes
+//! the owner stored ([`planes_to_hex`] is a lossless `f32` codec).
+//!
+//! [`planes_to_hex`]: crate::serve::protocol::planes_to_hex
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::serve::protocol::{
+    planes_from_hex, read_frame, write_frame, Message, WireCachePut, PROTOCOL_VERSION,
+};
+use crate::{Error, Result};
+
+use super::key::{Fnv128, Key};
+use super::store::{CachedState, ScopedCounters};
+use super::tier::{CacheCtx, CacheTier, TierStats, REMOTE_TIER};
+
+/// Dial budget per peer connection. Short on purpose: a down peer
+/// should cost one lookup half a second, not hang a study.
+const CONNECT_TIMEOUT: Duration = Duration::from_millis(500);
+/// Read budget per reply. Long enough to sit out another node's
+/// in-flight computation behind a cross-node claim.
+const READ_TIMEOUT: Duration = Duration::from_secs(120);
+/// Write budget per request frame.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Rendezvous (highest-random-weight) partition of the 128-bit key
+/// space across a peer list.
+///
+/// The peer list is sorted and deduplicated at construction, so every
+/// node that was handed the same set of addresses — in any order —
+/// computes the same owner for every key. Scores are 128-bit FNV
+/// digests of the key mixed with the peer address, so ties are
+/// vanishingly unlikely and the assignment is uniform in expectation.
+#[derive(Clone, Debug)]
+pub struct PeerRing {
+    peers: Vec<String>,
+    self_idx: usize,
+}
+
+impl PeerRing {
+    /// Build the ring. `self_addr` (this node's listen address) must be
+    /// a member of `peers` — the partition only covers nodes that are
+    /// actually serving their shard.
+    pub fn new(peers: &[String], self_addr: &str) -> Result<Self> {
+        let mut peers: Vec<String> = peers.to_vec();
+        peers.sort();
+        peers.dedup();
+        if peers.is_empty() {
+            return Err(Error::Config("peers= list is empty".into()));
+        }
+        let self_idx = peers.iter().position(|p| p == self_addr).ok_or_else(|| {
+            Error::Config(format!(
+                "peers= list {peers:?} must include this node's listen address `{self_addr}`"
+            ))
+        })?;
+        Ok(Self { peers, self_idx })
+    }
+
+    fn score(key: Key, addr: &str) -> Key {
+        let mut f = Fnv128::new();
+        f.mix(key.lo());
+        f.mix(key.hi());
+        for b in addr.as_bytes() {
+            f.mix(u64::from(*b));
+        }
+        f.finish()
+    }
+
+    /// Index (into the sorted peer list) of the node owning `key`.
+    pub fn owner_of(&self, key: Key) -> usize {
+        (0..self.peers.len())
+            .max_by_key(|&i| Self::score(key, &self.peers[i]))
+            .expect("ring is never empty")
+    }
+
+    /// Does this node own `key`?
+    pub fn is_local(&self, key: Key) -> bool {
+        self.owner_of(key) == self.self_idx
+    }
+
+    /// The sorted, deduplicated peer list.
+    pub fn peers(&self) -> &[String] {
+        &self.peers
+    }
+
+    /// This node's address as it appears in the ring.
+    pub fn self_addr(&self) -> &str {
+        &self.peers[self.self_idx]
+    }
+
+    fn addr(&self, idx: usize) -> &str {
+        &self.peers[idx]
+    }
+}
+
+/// The remote tier: fetches and publishes cache entries over the serve
+/// wire protocol, one pooled connection set per peer.
+pub struct RemoteTier {
+    ring: PeerRing,
+    /// Idle connections per peer (parallel to `ring.peers()`), returned
+    /// after a successful exchange, dropped on any error.
+    pools: Vec<Mutex<Vec<TcpStream>>>,
+    hits: AtomicU64,
+    stores: AtomicU64,
+}
+
+impl RemoteTier {
+    /// Build the tier for this node. Does not dial anyone — connections
+    /// are opened lazily on the first lookup/store per peer.
+    pub fn new(peers: &[String], self_addr: &str) -> Result<Self> {
+        let ring = PeerRing::new(peers, self_addr)?;
+        let pools = ring.peers().iter().map(|_| Mutex::new(Vec::new())).collect();
+        Ok(Self { ring, pools, hits: AtomicU64::new(0), stores: AtomicU64::new(0) })
+    }
+
+    /// The key partition this tier routes by.
+    pub fn ring(&self) -> &PeerRing {
+        &self.ring
+    }
+
+    /// Dial a peer and run the `hello` handshake in the `peer` role.
+    fn connect(&self, addr: &str) -> Result<TcpStream> {
+        let sock = addr
+            .to_socket_addrs()
+            .map_err(Error::Io)?
+            .next()
+            .ok_or_else(|| Error::Protocol(format!("peer `{addr}` does not resolve")))?;
+        let stream = TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT).map_err(Error::Io)?;
+        stream.set_read_timeout(Some(READ_TIMEOUT)).map_err(Error::Io)?;
+        stream.set_write_timeout(Some(WRITE_TIMEOUT)).map_err(Error::Io)?;
+        let hello = Message::Hello { version: PROTOCOL_VERSION, role: "peer".into() };
+        match Self::exchange(&stream, &hello)? {
+            Message::Hello { version, .. } if version == PROTOCOL_VERSION => Ok(stream),
+            Message::Hello { version, .. } => Err(Error::Protocol(format!(
+                "peer {addr} speaks protocol v{version}, this node v{PROTOCOL_VERSION}"
+            ))),
+            Message::Error { code, message } => {
+                Err(Error::Protocol(format!("peer {addr} refused [{code}]: {message}")))
+            }
+            other => Err(Error::Protocol(format!(
+                "peer {addr}: expected `hello`, got `{}`",
+                other.type_name()
+            ))),
+        }
+    }
+
+    /// One request/response exchange on an open connection. Safe to
+    /// wrap the stream in a fresh `BufReader` per call: the protocol is
+    /// strictly request/response on this connection, so the reader
+    /// never buffers past the reply frame.
+    fn exchange(stream: &TcpStream, msg: &Message) -> Result<Message> {
+        let mut writer = BufWriter::new(stream);
+        write_frame(&mut writer, msg)?;
+        writer.flush().map_err(Error::Io)?;
+        drop(writer);
+        let mut reader = BufReader::new(stream);
+        match read_frame(&mut reader)? {
+            Some(reply) => Ok(reply),
+            None => Err(Error::Protocol("peer closed the connection".into())),
+        }
+    }
+
+    /// Send `msg` to peer `idx`, reusing a pooled connection when one
+    /// is idle. A stale pooled connection is dropped and the call
+    /// retried once on a fresh dial.
+    fn call(&self, idx: usize, msg: &Message) -> Result<Message> {
+        if let Some(stream) = self.pools[idx].lock().unwrap().pop() {
+            if let Ok(reply) = Self::exchange(&stream, msg) {
+                self.pools[idx].lock().unwrap().push(stream);
+                return Ok(reply);
+            }
+        }
+        let stream = self.connect(self.ring.addr(idx))?;
+        let reply = Self::exchange(&stream, msg)?;
+        self.pools[idx].lock().unwrap().push(stream);
+        Ok(reply)
+    }
+}
+
+impl CacheTier for RemoteTier {
+    fn name(&self) -> &'static str {
+        REMOTE_TIER
+    }
+
+    fn lookup(&self, key: Key, _ctx: &CacheCtx) -> Option<CachedState> {
+        let owner = self.ring.owner_of(key);
+        if owner == self.ring.self_idx {
+            return None;
+        }
+        match self.call(owner, &Message::CacheGet { key }).ok()? {
+            Message::CacheState(state) if state.found => {
+                let planes = planes_from_hex(state.h, state.w, &state.planes).ok()?;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::new(planes))
+            }
+            // `claimed` (or anything unexpected): this node computes
+            // locally and publishes through `store`.
+            _ => None,
+        }
+    }
+
+    fn store(&self, key: Key, state: &CachedState, _ctx: &CacheCtx) -> bool {
+        let owner = self.ring.owner_of(key);
+        if owner == self.ring.self_idx {
+            return false;
+        }
+        let put = Message::CachePut(Box::new(WireCachePut::new(key, state)));
+        match self.call(owner, &put) {
+            Ok(Message::CacheOk { stored: true, .. }) => {
+                self.stores.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn evict_scope(&self, _scope: &Arc<ScopedCounters>) -> bool {
+        false
+    }
+
+    fn stats(&self) -> TierStats {
+        TierStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            stores: self.stores.load(Ordering::Relaxed),
+            resident_bytes: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Plane;
+    use crate::serve::protocol::WireCacheState;
+    use std::net::TcpListener;
+
+    fn state() -> CachedState {
+        Arc::new([Plane::filled(1.0, 2, 2), Plane::filled(0.5, 2, 2), Plane::filled(2.0, 2, 2)])
+    }
+
+    #[test]
+    fn ring_is_order_insensitive_and_covers_every_peer() {
+        let a = vec!["h1:1".to_string(), "h2:2".to_string(), "h3:3".to_string()];
+        let b = vec!["h3:3".to_string(), "h1:1".to_string(), "h2:2".to_string()];
+        let ra = PeerRing::new(&a, "h1:1").unwrap();
+        let rb = PeerRing::new(&b, "h2:2").unwrap();
+        let mut owned = [0usize; 3];
+        for i in 0..512u64 {
+            let key = Key::from(i);
+            let owner = ra.owner_of(key);
+            assert_eq!(
+                ra.peers()[owner],
+                rb.peers()[rb.owner_of(key)],
+                "same owner from any list order"
+            );
+            owned[owner] += 1;
+        }
+        assert!(owned.iter().all(|&n| n > 0), "every peer owns a shard: {owned:?}");
+    }
+
+    #[test]
+    fn ring_requires_self_membership_and_a_nonempty_list() {
+        let peers = vec!["h1:1".to_string(), "h2:2".to_string()];
+        let err = PeerRing::new(&peers, "h9:9").unwrap_err();
+        assert!(err.to_string().contains("h9:9"), "error names the missing address: {err}");
+        assert!(PeerRing::new(&[], "h1:1").is_err());
+        // duplicates collapse
+        let dup = vec!["h1:1".to_string(), "h1:1".to_string(), "h2:2".to_string()];
+        assert_eq!(PeerRing::new(&dup, "h1:1").unwrap().peers().len(), 2);
+    }
+
+    #[test]
+    fn self_owned_keys_are_inert_and_dead_peers_degrade_to_misses() {
+        // Port 1 on loopback refuses immediately: the fabric must turn
+        // that into a plain miss, not an error or a hang.
+        let peers = vec!["127.0.0.1:1".to_string(), "127.0.0.1:9".to_string()];
+        let tier = RemoteTier::new(&peers, "127.0.0.1:9").unwrap();
+        let ctx = CacheCtx::unscoped();
+        let (mut local, mut remote) = (0, 0);
+        for i in 0..64u64 {
+            let key = Key::from(i);
+            if tier.ring().is_local(key) {
+                local += 1;
+            } else {
+                remote += 1;
+            }
+            assert!(tier.lookup(key, &ctx).is_none());
+            assert!(!tier.store(key, &state(), &ctx));
+            if local > 0 && remote > 1 {
+                break;
+            }
+        }
+        assert!(local > 0 && remote > 0, "sampled both shards ({local} local, {remote} remote)");
+        assert_eq!(tier.stats(), TierStats::default(), "failed calls never count");
+    }
+
+    /// A one-connection mini peer: handshakes, then answers `cache-get`
+    /// with `found` and `cache-put` with `stored`.
+    fn spawn_mini_peer(listener: TcpListener) -> std::thread::JoinHandle<u32> {
+        std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = BufWriter::new(stream);
+            let mut served = 0;
+            while let Ok(Some(msg)) = read_frame(&mut reader) {
+                let reply = match msg {
+                    Message::Hello { .. } => {
+                        Message::Hello { version: PROTOCOL_VERSION, role: "server".into() }
+                    }
+                    Message::CacheGet { key } => {
+                        served += 1;
+                        Message::CacheState(Box::new(WireCacheState::found(key, &state())))
+                    }
+                    Message::CachePut(put) => {
+                        served += 1;
+                        Message::CacheOk { key: put.key, stored: true }
+                    }
+                    other => panic!("mini peer got {}", other.type_name()),
+                };
+                write_frame(&mut writer, &reply).unwrap();
+                writer.flush().unwrap();
+            }
+            served
+        })
+    }
+
+    #[test]
+    fn fetches_and_publishes_through_a_live_peer_on_one_pooled_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = spawn_mini_peer(listener);
+
+        let peers = vec![addr.clone(), "127.0.0.1:1".to_string()];
+        let tier = RemoteTier::new(&peers, "127.0.0.1:1").unwrap();
+        let ctx = CacheCtx::unscoped();
+        let key = (0..u64::MAX)
+            .map(Key::from)
+            .find(|k| tier.ring().peers()[tier.ring().owner_of(*k)] == addr)
+            .unwrap();
+
+        let got = tier.lookup(key, &ctx).expect("peer holds the state");
+        assert_eq!(got[0].data(), state()[0].data(), "payload survives the wire");
+        assert!(tier.store(key, &state(), &ctx), "publish acknowledges");
+        assert_eq!(tier.stats(), TierStats { hits: 1, stores: 1, resident_bytes: 0 });
+
+        drop(tier); // closes the pooled connection; the peer thread exits
+        assert_eq!(handle.join().unwrap(), 2, "both calls reused one connection");
+    }
+}

@@ -1,14 +1,18 @@
-//! The sharded, byte-bounded, LRU reuse store.
+//! The tier stack: a sharded, byte-bounded LRU memory tier composed
+//! over any number of lower [`CacheTier`]s, plus everything that is not
+//! storage — single-flight claims, scoped accounting, the metrics side
+//! map and the cross-node claim registry.
 //!
 //! One [`ReuseCache`] is shared by every worker thread of a study — and,
 //! crucially, by every *study* that runs while it lives: the multi-tenant
 //! service ([`crate::serve`]) holds exactly one for the whole process.
 //! Lock contention is kept off the hot path by sharding: keys map to one
 //! of N independent mutex-protected shards, so concurrent workers almost
-//! always lock disjoint shards. Each shard enforces its slice of the byte
-//! budget with LRU eviction; with a disk tier configured, entries are
-//! written through on insert, evictions become cheap drops, and lookups
-//! fall back to disk before declaring a miss.
+//! always lock disjoint shards. The [`MemoryTier`] enforces its slice of
+//! the byte budget with LRU eviction; lower tiers (the RTC2 disk tier,
+//! the cluster's [`super::remote::RemoteTier`]) are consulted in
+//! attachment order on a memory miss, and a lower-tier hit is promoted
+//! back into memory, owned by the requesting scope.
 //!
 //! # Concurrency invariants
 //!
@@ -23,11 +27,22 @@
 //!   the flight and wakes the waiters. Claimants must never block on
 //!   another flight while holding an unpublished claim — the engine
 //!   executes and publishes all of its claims before waiting (see
-//!   `runtime/engine.rs`), which rules out claim/wait cycles.
-//! * **Scoped accounting.** Every counted operation takes an optional
-//!   [`ScopedCounters`] and bumps the scope *and* the global counters
-//!   with the same increments, so per-tenant counters sum exactly to the
-//!   global [`CacheStats`] when every operation carries a scope.
+//!   `runtime/engine.rs`), which rules out claim/wait cycles. Across
+//!   nodes, the same discipline extends over the wire: a peer's
+//!   `cache-get` lands in [`ReuseCache::serve_remote_get`], which
+//!   either serves the state or hands the *requester* a deadline-bearing
+//!   claim ([`RemoteServe::Claimed`]) that its `cache-put` settles — two
+//!   nodes never duplicate a launch, and a crashed claimant expires.
+//! * **Scoped accounting.** Every counted operation takes a
+//!   [`CacheCtx`] and bumps the context's scope *and* the global
+//!   counters with the same increments, so per-tenant counters sum
+//!   exactly to the global [`CacheStats`] when every operation carries a
+//!   scope. The remote-serving paths ([`ReuseCache::serve_remote_get`],
+//!   [`ReuseCache::serve_remote_put`]) are deliberately *stat-invisible*
+//!   on the owner — peer traffic is billed on the requesting node, under
+//!   the requesting tenant, as `remote_hits` — which keeps the
+//!   scoped-sums-equal-globals invariant true on every node of a
+//!   cluster.
 //! * **Quota-aware admission.** Entries inserted under a scope are
 //!   *owned* by it: the owner's resident-byte counter grows on insert and
 //!   shrinks on eviction (whoever triggers the eviction, the *owner* is
@@ -35,18 +50,20 @@
 //!   byte-bounded tenant: admitting past the quota evicts the tenant's
 //!   own least-recently-used entries first, so one tenant can never
 //!   crowd the shared memory tier beyond its allowance — its states
-//!   remain reachable through the disk tier.
+//!   remain reachable through the lower tiers.
 
 use std::collections::{HashMap, HashSet};
 use std::fmt;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 use crate::data::Plane;
 
-use super::disk;
+use super::disk::{self, DiskTier};
 use super::key::Key;
+use super::tier::{CacheCtx, CacheTier, TierStats, DISK_TIER, MEMORY_TIER};
 
 /// The 3-plane chain state the cache stores (same shape the coordinator's
 /// node store moves between stages), refcount-shared: a cache hit hands
@@ -86,6 +103,8 @@ pub struct CacheStats {
     pub hits: u64,
     /// State lookups served from the disk tier.
     pub disk_hits: u64,
+    /// State lookups served by a peer node's cache (cluster mode).
+    pub remote_hits: u64,
     /// State lookups that found nothing.
     pub misses: u64,
     /// States newly published (first-time keys; approximate when several
@@ -106,11 +125,12 @@ pub struct CacheStats {
 impl CacheStats {
     /// Fraction of state lookups served from any tier.
     pub fn hit_rate(&self) -> f64 {
-        let total = self.hits + self.disk_hits + self.misses;
+        let served = self.hits + self.disk_hits + self.remote_hits;
+        let total = served + self.misses;
         if total == 0 {
             0.0
         } else {
-            (self.hits + self.disk_hits) as f64 / total as f64
+            served as f64 / total as f64
         }
     }
 
@@ -119,6 +139,7 @@ impl CacheStats {
         vec![
             ("cache.hits".into(), self.hits),
             ("cache.disk_hits".into(), self.disk_hits),
+            ("cache.remote_hits".into(), self.remote_hits),
             ("cache.misses".into(), self.misses),
             ("cache.inserts".into(), self.inserts),
             ("cache.evictions".into(), self.evictions),
@@ -133,31 +154,33 @@ impl CacheStats {
 
 /// Per-scope (per-tenant, per-study — the caller decides the scope)
 /// mirror of the lookup/publication counters, plus the scope's resident
-/// footprint and optional byte quota. Every counted cache operation that
-/// carries a scope bumps the scope and the global counters identically,
-/// so the sum of all scopes equals the global [`CacheStats`] on the
-/// fields a scope tracks (hits, disk hits, misses, inserts, metric
-/// hits/misses — and evictions/resident bytes when *every* insert was
-/// scoped); peak residency remains global-only.
+/// footprint and optional byte quota. Every counted cache operation
+/// whose [`CacheCtx`] carries a scope bumps the scope and the global
+/// counters identically, so the sum of all scopes equals the global
+/// [`CacheStats`] on the fields a scope tracks (hits, disk hits, remote
+/// hits, misses, inserts, metric hits/misses — and evictions/resident
+/// bytes when *every* insert was scoped); peak residency remains
+/// global-only.
 ///
-/// A scope handed to [`ReuseCache::put_state_scoped`] (or to a lookup
-/// that promotes a disk entry) becomes the **owner** of the admitted
-/// entry: the entry's bytes count against this scope's
+/// A scope in the context handed to [`ReuseCache::put_state`] (or to a
+/// lookup that promotes a lower-tier entry) becomes the **owner** of the
+/// admitted entry: the entry's bytes count against this scope's
 /// [`ScopedCounters::resident_bytes`] until the entry is evicted, and
 /// the eviction — whoever triggers it — is charged to this scope's
 /// eviction counter. Scope identity is the `Arc` pointer, which is why
 /// the owning entry points take `&Arc<ScopedCounters>`.
 #[derive(Debug, Default)]
 pub struct ScopedCounters {
-    hits: AtomicU64,
-    disk_hits: AtomicU64,
-    misses: AtomicU64,
-    inserts: AtomicU64,
-    evictions: AtomicU64,
-    metric_hits: AtomicU64,
-    metric_misses: AtomicU64,
-    bytes_served: AtomicU64,
-    resident: AtomicU64,
+    pub(super) hits: AtomicU64,
+    pub(super) disk_hits: AtomicU64,
+    pub(super) remote_hits: AtomicU64,
+    pub(super) misses: AtomicU64,
+    pub(super) inserts: AtomicU64,
+    pub(super) evictions: AtomicU64,
+    pub(super) metric_hits: AtomicU64,
+    pub(super) metric_misses: AtomicU64,
+    pub(super) bytes_served: AtomicU64,
+    pub(super) resident: AtomicU64,
     /// Memory-tier byte allowance for entries this scope owns
     /// (0 = unlimited). Fixed at construction.
     quota: u64,
@@ -186,6 +209,7 @@ impl ScopedCounters {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             disk_hits: self.disk_hits.load(Ordering::Relaxed),
+            remote_hits: self.remote_hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             inserts: self.inserts.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
@@ -205,7 +229,7 @@ impl ScopedCounters {
     }
 
     /// Memory-tier bytes currently occupied by entries this scope owns.
-    /// After every `put_state_scoped` call returns, this is ≤
+    /// After every scoped `put_state` call returns, this is ≤
     /// [`ScopedCounters::quota_bytes`] (when a quota is set).
     pub fn resident_bytes(&self) -> u64 {
         self.resident.load(Ordering::Relaxed)
@@ -245,13 +269,25 @@ pub enum MetricsClaim {
     InFlight,
 }
 
+/// Outcome of serving a peer's `cache-get` on the node that owns the
+/// key ([`ReuseCache::serve_remote_get`]).
+pub enum RemoteServe {
+    /// The owner holds the state (memory or disk) — ship it back.
+    Found(CachedState),
+    /// Nothing cached and no other node computing: the *requester* now
+    /// holds the cross-node claim and must compute locally, then publish
+    /// with `cache-put` (which settles the claim). The claim expires
+    /// after a TTL, so a crashed requester cannot wedge the key.
+    Claimed,
+}
+
 struct Entry {
     state: CachedState,
     bytes: usize,
     tick: u64,
     /// The scope whose residency this entry counts against (see
     /// [`ScopedCounters`]); `None` for unscoped inserts (single-study
-    /// runs, warm-start pre-admission).
+    /// runs, warm-start pre-admission, peer-published entries).
     owner: Option<Arc<ScopedCounters>>,
 }
 
@@ -271,69 +307,52 @@ struct Flights {
     cv: Condvar,
 }
 
-/// The cross-study, content-addressed reuse cache.
-pub struct ReuseCache {
-    cfg: CacheConfig,
+/// Cross-node single-flight registry: keys a *peer node* claimed via
+/// `cache-get` and has not yet settled with `cache-put`. Claims carry
+/// their grant time so a crashed claimant expires after
+/// [`REMOTE_CLAIM_TTL`] instead of wedging the key cluster-wide.
+#[derive(Default)]
+struct RemoteClaims {
+    map: Mutex<HashMap<Key, Instant>>,
+    cv: Condvar,
+}
+
+/// How long a peer may sit on a cross-node claim before another
+/// requester may take it over. Generous: it only bounds the damage of a
+/// crashed claimant, and a duplicate launch is merely wasted work.
+const REMOTE_CLAIM_TTL: Duration = Duration::from_secs(30);
+
+/// Re-check cadence while a `cache-get` handler waits on someone else's
+/// cross-node claim (settles also wake it immediately via the condvar).
+const REMOTE_WAIT_SLICE: Duration = Duration::from_millis(100);
+
+/// The resident memory tier: a sharded, byte-bounded, quota-aware LRU.
+/// Always the top of the stack; owned concretely by [`ReuseCache`] (the
+/// hot path never pays a vtable), exposed as a [`CacheTier`] for
+/// introspection and tests.
+pub struct MemoryTier {
+    capacity_bytes: usize,
     shards: Vec<Mutex<Shard>>,
-    metrics: Mutex<HashMap<Key, [f32; 3]>>,
-    flights: Flights,
     tick: AtomicU64,
     hits: AtomicU64,
-    disk_hits: AtomicU64,
-    misses: AtomicU64,
-    inserts: AtomicU64,
+    stores: AtomicU64,
     evictions: AtomicU64,
-    spilled: AtomicU64,
-    metric_hits: AtomicU64,
-    metric_misses: AtomicU64,
     resident: AtomicU64,
     peak: AtomicU64,
 }
 
-impl fmt::Debug for ReuseCache {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.debug_struct("ReuseCache")
-            .field("cfg", &self.cfg)
-            .field("stats", &self.stats())
-            .finish()
-    }
-}
-
-impl ReuseCache {
-    pub fn new(cfg: CacheConfig) -> Self {
-        let n = cfg.shards.max(1);
+impl MemoryTier {
+    fn new(capacity_bytes: usize, nshards: usize) -> Self {
         Self {
-            cfg,
-            shards: (0..n).map(|_| Mutex::new(Shard::default())).collect(),
-            metrics: Mutex::new(HashMap::new()),
-            flights: Flights::default(),
+            capacity_bytes,
+            shards: (0..nshards.max(1)).map(|_| Mutex::new(Shard::default())).collect(),
             tick: AtomicU64::new(0),
             hits: AtomicU64::new(0),
-            disk_hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            inserts: AtomicU64::new(0),
+            stores: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
-            spilled: AtomicU64::new(0),
-            metric_hits: AtomicU64::new(0),
-            metric_misses: AtomicU64::new(0),
             resident: AtomicU64::new(0),
             peak: AtomicU64::new(0),
         }
-    }
-
-    /// An in-memory cache with the given byte budget and defaults
-    /// elsewhere.
-    pub fn with_capacity(capacity_bytes: usize) -> Self {
-        Self::new(CacheConfig { capacity_bytes, ..CacheConfig::default() })
-    }
-
-    pub fn config(&self) -> &CacheConfig {
-        &self.cfg
-    }
-
-    /// The parameter quantization step keys are built with.
-    pub fn quantize_step(&self) -> f64 {
-        self.cfg.quantize
     }
 
     fn shard_of(&self, key: Key) -> &Mutex<Shard> {
@@ -343,15 +362,16 @@ impl ReuseCache {
     }
 
     fn per_shard_budget(&self) -> usize {
-        self.cfg.capacity_bytes / self.shards.len()
+        self.capacity_bytes / self.shards.len()
     }
 
     fn next_tick(&self) -> u64 {
         self.tick.fetch_add(1, Ordering::Relaxed) + 1
     }
 
-    /// Resident-memory probe: bumps the LRU tick, touches no counters.
-    fn probe_resident(&self, key: Key) -> Option<CachedState> {
+    /// Resident probe: bumps the LRU tick, touches no counters (the
+    /// stack does the billing; peeks stay invisible).
+    fn probe(&self, key: Key) -> Option<CachedState> {
         let mut s = self.shard_of(key).lock().unwrap();
         if let Some(e) = s.map.get_mut(&key) {
             e.tick = self.next_tick();
@@ -361,203 +381,34 @@ impl ReuseCache {
         }
     }
 
-    fn bump(global: &AtomicU64, scoped: Option<&AtomicU64>) {
-        global.fetch_add(1, Ordering::Relaxed);
-        if let Some(s) = scoped {
-            s.fetch_add(1, Ordering::Relaxed);
-        }
+    fn contains(&self, key: Key) -> bool {
+        self.shard_of(key).lock().unwrap().map.contains_key(&key)
     }
 
-    /// Credit a served state's payload size to the scope (per-tenant
-    /// byte accounting; no global counterpart — globals track residency).
-    fn credit_bytes(scope: Option<&Arc<ScopedCounters>>, state: &CachedState) {
-        if let Some(s) = scope {
-            let bytes: usize = state.iter().map(Plane::nbytes).sum();
-            s.bytes_served.fetch_add(bytes as u64, Ordering::Relaxed);
-        }
+    fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
-    /// Look up the state for `key`: memory first, then the disk tier.
-    /// A memory hit is a refcount bump (the returned `Arc` shares the
-    /// resident allocation); a disk hit is promoted back into memory.
-    pub fn get_state(&self, key: Key) -> Option<CachedState> {
-        self.get_state_scoped(key, None)
+    fn resident_keys(&self) -> Vec<Key> {
+        let mut keys: Vec<Key> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.lock().unwrap().map.keys().copied().collect::<Vec<_>>())
+            .collect();
+        keys.sort_unstable();
+        keys
     }
 
-    /// [`ReuseCache::get_state`] mirroring the counters into `scope`;
-    /// a disk hit is promoted into memory charged to (owned by) `scope`.
-    pub fn get_state_scoped(
-        &self,
-        key: Key,
-        scope: Option<&Arc<ScopedCounters>>,
-    ) -> Option<CachedState> {
-        if let Some(state) = self.probe_resident(key) {
-            Self::bump(&self.hits, scope.map(|s| &s.hits));
-            Self::credit_bytes(scope, &state);
-            return Some(state);
-        }
-        if let Some(dir) = &self.cfg.spill_dir {
-            if let Some(state) = disk::load_state(dir, key) {
-                let state: CachedState = Arc::new(state);
-                Self::bump(&self.disk_hits, scope.map(|s| &s.disk_hits));
-                Self::credit_bytes(scope, &state);
-                self.insert_resident(key, Arc::clone(&state), scope);
-                return Some(state);
-            }
-        }
-        Self::bump(&self.misses, scope.map(|s| &s.misses));
-        None
+    fn resident_bytes(&self) -> u64 {
+        self.resident.load(Ordering::Relaxed)
     }
 
-    /// Single-flight lookup: a hit is served zero-copy; a miss *claims*
-    /// the key (registering it in flight, counted as a miss — so under
-    /// full single-flight discipline, `misses` equals backend
-    /// computations); a key someone else is computing returns
-    /// [`StateClaim::InFlight`] without touching any counter — the
-    /// caller waits and retries, and the eventual resolution is what
-    /// gets counted.
-    pub fn lookup_or_claim(&self, key: Key, scope: Option<&Arc<ScopedCounters>>) -> StateClaim {
-        if let Some(state) = self.probe_resident(key) {
-            Self::bump(&self.hits, scope.map(|s| &s.hits));
-            Self::credit_bytes(scope, &state);
-            return StateClaim::Ready(state);
-        }
-        {
-            let mut flights = self.flights.set.lock().unwrap();
-            if flights.contains(&key) {
-                return StateClaim::InFlight;
-            }
-            // the owner may have published between the probe and the lock
-            if let Some(state) = self.probe_resident(key) {
-                Self::bump(&self.hits, scope.map(|s| &s.hits));
-                Self::credit_bytes(scope, &state);
-                return StateClaim::Ready(state);
-            }
-            // claim BEFORE the disk probe, so the (slow) file read below
-            // runs without the global flight lock — concurrent lookups of
-            // this key wait on the claim; everyone else proceeds
-            flights.insert(key);
-        }
-        if let Some(dir) = &self.cfg.spill_dir {
-            if let Some(state) = disk::load_state(dir, key) {
-                let state: CachedState = Arc::new(state);
-                Self::bump(&self.disk_hits, scope.map(|s| &s.disk_hits));
-                Self::credit_bytes(scope, &state);
-                self.insert_resident(key, Arc::clone(&state), scope);
-                // promoted to memory: waiters re-probe and hit
-                self.release_flight(key);
-                return StateClaim::Ready(state);
-            }
-        }
-        Self::bump(&self.misses, scope.map(|s| &s.misses));
-        StateClaim::Claimed
+    fn evictions_total(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
     }
 
-    /// Single-flight lookup on the comparison-metric map (see
-    /// [`ReuseCache::lookup_or_claim`] for the protocol).
-    pub fn lookup_or_claim_metrics(
-        &self,
-        key: Key,
-        scope: Option<&Arc<ScopedCounters>>,
-    ) -> MetricsClaim {
-        if let Some(m) = self.metrics.lock().unwrap().get(&key) {
-            Self::bump(&self.metric_hits, scope.map(|s| &s.metric_hits));
-            return MetricsClaim::Ready(*m);
-        }
-        let mut flights = self.flights.set.lock().unwrap();
-        if flights.contains(&key) {
-            return MetricsClaim::InFlight;
-        }
-        if let Some(m) = self.metrics.lock().unwrap().get(&key) {
-            Self::bump(&self.metric_hits, scope.map(|s| &s.metric_hits));
-            return MetricsClaim::Ready(*m);
-        }
-        flights.insert(key);
-        Self::bump(&self.metric_misses, scope.map(|s| &s.metric_misses));
-        MetricsClaim::Claimed
-    }
-
-    /// Release an in-flight claim without publishing (error/abandon
-    /// path). Idempotent; wakes every waiter so one of them can
-    /// re-claim. [`ReuseCache::put_state`] / [`ReuseCache::put_metrics`]
-    /// release automatically on publication.
-    pub fn release_flight(&self, key: Key) {
-        let mut flights = self.flights.set.lock().unwrap();
-        if flights.remove(&key) {
-            self.flights.cv.notify_all();
-        }
-    }
-
-    /// Block until `key` is no longer in flight (it may be published,
-    /// abandoned, or even already evicted — the caller must look up
-    /// again and, on a miss, claim for itself). Callers must not hold
-    /// any unpublished claim of their own while waiting.
-    pub fn wait_for_flight(&self, key: Key) {
-        let mut flights = self.flights.set.lock().unwrap();
-        while flights.contains(&key) {
-            flights = self.flights.cv.wait(flights).unwrap();
-        }
-    }
-
-    /// Count a state hit that was served outside the cache's own lookup
-    /// paths — the batched executor serving a lane from a sibling lane's
-    /// just-computed result records it here, exactly as the sequential
-    /// path's lookup-after-publication would have counted a hit.
-    pub fn note_state_hit(&self) {
-        self.note_state_hit_scoped(None)
-    }
-
-    /// [`ReuseCache::note_state_hit`] mirroring into `scope`.
-    pub fn note_state_hit_scoped(&self, scope: Option<&Arc<ScopedCounters>>) {
-        Self::bump(&self.hits, scope.map(|s| &s.hits));
-    }
-
-    /// Probe without fetching (planning-time check): true when the key is
-    /// resident in memory or present on disk. Does not touch LRU order or
-    /// the hit/miss counters.
-    pub fn contains_state(&self, key: Key) -> bool {
-        if self.shard_of(key).lock().unwrap().map.contains_key(&key) {
-            return true;
-        }
-        match &self.cfg.spill_dir {
-            Some(dir) => disk::has_state(dir, key),
-            None => false,
-        }
-    }
-
-    /// Publish a state under `key` (anything convertible into the
-    /// refcounted [`CachedState`]; a plain `[Plane; 3]` wraps into a
-    /// fresh `Arc`). With a disk tier the entry is written through
-    /// immediately; the in-memory copy is subject to LRU. The `inserts`
-    /// counter tracks newly published keys (approximate under concurrent
-    /// duplicate publication of the same key). Publication releases any
-    /// in-flight claim on `key` and wakes its waiters.
-    pub fn put_state(&self, key: Key, state: impl Into<CachedState>) {
-        self.put_state_scoped(key, state, None)
-    }
-
-    /// [`ReuseCache::put_state`] mirroring the insert counter into
-    /// `scope` and making `scope` the admitted entry's owner: the
-    /// entry's bytes count against the scope's residency (and quota, if
-    /// it has one) until eviction.
-    pub fn put_state_scoped(
-        &self,
-        key: Key,
-        state: impl Into<CachedState>,
-        scope: Option<&Arc<ScopedCounters>>,
-    ) {
-        let state = state.into();
-        let mut new_on_disk = false;
-        if let Some(dir) = &self.cfg.spill_dir {
-            if let Ok(true) = disk::store_state(dir, key, &state) {
-                self.spilled.fetch_add(1, Ordering::Relaxed);
-                new_on_disk = true;
-            }
-        }
-        if self.insert_resident(key, state, scope) || new_on_disk {
-            Self::bump(&self.inserts, scope.map(|s| &s.inserts));
-        }
-        self.release_flight(key);
+    fn peak_bytes(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
     }
 
     /// Remove an evicted entry's bytes from the books, charging the
@@ -641,20 +492,15 @@ impl ReuseCache {
     }
 
     /// Returns true when `key` was newly added to the resident map.
-    fn insert_resident(
-        &self,
-        key: Key,
-        state: CachedState,
-        owner: Option<&Arc<ScopedCounters>>,
-    ) -> bool {
+    fn insert(&self, key: Key, state: CachedState, owner: Option<&Arc<ScopedCounters>>) -> bool {
         let bytes: usize = state.iter().map(Plane::nbytes).sum();
         let budget = self.per_shard_budget();
         if bytes > budget {
-            return false; // larger than a whole shard: disk-only (if configured)
+            return false; // larger than a whole shard: lower tiers only
         }
         if let Some(o) = owner {
             if o.quota > 0 && bytes as u64 > o.quota {
-                return false; // larger than the whole quota: disk-only
+                return false; // larger than the whole quota: lower tiers only
             }
         }
         let tick = self.next_tick();
@@ -716,26 +562,336 @@ impl ReuseCache {
         }
         true
     }
+}
 
-    /// Look up cached comparison metrics.
-    pub fn get_metrics(&self, key: Key) -> Option<[f32; 3]> {
-        self.get_metrics_scoped(key, None)
+impl CacheTier for MemoryTier {
+    fn name(&self) -> &'static str {
+        MEMORY_TIER
     }
 
-    /// [`ReuseCache::get_metrics`] mirroring the counters into `scope`.
-    pub fn get_metrics_scoped(
-        &self,
-        key: Key,
-        scope: Option<&Arc<ScopedCounters>>,
-    ) -> Option<[f32; 3]> {
+    fn lookup(&self, key: Key, _ctx: &CacheCtx) -> Option<CachedState> {
+        let state = self.probe(key)?;
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(state)
+    }
+
+    fn store(&self, key: Key, state: &CachedState, ctx: &CacheCtx) -> bool {
+        if self.insert(key, Arc::clone(state), ctx.scope()) {
+            self.stores.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn evict_scope(&self, scope: &Arc<ScopedCounters>) -> bool {
+        self.evict_scope_lru(scope)
+    }
+
+    fn stats(&self) -> TierStats {
+        TierStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            stores: self.stores.load(Ordering::Relaxed),
+            resident_bytes: self.resident.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The cross-study, content-addressed reuse cache: the [`MemoryTier`]
+/// stacked over the attached lower tiers, plus claims and accounting.
+pub struct ReuseCache {
+    cfg: CacheConfig,
+    memory: MemoryTier,
+    /// Lower tiers, consulted in order on a memory miss and written
+    /// through on publication. The disk tier is installed at
+    /// construction (when `spill_dir` is set); the service attaches the
+    /// remote tier after boot ([`ReuseCache::attach_tier`]).
+    lower: RwLock<Vec<Arc<dyn CacheTier>>>,
+    metrics: Mutex<HashMap<Key, [f32; 3]>>,
+    flights: Flights,
+    remote: RemoteClaims,
+    hits: AtomicU64,
+    disk_hits: AtomicU64,
+    remote_hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    spilled: AtomicU64,
+    metric_hits: AtomicU64,
+    metric_misses: AtomicU64,
+}
+
+impl fmt::Debug for ReuseCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ReuseCache")
+            .field("cfg", &self.cfg)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+impl ReuseCache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        let memory = MemoryTier::new(cfg.capacity_bytes, cfg.shards);
+        let mut lower: Vec<Arc<dyn CacheTier>> = Vec::new();
+        if let Some(dir) = &cfg.spill_dir {
+            lower.push(Arc::new(DiskTier::new(dir.clone())));
+        }
+        Self {
+            cfg,
+            memory,
+            lower: RwLock::new(lower),
+            metrics: Mutex::new(HashMap::new()),
+            flights: Flights::default(),
+            remote: RemoteClaims::default(),
+            hits: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            remote_hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            spilled: AtomicU64::new(0),
+            metric_hits: AtomicU64::new(0),
+            metric_misses: AtomicU64::new(0),
+        }
+    }
+
+    /// An in-memory cache with the given byte budget and defaults
+    /// elsewhere.
+    pub fn with_capacity(capacity_bytes: usize) -> Self {
+        Self::new(CacheConfig { capacity_bytes, ..CacheConfig::default() })
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    /// The parameter quantization step keys are built with.
+    pub fn quantize_step(&self) -> f64 {
+        self.cfg.quantize
+    }
+
+    /// The resident memory tier (top of the stack), viewable as a
+    /// [`CacheTier`] trait object.
+    pub fn memory_tier(&self) -> &MemoryTier {
+        &self.memory
+    }
+
+    /// Snapshot of the lower tiers, in consultation order.
+    pub fn tiers(&self) -> Vec<Arc<dyn CacheTier>> {
+        self.lower.read().unwrap().clone()
+    }
+
+    /// Attach a lower tier below every tier already present. Lookups
+    /// consult it on a miss of everything above; publications write
+    /// through to it. The counter mapping keys on [`CacheTier::name`]:
+    /// `"disk"` bills as `disk_hits`/`spilled`, anything else as
+    /// `remote_hits`.
+    pub fn attach_tier(&self, tier: Arc<dyn CacheTier>) {
+        self.lower.write().unwrap().push(tier);
+    }
+
+    fn bump(global: &AtomicU64, scoped: Option<&AtomicU64>) {
+        global.fetch_add(1, Ordering::Relaxed);
+        if let Some(s) = scoped {
+            s.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Credit a served state's payload size to the scope (per-tenant
+    /// byte accounting; no global counterpart — globals track residency).
+    fn credit_bytes(scope: Option<&Arc<ScopedCounters>>, state: &CachedState) {
+        if let Some(s) = scope {
+            let bytes: usize = state.iter().map(Plane::nbytes).sum();
+            s.bytes_served.fetch_add(bytes as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Bill a memory-tier hit to the context.
+    fn count_memory_hit(&self, ctx: &CacheCtx, state: &CachedState) {
+        Self::bump(&self.hits, ctx.scope().map(|s| &s.hits));
+        Self::credit_bytes(ctx.scope(), state);
+    }
+
+    /// Consult the lower tiers in order; a hit is billed by tier name,
+    /// promoted into memory owned by the requesting scope (no `inserts`
+    /// bump — promotion is not publication), and served.
+    fn lookup_lower(&self, key: Key, ctx: &CacheCtx) -> Option<CachedState> {
+        let tiers = self.lower.read().unwrap();
+        for tier in tiers.iter() {
+            let Some(state) = tier.lookup(key, ctx) else {
+                continue;
+            };
+            if tier.name() == DISK_TIER {
+                Self::bump(&self.disk_hits, ctx.scope().map(|s| &s.disk_hits));
+            } else {
+                Self::bump(&self.remote_hits, ctx.scope().map(|s| &s.remote_hits));
+            }
+            Self::credit_bytes(ctx.scope(), &state);
+            self.memory.insert(key, Arc::clone(&state), ctx.scope());
+            return Some(state);
+        }
+        None
+    }
+
+    /// Look up the state for `key`: memory first, then the lower tiers
+    /// in order. A memory hit is a refcount bump (the returned `Arc`
+    /// shares the resident allocation); a lower-tier hit is promoted
+    /// back into memory, charged to (owned by) the context's scope.
+    pub fn get_state(&self, key: Key, ctx: &CacheCtx) -> Option<CachedState> {
+        if let Some(state) = self.memory.lookup(key, ctx) {
+            self.count_memory_hit(ctx, &state);
+            return Some(state);
+        }
+        if let Some(state) = self.lookup_lower(key, ctx) {
+            return Some(state);
+        }
+        Self::bump(&self.misses, ctx.scope().map(|s| &s.misses));
+        None
+    }
+
+    /// Single-flight lookup: a hit is served zero-copy; a miss *claims*
+    /// the key (registering it in flight, counted as a miss — so under
+    /// full single-flight discipline, `misses` equals backend
+    /// computations); a key someone else is computing returns
+    /// [`StateClaim::InFlight`] without touching any counter — the
+    /// caller waits and retries, and the eventual resolution is what
+    /// gets counted.
+    pub fn lookup_or_claim(&self, key: Key, ctx: &CacheCtx) -> StateClaim {
+        if let Some(state) = self.memory.lookup(key, ctx) {
+            self.count_memory_hit(ctx, &state);
+            return StateClaim::Ready(state);
+        }
+        {
+            let mut flights = self.flights.set.lock().unwrap();
+            if flights.contains(&key) {
+                return StateClaim::InFlight;
+            }
+            // the owner may have published between the probe and the lock
+            if let Some(state) = self.memory.lookup(key, ctx) {
+                self.count_memory_hit(ctx, &state);
+                return StateClaim::Ready(state);
+            }
+            // claim BEFORE the lower-tier probes, so the (slow) disk
+            // read or peer round-trip below runs without the global
+            // flight lock — concurrent lookups of this key wait on the
+            // claim; everyone else proceeds
+            flights.insert(key);
+        }
+        if let Some(state) = self.lookup_lower(key, ctx) {
+            // promoted to memory: waiters re-probe and hit
+            self.release_flight(key);
+            return StateClaim::Ready(state);
+        }
+        Self::bump(&self.misses, ctx.scope().map(|s| &s.misses));
+        StateClaim::Claimed
+    }
+
+    /// Single-flight lookup on the comparison-metric map (see
+    /// [`ReuseCache::lookup_or_claim`] for the protocol). Metrics are
+    /// tiny and memory-only; they never travel through the tier stack.
+    pub fn lookup_or_claim_metrics(&self, key: Key, ctx: &CacheCtx) -> MetricsClaim {
+        if let Some(m) = self.metrics.lock().unwrap().get(&key) {
+            Self::bump(&self.metric_hits, ctx.scope().map(|s| &s.metric_hits));
+            return MetricsClaim::Ready(*m);
+        }
+        let mut flights = self.flights.set.lock().unwrap();
+        if flights.contains(&key) {
+            return MetricsClaim::InFlight;
+        }
+        if let Some(m) = self.metrics.lock().unwrap().get(&key) {
+            Self::bump(&self.metric_hits, ctx.scope().map(|s| &s.metric_hits));
+            return MetricsClaim::Ready(*m);
+        }
+        flights.insert(key);
+        Self::bump(&self.metric_misses, ctx.scope().map(|s| &s.metric_misses));
+        MetricsClaim::Claimed
+    }
+
+    /// Release an in-flight claim without publishing (error/abandon
+    /// path). Idempotent; wakes every waiter so one of them can
+    /// re-claim. [`ReuseCache::put_state`] / [`ReuseCache::put_metrics`]
+    /// release automatically on publication.
+    pub fn release_flight(&self, key: Key) {
+        let mut flights = self.flights.set.lock().unwrap();
+        if flights.remove(&key) {
+            self.flights.cv.notify_all();
+        }
+    }
+
+    /// Block until `key` is no longer in flight (it may be published,
+    /// abandoned, or even already evicted — the caller must look up
+    /// again and, on a miss, claim for itself). Callers must not hold
+    /// any unpublished claim of their own while waiting.
+    pub fn wait_for_flight(&self, key: Key) {
+        let mut flights = self.flights.set.lock().unwrap();
+        while flights.contains(&key) {
+            flights = self.flights.cv.wait(flights).unwrap();
+        }
+    }
+
+    /// Count a state hit that was served outside the cache's own lookup
+    /// paths — the batched executor serving a lane from a sibling lane's
+    /// just-computed result records it here, exactly as the sequential
+    /// path's lookup-after-publication would have counted a hit.
+    pub fn note_state_hit(&self, ctx: &CacheCtx) {
+        Self::bump(&self.hits, ctx.scope().map(|s| &s.hits));
+    }
+
+    /// Probe without fetching (planning-time check): true when the key
+    /// is resident in memory or present on disk. Deliberately *local*
+    /// tiers only — a planning pass must not pay a network round-trip
+    /// per key, and must not disturb peers' cross-node claims. Does not
+    /// touch LRU order or the hit/miss counters.
+    pub fn contains_state(&self, key: Key) -> bool {
+        if self.memory.contains(key) {
+            return true;
+        }
+        match &self.cfg.spill_dir {
+            Some(dir) => disk::has_state(dir, key),
+            None => false,
+        }
+    }
+
+    /// Publish a state under `key` (anything convertible into the
+    /// refcounted [`CachedState`]; a plain `[Plane; 3]` wraps into a
+    /// fresh `Arc`). The state is written through every lower tier
+    /// (disk immediately; in cluster mode the remote tier ships it to
+    /// the peer that owns the key), then admitted to memory owned by
+    /// the context's scope. The `inserts` counter tracks newly published
+    /// keys (approximate under concurrent duplicate publication of the
+    /// same key); what a *peer* stores is the peer's business and never
+    /// bumps it. Publication releases any in-flight claim on `key` and
+    /// wakes its waiters — including peer `cache-get` handlers parked on
+    /// a cross-node claim.
+    pub fn put_state(&self, key: Key, state: impl Into<CachedState>, ctx: &CacheCtx) {
+        let state = state.into();
+        let mut new_on_disk = false;
+        {
+            let tiers = self.lower.read().unwrap();
+            for tier in tiers.iter() {
+                let stored = tier.store(key, &state, ctx);
+                if stored && tier.name() == DISK_TIER {
+                    self.spilled.fetch_add(1, Ordering::Relaxed);
+                    new_on_disk = true;
+                }
+            }
+        }
+        if self.memory.insert(key, state, ctx.scope()) || new_on_disk {
+            Self::bump(&self.inserts, ctx.scope().map(|s| &s.inserts));
+        }
+        self.release_flight(key);
+        self.settle_remote(key);
+    }
+
+    /// Look up cached comparison metrics.
+    pub fn get_metrics(&self, key: Key, ctx: &CacheCtx) -> Option<[f32; 3]> {
         let m = self.metrics.lock().unwrap();
         match m.get(&key) {
             Some(v) => {
-                Self::bump(&self.metric_hits, scope.map(|s| &s.metric_hits));
+                Self::bump(&self.metric_hits, ctx.scope().map(|s| &s.metric_hits));
                 Some(*v)
             }
             None => {
-                Self::bump(&self.metric_misses, scope.map(|s| &s.metric_misses));
+                Self::bump(&self.metric_misses, ctx.scope().map(|s| &s.metric_misses));
                 None
             }
         }
@@ -753,9 +909,96 @@ impl ReuseCache {
         self.metrics.lock().unwrap().contains_key(&key)
     }
 
+    // ------------------------------------------------------------------
+    // The owner side of the cluster fabric: serving peers' cache-get /
+    // cache-put. These paths are STAT-INVISIBLE — they bump neither the
+    // global nor any scoped counter (tier-local diagnostics aside) — so
+    // every node's scoped sums still equal its globals: peer traffic is
+    // billed on the requesting node, as that tenant's `remote_hits`.
+    // ------------------------------------------------------------------
+
+    /// Uncounted local probe (memory, then disk): the owner answering a
+    /// peer's `cache-get`. No promotion, no LRU-billing, no counters —
+    /// the requester does its own accounting.
+    pub fn peek_state(&self, key: Key) -> Option<CachedState> {
+        if let Some(state) = self.memory.probe(key) {
+            return Some(state);
+        }
+        let ctx = CacheCtx::unscoped();
+        let tiers = self.lower.read().unwrap();
+        for tier in tiers.iter().filter(|t| t.name() == DISK_TIER) {
+            if let Some(state) = tier.lookup(key, &ctx) {
+                return Some(state);
+            }
+        }
+        None
+    }
+
+    /// Serve a peer's `cache-get` for a key this node owns: the state
+    /// if any local tier holds it, else a cross-node claim — blocking
+    /// while *another* requester holds the claim, so two nodes never
+    /// launch the same task. Claims expire after a TTL (30 s), so a
+    /// crashed requester cannot wedge the key.
+    pub fn serve_remote_get(&self, key: Key) -> RemoteServe {
+        loop {
+            if let Some(state) = self.peek_state(key) {
+                return RemoteServe::Found(state);
+            }
+            let mut claims = self.remote.map.lock().unwrap();
+            let held = claims.get(&key).is_some_and(|since| since.elapsed() < REMOTE_CLAIM_TTL);
+            if held {
+                // someone else is computing this key: wait for its
+                // cache-put (or claim expiry) and re-check from the top
+                let (guard, _) = self.remote.cv.wait_timeout(claims, REMOTE_WAIT_SLICE).unwrap();
+                drop(guard);
+            } else {
+                // no active claim (or an expired one): this requester
+                // takes over and computes locally
+                claims.insert(key, Instant::now());
+                return RemoteServe::Claimed;
+            }
+        }
+    }
+
+    /// Accept a peer's `cache-put`: admit the published state locally
+    /// (write-through to disk, then memory) and settle any cross-node
+    /// claim on the key. Like warm-start pre-admission, the entry is
+    /// unowned and uncounted — the computing node already billed the
+    /// launch; the owner is just the key's home. Returns true when any
+    /// local tier newly stored it.
+    pub fn serve_remote_put(&self, key: Key, state: [Plane; 3]) -> bool {
+        let state: CachedState = Arc::new(state);
+        let ctx = CacheCtx::unscoped();
+        let mut stored = false;
+        {
+            let tiers = self.lower.read().unwrap();
+            for tier in tiers.iter().filter(|t| t.name() == DISK_TIER) {
+                if tier.store(key, &state, &ctx) {
+                    self.spilled.fetch_add(1, Ordering::Relaxed);
+                    stored = true;
+                }
+            }
+        }
+        if self.memory.insert(key, state, None) {
+            stored = true;
+        }
+        self.settle_remote(key);
+        stored
+    }
+
+    /// Settle the cross-node claim on `key` (if any) and wake every
+    /// `cache-get` handler parked on it. Called on `cache-put` and on
+    /// every local publication, so waiters re-peek promptly.
+    pub fn settle_remote(&self, key: Key) {
+        let mut claims = self.remote.map.lock().unwrap();
+        if claims.remove(&key).is_some() {
+            self.remote.cv.notify_all();
+        }
+    }
+
     /// Number of states resident in memory.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+        self.memory.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -764,20 +1007,14 @@ impl ReuseCache {
 
     /// Bytes currently resident in memory.
     pub fn resident_bytes(&self) -> usize {
-        self.resident.load(Ordering::Relaxed) as usize
+        self.memory.resident_bytes() as usize
     }
 
     /// Sorted keys of every state resident in memory (diagnostic / test
     /// aid: two runs that must leave the cache in the same state compare
     /// these).
     pub fn resident_keys(&self) -> Vec<Key> {
-        let mut keys: Vec<Key> = self
-            .shards
-            .iter()
-            .flat_map(|s| s.lock().unwrap().map.keys().copied().collect::<Vec<_>>())
-            .collect();
-        keys.sort_unstable();
-        keys
+        self.memory.resident_keys()
     }
 
     /// Sorted keys of every cached comparison metric.
@@ -792,14 +1029,15 @@ impl ReuseCache {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             disk_hits: self.disk_hits.load(Ordering::Relaxed),
+            remote_hits: self.remote_hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             inserts: self.inserts.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
+            evictions: self.memory.evictions_total(),
             spilled: self.spilled.load(Ordering::Relaxed),
             metric_hits: self.metric_hits.load(Ordering::Relaxed),
             metric_misses: self.metric_misses.load(Ordering::Relaxed),
-            resident_bytes: self.resident.load(Ordering::Relaxed),
-            peak_bytes: self.peak.load(Ordering::Relaxed),
+            resident_bytes: self.memory.resident_bytes(),
+            peak_bytes: self.memory.peak_bytes(),
         }
     }
 
@@ -828,7 +1066,7 @@ impl ReuseCache {
         for (key, _, file_len) in entries {
             // payload = file length minus the 12-byte header
             let payload = file_len.saturating_sub(12);
-            if self.resident.load(Ordering::Relaxed) + payload > capacity {
+            if self.memory.resident_bytes() + payload > capacity {
                 report.skipped += 1;
                 continue;
             }
@@ -836,7 +1074,7 @@ impl ReuseCache {
                 Some(state) => {
                     let state: CachedState = Arc::new(state);
                     let bytes: usize = state.iter().map(Plane::nbytes).sum();
-                    if self.insert_resident(key, state, None) {
+                    if self.memory.insert(key, state, None) {
                         report.admitted += 1;
                         report.admitted_bytes += bytes as u64;
                     } else {
@@ -902,6 +1140,7 @@ impl Drop for FlightClaims {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::tier::REMOTE_TIER;
 
     fn state(v: f32, side: usize) -> [Plane; 3] {
         [
@@ -915,12 +1154,16 @@ mod tests {
         Key::from(v)
     }
 
+    fn ux() -> CacheCtx {
+        CacheCtx::unscoped()
+    }
+
     #[test]
     fn hits_share_the_resident_allocation() {
         let c = ReuseCache::with_capacity(1 << 20);
-        c.put_state(k(7), state(3.0, 4));
-        let a = c.get_state(k(7)).expect("hit");
-        let b = c.get_state(k(7)).expect("hit");
+        c.put_state(k(7), state(3.0, 4), &ux());
+        let a = c.get_state(k(7), &ux()).expect("hit");
+        let b = c.get_state(k(7), &ux()).expect("hit");
         // zero-copy: both hits point at the same [Plane; 3] allocation
         assert!(Arc::ptr_eq(&a, &b), "cache hits must be refcount bumps");
         assert_eq!(c.resident_keys(), vec![k(7)]);
@@ -934,9 +1177,9 @@ mod tests {
     #[test]
     fn put_get_roundtrip_and_counters() {
         let c = ReuseCache::with_capacity(1 << 20);
-        assert!(c.get_state(k(1)).is_none());
-        c.put_state(k(1), state(5.0, 4));
-        let got = c.get_state(k(1)).expect("hit");
+        assert!(c.get_state(k(1), &ux()).is_none());
+        c.put_state(k(1), state(5.0, 4), &ux());
+        let got = c.get_state(k(1), &ux()).expect("hit");
         assert_eq!(got[0].get(0, 0), 5.0);
         let st = c.stats();
         assert_eq!((st.hits, st.misses, st.inserts), (1, 1, 1));
@@ -954,11 +1197,11 @@ mod tests {
         let a = Key::from_parts(0xAAAA, 0x42);
         let b = Key::from_parts(0xBBBB, 0x42);
         assert_eq!(a.lo(), b.lo(), "constructed to collide at 64 bits");
-        c.put_state(a, state(1.0, 4));
-        c.put_state(b, state(2.0, 4));
+        c.put_state(a, state(1.0, 4), &ux());
+        c.put_state(b, state(2.0, 4), &ux());
         assert_eq!(c.len(), 2, "no aliasing: both chains keep their state");
-        assert_eq!(c.get_state(a).unwrap()[0].get(0, 0), 1.0);
-        assert_eq!(c.get_state(b).unwrap()[0].get(0, 0), 2.0);
+        assert_eq!(c.get_state(a, &ux()).unwrap()[0].get(0, 0), 1.0);
+        assert_eq!(c.get_state(b, &ux()).unwrap()[0].get(0, 0), 2.0);
     }
 
     #[test]
@@ -969,14 +1212,14 @@ mod tests {
             shards: 1,
             ..CacheConfig::default()
         });
-        c.put_state(k(1), state(1.0, 4));
-        c.put_state(k(2), state(2.0, 4));
-        let _ = c.get_state(k(1)); // 1 is now more recent than 2
-        c.put_state(k(3), state(3.0, 4));
+        c.put_state(k(1), state(1.0, 4), &ux());
+        c.put_state(k(2), state(2.0, 4), &ux());
+        let _ = c.get_state(k(1), &ux()); // 1 is now more recent than 2
+        c.put_state(k(3), state(3.0, 4), &ux());
         assert!(c.resident_bytes() <= 2 * S4, "bound holds: {}", c.resident_bytes());
-        assert!(c.get_state(k(2)).is_none(), "LRU victim was 2");
-        assert!(c.get_state(k(1)).is_some());
-        assert!(c.get_state(k(3)).is_some());
+        assert!(c.get_state(k(2), &ux()).is_none(), "LRU victim was 2");
+        assert!(c.get_state(k(1), &ux()).is_some());
+        assert!(c.get_state(k(3), &ux()).is_some());
         assert_eq!(c.stats().evictions, 1);
     }
 
@@ -987,17 +1230,17 @@ mod tests {
             shards: 1,
             ..CacheConfig::default()
         });
-        c.put_state(k(9), state(1.0, 4));
+        c.put_state(k(9), state(1.0, 4), &ux());
         assert_eq!(c.len(), 0, "state larger than the shard budget stays out");
-        assert!(c.get_state(k(9)).is_none());
+        assert!(c.get_state(k(9), &ux()).is_none());
     }
 
     #[test]
     fn metrics_roundtrip() {
         let c = ReuseCache::with_capacity(1024);
-        assert!(c.get_metrics(k(5)).is_none());
+        assert!(c.get_metrics(k(5), &ux()).is_none());
         c.put_metrics(k(5), [0.9, 0.8, 0.01]);
-        assert_eq!(c.get_metrics(k(5)), Some([0.9, 0.8, 0.01]));
+        assert_eq!(c.get_metrics(k(5), &ux()), Some([0.9, 0.8, 0.01]));
         assert!(c.contains_metrics(k(5)));
         let st = c.stats();
         assert_eq!((st.metric_hits, st.metric_misses), (1, 1));
@@ -1013,9 +1256,9 @@ mod tests {
             spill_dir: Some(dir.clone()),
             ..CacheConfig::default()
         });
-        c.put_state(k(1), state(1.0, 4));
-        c.put_state(k(2), state(2.0, 4)); // evicts 1 from memory
-        let back = c.get_state(k(1)).expect("served from disk");
+        c.put_state(k(1), state(1.0, 4), &ux());
+        c.put_state(k(2), state(2.0, 4), &ux()); // evicts 1 from memory
+        let back = c.get_state(k(1), &ux()).expect("served from disk");
         assert_eq!(back[1].get(3, 3), 1.0);
         let st = c.stats();
         assert!(st.disk_hits >= 1, "stats: {st:?}");
@@ -1026,26 +1269,27 @@ mod tests {
     #[test]
     fn stats_summary_is_labeled() {
         let c = ReuseCache::with_capacity(1024);
-        c.put_state(k(1), state(1.0, 2));
+        c.put_state(k(1), state(1.0, 2), &ux());
         let rows = c.stats().summary();
         assert!(rows.iter().any(|(key, v)| key == "cache.inserts" && *v == 1));
-        assert_eq!(rows.len(), 10);
+        assert!(rows.iter().any(|(key, _)| key == "cache.remote_hits"));
+        assert_eq!(rows.len(), 11);
     }
 
     #[test]
     fn claim_protocol_single_thread() {
         let c = ReuseCache::with_capacity(1 << 20);
         // first lookup claims
-        assert!(matches!(c.lookup_or_claim(k(1), None), StateClaim::Claimed));
+        assert!(matches!(c.lookup_or_claim(k(1), &ux()), StateClaim::Claimed));
         // a second lookup (another worker) observes the flight
-        assert!(matches!(c.lookup_or_claim(k(1), None), StateClaim::InFlight));
+        assert!(matches!(c.lookup_or_claim(k(1), &ux()), StateClaim::InFlight));
         // publication resolves the flight; the next lookup is a hit
-        c.put_state(k(1), state(1.0, 4));
-        assert!(matches!(c.lookup_or_claim(k(1), None), StateClaim::Ready(_)));
+        c.put_state(k(1), state(1.0, 4), &ux());
+        assert!(matches!(c.lookup_or_claim(k(1), &ux()), StateClaim::Ready(_)));
         // abandoned claims release: the next lookup re-claims
-        assert!(matches!(c.lookup_or_claim(k(2), None), StateClaim::Claimed));
+        assert!(matches!(c.lookup_or_claim(k(2), &ux()), StateClaim::Claimed));
         c.release_flight(k(2));
-        assert!(matches!(c.lookup_or_claim(k(2), None), StateClaim::Claimed));
+        assert!(matches!(c.lookup_or_claim(k(2), &ux()), StateClaim::Claimed));
         c.release_flight(k(2));
         let st = c.stats();
         assert_eq!(st.misses, 3, "each claim counts one miss");
@@ -1057,15 +1301,17 @@ mod tests {
         let c = ReuseCache::with_capacity(1 << 20);
         let a = Arc::new(ScopedCounters::default());
         let b = Arc::new(ScopedCounters::default());
+        let ca = CacheCtx::scoped(Arc::clone(&a));
+        let cb = CacheCtx::scoped(Arc::clone(&b));
         // tenant a: one miss-claim + publish + one hit
-        assert!(matches!(c.lookup_or_claim(k(1), Some(&a)), StateClaim::Claimed));
-        c.put_state_scoped(k(1), state(1.0, 4), Some(&a));
-        assert!(c.get_state_scoped(k(1), Some(&a)).is_some());
+        assert!(matches!(c.lookup_or_claim(k(1), &ca), StateClaim::Claimed));
+        c.put_state(k(1), state(1.0, 4), &ca);
+        assert!(c.get_state(k(1), &ca).is_some());
         // tenant b: hits a's state; one metric miss-claim + publish
-        assert!(c.get_state_scoped(k(1), Some(&b)).is_some());
-        assert!(matches!(c.lookup_or_claim_metrics(k(9), Some(&b)), MetricsClaim::Claimed));
+        assert!(c.get_state(k(1), &cb).is_some());
+        assert!(matches!(c.lookup_or_claim_metrics(k(9), &cb), MetricsClaim::Claimed));
         c.put_metrics(k(9), [1.0, 1.0, 0.0]);
-        assert!(c.get_metrics_scoped(k(9), Some(&b)).is_some());
+        assert!(c.get_metrics(k(9), &cb).is_some());
 
         let (sa, sb, g) = (a.stats(), b.stats(), c.stats());
         assert_eq!((sa.misses, sa.inserts, sa.hits), (1, 1, 1));
@@ -1088,18 +1334,20 @@ mod tests {
             ..CacheConfig::default()
         });
         let t = Arc::new(ScopedCounters::with_quota(2 * S4 as u64));
-        c.put_state_scoped(k(1), state(1.0, 4), Some(&t));
-        c.put_state_scoped(k(2), state(2.0, 4), Some(&t));
+        let ct = CacheCtx::scoped(Arc::clone(&t));
+        c.put_state(k(1), state(1.0, 4), &ct);
+        c.put_state(k(2), state(2.0, 4), &ct);
         assert_eq!(t.resident_bytes(), 2 * S4 as u64);
-        c.put_state_scoped(k(3), state(3.0, 4), Some(&t));
+        c.put_state(k(3), state(3.0, 4), &ct);
         assert_eq!(t.resident_bytes(), 2 * S4 as u64, "quota bound holds");
         assert_eq!(t.evictions(), 1);
-        assert!(c.get_state(k(1)).is_none(), "the tenant's LRU entry was evicted");
-        assert!(c.get_state(k(2)).is_some());
-        assert!(c.get_state(k(3)).is_some());
+        assert!(c.get_state(k(1), &ux()).is_none(), "the tenant's LRU entry was evicted");
+        assert!(c.get_state(k(2), &ux()).is_some());
+        assert!(c.get_state(k(3), &ux()).is_some());
         // another tenant is untouched by the first one's quota
         let u = Arc::new(ScopedCounters::default());
-        c.put_state_scoped(k(9), state(9.0, 4), Some(&u));
+        let cu = CacheCtx::scoped(Arc::clone(&u));
+        c.put_state(k(9), state(9.0, 4), &cu);
         assert_eq!(u.resident_bytes(), S4 as u64);
         assert_eq!(u.evictions(), 0);
     }
@@ -1107,8 +1355,9 @@ mod tests {
     #[test]
     fn oversized_for_quota_stays_out_of_memory() {
         let t = Arc::new(ScopedCounters::with_quota(S4 as u64 / 2));
+        let ct = CacheCtx::scoped(Arc::clone(&t));
         let c = ReuseCache::with_capacity(1 << 20);
-        c.put_state_scoped(k(1), state(1.0, 4), Some(&t));
+        c.put_state(k(1), state(1.0, 4), &ct);
         assert_eq!(c.len(), 0, "entry larger than the whole quota is not admitted");
         assert_eq!(t.resident_bytes(), 0);
     }
@@ -1124,9 +1373,11 @@ mod tests {
         });
         let a = Arc::new(ScopedCounters::default());
         let b = Arc::new(ScopedCounters::default());
-        c.put_state_scoped(k(1), state(1.0, 4), Some(&a));
-        c.put_state_scoped(k(2), state(2.0, 4), Some(&b));
-        c.put_state_scoped(k(3), state(3.0, 4), Some(&b));
+        let ca = CacheCtx::scoped(Arc::clone(&a));
+        let cb = CacheCtx::scoped(Arc::clone(&b));
+        c.put_state(k(1), state(1.0, 4), &ca);
+        c.put_state(k(2), state(2.0, 4), &cb);
+        c.put_state(k(3), state(3.0, 4), &cb);
         assert_eq!(a.resident_bytes(), 0, "A's entry was evicted");
         assert_eq!(a.evictions(), 1, "the eviction is charged to the owner");
         assert_eq!(b.resident_bytes(), 2 * S4 as u64);
@@ -1149,8 +1400,8 @@ mod tests {
                 spill_dir: Some(dir.clone()),
                 ..CacheConfig::default()
             });
-            cold.put_state(k(1), state(1.0, 4));
-            cold.put_state(k(2), state(2.0, 4));
+            cold.put_state(k(1), state(1.0, 4), &ux());
+            cold.put_state(k(2), state(2.0, 4), &ux());
         }
         // a fresh process: nothing resident until warm_start pre-admits
         let warm = ReuseCache::new(CacheConfig {
@@ -1165,7 +1416,7 @@ mod tests {
         assert_eq!(report.admitted_bytes, 2 * S4 as u64);
         assert_eq!(warm.len(), 2);
         // the first lookup is a MEMORY hit, not a disk read
-        assert!(warm.get_state(k(1)).is_some());
+        assert!(warm.get_state(k(1), &ux()).is_some());
         let st = warm.stats();
         assert_eq!((st.hits, st.disk_hits), (1, 0), "warm-start makes lookups memory hits");
         let _ = std::fs::remove_dir_all(&dir);
@@ -1182,7 +1433,7 @@ mod tests {
                 ..CacheConfig::default()
             });
             for i in 0..4 {
-                cold.put_state(k(i), state(i as f32, 4));
+                cold.put_state(k(i), state(i as f32, 4), &ux());
             }
         }
         // junk the scanner must skip without erroring
@@ -1207,12 +1458,156 @@ mod tests {
         let c = Arc::new(ReuseCache::with_capacity(1 << 20));
         {
             let mut claims = FlightClaims::new(c.clone());
-            assert!(matches!(c.lookup_or_claim(k(5), None), StateClaim::Claimed));
+            assert!(matches!(c.lookup_or_claim(k(5), &ux()), StateClaim::Claimed));
             claims.add(k(5));
             // simulated error path: claims dropped without publishing
         }
         // the flight is gone: a new worker can claim
-        assert!(matches!(c.lookup_or_claim(k(5), None), StateClaim::Claimed));
+        assert!(matches!(c.lookup_or_claim(k(5), &ux()), StateClaim::Claimed));
         c.release_flight(k(5));
+    }
+
+    #[test]
+    fn warm_started_entries_are_visible_through_tier_trait_objects() {
+        // satellite: warm-start must interoperate with the trait-object
+        // view of the stack — entries pre-admitted at boot serve through
+        // &dyn CacheTier exactly like entries inserted through the API
+        let dir = std::env::temp_dir().join(format!("rtf-cache-warmtier-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let cold = ReuseCache::new(CacheConfig {
+                capacity_bytes: 1 << 20,
+                spill_dir: Some(dir.clone()),
+                ..CacheConfig::default()
+            });
+            cold.put_state(k(1), state(1.0, 4), &ux());
+        }
+        let warm = ReuseCache::new(CacheConfig {
+            capacity_bytes: 1 << 20,
+            spill_dir: Some(dir.clone()),
+            ..CacheConfig::default()
+        });
+        warm.warm_start();
+        let memory: &dyn CacheTier = warm.memory_tier();
+        assert_eq!(memory.name(), MEMORY_TIER);
+        let served = memory.lookup(k(1), &ux()).expect("warm entry via the trait object");
+        assert_eq!(served[0].get(0, 0), 1.0);
+        assert!(memory.stats().hits >= 1, "tier-local hit counted");
+        // the disk tier object below it also serves the same entry
+        let tiers = warm.tiers();
+        assert_eq!(tiers.len(), 1);
+        assert_eq!(tiers[0].name(), DISK_TIER);
+        assert!(tiers[0].lookup(k(1), &ux()).is_some(), "disk tier via the trait object");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A lower tier living in a test-controlled map, attached under the
+    /// remote name — exercises the stack's name-keyed counter routing
+    /// and write-through without a network.
+    struct MapTier {
+        map: Mutex<HashMap<Key, CachedState>>,
+    }
+
+    impl MapTier {
+        fn new() -> Self {
+            Self { map: Mutex::new(HashMap::new()) }
+        }
+    }
+
+    impl CacheTier for MapTier {
+        fn name(&self) -> &'static str {
+            REMOTE_TIER
+        }
+        fn lookup(&self, key: Key, _ctx: &CacheCtx) -> Option<CachedState> {
+            self.map.lock().unwrap().get(&key).cloned()
+        }
+        fn store(&self, key: Key, state: &CachedState, _ctx: &CacheCtx) -> bool {
+            self.map.lock().unwrap().insert(key, Arc::clone(state)).is_none()
+        }
+        fn evict_scope(&self, _scope: &Arc<ScopedCounters>) -> bool {
+            false
+        }
+        fn stats(&self) -> TierStats {
+            TierStats::default()
+        }
+    }
+
+    #[test]
+    fn attached_tier_hits_bill_as_remote_and_promote_into_memory() {
+        let c = ReuseCache::with_capacity(1 << 20);
+        let tier = Arc::new(MapTier::new());
+        tier.map.lock().unwrap().insert(k(1), Arc::new(state(1.0, 4)));
+        c.attach_tier(Arc::clone(&tier) as Arc<dyn CacheTier>);
+
+        let scope = Arc::new(ScopedCounters::default());
+        let ctx = CacheCtx::scoped(Arc::clone(&scope));
+        // the miss falls through memory to the attached tier
+        assert!(matches!(c.lookup_or_claim(k(1), &ctx), StateClaim::Ready(_)));
+        let st = c.stats();
+        assert_eq!((st.hits, st.remote_hits, st.misses), (0, 1, 0));
+        assert_eq!(scope.stats().remote_hits, 1, "billed under the requesting scope");
+        // the hit was promoted: the next lookup is a memory hit
+        assert!(c.get_state(k(1), &ctx).is_some());
+        assert_eq!(c.stats().hits, 1);
+        assert!(st.inserts == 0, "promotion is not publication");
+        // publications write through to the attached tier
+        c.put_state(k(2), state(2.0, 4), &ctx);
+        assert!(tier.map.lock().unwrap().contains_key(&k(2)), "write-through on publish");
+        // ...but what the remote tier stored never bumps local inserts
+        assert_eq!(c.stats().inserts, 1, "one local publication, one insert");
+    }
+
+    #[test]
+    fn attached_tier_miss_does_not_poison_single_flight() {
+        // satellite: a remote-tier miss must fall through to a local
+        // launch (Claimed) and leave the flight protocol fully usable
+        let c = ReuseCache::with_capacity(1 << 20);
+        c.attach_tier(Arc::new(MapTier::new()));
+        assert!(matches!(c.lookup_or_claim(k(3), &ux()), StateClaim::Claimed));
+        assert!(matches!(c.lookup_or_claim(k(3), &ux()), StateClaim::InFlight));
+        c.put_state(k(3), state(3.0, 4), &ux());
+        assert!(matches!(c.lookup_or_claim(k(3), &ux()), StateClaim::Ready(_)));
+        let st = c.stats();
+        assert_eq!((st.misses, st.hits), (1, 1));
+    }
+
+    #[test]
+    fn remote_claims_single_flight_across_the_wire_boundary() {
+        // the owner side of the cluster fabric: the first cache-get for
+        // an absent key claims; a concurrent one blocks until the
+        // requester's cache-put settles the claim, then serves the state
+        let c = Arc::new(ReuseCache::with_capacity(1 << 20));
+        match c.serve_remote_get(k(1)) {
+            RemoteServe::Claimed => {}
+            RemoteServe::Found(_) => panic!("nothing cached yet"),
+        }
+        let waiter = {
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || c.serve_remote_get(k(1)))
+        };
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(c.serve_remote_put(k(1), state(1.0, 4)), "put admits the state");
+        match waiter.join().expect("waiter thread") {
+            RemoteServe::Found(s) => assert_eq!(s[0].get(0, 0), 1.0),
+            RemoteServe::Claimed => panic!("the settle must wake the waiter with the state"),
+        }
+        // once cached, gets serve immediately
+        assert!(matches!(c.serve_remote_get(k(1)), RemoteServe::Found(_)));
+    }
+
+    #[test]
+    fn remote_serving_paths_are_stat_invisible() {
+        // the owner answering peers must not disturb its own billing:
+        // scoped sums == globals stays true on every node of a cluster
+        let c = ReuseCache::with_capacity(1 << 20);
+        assert!(c.serve_remote_put(k(8), state(8.0, 4)));
+        assert!(matches!(c.serve_remote_get(k(8)), RemoteServe::Found(_)));
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses, st.inserts, st.remote_hits), (0, 0, 0, 0));
+        assert_eq!(c.len(), 1, "the peer-published entry is resident");
+        // and the entry is unowned: no scope is ever charged for it
+        let t = Arc::new(ScopedCounters::with_quota(1));
+        c.memory_tier().enforce_quota(&t);
+        assert_eq!(t.evictions(), 0);
     }
 }

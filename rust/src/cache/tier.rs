@@ -1,0 +1,104 @@
+//! The cache-tier abstraction: one trait every storage tier implements,
+//! and the per-call accounting context the tiers share.
+//!
+//! [`crate::cache::ReuseCache`] is a *stack* of tiers: a resident memory
+//! LRU on top, then any number of lower tiers consulted in order on a
+//! memory miss — today the persistent RTC2 disk tier
+//! ([`super::disk::DiskTier`]) and the cluster fabric
+//! ([`super::remote::RemoteTier`]), which fetches and publishes entries
+//! on the peer that owns the key. The stack owns everything that is
+//! *not* storage: single-flight claims, the metrics side map, scoped
+//! accounting and the global [`super::store::CacheStats`]. Tiers only
+//! answer "do you hold this state" ([`CacheTier::lookup`]) and "keep
+//! this state" ([`CacheTier::store`]); a lower-tier hit is promoted into
+//! the memory tier by the stack, charged to the requesting scope.
+//!
+//! [`CacheCtx`] is the collapsed accounting context: where the pre-tier
+//! API threaded an `Option<&Arc<ScopedCounters>>` through every lookup,
+//! store and quota path, callers now build one context per logical
+//! caller (a tenant's engine, a test, a bench) and pass it to every
+//! cache call. Unscoped traffic is [`CacheCtx::unscoped`]; the
+//! multi-tenant service builds one [`CacheCtx::scoped`] per tenant.
+
+use std::sync::Arc;
+
+use super::key::Key;
+use super::store::{CachedState, ScopedCounters};
+
+/// Canonical tier names. The stack maps a lower tier's hits and stores
+/// onto the global counters by name: [`DISK_TIER`] feeds
+/// `disk_hits`/`spilled`, every other lower tier feeds `remote_hits`.
+pub const MEMORY_TIER: &str = "memory";
+pub const DISK_TIER: &str = "disk";
+pub const REMOTE_TIER: &str = "remote";
+
+/// The accounting context of one cache call: which tenant scope (if
+/// any) the operation is counted under and which scope owns entries it
+/// admits. Cheap to clone (an `Arc` bump); build it once per logical
+/// caller and pass it by reference to every cache operation.
+#[derive(Clone, Debug, Default)]
+pub struct CacheCtx {
+    scope: Option<Arc<ScopedCounters>>,
+}
+
+impl CacheCtx {
+    /// Unscoped traffic: only the global counters are bumped, admitted
+    /// entries are unowned (exempt from every quota).
+    pub fn unscoped() -> Self {
+        Self { scope: None }
+    }
+
+    /// Tenant-scoped traffic: every counted operation mirrors into
+    /// `scope`, and admitted entries are owned by (charged to) it.
+    pub fn scoped(scope: Arc<ScopedCounters>) -> Self {
+        Self { scope: Some(scope) }
+    }
+
+    /// The scope this context counts under, if any.
+    pub fn scope(&self) -> Option<&Arc<ScopedCounters>> {
+        self.scope.as_ref()
+    }
+}
+
+/// A point-in-time snapshot of one tier's own counters (diagnostics;
+/// the billing-grade counters live in the stack's
+/// [`super::store::CacheStats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierStats {
+    /// Lookups this tier answered.
+    pub hits: u64,
+    /// Entries this tier newly stored.
+    pub stores: u64,
+    /// Bytes resident in this tier (0 for tiers that do not account
+    /// bytes, e.g. the remote fabric).
+    pub resident_bytes: u64,
+}
+
+/// One storage tier of the reuse cache. Implementations must be cheap
+/// to consult on a miss (a lookup that cannot answer returns `None`
+/// fast) and infallible from the stack's point of view: a tier that
+/// cannot reach its backing store (unreadable file, dead peer) reports
+/// a miss or a failed store, never an error — the cache is an
+/// accelerator, not a source of truth.
+pub trait CacheTier: Send + Sync {
+    /// The tier's canonical name (see [`MEMORY_TIER`], [`DISK_TIER`],
+    /// [`REMOTE_TIER`]); the stack keys its counter mapping on this.
+    fn name(&self) -> &'static str;
+
+    /// Fetch the state stored under `key`, if this tier holds it.
+    fn lookup(&self, key: Key, ctx: &CacheCtx) -> Option<CachedState>;
+
+    /// Offer a state for storage under `key`. Returns true when the
+    /// tier newly stored it (false: already present, not admitted, or
+    /// the backing store is unreachable).
+    fn store(&self, key: Key, state: &CachedState, ctx: &CacheCtx) -> bool;
+
+    /// Evict one entry owned by `scope` (quota enforcement). Returns
+    /// false when the tier holds nothing evictable for that scope;
+    /// tiers without scoped residency (disk, remote) always return
+    /// false.
+    fn evict_scope(&self, scope: &Arc<ScopedCounters>) -> bool;
+
+    /// This tier's own counters.
+    fn stats(&self) -> TierStats;
+}

@@ -314,6 +314,11 @@ pub struct ServeConfig {
     /// `warm-start=on|off` — pre-admit disk-tier entries at boot.
     /// Unset defaults to on exactly when `cache-dir=` is configured.
     pub warm_start: Option<bool>,
+    /// `peers=ADDR,ADDR,...` — cluster mode: the full node list
+    /// (including this node's own `listen=` address). The 128-bit key
+    /// space is consistent-hash partitioned across these nodes and
+    /// misses on another node's shard are fetched over the wire.
+    pub peers: Vec<String>,
     /// The residual study options, kept raw for client mode (the server
     /// parses per-job lines itself).
     pub study_args: Vec<String>,
@@ -326,7 +331,8 @@ impl ServeConfig {
     /// Parse the `serve` argument list: serve-specific keys are consumed
     /// here, everything else must parse as a study option (the per-job
     /// default). Rejects `cache=off` — the service exists to share one
-    /// reuse cache — and `listen=` combined with `submit=`.
+    /// reuse cache — `listen=` combined with `submit=`, and `peers=`
+    /// without a `listen=` address that is a member of the peer list.
     pub fn from_args(args: &[String]) -> Result<Self> {
         let mut sc = ServeConfig {
             serve_workers: 2,
@@ -349,17 +355,35 @@ impl ServeConfig {
                 Some(("addr-file", v)) => sc.addr_file = Some(v.to_string()),
                 Some(("submit", v)) => sc.submit = Some(v.to_string()),
                 Some(("drain", v)) => sc.drain = v == "on" || v == "true",
-                Some(("quota", v)) => match v.split_once(':') {
-                    Some((tenant, mb)) => {
-                        sc.quota_overrides_mb.push((tenant.to_string(), uint(mb)?))
+                Some(("quota", v)) => {
+                    let bad =
+                        || Error::Config(format!("`quota=` wants MB or TENANT:MB, got `{v}`"));
+                    match v.split_once(':') {
+                        Some((tenant, mb)) => sc
+                            .quota_overrides_mb
+                            .push((tenant.to_string(), mb.parse().map_err(|_| bad())?)),
+                        None => sc.quota_mb = Some(v.parse().map_err(|_| bad())?),
                     }
-                    None => sc.quota_mb = Some(uint(v)?),
-                },
+                }
                 Some(("priority", v)) => {
-                    let (tenant, w) = v.split_once(':').ok_or_else(|| {
-                        Error::Config(format!("`{a}`: expected priority=TENANT:WEIGHT"))
-                    })?;
-                    sc.priorities.push((tenant.to_string(), uint(w)?.max(1) as u32));
+                    let bad =
+                        || Error::Config(format!("`priority=` wants TENANT:WEIGHT, got `{v}`"));
+                    let (tenant, w) = v.split_once(':').ok_or_else(bad)?;
+                    let w: usize = w.parse().map_err(|_| bad())?;
+                    sc.priorities.push((tenant.to_string(), w.max(1) as u32));
+                }
+                Some(("peers", v)) => {
+                    let bad = || {
+                        Error::Config(format!(
+                            "`peers=` wants a comma-separated ADDR:PORT list, got `{v}`"
+                        ))
+                    };
+                    let list: Vec<String> =
+                        v.split(',').filter(|p| !p.is_empty()).map(str::to_string).collect();
+                    if list.is_empty() || list.iter().any(|p| !p.contains(':')) {
+                        return Err(bad());
+                    }
+                    sc.peers = list;
                 }
                 Some(("warm-start", v)) => sc.warm_start = Some(v == "on" || v == "true"),
                 _ => sc.study_args.push(a.clone()),
@@ -371,6 +395,18 @@ impl ServeConfig {
                  exclusive"
                     .into(),
             ));
+        }
+        if !sc.peers.is_empty() {
+            let Some(listen) = &sc.listen else {
+                return Err(Error::Config(
+                    "`peers=` (cluster mode) needs `listen=ADDR` naming this node".into(),
+                ));
+            };
+            if !sc.peers.iter().any(|p| p == listen) {
+                return Err(Error::Config(format!(
+                    "`peers=` list must include this node's `listen=` address `{listen}`"
+                )));
+            }
         }
         // the service exists to share one cache across tenants; a
         // cacheless service is a contradiction, so reject rather than
@@ -649,6 +685,53 @@ mod tests {
         assert!(ServeConfig::from_args(&args(&["priority=3"])).is_err(), "weight needs a tenant");
         assert!(ServeConfig::from_args(&args(&["quota=alice:x"])).is_err());
         assert!(ServeConfig::from_args(&args(&["bogus=1"])).is_err(), "unknown study key");
+    }
+
+    #[test]
+    fn serve_config_parses_cluster_flags() {
+        let sc = ServeConfig::from_args(&args(&[
+            "listen=127.0.0.1:47631",
+            "peers=127.0.0.1:47632,127.0.0.1:47631",
+        ]))
+        .unwrap();
+        assert_eq!(sc.peers, args(&["127.0.0.1:47632", "127.0.0.1:47631"]));
+        assert_eq!(sc.listen.as_deref(), Some("127.0.0.1:47631"));
+        // single-node "cluster" is legal (the remote tier is inert)
+        let sc =
+            ServeConfig::from_args(&args(&["listen=h:1", "peers=h:1"])).unwrap();
+        assert_eq!(sc.peers, args(&["h:1"]));
+    }
+
+    #[test]
+    fn serve_config_cluster_needs_listen_in_the_peer_list() {
+        let err = ServeConfig::from_args(&args(&["peers=h:1,h:2"])).unwrap_err();
+        assert!(err.to_string().contains("listen="), "names the missing flag: {err}");
+        let err =
+            ServeConfig::from_args(&args(&["listen=h:9", "peers=h:1,h:2"])).unwrap_err();
+        assert!(err.to_string().contains("h:9"), "names the absent listen address: {err}");
+        assert!(err.to_string().contains("peers="), "names the flag: {err}");
+    }
+
+    #[test]
+    fn serve_config_parse_errors_name_the_flag_and_value() {
+        // one malformed form per flag; every error names both the flag
+        // and the offending value
+        for (bad_args, flag, value) in [
+            (vec!["quota=lots"], "quota=", "lots"),
+            (vec!["quota=alice:many"], "quota=", "alice:many"),
+            (vec!["priority=3"], "priority=", "3"),
+            (vec!["priority=alice:heavy"], "priority=", "alice:heavy"),
+            (vec!["listen=h:1", "peers=h1,h:1"], "peers=", "h1,h:1"),
+            (vec!["listen=h:1", "peers="], "peers=", ""),
+        ] {
+            let err = ServeConfig::from_args(&args(&bad_args)).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains(flag), "`{bad_args:?}` error must name `{flag}`: {msg}");
+            assert!(
+                msg.contains(&format!("`{value}`")),
+                "`{bad_args:?}` error must quote the value: {msg}"
+            );
+        }
     }
 
     #[test]

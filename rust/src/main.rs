@@ -107,6 +107,9 @@ fn print_help() {
            jobs=FILE          per-line jobs: `tenant=NAME [kind=study|tune] [opts]`\n\
            listen=ADDR        serve the wire protocol on ADDR (e.g. 127.0.0.1:7070)\n\
            addr-file=PATH     with listen=: write the bound address to PATH\n\
+           peers=ADDR,...     cluster mode: the full node list (must include this\n\
+                              node's listen= address); the 128-bit key space is\n\
+                              partitioned across peers over cache-get/cache-put\n\
            submit=ADDR        client mode: send jobs=FILE to a listening service\n\
            drain=on           client mode: drain the service and print its bill\n\
          \n\
@@ -359,7 +362,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     // ---- service modes ----------------------------------------------
     let opts = ServeOptions::from_config(&sc);
     println!(
-        "serve: {} service workers, tenant cap {}, {} study workers, cache {} MiB{}{}",
+        "serve: {} service workers, tenant cap {}, {} study workers, cache {} MiB{}{}{}",
         opts.service_workers,
         opts.tenant_inflight_cap,
         opts.study_workers,
@@ -368,7 +371,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             Some(q) => format!(", tenant quota {} MiB", q / (1024 * 1024)),
             None => String::new(),
         },
-        if opts.warm_start { ", warm-start on" } else { "" }
+        if opts.warm_start { ", warm-start on" } else { "" },
+        if opts.peers.is_empty() {
+            String::new()
+        } else {
+            format!(", cluster of {} peers", opts.peers.len())
+        }
     );
     let svc = StudyService::start(opts)?;
     let warm = svc.warm_start_report();
@@ -473,10 +481,11 @@ fn print_service_report(report: &rtf_reuse::serve::ServiceReport) {
     }
     let g = report.cache;
     println!(
-        "shared cache: {} state hits ({} disk), {} misses, {} metric hits, {:.1}% hit rate, \
-         resident {} KiB (peak {} KiB)",
-        g.hits + g.disk_hits,
+        "shared cache: {} state hits ({} disk, {} remote), {} misses, {} metric hits, \
+         {:.1}% hit rate, resident {} KiB (peak {} KiB)",
+        g.hits + g.disk_hits + g.remote_hits,
         g.disk_hits,
+        g.remote_hits,
         g.misses,
         g.metric_hits,
         g.hit_rate() * 100.0,

@@ -9,7 +9,10 @@
 //! * **Literal residency.** Chained tasks feed each other's output
 //!   literals directly (`execute_task_lit*`); the host round-trip
 //!   (literal → `Plane` → literal) happens only at unit boundaries and
-//!   at cache insertion.
+//!   at cache insertion. Cache *hits* are literal-resident end to end
+//!   too: a served state's plane → literal conversion is memoized per
+//!   key, so repeat hits — batched or sequential, local or remote —
+//!   skip the conversion entirely.
 //! * **Hit/miss partition.** The keyed paths split work into cache hits
 //!   — served as refcount bumps on the stored `Arc` states (zero-copy;
 //!   see [`crate::cache::CachedState`]) and recorded as zero-cost
@@ -25,16 +28,19 @@
 //!   a foreign flight, which rules out claim/wait deadlock cycles, and
 //!   releases claims on error paths via
 //!   [`crate::cache::FlightClaims`].
-//! * **Scoped accounting.** With [`PjrtEngine::set_cache_scope`], every
-//!   counted cache operation is mirrored into a per-tenant
-//!   [`crate::cache::ScopedCounters`] — the multi-tenant service's
-//!   per-tenant ledger.
+//! * **Scoped accounting.** With [`PjrtEngine::set_cache_scope`], the
+//!   engine's [`CacheCtx`] names a per-tenant
+//!   [`crate::cache::ScopedCounters`] that every counted cache
+//!   operation is mirrored into — the multi-tenant service's per-tenant
+//!   ledger.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::cache::{FlightClaims, Key, MetricsClaim, ReuseCache, ScopedCounters, StateClaim};
+use crate::cache::{
+    CacheCtx, FlightClaims, Key, MetricsClaim, ReuseCache, ScopedCounters, StateClaim,
+};
 use crate::data::Plane;
 use crate::{Error, Result};
 
@@ -222,10 +228,21 @@ pub struct PjrtEngine {
     /// Cross-study reuse cache, shared between worker engines. When set,
     /// the keyed execution paths consult/populate it at task granularity.
     cache: Option<Arc<ReuseCache>>,
-    /// Per-tenant counter scope every counted cache operation mirrors
-    /// into (multi-tenant serving); `None` = global counters only.
-    scope: Option<Arc<ScopedCounters>>,
+    /// Accounting context for every cache call: unscoped (global
+    /// counters only) by default, or naming the tenant scope set via
+    /// [`PjrtEngine::set_cache_scope`].
+    ctx: CacheCtx,
+    /// Per-key memo of cache-served states already converted to backend
+    /// literals: repeat hits on a key are refcount bumps, not
+    /// conversions. Bounded by [`LIT_MEMO_CAP`].
+    lit_memo: HashMap<Key, [xla::Literal; 3]>,
 }
+
+/// Capacity of the per-engine hit-conversion memo. Crossing it clears
+/// the map wholesale (keys recur heavily within a study, so it refills
+/// hot); entries are `Literal` handles, so the footprint is tile-sized
+/// per key.
+const LIT_MEMO_CAP: usize = 256;
 
 impl PjrtEngine {
     /// Load + compile all artifacts in `dir`.
@@ -258,7 +275,8 @@ impl PjrtEngine {
             compare_id,
             timer,
             cache: None,
-            scope: None,
+            ctx: CacheCtx::default(),
+            lit_memo: HashMap::new(),
         })
     }
 
@@ -271,7 +289,7 @@ impl PjrtEngine {
     /// Account this engine's cache traffic under a per-tenant scope
     /// (see [`ScopedCounters`]); only meaningful with a cache attached.
     pub fn set_cache_scope(&mut self, scope: Arc<ScopedCounters>) {
-        self.scope = Some(scope);
+        self.ctx = CacheCtx::scoped(scope);
     }
 
     /// The attached reuse cache, if any.
@@ -314,6 +332,22 @@ impl PjrtEngine {
         let (h, w) = self.tile_shape();
         let data = lit.to_vec::<f32>()?;
         Plane::new(data, h, w)
+    }
+
+    /// Serve a cache-hit state as literals through the per-key memo:
+    /// the first hit on a key pays the plane → literal conversion, every
+    /// repeat hit — batched warm runs revisit keys constantly — is a
+    /// handle clone.
+    fn lit_state_memo(&mut self, key: Key, state: &[Plane; 3]) -> Result<[xla::Literal; 3]> {
+        if let Some(lits) = self.lit_memo.get(&key) {
+            return Ok(lits.clone());
+        }
+        let lits = self.lit_state(state)?;
+        if self.lit_memo.len() >= LIT_MEMO_CAP {
+            self.lit_memo.clear();
+        }
+        self.lit_memo.insert(key, lits.clone());
+        Ok(lits)
     }
 
     /// Convert a 3-plane state to literals (unit-boundary transfer).
@@ -416,10 +450,11 @@ impl PjrtEngine {
         params: &[f32],
     ) -> Result<([xla::Literal; 3], bool)> {
         if let (Some(cache), Some(k)) = (self.cache.clone(), key) {
+            let ctx = self.ctx.clone();
             loop {
-                match cache.lookup_or_claim(k, self.scope.as_ref()) {
+                match cache.lookup_or_claim(k, &ctx) {
                     StateClaim::Ready(planes) => {
-                        let lits = self.lit_state(&planes)?;
+                        let lits = self.lit_state_memo(k, &planes)?;
                         self.timer.record(id, true, Duration::ZERO);
                         return Ok((lits, true));
                     }
@@ -430,7 +465,7 @@ impl PjrtEngine {
                         claims.add(k);
                         let out = self.execute_task_lit_id(id, state, params)?;
                         let planes = self.plane_state(&out)?;
-                        cache.put_state_scoped(k, planes, self.scope.as_ref());
+                        cache.put_state(k, planes, &ctx);
                         claims.settle(k);
                         return Ok((out, false));
                     }
@@ -470,7 +505,7 @@ impl PjrtEngine {
         }
         self.require_chain(id)?;
         let cache = self.cache.clone();
-        let scope = self.scope.clone();
+        let ctx = self.ctx.clone();
         let mut out: Vec<Option<([xla::Literal; 3], bool)>> = (0..n).map(|_| None).collect();
         // intra-batch dedup: a later lane whose (quantized) key equals a
         // key this call already claimed is served the claimant's result —
@@ -495,9 +530,9 @@ impl PjrtEngine {
                             dup_of.push((i, src));
                             continue;
                         }
-                        match c.lookup_or_claim(k, scope.as_ref()) {
+                        match c.lookup_or_claim(k, &ctx) {
                             StateClaim::Ready(planes) => {
-                                let lits = self.lit_state(&planes)?;
+                                let lits = self.lit_state_memo(k, &planes)?;
                                 self.timer.record(id, true, Duration::ZERO);
                                 out[i] = Some((lits, true));
                             }
@@ -535,7 +570,7 @@ impl PjrtEngine {
                 let per_lane = elapsed / exec.len() as u32;
                 for (&i, lits) in exec.iter().zip(results) {
                     if let (Some(c), Some(k)) = (&cache, keys[i]) {
-                        c.put_state_scoped(k, self.plane_state(&lits)?, scope.as_ref());
+                        c.put_state(k, self.plane_state(&lits)?, &ctx);
                         if let Some(cl) = claims.as_mut() {
                             cl.settle(k);
                         }
@@ -558,7 +593,7 @@ impl PjrtEngine {
             let lits = out[src].as_ref().expect("dedup source resolved").0.clone();
             if let Some(c) = &cache {
                 // the sequential path would hit the just-published key
-                c.note_state_hit_scoped(scope.as_ref());
+                c.note_state_hit(&ctx);
             }
             self.timer.record(id, true, Duration::ZERO);
             out[i] = Some((lits, true));
@@ -577,8 +612,9 @@ impl PjrtEngine {
         reference: &Plane,
     ) -> Result<([f32; 3], bool)> {
         if let (Some(cache), Some(k)) = (self.cache.clone(), key) {
+            let ctx = self.ctx.clone();
             loop {
-                match cache.lookup_or_claim_metrics(k, self.scope.as_ref()) {
+                match cache.lookup_or_claim_metrics(k, &ctx) {
                     MetricsClaim::Ready(m) => {
                         self.timer.record(self.compare_id, true, Duration::ZERO);
                         return Ok((m, true));

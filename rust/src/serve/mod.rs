@@ -40,8 +40,13 @@
 //! TCP: `rtf-reuse serve listen=ADDR` accepts length-delimited JSONL
 //! frames (`submit` / `submit-tune` / `status` / `result` / `drain`),
 //! and `rtf-reuse serve submit=ADDR jobs=FILE` is the in-tree client.
-//! `docs/SERVING.md` is the operator's guide and the normative protocol
-//! spec.
+//! With `peers=ADDR,...` the same process joins a **cluster**: the
+//! 128-bit key space is rendezvous-partitioned across peers, each node
+//! attaches a [`crate::cache::RemoteTier`] below its local tiers, and
+//! misses on keys another node owns are resolved over the protocol-v3
+//! `cache-get` / `cache-put` messages — with single-flight claims that
+//! hold across the remote boundary. `docs/SERVING.md` is the operator's
+//! guide and the normative protocol spec.
 //!
 //! Correctness under tenancy rests on the cache properties of
 //! [`crate::cache`]: 128-bit content keys (collision margin for a

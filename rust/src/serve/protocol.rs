@@ -27,10 +27,14 @@
 //! Each body is an object with a `"type"` field. Clients send `hello`,
 //! `submit`, `submit-tune`, `status`, `result`, `drain`; servers reply
 //! `hello`, `accepted`, `status-report`, `job-report`, `bill`, `error`.
-//! The conversation starts with a `hello`/`hello` version handshake
-//! ([`PROTOCOL_VERSION`]); a server that cannot speak the client's
-//! version answers `error` with code [`codes::VERSION_MISMATCH`] and
-//! closes.
+//! Peer *nodes* of a serve cluster additionally exchange the cache
+//! fabric pair (protocol v3): `cache-get` → `cache-state` fetches the
+//! state a peer owns (or hands the requester a cross-node claim), and
+//! `cache-put` → `cache-ok` publishes a computed state to the key's
+//! owner. The conversation starts with a `hello`/`hello` version
+//! handshake ([`PROTOCOL_VERSION`]); a server that cannot speak the
+//! client's version answers `error` with code
+//! [`codes::VERSION_MISMATCH`] and closes.
 //!
 //! # Encode/decode
 //!
@@ -47,7 +51,8 @@
 
 use std::io::{BufRead, Write};
 
-use crate::cache::CacheStats;
+use crate::cache::{CacheStats, Key};
+use crate::data::Plane;
 use crate::jsonx::{obj, Json};
 use crate::tune::TuneSummary;
 use crate::{Error, Result};
@@ -60,8 +65,10 @@ use super::service::{JobReport, ServiceReport};
 ///
 /// History: v1 — the original study message set; v2 — adds the
 /// `submit-tune` job kind and the optional `tune` block on
-/// `job-report`.
-pub const PROTOCOL_VERSION: u32 = 2;
+/// `job-report`; v3 — adds the cluster cache fabric (`cache-get`,
+/// `cache-state`, `cache-put`, `cache-ok`) and the `remote_hits` field
+/// on every wire `cache` object.
+pub const PROTOCOL_VERSION: u32 = 3;
 
 /// Frame tag: protocol name plus frame-format version.
 pub const FRAME_TAG: &str = "rtfp1";
@@ -121,8 +128,127 @@ pub enum Message {
     Drain,
     /// Reply to [`Message::Drain`]: the full per-tenant bill.
     Bill(Box<WireBill>),
+    /// Cluster fabric (protocol v3): a peer node asks the key's owner
+    /// for the cached state. The owner replies [`Message::CacheState`] —
+    /// blocking while another node holds the cross-node claim on the
+    /// key, so two nodes never duplicate a launch.
+    CacheGet { key: Key },
+    /// Reply to [`Message::CacheGet`]: the state if the owner holds it
+    /// (`found`), else a cross-node claim grant (`claimed`) telling the
+    /// requester to compute locally and publish with
+    /// [`Message::CachePut`].
+    CacheState(Box<WireCacheState>),
+    /// Cluster fabric (protocol v3): publish a computed state to the
+    /// key's owning node (settles the requester's cross-node claim).
+    CachePut(Box<WireCachePut>),
+    /// Reply to [`Message::CachePut`]; `stored` is true when the owner
+    /// newly stored the state in any local tier.
+    CacheOk { key: Key, stored: bool },
     /// Any failure; `code` is one of [`codes`].
     Error { code: String, message: String },
+}
+
+/// Reply to a `cache-get` (see [`Message::CacheState`]). Exactly one of
+/// `found`/`claimed` is true; with `found`, `h`/`w`/`planes` carry the
+/// payload ([`planes_to_hex`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WireCacheState {
+    pub key: Key,
+    pub found: bool,
+    pub claimed: bool,
+    pub h: u64,
+    pub w: u64,
+    /// Hex of the three planes' little-endian f32 data, concatenated
+    /// (empty unless `found`).
+    pub planes: String,
+}
+
+impl WireCacheState {
+    /// A `found` reply carrying the state.
+    pub fn found(key: Key, state: &[Plane; 3]) -> Self {
+        let (h, w, planes) = planes_to_hex(state);
+        Self { key, found: true, claimed: false, h, w, planes }
+    }
+
+    /// A `claimed` reply: the requester owns the cross-node claim.
+    pub fn claimed(key: Key) -> Self {
+        Self { key, found: false, claimed: true, ..Self::default() }
+    }
+}
+
+/// Body of a `cache-put` (see [`Message::CachePut`]): one 3-plane state
+/// published to the key's owning node.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WireCachePut {
+    pub key: Key,
+    pub h: u64,
+    pub w: u64,
+    /// Hex of the three planes' little-endian f32 data, concatenated.
+    pub planes: String,
+}
+
+impl WireCachePut {
+    pub fn new(key: Key, state: &[Plane; 3]) -> Self {
+        let (h, w, planes) = planes_to_hex(state);
+        Self { key, h, w, planes }
+    }
+}
+
+/// Encode a 3-plane state as `(height, width, hex)` — two lowercase hex
+/// digits per byte of each plane's little-endian f32 data, the three
+/// planes concatenated in order. A 128×128 tile is ~384 KiB of hex,
+/// comfortably inside [`MAX_FRAME_BYTES`].
+pub fn planes_to_hex(state: &[Plane; 3]) -> (u64, u64, String) {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let (h, w) = (state[0].height(), state[0].width());
+    let mut out = String::with_capacity(3 * h * w * 8);
+    for plane in state.iter() {
+        for v in plane.data() {
+            for b in v.to_le_bytes() {
+                out.push(HEX[(b >> 4) as usize] as char);
+                out.push(HEX[(b & 0xf) as usize] as char);
+            }
+        }
+    }
+    (h as u64, w as u64, out)
+}
+
+/// Decode [`planes_to_hex`] output back into a 3-plane state,
+/// validating the dimensions against the hex length.
+pub fn planes_from_hex(h: u64, w: u64, hex: &str) -> Result<[Plane; 3]> {
+    let (h, w) = (h as usize, w as usize);
+    let plane_chars = h * w * 8;
+    if hex.len() != 3 * plane_chars {
+        return Err(Error::Protocol(format!(
+            "cache state payload: {} hex chars for 3 planes of {h}x{w}",
+            hex.len()
+        )));
+    }
+    let nibble = |c: u8| -> Result<u8> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => Err(Error::Protocol(format!("cache state payload: bad hex byte {c:#x}"))),
+        }
+    };
+    let bytes = hex.as_bytes();
+    let mut planes = Vec::with_capacity(3);
+    for p in 0..3 {
+        let mut data = Vec::with_capacity(h * w);
+        let base = p * plane_chars;
+        for px in 0..h * w {
+            let mut le = [0u8; 4];
+            for (i, b) in le.iter_mut().enumerate() {
+                let at = base + px * 8 + i * 2;
+                *b = (nibble(bytes[at])? << 4) | nibble(bytes[at + 1])?;
+            }
+            data.push(f32::from_le_bytes(le));
+        }
+        planes.push(Plane::new(data, h, w)?);
+    }
+    let mut it = planes.into_iter();
+    Ok([it.next().unwrap(), it.next().unwrap(), it.next().unwrap()])
 }
 
 /// A finished job as reported over the wire (mirror of the in-process
@@ -362,6 +488,14 @@ fn js(v: &str) -> Json {
     Json::Str(v.to_string())
 }
 
+fn jb(v: bool) -> Json {
+    Json::Bool(v)
+}
+
+fn jkey(key: Key) -> Json {
+    Json::Str(format!("{:032x}", key.as_u128()))
+}
+
 fn field<'a>(o: &'a Json, key: &str) -> Result<&'a Json> {
     o.get(key).ok_or_else(|| Error::Protocol(format!("missing field `{key}`")))
 }
@@ -414,6 +548,19 @@ fn f64_arr(o: &Json, key: &str) -> Result<Vec<f64>> {
     Ok(out)
 }
 
+fn bool_field(o: &Json, key: &str) -> Result<bool> {
+    field(o, key)?
+        .as_bool()
+        .ok_or_else(|| Error::Protocol(format!("field `{key}` must be a boolean")))
+}
+
+fn key_field(o: &Json, key: &str) -> Result<Key> {
+    let s = str_field(o, key)?;
+    let raw = u128::from_str_radix(&s, 16)
+        .map_err(|_| Error::Protocol(format!("field `{key}` must be a 128-bit hex key")))?;
+    Ok(Key::from_parts((raw >> 64) as u64, raw as u64))
+}
+
 fn opt_str_field(o: &Json, key: &str) -> Result<Option<String>> {
     match o.get(key) {
         None | Some(Json::Null) => Ok(None),
@@ -428,6 +575,7 @@ fn cache_stats_json(s: &CacheStats) -> Json {
     obj(vec![
         ("hits", ju(s.hits)),
         ("disk_hits", ju(s.disk_hits)),
+        ("remote_hits", ju(s.remote_hits)),
         ("misses", ju(s.misses)),
         ("inserts", ju(s.inserts)),
         ("evictions", ju(s.evictions)),
@@ -443,6 +591,7 @@ fn cache_stats_from_json(o: &Json) -> Result<CacheStats> {
     Ok(CacheStats {
         hits: u64_field(o, "hits")?,
         disk_hits: u64_field(o, "disk_hits")?,
+        remote_hits: u64_field(o, "remote_hits")?,
         misses: u64_field(o, "misses")?,
         inserts: u64_field(o, "inserts")?,
         evictions: u64_field(o, "evictions")?,
@@ -603,6 +752,10 @@ impl Message {
             Message::JobDone(_) => "job-report",
             Message::Drain => "drain",
             Message::Bill(_) => "bill",
+            Message::CacheGet { .. } => "cache-get",
+            Message::CacheState(_) => "cache-state",
+            Message::CachePut(_) => "cache-put",
+            Message::CacheOk { .. } => "cache-ok",
             Message::Error { .. } => "error",
         }
     }
@@ -639,6 +792,30 @@ impl Message {
             Message::JobDone(report) => report.to_json(),
             Message::Drain => obj(vec![("type", js("drain"))]),
             Message::Bill(bill) => bill.to_json(),
+            Message::CacheGet { key } => {
+                obj(vec![("type", js("cache-get")), ("key", jkey(*key))])
+            }
+            Message::CacheState(state) => obj(vec![
+                ("type", js("cache-state")),
+                ("key", jkey(state.key)),
+                ("found", jb(state.found)),
+                ("claimed", jb(state.claimed)),
+                ("h", ju(state.h)),
+                ("w", ju(state.w)),
+                ("planes", js(&state.planes)),
+            ]),
+            Message::CachePut(put) => obj(vec![
+                ("type", js("cache-put")),
+                ("key", jkey(put.key)),
+                ("h", ju(put.h)),
+                ("w", ju(put.w)),
+                ("planes", js(&put.planes)),
+            ]),
+            Message::CacheOk { key, stored } => obj(vec![
+                ("type", js("cache-ok")),
+                ("key", jkey(*key)),
+                ("stored", jb(*stored)),
+            ]),
             Message::Error { code, message } => obj(vec![
                 ("type", js("error")),
                 ("code", js(code)),
@@ -673,6 +850,25 @@ impl Message {
             "job-report" => Ok(Message::JobDone(Box::new(WireJobReport::from_json(o)?))),
             "drain" => Ok(Message::Drain),
             "bill" => Ok(Message::Bill(Box::new(WireBill::from_json(o)?))),
+            "cache-get" => Ok(Message::CacheGet { key: key_field(o, "key")? }),
+            "cache-state" => Ok(Message::CacheState(Box::new(WireCacheState {
+                key: key_field(o, "key")?,
+                found: bool_field(o, "found")?,
+                claimed: bool_field(o, "claimed")?,
+                h: u64_field(o, "h")?,
+                w: u64_field(o, "w")?,
+                planes: str_field(o, "planes")?,
+            }))),
+            "cache-put" => Ok(Message::CachePut(Box::new(WireCachePut {
+                key: key_field(o, "key")?,
+                h: u64_field(o, "h")?,
+                w: u64_field(o, "w")?,
+                planes: str_field(o, "planes")?,
+            }))),
+            "cache-ok" => Ok(Message::CacheOk {
+                key: key_field(o, "key")?,
+                stored: bool_field(o, "stored")?,
+            }),
             "error" => Ok(Message::Error {
                 code: str_field(o, "code")?,
                 message: str_field(o, "message")?,
@@ -759,6 +955,36 @@ mod tests {
             ..WireBill::default()
         })));
         roundtrip(Message::Error { code: codes::DRAINING.into(), message: "late".into() });
+        let key = Key::from_parts(0xdead_beef, 42);
+        let state =
+            [Plane::filled(1.0, 2, 2), Plane::filled(0.5, 2, 2), Plane::filled(-3.25, 2, 2)];
+        roundtrip(Message::CacheGet { key });
+        roundtrip(Message::CacheState(Box::new(WireCacheState::found(key, &state))));
+        roundtrip(Message::CacheState(Box::new(WireCacheState::claimed(key))));
+        roundtrip(Message::CachePut(Box::new(WireCachePut::new(key, &state))));
+        roundtrip(Message::CacheOk { key, stored: true });
+    }
+
+    #[test]
+    fn planes_survive_the_hex_codec_bit_exactly() {
+        let state = [
+            Plane::new(vec![0.0, -0.0, 1.5, f32::MIN_POSITIVE], 2, 2).unwrap(),
+            Plane::new(vec![f32::MAX, f32::MIN, 1e-30, -7.125], 2, 2).unwrap(),
+            Plane::filled(0.333, 2, 2),
+        ];
+        let (h, w, hex) = planes_to_hex(&state);
+        assert_eq!((h, w), (2, 2));
+        assert_eq!(hex.len(), 3 * 4 * 8, "8 hex chars per f32, 3 planes of 4");
+        let back = planes_from_hex(h, w, &hex).unwrap();
+        for (orig, dec) in state.iter().zip(back.iter()) {
+            for (a, b) in orig.data().iter().zip(dec.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "bit-exact through hex");
+            }
+        }
+        assert!(planes_from_hex(h, w, &hex[1..]).is_err(), "length mismatch rejected");
+        let mut bad = hex.clone();
+        bad.replace_range(0..1, "z");
+        assert!(planes_from_hex(h, w, &bad).is_err(), "non-hex byte rejected");
     }
 
     #[test]

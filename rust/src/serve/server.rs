@@ -17,11 +17,13 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::cache::RemoteServe;
 use crate::config::{StudyConfig, TuneConfig};
 use crate::{Error, Result};
 
 use super::protocol::{
-    codes, read_frame, write_frame, Message, WireBill, WireJobReport, PROTOCOL_VERSION,
+    codes, planes_from_hex, read_frame, write_frame, Message, WireBill, WireCacheState,
+    WireJobReport, PROTOCOL_VERSION,
 };
 use super::service::{ServiceReport, StudyJob, StudyService};
 
@@ -162,6 +164,25 @@ fn handle_conn(
                 let _ = TcpStream::connect(self_addr);
                 return sent;
             }
+            Message::CacheGet { key } => {
+                // blocks while another node holds the cross-node claim
+                // on this key — cluster single-flight (rtfp v3)
+                match svc.cache().serve_remote_get(key) {
+                    RemoteServe::Found(state) => {
+                        Message::CacheState(Box::new(WireCacheState::found(key, &state)))
+                    }
+                    RemoteServe::Claimed => {
+                        Message::CacheState(Box::new(WireCacheState::claimed(key)))
+                    }
+                }
+            }
+            Message::CachePut(put) => match planes_from_hex(put.h, put.w, &put.planes) {
+                Ok(planes) => {
+                    let stored = svc.cache().serve_remote_put(put.key, planes);
+                    Message::CacheOk { key: put.key, stored }
+                }
+                Err(e) => error_msg(codes::BAD_MESSAGE, &e.to_string()),
+            },
             other => {
                 let msg = format!("unexpected message `{}` from a client", other.type_name());
                 error_msg(codes::BAD_MESSAGE, &msg)

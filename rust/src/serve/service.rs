@@ -9,7 +9,9 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::cache::{CacheConfig, CacheStats, ReuseCache, ScopedCounters, WarmStartReport};
+use crate::cache::{
+    CacheConfig, CacheStats, RemoteTier, ReuseCache, ScopedCounters, WarmStartReport,
+};
 use crate::config::{EngineMode, ServeConfig, StudyConfig};
 use crate::driver::{
     make_inputs_with_engine, prepare, prepare_candidates, prune_plan_with_inputs,
@@ -53,6 +55,14 @@ pub struct ServeOptions {
     /// Pre-admit persisted disk-tier entries into memory at boot
     /// (`ReuseCache::warm_start`); meaningful only with a `spill_dir`.
     pub warm_start: bool,
+    /// Cluster mode: the full peer list (`serve peers=ADDR,...`,
+    /// including this node's own listen address). Non-empty attaches a
+    /// [`RemoteTier`] below the local tiers, partitioning the key space
+    /// across the listed nodes.
+    pub peers: Vec<String>,
+    /// This node's address as it appears in `peers` (the `listen=`
+    /// address). Required when `peers` is non-empty.
+    pub cluster_addr: Option<String>,
 }
 
 impl Default for ServeOptions {
@@ -69,6 +79,8 @@ impl Default for ServeOptions {
             tenant_quota_bytes: None,
             tenant_quota_overrides: HashMap::new(),
             warm_start: false,
+            peers: Vec::new(),
+            cluster_addr: None,
         }
     }
 }
@@ -95,6 +107,8 @@ impl ServeOptions {
                 .map(|(t, mb)| (t.clone(), *mb as u64 * MIB))
                 .collect(),
             warm_start: sc.warm_start_effective(),
+            peers: sc.peers.clone(),
+            cluster_addr: if sc.peers.is_empty() { None } else { sc.listen.clone() },
         }
     }
 
@@ -208,13 +222,17 @@ impl ServiceReport {
     }
 
     /// Sum of every tenant's scoped counters — equals [`Self::cache`] on
-    /// the scoped fields (hits, disk hits, misses, inserts, metric
-    /// hits/misses) when all traffic ran under tenant scopes.
+    /// the scoped fields (hits, disk hits, remote hits, misses, inserts,
+    /// metric hits/misses) when all traffic ran under tenant scopes.
+    /// Holds on every node of a cluster too: serving a peer is
+    /// stat-invisible on the owner, and the requesting node bills the
+    /// remote hit to the tenant that asked.
     pub fn scoped_totals(&self) -> CacheStats {
         let mut total = CacheStats::default();
         for t in &self.tenants {
             total.hits += t.cache.hits;
             total.disk_hits += t.cache.disk_hits;
+            total.remote_hits += t.cache.remote_hits;
             total.misses += t.cache.misses;
             total.inserts += t.cache.inserts;
             total.metric_hits += t.cache.metric_hits;
@@ -330,6 +348,12 @@ impl StudyService {
         let leader = PjrtEngine::load(&opts.artifacts_dir)?;
         let cache = Arc::new(ReuseCache::new(opts.cache.clone()));
         let warm = if opts.warm_start { cache.warm_start() } else { WarmStartReport::default() };
+        if !opts.peers.is_empty() {
+            let addr = opts.cluster_addr.as_deref().ok_or_else(|| {
+                Error::Config("cluster mode (peers=) needs this node's listen=ADDR".into())
+            })?;
+            cache.attach_tier(Arc::new(RemoteTier::new(&opts.peers, addr)?));
+        }
         let workers = opts.service_workers.max(1);
         let inner = Arc::new(Inner {
             opts,

@@ -9,11 +9,16 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use rtf_reuse::cache::{CacheConfig, Key, ReuseCache, ScopedCounters, StateClaim};
+use rtf_reuse::cache::{CacheConfig, CacheCtx, Key, ReuseCache, ScopedCounters, StateClaim};
 use rtf_reuse::data::Plane;
 
 fn state(v: f32) -> [Plane; 3] {
     [Plane::filled(v, 8, 8), Plane::filled(v, 8, 8), Plane::filled(v, 8, 8)]
+}
+
+/// Unscoped accounting context (global counters only).
+fn ux() -> CacheCtx {
+    CacheCtx::unscoped()
 }
 
 /// Bytes of one `state(v)`: 3 planes x 64 px x 4 B.
@@ -42,13 +47,13 @@ fn hammering_threads_lose_no_updates() {
                         // interleave access order differently per thread
                         let i = (i + t * 7 + r * 13) % keys;
                         let key = Key::from_parts(0xC0FFEE, i);
-                        match cache.get_state(key) {
+                        match cache.get_state(key, &ux()) {
                             Some(got) => assert_eq!(
                                 got[0].get(0, 0),
                                 i as f32,
                                 "cross-key corruption on {i}"
                             ),
-                            None => cache.put_state(key, state(i as f32)),
+                            None => cache.put_state(key, state(i as f32), &ux()),
                         }
                     }
                 }
@@ -56,7 +61,7 @@ fn hammering_threads_lose_no_updates() {
         }
     });
     for i in 0..keys {
-        let got = cache.get_state(Key::from_parts(0xC0FFEE, i)).expect("no lost update");
+        let got = cache.get_state(Key::from_parts(0xC0FFEE, i), &ux()).expect("no lost update");
         assert_eq!(got[0].get(0, 0), i as f32);
     }
     let st = cache.stats();
@@ -85,7 +90,7 @@ fn byte_bound_holds_under_concurrent_insertion() {
             scope.spawn(move || {
                 for i in 0..32u64 {
                     let key = Key::from_parts(t, i);
-                    cache.put_state(key, state((t * 32 + i) as f32));
+                    cache.put_state(key, state((t * 32 + i) as f32), &ux());
                 }
             });
         }
@@ -105,7 +110,7 @@ fn byte_bound_holds_under_concurrent_insertion() {
     );
     // whatever survived is uncorrupted
     for key in cache.resident_keys() {
-        let got = cache.get_state(key).expect("resident key readable");
+        let got = cache.get_state(key, &ux()).expect("resident key readable");
         assert_eq!(got[0].get(0, 0), (key.hi() * 32 + key.lo()) as f32);
     }
 }
@@ -124,11 +129,11 @@ fn chains_that_collide_at_64_bits_no_longer_alias() {
     assert_eq!(chain_a.lo(), chain_b.lo(), "64-bit views collide by construction");
     assert_ne!(chain_a, chain_b, "128-bit keys distinguish the chains");
 
-    cache.put_state(chain_a, state(1.0));
-    cache.put_state(chain_b, state(2.0));
+    cache.put_state(chain_a, state(1.0), &ux());
+    cache.put_state(chain_b, state(2.0), &ux());
     assert_eq!(cache.len(), 2, "two chains, two entries — no aliasing");
-    assert_eq!(cache.get_state(chain_a).unwrap()[0].get(0, 0), 1.0);
-    assert_eq!(cache.get_state(chain_b).unwrap()[0].get(0, 0), 2.0);
+    assert_eq!(cache.get_state(chain_a, &ux()).unwrap()[0].get(0, 0), 1.0);
+    assert_eq!(cache.get_state(chain_b, &ux()).unwrap()[0].get(0, 0), 2.0);
 
     // and the derivation feeds the width: real chain keys disperse into
     // both halves, so distinct task histories cannot recreate the old
@@ -155,7 +160,7 @@ fn single_flight_collapses_concurrent_identical_misses() {
             let cache = &cache;
             let computes = &computes;
             scope.spawn(move || loop {
-                match cache.lookup_or_claim(key, None) {
+                match cache.lookup_or_claim(key, &ux()) {
                     StateClaim::Ready(got) => {
                         assert_eq!(got[1].get(3, 3), 42.0);
                         return;
@@ -165,7 +170,7 @@ fn single_flight_collapses_concurrent_identical_misses() {
                         // a deliberately slow compute: waiters must block,
                         // not spin into their own claims
                         std::thread::sleep(Duration::from_millis(50));
-                        cache.put_state(key, state(42.0));
+                        cache.put_state(key, state(42.0), &ux());
                         return;
                     }
                     StateClaim::InFlight => cache.wait_for_flight(key),
@@ -185,14 +190,14 @@ fn abandoned_flights_recover() {
     // release wakes the waiter, which re-claims and completes
     let cache = Arc::new(ReuseCache::with_capacity(1 << 20));
     let key = Key::from(0x5105u64);
-    assert!(matches!(cache.lookup_or_claim(key, None), StateClaim::Claimed));
+    assert!(matches!(cache.lookup_or_claim(key, &ux()), StateClaim::Claimed));
     let waiter = {
         let cache = Arc::clone(&cache);
         std::thread::spawn(move || loop {
-            match cache.lookup_or_claim(key, None) {
+            match cache.lookup_or_claim(key, &ux()) {
                 StateClaim::Ready(got) => return got[0].get(0, 0),
                 StateClaim::Claimed => {
-                    cache.put_state(key, state(7.0));
+                    cache.put_state(key, state(7.0), &ux());
                     // continue looping: the next lookup serves Ready
                 }
                 StateClaim::InFlight => cache.wait_for_flight(key),
@@ -214,14 +219,13 @@ fn scoped_tenants_partition_the_global_counters_under_contention() {
     std::thread::scope(|s| {
         for (t, scope) in scopes.iter().enumerate() {
             let cache = &cache;
+            let ctx = CacheCtx::scoped(Arc::clone(scope));
             s.spawn(move || {
                 for i in 0..64u64 {
                     let key = Key::from(i % 48); // overlapping ranges
-                    match cache.lookup_or_claim(key, Some(scope)) {
+                    match cache.lookup_or_claim(key, &ctx) {
                         StateClaim::Ready(_) => {}
-                        StateClaim::Claimed => {
-                            cache.put_state_scoped(key, state(t as f32), Some(scope))
-                        }
+                        StateClaim::Claimed => cache.put_state(key, state(t as f32), &ctx),
                         StateClaim::InFlight => {
                             cache.wait_for_flight(key);
                         }

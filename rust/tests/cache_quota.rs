@@ -5,7 +5,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use rtf_reuse::cache::{CacheConfig, Key, ReuseCache, ScopedCounters};
+use rtf_reuse::cache::{CacheConfig, CacheCtx, Key, ReuseCache, ScopedCounters};
 use rtf_reuse::config::{SaMethod, StudyConfig};
 use rtf_reuse::data::Plane;
 use rtf_reuse::merging::FineAlgorithm;
@@ -28,10 +28,10 @@ fn quota_holds_under_concurrent_inserts() {
     std::thread::scope(|s| {
         for t in 0..4u64 {
             let cache = &cache;
-            let tenant = &tenant;
+            let ctx = CacheCtx::scoped(Arc::clone(&tenant));
             s.spawn(move || {
                 for i in 0..32u64 {
-                    cache.put_state_scoped(Key::from(t * 100 + i), state(t as f32), Some(tenant));
+                    cache.put_state(Key::from(t * 100 + i), state(t as f32), &ctx);
                 }
             });
         }
@@ -64,9 +64,10 @@ fn contended_eviction_charges_the_owning_scope() {
     std::thread::scope(|s| {
         for (t, scope) in [(0u64, &a), (1u64, &b)] {
             let cache = &cache;
+            let ctx = CacheCtx::scoped(Arc::clone(scope));
             s.spawn(move || {
                 for i in 0..64u64 {
-                    cache.put_state_scoped(Key::from(t * 1000 + i), state(i as f32), Some(scope));
+                    cache.put_state(Key::from(t * 1000 + i), state(i as f32), &ctx);
                 }
             });
         }

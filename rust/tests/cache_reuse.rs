@@ -6,7 +6,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use rtf_reuse::cache::{CacheConfig, Key, ReuseCache};
+use rtf_reuse::cache::{CacheConfig, CacheCtx, Key, ReuseCache};
 use rtf_reuse::config::{SaMethod, StudyConfig};
 use rtf_reuse::data::Plane;
 use rtf_reuse::driver::{prepare, prune_plan_with_cache, run_pjrt_with_cache};
@@ -18,6 +18,11 @@ fn state(v: f32) -> [Plane; 3] {
 
 /// Bytes of one `state(v)`: 3 planes x 64 px x 4 B.
 const SB: usize = 3 * 64 * 4;
+
+/// Unscoped accounting context (global counters only).
+fn ux() -> CacheCtx {
+    CacheCtx::unscoped()
+}
 
 fn tmp_dir(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!("rtf-cache-it-{tag}-{}", std::process::id()))
@@ -60,7 +65,7 @@ fn lru_eviction_holds_the_byte_bound() {
         ..CacheConfig::default()
     });
     for k in 0..16u64 {
-        c.put_state(Key::from(k), state(k as f32));
+        c.put_state(Key::from(k), state(k as f32), &ux());
         assert!(
             c.resident_bytes() <= 4 * SB,
             "bound violated at insert {k}: {}",
@@ -71,8 +76,8 @@ fn lru_eviction_holds_the_byte_bound() {
     assert_eq!(st.inserts, 16);
     assert_eq!(st.evictions, 12, "4 resident, 12 evicted");
     // the most recent entries survive, the oldest do not
-    assert!(c.get_state(Key::from(15u64)).is_some());
-    assert!(c.get_state(Key::from(0u64)).is_none());
+    assert!(c.get_state(Key::from(15u64), &ux()).is_some());
+    assert!(c.get_state(Key::from(0u64), &ux()).is_none());
 }
 
 #[test]
@@ -93,10 +98,10 @@ fn concurrent_scoped_workers_share_one_cache() {
                     let shared = i % 2 == 0;
                     let raw = if shared { i } else { ((w + 1) << 32) | i };
                     let key = Key::from(raw);
-                    if cache.get_state(key).is_none() {
-                        cache.put_state(key, state(raw as f32));
+                    if cache.get_state(key, &ux()).is_none() {
+                        cache.put_state(key, state(raw as f32), &ux());
                     }
-                    let got = cache.get_state(key).expect("just inserted or present");
+                    let got = cache.get_state(key, &ux()).expect("just inserted or present");
                     assert_eq!(got[0].get(0, 0), raw as f32, "no cross-key corruption");
                 }
             });
@@ -118,7 +123,7 @@ fn disk_tier_persists_across_cache_instances() {
             spill_dir: Some(dir.clone()),
             ..CacheConfig::default()
         });
-        c.put_state(Key::from(0xfeedu64), state(7.5));
+        c.put_state(Key::from(0xfeedu64), state(7.5), &ux());
     } // first "process" ends
     let c2 = ReuseCache::new(CacheConfig {
         capacity_bytes: 1 << 20,
@@ -129,7 +134,7 @@ fn disk_tier_persists_across_cache_instances() {
         c2.contains_state(Key::from(0xfeedu64)),
         "persistent tier visible to a fresh cache"
     );
-    let got = c2.get_state(Key::from(0xfeedu64)).expect("served from disk");
+    let got = c2.get_state(Key::from(0xfeedu64), &ux()).expect("served from disk");
     assert_eq!(got[2].get(7, 7), 7.5);
     assert_eq!(c2.stats().disk_hits, 1);
     let _ = std::fs::remove_dir_all(&dir);

@@ -1,0 +1,175 @@
+//! Two-node cluster fabric end to end: real `StudyService`s behind real
+//! TCP listeners, the 128-bit key space partitioned by the rendezvous
+//! ring, entries exchanged over rtfp v3 `cache-get`/`cache-put`. The
+//! properties under test are the ones the cluster mode sells: results
+//! are bit-identical to a single node at every batch width, the second
+//! node rides the first node's work through remote hits, the scoped
+//! ledgers still sum to the globals on every node, and a dead peer
+//! degrades to local launches instead of wedging single-flight.
+
+use std::net::TcpListener;
+use std::thread;
+
+use rtf_reuse::cache::CacheConfig;
+use rtf_reuse::serve::protocol::WireBill;
+use rtf_reuse::serve::{run_jobs, JobSpec, ServeOptions, ServiceReport, StudyService, WireServer};
+
+fn study_args(batch_width: usize) -> Vec<String> {
+    vec!["method=moat".into(), "r=1".into(), format!("batch-width={batch_width}")]
+}
+
+/// Reserve a loopback address the OS just proved free. There is a
+/// window between dropping the listener and rebinding, but loopback
+/// ephemeral ports make a collision vanishingly unlikely in a test.
+fn reserve_addr() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("reserve a port");
+    listener.local_addr().expect("reserved addr").to_string()
+}
+
+fn base_opts() -> ServeOptions {
+    ServeOptions {
+        service_workers: 1,
+        tenant_inflight_cap: 1,
+        study_workers: 2,
+        cache: CacheConfig { capacity_bytes: 512 * 1024 * 1024, ..CacheConfig::default() },
+        ..ServeOptions::default()
+    }
+}
+
+fn node_opts(peers: &[String], own: &str) -> ServeOptions {
+    ServeOptions {
+        peers: peers.to_vec(),
+        cluster_addr: Some(own.to_string()),
+        ..base_opts()
+    }
+}
+
+/// Start a node's service and listener at `addr` (previously reserved);
+/// the handle yields the node's drained report.
+fn spawn_node(opts: ServeOptions, addr: &str) -> thread::JoinHandle<ServiceReport> {
+    let svc = StudyService::start(opts).expect("node starts");
+    let server = WireServer::bind(svc, addr).expect("node binds its reserved addr");
+    thread::spawn(move || server.run().expect("node drains cleanly"))
+}
+
+/// A plain single-node service on an OS-assigned port, as the ground
+/// truth the cluster must reproduce bit for bit.
+fn spawn_solo() -> (String, thread::JoinHandle<ServiceReport>) {
+    let svc = StudyService::start(base_opts()).expect("solo service starts");
+    let server = WireServer::bind(svc, "127.0.0.1:0").expect("bind loopback");
+    let addr = server.local_addr().expect("bound address").to_string();
+    (addr, thread::spawn(move || server.run().expect("solo drains cleanly")))
+}
+
+/// Per-tenant scoped counters must sum exactly to the node's globals on
+/// every scoped field — including the new `remote_hits`.
+fn assert_scoped_sums_match(bill: &WireBill, node: &str) {
+    let sums = bill.tenants.iter().fold((0, 0, 0, 0, 0), |acc, t| {
+        (
+            acc.0 + t.cache.hits,
+            acc.1 + t.cache.disk_hits,
+            acc.2 + t.cache.remote_hits,
+            acc.3 + t.cache.misses,
+            acc.4 + t.cache.inserts,
+        )
+    });
+    assert_eq!(sums.0, bill.cache.hits, "{node}: scoped hits partition the globals");
+    assert_eq!(sums.1, bill.cache.disk_hits, "{node}: scoped disk hits partition the globals");
+    assert_eq!(sums.2, bill.cache.remote_hits, "{node}: scoped remote hits partition the globals");
+    assert_eq!(sums.3, bill.cache.misses, "{node}: scoped misses partition the globals");
+    assert_eq!(sums.4, bill.cache.inserts, "{node}: scoped inserts partition the globals");
+}
+
+#[test]
+fn two_nodes_match_single_node_results_and_the_second_rides_remote_hits() {
+    for width in [1usize, 16] {
+        let args = study_args(width);
+
+        // ground truth: the same study on a plain single node
+        let (solo_addr, solo) = spawn_solo();
+        let spec = JobSpec { tenant: "solo".into(), args: args.clone(), tune: false };
+        let baseline = run_jobs(&solo_addr, &[spec], true).expect("solo run succeeds");
+        assert!(baseline.jobs[0].ok(), "solo job: {:?}", baseline.jobs[0].error);
+        solo.join().expect("solo joins");
+
+        // the cluster: two nodes, each told the full peer list
+        let addr_a = reserve_addr();
+        let addr_b = reserve_addr();
+        let peers = vec![addr_a.clone(), addr_b.clone()];
+        let node_a = spawn_node(node_opts(&peers, &addr_a), &addr_a);
+        let node_b = spawn_node(node_opts(&peers, &addr_b), &addr_b);
+
+        // the cold run on A computes everything; its write-through
+        // publishes B-owned entries to B over cache-put
+        let spec = JobSpec { tenant: "cold".into(), args: args.clone(), tune: false };
+        let out_a = run_jobs(&addr_a, &[spec], false).expect("run on node A succeeds");
+        assert!(out_a.jobs[0].ok(), "node A job: {:?}", out_a.jobs[0].error);
+
+        // the same study on B: B-owned keys are already resident (A
+        // pushed them), A-owned keys come back over cache-get — B must
+        // not recompute state anywhere. A stays up to serve its shard.
+        let spec = JobSpec { tenant: "warm".into(), args, tune: false };
+        let out_b = run_jobs(&addr_b, &[spec], false).expect("run on node B succeeds");
+        assert!(out_b.jobs[0].ok(), "node B job: {:?}", out_b.jobs[0].error);
+
+        // bit-identical across 1-node and 2-node at this batch width
+        assert_eq!(baseline.jobs[0].y, out_a.jobs[0].y, "width {width}: node A matches solo");
+        assert_eq!(baseline.jobs[0].y, out_b.jobs[0].y, "width {width}: node B matches solo");
+
+        // the headline economy: B launched strictly less than A's cold
+        // run because the fabric served it A's states
+        assert!(
+            out_b.jobs[0].launches < out_a.jobs[0].launches,
+            "width {width}: node B must ride the fabric: A {} vs B {}",
+            out_a.jobs[0].launches,
+            out_b.jobs[0].launches
+        );
+
+        // drain B first (it depends on A's shard), then A
+        let bill_b = run_jobs(&addr_b, &[], true)
+            .expect("drain B")
+            .bill
+            .expect("B's bill");
+        let bill_a = run_jobs(&addr_a, &[], true)
+            .expect("drain A")
+            .bill
+            .expect("A's bill");
+        node_a.join().expect("node A joins");
+        node_b.join().expect("node B joins");
+
+        assert!(
+            bill_b.cache.remote_hits > 0,
+            "width {width}: node B's bill must show remote hits"
+        );
+        assert_scoped_sums_match(&bill_a, "node A");
+        assert_scoped_sums_match(&bill_b, "node B");
+    }
+}
+
+#[test]
+fn a_dead_peer_degrades_to_local_launches_without_wedging_single_flight() {
+    // ground truth from a plain single node
+    let (solo_addr, solo) = spawn_solo();
+    let spec = JobSpec { tenant: "solo".into(), args: study_args(16), tune: false };
+    let baseline = run_jobs(&solo_addr, &[spec], true).expect("solo run succeeds");
+    solo.join().expect("solo joins");
+
+    // one live node clustered with a peer that never comes up: every
+    // remote lookup fails fast, falls through to a local launch, and the
+    // local single-flight claims settle normally — the study completes
+    // with identical results and an all-local bill
+    let own = reserve_addr();
+    let dead = reserve_addr(); // nothing ever listens here
+    let peers = vec![own.clone(), dead];
+    let node = spawn_node(node_opts(&peers, &own), &own);
+    let spec = JobSpec { tenant: "lone".into(), args: study_args(16), tune: false };
+    let out = run_jobs(&own, &[spec], true).expect("run with a dead peer succeeds");
+    node.join().expect("node joins");
+
+    assert!(out.jobs[0].ok(), "job: {:?}", out.jobs[0].error);
+    assert_eq!(baseline.jobs[0].y, out.jobs[0].y, "dead peer never changes results");
+    let bill = out.bill.expect("bill");
+    assert_eq!(bill.cache.remote_hits, 0, "a dead peer serves nothing");
+    assert!(bill.cache.misses > 0, "the work happened locally");
+    assert_scoped_sums_match(&bill, "lone node");
+}
