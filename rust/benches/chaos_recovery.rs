@@ -1,0 +1,148 @@
+//! Self-healing overhead benchmark: what a flapping peer link costs the
+//! node that rides the cluster fabric.
+//!
+//! Phase 1 runs a two-node loopback cluster fault-free: cold study on
+//! node A, warm study on node B (served over the fabric) — the
+//! baseline. Phase 2 reruns the identical cluster with a scripted flap
+//! on node B's peer link: bursts of four consecutive refused calls,
+//! each long enough to trip the circuit breaker (threshold 3), spaced
+//! so the cooldown elapses and the half-open probe closes it again.
+//! Node B must degrade to local launches during each burst and return
+//! to the fabric after it — completing with bit-identical results.
+//!
+//! Acceptance: the flapped warm run keeps at least 0.7x the fault-free
+//! throughput (asserted in full mode; `--test` CI smoke asserts the
+//! correctness properties only, since shared-runner wall clocks are too
+//! noisy to gate on). Writes `BENCH_chaos.json`.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use rtf_reuse::benchx::fmt_secs;
+use rtf_reuse::cache::CacheConfig;
+use rtf_reuse::faults::{FaultPlan, Faults, PeerFault};
+use rtf_reuse::serve::{run_jobs, JobSpec, ServeOptions, ServiceReport, StudyService, WireServer};
+
+fn reserve_addr() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("reserve a port");
+    listener.local_addr().expect("reserved addr").to_string()
+}
+
+fn opts(peers: &[String], own: &str, faults: Faults) -> ServeOptions {
+    ServeOptions {
+        service_workers: 1,
+        study_workers: 2,
+        cache: CacheConfig { capacity_bytes: 512 * 1024 * 1024, ..CacheConfig::default() },
+        peers: peers.to_vec(),
+        cluster_addr: Some(own.to_string()),
+        faults,
+        ..ServeOptions::default()
+    }
+}
+
+fn spawn_node(opts: ServeOptions, addr: &str) -> thread::JoinHandle<ServiceReport> {
+    let svc = StudyService::start(opts).expect("node starts");
+    let server = WireServer::bind(svc, addr).expect("node binds");
+    thread::spawn(move || server.run().expect("node drains cleanly"))
+}
+
+/// Bursts of four consecutive refusals every 16 peer calls, scripted
+/// over the first `calls` ordinals. Four consecutive failures trip the
+/// breaker (threshold 3) mid-burst; the 12-call gap gives the cooldown
+/// time to elapse so the half-open probe closes it before the next
+/// burst — a flapping link, not a dead one.
+fn flap_plan(calls: u64) -> FaultPlan {
+    let mut plan = FaultPlan::new();
+    let mut n = 4;
+    while n + 3 < calls {
+        for i in 0..4 {
+            plan = plan.peer_fault(n + i, PeerFault::Refuse);
+        }
+        n += 16;
+    }
+    plan
+}
+
+/// One cluster round: cold study on A, timed warm study on B, drain.
+/// Returns (warm job y, warm launches, warm wall seconds, B's report).
+fn run_round(
+    args: &[String],
+    faults_b: Faults,
+) -> (Vec<f64>, u64, f64, ServiceReport) {
+    let addr_a = reserve_addr();
+    let addr_b = reserve_addr();
+    let peers = vec![addr_a.clone(), addr_b.clone()];
+    let node_a = spawn_node(opts(&peers, &addr_a, Faults::none()), &addr_a);
+    let node_b = spawn_node(opts(&peers, &addr_b, faults_b), &addr_b);
+
+    let spec = |tenant: &str| JobSpec { tenant: tenant.into(), args: args.to_vec(), tune: false };
+    run_jobs(&addr_a, &[spec("cold")], false).expect("cold run on node A");
+    let t0 = Instant::now();
+    run_jobs(&addr_b, &[spec("warm")], false).expect("warm run on node B");
+    let wall = t0.elapsed().as_secs_f64();
+
+    run_jobs(&addr_b, &[], true).expect("drain B");
+    run_jobs(&addr_a, &[], true).expect("drain A");
+    node_a.join().expect("node A joins");
+    let report_b = node_b.join().expect("node B joins");
+    let warm = report_b.jobs.iter().find(|j| j.tenant == "warm").expect("warm job billed");
+    assert!(warm.ok(), "warm job failed: {:?}", warm.error);
+    (warm.y.clone(), warm.launches, wall, report_b)
+}
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    let args: Vec<String> =
+        vec!["method=moat".into(), format!("r={}", if test_mode { 1 } else { 2 })];
+
+    // phase 1: the fault-free fabric baseline
+    let (base_y, base_launches, base_wall, base_report) = run_round(&args, Faults::none());
+
+    // phase 2: the same cluster, node B's peer link flapping
+    let plan = Arc::new(flap_plan(400));
+    let (flap_y, flap_launches, flap_wall, flap_report) =
+        run_round(&args, Faults::hooked(plan.clone()));
+
+    // self-healing must never change results, and the flap must have
+    // actually fired (the plan exercised the breaker, not thin air)
+    assert_eq!(base_y, flap_y, "flapped run is bit-identical to the fault-free run");
+    let fired = plan.fired().peer_faults;
+    assert!(fired >= 4, "at least one full burst fired (got {fired})");
+    assert!(
+        flap_launches >= base_launches,
+        "a flapping fabric cannot reduce launches: {flap_launches} < {base_launches}"
+    );
+
+    let evals = flap_report.jobs[0].n_evals;
+    let ratio = base_wall / flap_wall.max(1e-9);
+    println!(
+        "fault-free warm run: {base_launches} launches in {} | flapped: {flap_launches} \
+         launches in {} ({fired} scripted refusals) | throughput ratio {ratio:.3}",
+        fmt_secs(base_wall),
+        fmt_secs(flap_wall),
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"chaos_recovery\",\n  \"mode\": \"{}\",\n  \"evals\": {evals},\n  \
+         \"fault_free_launches\": {base_launches},\n  \"flapped_launches\": {flap_launches},\n  \
+         \"peer_faults_fired\": {fired},\n  \"fault_free_wall_secs\": {base_wall:.6},\n  \
+         \"flapped_wall_secs\": {flap_wall:.6},\n  \"throughput_ratio\": {ratio:.6}\n}}\n",
+        if test_mode { "test" } else { "full" },
+    );
+    std::fs::write("BENCH_chaos.json", &json).expect("write BENCH_chaos.json");
+    println!("wrote BENCH_chaos.json");
+
+    let _ = base_report;
+    println!(
+        "ACCEPTANCE: flapped throughput is {ratio:.3}x fault-free (floor 0.7 in full mode) — {}",
+        if ratio >= 0.7 || test_mode { "PASS" } else { "FAIL" }
+    );
+    if !test_mode {
+        assert!(
+            ratio >= 0.7,
+            "peer flap degraded throughput below the 0.7x floor: {ratio:.3}"
+        );
+    }
+}

@@ -8,13 +8,28 @@
 //! as misses, never as errors — the cache is an accelerator, not a
 //! source of truth.
 //!
+//! # Crash safety
+//!
+//! A process can die at any instruction, so every store is
+//! temp-file → `fsync` → atomic rename: the final `.state` name only
+//! ever points at fully durable bytes, and a crash mid-write leaves at
+//! worst an orphaned `.tmp-*` file (swept and counted at the next
+//! warm start — [`sweep_debris`]). Against the failure the rename
+//! cannot rule out — bytes torn *before* the fsync by a dying kernel,
+//! or rotted afterwards — every entry carries a trailing FNV-1a-64
+//! checksum verified on load; an entry whose checksum does not match
+//! is **quarantined** (renamed to `{key}.bad`, reclaimed at warm
+//! start) and reads as a miss, so one bad sector can never wedge a key
+//! or serve corrupt planes.
+//!
 //! # Format versioning
 //!
-//! The current format is `RTC2`: 128-bit keys, file names of 32 hex
-//! digits (`{key:032x}.state`). The pre-widening `RTC1` format used
-//! 64-bit keys and 16-hex names; a spill directory may legitimately hold
-//! both after an upgrade. Version handling is explicit rather than
-//! accidental:
+//! The current format is `RTC3`: 128-bit keys, file names of 32 hex
+//! digits (`{key:032x}.state`), checksummed payload. `RTC2` was the
+//! same layout without the checksum; the pre-widening `RTC1` format
+//! used 64-bit keys and 16-hex names. A spill directory may
+//! legitimately hold all three after upgrades. Version handling is
+//! explicit rather than accidental:
 //!
 //! * [`has_state`] / [`load_state`] accept only current-version files —
 //!   a stale file at a probed path reads as a miss, not garbage.
@@ -24,12 +39,13 @@
 //! * Old-format files at old-format paths are simply never probed (the
 //!   name widths differ) and age out with the directory.
 
-use std::io::Read;
+use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::data::Plane;
+use crate::faults::{DiskFault, Faults};
 
 use super::key::Key;
 use super::store::{CachedState, ScopedCounters};
@@ -41,13 +57,26 @@ use super::tier::{CacheCtx, CacheTier, TierStats, DISK_TIER};
 /// tier is billed as `disk_hits`, a fresh store as `spilled`.
 pub struct DiskTier {
     dir: PathBuf,
+    faults: Faults,
     hits: AtomicU64,
     stores: AtomicU64,
 }
 
 impl DiskTier {
     pub fn new(dir: impl Into<PathBuf>) -> Self {
-        Self { dir: dir.into(), hits: AtomicU64::new(0), stores: AtomicU64::new(0) }
+        Self {
+            dir: dir.into(),
+            faults: Faults::none(),
+            hits: AtomicU64::new(0),
+            stores: AtomicU64::new(0),
+        }
+    }
+
+    /// Install a fault hook consulted on every store attempt
+    /// ([`crate::faults::FaultHook::on_disk_store`]).
+    pub fn with_faults(mut self, faults: Faults) -> Self {
+        self.faults = faults;
+        self
     }
 
     /// The spill directory this tier reads and writes.
@@ -68,9 +97,10 @@ impl CacheTier for DiskTier {
     }
 
     fn store(&self, key: Key, state: &CachedState, _ctx: &CacheCtx) -> bool {
+        let fault = self.faults.get().and_then(|h| h.on_disk_store());
         // Ok(false) (already present) and write errors are both "not
         // newly stored"; the disk is an accelerator, not a ledger.
-        if matches!(store_state(&self.dir, key, state), Ok(true)) {
+        if matches!(store_state_faulted(&self.dir, key, state, fault), Ok(true)) {
             self.stores.fetch_add(1, Ordering::Relaxed);
             true
         } else {
@@ -86,22 +116,48 @@ impl CacheTier for DiskTier {
         TierStats {
             hits: self.hits.load(Ordering::Relaxed),
             stores: self.stores.load(Ordering::Relaxed),
-            resident_bytes: 0,
+            ..TierStats::default()
         }
     }
 }
 
-/// File magic + format version. `RTC1` was the 64-bit-key format; bump
-/// this whenever the on-disk layout or the key derivation changes
-/// incompatibly, so stale entries are invalidated rather than misread.
-const MAGIC: &[u8; 4] = b"RTC2";
+/// File magic + format version. `RTC1` was the 64-bit-key format,
+/// `RTC2` the 128-bit format without a checksum; bump this whenever the
+/// on-disk layout or the key derivation changes incompatibly, so stale
+/// entries are invalidated rather than misread.
+const MAGIC: &[u8; 4] = b"RTC3";
+
+/// Bytes before the plane payload: magic + height(u32 LE) + width(u32 LE).
+const HEADER_BYTES: usize = 12;
+
+/// Fixed overhead of one entry: header plus the trailing FNV-1a-64
+/// checksum (8 bytes LE, computed over header + payload).
+pub(crate) const ENTRY_OVERHEAD_BYTES: usize = HEADER_BYTES + 8;
 
 /// Discriminator for temp-file names (concurrent writers never collide).
 static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
+/// FNV-1a over 64 bits — the entry checksum (and the metrics-log line
+/// checksum in [`super::store`]). Not cryptographic; it guards against
+/// torn writes and bit rot, not adversaries (the spill dir is trusted,
+/// same trust model as the cluster fabric).
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        hash ^= u64::from(b);
+        hash = hash.wrapping_mul(0x1000_0000_01b3);
+    }
+    hash
+}
+
 /// One 3-plane state as stored on disk.
 pub(crate) fn state_path(dir: &Path, key: Key) -> PathBuf {
     dir.join(format!("{:032x}.state", key.as_u128()))
+}
+
+/// Where a corrupt entry is parked ([`quarantine`]).
+fn bad_path(dir: &Path, key: Key) -> PathBuf {
+    dir.join(format!("{:032x}.bad", key.as_u128()))
 }
 
 /// True when the file at `path` starts with the current-version magic.
@@ -119,16 +175,42 @@ pub(crate) fn has_state(dir: &Path, key: Key) -> bool {
     is_current_version(&state_path(dir, key))
 }
 
-/// Write a state for `key`, atomically (temp file + rename). Returns
-/// `Ok(false)` when a current-version entry was already present; a
-/// stale-version file at the path is overwritten.
+/// Park a corrupt current-version entry at `{key}.bad` so it stops
+/// answering probes (and stops blocking re-publication) but survives
+/// for post-mortem until the next warm-start sweep reclaims it.
+fn quarantine(dir: &Path, key: Key) {
+    let _ = std::fs::rename(state_path(dir, key), bad_path(dir, key));
+}
+
+/// Write a state for `key` durably: serialize with a trailing checksum,
+/// write to a temp file, `fsync`, then atomically rename into place.
+/// Returns `Ok(false)` when a current-version entry was already
+/// present; a stale-version file at the path is overwritten.
 pub(crate) fn store_state(dir: &Path, key: Key, state: &[Plane; 3]) -> std::io::Result<bool> {
+    store_state_faulted(dir, key, state, None)
+}
+
+/// [`store_state`] with an optional scripted fault applied:
+/// [`DiskFault::IoError`] fails the store outright;
+/// [`DiskFault::ShortWrite`] persists a *torn* entry under the final
+/// name (truncated payload, stale checksum — what a crash between
+/// write-out and fsync leaves behind) and reports success, so the
+/// corruption is only caught by the next lookup's checksum pass.
+fn store_state_faulted(
+    dir: &Path,
+    key: Key,
+    state: &[Plane; 3],
+    fault: Option<DiskFault>,
+) -> std::io::Result<bool> {
     let path = state_path(dir, key);
     if path.exists() && is_current_version(&path) {
         return Ok(false);
     }
+    if let Some(DiskFault::IoError) = fault {
+        return Err(std::io::Error::other("fault injection: scripted disk I/O error"));
+    }
     std::fs::create_dir_all(dir)?;
-    let mut bytes: Vec<u8> = Vec::with_capacity(16 + state[0].nbytes() * 3);
+    let mut bytes: Vec<u8> = Vec::with_capacity(ENTRY_OVERHEAD_BYTES + state[0].nbytes() * 3);
     bytes.extend_from_slice(MAGIC);
     bytes.extend_from_slice(&(state[0].height() as u32).to_le_bytes());
     bytes.extend_from_slice(&(state[0].width() as u32).to_le_bytes());
@@ -137,23 +219,63 @@ pub(crate) fn store_state(dir: &Path, key: Key, state: &[Plane; 3]) -> std::io::
             bytes.extend_from_slice(&v.to_le_bytes());
         }
     }
+    bytes.extend_from_slice(&fnv1a64(&bytes).to_le_bytes());
+    if let Some(DiskFault::ShortWrite) = fault {
+        bytes.truncate(bytes.len() / 2);
+    }
     let tmp = dir.join(format!(
         ".tmp-{}-{}-{:032x}",
         std::process::id(),
         TMP_SEQ.fetch_add(1, Ordering::Relaxed),
         key.as_u128()
     ));
-    std::fs::write(&tmp, &bytes)?;
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&bytes)?;
+        // The rename below only orders the *name*; the data must be
+        // durable first or a crash can publish a torn entry.
+        f.sync_all()?;
+    }
     std::fs::rename(&tmp, &path)?;
+    // Make the rename itself durable (the directory holds the name).
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
     Ok(true)
+}
+
+/// Remove write debris from a spill directory: orphaned `.tmp-*` files
+/// (a writer died pre-rename) and quarantined `*.bad` entries (a
+/// checksum caught corruption). Returns how many files were reclaimed.
+/// Called from the warm-start pass, which assumes — like warm start
+/// itself — that no other process is writing the directory at boot.
+pub(crate) fn sweep_debris(dir: &Path) -> u64 {
+    let Ok(read) = std::fs::read_dir(dir) else {
+        return 0;
+    };
+    let mut swept = 0;
+    for entry in read.flatten() {
+        let path = entry.path();
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else {
+            continue;
+        };
+        let is_debris =
+            name.starts_with(".tmp-") || path.extension().and_then(|e| e.to_str()) == Some("bad");
+        if is_debris && std::fs::remove_file(&path).is_ok() {
+            swept += 1;
+        }
+    }
+    swept
 }
 
 /// Scan a spill directory for current-format entries: every
 /// `{key:032x}.state` file, with its modification time and byte length.
 /// Used by the service's warm-start pass to pre-admit recently written
 /// states into the memory tier. Unreadable entries, foreign files and
-/// old-format (16-hex) names are skipped silently; the magic of each
-/// candidate is checked later by [`load_state`], not here.
+/// old-format (16-hex) names are skipped silently; the magic and
+/// checksum of each candidate are checked later by [`load_state`], not
+/// here.
 pub(crate) fn scan_states(dir: &Path) -> Vec<(Key, std::time::SystemTime, u64)> {
     let mut out = Vec::new();
     let Ok(read) = std::fs::read_dir(dir) else {
@@ -182,20 +304,34 @@ pub(crate) fn scan_states(dir: &Path) -> Vec<(Key, std::time::SystemTime, u64)> 
     out
 }
 
-/// Load the state for `key`, if present, current-version and well-formed.
+/// Load the state for `key`, if present, current-version, well-formed
+/// and checksum-clean. A current-version entry that fails validation
+/// (truncated, wrong length, checksum mismatch) is quarantined on the
+/// spot — see the module docs — and reads as a miss; a stale-version
+/// file is left in place for [`store_state`] to reclaim.
 pub(crate) fn load_state(dir: &Path, key: Key) -> Option<[Plane; 3]> {
     let bytes = std::fs::read(state_path(dir, key)).ok()?;
-    if bytes.len() < 12 || &bytes[..4] != MAGIC {
+    if bytes.len() < 4 || &bytes[..4] != MAGIC {
+        return None; // stale version or foreign bytes: a plain miss
+    }
+    if bytes.len() < ENTRY_OVERHEAD_BYTES {
+        quarantine(dir, key);
+        return None;
+    }
+    let (body, sum) = bytes.split_at(bytes.len() - 8);
+    if fnv1a64(body) != u64::from_le_bytes(sum.try_into().ok()?) {
+        quarantine(dir, key);
         return None;
     }
     let h = u32::from_le_bytes(bytes[4..8].try_into().ok()?) as usize;
     let w = u32::from_le_bytes(bytes[8..12].try_into().ok()?) as usize;
-    if bytes.len() != 12 + 3 * h * w * 4 {
+    if bytes.len() != ENTRY_OVERHEAD_BYTES + 3 * h * w * 4 {
+        quarantine(dir, key);
         return None;
     }
     let mut planes = Vec::with_capacity(3);
     for p in 0..3 {
-        let start = 12 + p * h * w * 4;
+        let start = HEADER_BYTES + p * h * w * 4;
         let data: Vec<f32> = bytes[start..start + h * w * 4]
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
@@ -209,6 +345,7 @@ pub(crate) fn load_state(dir: &Path, key: Key) -> Option<[Plane; 3]> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::faults::FaultPlan;
 
     fn tmp_dir(tag: &str) -> PathBuf {
         std::env::temp_dir().join(format!("rtf-cache-disk-{tag}-{}", std::process::id()))
@@ -237,13 +374,80 @@ mod tests {
     }
 
     #[test]
-    fn corrupt_files_read_as_misses() {
+    fn corrupt_current_version_files_miss_and_are_quarantined() {
         let dir = tmp_dir("corrupt");
         std::fs::create_dir_all(&dir).unwrap();
-        std::fs::write(state_path(&dir, k(7)), b"RTC2garbage").unwrap();
+        // current magic, garbage body: quarantined, not misread
+        std::fs::write(state_path(&dir, k(7)), b"RTC3garbage").unwrap();
         assert!(load_state(&dir, k(7)).is_none());
+        assert!(!state_path(&dir, k(7)).exists(), "corrupt entry left the probe path");
+        assert!(bad_path(&dir, k(7)).exists(), "corrupt entry parked for post-mortem");
+        assert!(
+            store_state(&dir, k(7), &state(1.0)).unwrap(),
+            "quarantined key republishes fresh"
+        );
+        assert_eq!(load_state(&dir, k(7)).unwrap()[0].get(0, 0), 1.0);
+        // foreign magic: a plain miss, left in place
         std::fs::write(state_path(&dir, k(8)), b"XXXX").unwrap();
         assert!(load_state(&dir, k(8)).is_none());
+        assert!(state_path(&dir, k(8)).exists(), "stale/foreign file is not quarantined");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checksum_catches_a_flipped_payload_byte() {
+        let dir = tmp_dir("bitrot");
+        store_state(&dir, k(0x50), &state(2.0)).unwrap();
+        let path = state_path(&dir, k(0x50));
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[HEADER_BYTES + 5] ^= 0x40; // flip one payload bit
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_state(&dir, k(0x50)).is_none(), "rotted entry must not load");
+        assert!(bad_path(&dir, k(0x50)).exists(), "rotted entry quarantined");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scripted_disk_faults_tear_or_fail_stores() {
+        let dir = tmp_dir("faulted");
+        let plan = std::sync::Arc::new(
+            FaultPlan::new()
+                .disk_fault(1, DiskFault::ShortWrite)
+                .disk_fault(2, DiskFault::IoError),
+        );
+        let tier = DiskTier::new(&dir).with_faults(Faults::hooked(plan.clone()));
+        let ctx = CacheCtx::unscoped();
+        let s: CachedState = Arc::new(state(5.0));
+
+        // #1 short write: reported stored, but the persisted entry is
+        // torn and the checksum turns the next lookup into a miss
+        assert!(tier.store(k(1), &s, &ctx), "a torn write looks successful to the writer");
+        assert!(tier.lookup(k(1), &ctx).is_none(), "checksum catches the tear");
+        assert!(bad_path(&dir, k(1)).exists());
+
+        // #2 io error: nothing persisted at all
+        assert!(!tier.store(k(2), &s, &ctx));
+        assert!(!state_path(&dir, k(2)).exists());
+
+        // #3 unscripted: clean store, clean read-back
+        assert!(tier.store(k(3), &s, &ctx));
+        assert_eq!(tier.lookup(k(3), &ctx).unwrap()[0].get(0, 0), 5.0);
+        assert_eq!(plan.fired().disk_faults, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sweep_reclaims_tmp_orphans_and_quarantined_entries() {
+        let dir = tmp_dir("sweep");
+        std::fs::create_dir_all(&dir).unwrap();
+        store_state(&dir, k(1), &state(1.0)).unwrap();
+        std::fs::write(dir.join(".tmp-999-0-deadbeef"), b"partial").unwrap();
+        std::fs::write(bad_path(&dir, k(9)), b"RTC3torn").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"keep me").unwrap();
+        assert_eq!(sweep_debris(&dir), 2, "one orphan + one quarantined entry");
+        assert_eq!(sweep_debris(&dir), 0, "sweep is idempotent");
+        assert!(load_state(&dir, k(1)).is_some(), "live entries survive the sweep");
+        assert!(dir.join("notes.txt").exists(), "foreign files survive the sweep");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -268,12 +472,16 @@ mod tests {
         // noise the scan must skip: old-format name, foreign file, junk hex
         std::fs::write(dir.join(format!("{:016x}.state", 3u64)), b"RTC1old").unwrap();
         std::fs::write(dir.join("notes.txt"), b"hello").unwrap();
-        std::fs::write(dir.join(format!("{:0>32}.state", "zz")), b"RTC2").unwrap();
+        std::fs::write(dir.join(format!("{:0>32}.state", "zz")), b"RTC3").unwrap();
         let mut keys: Vec<Key> = scan_states(&dir).iter().map(|(k, _, _)| *k).collect();
         keys.sort_unstable();
         assert_eq!(keys, vec![k(1), Key::from_parts(9, 2)]);
         let (_, _, len) = scan_states(&dir)[0];
-        assert_eq!(len as usize, 12 + 3 * 6 * 4, "scan reports the file length");
+        assert_eq!(
+            len as usize,
+            ENTRY_OVERHEAD_BYTES + 3 * 6 * 4,
+            "scan reports the file length"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -290,9 +498,9 @@ mod tests {
         assert!(!has_state(&dir, key), "old-format file must not read as a hit");
         assert!(load_state(&dir, key).is_none());
 
-        // a stale-version file parked at the CURRENT path (e.g. a future
-        // downgrade/upgrade cycle): ignored on read, overwritten on store
-        std::fs::write(state_path(&dir, key), b"RTC1staleblob").unwrap();
+        // a stale-version file parked at the CURRENT path (the
+        // pre-checksum RTC2 era): ignored on read, overwritten on store
+        std::fs::write(state_path(&dir, key), b"RTC2staleblob").unwrap();
         assert!(!has_state(&dir, key), "stale magic must not read as a hit");
         assert!(load_state(&dir, key).is_none(), "stale magic must not be misread");
         assert!(

@@ -8,7 +8,7 @@
 //! from the same sorted peer list, and adding a peer moves only the
 //! keys it wins. For keys this node owns the remote tier is inert
 //! (lookups and stores return immediately); for keys another node owns
-//! it speaks the serve wire protocol (rtfp v3) to the owner:
+//! it speaks the serve wire protocol (rtfp v4) to the owner:
 //!
 //! * `lookup` sends `cache-get` and blocks until the owner answers
 //!   `cache-state` — either `found` with the 3-plane payload, or
@@ -23,10 +23,34 @@
 //! Failure model: the fabric is an *optimization*, never a correctness
 //! dependency. Any connect, send, or decode failure degrades the call
 //! to a plain miss (`lookup → None`, `store → false`) and the engine
-//! falls through to a local launch; broken connections are dropped and
-//! re-dialed on the next call. Results stay bit-identical between
-//! 1-node and N-node runs because a remote hit returns the exact bytes
-//! the owner stored ([`planes_to_hex`] is a lossless `f32` codec).
+//! falls through to a local launch; broken (or timed-out, or
+//! poison-replying) connections are dropped — never returned to the
+//! pool — and re-dialed on the next call. Results stay bit-identical
+//! between 1-node and N-node runs because a remote hit returns the
+//! exact bytes the owner stored ([`planes_to_hex`] is a lossless `f32`
+//! codec).
+//!
+//! # Circuit breaker
+//!
+//! A peer that fails *repeatedly* should not cost every lookup a dial
+//! timeout. Each peer carries a breaker:
+//!
+//! * **Closed** (healthy): calls flow; [`BREAKER_THRESHOLD`]
+//!   *consecutive* failures trip it **Open**.
+//! * **Open**: calls fail immediately (degrading to local execution,
+//!   zero network cost) until [`BREAKER_COOLDOWN`] elapses; the first
+//!   call after that flips the breaker **HalfOpen** and goes through as
+//!   the probe.
+//! * **HalfOpen**: exactly one probe is in flight; concurrent calls
+//!   still fail fast. A successful probe re-closes the breaker, a
+//!   failed one re-opens it for another cooldown.
+//!
+//! Transitions are counted in [`TierStats::breaker_opens`] /
+//! [`TierStats::breaker_closes`] — `tests/chaos.rs` asserts a flapped
+//! peer trips and then recovers. While a breaker is open the fault
+//! hook's per-call ordinal does **not** advance (the call never
+//! happens), so scripted fault plans stay deterministic regardless of
+//! how many lookups race the cooldown window.
 //!
 //! [`planes_to_hex`]: crate::serve::protocol::planes_to_hex
 
@@ -34,8 +58,9 @@ use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use crate::faults::{Faults, PeerFault};
 use crate::serve::protocol::{
     planes_from_hex, read_frame, write_frame, Message, WireCachePut, PROTOCOL_VERSION,
 };
@@ -53,6 +78,12 @@ const CONNECT_TIMEOUT: Duration = Duration::from_millis(500);
 const READ_TIMEOUT: Duration = Duration::from_secs(120);
 /// Write budget per request frame.
 const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Consecutive failures that trip a peer's breaker open.
+const BREAKER_THRESHOLD: u32 = 3;
+/// How long an open breaker refuses traffic before admitting one
+/// half-open probe.
+const BREAKER_COOLDOWN: Duration = Duration::from_millis(250);
 
 /// Rendezvous (highest-random-weight) partition of the 128-bit key
 /// space across a peer list.
@@ -124,15 +155,30 @@ impl PeerRing {
     }
 }
 
+/// One peer's circuit-breaker state (see the module docs).
+enum BreakerState {
+    Closed { failures: u32 },
+    Open { since: Instant },
+    HalfOpen,
+}
+
 /// The remote tier: fetches and publishes cache entries over the serve
-/// wire protocol, one pooled connection set per peer.
+/// wire protocol, one pooled connection set per peer, each peer behind
+/// its own circuit breaker.
 pub struct RemoteTier {
     ring: PeerRing,
     /// Idle connections per peer (parallel to `ring.peers()`), returned
     /// after a successful exchange, dropped on any error.
     pools: Vec<Mutex<Vec<TcpStream>>>,
+    breakers: Vec<Mutex<BreakerState>>,
+    connect_timeout: Duration,
+    read_timeout: Duration,
+    write_timeout: Duration,
+    faults: Faults,
     hits: AtomicU64,
     stores: AtomicU64,
+    breaker_opens: AtomicU64,
+    breaker_closes: AtomicU64,
 }
 
 impl RemoteTier {
@@ -141,7 +187,41 @@ impl RemoteTier {
     pub fn new(peers: &[String], self_addr: &str) -> Result<Self> {
         let ring = PeerRing::new(peers, self_addr)?;
         let pools = ring.peers().iter().map(|_| Mutex::new(Vec::new())).collect();
-        Ok(Self { ring, pools, hits: AtomicU64::new(0), stores: AtomicU64::new(0) })
+        let breakers = ring
+            .peers()
+            .iter()
+            .map(|_| Mutex::new(BreakerState::Closed { failures: 0 }))
+            .collect();
+        Ok(Self {
+            ring,
+            pools,
+            breakers,
+            connect_timeout: CONNECT_TIMEOUT,
+            read_timeout: READ_TIMEOUT,
+            write_timeout: WRITE_TIMEOUT,
+            faults: Faults::none(),
+            hits: AtomicU64::new(0),
+            stores: AtomicU64::new(0),
+            breaker_opens: AtomicU64::new(0),
+            breaker_closes: AtomicU64::new(0),
+        })
+    }
+
+    /// Install a fault hook consulted before every admitted peer call
+    /// ([`crate::faults::FaultHook::on_peer_call`]).
+    pub fn with_faults(mut self, faults: Faults) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Override the connect/read/write timeouts (test aid: the
+    /// timeout-path tests shrink the read budget to milliseconds so a
+    /// stalled peer is observed quickly).
+    pub fn with_timeouts(mut self, connect: Duration, read: Duration, write: Duration) -> Self {
+        self.connect_timeout = connect;
+        self.read_timeout = read;
+        self.write_timeout = write;
+        self
     }
 
     /// The key partition this tier routes by.
@@ -156,9 +236,10 @@ impl RemoteTier {
             .map_err(Error::Io)?
             .next()
             .ok_or_else(|| Error::Protocol(format!("peer `{addr}` does not resolve")))?;
-        let stream = TcpStream::connect_timeout(&sock, CONNECT_TIMEOUT).map_err(Error::Io)?;
-        stream.set_read_timeout(Some(READ_TIMEOUT)).map_err(Error::Io)?;
-        stream.set_write_timeout(Some(WRITE_TIMEOUT)).map_err(Error::Io)?;
+        let stream =
+            TcpStream::connect_timeout(&sock, self.connect_timeout).map_err(Error::Io)?;
+        stream.set_read_timeout(Some(self.read_timeout)).map_err(Error::Io)?;
+        stream.set_write_timeout(Some(self.write_timeout)).map_err(Error::Io)?;
         let hello = Message::Hello { version: PROTOCOL_VERSION, role: "peer".into() };
         match Self::exchange(&stream, &hello)? {
             Message::Hello { version, .. } if version == PROTOCOL_VERSION => Ok(stream),
@@ -191,10 +272,97 @@ impl RemoteTier {
         }
     }
 
-    /// Send `msg` to peer `idx`, reusing a pooled connection when one
-    /// is idle. A stale pooled connection is dropped and the call
-    /// retried once on a fresh dial.
+    /// Admission check against peer `idx`'s breaker; flips an
+    /// expired-open breaker to half-open (the caller becomes the probe).
+    fn breaker_admits(&self, idx: usize) -> bool {
+        let mut b = self.breakers[idx].lock().unwrap();
+        match *b {
+            BreakerState::Closed { .. } => true,
+            BreakerState::Open { since } if since.elapsed() >= BREAKER_COOLDOWN => {
+                *b = BreakerState::HalfOpen;
+                true
+            }
+            BreakerState::Open { .. } => false,
+            // a probe is already in flight; don't pile on
+            BreakerState::HalfOpen => false,
+        }
+    }
+
+    /// Record a successful call: reset the failure streak; a successful
+    /// half-open probe re-closes the breaker.
+    fn note_success(&self, idx: usize) {
+        let mut b = self.breakers[idx].lock().unwrap();
+        if matches!(*b, BreakerState::HalfOpen) {
+            self.breaker_closes.fetch_add(1, Ordering::Relaxed);
+        }
+        *b = BreakerState::Closed { failures: 0 };
+    }
+
+    /// Record a failed call: extend the streak; at the threshold (or on
+    /// a failed half-open probe) trip the breaker open.
+    fn note_failure(&self, idx: usize) {
+        let mut b = self.breakers[idx].lock().unwrap();
+        match *b {
+            BreakerState::Closed { failures } if failures + 1 >= BREAKER_THRESHOLD => {
+                *b = BreakerState::Open { since: Instant::now() };
+                self.breaker_opens.fetch_add(1, Ordering::Relaxed);
+            }
+            BreakerState::Closed { failures } => {
+                *b = BreakerState::Closed { failures: failures + 1 };
+            }
+            BreakerState::HalfOpen => {
+                *b = BreakerState::Open { since: Instant::now() };
+                self.breaker_opens.fetch_add(1, Ordering::Relaxed);
+            }
+            BreakerState::Open { .. } => {}
+        }
+    }
+
+    /// Send `msg` to peer `idx` through its breaker and the fault hook;
+    /// every outcome feeds the breaker.
     fn call(&self, idx: usize, msg: &Message) -> Result<Message> {
+        if !self.breaker_admits(idx) {
+            return Err(Error::Protocol(format!(
+                "peer {}: circuit breaker open",
+                self.ring.addr(idx)
+            )));
+        }
+        if let Some(fault) = self.faults.get().and_then(|h| h.on_peer_call(self.ring.addr(idx)))
+        {
+            match fault {
+                PeerFault::Refuse => {
+                    self.note_failure(idx);
+                    return Err(Error::Protocol(format!(
+                        "peer {}: fault injection: connection refused",
+                        self.ring.addr(idx)
+                    )));
+                }
+                PeerFault::Drop => {
+                    // the connection died mid-exchange: whatever was
+                    // pooled is gone too
+                    self.pools[idx].lock().unwrap().clear();
+                    self.note_failure(idx);
+                    return Err(Error::Protocol(format!(
+                        "peer {}: fault injection: connection dropped mid-exchange",
+                        self.ring.addr(idx)
+                    )));
+                }
+                PeerFault::Delay(latency) => std::thread::sleep(latency),
+            }
+        }
+        let result = self.call_raw(idx, msg);
+        match result {
+            Ok(_) => self.note_success(idx),
+            Err(_) => self.note_failure(idx),
+        }
+        result
+    }
+
+    /// The unguarded exchange: reuse a pooled connection when one is
+    /// idle; a stale pooled connection is dropped and the call retried
+    /// once on a fresh dial. A connection that errors (including a read
+    /// timeout or an unparsable reply) is never returned to the pool.
+    fn call_raw(&self, idx: usize, msg: &Message) -> Result<Message> {
         if let Some(stream) = self.pools[idx].lock().unwrap().pop() {
             if let Ok(reply) = Self::exchange(&stream, msg) {
                 self.pools[idx].lock().unwrap().push(stream);
@@ -254,6 +422,8 @@ impl CacheTier for RemoteTier {
             hits: self.hits.load(Ordering::Relaxed),
             stores: self.stores.load(Ordering::Relaxed),
             resident_bytes: 0,
+            breaker_opens: self.breaker_opens.load(Ordering::Relaxed),
+            breaker_closes: self.breaker_closes.load(Ordering::Relaxed),
         }
     }
 }
@@ -262,6 +432,7 @@ impl CacheTier for RemoteTier {
 mod tests {
     use super::*;
     use crate::data::Plane;
+    use crate::faults::FaultPlan;
     use crate::serve::protocol::WireCacheState;
     use std::net::TcpListener;
 
@@ -300,6 +471,14 @@ mod tests {
         assert_eq!(PeerRing::new(&dup, "h1:1").unwrap().peers().len(), 2);
     }
 
+    /// A key owned by the given address under this tier's ring.
+    fn key_owned_by(tier: &RemoteTier, addr: &str) -> Key {
+        (0..u64::MAX)
+            .map(Key::from)
+            .find(|k| tier.ring().peers()[tier.ring().owner_of(*k)] == addr)
+            .unwrap()
+    }
+
     #[test]
     fn self_owned_keys_are_inert_and_dead_peers_degrade_to_misses() {
         // Port 1 on loopback refuses immediately: the fabric must turn
@@ -322,34 +501,40 @@ mod tests {
             }
         }
         assert!(local > 0 && remote > 0, "sampled both shards ({local} local, {remote} remote)");
-        assert_eq!(tier.stats(), TierStats::default(), "failed calls never count");
+        let st = tier.stats();
+        assert_eq!((st.hits, st.stores), (0, 0), "failed calls never count");
     }
 
-    /// A one-connection mini peer: handshakes, then answers `cache-get`
-    /// with `found` and `cache-put` with `stored`.
-    fn spawn_mini_peer(listener: TcpListener) -> std::thread::JoinHandle<u32> {
+    /// A mini peer: handshakes each accepted connection, then answers
+    /// `cache-get` with `found` and `cache-put` with `stored`. Exits
+    /// after `conns` connections close; returns total frames served.
+    fn spawn_mini_peer(listener: TcpListener, conns: usize) -> std::thread::JoinHandle<u32> {
         std::thread::spawn(move || {
-            let (stream, _) = listener.accept().unwrap();
-            let mut reader = BufReader::new(stream.try_clone().unwrap());
-            let mut writer = BufWriter::new(stream);
             let mut served = 0;
-            while let Ok(Some(msg)) = read_frame(&mut reader) {
-                let reply = match msg {
-                    Message::Hello { .. } => {
-                        Message::Hello { version: PROTOCOL_VERSION, role: "server".into() }
-                    }
-                    Message::CacheGet { key } => {
-                        served += 1;
-                        Message::CacheState(Box::new(WireCacheState::found(key, &state())))
-                    }
-                    Message::CachePut(put) => {
-                        served += 1;
-                        Message::CacheOk { key: put.key, stored: true }
-                    }
-                    other => panic!("mini peer got {}", other.type_name()),
+            for _ in 0..conns {
+                let Ok((stream, _)) = listener.accept() else {
+                    break;
                 };
-                write_frame(&mut writer, &reply).unwrap();
-                writer.flush().unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = BufWriter::new(stream);
+                while let Ok(Some(msg)) = read_frame(&mut reader) {
+                    let reply = match msg {
+                        Message::Hello { .. } => {
+                            Message::Hello { version: PROTOCOL_VERSION, role: "server".into() }
+                        }
+                        Message::CacheGet { key } => {
+                            served += 1;
+                            Message::CacheState(Box::new(WireCacheState::found(key, &state())))
+                        }
+                        Message::CachePut(put) => {
+                            served += 1;
+                            Message::CacheOk { key: put.key, stored: true }
+                        }
+                        other => panic!("mini peer got {}", other.type_name()),
+                    };
+                    write_frame(&mut writer, &reply).unwrap();
+                    writer.flush().unwrap();
+                }
             }
             served
         })
@@ -359,22 +544,176 @@ mod tests {
     fn fetches_and_publishes_through_a_live_peer_on_one_pooled_connection() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
-        let handle = spawn_mini_peer(listener);
+        let handle = spawn_mini_peer(listener, 1);
 
         let peers = vec![addr.clone(), "127.0.0.1:1".to_string()];
         let tier = RemoteTier::new(&peers, "127.0.0.1:1").unwrap();
         let ctx = CacheCtx::unscoped();
-        let key = (0..u64::MAX)
-            .map(Key::from)
-            .find(|k| tier.ring().peers()[tier.ring().owner_of(*k)] == addr)
-            .unwrap();
+        let key = key_owned_by(&tier, &addr);
 
         let got = tier.lookup(key, &ctx).expect("peer holds the state");
         assert_eq!(got[0].data(), state()[0].data(), "payload survives the wire");
         assert!(tier.store(key, &state(), &ctx), "publish acknowledges");
-        assert_eq!(tier.stats(), TierStats { hits: 1, stores: 1, resident_bytes: 0 });
+        let st = tier.stats();
+        assert_eq!((st.hits, st.stores), (1, 1));
+        assert_eq!((st.breaker_opens, st.breaker_closes), (0, 0), "healthy peer: no trips");
 
         drop(tier); // closes the pooled connection; the peer thread exits
         assert_eq!(handle.join().unwrap(), 2, "both calls reused one connection");
+    }
+
+    /// A peer that handshakes correctly, then stalls forever on the
+    /// first real request (reads it, answers nothing).
+    fn spawn_stalling_peer(listener: TcpListener) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            let mut held = Vec::new();
+            while let Ok((stream, _)) = listener.accept() {
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = BufWriter::new(stream.try_clone().unwrap());
+                if let Ok(Some(Message::Hello { .. })) = read_frame(&mut reader) {
+                    let hello = Message::Hello { version: PROTOCOL_VERSION, role: "server".into() };
+                    write_frame(&mut writer, &hello).unwrap();
+                    writer.flush().unwrap();
+                }
+                let _ = read_frame(&mut reader); // swallow the request, reply never comes
+                held.push(stream); // keep the socket open so the client must time out
+                if held.len() >= 4 {
+                    break;
+                }
+            }
+        })
+    }
+
+    #[test]
+    fn mid_frame_read_timeout_degrades_to_a_miss_and_trips_the_breaker() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let _peer = spawn_stalling_peer(listener);
+
+        let peers = vec![addr.clone(), "127.0.0.1:1".to_string()];
+        let tier = RemoteTier::new(&peers, "127.0.0.1:1")
+            .unwrap()
+            .with_timeouts(CONNECT_TIMEOUT, Duration::from_millis(50), WRITE_TIMEOUT);
+        let ctx = CacheCtx::unscoped();
+        let key = key_owned_by(&tier, &addr);
+
+        // three stalled exchanges: each degrades to a miss, never panics
+        for _ in 0..BREAKER_THRESHOLD {
+            assert!(tier.lookup(key, &ctx).is_none(), "stalled reply reads as a miss");
+        }
+        let st = tier.stats();
+        assert_eq!(st.breaker_opens, 1, "three consecutive timeouts trip the breaker");
+        // breaker open: the next call fails fast — no dial, no 50 ms wait
+        let t0 = Instant::now();
+        assert!(tier.lookup(key, &ctx).is_none());
+        assert!(
+            t0.elapsed() < Duration::from_millis(40),
+            "open breaker must fail fast, took {:?}",
+            t0.elapsed()
+        );
+    }
+
+    /// A peer that handshakes, then answers the first `cache-get` with
+    /// a poison frame (valid header, garbage JSON body) and every later
+    /// one honestly.
+    fn spawn_poison_peer(listener: TcpListener) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            let mut first = true;
+            for _ in 0..2 {
+                let Ok((stream, _)) = listener.accept() else {
+                    return;
+                };
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = BufWriter::new(stream);
+                while let Ok(Some(msg)) = read_frame(&mut reader) {
+                    match msg {
+                        Message::Hello { .. } => {
+                            let hello =
+                                Message::Hello { version: PROTOCOL_VERSION, role: "server".into() };
+                            write_frame(&mut writer, &hello).unwrap();
+                        }
+                        Message::CacheGet { key } => {
+                            if std::mem::take(&mut first) {
+                                writer.write_all(b"rtfp1 9\nnot-json!\n").unwrap();
+                            } else {
+                                let found = Message::CacheState(Box::new(WireCacheState::found(
+                                    key,
+                                    &state(),
+                                )));
+                                write_frame(&mut writer, &found).unwrap();
+                            }
+                        }
+                        other => panic!("poison peer got {}", other.type_name()),
+                    }
+                    writer.flush().unwrap();
+                }
+            }
+        })
+    }
+
+    #[test]
+    fn poison_cache_state_frame_misses_without_poisoning_the_pool() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let _peer = spawn_poison_peer(listener);
+
+        let peers = vec![addr.clone(), "127.0.0.1:1".to_string()];
+        let tier = RemoteTier::new(&peers, "127.0.0.1:1").unwrap();
+        let ctx = CacheCtx::unscoped();
+        let key = key_owned_by(&tier, &addr);
+
+        assert!(tier.lookup(key, &ctx).is_none(), "poison frame degrades to a miss");
+        // the poisoned connection was dropped, not pooled: the next
+        // lookup dials fresh and succeeds
+        let got = tier.lookup(key, &ctx).expect("recovered on a fresh connection");
+        assert_eq!(got[0].data(), state()[0].data());
+        let st = tier.stats();
+        assert_eq!(st.hits, 1);
+        assert_eq!(st.breaker_opens, 0, "one failure is below the breaker threshold");
+    }
+
+    #[test]
+    fn scripted_peer_flap_opens_the_breaker_and_a_probe_recovers_it() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = spawn_mini_peer(listener, 1);
+
+        let plan = Arc::new({
+            let mut p = FaultPlan::new();
+            for n in 1..=u64::from(BREAKER_THRESHOLD) {
+                p = p.peer_fault(n, PeerFault::Refuse);
+            }
+            p
+        });
+        let peers = vec![addr.clone(), "127.0.0.1:1".to_string()];
+        let tier = RemoteTier::new(&peers, "127.0.0.1:1")
+            .unwrap()
+            .with_faults(Faults::hooked(plan.clone()));
+        let ctx = CacheCtx::unscoped();
+        let key = key_owned_by(&tier, &addr);
+
+        // the flap: three scripted refusals trip the breaker
+        for _ in 0..BREAKER_THRESHOLD {
+            assert!(tier.lookup(key, &ctx).is_none());
+        }
+        assert_eq!(tier.stats().breaker_opens, 1);
+        assert_eq!(plan.fired().peer_faults, u64::from(BREAKER_THRESHOLD));
+
+        // while open, calls fail fast and do NOT advance the fault
+        // ordinal (the call never happens)
+        assert!(tier.lookup(key, &ctx).is_none());
+        assert_eq!(plan.seen().peer_faults, u64::from(BREAKER_THRESHOLD));
+
+        // after the cooldown, one probe goes through, succeeds against
+        // the (healthy) live peer, and re-closes the breaker
+        std::thread::sleep(BREAKER_COOLDOWN + Duration::from_millis(50));
+        let got = tier.lookup(key, &ctx).expect("half-open probe succeeds");
+        assert_eq!(got[0].data(), state()[0].data());
+        let st = tier.stats();
+        assert_eq!((st.breaker_opens, st.breaker_closes), (1, 1), "tripped once, recovered once");
+        assert_eq!(st.hits, 1);
+
+        drop(tier);
+        assert_eq!(handle.join().unwrap(), 1, "only the probe reached the peer");
     }
 }

@@ -60,6 +60,7 @@ use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::data::Plane;
+use crate::faults::Faults;
 
 use super::disk::{self, DiskTier};
 use super::key::Key;
@@ -83,6 +84,10 @@ pub struct CacheConfig {
     /// Optional persistent tier: write-through on insert, fallback on
     /// lookup.
     pub spill_dir: Option<PathBuf>,
+    /// Fault-injection hook threaded into the disk tier (tests/chaos
+    /// harness only; [`Faults::none`] — the default — is a single
+    /// never-taken branch).
+    pub faults: Faults,
 }
 
 impl Default for CacheConfig {
@@ -92,6 +97,7 @@ impl Default for CacheConfig {
             shards: 8,
             quantize: 0.0,
             spill_dir: None,
+            faults: Faults::none(),
         }
     }
 }
@@ -593,6 +599,7 @@ impl CacheTier for MemoryTier {
             hits: self.hits.load(Ordering::Relaxed),
             stores: self.stores.load(Ordering::Relaxed),
             resident_bytes: self.resident.load(Ordering::Relaxed),
+            ..TierStats::default()
         }
     }
 }
@@ -634,7 +641,7 @@ impl ReuseCache {
         let memory = MemoryTier::new(cfg.capacity_bytes, cfg.shards);
         let mut lower: Vec<Arc<dyn CacheTier>> = Vec::new();
         if let Some(dir) = &cfg.spill_dir {
-            lower.push(Arc::new(DiskTier::new(dir.clone())));
+            lower.push(Arc::new(DiskTier::new(dir.clone()).with_faults(cfg.faults.clone())));
         }
         Self {
             cfg,
@@ -828,6 +835,26 @@ impl ReuseCache {
         }
     }
 
+    /// [`ReuseCache::wait_for_flight`] with a deadline: returns false if
+    /// the key is *still* in flight when `timeout` elapses. A false
+    /// return means the flight's owner is wedged (or merely very slow) —
+    /// the caller should give up on the claim and compute the key
+    /// itself, un-claimed: a possible duplicate launch, never a
+    /// deadlock. The engine uses this so one stuck worker (or a crashed
+    /// remote claimant) cannot block every waiter forever.
+    pub fn wait_for_flight_for(&self, key: Key, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut flights = self.flights.set.lock().unwrap();
+        while flights.contains(&key) {
+            let Some(left) = deadline.checked_duration_since(Instant::now()) else {
+                return false;
+            };
+            let (guard, _) = self.flights.cv.wait_timeout(flights, left).unwrap();
+            flights = guard;
+        }
+        true
+    }
+
     /// Count a state hit that was served outside the cache's own lookup
     /// paths — the batched executor serving a lane from a sibling lane's
     /// just-computed result records it here, exactly as the sequential
@@ -897,11 +924,71 @@ impl ReuseCache {
         }
     }
 
-    /// Publish comparison metrics (tiny; memory-only, unbounded).
-    /// Releases any in-flight claim on `key`.
+    /// Publish comparison metrics (tiny; resident in memory, persisted
+    /// append-only next to the disk tier so a warm-restarted process
+    /// skips the comparison launches too). Releases any in-flight claim
+    /// on `key`.
     pub fn put_metrics(&self, key: Key, metrics: [f32; 3]) {
-        self.metrics.lock().unwrap().insert(key, metrics);
+        let new = self.metrics.lock().unwrap().insert(key, metrics).is_none();
+        if new {
+            self.append_metrics_log(key, metrics);
+        }
         self.release_flight(key);
+    }
+
+    /// Append one metrics entry to the spill directory's `metrics.log`.
+    /// One line per entry — `key` + the three f32 bit patterns + an
+    /// FNV-1a-64 line checksum, all hex — written with a single
+    /// `O_APPEND` write so concurrent publishers never interleave
+    /// mid-line. No fsync: metrics are cheap to recompute, and the
+    /// loader stops at the first torn line. Write failures are silently
+    /// dropped (the log, like the whole disk tier, is an accelerator).
+    fn append_metrics_log(&self, key: Key, metrics: [f32; 3]) {
+        use std::io::Write;
+        let Some(dir) = &self.cfg.spill_dir else {
+            return;
+        };
+        if std::fs::create_dir_all(dir).is_err() {
+            return;
+        }
+        let Ok(mut file) =
+            std::fs::OpenOptions::new().create(true).append(true).open(dir.join(METRICS_LOG))
+        else {
+            return;
+        };
+        let body = format!(
+            "{:032x} {:08x} {:08x} {:08x}",
+            key.as_u128(),
+            metrics[0].to_bits(),
+            metrics[1].to_bits(),
+            metrics[2].to_bits()
+        );
+        let _ = writeln!(file, "{body} {:016x}", disk::fnv1a64(body.as_bytes()));
+    }
+
+    /// Re-load persisted metrics ([`ReuseCache::put_metrics`]'s log)
+    /// into the metrics map. Loading stops at the first line that fails
+    /// to parse or checksum — everything past a torn append is suspect.
+    /// Returns how many entries were admitted (already-resident keys
+    /// count as loaded; duplicate lines are harmless).
+    fn load_metrics_log(&self) -> u64 {
+        let Some(dir) = &self.cfg.spill_dir else {
+            return 0;
+        };
+        let Ok(text) = std::fs::read_to_string(dir.join(METRICS_LOG)) else {
+            return 0;
+        };
+        let mut loaded = 0;
+        let mut metrics = self.metrics.lock().unwrap();
+        for line in text.lines() {
+            let Some(entry) = parse_metrics_line(line) else {
+                break;
+            };
+            let (key, m) = entry;
+            metrics.insert(key, m);
+            loaded += 1;
+        }
+        loaded
     }
 
     /// True when the metrics map holds `key` (planning-time probe).
@@ -1024,6 +1111,19 @@ impl ReuseCache {
         keys
     }
 
+    /// Per-tier diagnostic counters, top of the stack first — the
+    /// memory tier, then every attached lower tier in consultation
+    /// order. The remote tier's row carries the circuit-breaker
+    /// transition counts ([`TierStats::breaker_opens`] /
+    /// [`TierStats::breaker_closes`]).
+    pub fn tier_stats(&self) -> Vec<(&'static str, TierStats)> {
+        let mut out = vec![(MEMORY_TIER, self.memory.stats())];
+        for tier in self.lower.read().unwrap().iter() {
+            out.push((tier.name(), tier.stats()));
+        }
+        out
+    }
+
     /// Snapshot every counter.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
@@ -1059,13 +1159,17 @@ impl ReuseCache {
         let Some(dir) = &self.cfg.spill_dir else {
             return report;
         };
+        // reclaim crash debris first: orphaned temp files from writers
+        // that died pre-rename, and checksum-quarantined entries
+        report.swept = disk::sweep_debris(dir);
+        report.metrics_loaded = self.load_metrics_log();
         let mut entries = disk::scan_states(dir);
         entries.sort_by(|a, b| b.1.cmp(&a.1)); // newest first
         report.scanned = entries.len() as u64;
         let capacity = self.cfg.capacity_bytes as u64;
         for (key, _, file_len) in entries {
-            // payload = file length minus the 12-byte header
-            let payload = file_len.saturating_sub(12);
+            // payload = file length minus header + checksum overhead
+            let payload = file_len.saturating_sub(disk::ENTRY_OVERHEAD_BYTES as u64);
             if self.memory.resident_bytes() + payload > capacity {
                 report.skipped += 1;
                 continue;
@@ -1100,6 +1204,34 @@ pub struct WarmStartReport {
     /// Entries left disk-only (capacity reached, unreadable, or already
     /// resident).
     pub skipped: u64,
+    /// Crash debris reclaimed before the scan: orphaned `.tmp-*` files
+    /// and checksum-quarantined `*.bad` entries.
+    pub swept: u64,
+    /// Comparison metrics re-loaded from the persisted metrics log.
+    pub metrics_loaded: u64,
+}
+
+/// File name of the append-only comparison-metrics log kept next to the
+/// disk tier's state files (see [`ReuseCache::put_metrics`]).
+const METRICS_LOG: &str = "metrics.log";
+
+/// Parse one metrics-log line (`key bits0 bits1 bits2 checksum`, all
+/// hex); `None` on any malformed or checksum-failing field.
+fn parse_metrics_line(line: &str) -> Option<(Key, [f32; 3])> {
+    let (body, sum) = line.rsplit_once(' ')?;
+    if u64::from_str_radix(sum, 16).ok()? != disk::fnv1a64(body.as_bytes()) {
+        return None;
+    }
+    let mut fields = body.split(' ');
+    let raw = u128::from_str_radix(fields.next()?, 16).ok()?;
+    let mut m = [0f32; 3];
+    for v in m.iter_mut() {
+        *v = f32::from_bits(u32::from_str_radix(fields.next()?, 16).ok()?);
+    }
+    if fields.next().is_some() {
+        return None;
+    }
+    Some((Key::from_parts((raw >> 64) as u64, raw as u64), m))
 }
 
 /// RAII holder for claimed flights: any key still held when this drops
@@ -1450,6 +1582,119 @@ mod tests {
         assert_eq!(report.skipped, 3);
         assert!(warm.resident_bytes() <= 2 * S4);
         assert_eq!(warm.stats().evictions, 0, "warm-start never thrashes the LRU");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn warm_start_sweeps_crash_debris_and_counts_it() {
+        let dir = std::env::temp_dir().join(format!("rtf-cache-sweep-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let cold = ReuseCache::new(CacheConfig {
+                spill_dir: Some(dir.clone()),
+                ..CacheConfig::default()
+            });
+            cold.put_state(k(1), state(1.0, 4), &ux());
+        }
+        // debris a mid-write death leaves behind: an orphaned temp file
+        // and a quarantined (checksum-failed) entry
+        std::fs::write(dir.join(".tmp-1234-0-00000000000000000000000000000009"), b"torn")
+            .unwrap();
+        std::fs::write(dir.join(format!("{:032x}.bad", 9u64)), b"RTC3bad").unwrap();
+        let warm = ReuseCache::new(CacheConfig {
+            spill_dir: Some(dir.clone()),
+            ..CacheConfig::default()
+        });
+        let report = warm.warm_start();
+        assert_eq!(report.swept, 2, "orphan + quarantined entry reclaimed");
+        assert_eq!(report.scanned, 1);
+        assert_eq!(report.admitted, 1, "live entries unaffected by the sweep");
+        assert_eq!(warm.warm_start().swept, 0, "sweep is idempotent");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn metrics_persist_across_a_restart() {
+        let dir = std::env::temp_dir().join(format!("rtf-cache-mlog-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = CacheConfig { spill_dir: Some(dir.clone()), ..CacheConfig::default() };
+        {
+            let cold = ReuseCache::new(cfg.clone());
+            cold.put_metrics(k(5), [0.75, 0.5, 0.125]);
+            cold.put_metrics(k(6), [1.0, -0.0, f32::MIN_POSITIVE]);
+            cold.put_metrics(k(5), [0.75, 0.5, 0.125]); // re-publication: no extra line
+        }
+        let warm = ReuseCache::new(cfg);
+        assert!(warm.get_metrics(k(5), &ux()).is_none(), "nothing resident before warm start");
+        let report = warm.warm_start();
+        assert_eq!(report.metrics_loaded, 2);
+        assert_eq!(warm.get_metrics(k(5), &ux()), Some([0.75, 0.5, 0.125]));
+        let m6 = warm.get_metrics(k(6), &ux()).expect("second entry loaded");
+        assert_eq!(m6[1].to_bits(), (-0.0f32).to_bits(), "bit-exact through the log");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_metrics_log_tail_stops_the_load() {
+        let dir = std::env::temp_dir().join(format!("rtf-cache-mtorn-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = CacheConfig { spill_dir: Some(dir.clone()), ..CacheConfig::default() };
+        {
+            let cold = ReuseCache::new(cfg.clone());
+            cold.put_metrics(k(1), [0.1, 0.2, 0.3]);
+            cold.put_metrics(k(2), [0.4, 0.5, 0.6]);
+        }
+        // crash mid-append: truncate the log inside the last line
+        let log = dir.join("metrics.log");
+        let mut bytes = std::fs::read(&log).unwrap();
+        bytes.truncate(bytes.len() - 10);
+        std::fs::write(&log, &bytes).unwrap();
+        let warm = ReuseCache::new(cfg);
+        let report = warm.warm_start();
+        assert_eq!(report.metrics_loaded, 1, "the torn tail is not trusted");
+        assert!(warm.get_metrics(k(1), &ux()).is_some());
+        assert!(warm.get_metrics(k(2), &ux()).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bounded_flight_wait_times_out_and_recovers() {
+        let c = Arc::new(ReuseCache::with_capacity(1 << 20));
+        assert!(matches!(c.lookup_or_claim(k(1), &ux()), StateClaim::Claimed));
+        // the claim holder is wedged: a bounded waiter gives up…
+        let t0 = Instant::now();
+        assert!(!c.wait_for_flight_for(k(1), Duration::from_millis(50)));
+        assert!(t0.elapsed() >= Duration::from_millis(50));
+        // …and a publication wakes a bounded waiter well before its deadline
+        let publisher = {
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(30));
+                c.put_state(k(1), state(1.0, 4), &CacheCtx::unscoped());
+            })
+        };
+        assert!(c.wait_for_flight_for(k(1), Duration::from_secs(30)));
+        publisher.join().unwrap();
+        assert!(matches!(c.lookup_or_claim(k(1), &ux()), StateClaim::Ready(_)));
+        // no flight at all: an immediate true
+        assert!(c.wait_for_flight_for(k(7), Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn tier_stats_lists_the_stack_in_order() {
+        let dir = std::env::temp_dir().join(format!("rtf-cache-tstats-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = ReuseCache::new(CacheConfig {
+            spill_dir: Some(dir.clone()),
+            ..CacheConfig::default()
+        });
+        c.put_state(k(1), state(1.0, 4), &ux());
+        let rows = c.tier_stats();
+        assert_eq!(rows[0].0, MEMORY_TIER);
+        assert_eq!(rows[1].0, DISK_TIER);
+        assert_eq!(rows[0].1.stores, 1);
+        assert_eq!(rows[1].1.stores, 1);
+        assert_eq!(rows[1].1.breaker_opens, 0, "no breaker on the disk tier");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -3,7 +3,7 @@
 //!
 //! [`crate::cache::ReuseCache`] is a *stack* of tiers: a resident memory
 //! LRU on top, then any number of lower tiers consulted in order on a
-//! memory miss — today the persistent RTC2 disk tier
+//! memory miss — today the persistent RTC3 disk tier
 //! ([`super::disk::DiskTier`]) and the cluster fabric
 //! ([`super::remote::RemoteTier`]), which fetches and publishes entries
 //! on the peer that owns the key. The stack owns everything that is
@@ -72,6 +72,13 @@ pub struct TierStats {
     /// Bytes resident in this tier (0 for tiers that do not account
     /// bytes, e.g. the remote fabric).
     pub resident_bytes: u64,
+    /// Circuit-breaker transitions into Open (0 for tiers without a
+    /// breaker — today only the remote fabric trips one; see
+    /// [`super::remote::RemoteTier`]).
+    pub breaker_opens: u64,
+    /// Circuit-breaker recoveries: HalfOpen probes that succeeded and
+    /// re-closed a peer's breaker.
+    pub breaker_closes: u64,
 }
 
 /// One storage tier of the reuse cache. Implementations must be cheap

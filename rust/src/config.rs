@@ -4,6 +4,7 @@
 //! examples and the bench harness.
 
 use crate::coordinator::BatchPolicy;
+use crate::faults::Faults;
 use crate::merging::{FineAlgorithm, TrtmaOptions};
 use crate::{Error, Result};
 
@@ -112,6 +113,7 @@ impl CacheSettings {
             shards: self.shards,
             quantize: self.quantize,
             spill_dir: self.spill_dir.as_ref().map(std::path::PathBuf::from),
+            faults: Faults::none(),
         }
     }
 }
@@ -151,6 +153,11 @@ pub struct StudyConfig {
     pub workflow_file: Option<String>,
     /// Cross-study reuse cache configuration.
     pub cache: CacheSettings,
+    /// Fault-injection hook threaded into the worker engines and the
+    /// cache's disk tier (see [`crate::faults`]). Inactive by default;
+    /// set programmatically (chaos tests, recovery benches) — there is
+    /// deliberately no CLI flag, fault plans are code.
+    pub faults: Faults,
 }
 
 impl Default for StudyConfig {
@@ -169,6 +176,7 @@ impl Default for StudyConfig {
             artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
             workflow_file: None,
             cache: CacheSettings::default(),
+            faults: Faults::none(),
         }
     }
 }
@@ -314,6 +322,14 @@ pub struct ServeConfig {
     /// `warm-start=on|off` — pre-admit disk-tier entries at boot.
     /// Unset defaults to on exactly when `cache-dir=` is configured.
     pub warm_start: Option<bool>,
+    /// `window=N` — per-connection backpressure: the most submits a
+    /// client connection may have unanswered before further submits get
+    /// an `over-window` error frame. Unset uses the service default.
+    pub submit_window: Option<usize>,
+    /// `retries=N` — extra execution attempts a failed job is granted
+    /// before its failure is final (0 disables retry). Unset uses the
+    /// service default.
+    pub job_retries: Option<u32>,
     /// `peers=ADDR,ADDR,...` — cluster mode: the full node list
     /// (including this node's own `listen=` address). The 128-bit key
     /// space is consistent-hash partitioned across these nodes and
@@ -386,6 +402,8 @@ impl ServeConfig {
                     sc.peers = list;
                 }
                 Some(("warm-start", v)) => sc.warm_start = Some(v == "on" || v == "true"),
+                Some(("window", v)) => sc.submit_window = Some(uint(v)?.max(1)),
+                Some(("retries", v)) => sc.job_retries = Some(uint(v)? as u32),
                 _ => sc.study_args.push(a.clone()),
             }
         }
@@ -676,6 +694,21 @@ mod tests {
         let sc = ServeConfig::from_args(&args(&["cache-dir=/tmp/rtf-tier", "warm-start=off"]))
             .unwrap();
         assert!(!sc.warm_start_effective(), "the explicit flag wins");
+    }
+
+    #[test]
+    fn serve_config_parses_resilience_flags() {
+        let sc = ServeConfig::from_args(&args(&["window=8", "retries=5"])).unwrap();
+        assert_eq!(sc.submit_window, Some(8));
+        assert_eq!(sc.job_retries, Some(5));
+        let sc = ServeConfig::from_args(&[]).unwrap();
+        assert_eq!(sc.submit_window, None, "unset defers to the service default");
+        assert_eq!(sc.job_retries, None);
+        let sc = ServeConfig::from_args(&args(&["window=0", "retries=0"])).unwrap();
+        assert_eq!(sc.submit_window, Some(1), "window clamps to >= 1");
+        assert_eq!(sc.job_retries, Some(0), "retries=0 legitimately disables retry");
+        assert!(ServeConfig::from_args(&args(&["window=wide"])).is_err());
+        assert!(ServeConfig::from_args(&args(&["retries=lots"])).is_err());
     }
 
     #[test]

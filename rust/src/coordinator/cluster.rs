@@ -10,6 +10,7 @@ use std::time::{Duration, Instant};
 use crate::cache::{fold_keys, node_input_key, reference_fingerprints, tile_fingerprints};
 use crate::cache::{CacheStats, Key, ReuseCache, ScopedCounters};
 use crate::data::{Plane, TileSet};
+use crate::faults::Faults;
 use crate::merging::{
     batched_unit_cost, unit_launch_count, CompactGraph, StudyPlan, DEFAULT_LAUNCH_COST_SECS,
     DEFAULT_MARGINAL_COST_SECS,
@@ -56,6 +57,9 @@ pub struct ExecuteOptions {
     /// How workers batch reuse-tree frontier siblings into kernel
     /// launches (see [`BatchPolicy`]).
     pub batch: BatchPolicy,
+    /// Fault-injection hook installed into every worker engine
+    /// (inactive by default; see [`crate::faults`]).
+    pub faults: Faults,
 }
 
 impl ExecuteOptions {
@@ -67,6 +71,7 @@ impl ExecuteOptions {
             cache: None,
             cache_scope: None,
             batch: BatchPolicy::default(),
+            faults: Faults::none(),
         }
     }
 
@@ -96,6 +101,15 @@ impl ExecuteOptions {
     /// execution).
     pub fn with_batch(mut self, batch: BatchPolicy) -> Self {
         self.batch = batch;
+        self
+    }
+
+    /// Install a fault-injection hook into every worker engine (see
+    /// [`crate::faults`]): scripted launch faults panic a worker
+    /// mid-unit, which the dispatch loop converts into a failed study
+    /// instead of a wedged one.
+    pub fn with_faults(mut self, faults: Faults) -> Self {
+        self.faults = faults;
         self
     }
 }
@@ -334,6 +348,7 @@ fn worker_loop(
             engine.set_cache_scope(scope.clone());
         }
     }
+    engine.set_fault_hook(opts.faults.clone());
     let quantize = opts.cache.as_ref().map(|c| c.quantize_step()).unwrap_or(0.0);
 
     loop {
@@ -380,16 +395,34 @@ fn worker_loop(
             ),
             ref_fp: ref_fps.get(&rep.tile).copied().unwrap_or(Key::from(0u64)),
         });
-        let result = execute_unit(
-            &mut engine,
-            unit,
-            graph,
-            instances,
-            input,
-            reference,
-            cache_ctx,
-            opts.batch,
-        );
+        // a panicking unit (a backend crash, or a scripted launch fault)
+        // must become a *failed study*, not a wedged one: without the
+        // catch, the panicking worker dies without ever touching
+        // `sched.failed`, and every other worker parks on the condvar
+        // forever — `thread::scope` then never joins. Cache claims held
+        // by the unit are released during unwinding (RAII
+        // [`crate::cache::FlightClaims`]), so waiters on other engines
+        // re-claim instead of stalling.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            execute_unit(
+                &mut engine,
+                unit,
+                graph,
+                instances,
+                input,
+                reference,
+                cache_ctx,
+                opts.batch,
+            )
+        }))
+        .unwrap_or_else(|payload| {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| (*s).to_string()))
+                .unwrap_or_else(|| "worker panicked".to_string());
+            Err(Error::Coordinator(format!("worker panic: {msg}")))
+        });
         match result {
             Ok(UnitOutput::States(states)) => {
                 for (node, state) in states {

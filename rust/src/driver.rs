@@ -206,7 +206,9 @@ pub fn build_cache(cfg: &StudyConfig) -> Option<Arc<ReuseCache>> {
     if !cfg.cache.enabled {
         return None;
     }
-    Some(Arc::new(ReuseCache::new(cfg.cache.to_cache_config())))
+    let mut cc = cfg.cache.to_cache_config();
+    cc.faults = cfg.faults.clone();
+    Some(Arc::new(ReuseCache::new(cc)))
 }
 
 /// The fixed per-study runtime inputs: synthetic tiles, reference masks,
@@ -306,7 +308,8 @@ pub fn run_pjrt_with_inputs_scoped(
     inputs: &StudyInputs,
 ) -> Result<StudyOutcome> {
     let mut opts = ExecuteOptions::new(cfg.workers, &cfg.artifacts_dir)
-        .with_batch(BatchPolicy::new(cfg.batch_width));
+        .with_batch(BatchPolicy::new(cfg.batch_width))
+        .with_faults(cfg.faults.clone());
     if let Some(cache) = cache {
         opts = opts.with_cache(cache);
         if let Some(scope) = scope {

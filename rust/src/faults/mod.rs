@@ -1,0 +1,371 @@
+//! Deterministic fault injection for the engine, the cache tiers, and
+//! the wire server.
+//!
+//! Failure is the common case at scale: workers panic mid-unit, disk
+//! writes tear when a process dies, peers flap, frames corrupt in
+//! transit. This module makes each of those a *scripted, reproducible
+//! input* instead of an accident, so the self-healing paths (job
+//! retries, the per-peer circuit breaker, disk quarantine, bounded
+//! flight waits) are exercised by ordinary deterministic tests —
+//! `tests/chaos.rs` is the capstone consumer.
+//!
+//! # Design
+//!
+//! The injection points implement one trait, [`FaultHook`], whose
+//! methods all default to "no fault". Production code holds a
+//! [`Faults`] handle (a cloneable `Option<Arc<dyn FaultHook>>`
+//! newtype); the disabled handle is the default everywhere, and every
+//! injection site guards on it with a single `Option` check — no
+//! allocation, no locking, no syscall — so a fault-free build pays
+//! nothing measurable (the frontier-batching bench is the acceptance
+//! gate for that).
+//!
+//! [`FaultPlan`] is the scripted implementation: each injection *site*
+//! (backend launch, disk store, peer call, outbound cache-state frame)
+//! carries an atomic ordinal counter, and the plan maps 1-based
+//! ordinals to events. Ordinals — not wall-clock, not randomness —
+//! make a plan deterministic under any thread interleaving *of the
+//! site itself*: the Nth disk store fails no matter which worker
+//! performs it. Plans are built with the builder methods, then frozen
+//! behind an `Arc`; only the atomics mutate afterwards.
+//!
+//! ```
+//! use rtf_reuse::faults::{DiskFault, FaultHook, FaultPlan, Faults};
+//! use std::sync::Arc;
+//!
+//! let plan = Arc::new(FaultPlan::new().panic_on_launch(2).disk_fault(1, DiskFault::IoError));
+//! let faults = Faults::hooked(plan.clone());
+//! let hook = faults.get().unwrap();
+//! assert!(hook.on_launch().is_none(), "launch #1 passes");
+//! assert!(hook.on_launch().is_some(), "launch #2 panics");
+//! assert_eq!(hook.on_disk_store(), Some(DiskFault::IoError));
+//! assert_eq!(plan.fired().launch_panics, 1);
+//! ```
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What a scripted disk-store fault does to the write.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DiskFault {
+    /// The store fails outright with an I/O error (disk full, EIO).
+    /// The tier reports the store as not-performed; nothing persists.
+    IoError,
+    /// The write tears: a truncated payload reaches the final file
+    /// name, as if the process died between write and a (skipped)
+    /// fsync. The tier's checksum must catch this on the next lookup.
+    ShortWrite,
+}
+
+/// What a scripted peer-call fault does to the connection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeerFault {
+    /// The dial is refused / the pooled connection is dead. The call
+    /// fails before any bytes move.
+    Refuse,
+    /// The connection drops mid-exchange (after the request is sent,
+    /// before the reply arrives).
+    Drop,
+    /// Added network latency before the exchange proceeds normally.
+    Delay(Duration),
+}
+
+/// The injection-point trait. Every method defaults to "no fault", so
+/// an implementation only overrides the sites it scripts. Injection
+/// sites call these *only when a hook is installed* — see [`Faults`].
+pub trait FaultHook: Send + Sync {
+    /// Consulted once per backend launch (before the kernels run).
+    /// `Some(msg)` makes the engine panic with that message — the
+    /// worker-panic failure mode.
+    fn on_launch(&self) -> Option<String> {
+        None
+    }
+
+    /// Consulted once per disk-tier store attempt.
+    fn on_disk_store(&self) -> Option<DiskFault> {
+        None
+    }
+
+    /// Consulted once per remote-tier call; `peer` is the target
+    /// address (informational — ordinals script the schedule).
+    fn on_peer_call(&self, peer: &str) -> Option<PeerFault> {
+        let _ = peer;
+        None
+    }
+
+    /// Consulted once per outbound `cache-state` reply frame on the
+    /// wire server; `true` corrupts that frame's body.
+    fn on_frame_out(&self) -> bool {
+        false
+    }
+}
+
+/// A cloneable, comparable handle to an optional [`FaultHook`] — the
+/// form fault injection takes in configuration structs. The default
+/// ([`Faults::none`]) is inert; every injection site reduces to one
+/// `Option` check.
+///
+/// Equality compares *activeness* only (hooked vs not), because
+/// configs that derive `PartialEq` cannot compare trait objects — and
+/// two configs differing only in which plan they carry are, for
+/// config-equality purposes, both "a faulted config".
+#[derive(Clone, Default)]
+pub struct Faults(Option<Arc<dyn FaultHook>>);
+
+impl Faults {
+    /// The inert handle: no hook, no faults, no overhead.
+    pub fn none() -> Self {
+        Faults(None)
+    }
+
+    /// A handle carrying the given hook.
+    pub fn hooked(hook: Arc<dyn FaultHook>) -> Self {
+        Faults(Some(hook))
+    }
+
+    /// The installed hook, if any — the single guard every injection
+    /// site branches on.
+    pub fn get(&self) -> Option<&Arc<dyn FaultHook>> {
+        self.0.as_ref()
+    }
+
+    /// Whether a hook is installed.
+    pub fn is_active(&self) -> bool {
+        self.0.is_some()
+    }
+}
+
+impl fmt::Debug for Faults {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Faults({})", if self.is_active() { "on" } else { "off" })
+    }
+}
+
+impl PartialEq for Faults {
+    fn eq(&self, other: &Self) -> bool {
+        self.is_active() == other.is_active()
+    }
+}
+
+/// How many scripted events each site has actually fired — the test
+/// assertion that a chaos plan *exercised* what it scripted, not just
+/// scheduled it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FiredCounts {
+    /// Launch panics delivered by [`FaultHook::on_launch`].
+    pub launch_panics: u64,
+    /// Disk faults delivered by [`FaultHook::on_disk_store`].
+    pub disk_faults: u64,
+    /// Peer faults delivered by [`FaultHook::on_peer_call`].
+    pub peer_faults: u64,
+    /// Frames corrupted by [`FaultHook::on_frame_out`].
+    pub frames_corrupted: u64,
+}
+
+/// A deterministic scripted fault plan: per-site atomic ordinal
+/// counters plus maps from 1-based ordinals to events. Build with the
+/// consuming builder methods, freeze behind an `Arc`, install via
+/// [`Faults::hooked`]. See the module docs for the determinism
+/// argument.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    panics: BTreeSet<u64>,
+    disk: BTreeMap<u64, DiskFault>,
+    peer: BTreeMap<u64, PeerFault>,
+    frames: BTreeSet<u64>,
+    launch_seen: AtomicU64,
+    disk_seen: AtomicU64,
+    peer_seen: AtomicU64,
+    frame_seen: AtomicU64,
+    launch_fired: AtomicU64,
+    disk_fired: AtomicU64,
+    peer_fired: AtomicU64,
+    frame_fired: AtomicU64,
+}
+
+impl FaultPlan {
+    /// An empty plan (injects nothing until scripted).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Script a panic on the `n`th backend launch (1-based).
+    pub fn panic_on_launch(mut self, n: u64) -> Self {
+        self.panics.insert(n);
+        self
+    }
+
+    /// Script a fault on the `n`th disk store attempt (1-based).
+    pub fn disk_fault(mut self, n: u64, fault: DiskFault) -> Self {
+        self.disk.insert(n, fault);
+        self
+    }
+
+    /// Script a fault on the `n`th remote-peer call (1-based).
+    pub fn peer_fault(mut self, n: u64, fault: PeerFault) -> Self {
+        self.peer.insert(n, fault);
+        self
+    }
+
+    /// Script corruption of the `n`th outbound `cache-state` frame
+    /// (1-based).
+    pub fn corrupt_frame(mut self, n: u64) -> Self {
+        self.frames.insert(n);
+        self
+    }
+
+    /// How many events each site has fired so far.
+    pub fn fired(&self) -> FiredCounts {
+        FiredCounts {
+            launch_panics: self.launch_fired.load(Ordering::SeqCst),
+            disk_faults: self.disk_fired.load(Ordering::SeqCst),
+            peer_faults: self.peer_fired.load(Ordering::SeqCst),
+            frames_corrupted: self.frame_fired.load(Ordering::SeqCst),
+        }
+    }
+
+    /// How many times each site has been *consulted* (fired or not) —
+    /// useful when sizing ordinals for a new plan.
+    pub fn seen(&self) -> FiredCounts {
+        FiredCounts {
+            launch_panics: self.launch_seen.load(Ordering::SeqCst),
+            disk_faults: self.disk_seen.load(Ordering::SeqCst),
+            peer_faults: self.peer_seen.load(Ordering::SeqCst),
+            frames_corrupted: self.frame_seen.load(Ordering::SeqCst),
+        }
+    }
+}
+
+impl FaultHook for FaultPlan {
+    fn on_launch(&self) -> Option<String> {
+        let n = self.launch_seen.fetch_add(1, Ordering::SeqCst) + 1;
+        if self.panics.contains(&n) {
+            self.launch_fired.fetch_add(1, Ordering::SeqCst);
+            Some(format!("fault injection: scripted panic on launch #{n}"))
+        } else {
+            None
+        }
+    }
+
+    fn on_disk_store(&self) -> Option<DiskFault> {
+        let n = self.disk_seen.fetch_add(1, Ordering::SeqCst) + 1;
+        let fault = self.disk.get(&n).copied();
+        if fault.is_some() {
+            self.disk_fired.fetch_add(1, Ordering::SeqCst);
+        }
+        fault
+    }
+
+    fn on_peer_call(&self, _peer: &str) -> Option<PeerFault> {
+        let n = self.peer_seen.fetch_add(1, Ordering::SeqCst) + 1;
+        let fault = self.peer.get(&n).copied();
+        if fault.is_some() {
+            self.peer_fired.fetch_add(1, Ordering::SeqCst);
+        }
+        fault
+    }
+
+    fn on_frame_out(&self) -> bool {
+        let n = self.frame_seen.fetch_add(1, Ordering::SeqCst) + 1;
+        let hit = self.frames.contains(&n);
+        if hit {
+            self.frame_fired.fetch_add(1, Ordering::SeqCst);
+        }
+        hit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_hook_methods_inject_nothing() {
+        struct Nop;
+        impl FaultHook for Nop {}
+        let nop = Nop;
+        assert_eq!(nop.on_launch(), None);
+        assert_eq!(nop.on_disk_store(), None);
+        assert_eq!(nop.on_peer_call("127.0.0.1:1"), None);
+        assert!(!nop.on_frame_out());
+    }
+
+    #[test]
+    fn plan_fires_on_exact_ordinals_and_counts_what_fired() {
+        let plan = FaultPlan::new()
+            .panic_on_launch(2)
+            .disk_fault(1, DiskFault::ShortWrite)
+            .disk_fault(3, DiskFault::IoError)
+            .peer_fault(2, PeerFault::Refuse)
+            .corrupt_frame(1);
+        assert_eq!(plan.on_launch(), None, "launch #1 clean");
+        let msg = plan.on_launch().expect("launch #2 scripted");
+        assert!(msg.contains("#2"), "panic message names the ordinal: {msg}");
+        assert_eq!(plan.on_launch(), None, "launch #3 clean again");
+
+        assert_eq!(plan.on_disk_store(), Some(DiskFault::ShortWrite));
+        assert_eq!(plan.on_disk_store(), None);
+        assert_eq!(plan.on_disk_store(), Some(DiskFault::IoError));
+
+        assert_eq!(plan.on_peer_call("a"), None);
+        assert_eq!(plan.on_peer_call("b"), Some(PeerFault::Refuse));
+
+        assert!(plan.on_frame_out());
+        assert!(!plan.on_frame_out());
+
+        let fired = plan.fired();
+        assert_eq!(
+            fired,
+            FiredCounts { launch_panics: 1, disk_faults: 2, peer_faults: 1, frames_corrupted: 1 }
+        );
+        let seen = plan.seen();
+        assert_eq!(seen.launch_panics, 3, "three launches consulted");
+        assert_eq!(seen.disk_faults, 3);
+        assert_eq!(seen.peer_faults, 2);
+        assert_eq!(seen.frames_corrupted, 2);
+    }
+
+    #[test]
+    fn plan_is_deterministic_under_concurrent_consultation() {
+        // 8 threads × 16 launches, panics scripted at 5 and 100 (the
+        // second never reached): exactly one thread observes a panic
+        // regardless of interleaving.
+        let plan = Arc::new(FaultPlan::new().panic_on_launch(5).panic_on_launch(100));
+        let hits: u64 = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    let plan = plan.clone();
+                    s.spawn(move || {
+                        (0..16).filter(|_| plan.on_launch().is_some()).count() as u64
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        assert_eq!(hits, 1, "ordinal 5 fires exactly once across threads");
+        assert_eq!(plan.seen().launch_panics, 128);
+    }
+
+    #[test]
+    fn faults_handle_compares_by_activeness_and_prints_state() {
+        let off = Faults::none();
+        let on = Faults::hooked(Arc::new(FaultPlan::new()));
+        let also_on = Faults::hooked(Arc::new(FaultPlan::new().corrupt_frame(1)));
+        assert_eq!(off, Faults::default());
+        assert_ne!(off, on);
+        assert_eq!(on, also_on, "two hooked handles compare equal");
+        assert!(!off.is_active() && off.get().is_none());
+        assert!(on.is_active() && on.get().is_some());
+        assert_eq!(format!("{off:?}"), "Faults(off)");
+        assert_eq!(format!("{on:?}"), "Faults(on)");
+    }
+
+    #[test]
+    fn delay_fault_carries_its_duration() {
+        let plan = FaultPlan::new().peer_fault(1, PeerFault::Delay(Duration::from_millis(7)));
+        assert_eq!(plan.on_peer_call("x"), Some(PeerFault::Delay(Duration::from_millis(7))));
+    }
+}

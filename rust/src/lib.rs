@@ -23,6 +23,10 @@
 //!   artifacts (`artifacts/*.hlo.txt`); python never runs at request time.
 //! * [`coordinator`] — demand-driven manager/worker execution of merged
 //!   plans with per-worker task scheduling and dependency resolution.
+//! * [`faults`] — deterministic, scripted fault injection (worker
+//!   panics, torn disk writes, peer flap, frame corruption) behind a
+//!   zero-cost-when-disabled hook, driving the self-healing paths
+//!   (retries, circuit breaker, disk quarantine) in `tests/chaos.rs`.
 //! * [`serve`] — the multi-tenant study service: one process-lifetime
 //!   shared cache + engine serving many concurrent studies, with
 //!   weighted-fair admission, per-tenant byte quotas and accounting,
@@ -51,6 +55,7 @@ pub mod coordinator;
 pub mod data;
 pub mod driver;
 pub mod error;
+pub mod faults;
 pub mod jsonx;
 pub mod merging;
 pub mod runtime;

@@ -102,6 +102,8 @@ fn print_help() {
            priority=T:W       admission weight for tenant T (weighted fair, default 1)\n\
            quota=MB           per-tenant memory-tier byte quota (quota=T:MB overrides)\n\
            warm-start=on|off  pre-admit disk-tier entries at boot (default: on with cache-dir)\n\
+           retries=2          extra attempts a failed job gets before it is billed FAILED\n\
+           window=64          per-connection submit window (undelivered jobs; wire mode)\n\
            tenants=2          demo mode: N tenants ...\n\
            jobs-per-tenant=1  ... each submitting this many identical studies\n\
            jobs=FILE          per-line jobs: `tenant=NAME [kind=study|tune] [opts]`\n\
@@ -306,11 +308,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         for j in &outcome.jobs {
             let status = if j.ok() { "ok" } else { "FAILED" };
             println!(
-                "job {} tenant={} {status} launches={} cached={} evals={} wall={}",
+                "job {} tenant={} {status} launches={} cached={} retries={} evals={} wall={}",
                 j.job,
                 j.tenant,
                 j.launches,
                 j.cached_tasks,
+                j.retries,
                 j.n_evals,
                 fmt_secs(j.exec_wall_secs)
             );
@@ -332,8 +335,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         }
         if let Some(bill) = &outcome.bill {
             let mut t = Table::new(&[
-                "tenant", "jobs", "launches", "cached", "hits", "misses", "quota MiB",
-                "resident KiB",
+                "tenant", "jobs", "launches", "cached", "retries", "hits", "misses",
+                "quota MiB", "resident KiB",
             ]);
             for ten in &bill.tenants {
                 t.row(&[
@@ -341,6 +344,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                     ten.jobs.to_string(),
                     ten.launches.to_string(),
                     ten.cached_tasks.to_string(),
+                    ten.retries.to_string(),
                     (ten.cache.hits + ten.cache.disk_hits).to_string(),
                     ten.cache.misses.to_string(),
                     fmt_quota(ten.quota_bytes),
@@ -349,9 +353,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             }
             t.print("drain bill (per tenant, from the drained service)");
             println!(
-                "drain bill: {} jobs ({} failed), {} total launches, service wall {}",
+                "drain bill: {} jobs ({} failed, {} retried attempts), {} total launches, \
+                 service wall {}",
                 bill.jobs,
                 bill.failed,
+                bill.retries,
                 bill.total_launches,
                 fmt_secs(bill.wall_secs)
             );
@@ -380,12 +386,15 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     );
     let svc = StudyService::start(opts)?;
     let warm = svc.warm_start_report();
-    if warm.scanned > 0 {
+    if warm.scanned > 0 || warm.swept > 0 {
         println!(
-            "warm-start: scanned {} disk entries, admitted {} ({} KiB) into memory",
+            "warm-start: scanned {} disk entries, admitted {} ({} KiB) into memory, \
+             swept {} crash debris, reloaded {} comparison metrics",
             warm.scanned,
             warm.admitted,
-            warm.admitted_bytes / 1024
+            warm.admitted_bytes / 1024,
+            warm.swept,
+            warm.metrics_loaded
         );
     }
 
@@ -443,7 +452,7 @@ fn fmt_quota(quota_bytes: u64) -> String {
 /// The drained service's bill, as printed by every serve mode.
 fn print_service_report(report: &rtf_reuse::serve::ServiceReport) {
     let mut t = Table::new(&[
-        "tenant", "jobs", "failed", "launches", "cached", "hits", "misses", "hit %",
+        "tenant", "jobs", "failed", "retries", "launches", "cached", "hits", "misses", "hit %",
         "served KiB", "quota MiB", "resident KiB", "evict", "exec wall",
     ]);
     for ten in &report.tenants {
@@ -451,6 +460,7 @@ fn print_service_report(report: &rtf_reuse::serve::ServiceReport) {
             ten.tenant.clone(),
             ten.jobs.to_string(),
             ten.failed.to_string(),
+            ten.retries.to_string(),
             ten.launches.to_string(),
             ten.cached_tasks.to_string(),
             (ten.cache.hits + ten.cache.disk_hits).to_string(),
@@ -464,19 +474,24 @@ fn print_service_report(report: &rtf_reuse::serve::ServiceReport) {
         ]);
     }
     t.print("per-tenant bill (one shared reuse cache)");
+    let retried: u64 = report.jobs.iter().map(|j| j.retries).sum();
     println!(
-        "service: {} jobs, {} total launches ({} shared input launches), wall {}",
+        "service: {} jobs ({retried} retried attempts), {} total launches \
+         ({} shared input launches), wall {}",
         report.jobs.len(),
         report.total_launches(),
         report.input_launches,
         fmt_secs(report.wall.as_secs_f64())
     );
-    if report.warm.scanned > 0 {
+    if report.warm.scanned > 0 || report.warm.swept > 0 {
         println!(
-            "warm-start: {} of {} scanned disk entries were pre-admitted ({} KiB)",
+            "warm-start: {} of {} scanned disk entries were pre-admitted ({} KiB), \
+             {} crash debris swept, {} comparison metrics reloaded",
             report.warm.admitted,
             report.warm.scanned,
-            report.warm.admitted_bytes / 1024
+            report.warm.admitted_bytes / 1024,
+            report.warm.swept,
+            report.warm.metrics_loaded
         );
     }
     let g = report.cache;

@@ -33,6 +33,18 @@
 //!   [`crate::cache::ScopedCounters`] that every counted cache
 //!   operation is mirrored into — the multi-tenant service's per-tenant
 //!   ledger.
+//! * **Bounded waits.** A wait on a foreign in-flight key is sliced
+//!   ([`FLIGHT_WAIT_SLICE`]) and re-resolved rather than parked
+//!   indefinitely: if the claimant died wedged (e.g. a remote node that
+//!   vanished mid-claim), the claim eventually expires or is released
+//!   and this engine re-claims — duplicate work in the worst case,
+//!   never a deadlock.
+//! * **Fault injection.** [`PjrtEngine::set_fault_hook`] installs a
+//!   [`crate::faults::FaultHook`] consulted before every backend
+//!   launch; a scripted [`crate::faults::FaultHook::on_launch`] fault
+//!   panics the worker thread exactly as a real backend crash would,
+//!   exercising the retry/claim-release paths above. Disabled (the
+//!   default), the check is one `Option` test.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -42,6 +54,7 @@ use crate::cache::{
     CacheCtx, FlightClaims, Key, MetricsClaim, ReuseCache, ScopedCounters, StateClaim,
 };
 use crate::data::Plane;
+use crate::faults::Faults;
 use crate::{Error, Result};
 
 use super::manifest::ArtifactManifest;
@@ -236,6 +249,9 @@ pub struct PjrtEngine {
     /// literals: repeat hits on a key are refcount bumps, not
     /// conversions. Bounded by [`LIT_MEMO_CAP`].
     lit_memo: HashMap<Key, [xla::Literal; 3]>,
+    /// Fault-injection hook consulted before every backend launch
+    /// (inactive by default; see the module docs).
+    faults: Faults,
 }
 
 /// Capacity of the per-engine hit-conversion memo. Crossing it clears
@@ -243,6 +259,13 @@ pub struct PjrtEngine {
 /// hot); entries are `Literal` handles, so the footprint is tile-sized
 /// per key.
 const LIT_MEMO_CAP: usize = 256;
+
+/// How long the engine parks on a foreign in-flight key before
+/// re-resolving it. Long enough that the periodic re-poll is free under
+/// healthy operation (publications wake waiters immediately through the
+/// condvar); short enough that a wedged claimant — a crashed peer whose
+/// remote claim must age out — stalls a waiter by seconds, not forever.
+const FLIGHT_WAIT_SLICE: Duration = Duration::from_secs(5);
 
 impl PjrtEngine {
     /// Load + compile all artifacts in `dir`.
@@ -277,6 +300,7 @@ impl PjrtEngine {
             cache: None,
             ctx: CacheCtx::default(),
             lit_memo: HashMap::new(),
+            faults: Faults::none(),
         })
     }
 
@@ -290,6 +314,21 @@ impl PjrtEngine {
     /// (see [`ScopedCounters`]); only meaningful with a cache attached.
     pub fn set_cache_scope(&mut self, scope: Arc<ScopedCounters>) {
         self.ctx = CacheCtx::scoped(scope);
+    }
+
+    /// Install a fault-injection hook consulted before every backend
+    /// launch (see the module docs). Inactive hooks cost one `Option`
+    /// test per launch.
+    pub fn set_fault_hook(&mut self, faults: Faults) {
+        self.faults = faults;
+    }
+
+    /// Consult the fault hook before a backend launch; a scripted fault
+    /// panics this worker thread exactly like a real backend crash.
+    fn check_launch_fault(&self) {
+        if let Some(msg) = self.faults.get().and_then(|h| h.on_launch()) {
+            panic!("{msg}");
+        }
     }
 
     /// The attached reuse cache, if any.
@@ -408,6 +447,7 @@ impl PjrtEngine {
         params: &[f32],
     ) -> Result<[xla::Literal; 3]> {
         self.require_chain(id)?;
+        self.check_launch_fault();
         let start = Instant::now();
         let pl = self.param_literal(params)?;
         let inputs: [&xla::Literal; 4] = [&state[0], &state[1], &state[2], &pl];
@@ -469,8 +509,12 @@ impl PjrtEngine {
                         claims.settle(k);
                         return Ok((out, false));
                     }
-                    // holding no claim of our own: safe to block
-                    StateClaim::InFlight => cache.wait_for_flight(k),
+                    // holding no claim of our own: safe to block — but
+                    // bounded, so a wedged claimant is re-resolved, not
+                    // waited on forever
+                    StateClaim::InFlight => {
+                        cache.wait_for_flight_for(k, FLIGHT_WAIT_SLICE);
+                    }
                 }
             }
         }
@@ -550,6 +594,7 @@ impl PjrtEngine {
                 }
             }
             if !exec.is_empty() {
+                self.check_launch_fault();
                 let start = Instant::now();
                 let mut padded: Vec<Vec<f32>> = Vec::with_capacity(exec.len());
                 for &i in &exec {
@@ -583,9 +628,10 @@ impl PjrtEngine {
                 break;
             }
             // every claim of this call is published: safe to block on a
-            // foreign flight, then re-resolve the still-pending lanes
+            // foreign flight (bounded — a wedged claimant is re-resolved
+            // next round), then re-resolve the still-pending lanes
             if let (Some(c), Some(k)) = (&cache, keys[waiting[0]]) {
-                c.wait_for_flight(k);
+                c.wait_for_flight_for(k, FLIGHT_WAIT_SLICE);
             }
             pending = waiting;
         }
@@ -627,7 +673,9 @@ impl PjrtEngine {
                         claims.settle(k);
                         return Ok((m, false));
                     }
-                    MetricsClaim::InFlight => cache.wait_for_flight(k),
+                    MetricsClaim::InFlight => {
+                        cache.wait_for_flight_for(k, FLIGHT_WAIT_SLICE);
+                    }
                 }
             }
         }
@@ -656,6 +704,7 @@ impl PjrtEngine {
         reference: &Plane,
     ) -> Result<[f32; 3]> {
         let id = self.compare_id;
+        self.check_launch_fault();
         let start = Instant::now();
         let inputs = vec![
             self.plane_literal(&state[0])?,

@@ -67,8 +67,12 @@ use super::service::{JobReport, ServiceReport};
 /// `submit-tune` job kind and the optional `tune` block on
 /// `job-report`; v3 — adds the cluster cache fabric (`cache-get`,
 /// `cache-state`, `cache-put`, `cache-ok`) and the `remote_hits` field
-/// on every wire `cache` object.
-pub const PROTOCOL_VERSION: u32 = 3;
+/// on every wire `cache` object; v4 — adds the `retries` field to
+/// `job-report`, the per-tenant bill rows and the bill (retried
+/// attempts billed distinctly), the `warm_swept`/`warm_metrics` fields
+/// to the bill's warm-start block, and the `over-window` error code
+/// (per-connection submit backpressure).
+pub const PROTOCOL_VERSION: u32 = 4;
 
 /// Frame tag: protocol name plus frame-format version.
 pub const FRAME_TAG: &str = "rtfp1";
@@ -93,6 +97,10 @@ pub mod codes {
     pub const DRAINING: &str = "draining";
     /// A `result` asked for a job id the service never issued.
     pub const UNKNOWN_JOB: &str = "unknown-job";
+    /// The connection has too many unanswered submits in flight
+    /// (protocol v4); collect some `result`s, then submit again. The
+    /// connection stays usable.
+    pub const OVER_WINDOW: &str = "over-window";
     /// Unexpected server-side failure.
     pub const INTERNAL: &str = "internal";
 }
@@ -264,6 +272,8 @@ pub struct WireJobReport {
     pub launches: u64,
     /// Task executions served from the shared cache.
     pub cached_tasks: u64,
+    /// Retried attempts this job consumed (protocol v4).
+    pub retries: u64,
     pub queue_wait_secs: f64,
     pub exec_wall_secs: f64,
     /// Per-evaluation scalar outputs (the SA estimator inputs). For a
@@ -288,6 +298,7 @@ impl From<&JobReport> for WireJobReport {
             n_evals: j.n_evals as u64,
             launches: j.launches,
             cached_tasks: j.cached_tasks,
+            retries: j.retries,
             queue_wait_secs: j.queue_wait.as_secs_f64(),
             exec_wall_secs: j.exec_wall.as_secs_f64(),
             y: j.y.clone(),
@@ -306,6 +317,8 @@ pub struct WireTenantBill {
     pub failed: u64,
     pub launches: u64,
     pub cached_tasks: u64,
+    /// Retried attempts across this tenant's jobs (protocol v4).
+    pub retries: u64,
     pub bytes_served: u64,
     pub quota_bytes: u64,
     pub queue_wait_secs: f64,
@@ -319,6 +332,8 @@ pub struct WireTenantBill {
 pub struct WireBill {
     pub jobs: u64,
     pub failed: u64,
+    /// Retried attempts across every job (protocol v4).
+    pub retries: u64,
     /// Launches spent building shared study inputs (not billed to any
     /// tenant).
     pub input_launches: u64,
@@ -332,6 +347,12 @@ pub struct WireBill {
     pub warm_scanned: u64,
     pub warm_admitted: u64,
     pub warm_admitted_bytes: u64,
+    /// Crash debris (orphaned temp files, quarantined entries) the boot
+    /// warm start swept from the disk tier (protocol v4).
+    pub warm_swept: u64,
+    /// Persisted comparison-metric rows the warm start reloaded
+    /// (protocol v4) — comparisons a warm restart will not relaunch.
+    pub warm_metrics: u64,
 }
 
 impl From<&ServiceReport> for WireBill {
@@ -339,6 +360,7 @@ impl From<&ServiceReport> for WireBill {
         WireBill {
             jobs: r.jobs.len() as u64,
             failed: r.jobs.iter().filter(|j| !j.ok()).count() as u64,
+            retries: r.jobs.iter().map(|j| j.retries).sum(),
             input_launches: r.input_launches,
             total_launches: r.total_launches(),
             wall_secs: r.wall.as_secs_f64(),
@@ -351,6 +373,7 @@ impl From<&ServiceReport> for WireBill {
                     failed: t.failed,
                     launches: t.launches,
                     cached_tasks: t.cached_tasks,
+                    retries: t.retries,
                     bytes_served: t.bytes_served,
                     quota_bytes: t.quota_bytes,
                     queue_wait_secs: t.queue_wait.as_secs_f64(),
@@ -362,6 +385,8 @@ impl From<&ServiceReport> for WireBill {
             warm_scanned: r.warm.scanned,
             warm_admitted: r.warm.admitted,
             warm_admitted_bytes: r.warm.admitted_bytes,
+            warm_swept: r.warm.swept,
+            warm_metrics: r.warm.metrics_loaded,
         }
     }
 }
@@ -636,6 +661,7 @@ impl WireJobReport {
             ("n_evals", ju(self.n_evals)),
             ("launches", ju(self.launches)),
             ("cached_tasks", ju(self.cached_tasks)),
+            ("retries", ju(self.retries)),
             ("queue_wait_secs", jf(self.queue_wait_secs)),
             ("exec_wall_secs", jf(self.exec_wall_secs)),
             ("y", Json::Arr(self.y.iter().map(|&v| Json::Num(v)).collect())),
@@ -661,6 +687,7 @@ impl WireJobReport {
             n_evals: u64_field(o, "n_evals")?,
             launches: u64_field(o, "launches")?,
             cached_tasks: u64_field(o, "cached_tasks")?,
+            retries: u64_field(o, "retries")?,
             queue_wait_secs: f64_field(o, "queue_wait_secs")?,
             exec_wall_secs: f64_field(o, "exec_wall_secs")?,
             y: f64_arr(o, "y")?,
@@ -677,6 +704,7 @@ impl WireTenantBill {
             ("failed", ju(self.failed)),
             ("launches", ju(self.launches)),
             ("cached_tasks", ju(self.cached_tasks)),
+            ("retries", ju(self.retries)),
             ("bytes_served", ju(self.bytes_served)),
             ("quota_bytes", ju(self.quota_bytes)),
             ("queue_wait_secs", jf(self.queue_wait_secs)),
@@ -692,6 +720,7 @@ impl WireTenantBill {
             failed: u64_field(o, "failed")?,
             launches: u64_field(o, "launches")?,
             cached_tasks: u64_field(o, "cached_tasks")?,
+            retries: u64_field(o, "retries")?,
             bytes_served: u64_field(o, "bytes_served")?,
             quota_bytes: u64_field(o, "quota_bytes")?,
             queue_wait_secs: f64_field(o, "queue_wait_secs")?,
@@ -707,6 +736,7 @@ impl WireBill {
             ("type", js("bill")),
             ("jobs", ju(self.jobs)),
             ("failed", ju(self.failed)),
+            ("retries", ju(self.retries)),
             ("input_launches", ju(self.input_launches)),
             ("total_launches", ju(self.total_launches)),
             ("wall_secs", jf(self.wall_secs)),
@@ -715,6 +745,8 @@ impl WireBill {
             ("warm_scanned", ju(self.warm_scanned)),
             ("warm_admitted", ju(self.warm_admitted)),
             ("warm_admitted_bytes", ju(self.warm_admitted_bytes)),
+            ("warm_swept", ju(self.warm_swept)),
+            ("warm_metrics", ju(self.warm_metrics)),
         ])
     }
 
@@ -726,6 +758,7 @@ impl WireBill {
         Ok(WireBill {
             jobs: u64_field(o, "jobs")?,
             failed: u64_field(o, "failed")?,
+            retries: u64_field(o, "retries")?,
             input_launches: u64_field(o, "input_launches")?,
             total_launches: u64_field(o, "total_launches")?,
             wall_secs: f64_field(o, "wall_secs")?,
@@ -734,6 +767,8 @@ impl WireBill {
             warm_scanned: u64_field(o, "warm_scanned")?,
             warm_admitted: u64_field(o, "warm_admitted")?,
             warm_admitted_bytes: u64_field(o, "warm_admitted_bytes")?,
+            warm_swept: u64_field(o, "warm_swept")?,
+            warm_metrics: u64_field(o, "warm_metrics")?,
         })
     }
 }
@@ -915,6 +950,7 @@ mod tests {
             n_evals: 16,
             launches: 120,
             cached_tasks: 40,
+            retries: 1,
             queue_wait_secs: 0.25,
             exec_wall_secs: 1.5,
             y: vec![0.5, 0.25],
@@ -942,16 +978,20 @@ mod tests {
         roundtrip(Message::Drain);
         roundtrip(Message::Bill(Box::new(WireBill {
             jobs: 2,
+            retries: 3,
             total_launches: 99,
             tenants: vec![WireTenantBill {
                 tenant: "alice".into(),
                 jobs: 1,
                 launches: 90,
+                retries: 3,
                 quota_bytes: 1 << 20,
                 cache: CacheStats { hits: 5, misses: 4, ..CacheStats::default() },
                 ..WireTenantBill::default()
             }],
             warm_admitted: 12,
+            warm_swept: 2,
+            warm_metrics: 7,
             ..WireBill::default()
         })));
         roundtrip(Message::Error { code: codes::DRAINING.into(), message: "late".into() });

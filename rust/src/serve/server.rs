@@ -11,6 +11,15 @@
 //! down; [`WireServer::run`] then returns the same [`ServiceReport`]
 //! the in-process path gets, so the operator's exit report is identical
 //! either way.
+//!
+//! # Backpressure
+//!
+//! Each connection has a submit window (`window=N`, rtfp v4): the
+//! number of jobs it has submitted but not yet collected with `result`.
+//! A `submit` past the window is answered with an `over-window` error
+//! frame and the connection stays usable — collect a result, submit
+//! again. This bounds the queue growth any one client can cause without
+//! touching tenant quotas (which meter bytes, not queue depth).
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -22,8 +31,8 @@ use crate::config::{StudyConfig, TuneConfig};
 use crate::{Error, Result};
 
 use super::protocol::{
-    codes, planes_from_hex, read_frame, write_frame, Message, WireBill, WireCacheState,
-    WireJobReport, PROTOCOL_VERSION,
+    codes, encode_frame, planes_from_hex, read_frame, write_frame, Message, WireBill,
+    WireCacheState, WireJobReport, PROTOCOL_VERSION,
 };
 use super::service::{ServiceReport, StudyJob, StudyService};
 
@@ -118,6 +127,12 @@ fn handle_conn(
         Err(e) => return refuse(&mut writer, codes::BAD_FRAME, &e.to_string()),
     }
 
+    // submit window: jobs this connection accepted but has not yet
+    // collected; a submit past the cap gets `over-window`, not a queue
+    // slot (the connection itself stays fine)
+    let window = svc.submit_window();
+    let mut undelivered: std::collections::HashSet<u64> = std::collections::HashSet::new();
+
     loop {
         let msg = match read_frame(&mut reader) {
             Ok(Some(m)) => m,
@@ -126,16 +141,32 @@ fn handle_conn(
             Err(e) => return refuse(&mut writer, codes::BAD_FRAME, &e.to_string()),
         };
         let reply = match msg {
+            Message::Submit { .. } | Message::SubmitTune { .. }
+                if undelivered.len() >= window =>
+            {
+                let msg = format!(
+                    "connection holds {} undelivered jobs (window={window}); \
+                     collect a result before submitting more",
+                    undelivered.len()
+                );
+                error_msg(codes::OVER_WINDOW, &msg)
+            }
             Message::Submit { tenant, study } => match StudyConfig::from_args(&study) {
                 Ok(cfg) => match svc.submit(StudyJob { tenant, cfg }) {
-                    Ok(job) => Message::Accepted { job },
+                    Ok(job) => {
+                        undelivered.insert(job);
+                        Message::Accepted { job }
+                    }
                     Err(e) => error_msg(codes::DRAINING, &e.to_string()),
                 },
                 Err(e) => error_msg(codes::BAD_STUDY, &e.to_string()),
             },
             Message::SubmitTune { tenant, tune } => match TuneConfig::from_args(&tune) {
                 Ok(tc) => match svc.submit_tune(tenant, tc.study, tc.options) {
-                    Ok(job) => Message::Accepted { job },
+                    Ok(job) => {
+                        undelivered.insert(job);
+                        Message::Accepted { job }
+                    }
                     Err(e) => error_msg(codes::DRAINING, &e.to_string()),
                 },
                 Err(e) => error_msg(codes::BAD_STUDY, &e.to_string()),
@@ -146,7 +177,10 @@ fn handle_conn(
                 done: svc.completed() as u64,
             },
             Message::Result { job } => match svc.wait_job(job) {
-                Some(done) => Message::JobDone(Box::new(WireJobReport::from(&done))),
+                Some(done) => {
+                    undelivered.remove(&job);
+                    Message::JobDone(Box::new(WireJobReport::from(&done)))
+                }
                 None => error_msg(codes::UNKNOWN_JOB, &format!("no job with id {job}")),
             },
             Message::Drain => {
@@ -188,7 +222,25 @@ fn handle_conn(
                 error_msg(codes::BAD_MESSAGE, &msg)
             }
         };
-        write_frame(&mut writer, &reply)?;
+        // fault injection: a scripted hook can mangle an outbound
+        // cache-state frame — exercises the *peer's* recovery path (it
+        // must treat the garbage as a miss, not wedge). Only peer
+        // traffic is eligible; client-facing frames have no scripted
+        // reader on the other end
+        let corrupt = matches!(reply, Message::CacheState(_))
+            && svc.faults().get().is_some_and(|h| h.on_frame_out());
+        if corrupt {
+            let mut bytes = encode_frame(&reply);
+            // flip the first body byte (`{` becomes `[`): the frame
+            // header still parses, the body fails JSON decoding
+            let body = bytes.iter().position(|&b| b == b'\n').map_or(0, |p| p + 1);
+            if body < bytes.len() {
+                bytes[body] ^= 0x20;
+            }
+            writer.write_all(&bytes).map_err(Error::Io)?;
+        } else {
+            write_frame(&mut writer, &reply)?;
+        }
         writer.flush().map_err(Error::Io)?;
     }
 }

@@ -17,6 +17,7 @@ use crate::driver::{
     make_inputs_with_engine, prepare, prepare_candidates, prune_plan_with_inputs,
     run_pjrt_with_inputs_scoped, PreparedStudy, StudyInputs,
 };
+use crate::faults::Faults;
 use crate::runtime::PjrtEngine;
 use crate::sampling::default_space;
 use crate::tune::{run_tune, TuneOptions, TuneSummary};
@@ -63,6 +64,32 @@ pub struct ServeOptions {
     /// This node's address as it appears in `peers` (the `listen=`
     /// address). Required when `peers` is non-empty.
     pub cluster_addr: Option<String>,
+    /// Extra execution attempts a failed job is granted (total attempts
+    /// = `job_retries + 1`; 0 disables retry). Retries back off
+    /// exponentially with deterministic per-(job, attempt) jitter and
+    /// are billed distinctly ([`JobReport::retries`]).
+    pub job_retries: u32,
+    /// Wall-clock budget per job across all of its attempts: once
+    /// elapsed, a failed attempt is not retried. `None` = attempts are
+    /// bounded only by `job_retries`.
+    pub job_deadline: Option<Duration>,
+    /// How long [`StudyService::drain`] waits for in-flight work before
+    /// abandoning unfinished worker threads (they are detached, their
+    /// jobs missing from the report — shutdown is never wedged by one
+    /// stuck study). `None` waits forever.
+    pub drain_deadline: Option<Duration>,
+    /// Per-connection backpressure window for the wire server: the most
+    /// submits one connection may have unanswered (neither `result`ed
+    /// nor failed) before further submits are refused with an
+    /// `over-window` error frame.
+    pub submit_window: usize,
+    /// Fault-injection hook (see [`crate::faults`]) threaded into the
+    /// shared cache's disk tier, the remote tier, the wire server's
+    /// outbound frames, and every *study* worker engine. The leader
+    /// engine (shared input building) deliberately never sees faults —
+    /// a scripted panic there would poison the service-wide memo, which
+    /// is not a failure mode the harness targets.
+    pub faults: Faults,
 }
 
 impl Default for ServeOptions {
@@ -81,9 +108,21 @@ impl Default for ServeOptions {
             warm_start: false,
             peers: Vec::new(),
             cluster_addr: None,
+            job_retries: DEFAULT_JOB_RETRIES,
+            job_deadline: None,
+            drain_deadline: Some(DEFAULT_DRAIN_DEADLINE),
+            submit_window: DEFAULT_SUBMIT_WINDOW,
+            faults: Faults::none(),
         }
     }
 }
+
+/// Default extra attempts per failed job (`retries=` flag).
+pub const DEFAULT_JOB_RETRIES: u32 = 2;
+/// Default per-connection submit window (`window=` flag).
+pub const DEFAULT_SUBMIT_WINDOW: usize = 64;
+/// Default drain patience before unfinished workers are abandoned.
+pub const DEFAULT_DRAIN_DEADLINE: Duration = Duration::from_secs(600);
 
 impl ServeOptions {
     /// Build the service options a parsed `serve` CLI invocation
@@ -109,6 +148,9 @@ impl ServeOptions {
             warm_start: sc.warm_start_effective(),
             peers: sc.peers.clone(),
             cluster_addr: if sc.peers.is_empty() { None } else { sc.listen.clone() },
+            job_retries: sc.job_retries.unwrap_or(DEFAULT_JOB_RETRIES),
+            submit_window: sc.submit_window.unwrap_or(DEFAULT_SUBMIT_WINDOW),
+            ..ServeOptions::default()
         }
     }
 
@@ -159,9 +201,15 @@ pub struct JobReport {
     pub y: Vec<f64>,
     /// Tuning jobs only: what the optimizer found.
     pub tune: Option<TuneSummary>,
+    /// Execution attempts beyond the first this job consumed (each a
+    /// failed attempt that was retried). A job can succeed with
+    /// `retries > 0`; a job that failed with `retries == job_retries`
+    /// exhausted its budget.
+    pub retries: u64,
     /// Time spent queued before a worker picked the job up.
     pub queue_wait: Duration,
-    /// Wall time of the study execution itself.
+    /// Wall time of the study execution itself (the successful — or
+    /// final — attempt).
     pub exec_wall: Duration,
 }
 
@@ -179,6 +227,10 @@ pub struct TenantReport {
     pub failed: u64,
     pub launches: u64,
     pub cached_tasks: u64,
+    /// Retried attempts across this tenant's jobs (sum of per-job
+    /// [`JobReport::retries`]) — recovery work the service performed on
+    /// the tenant's behalf, billed distinctly from first attempts.
+    pub retries: u64,
     /// This tenant's scoped cache counters (hits/misses/inserts/metric
     /// rows; global-only fields zero). Tenant scopes sum exactly to the
     /// service's global [`ServiceReport::cache`] on those fields.
@@ -346,13 +398,20 @@ impl StudyService {
     /// worker pool.
     pub fn start(opts: ServeOptions) -> Result<StudyService> {
         let leader = PjrtEngine::load(&opts.artifacts_dir)?;
-        let cache = Arc::new(ReuseCache::new(opts.cache.clone()));
+        // one fault hook reaches every injectable site: the disk tier
+        // (via the cache config), the remote tier, and — through
+        // `execute_job` — the per-study worker engines
+        let mut cache_cfg = opts.cache.clone();
+        cache_cfg.faults = opts.faults.clone();
+        let cache = Arc::new(ReuseCache::new(cache_cfg));
         let warm = if opts.warm_start { cache.warm_start() } else { WarmStartReport::default() };
         if !opts.peers.is_empty() {
             let addr = opts.cluster_addr.as_deref().ok_or_else(|| {
                 Error::Config("cluster mode (peers=) needs this node's listen=ADDR".into())
             })?;
-            cache.attach_tier(Arc::new(RemoteTier::new(&opts.peers, addr)?));
+            cache.attach_tier(Arc::new(
+                RemoteTier::new(&opts.peers, addr)?.with_faults(opts.faults.clone()),
+            ));
         }
         let workers = opts.service_workers.max(1);
         let inner = Arc::new(Inner {
@@ -383,6 +442,17 @@ impl StudyService {
     /// The shared cache (diagnostics; the service owns its lifetime).
     pub fn cache(&self) -> &Arc<ReuseCache> {
         &self.inner.cache
+    }
+
+    /// The per-connection submit window the wire server enforces.
+    pub fn submit_window(&self) -> usize {
+        self.inner.opts.submit_window.max(1)
+    }
+
+    /// The service's fault-injection hook (the wire server consults it
+    /// for outbound frame corruption).
+    pub fn faults(&self) -> &Faults {
+        &self.inner.opts.faults
     }
 
     /// What the boot-time warm start scanned and admitted (zeros when
@@ -480,9 +550,7 @@ impl StudyService {
             self.inner.cv.notify_all();
         }
         let handles: Vec<JoinHandle<()>> = self.threads.lock().unwrap().drain(..).collect();
-        for t in handles {
-            let _ = t.join();
-        }
+        join_workers(handles, self.inner.opts.drain_deadline);
         let mut jobs = {
             let st = self.inner.state.lock().unwrap();
             st.results.clone()
@@ -500,6 +568,7 @@ impl StudyService {
                     failed: mine.iter().filter(|j| !j.ok()).count() as u64,
                     launches: mine.iter().map(|j| j.launches).sum(),
                     cached_tasks: mine.iter().map(|j| j.cached_tasks).sum(),
+                    retries: mine.iter().map(|j| j.retries).sum(),
                     cache: scope.stats(),
                     bytes_served: scope.state_bytes_served(),
                     quota_bytes: scope.quota_bytes(),
@@ -534,8 +603,29 @@ impl Drop for StudyService {
             self.inner.cv.notify_all();
         }
         let handles: Vec<JoinHandle<()>> = self.threads.lock().unwrap().drain(..).collect();
-        for t in handles {
-            let _ = t.join();
+        join_workers(handles, self.inner.opts.drain_deadline);
+    }
+}
+
+/// Join the worker pool with bounded patience: a thread still running
+/// when the deadline passes is abandoned (its `JoinHandle` dropped, the
+/// thread detached), so one wedged study can never block shutdown.
+/// `None` waits forever.
+fn join_workers(handles: Vec<JoinHandle<()>>, patience: Option<Duration>) {
+    let deadline = patience.map(|p| Instant::now() + p);
+    for t in handles {
+        match deadline {
+            None => {
+                let _ = t.join();
+            }
+            Some(dl) => {
+                while !t.is_finished() && Instant::now() < dl {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                if t.is_finished() {
+                    let _ = t.join();
+                }
+            }
         }
     }
 }
@@ -618,32 +708,48 @@ impl Inner {
             cached_tasks: 0,
             y: Vec::new(),
             tune: None,
+            retries: 0,
             queue_wait,
             exec_wall: Duration::ZERO,
         };
-        // a panicking study must not take the worker (and the tenant's
-        // in-flight slot) down with it
-        let outcome = catch_unwind(AssertUnwindSafe(|| self.execute_job(&tenant, &payload)));
-        match outcome {
-            Ok(Ok(out)) => {
-                report.n_evals = out.n_evals;
-                report.launches = out.launches;
-                report.cached_tasks = out.cached_tasks;
-                report.y = out.y;
-                report.tune = out.tune;
-                report.exec_wall = out.exec_wall;
+        let max_attempts = u64::from(self.opts.job_retries) + 1;
+        let deadline = self.opts.job_deadline.map(|d| Instant::now() + d);
+        let mut attempt = 0u64;
+        loop {
+            attempt += 1;
+            // a panicking study must not take the worker (and the
+            // tenant's in-flight slot) down with it
+            let outcome = catch_unwind(AssertUnwindSafe(|| self.execute_job(&tenant, &payload)));
+            let error = match outcome {
+                Ok(Ok(out)) => {
+                    report.n_evals = out.n_evals;
+                    report.launches = out.launches;
+                    report.cached_tasks = out.cached_tasks;
+                    report.y = out.y;
+                    report.tune = out.tune;
+                    report.exec_wall = out.exec_wall;
+                    report.error = None;
+                    return report;
+                }
+                Ok(Err(e)) => e.to_string(),
+                Err(panic) => {
+                    let msg = panic
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "study panicked".into());
+                    format!("panic: {msg}")
+                }
+            };
+            report.error = Some(error);
+            let budget_spent = attempt >= max_attempts;
+            let past_deadline = deadline.is_some_and(|dl| Instant::now() >= dl);
+            if budget_spent || past_deadline {
+                return report;
             }
-            Ok(Err(e)) => report.error = Some(e.to_string()),
-            Err(panic) => {
-                let msg = panic
-                    .downcast_ref::<String>()
-                    .cloned()
-                    .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
-                    .unwrap_or_else(|| "study panicked".into());
-                report.error = Some(format!("panic: {msg}"));
-            }
+            report.retries += 1;
+            std::thread::sleep(retry_backoff(id, attempt));
         }
-        report
     }
 
     fn execute_job(&self, tenant: &str, payload: &JobPayload) -> Result<ExecOut> {
@@ -657,6 +763,7 @@ impl Inner {
         cfg.artifacts_dir = self.opts.artifacts_dir.clone();
         cfg.workers = self.opts.study_workers;
         cfg.batch_width = self.opts.batch_width;
+        cfg.faults = self.opts.faults.clone();
 
         match payload {
             JobPayload::Study(_) => {
@@ -702,6 +809,21 @@ impl Inner {
             }
         }
     }
+}
+
+/// Backoff before retry `attempt + 1` of a job: 10 ms doubling per
+/// attempt, capped at 500 ms, plus up to +50% jitter derived
+/// deterministically from (job id, attempt) — concurrent retrying jobs
+/// de-synchronize, and a chaos seed replays with identical timing
+/// structure.
+fn retry_backoff(job: u64, attempt: u64) -> Duration {
+    let doubled = Duration::from_millis(10) * (1u32 << attempt.saturating_sub(1).min(6) as u32);
+    let capped = doubled.min(Duration::from_millis(500));
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for word in [job, attempt] {
+        h = (h ^ word).wrapping_mul(0x100_0000_01b3);
+    }
+    capped + capped * ((h % 50) as u32) / 100
 }
 
 /// What [`Inner::execute_job`] hands back to the report builder.
@@ -901,5 +1023,75 @@ mod tests {
         let (first, rest): (u64, u64) =
             (report.jobs[0].launches, report.jobs[1].launches + report.jobs[2].launches);
         assert!(rest < first, "warm jobs must reuse: cold {first}, warm {rest}");
+    }
+
+    #[test]
+    fn a_scripted_worker_panic_is_retried_and_billed() {
+        let plan = Arc::new(crate::faults::FaultPlan::new().panic_on_launch(1));
+        let mut o = opts(1);
+        o.faults = Faults::hooked(plan.clone());
+        o.job_retries = 2;
+        let svc = StudyService::start(o).expect("service starts");
+        svc.submit(StudyJob { tenant: "crashy".into(), cfg: small_cfg() }).unwrap();
+        let report = svc.drain();
+
+        assert_eq!(report.jobs.len(), 1);
+        assert!(report.jobs[0].ok(), "the retry must succeed: {:?}", report.jobs[0].error);
+        assert_eq!(report.jobs[0].retries, 1, "one failed attempt was retried");
+        assert_eq!(plan.fired().launch_panics, 1, "the scripted panic fired exactly once");
+        let t = report.tenant("crashy").expect("tenant report");
+        assert_eq!((t.failed, t.retries), (0, 1), "retries billed, job not failed");
+    }
+
+    #[test]
+    fn retry_budget_exhausts_into_a_failed_job() {
+        // every attempt's first launch panics: 1 + 2 retries, then final
+        let plan = Arc::new(
+            crate::faults::FaultPlan::new()
+                .panic_on_launch(1)
+                .panic_on_launch(2)
+                .panic_on_launch(3),
+        );
+        let mut o = opts(1);
+        o.faults = Faults::hooked(plan.clone());
+        o.job_retries = 2;
+        let svc = StudyService::start(o).expect("service starts");
+        svc.submit(StudyJob { tenant: "doomed".into(), cfg: small_cfg() }).unwrap();
+        let report = svc.drain();
+
+        assert!(!report.jobs[0].ok(), "budget exhausted: the failure is final");
+        let err = report.jobs[0].error.as_deref().unwrap();
+        assert!(err.contains("panic"), "the last attempt's error survives: {err}");
+        assert_eq!(report.jobs[0].retries, 2, "exactly the budgeted retries happened");
+        assert_eq!(plan.fired().launch_panics, 3);
+        assert_eq!(report.tenant("doomed").unwrap().failed, 1);
+    }
+
+    #[test]
+    fn serve_options_resilience_defaults_and_flag_overrides() {
+        let base = ServeOptions::default();
+        assert_eq!(base.job_retries, DEFAULT_JOB_RETRIES);
+        assert_eq!(base.submit_window, DEFAULT_SUBMIT_WINDOW);
+        assert_eq!(base.drain_deadline, Some(DEFAULT_DRAIN_DEADLINE));
+        assert_eq!(base.job_deadline, None);
+        assert!(!base.faults.is_active());
+
+        let args: Vec<String> =
+            ["window=3", "retries=0"].iter().map(|s| s.to_string()).collect();
+        let sc = ServeConfig::from_args(&args).unwrap();
+        let o = ServeOptions::from_config(&sc);
+        assert_eq!(o.submit_window, 3);
+        assert_eq!(o.job_retries, 0, "retries=0 disables retry");
+    }
+
+    #[test]
+    fn retry_backoff_doubles_caps_and_jitters_deterministically() {
+        assert!(retry_backoff(1, 1) >= Duration::from_millis(10));
+        assert!(retry_backoff(1, 1) < Duration::from_millis(20));
+        assert!(retry_backoff(1, 99) <= Duration::from_millis(750), "cap + 50% jitter");
+        assert_eq!(retry_backoff(7, 2), retry_backoff(7, 2), "same (job, attempt) → same delay");
+        // different jobs de-synchronize at the same attempt (for these
+        // inputs; jitter is a hash, not a guarantee for every pair)
+        assert_ne!(retry_backoff(1, 3), retry_backoff(2, 3));
     }
 }

@@ -174,3 +174,40 @@ fn warm_start_makes_the_first_job_of_a_restarted_service_warm() {
     assert_eq!(cold.jobs[0].y, warm.jobs[0].y);
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+#[test]
+fn persisted_metrics_make_a_warm_rerun_skip_every_comparison_launch() {
+    // regression guard for the comparison-metric sidecar (metrics.log):
+    // states alone warm-start the *state* tiers, but before metrics were
+    // persisted a restarted service re-ran every comparison. Day 2 must
+    // serve all of them from the reloaded metric memo.
+    let dir = temp_dir("metrics");
+    let _ = std::fs::remove_dir_all(&dir);
+    let disk_cache = CacheConfig {
+        capacity_bytes: 512 * 1024 * 1024,
+        spill_dir: Some(dir.clone()),
+        ..CacheConfig::default()
+    };
+
+    let opts = ServeOptions { cache: disk_cache.clone(), ..service_opts() };
+    let day1 = StudyService::start(opts).expect("service starts");
+    day1.submit(StudyJob { tenant: "early".into(), cfg: small_cfg() }).unwrap();
+    let cold = day1.drain();
+    assert!(cold.jobs[0].ok(), "cold job: {:?}", cold.jobs[0].error);
+    assert!(cold.cache.metric_misses > 0, "the cold run computed its comparisons");
+
+    let opts = ServeOptions { cache: disk_cache, warm_start: true, ..service_opts() };
+    let day2 = StudyService::start(opts).expect("service restarts");
+    let boot = day2.warm_start_report();
+    assert!(boot.metrics_loaded > 0, "warm start reloaded the persisted metrics");
+    day2.submit(StudyJob { tenant: "early".into(), cfg: small_cfg() }).unwrap();
+    let warm = day2.drain();
+    assert!(warm.jobs[0].ok(), "warm job: {:?}", warm.jobs[0].error);
+    assert_eq!(
+        warm.cache.metric_misses, 0,
+        "a warm rerun must launch zero comparisons (all served from metrics.log)"
+    );
+    assert!(warm.cache.metric_hits > 0, "the comparisons were served, not skipped");
+    assert_eq!(cold.jobs[0].y, warm.jobs[0].y, "persisted metrics are bit-identical");
+    let _ = std::fs::remove_dir_all(&dir);
+}
