@@ -1,0 +1,179 @@
+//! Adaptive-execution acceptance benchmark: online pruning must pay
+//! strictly fewer backend launches than the exhaustive run while every
+//! surviving evaluation stays bit-identical, and speculative execution
+//! may change timing but never result bytes.
+//!
+//! Phase 1 runs the exhaustive MOAT study, derives a pruning threshold
+//! from its own two-trajectory confidence intervals (the state the
+//! online pruner sees at its first decision point), and re-runs the
+//! study adaptively at that threshold. Phase 2 runs the same GA tuning
+//! job on a speculation-off and a speculation-on service and compares
+//! the results byte for byte. Both properties are *count/byte*
+//! assertions, so they hold in `--test` (CI smoke) mode too. Writes
+//! `BENCH_adaptive.json` as the perf-trajectory artifact.
+
+use std::time::Instant;
+
+use rtf_reuse::adaptive::{run_adaptive, AdaptiveOptions, StreamingMoat};
+use rtf_reuse::benchx::fmt_secs;
+use rtf_reuse::cache::CacheConfig;
+use rtf_reuse::config::{SaMethod, StudyConfig};
+use rtf_reuse::driver::{
+    build_cache, make_inputs, prepare, prune_plan_with_inputs, run_pjrt_with_inputs_scoped,
+    y_per_set, SampleInfo,
+};
+use rtf_reuse::merging::FineAlgorithm;
+use rtf_reuse::serve::{ServeOptions, StudyService};
+use rtf_reuse::tune::{TuneOptions, TunerKind};
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    let cfg = StudyConfig {
+        method: SaMethod::Moat { r: if test_mode { 4 } else { 8 } },
+        algorithm: FineAlgorithm::Rtma(7),
+        ..StudyConfig::default()
+    };
+
+    // phase 1a: the exhaustive run — the ground truth and cost baseline
+    let prepared = prepare(&cfg);
+    let inputs = make_inputs(&cfg, &prepared).expect("inputs build");
+    let cache = build_cache(&cfg);
+    let mut plan = prepared.plan(&cfg);
+    if let Some(c) = &cache {
+        prune_plan_with_inputs(&prepared, &mut plan, c, &inputs);
+    }
+    let t0 = Instant::now();
+    let full = run_pjrt_with_inputs_scoped(&cfg, &prepared, &plan, cache, None, &inputs)
+        .expect("exhaustive run completes");
+    let full_wall = t0.elapsed().as_secs_f64();
+    let full_launches = full.timer.launches();
+
+    // phase 1b: derive the threshold the online pruner will apply —
+    // just above the (3k/5)-th smallest μ* CI upper edge after two
+    // trajectories, pruning a dense-enough set that later trajectories
+    // must drop evaluations
+    let SampleInfo::Moat(sample) = &prepared.sample else { panic!("moat study") };
+    let k = prepared.space.dim();
+    let y_sets = y_per_set(&full.y, sample.sets.len(), cfg.tiles);
+    let mut stream = StreamingMoat::new(k);
+    let executed = vec![true; sample.sets.len()];
+    for t in &sample.trajectories[..2] {
+        stream.update(t, &y_sets, &executed);
+    }
+    let mut uppers: Vec<f64> = (0..k).map(|p| stream.mu_star_upper(p)).collect();
+    uppers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let threshold = uppers[(3 * k) / 5] * (1.0 + 1e-9) + f64::MIN_POSITIVE;
+
+    // phase 1c: the adaptive run at that threshold
+    let mut acfg = cfg.clone();
+    acfg.adaptive = AdaptiveOptions { enabled: true, threshold, min_samples: 2 };
+    let t0 = Instant::now();
+    let out = run_adaptive(&acfg).expect("adaptive run completes");
+    let adaptive_wall = t0.elapsed().as_secs_f64();
+
+    let mut survivors_identical = true;
+    for (g, &alive) in out.survived.iter().enumerate() {
+        for t in 0..cfg.tiles {
+            let (y, r) = (out.y[g * cfg.tiles + t], full.y[g * cfg.tiles + t]);
+            if alive && y.to_bits() != r.to_bits() {
+                survivors_identical = false;
+            }
+            assert!(alive || y == 0.0, "pruned slot {g} must hold the sentinel");
+        }
+    }
+    let survived = out.survived.iter().filter(|s| **s).count();
+    println!(
+        "exhaustive: {} evals, {full_launches} launches, {} | adaptive(thr={threshold:.4}): \
+         {survived} of {} sets executed, {} evals pruned ({} params), {} launches, {}",
+        prepared.n_evals(),
+        fmt_secs(full_wall),
+        out.survived.len(),
+        out.pruned,
+        out.pruned_params.len(),
+        out.launches,
+        fmt_secs(adaptive_wall),
+    );
+
+    // phase 2: speculation A/B on the serve path — same GA tune job,
+    // identical bytes out, speculative launches billed globally
+    let serve_run = |speculate: bool| {
+        let opts = ServeOptions {
+            service_workers: if speculate { 2 } else { 1 },
+            study_workers: 2,
+            speculate,
+            cache: CacheConfig { capacity_bytes: 512 * 1024 * 1024, ..CacheConfig::default() },
+            ..ServeOptions::default()
+        };
+        let tune = TuneOptions {
+            method: TunerKind::Genetic,
+            budget: if test_mode { 6 } else { 12 },
+            population: 3,
+            k_active: 2,
+            ..TuneOptions::default()
+        };
+        let svc = StudyService::start(opts).expect("service starts");
+        let t0 = Instant::now();
+        let id = svc.submit_tune("bench", cfg.clone(), tune).expect("submit tune");
+        let report = svc.wait_job(id).expect("job known");
+        assert!(report.ok(), "tune job failed: {:?}", report.error);
+        while svc.speculative_pending() > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let drained = svc.drain();
+        (report, drained.speculative_launches, wall)
+    };
+    let (off, off_spec, off_wall) = serve_run(false);
+    let (on, on_spec, on_wall) = serve_run(true);
+    assert_eq!(off_spec, 0, "speculation off spends nothing");
+    let spec_identical = off.y == on.y && off.tune == on.tune;
+    println!(
+        "tune speculation off: {} ({} launches) | on: {} ({} launches + {on_spec} speculative) \
+         | results identical: {spec_identical}",
+        fmt_secs(off_wall),
+        off.launches,
+        fmt_secs(on_wall),
+        on.launches,
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"adaptive_pruning\",\n  \"mode\": \"{}\",\n  \
+         \"evals\": {},\n  \"threshold\": {threshold},\n  \
+         \"full_launches\": {full_launches},\n  \"adaptive_launches\": {},\n  \
+         \"pruned_evals\": {},\n  \"pruned_params\": {},\n  \
+         \"survivors_bit_identical\": {survivors_identical},\n  \
+         \"full_wall_secs\": {full_wall:.6},\n  \"adaptive_wall_secs\": {adaptive_wall:.6},\n  \
+         \"tune_wall_off_secs\": {off_wall:.6},\n  \"tune_wall_on_secs\": {on_wall:.6},\n  \
+         \"speculative_launches\": {on_spec},\n  \
+         \"speculation_bit_identical\": {spec_identical}\n}}\n",
+        if test_mode { "test" } else { "full" },
+        prepared.n_evals(),
+        out.launches,
+        out.pruned,
+        out.pruned_params.len(),
+    );
+    std::fs::write("BENCH_adaptive.json", &json).expect("write BENCH_adaptive.json");
+    println!("wrote BENCH_adaptive.json");
+
+    let pass = out.pruned > 0
+        && out.launches < full_launches
+        && survivors_identical
+        && spec_identical;
+    println!(
+        "ACCEPTANCE: adaptive run paid {} launches vs exhaustive {full_launches} with {} evals \
+         pruned, survivors bit-identical: {survivors_identical}; speculation changed result \
+         bytes: {} — {}",
+        out.launches,
+        out.pruned,
+        !spec_identical,
+        if pass { "PASS" } else { "FAIL" }
+    );
+    assert!(out.pruned > 0, "the derived threshold must prune");
+    assert!(
+        out.launches < full_launches,
+        "adaptive must pay strictly fewer launches: {} >= {full_launches}",
+        out.launches
+    );
+    assert!(survivors_identical, "surviving evaluations must be bit-identical");
+    assert!(spec_identical, "speculation may never change result bytes");
+}

@@ -1,0 +1,360 @@
+//! Run-time adaptive sensitivity analysis (arXiv 1910.14548): execute an
+//! SA design one unit at a time — a MOAT trajectory, a VBD j-block —
+//! feeding each unit's outputs into a streaming estimator
+//! ([`StreamingMoat`] / [`StreamingVbd`]), and once a parameter's
+//! confidence interval shows it non-significant at the configured
+//! threshold, stop paying for the evaluations only that parameter needs.
+//!
+//! Pruned evaluations are never silently dropped: every one is counted
+//! (`pruned` on the outcome, the job report, the tenant bill and the
+//! service bill), its slot in the output vector stays at the 0.0
+//! sentinel, and the per-set `survived` mask says exactly which results
+//! are real. The safety contract — proved by `tests/prop_adaptive.rs` —
+//! is that every *surviving* evaluation's result is bit-identical to the
+//! same evaluation in a full non-adaptive run at every batch width, and
+//! that `threshold=0` prunes nothing (the CI upper bound is never
+//! negative), making the adaptive path an exact superset of the
+//! exhaustive one.
+//!
+//! What gets pruned:
+//!
+//! * **MOAT** — pruning parameter `p` drops the evaluations whose only
+//!   purpose is measuring `p`'s elementary effect: evaluation `i` of a
+//!   trajectory survives iff some *unpruned* step is adjacent to it
+//!   (step `i-1` or step `i`). Interior evaluations shared by two steps
+//!   survive until both neighbors are pruned.
+//! * **VBD** — the `A_j`/`B_j` evaluations always run (every index needs
+//!   them); pruning parameter `i` drops the `AB(i, j)` evaluations of
+//!   blocks not yet launched. The pruned parameter keeps its estimate
+//!   over the blocks it did observe.
+//!
+//! Speculative execution — the other half of the run-time optimization
+//! story — lives in [`crate::serve`]: idle service workers pre-execute a
+//! tuner's predicted next generation through the normal single-flight
+//! cache path, so a correct guess is a warm hit and a wrong guess is
+//! just a pre-warmed cache entry, never a changed result.
+
+mod stream;
+
+pub use stream::{StreamingMoat, StreamingVbd, Z95};
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::analysis::{MoatIndices, SobolIndices};
+use crate::cache::{ReuseCache, ScopedCounters};
+use crate::config::StudyConfig;
+use crate::driver::{
+    build_cache, make_inputs, prepare, prepare_candidates, prune_plan_with_inputs,
+    run_pjrt_with_inputs_scoped, y_per_set, SampleInfo, StudyInputs,
+};
+use crate::sampling::ParamSet;
+use crate::Result;
+
+/// The adaptive-execution surface of a study config
+/// (`adaptive=on|off threshold= min-samples=`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdaptiveOptions {
+    /// Run the study through the adaptive unit-at-a-time path.
+    pub enabled: bool,
+    /// Prune a parameter once its index's 95% CI upper bound falls
+    /// below this. 0.0 (the default) never prunes — the CI upper bound
+    /// is never negative — so `adaptive=on` alone only changes
+    /// execution order, not coverage.
+    pub threshold: f64,
+    /// Units (trajectories / j-blocks) that must complete before the
+    /// pruner may act; CIs over fewer samples are too wide to trust.
+    pub min_samples: usize,
+}
+
+impl Default for AdaptiveOptions {
+    fn default() -> Self {
+        Self { enabled: false, threshold: 0.0, min_samples: 4 }
+    }
+}
+
+/// The final streaming estimate of an adaptive run.
+#[derive(Clone, Debug)]
+pub enum AdaptiveEstimate {
+    Moat(MoatIndices),
+    Vbd(SobolIndices),
+}
+
+/// What an adaptive run produced: the (partially filled) output vector,
+/// the survival mask saying which slots are real, the pruning account,
+/// and the final streaming estimate.
+#[derive(Clone, Debug)]
+pub struct AdaptiveOutcome {
+    /// Per-evaluation scalar outputs over the FULL design
+    /// (`n_sets × tiles`, set-major, like a non-adaptive run). Pruned
+    /// evaluations hold the 0.0 sentinel; consult [`Self::survived`].
+    pub y: Vec<f64>,
+    /// Per-*set* survival mask (an evaluation survived iff its set did).
+    pub survived: Vec<bool>,
+    /// Evaluations (set × tile) cancelled before launch — the number a
+    /// non-adaptive run would have paid for on top of what this one did.
+    pub pruned: u64,
+    /// Parameters the pruner ruled non-significant, in pruning order.
+    pub pruned_params: Vec<usize>,
+    /// The streaming estimate over everything that executed.
+    pub estimate: AdaptiveEstimate,
+    /// Kernel launches actually paid (sum over unit executions).
+    pub launches: u64,
+    /// Tasks served from the reuse cache instead of launched.
+    pub cached_tasks: u64,
+    /// Wall time summed over unit executions.
+    pub wall: Duration,
+}
+
+/// Run a study adaptively, standalone: builds the cache and inputs the
+/// config asks for. The serving path uses [`run_adaptive_scoped`] with
+/// its shared cache and tenant scope instead.
+pub fn run_adaptive(cfg: &StudyConfig) -> Result<AdaptiveOutcome> {
+    let prepared = prepare(cfg);
+    let inputs = make_inputs(cfg, &prepared)?;
+    run_adaptive_scoped(cfg, build_cache(cfg), None, &inputs)
+}
+
+/// Run a study adaptively over pre-built inputs, accounting cache
+/// traffic under `scope` (both optional, exactly like
+/// [`run_pjrt_with_inputs_scoped`]). Executes the design one unit at a
+/// time through the normal prepare → plan → execute path, so every
+/// surviving evaluation takes the same code path — and produces the
+/// same bytes — as a non-adaptive run.
+pub fn run_adaptive_scoped(
+    cfg: &StudyConfig,
+    cache: Option<Arc<ReuseCache>>,
+    scope: Option<Arc<ScopedCounters>>,
+    inputs: &StudyInputs,
+) -> Result<AdaptiveOutcome> {
+    let prepared = prepare(cfg);
+    match &prepared.sample {
+        SampleInfo::Moat(_) => run_adaptive_moat(cfg, &prepared, cache, scope, inputs),
+        SampleInfo::Vbd(..) => run_adaptive_vbd(cfg, &prepared, cache, scope, inputs),
+        SampleInfo::Explicit(_) => unreachable!("prepare() never yields Explicit"),
+    }
+}
+
+/// Execute `sets` (a unit's surviving parameter sets) as one candidate
+/// study and scatter the per-set outputs into `y_full` at `globals`,
+/// marking them survived. Returns (launches, cached, wall).
+#[allow(clippy::too_many_arguments)]
+fn run_unit(
+    cfg: &StudyConfig,
+    sets: Vec<ParamSet>,
+    globals: &[usize],
+    cache: &Option<Arc<ReuseCache>>,
+    scope: &Option<Arc<ScopedCounters>>,
+    inputs: &StudyInputs,
+    y_full: &mut [f64],
+    y_sets_full: &mut [f64],
+    survived: &mut [bool],
+) -> Result<(u64, u64, Duration)> {
+    if sets.is_empty() {
+        return Ok((0, 0, Duration::ZERO));
+    }
+    let n_local = sets.len();
+    let unit = prepare_candidates(cfg, &sets);
+    let mut plan = unit.plan(cfg);
+    if let Some(c) = cache {
+        prune_plan_with_inputs(&unit, &mut plan, c, inputs);
+    }
+    let out = run_pjrt_with_inputs_scoped(cfg, &unit, &plan, cache.clone(), scope.clone(), inputs)?;
+    let y_sets = y_per_set(&out.y, n_local, cfg.tiles);
+    for (local, &global) in globals.iter().enumerate() {
+        y_sets_full[global] = y_sets[local];
+        survived[global] = true;
+        for t in 0..cfg.tiles {
+            y_full[global * cfg.tiles + t] = out.y[local * cfg.tiles + t];
+        }
+    }
+    Ok((out.timer.launches(), out.timer.cached_served(), out.wall))
+}
+
+fn run_adaptive_moat(
+    cfg: &StudyConfig,
+    prepared: &crate::driver::PreparedStudy,
+    cache: Option<Arc<ReuseCache>>,
+    scope: Option<Arc<ScopedCounters>>,
+    inputs: &StudyInputs,
+) -> Result<AdaptiveOutcome> {
+    let SampleInfo::Moat(sample) = &prepared.sample else { unreachable!() };
+    let k = prepared.space.dim();
+    let n_sets = sample.sets.len();
+    let opts = &cfg.adaptive;
+
+    let mut stream = StreamingMoat::new(k);
+    let mut pruned: BTreeSet<usize> = BTreeSet::new();
+    let mut pruned_params = Vec::new();
+    let mut y_full = vec![0.0; n_sets * cfg.tiles];
+    let mut y_sets_full = vec![0.0; n_sets];
+    let mut survived = vec![false; n_sets];
+    let (mut launches, mut cached, mut wall) = (0u64, 0u64, Duration::ZERO);
+
+    for t in &sample.trajectories {
+        // evaluation i survives iff an unpruned step is adjacent to it
+        let mut sets = Vec::new();
+        let mut globals = Vec::new();
+        for i in 0..=k {
+            let prev_live = i > 0 && !pruned.contains(&t.steps[i - 1].param);
+            let next_live = i < k && !pruned.contains(&t.steps[i].param);
+            if prev_live || next_live {
+                globals.push(t.first_eval + i);
+                sets.push(sample.sets[t.first_eval + i].clone());
+            }
+        }
+        let (l, c, w) = run_unit(
+            cfg,
+            sets,
+            &globals,
+            &cache,
+            &scope,
+            inputs,
+            &mut y_full,
+            &mut y_sets_full,
+            &mut survived,
+        )?;
+        launches += l;
+        cached += c;
+        wall += w;
+
+        stream.update(t, &y_sets_full, &survived);
+        if stream.trajectories() >= opts.min_samples {
+            for p in 0..k {
+                if !pruned.contains(&p) && stream.mu_star_upper(p) < opts.threshold {
+                    pruned.insert(p);
+                    pruned_params.push(p);
+                }
+            }
+        }
+    }
+
+    let pruned_evals = survived.iter().filter(|s| !**s).count() as u64 * cfg.tiles as u64;
+    Ok(AdaptiveOutcome {
+        y: y_full,
+        survived,
+        pruned: pruned_evals,
+        pruned_params,
+        estimate: AdaptiveEstimate::Moat(stream.indices()),
+        launches,
+        cached_tasks: cached,
+        wall,
+    })
+}
+
+fn run_adaptive_vbd(
+    cfg: &StudyConfig,
+    prepared: &crate::driver::PreparedStudy,
+    cache: Option<Arc<ReuseCache>>,
+    scope: Option<Arc<ScopedCounters>>,
+    inputs: &StudyInputs,
+) -> Result<AdaptiveOutcome> {
+    let SampleInfo::Vbd(sample, _active) = &prepared.sample else { unreachable!() };
+    let k = sample.k;
+    let n_sets = sample.sets.len();
+    let opts = &cfg.adaptive;
+
+    let mut stream = StreamingVbd::new(k);
+    let mut pruned: BTreeSet<usize> = BTreeSet::new();
+    let mut pruned_params = Vec::new();
+    let mut y_full = vec![0.0; n_sets * cfg.tiles];
+    let mut y_sets_full = vec![0.0; n_sets];
+    let mut survived = vec![false; n_sets];
+    let (mut launches, mut cached, mut wall) = (0u64, 0u64, Duration::ZERO);
+
+    for j in 0..sample.n {
+        // A_j and B_j always run; AB(i, j) only for unpruned i
+        let mut globals = vec![sample.idx_a(j), sample.idx_b(j)];
+        globals.extend((0..k).filter(|i| !pruned.contains(i)).map(|i| sample.idx_ab(i, j)));
+        let sets: Vec<ParamSet> = globals.iter().map(|&g| sample.sets[g].clone()).collect();
+        let (l, c, w) = run_unit(
+            cfg,
+            sets,
+            &globals,
+            &cache,
+            &scope,
+            inputs,
+            &mut y_full,
+            &mut y_sets_full,
+            &mut survived,
+        )?;
+        launches += l;
+        cached += c;
+        wall += w;
+
+        let fab: Vec<Option<f64>> = (0..k)
+            .map(|i| survived[sample.idx_ab(i, j)].then(|| y_sets_full[sample.idx_ab(i, j)]))
+            .collect();
+        stream.update(y_sets_full[sample.idx_a(j)], y_sets_full[sample.idx_b(j)], &fab);
+        if stream.blocks() >= opts.min_samples {
+            for i in 0..k {
+                if !pruned.contains(&i) && stream.first_upper(i) < opts.threshold {
+                    pruned.insert(i);
+                    pruned_params.push(i);
+                }
+            }
+        }
+    }
+
+    let pruned_evals = survived.iter().filter(|s| !**s).count() as u64 * cfg.tiles as u64;
+    Ok(AdaptiveOutcome {
+        y: y_full,
+        survived,
+        pruned: pruned_evals,
+        pruned_params,
+        estimate: AdaptiveEstimate::Vbd(stream.indices()),
+        launches,
+        cached_tasks: cached,
+        wall,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_do_not_prune() {
+        let o = AdaptiveOptions::default();
+        assert!(!o.enabled);
+        assert_eq!(o.threshold, 0.0);
+        assert_eq!(o.min_samples, 4);
+    }
+
+    #[test]
+    fn moat_survival_rule_keeps_shared_interior_evals() {
+        // a 3-param trajectory: steps touch params [2, 0, 1]; pruning
+        // param 0 must keep evals 1 and 2 (each adjacent to an unpruned
+        // step) — only evals with NO unpruned neighbor drop
+        use crate::sampling::{MoatStep, Trajectory};
+        let t = Trajectory {
+            first_eval: 0,
+            steps: vec![
+                MoatStep { param: 2, delta_norm: 0.5 },
+                MoatStep { param: 0, delta_norm: 0.5 },
+                MoatStep { param: 1, delta_norm: 0.5 },
+            ],
+        };
+        let pruned: BTreeSet<usize> = [0].into_iter().collect();
+        let k = 3;
+        let survives: Vec<bool> = (0..=k)
+            .map(|i| {
+                let prev = i > 0 && !pruned.contains(&t.steps[i - 1].param);
+                let next = i < k && !pruned.contains(&t.steps[i].param);
+                prev || next
+            })
+            .collect();
+        assert_eq!(survives, vec![true, true, true, true]);
+        // pruning params 0 AND 2 drops eval 1 (both neighbors pruned)
+        let pruned: BTreeSet<usize> = [0, 2].into_iter().collect();
+        let survives: Vec<bool> = (0..=k)
+            .map(|i| {
+                let prev = i > 0 && !pruned.contains(&t.steps[i - 1].param);
+                let next = i < k && !pruned.contains(&t.steps[i].param);
+                prev || next
+            })
+            .collect();
+        assert_eq!(survives, vec![false, false, true, true]);
+    }
+}

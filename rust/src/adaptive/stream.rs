@@ -1,0 +1,378 @@
+//! Incremental sensitivity estimators.
+//!
+//! [`StreamingMoat`] and [`StreamingVbd`] accumulate the exact same
+//! statistics as the batch estimators in [`crate::analysis`], one
+//! completed unit at a time (a MOAT trajectory; a VBD j-block), so an
+//! adaptive run can consult the indices — with confidence intervals —
+//! after every unit instead of only at the end.
+//!
+//! **Bit-identity contract** (asserted by `tests/prop_adaptive.rs`):
+//! after feeding the first `m` units, [`StreamingMoat::indices`] /
+//! [`StreamingVbd::indices`] return bit-for-bit the values
+//! [`crate::analysis::moat_effects`] / [`crate::analysis::sobol_indices`]
+//! compute on the same `m`-unit prefix of the design. The streaming
+//! accumulators therefore perform the *same floating-point operations in
+//! the same order* as the batch code — any "equivalent" reassociation
+//! would break the contract.
+
+use crate::analysis::{MoatIndices, SobolIndices};
+use crate::sampling::Trajectory;
+
+/// z-score of the two-sided 95% confidence interval every estimator's
+/// half-width uses. A pruning threshold compares against
+/// `estimate + Z95 * stderr`, so a region is only ruled non-significant
+/// once even the CI's upper edge sits below the threshold.
+pub const Z95: f64 = 1.96;
+
+/// Streaming Morris elementary effects: per-parameter running sums fed
+/// one trajectory at a time, finalized exactly like
+/// [`crate::analysis::moat_effects`].
+#[derive(Clone, Debug)]
+pub struct StreamingMoat {
+    k: usize,
+    sums: Vec<f64>,
+    abs_sums: Vec<f64>,
+    sq_sums: Vec<f64>,
+    count: Vec<usize>,
+    trajectories: usize,
+}
+
+impl StreamingMoat {
+    /// `k` is the parameter-space dimension (the batch estimator's `k`).
+    pub fn new(k: usize) -> Self {
+        Self {
+            k,
+            sums: vec![0.0; k],
+            abs_sums: vec![0.0; k],
+            sq_sums: vec![0.0; k],
+            count: vec![0; k],
+            trajectories: 0,
+        }
+    }
+
+    /// Fold one completed trajectory in. `y` holds the per-set outputs
+    /// of the *whole design* (indexed by `trajectory.first_eval + i`);
+    /// `executed[e]` says whether evaluation `e` actually ran — a step
+    /// contributes its elementary effect only when both endpoints did,
+    /// so pruned evaluations never poison the sums. With every
+    /// evaluation executed this is exactly one trajectory's iteration
+    /// of the batch loop.
+    pub fn update(&mut self, trajectory: &Trajectory, y: &[f64], executed: &[bool]) {
+        for (i, step) in trajectory.steps.iter().enumerate() {
+            let (b, a) = (trajectory.first_eval + i, trajectory.first_eval + i + 1);
+            if !executed[b] || !executed[a] {
+                continue;
+            }
+            let ee = (y[a] - y[b]) / step.delta_norm;
+            self.sums[step.param] += ee;
+            self.abs_sums[step.param] += ee.abs();
+            self.sq_sums[step.param] += ee * ee;
+            self.count[step.param] += 1;
+        }
+        self.trajectories += 1;
+    }
+
+    /// Trajectories folded in so far.
+    pub fn trajectories(&self) -> usize {
+        self.trajectories
+    }
+
+    /// Elementary effects observed for parameter `p` so far.
+    pub fn count(&self, p: usize) -> usize {
+        self.count[p]
+    }
+
+    /// The indices over everything folded in so far — bit-identical to
+    /// [`crate::analysis::moat_effects`] on the same prefix.
+    pub fn indices(&self) -> MoatIndices {
+        let mut mean = vec![0.0; self.k];
+        let mut mu_star = vec![0.0; self.k];
+        let mut sigma = vec![0.0; self.k];
+        for p in 0..self.k {
+            let n = self.count[p] as f64;
+            if self.count[p] == 0 {
+                continue;
+            }
+            mean[p] = self.sums[p] / n;
+            mu_star[p] = self.abs_sums[p] / n;
+            let var = (self.sq_sums[p] / n - mean[p] * mean[p]).max(0.0);
+            sigma[p] = var.sqrt();
+        }
+        MoatIndices { mean, mu_star, sigma, count: self.count.clone() }
+    }
+
+    /// 95% CI half-width of μ*(p): `Z95 · sd(|EE_p|) / √n`. Since
+    /// |EE|² = EE², the absolute effects' second moment is the same
+    /// `sq_sums` the batch σ uses — no extra running state is needed.
+    /// `f64::INFINITY` with no observations (nothing can be ruled out).
+    pub fn mu_star_half_width(&self, p: usize) -> f64 {
+        let n = self.count[p] as f64;
+        if self.count[p] == 0 {
+            return f64::INFINITY;
+        }
+        let mu_star = self.abs_sums[p] / n;
+        let var = (self.sq_sums[p] / n - mu_star * mu_star).max(0.0);
+        Z95 * var.sqrt() / n.sqrt()
+    }
+
+    /// Upper edge of μ*(p)'s 95% CI — what the pruner compares against
+    /// its threshold. Always ≥ μ* ≥ 0, so a threshold of 0 never prunes.
+    pub fn mu_star_upper(&self, p: usize) -> f64 {
+        let n = self.count[p] as f64;
+        if self.count[p] == 0 {
+            return f64::INFINITY;
+        }
+        self.abs_sums[p] / n + self.mu_star_half_width(p)
+    }
+}
+
+/// Streaming Saltelli/Jansen VBD estimator: stores the `f_A`, `f_B` and
+/// `f_ABi` evaluations of every completed j-block and recomputes the
+/// indices over the prefix with exactly the batch formulas.
+///
+/// Unlike MOAT (whose per-parameter sums are associative in trajectory
+/// order), the Sobol estimators normalize by the prefix variance, which
+/// changes with every block — so the streaming form keeps the per-block
+/// outputs (three `f64`s per block per parameter, trivial next to the
+/// evaluations themselves) and re-runs the batch arithmetic on demand.
+#[derive(Clone, Debug)]
+pub struct StreamingVbd {
+    k: usize,
+    fa: Vec<f64>,
+    fb: Vec<f64>,
+    /// `fab[i][j]`: f(AB_i) of block j — `None` when AB(i, j) was pruned.
+    fab: Vec<Vec<Option<f64>>>,
+}
+
+impl StreamingVbd {
+    /// `k` is the number of active parameters (the design's `k`).
+    pub fn new(k: usize) -> Self {
+        Self { k, fa: Vec::new(), fb: Vec::new(), fab: vec![Vec::new(); k] }
+    }
+
+    /// Fold one completed j-block in: the A and B outputs plus the
+    /// per-parameter AB outputs (`None` for parameters whose AB
+    /// evaluation was pruned away).
+    pub fn update(&mut self, fa: f64, fb: f64, fab: &[Option<f64>]) {
+        assert_eq!(fab.len(), self.k, "one AB output slot per active parameter");
+        self.fa.push(fa);
+        self.fb.push(fb);
+        for (i, v) in fab.iter().enumerate() {
+            self.fab[i].push(*v);
+        }
+    }
+
+    /// j-blocks folded in so far.
+    pub fn blocks(&self) -> usize {
+        self.fa.len()
+    }
+
+    /// AB observations for parameter `i` so far (< `blocks()` once the
+    /// pruner starts dropping AB(i, ·) evaluations).
+    pub fn ab_count(&self, i: usize) -> usize {
+        self.fab[i].iter().filter(|v| v.is_some()).count()
+    }
+
+    /// The indices over the prefix folded in so far. With no pruning
+    /// this is bit-identical to [`crate::analysis::sobol_indices`] on
+    /// the same `n = blocks()` prefix of the design; a pruned parameter
+    /// keeps the estimate over the blocks it did observe (its per-block
+    /// terms are simply absent from its sums — count `ab_count(i)`).
+    pub fn indices(&self) -> SobolIndices {
+        let n = self.fa.len();
+        // identical accumulation order to the batch estimator: mean and
+        // variance over A ∪ B as one chained pass
+        let all: Vec<f64> = self.fa.iter().chain(&self.fb).copied().collect();
+        let mean = all.iter().sum::<f64>() / (all.len() as f64).max(1.0);
+        let variance = if all.is_empty() {
+            0.0
+        } else {
+            all.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / all.len() as f64
+        };
+        let mut first = vec![0.0; self.k];
+        let mut total = vec![0.0; self.k];
+        if variance > 1e-300 {
+            for i in 0..self.k {
+                let mut s = 0.0;
+                let mut t = 0.0;
+                let mut m = 0usize;
+                for j in 0..n {
+                    let Some(fab) = self.fab[i][j] else { continue };
+                    s += self.fb[j] * (fab - self.fa[j]);
+                    t += (self.fa[j] - fab) * (self.fa[j] - fab);
+                    m += 1;
+                }
+                if m > 0 {
+                    first[i] = s / (m as f64 * variance);
+                    total[i] = t / (2.0 * m as f64 * variance);
+                }
+            }
+        }
+        SobolIndices { first, total, variance }
+    }
+
+    /// 95% CI half-width of S_i: the Saltelli estimator is a mean of the
+    /// per-block terms `d_ij = f_B(j) · (f_ABi(j) − f_A(j)) / V`, so its
+    /// standard error is `sd(d_i·) / √m`. `f64::INFINITY` with fewer
+    /// than two observations or (near-)zero variance.
+    pub fn first_half_width(&self, i: usize) -> f64 {
+        let idx = self.indices();
+        if idx.variance <= 1e-300 {
+            return f64::INFINITY;
+        }
+        let d: Vec<f64> = (0..self.fa.len())
+            .filter_map(|j| {
+                self.fab[i][j].map(|fab| self.fb[j] * (fab - self.fa[j]) / idx.variance)
+            })
+            .collect();
+        let m = d.len();
+        if m < 2 {
+            return f64::INFINITY;
+        }
+        let mean = d.iter().sum::<f64>() / m as f64;
+        let var = d.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / m as f64;
+        Z95 * var.sqrt() / (m as f64).sqrt()
+    }
+
+    /// Upper edge of S_i's 95% CI — what the pruner compares against its
+    /// threshold. `|S_i| + half-width`, so a threshold of 0 never prunes.
+    pub fn first_upper(&self, i: usize) -> f64 {
+        let half = self.first_half_width(i);
+        if half.is_infinite() {
+            return f64::INFINITY;
+        }
+        self.indices().first[i].abs() + half
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{moat_effects, sobol_indices};
+    use crate::sampling::{default_space, HaltonSampler, MoatDesign, VbdDesign, VbdSample};
+    use crate::testutil::splitmix64;
+
+    fn synth_y(n: usize, seed: u64) -> Vec<f64> {
+        let mut s = seed;
+        (0..n).map(|_| (splitmix64(&mut s) >> 11) as f64 / (1u64 << 53) as f64).collect()
+    }
+
+    #[test]
+    fn streaming_moat_is_bit_identical_to_batch_on_every_prefix() {
+        let space = default_space();
+        let sample = MoatDesign::new(6).generate(&space, &mut HaltonSampler::new(3), 17);
+        let y = synth_y(sample.sets.len(), 41);
+        let executed = vec![true; sample.sets.len()];
+        let mut stream = StreamingMoat::new(space.dim());
+        for (m, t) in sample.trajectories.iter().enumerate() {
+            stream.update(t, &y, &executed);
+            let k = space.dim();
+            let prefix = crate::sampling::MoatSample {
+                sets: sample.sets[..(m + 1) * (k + 1)].to_vec(),
+                trajectories: sample.trajectories[..m + 1].to_vec(),
+            };
+            let batch = moat_effects(&prefix, &y[..(m + 1) * (k + 1)], k);
+            let ours = stream.indices();
+            for p in 0..k {
+                assert_eq!(ours.mean[p].to_bits(), batch.mean[p].to_bits(), "mean[{p}] @ {m}");
+                assert_eq!(ours.mu_star[p].to_bits(), batch.mu_star[p].to_bits(), "mu*[{p}]");
+                assert_eq!(ours.sigma[p].to_bits(), batch.sigma[p].to_bits(), "sigma[{p}]");
+                assert_eq!(ours.count[p], batch.count[p], "count[{p}]");
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_vbd_is_bit_identical_to_batch_on_every_prefix() {
+        let space = default_space();
+        let active = vec![5usize, 6, 7];
+        let sample =
+            VbdDesign::new(12).generate(&space, &active, &mut HaltonSampler::new(5));
+        let y = synth_y(sample.sample_size(), 43);
+        let mut stream = StreamingVbd::new(sample.k);
+        for j in 0..sample.n {
+            let fab: Vec<Option<f64>> =
+                (0..sample.k).map(|i| Some(y[sample.idx_ab(i, j)])).collect();
+            stream.update(y[sample.idx_a(j)], y[sample.idx_b(j)], &fab);
+            let m = j + 1;
+            // the same design truncated to its first m blocks
+            let mut sets = Vec::new();
+            let mut ty = Vec::new();
+            for jj in 0..m {
+                sets.push(sample.sets[sample.idx_a(jj)].clone());
+                ty.push(y[sample.idx_a(jj)]);
+            }
+            for jj in 0..m {
+                sets.push(sample.sets[sample.idx_b(jj)].clone());
+                ty.push(y[sample.idx_b(jj)]);
+            }
+            for i in 0..sample.k {
+                for jj in 0..m {
+                    sets.push(sample.sets[sample.idx_ab(i, jj)].clone());
+                    ty.push(y[sample.idx_ab(i, jj)]);
+                }
+            }
+            let prefix = VbdSample { sets, n: m, k: sample.k };
+            let batch = sobol_indices(&prefix, &ty);
+            let ours = stream.indices();
+            assert_eq!(ours.variance.to_bits(), batch.variance.to_bits(), "variance @ {m}");
+            for i in 0..sample.k {
+                assert_eq!(ours.first[i].to_bits(), batch.first[i].to_bits(), "S[{i}] @ {m}");
+                assert_eq!(ours.total[i].to_bits(), batch.total[i].to_bits(), "ST[{i}] @ {m}");
+            }
+        }
+    }
+
+    #[test]
+    fn moat_ci_shrinks_and_upper_bounds_mu_star() {
+        let space = default_space();
+        let sample = MoatDesign::new(10).generate(&space, &mut HaltonSampler::new(1), 7);
+        let y = synth_y(sample.sets.len(), 97);
+        let executed = vec![true; y.len()];
+        let mut once = StreamingMoat::new(space.dim());
+        let mut twice = StreamingMoat::new(space.dim());
+        for t in &sample.trajectories {
+            once.update(t, &y, &executed);
+            twice.update(t, &y, &executed);
+            twice.update(t, &y, &executed);
+        }
+        let idx = once.indices();
+        for p in 0..space.dim() {
+            if once.count(p) == 0 {
+                continue;
+            }
+            assert!(once.mu_star_upper(p) >= idx.mu_star[p], "upper bounds μ*[{p}]");
+            // doubling every observation keeps sd(|EE|) and halves
+            // width by √2 — more samples must tighten the CI
+            let (w1, w2) = (once.mu_star_half_width(p), twice.mu_star_half_width(p));
+            assert!(w2 <= w1, "CI must not widen with replication: {w1} -> {w2} @ {p}");
+            if w1 > 0.0 {
+                assert!(w2 < w1, "CI must tighten with replication @ {p}");
+            }
+        }
+        // an untouched parameter index cannot be ruled out
+        let empty = StreamingMoat::new(3);
+        assert!(empty.mu_star_upper(0).is_infinite());
+    }
+
+    #[test]
+    fn vbd_pruned_parameters_keep_their_partial_estimates() {
+        let space = default_space();
+        let active = vec![5usize, 6];
+        let sample = VbdDesign::new(8).generate(&space, &active, &mut HaltonSampler::new(9));
+        let y = synth_y(sample.sample_size(), 71);
+        let mut stream = StreamingVbd::new(sample.k);
+        for j in 0..sample.n {
+            // parameter 1's AB evaluations stop after the 4th block
+            let fab: Vec<Option<f64>> = (0..sample.k)
+                .map(|i| (i == 0 || j < 4).then(|| y[sample.idx_ab(i, j)]))
+                .collect();
+            stream.update(y[sample.idx_a(j)], y[sample.idx_b(j)], &fab);
+        }
+        assert_eq!(stream.ab_count(0), sample.n);
+        assert_eq!(stream.ab_count(1), 4);
+        let idx = stream.indices();
+        assert!(idx.first[1].is_finite(), "pruned parameter keeps a finite estimate");
+        assert!(stream.first_half_width(0) < f64::INFINITY);
+    }
+}

@@ -3,6 +3,7 @@
 //! from CLI-style `key=value` pairs or JSON, consumed by the CLI, the
 //! examples and the bench harness.
 
+use crate::adaptive::AdaptiveOptions;
 use crate::coordinator::BatchPolicy;
 use crate::faults::Faults;
 use crate::merging::{FineAlgorithm, TrtmaOptions};
@@ -158,6 +159,11 @@ pub struct StudyConfig {
     /// set programmatically (chaos tests, recovery benches) — there is
     /// deliberately no CLI flag, fault plans are code.
     pub faults: Faults,
+    /// Run-time adaptive execution (`adaptive=on threshold= min-samples=`;
+    /// see [`crate::adaptive`]): execute the design unit-at-a-time and
+    /// prune parameters whose CI falls below the threshold. Off by
+    /// default — the exhaustive path stays the reference semantics.
+    pub adaptive: AdaptiveOptions,
 }
 
 impl Default for StudyConfig {
@@ -177,6 +183,7 @@ impl Default for StudyConfig {
             workflow_file: None,
             cache: CacheSettings::default(),
             faults: Faults::none(),
+            adaptive: AdaptiveOptions::default(),
         }
     }
 }
@@ -186,9 +193,10 @@ impl StudyConfig {
     /// `method` (moat|vbd), `r`, `n`, `k-active`, `sampler`
     /// (qmc|mc|lhs), `algo` (none|naive|sca|rtma|trtma), `mbs`,
     /// `max-buckets`, `coarse` (on|off), `engine` (pjrt|sim),
-    /// `workers`, `batch-width`, `tiles`, `seed`, `artifacts`, plus the
+    /// `workers`, `batch-width`, `tiles`, `seed`, `artifacts`, the
     /// reuse-cache knobs `cache` (on|off), `cache-mb`, `cache-quant`,
-    /// `cache-shards`, `cache-dir`.
+    /// `cache-shards`, `cache-dir`, and the adaptive-execution knobs
+    /// `adaptive` (on|off), `threshold`, `min-samples`.
     pub fn from_args(args: &[String]) -> Result<Self> {
         let mut cfg = StudyConfig::default();
         let mut algo_name = String::from("rtma");
@@ -240,6 +248,27 @@ impl StudyConfig {
                 "cache-quant" => cfg.cache.quantize = float(value)?.max(0.0),
                 "cache-shards" => cfg.cache.shards = uint(value)?.max(1),
                 "cache-dir" => cfg.cache.spill_dir = Some(value.to_string()),
+                "adaptive" => {
+                    cfg.adaptive.enabled = match value {
+                        "on" | "true" => true,
+                        "off" | "false" => false,
+                        v => {
+                            return Err(Error::Config(format!(
+                                "`adaptive=` wants on|off, got `{v}`"
+                            )))
+                        }
+                    }
+                }
+                "threshold" => {
+                    let t = float(value)?;
+                    if t < 0.0 {
+                        return Err(Error::Config(format!(
+                            "`threshold=` wants a non-negative number, got `{value}`"
+                        )));
+                    }
+                    cfg.adaptive.threshold = t;
+                }
+                "min-samples" => cfg.adaptive.min_samples = uint(value)?.max(1),
                 other => return Err(Error::Config(format!("unknown option `{other}`"))),
             }
         }
@@ -265,9 +294,17 @@ impl StudyConfig {
         } else {
             String::new()
         };
+        let adaptive = if self.adaptive.enabled {
+            format!(
+                " adaptive=on(thr={},min={})",
+                self.adaptive.threshold, self.adaptive.min_samples
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{} sampler={} algo={} coarse={} engine={:?} workers={} batch={} tiles={} \
-             seed={}{cache}",
+             seed={}{cache}{adaptive}",
             match self.method {
                 SaMethod::Moat { r } => format!("moat(r={r})"),
                 SaMethod::Vbd { n, k_active } => format!("vbd(n={n},k={k_active})"),
@@ -330,6 +367,12 @@ pub struct ServeConfig {
     /// before its failure is final (0 disables retry). Unset uses the
     /// service default.
     pub job_retries: Option<u32>,
+    /// `speculate=on|off` — let idle service workers pre-execute a
+    /// tuner's predicted next generation through the single-flight
+    /// cache path (warms the cache, never changes a result). Unset
+    /// defaults to off; a tune job's own `speculate=on` also enables it
+    /// for that job.
+    pub speculate: Option<bool>,
     /// `peers=ADDR,ADDR,...` — cluster mode: the full node list
     /// (including this node's own `listen=` address). The 128-bit key
     /// space is consistent-hash partitioned across these nodes and
@@ -404,6 +447,17 @@ impl ServeConfig {
                 Some(("warm-start", v)) => sc.warm_start = Some(v == "on" || v == "true"),
                 Some(("window", v)) => sc.submit_window = Some(uint(v)?.max(1)),
                 Some(("retries", v)) => sc.job_retries = Some(uint(v)? as u32),
+                Some(("speculate", v)) => {
+                    sc.speculate = Some(match v {
+                        "on" | "true" => true,
+                        "off" | "false" => false,
+                        v => {
+                            return Err(Error::Config(format!(
+                                "`speculate=` wants on|off, got `{v}`"
+                            )))
+                        }
+                    })
+                }
                 _ => sc.study_args.push(a.clone()),
             }
         }
@@ -469,8 +523,10 @@ impl TuneConfig {
     /// (nm|simplex|ga|genetic), `budget`, `population`, `k-active`,
     /// `active` (comma-separated parameter names), `objective`
     /// (dice|jaccard), `cost-lambda`, `mutation`, `init` (LO:HI grid
-    /// fractions). Everything else must parse as a study option; the
-    /// study's `method`/`sampler` are ignored by tuning.
+    /// fractions), `speculate` (on|off — ask the serving side to
+    /// pre-execute this tuner's predicted next generation). Everything
+    /// else must parse as a study option; the study's
+    /// `method`/`sampler` are ignored by tuning.
     pub fn from_args(args: &[String]) -> Result<Self> {
         use crate::tune::{ObjectiveKind, TuneOptions, TunerKind};
         let mut opts = TuneOptions::default();
@@ -512,6 +568,17 @@ impl TuneConfig {
                         return Err(Error::Config("`active=` names no parameters".into()));
                     }
                     opts.active = active;
+                }
+                Some(("speculate", v)) => {
+                    opts.speculate = match v {
+                        "on" | "true" => true,
+                        "off" | "false" => false,
+                        v => {
+                            return Err(Error::Config(format!(
+                                "`speculate=` wants on|off, got `{v}`"
+                            )))
+                        }
+                    }
                 }
                 Some(("objective", v)) => opts.objective = ObjectiveKind::parse(v)?,
                 Some(("cost-lambda", v)) => opts.cost_lambda = float(v)?.max(0.0),
@@ -746,6 +813,60 @@ mod tests {
     }
 
     #[test]
+    fn study_config_parses_adaptive_flags() {
+        let c = StudyConfig::default();
+        assert!(!c.adaptive.enabled, "adaptive defaults off");
+        assert_eq!(c.adaptive.threshold, 0.0);
+        assert_eq!(c.adaptive.min_samples, 4);
+        let c = StudyConfig::from_args(&args(&[
+            "adaptive=on",
+            "threshold=0.05",
+            "min-samples=3",
+        ]))
+        .unwrap();
+        assert!(c.adaptive.enabled);
+        assert_eq!(c.adaptive.threshold, 0.05);
+        assert_eq!(c.adaptive.min_samples, 3);
+        assert!(c.describe().contains("adaptive=on"));
+        let c = StudyConfig::from_args(&args(&["adaptive=off"])).unwrap();
+        assert!(!c.adaptive.enabled);
+        assert!(!c.describe().contains("adaptive"));
+        let c = StudyConfig::from_args(&args(&["min-samples=0"])).unwrap();
+        assert_eq!(c.adaptive.min_samples, 1, "min-samples clamps to >= 1");
+    }
+
+    #[test]
+    fn adaptive_parse_errors_name_the_flag_and_value() {
+        // PR 6 convention: every malformed form names the flag AND
+        // quotes the offending value
+        for (bad, flag, value) in [
+            ("adaptive=maybe", "adaptive=", "maybe"),
+            ("adaptive=1", "adaptive=", "1"),
+            ("threshold=tiny", "threshold=", "tiny"),
+            ("threshold=-0.5", "threshold=", "-0.5"),
+            ("min-samples=few", "min-samples", "few"),
+        ] {
+            let err = StudyConfig::from_args(&args(&[bad])).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains(flag), "`{bad}` error must name `{flag}`: {msg}");
+            assert!(
+                msg.contains(&format!("`{value}`")),
+                "`{bad}` error must quote the value: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn serve_config_parses_speculate() {
+        let sc = ServeConfig::from_args(&args(&["speculate=on"])).unwrap();
+        assert_eq!(sc.speculate, Some(true));
+        let sc = ServeConfig::from_args(&args(&["speculate=off"])).unwrap();
+        assert_eq!(sc.speculate, Some(false));
+        let sc = ServeConfig::from_args(&[]).unwrap();
+        assert_eq!(sc.speculate, None, "unset defers to the service default");
+    }
+
+    #[test]
     fn serve_config_parse_errors_name_the_flag_and_value() {
         // one malformed form per flag; every error names both the flag
         // and the offending value
@@ -756,6 +877,9 @@ mod tests {
             (vec!["priority=alice:heavy"], "priority=", "alice:heavy"),
             (vec!["listen=h:1", "peers=h1,h:1"], "peers=", "h1,h:1"),
             (vec!["listen=h:1", "peers="], "peers=", ""),
+            (vec!["speculate=sometimes"], "speculate=", "sometimes"),
+            (vec!["adaptive=perhaps"], "adaptive=", "perhaps"),
+            (vec!["threshold=-1"], "threshold=", "-1"),
         ] {
             let err = ServeConfig::from_args(&args(&bad_args)).unwrap_err();
             let msg = err.to_string();
@@ -799,6 +923,21 @@ mod tests {
         assert_eq!(tc.options.active_params().len(), 8, "canonical actives by default");
         let tc = TuneConfig::from_args(&args(&["k-active=3"])).unwrap();
         assert_eq!(tc.options.active_params(), vec![4, 5, 6]);
+    }
+
+    #[test]
+    fn tune_config_parses_speculate() {
+        let tc = TuneConfig::from_args(&args(&["speculate=on"])).unwrap();
+        assert!(tc.options.speculate);
+        let tc = TuneConfig::from_args(&[]).unwrap();
+        assert!(!tc.options.speculate, "speculation defaults off");
+        // malformed forms name the flag and quote the value
+        for (bad, value) in [("speculate=eager", "eager"), ("speculate=2", "2")] {
+            let err = TuneConfig::from_args(&args(&[bad])).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("speculate="), "`{bad}` error names the flag: {msg}");
+            assert!(msg.contains(&format!("`{value}`")), "`{bad}` error quotes value: {msg}");
+        }
     }
 
     #[test]

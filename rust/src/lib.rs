@@ -40,6 +40,11 @@
 //!   8–256-worker scalability studies (Figs. 22/23, Table 5).
 //! * [`analysis`] — elementary effects (MOAT) and Sobol indices (VBD),
 //!   i.e. the numbers in Table 2.
+//! * [`adaptive`] — run-time adaptive SA (the follow-up paper, arXiv
+//!   1910.14548): streaming Morris/VBD estimators with confidence
+//!   intervals, and an online pruner that cancels not-yet-launched
+//!   evaluations once a parameter's CI shows it non-significant —
+//!   every pruned unit billed distinctly, never silently dropped.
 //! * [`data`] — region-template data abstraction and the synthetic tissue
 //!   tile generator standing in for the paper's WSI dataset.
 //!
@@ -47,6 +52,7 @@
 //! data-flow diagram, life of a study, and the map from every paper
 //! section/table to the module that reproduces it.
 
+pub mod adaptive;
 pub mod analysis;
 pub mod benchx;
 pub mod cache;
@@ -62,6 +68,7 @@ pub mod runtime;
 pub mod sampling;
 pub mod serve;
 pub mod simulate;
+pub mod testutil;
 pub mod tune;
 pub mod workflow;
 

@@ -84,6 +84,11 @@ fn print_help() {
            tiles=1  seed=42\n\
            artifacts=DIR (default: the crate's artifacts/ dir)\n\
            cache=on|off  cache-mb=256  cache-quant=0  cache-shards=8  cache-dir=DIR\n\
+           adaptive=on|off    online pruning: cancel not-yet-launched units once a\n\
+                              parameter's CI is non-significant (surviving results\n\
+                              stay bit-identical to the full run)\n\
+           threshold=0.05     adaptive CI cutoff (mu*/S_i upper bound below it prunes)\n\
+           min-samples=4      units observed per parameter before pruning may start\n\
          \n\
          tune options (plus any study option above; cache defaults ON here):\n\
            tuner=ga|nm        genetic algorithm / Nelder-Mead simplex\n\
@@ -95,6 +100,8 @@ fn print_help() {
            cost-lambda=0      chain-cost penalty (constant within one fixed workflow)\n\
            mutation=0.25      GA per-gene mutation probability\n\
            init=LO:HI         initial-population grid-fraction window (default 0:1)\n\
+           speculate=on|off   hint: served tune jobs pre-execute the predicted next\n\
+                              generation on idle workers (cache warming only)\n\
          \n\
          serve options (plus any study option above as the per-job default):\n\
            serve-workers=2    concurrent studies in flight\n\
@@ -104,6 +111,8 @@ fn print_help() {
            warm-start=on|off  pre-admit disk-tier entries at boot (default: on with cache-dir)\n\
            retries=2          extra attempts a failed job gets before it is billed FAILED\n\
            window=64          per-connection submit window (undelivered jobs; wire mode)\n\
+           speculate=on|off   idle workers pre-execute tuning jobs' predicted next\n\
+                              generations (billed as speculative, never to a tenant)\n\
            tenants=2          demo mode: N tenants ...\n\
            jobs-per-tenant=1  ... each submitting this many identical studies\n\
            jobs=FILE          per-line jobs: `tenant=NAME [kind=study|tune] [opts]`\n\
@@ -138,6 +147,10 @@ fn cmd_run_sa(args: &[String]) -> Result<()> {
             report.tasks
         );
         return Ok(());
+    }
+
+    if cfg.adaptive.enabled {
+        return run_sa_adaptive(&cfg, &prepared);
     }
 
     let outcome = run_pjrt(&cfg, &prepared, &plan)?;
@@ -198,6 +211,78 @@ fn cmd_run_sa(args: &[String]) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// The adaptive `run-sa` path (`adaptive=on`): units execute one at a
+/// time through the incremental estimator, which prunes the rest of a
+/// parameter's work once its CI upper bound falls below `threshold=`.
+/// Surviving evaluations are bit-identical to the full run's.
+fn run_sa_adaptive(cfg: &StudyConfig, prepared: &driver::PreparedStudy) -> Result<()> {
+    use rtf_reuse::adaptive::{run_adaptive, AdaptiveEstimate};
+
+    let out = run_adaptive(cfg)?;
+    let survived = out.survived.iter().filter(|&&s| s).count();
+    println!(
+        "adaptive: executed {} of {} sets ({} evals pruned), {} launches \
+         ({} cache-served), wall {}",
+        survived,
+        out.survived.len(),
+        out.pruned,
+        out.launches,
+        out.cached_tasks,
+        fmt_secs(out.wall.as_secs_f64())
+    );
+    let space = &prepared.space;
+    if !out.pruned_params.is_empty() {
+        let names: Vec<&str> =
+            out.pruned_params.iter().map(|&p| pruned_param_name(prepared, p)).collect();
+        println!(
+            "pruned parameters (CI upper bound < {}): {}",
+            cfg.adaptive.threshold,
+            names.join(", ")
+        );
+    }
+    match &out.estimate {
+        AdaptiveEstimate::Moat(idx) => {
+            let mut t = Table::new(&["param", "mean EE", "mu*", "sigma", "units"]);
+            for p in 0..space.dim() {
+                t.row(&[
+                    space.params[p].name.clone(),
+                    format!("{:+.4}", idx.mean[p]),
+                    format!("{:.4}", idx.mu_star[p]),
+                    format!("{:.4}", idx.sigma[p]),
+                    idx.count[p].to_string(),
+                ]);
+            }
+            t.print("MOAT elementary effects (adaptive, partial counts for pruned params)");
+        }
+        AdaptiveEstimate::Vbd(idx) => {
+            let active = match &prepared.sample {
+                SampleInfo::Vbd(_, active) => active.clone(),
+                _ => (0..idx.first.len()).collect(),
+            };
+            let mut t = Table::new(&["param", "S_i (main)", "ST_i (total)"]);
+            for (i, &p) in active.iter().enumerate() {
+                t.row(&[
+                    space.params[p].name.clone(),
+                    format!("{:.4}", idx.first[i]),
+                    format!("{:.4}", idx.total[i]),
+                ]);
+            }
+            t.print("VBD Sobol indices (adaptive, pruned params estimated on observed blocks)");
+        }
+    }
+    Ok(())
+}
+
+/// Map a pruned index back to a parameter name: MOAT prunes over the
+/// full space, VBD over its active subset.
+fn pruned_param_name(prepared: &driver::PreparedStudy, p: usize) -> &str {
+    let p = match &prepared.sample {
+        SampleInfo::Vbd(_, active) => active[p],
+        _ => p,
+    };
+    prepared.space.params[p].name.as_str()
 }
 
 /// `tune`: optimizer-driven parameter search — a Nelder-Mead simplex or
@@ -308,12 +393,15 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         for j in &outcome.jobs {
             let status = if j.ok() { "ok" } else { "FAILED" };
             println!(
-                "job {} tenant={} {status} launches={} cached={} retries={} evals={} wall={}",
+                "job {} tenant={} {status} launches={} cached={} retries={} pruned={} \
+                 speculative={} evals={} wall={}",
                 j.job,
                 j.tenant,
                 j.launches,
                 j.cached_tasks,
                 j.retries,
+                j.pruned,
+                j.speculative,
                 j.n_evals,
                 fmt_secs(j.exec_wall_secs)
             );
@@ -335,8 +423,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         }
         if let Some(bill) = &outcome.bill {
             let mut t = Table::new(&[
-                "tenant", "jobs", "launches", "cached", "retries", "hits", "misses",
-                "quota MiB", "resident KiB",
+                "tenant", "jobs", "launches", "cached", "retries", "pruned", "spec",
+                "hits", "misses", "quota MiB", "resident KiB",
             ]);
             for ten in &bill.tenants {
                 t.row(&[
@@ -345,6 +433,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                     ten.launches.to_string(),
                     ten.cached_tasks.to_string(),
                     ten.retries.to_string(),
+                    ten.pruned.to_string(),
+                    ten.speculative.to_string(),
                     (ten.cache.hits + ten.cache.disk_hits).to_string(),
                     ten.cache.misses.to_string(),
                     fmt_quota(ten.quota_bytes),
@@ -353,12 +443,14 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             }
             t.print("drain bill (per tenant, from the drained service)");
             println!(
-                "drain bill: {} jobs ({} failed, {} retried attempts), {} total launches, \
-                 service wall {}",
+                "drain bill: {} jobs ({} failed, {} retried attempts, {} evals pruned), \
+                 {} total launches ({} speculative), service wall {}",
                 bill.jobs,
                 bill.failed,
                 bill.retries,
+                bill.pruned,
                 bill.total_launches,
+                bill.speculative_launches,
                 fmt_secs(bill.wall_secs)
             );
         }
@@ -452,8 +544,8 @@ fn fmt_quota(quota_bytes: u64) -> String {
 /// The drained service's bill, as printed by every serve mode.
 fn print_service_report(report: &rtf_reuse::serve::ServiceReport) {
     let mut t = Table::new(&[
-        "tenant", "jobs", "failed", "retries", "launches", "cached", "hits", "misses", "hit %",
-        "served KiB", "quota MiB", "resident KiB", "evict", "exec wall",
+        "tenant", "jobs", "failed", "retries", "pruned", "spec", "launches", "cached", "hits",
+        "misses", "hit %", "served KiB", "quota MiB", "resident KiB", "evict", "exec wall",
     ]);
     for ten in &report.tenants {
         t.row(&[
@@ -461,6 +553,8 @@ fn print_service_report(report: &rtf_reuse::serve::ServiceReport) {
             ten.jobs.to_string(),
             ten.failed.to_string(),
             ten.retries.to_string(),
+            ten.pruned.to_string(),
+            ten.speculative.to_string(),
             ten.launches.to_string(),
             ten.cached_tasks.to_string(),
             (ten.cache.hits + ten.cache.disk_hits).to_string(),
@@ -475,12 +569,14 @@ fn print_service_report(report: &rtf_reuse::serve::ServiceReport) {
     }
     t.print("per-tenant bill (one shared reuse cache)");
     let retried: u64 = report.jobs.iter().map(|j| j.retries).sum();
+    let pruned: u64 = report.jobs.iter().map(|j| j.pruned).sum();
     println!(
-        "service: {} jobs ({retried} retried attempts), {} total launches \
-         ({} shared input launches), wall {}",
+        "service: {} jobs ({retried} retried attempts, {pruned} evals pruned), \
+         {} total launches ({} shared input, {} speculative), wall {}",
         report.jobs.len(),
         report.total_launches(),
         report.input_launches,
+        report.speculative_launches,
         fmt_secs(report.wall.as_secs_f64())
     );
     if report.warm.scanned > 0 || report.warm.swept > 0 {

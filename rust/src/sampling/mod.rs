@@ -19,7 +19,7 @@ mod vbd;
 
 pub use lhs::LatinHypercube;
 pub use mc::MonteCarlo;
-pub use moat::{MoatDesign, MoatSample};
+pub use moat::{MoatDesign, MoatSample, MoatStep, Trajectory};
 pub use qmc::{halton, HaltonSampler};
 pub use space::{default_space, ParamDef, ParamSpace, ParamSet, CANONICAL_ACTIVE};
 pub use vbd::{VbdDesign, VbdSample};

@@ -35,6 +35,15 @@
 //! (optimizers revisit quantized points constantly), so concurrent
 //! tuning tenants lean on the shared cache hardest.
 //!
+//! Two run-time adaptivity layers ride on top (protocol v5): studies
+//! submitted with `adaptive=on` run through [`crate::adaptive`] — the
+//! incremental estimator prunes not-yet-launched work once a
+//! parameter's confidence interval drops below threshold, billed as
+//! `pruned` — and with `speculate=on`, idle workers pre-execute a
+//! tuning job's *predicted* next generation through the single-flight
+//! cache path under the [`SPECULATIVE_TENANT`] pseudo-scope.
+//! Speculation can only ever warm the cache; it never changes a result.
+//!
 //! The network layer on top ([`protocol`], [`server`], [`client`])
 //! turns the in-process queue into a service remote clients drive over
 //! TCP: `rtf-reuse serve listen=ADDR` accepts length-delimited JSONL
@@ -77,4 +86,7 @@ mod service;
 pub use client::{parse_jobs_file, run_jobs, ClientOutcome, JobSpec};
 pub use protocol::{WireBill, WireJobReport, WireTenantBill, PROTOCOL_VERSION};
 pub use server::WireServer;
-pub use service::{JobReport, ServeOptions, ServiceReport, StudyJob, StudyService, TenantReport};
+pub use service::{
+    JobReport, ServeOptions, ServiceReport, StudyJob, StudyService, TenantReport,
+    SPECULATIVE_TENANT,
+};

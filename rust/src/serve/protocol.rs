@@ -71,8 +71,12 @@ use super::service::{JobReport, ServiceReport};
 /// `job-report`, the per-tenant bill rows and the bill (retried
 /// attempts billed distinctly), the `warm_swept`/`warm_metrics` fields
 /// to the bill's warm-start block, and the `over-window` error code
-/// (per-connection submit backpressure).
-pub const PROTOCOL_VERSION: u32 = 4;
+/// (per-connection submit backpressure); v5 — adds the adaptive-run
+/// `pruned` and speculative-execution `speculative` fields to
+/// `job-report` and the per-tenant bill rows, and the bill-level
+/// `pruned` total and `speculative_launches` global (speculation is
+/// billed like input building: globally, to no tenant).
+pub const PROTOCOL_VERSION: u32 = 5;
 
 /// Frame tag: protocol name plus frame-format version.
 pub const FRAME_TAG: &str = "rtfp1";
@@ -274,6 +278,13 @@ pub struct WireJobReport {
     pub cached_tasks: u64,
     /// Retried attempts this job consumed (protocol v4).
     pub retries: u64,
+    /// Evaluations the adaptive pruner cancelled before launch
+    /// (protocol v5; 0 for non-adaptive jobs).
+    pub pruned: u64,
+    /// Speculative launches completed on this job's behalf by report
+    /// time (protocol v5; a lower bound — the authoritative global is
+    /// the bill's `speculative_launches`).
+    pub speculative: u64,
     pub queue_wait_secs: f64,
     pub exec_wall_secs: f64,
     /// Per-evaluation scalar outputs (the SA estimator inputs). For a
@@ -299,6 +310,8 @@ impl From<&JobReport> for WireJobReport {
             launches: j.launches,
             cached_tasks: j.cached_tasks,
             retries: j.retries,
+            pruned: j.pruned,
+            speculative: j.speculative,
             queue_wait_secs: j.queue_wait.as_secs_f64(),
             exec_wall_secs: j.exec_wall.as_secs_f64(),
             y: j.y.clone(),
@@ -319,6 +332,13 @@ pub struct WireTenantBill {
     pub cached_tasks: u64,
     /// Retried attempts across this tenant's jobs (protocol v4).
     pub retries: u64,
+    /// Pruned evaluations across this tenant's adaptive jobs
+    /// (protocol v5).
+    pub pruned: u64,
+    /// Speculative launches performed on this tenant's jobs' behalf
+    /// (protocol v5; informational — billed globally, not to the
+    /// tenant).
+    pub speculative: u64,
     pub bytes_served: u64,
     pub quota_bytes: u64,
     pub queue_wait_secs: f64,
@@ -334,10 +354,17 @@ pub struct WireBill {
     pub failed: u64,
     /// Retried attempts across every job (protocol v4).
     pub retries: u64,
+    /// Pruned evaluations across every adaptive job (protocol v5).
+    pub pruned: u64,
     /// Launches spent building shared study inputs (not billed to any
     /// tenant).
     pub input_launches: u64,
-    /// Input launches plus every job's launches — THE service-wide cost.
+    /// Launches spent on speculative pre-execution over the service
+    /// lifetime (protocol v5) — the authoritative global count, billed
+    /// like input building: to no tenant.
+    pub speculative_launches: u64,
+    /// Input launches plus speculative launches plus every job's
+    /// launches — THE service-wide cost.
     pub total_launches: u64,
     pub wall_secs: f64,
     pub tenants: Vec<WireTenantBill>,
@@ -361,7 +388,9 @@ impl From<&ServiceReport> for WireBill {
             jobs: r.jobs.len() as u64,
             failed: r.jobs.iter().filter(|j| !j.ok()).count() as u64,
             retries: r.jobs.iter().map(|j| j.retries).sum(),
+            pruned: r.jobs.iter().map(|j| j.pruned).sum(),
             input_launches: r.input_launches,
+            speculative_launches: r.speculative_launches,
             total_launches: r.total_launches(),
             wall_secs: r.wall.as_secs_f64(),
             tenants: r
@@ -374,6 +403,8 @@ impl From<&ServiceReport> for WireBill {
                     launches: t.launches,
                     cached_tasks: t.cached_tasks,
                     retries: t.retries,
+                    pruned: t.pruned,
+                    speculative: t.speculative,
                     bytes_served: t.bytes_served,
                     quota_bytes: t.quota_bytes,
                     queue_wait_secs: t.queue_wait.as_secs_f64(),
@@ -662,6 +693,8 @@ impl WireJobReport {
             ("launches", ju(self.launches)),
             ("cached_tasks", ju(self.cached_tasks)),
             ("retries", ju(self.retries)),
+            ("pruned", ju(self.pruned)),
+            ("speculative", ju(self.speculative)),
             ("queue_wait_secs", jf(self.queue_wait_secs)),
             ("exec_wall_secs", jf(self.exec_wall_secs)),
             ("y", Json::Arr(self.y.iter().map(|&v| Json::Num(v)).collect())),
@@ -688,6 +721,8 @@ impl WireJobReport {
             launches: u64_field(o, "launches")?,
             cached_tasks: u64_field(o, "cached_tasks")?,
             retries: u64_field(o, "retries")?,
+            pruned: u64_field(o, "pruned")?,
+            speculative: u64_field(o, "speculative")?,
             queue_wait_secs: f64_field(o, "queue_wait_secs")?,
             exec_wall_secs: f64_field(o, "exec_wall_secs")?,
             y: f64_arr(o, "y")?,
@@ -705,6 +740,8 @@ impl WireTenantBill {
             ("launches", ju(self.launches)),
             ("cached_tasks", ju(self.cached_tasks)),
             ("retries", ju(self.retries)),
+            ("pruned", ju(self.pruned)),
+            ("speculative", ju(self.speculative)),
             ("bytes_served", ju(self.bytes_served)),
             ("quota_bytes", ju(self.quota_bytes)),
             ("queue_wait_secs", jf(self.queue_wait_secs)),
@@ -721,6 +758,8 @@ impl WireTenantBill {
             launches: u64_field(o, "launches")?,
             cached_tasks: u64_field(o, "cached_tasks")?,
             retries: u64_field(o, "retries")?,
+            pruned: u64_field(o, "pruned")?,
+            speculative: u64_field(o, "speculative")?,
             bytes_served: u64_field(o, "bytes_served")?,
             quota_bytes: u64_field(o, "quota_bytes")?,
             queue_wait_secs: f64_field(o, "queue_wait_secs")?,
@@ -737,7 +776,9 @@ impl WireBill {
             ("jobs", ju(self.jobs)),
             ("failed", ju(self.failed)),
             ("retries", ju(self.retries)),
+            ("pruned", ju(self.pruned)),
             ("input_launches", ju(self.input_launches)),
+            ("speculative_launches", ju(self.speculative_launches)),
             ("total_launches", ju(self.total_launches)),
             ("wall_secs", jf(self.wall_secs)),
             ("tenants", Json::Arr(self.tenants.iter().map(WireTenantBill::to_json).collect())),
@@ -759,7 +800,9 @@ impl WireBill {
             jobs: u64_field(o, "jobs")?,
             failed: u64_field(o, "failed")?,
             retries: u64_field(o, "retries")?,
+            pruned: u64_field(o, "pruned")?,
             input_launches: u64_field(o, "input_launches")?,
+            speculative_launches: u64_field(o, "speculative_launches")?,
             total_launches: u64_field(o, "total_launches")?,
             wall_secs: f64_field(o, "wall_secs")?,
             tenants,
@@ -951,6 +994,8 @@ mod tests {
             launches: 120,
             cached_tasks: 40,
             retries: 1,
+            pruned: 6,
+            speculative: 9,
             queue_wait_secs: 0.25,
             exec_wall_secs: 1.5,
             y: vec![0.5, 0.25],
@@ -979,12 +1024,16 @@ mod tests {
         roundtrip(Message::Bill(Box::new(WireBill {
             jobs: 2,
             retries: 3,
+            pruned: 6,
+            speculative_launches: 11,
             total_launches: 99,
             tenants: vec![WireTenantBill {
                 tenant: "alice".into(),
                 jobs: 1,
                 launches: 90,
                 retries: 3,
+                pruned: 6,
+                speculative: 9,
                 quota_bytes: 1 << 20,
                 cache: CacheStats { hits: 5, misses: 4, ..CacheStats::default() },
                 ..WireTenantBill::default()

@@ -19,8 +19,9 @@ use crate::driver::{
 };
 use crate::faults::Faults;
 use crate::runtime::PjrtEngine;
-use crate::sampling::default_space;
-use crate::tune::{run_tune, TuneOptions, TuneSummary};
+use crate::adaptive::run_adaptive_scoped;
+use crate::sampling::{default_space, ParamSet};
+use crate::tune::{run_tune_with_hook, SpeculationHook, TuneOptions, TuneSummary};
 use crate::{Error, Result};
 
 /// Service shape. The service pins the execution-environment knobs
@@ -83,6 +84,15 @@ pub struct ServeOptions {
     /// nor failed) before further submits are refused with an
     /// `over-window` error frame.
     pub submit_window: usize,
+    /// Speculative execution (`speculate=on`): while a tuning job's
+    /// generation is being scored, idle workers pre-execute the tuner's
+    /// predicted next generation through the normal single-flight cache
+    /// path. Speculation can only ever warm the cache — a wrong guess
+    /// is a pre-warmed entry, never a changed result — and its launches
+    /// are billed distinctly ([`ServiceReport::speculative_launches`]),
+    /// never charged to a tenant. A tune job's own `speculate=on`
+    /// enables it for that job even when this is off.
+    pub speculate: bool,
     /// Fault-injection hook (see [`crate::faults`]) threaded into the
     /// shared cache's disk tier, the remote tier, the wire server's
     /// outbound frames, and every *study* worker engine. The leader
@@ -112,10 +122,17 @@ impl Default for ServeOptions {
             job_deadline: None,
             drain_deadline: Some(DEFAULT_DRAIN_DEADLINE),
             submit_window: DEFAULT_SUBMIT_WINDOW,
+            speculate: false,
             faults: Faults::none(),
         }
     }
 }
+
+/// The pseudo-tenant speculative executions bill their cache traffic
+/// under: a real scope (so tenant-scoped sums still equal the global
+/// counters with speculation on) that no client tenant can collide with
+/// (`~` never appears in real tenant names; jobs count 0).
+pub const SPECULATIVE_TENANT: &str = "~speculative";
 
 /// Default extra attempts per failed job (`retries=` flag).
 pub const DEFAULT_JOB_RETRIES: u32 = 2;
@@ -150,6 +167,7 @@ impl ServeOptions {
             cluster_addr: if sc.peers.is_empty() { None } else { sc.listen.clone() },
             job_retries: sc.job_retries.unwrap_or(DEFAULT_JOB_RETRIES),
             submit_window: sc.submit_window.unwrap_or(DEFAULT_SUBMIT_WINDOW),
+            speculate: sc.speculate.unwrap_or(false),
             ..ServeOptions::default()
         }
     }
@@ -206,6 +224,16 @@ pub struct JobReport {
     /// `retries > 0`; a job that failed with `retries == job_retries`
     /// exhausted its budget.
     pub retries: u64,
+    /// Adaptive studies only: evaluations the online pruner cancelled
+    /// before launch (work a non-adaptive run would have paid for).
+    /// Pruned output slots hold 0.0 in `y`; never silently dropped.
+    pub pruned: u64,
+    /// Speculative launches completed on this job's behalf by the time
+    /// its report was assembled — a lower bound: speculation still in
+    /// flight lands only in the global
+    /// [`ServiceReport::speculative_launches`]. Billed to the
+    /// [`SPECULATIVE_TENANT`] scope, never to this tenant.
+    pub speculative: u64,
     /// Time spent queued before a worker picked the job up.
     pub queue_wait: Duration,
     /// Wall time of the study execution itself (the successful — or
@@ -231,6 +259,13 @@ pub struct TenantReport {
     /// [`JobReport::retries`]) — recovery work the service performed on
     /// the tenant's behalf, billed distinctly from first attempts.
     pub retries: u64,
+    /// Pruned evaluations across this tenant's adaptive jobs (sum of
+    /// per-job [`JobReport::pruned`]).
+    pub pruned: u64,
+    /// Speculative launches performed on this tenant's jobs' behalf
+    /// (sum of per-job [`JobReport::speculative`]) — informational;
+    /// the launches themselves are billed to [`SPECULATIVE_TENANT`].
+    pub speculative: u64,
     /// This tenant's scoped cache counters (hits/misses/inserts/metric
     /// rows; global-only fields zero). Tenant scopes sum exactly to the
     /// service's global [`ServiceReport::cache`] on those fields.
@@ -258,6 +293,12 @@ pub struct ServiceReport {
     /// Backend launches spent building memoized study inputs (reference
     /// chains) — shared across tenants, so accounted globally.
     pub input_launches: u64,
+    /// Backend launches spent on speculative execution over the service
+    /// lifetime (the authoritative global count; per-job `speculative`
+    /// fields are point-in-time lower bounds). Speculation only warms
+    /// the cache, so these launches are accounted globally — like input
+    /// building — rather than charged to any tenant.
+    pub speculative_launches: u64,
     /// What the boot-time disk warm start admitted (zeros when off).
     pub warm: WarmStartReport,
     /// Service lifetime, start to drain.
@@ -266,11 +307,13 @@ pub struct ServiceReport {
 
 impl ServiceReport {
     /// Total backend launches the whole service paid: every tenant's
-    /// study launches plus the shared input building. THE multi-tenant
-    /// acceptance metric — N warm tenants must keep this near one cold
-    /// tenant's count.
+    /// study launches plus the shared input building plus speculative
+    /// pre-execution. THE multi-tenant acceptance metric — N warm
+    /// tenants must keep this near one cold tenant's count.
     pub fn total_launches(&self) -> u64 {
-        self.input_launches + self.jobs.iter().map(|j| j.launches).sum::<u64>()
+        self.input_launches
+            + self.speculative_launches
+            + self.jobs.iter().map(|j| j.launches).sum::<u64>()
     }
 
     /// Sum of every tenant's scoped counters — equals [`Self::cache`] on
@@ -305,9 +348,28 @@ struct Queued {
     submitted: Instant,
 }
 
+/// A speculative unit: the tuner's *predicted* next generation, queued
+/// for idle workers to pre-execute through the normal single-flight
+/// cache path. Wrong guesses cost only their launches — results are
+/// only ever written into the shared cache, never into any job report.
+struct SpecJob {
+    /// The tune job the prediction came from (per-job `speculative`
+    /// accounting).
+    job: u64,
+    /// The *pinned* study config the tune loop executes with — using it
+    /// verbatim guarantees speculative cache keys match the real ones.
+    cfg: StudyConfig,
+    /// The predicted candidate parameter sets.
+    sets: Vec<ParamSet>,
+}
+
 #[derive(Default)]
 struct ServiceState {
     queue: VecDeque<Queued>,
+    /// Speculative work, strictly lower priority than `queue`: a worker
+    /// only picks speculation up when no real job is eligible, and
+    /// draining discards the whole backlog.
+    spec: VecDeque<SpecJob>,
     inflight: HashMap<String, usize>,
     draining: bool,
     results: Vec<JobReport>,
@@ -375,6 +437,14 @@ struct Inner {
     /// The process-lifetime leader engine (input building).
     leader: Mutex<PjrtEngine>,
     input_launches: AtomicU64,
+    /// Backend launches spent on speculative pre-execution (global,
+    /// authoritative — mirrors `input_launches`' treatment of shared
+    /// work).
+    speculative_launches: AtomicU64,
+    /// Speculative launches completed per originating tune job, for the
+    /// per-job `speculative` report field (a lower bound at report
+    /// time).
+    spec_launches: Mutex<HashMap<u64, u64>>,
     /// What the boot-time warm start admitted.
     warm: WarmStartReport,
 }
@@ -423,6 +493,8 @@ impl StudyService {
             inputs: Mutex::new(HashMap::new()),
             leader: Mutex::new(leader),
             input_launches: AtomicU64::new(0),
+            speculative_launches: AtomicU64::new(0),
+            spec_launches: Mutex::new(HashMap::new()),
             warm,
         });
         let threads = (0..workers)
@@ -517,6 +589,17 @@ impl StudyService {
         self.inner.state.lock().unwrap().results.len()
     }
 
+    /// Speculative units queued but not yet picked up by an idle worker
+    /// (diagnostics; tests poll this to observe speculation draining).
+    pub fn speculative_pending(&self) -> usize {
+        self.inner.state.lock().unwrap().spec.len()
+    }
+
+    /// Backend launches spent on speculative pre-execution so far.
+    pub fn speculative_launches(&self) -> u64 {
+        self.inner.speculative_launches.load(Ordering::Relaxed)
+    }
+
     /// Block until job `id` finishes and return its report; `None` when
     /// the service never issued `id`. The wire server's `result`
     /// message is served by this.
@@ -569,6 +652,8 @@ impl StudyService {
                     launches: mine.iter().map(|j| j.launches).sum(),
                     cached_tasks: mine.iter().map(|j| j.cached_tasks).sum(),
                     retries: mine.iter().map(|j| j.retries).sum(),
+                    pruned: mine.iter().map(|j| j.pruned).sum(),
+                    speculative: mine.iter().map(|j| j.speculative).sum(),
                     cache: scope.stats(),
                     bytes_served: scope.state_bytes_served(),
                     quota_bytes: scope.quota_bytes(),
@@ -584,6 +669,7 @@ impl StudyService {
             tenants,
             cache: self.inner.cache.stats(),
             input_launches: self.inner.input_launches.load(Ordering::Relaxed),
+            speculative_launches: self.inner.speculative_launches.load(Ordering::Relaxed),
             warm: self.inner.warm,
             wall: self.started.elapsed(),
         };
@@ -630,28 +716,51 @@ fn join_workers(handles: Vec<JoinHandle<()>>, patience: Option<Duration>) {
     }
 }
 
+/// What a worker picked up: a real tenant job, or (only when no real
+/// job was eligible) a speculative pre-execution unit.
+enum Work {
+    Real(Queued),
+    Spec(SpecJob),
+}
+
 fn worker_loop(inner: Arc<Inner>) {
     loop {
-        let queued = {
+        let work = {
             let mut st = inner.state.lock().unwrap();
             loop {
                 if let Some(q) = pop_next(&mut st, &inner.opts) {
-                    break q;
+                    break Work::Real(q);
                 }
-                if st.draining && st.queue.is_empty() {
-                    return;
+                if st.draining {
+                    // drain discards speculation outright: it is by
+                    // definition work nobody asked for, and executing
+                    // it would delay (never wedge, but delay) shutdown
+                    st.spec.clear();
+                    if st.queue.is_empty() {
+                        return;
+                    }
+                } else if let Some(s) = st.spec.pop_front() {
+                    break Work::Spec(s);
                 }
                 st = inner.cv.wait(st).unwrap();
             }
         };
-        let tenant = queued.tenant.clone();
-        let report = inner.run_job(queued);
-        let mut st = inner.state.lock().unwrap();
-        st.results.push(report);
-        if let Some(n) = st.inflight.get_mut(&tenant) {
-            *n = n.saturating_sub(1);
+        match work {
+            Work::Real(queued) => {
+                let tenant = queued.tenant.clone();
+                let report = inner.run_job(queued);
+                let mut st = inner.state.lock().unwrap();
+                st.results.push(report);
+                if let Some(n) = st.inflight.get_mut(&tenant) {
+                    *n = n.saturating_sub(1);
+                }
+                inner.cv.notify_all();
+            }
+            Work::Spec(spec) => {
+                inner.execute_speculative(spec);
+                inner.cv.notify_all();
+            }
         }
-        inner.cv.notify_all();
     }
 }
 
@@ -709,6 +818,8 @@ impl Inner {
             y: Vec::new(),
             tune: None,
             retries: 0,
+            pruned: 0,
+            speculative: 0,
             queue_wait,
             exec_wall: Duration::ZERO,
         };
@@ -719,7 +830,8 @@ impl Inner {
             attempt += 1;
             // a panicking study must not take the worker (and the
             // tenant's in-flight slot) down with it
-            let outcome = catch_unwind(AssertUnwindSafe(|| self.execute_job(&tenant, &payload)));
+            let outcome =
+                catch_unwind(AssertUnwindSafe(|| self.execute_job(id, &tenant, &payload)));
             let error = match outcome {
                 Ok(Ok(out)) => {
                     report.n_evals = out.n_evals;
@@ -727,6 +839,9 @@ impl Inner {
                     report.cached_tasks = out.cached_tasks;
                     report.y = out.y;
                     report.tune = out.tune;
+                    report.pruned = out.pruned;
+                    report.speculative =
+                        self.spec_launches.lock().unwrap().get(&id).copied().unwrap_or(0);
                     report.exec_wall = out.exec_wall;
                     report.error = None;
                     return report;
@@ -752,7 +867,7 @@ impl Inner {
         }
     }
 
-    fn execute_job(&self, tenant: &str, payload: &JobPayload) -> Result<ExecOut> {
+    fn execute_job(&self, id: u64, tenant: &str, payload: &JobPayload) -> Result<ExecOut> {
         // pin the execution environment to the service's
         let base = match payload {
             JobPayload::Study(cfg) => cfg,
@@ -766,6 +881,28 @@ impl Inner {
         cfg.faults = self.opts.faults.clone();
 
         match payload {
+            JobPayload::Study(_) if cfg.adaptive.enabled => {
+                // adaptive path: the incremental estimator decides unit
+                // by unit; pruned slots are billed, not silently dropped
+                let prepared = prepare(&cfg);
+                let inputs = self.inputs_for(&cfg, &prepared)?;
+                let scope = self.scope_of(tenant);
+                let out = run_adaptive_scoped(
+                    &cfg,
+                    Some(Arc::clone(&self.cache)),
+                    Some(scope),
+                    &inputs,
+                )?;
+                Ok(ExecOut {
+                    n_evals: prepared.n_evals(),
+                    launches: out.launches,
+                    cached_tasks: out.cached_tasks,
+                    y: out.y,
+                    tune: None,
+                    pruned: out.pruned,
+                    exec_wall: out.wall,
+                })
+            }
             JobPayload::Study(_) => {
                 let prepared = prepare(&cfg);
                 let mut plan = prepared.plan(&cfg);
@@ -787,6 +924,7 @@ impl Inner {
                     cached_tasks: outcome.timer.cached_served(),
                     y: outcome.y,
                     tune: None,
+                    pruned: 0,
                     exec_wall: outcome.wall,
                 })
             }
@@ -796,18 +934,83 @@ impl Inner {
                 let probe = prepare_candidates(&cfg, &[default_space().defaults()]);
                 let inputs = self.inputs_for(&cfg, &probe)?;
                 let scope = self.scope_of(tenant);
-                let outcome =
-                    run_tune(&cfg, topts, Some(Arc::clone(&self.cache)), Some(scope), &inputs)?;
+                let speculate = self.opts.speculate || topts.speculate;
+                let hook = ServiceSpeculation { inner: self, job: id, cfg: cfg.clone() };
+                let outcome = run_tune_with_hook(
+                    &cfg,
+                    topts,
+                    Some(Arc::clone(&self.cache)),
+                    Some(scope),
+                    &inputs,
+                    if speculate { Some(&hook) } else { None },
+                )?;
                 Ok(ExecOut {
                     n_evals: outcome.evaluated * cfg.tiles.max(1),
                     launches: outcome.launches,
                     cached_tasks: outcome.cached_tasks,
                     y: outcome.history.iter().map(|g| g.best_score).collect(),
                     tune: Some(outcome.summary()),
+                    pruned: 0,
                     exec_wall: outcome.wall,
                 })
             }
         }
+    }
+
+    /// Pre-execute one predicted generation under the speculative
+    /// pseudo-tenant's scope. Errors and panics are swallowed: a failed
+    /// speculation is exactly as harmless as no speculation — the only
+    /// durable effect of success is a warmer cache.
+    fn execute_speculative(&self, spec: SpecJob) {
+        let outcome = catch_unwind(AssertUnwindSafe(|| -> Result<u64> {
+            let prepared = prepare_candidates(&spec.cfg, &spec.sets);
+            let mut plan = prepared.plan(&spec.cfg);
+            let inputs = self.inputs_for(&spec.cfg, &prepared)?;
+            let _ = prune_plan_with_inputs(&prepared, &mut plan, &self.cache, &inputs);
+            let scope = self.scope_of(SPECULATIVE_TENANT);
+            let out = run_pjrt_with_inputs_scoped(
+                &spec.cfg,
+                &prepared,
+                &plan,
+                Some(Arc::clone(&self.cache)),
+                Some(scope),
+                &inputs,
+            )?;
+            Ok(out.timer.launches())
+        }));
+        if let Ok(Ok(launches)) = outcome {
+            self.speculative_launches.fetch_add(launches, Ordering::Relaxed);
+            *self.spec_launches.lock().unwrap().entry(spec.job).or_insert(0) += launches;
+        }
+    }
+}
+
+/// The [`SpeculationHook`] a tune job threads into its optimizer loop:
+/// `offer` enqueues the predicted next generation for idle workers.
+/// Queued (never executed inline) so prediction never delays the real
+/// generation; dropped wholesale once draining starts.
+struct ServiceSpeculation<'a> {
+    inner: &'a Inner,
+    job: u64,
+    /// The pinned study config of the tune job (same cache keys).
+    cfg: StudyConfig,
+}
+
+impl SpeculationHook for ServiceSpeculation<'_> {
+    fn offer(&self, candidates: &[ParamSet]) {
+        if candidates.is_empty() {
+            return;
+        }
+        let mut st = self.inner.state.lock().unwrap();
+        if st.draining {
+            return;
+        }
+        st.spec.push_back(SpecJob {
+            job: self.job,
+            cfg: self.cfg.clone(),
+            sets: candidates.to_vec(),
+        });
+        self.inner.cv.notify_all();
     }
 }
 
@@ -819,10 +1022,7 @@ impl Inner {
 fn retry_backoff(job: u64, attempt: u64) -> Duration {
     let doubled = Duration::from_millis(10) * (1u32 << attempt.saturating_sub(1).min(6) as u32);
     let capped = doubled.min(Duration::from_millis(500));
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for word in [job, attempt] {
-        h = (h ^ word).wrapping_mul(0x100_0000_01b3);
-    }
+    let h = crate::testutil::fnv1a64(&[job, attempt]);
     capped + capped * ((h % 50) as u32) / 100
 }
 
@@ -833,6 +1033,8 @@ struct ExecOut {
     cached_tasks: u64,
     y: Vec<f64>,
     tune: Option<TuneSummary>,
+    /// Adaptive studies: evaluations the pruner cancelled before launch.
+    pruned: u64,
     exec_wall: Duration,
 }
 
@@ -1074,14 +1276,88 @@ mod tests {
         assert_eq!(base.submit_window, DEFAULT_SUBMIT_WINDOW);
         assert_eq!(base.drain_deadline, Some(DEFAULT_DRAIN_DEADLINE));
         assert_eq!(base.job_deadline, None);
+        assert!(!base.speculate, "speculation is opt-in");
         assert!(!base.faults.is_active());
 
         let args: Vec<String> =
-            ["window=3", "retries=0"].iter().map(|s| s.to_string()).collect();
+            ["window=3", "retries=0", "speculate=on"].iter().map(|s| s.to_string()).collect();
         let sc = ServeConfig::from_args(&args).unwrap();
         let o = ServeOptions::from_config(&sc);
         assert_eq!(o.submit_window, 3);
         assert_eq!(o.job_retries, 0, "retries=0 disables retry");
+        assert!(o.speculate, "speculate=on reaches the options");
+    }
+
+    /// Pin the execution-environment fields exactly as `execute_job`
+    /// would before it builds the speculation hook.
+    fn pinned_cfg(svc: &StudyService) -> StudyConfig {
+        let mut cfg = small_cfg();
+        cfg.engine = EngineMode::Pjrt;
+        cfg.artifacts_dir = svc.inner.opts.artifacts_dir.clone();
+        cfg.workers = svc.inner.opts.study_workers;
+        cfg.batch_width = svc.inner.opts.batch_width;
+        cfg
+    }
+
+    #[test]
+    fn speculative_execution_bills_the_pseudo_tenant_not_a_client() {
+        let svc = StudyService::start(opts(1)).expect("service starts");
+        let cfg = pinned_cfg(&svc);
+        svc.inner.execute_speculative(SpecJob {
+            job: 42,
+            cfg,
+            sets: vec![default_space().defaults()],
+        });
+        // the cache was cold, so the speculative unit certainly launched;
+        // its work lands in the global speculative ledger and the per-job
+        // map, never in a client tenant's row
+        let spent = svc.speculative_launches();
+        assert!(spent > 0, "cold speculation launches");
+        assert_eq!(svc.inner.spec_launches.lock().unwrap().get(&42).copied(), Some(spent));
+
+        let report = svc.drain();
+        assert_eq!(report.speculative_launches, spent);
+        let spec = report.tenant(SPECULATIVE_TENANT).expect("pseudo-tenant row in the bill");
+        assert_eq!(spec.jobs, 0, "no client job ran under the pseudo-tenant");
+        assert!(
+            spec.cache.misses + spec.cache.inserts > 0,
+            "the speculative cache traffic is billed to the pseudo-tenant"
+        );
+        // the pseudo-tenant keeps the ledger arithmetic exact
+        let sums = report.scoped_totals();
+        assert_eq!(sums.misses, report.cache.misses);
+        assert_eq!(sums.inserts, report.cache.inserts);
+        assert_eq!(report.total_launches(), report.input_launches + spent);
+    }
+
+    #[test]
+    fn drain_discards_queued_speculation_without_wedging() {
+        let svc = StudyService::start(opts(1)).expect("service starts");
+        let cfg = pinned_cfg(&svc);
+        {
+            // queue speculation and start draining in one critical
+            // section, so no worker can slip in and execute it
+            let mut st = svc.inner.state.lock().unwrap();
+            st.spec.push_back(SpecJob { job: 1, cfg, sets: vec![default_space().defaults()] });
+            st.draining = true;
+        }
+        let report = svc.drain();
+        assert_eq!(report.speculative_launches, 0, "discarded speculation never ran");
+        assert!(report.tenant(SPECULATIVE_TENANT).is_none(), "no pseudo-tenant scope created");
+        assert_eq!(svc.speculative_pending(), 0, "the backlog was cleared");
+    }
+
+    #[test]
+    fn speculation_offers_are_refused_when_empty_or_draining() {
+        let svc = StudyService::start(opts(1)).expect("service starts");
+        let hook = ServiceSpeculation { inner: &svc.inner, job: 9, cfg: pinned_cfg(&svc) };
+        hook.offer(&[]);
+        assert_eq!(svc.speculative_pending(), 0, "an empty prediction is not queued");
+        svc.inner.state.lock().unwrap().draining = true;
+        hook.offer(&[default_space().defaults()]);
+        assert_eq!(svc.speculative_pending(), 0, "draining refuses new speculation");
+        // un-drain so the Drop-join path exercises the empty queue
+        svc.inner.state.lock().unwrap().draining = false;
     }
 
     #[test]

@@ -21,7 +21,10 @@ use super::{TuneOptions, Tuner};
 /// One genome: a grid-level index per active parameter.
 type Genome = Vec<usize>;
 
-/// The GA tuner (see the module docs).
+/// The GA tuner (see the module docs). `Clone` exists for
+/// [`Tuner::speculate_next`]: predicting the next generation runs
+/// tell → ask on a throwaway copy, leaving the real state untouched.
+#[derive(Clone)]
 pub struct Genetic {
     space: ParamSpace,
     active: Vec<usize>,
@@ -154,6 +157,15 @@ impl Tuner for Genetic {
         self.population.sort_by(|a, b| b.1.total_cmp(&a.1));
         self.population.truncate(self.pop_size);
     }
+
+    fn speculate_next(&self, guessed_scores: &[f64]) -> Vec<ParamSet> {
+        if guessed_scores.len() != self.pending.len() || self.pending.is_empty() {
+            return Vec::new();
+        }
+        let mut copy = self.clone();
+        copy.tell(guessed_scores);
+        copy.ask()
+    }
 }
 
 #[cfg(test)]
@@ -207,6 +219,19 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn speculate_next_predicts_without_advancing_state() {
+        let mut ga = Genetic::new(default_space(), vec![5, 6], &opts(12, 4), 7);
+        let g1 = ga.ask();
+        let guess = vec![0.0; g1.len()];
+        let predicted = ga.speculate_next(&guess);
+        assert!(!predicted.is_empty());
+        assert_eq!(predicted, ga.speculate_next(&guess), "speculation is pure");
+        // telling the guessed scores for real yields exactly the prediction
+        ga.tell(&guess);
+        assert_eq!(ga.ask(), predicted);
     }
 
     #[test]

@@ -104,6 +104,12 @@ pub struct TuneOptions {
     pub init_window: (f64, f64),
     /// GA per-gene mutation probability.
     pub mutation: f64,
+    /// Ask the serving side to speculatively pre-execute this tuner's
+    /// predicted next generation while the current one is being scored
+    /// (`speculate=on`). Purely a cache-warming hint: the standalone
+    /// loop ignores it, and a wrong prediction costs idle-worker time,
+    /// never a changed result.
+    pub speculate: bool,
 }
 
 impl Default for TuneOptions {
@@ -118,6 +124,7 @@ impl Default for TuneOptions {
             cost_lambda: 0.0,
             init_window: (0.0, 1.0),
             mutation: 0.25,
+            speculate: false,
         }
     }
 }
@@ -145,6 +152,23 @@ pub trait Tuner {
     fn ask(&mut self) -> Vec<ParamSet>;
     /// Scores for the last asked generation, same order, higher better.
     fn tell(&mut self, scores: &[f64]);
+    /// Predict the generation this tuner would ask next if the
+    /// outstanding one scored `guessed_scores` — WITHOUT advancing any
+    /// state. Used by speculative execution ([`crate::serve`]) to warm
+    /// the cache while the real scores are still being computed; a
+    /// prediction is a pure hint, so the default is "no prediction".
+    fn speculate_next(&self, _guessed_scores: &[f64]) -> Vec<ParamSet> {
+        Vec::new()
+    }
+}
+
+/// Receiver of speculative-execution hints: [`run_tune_with_hook`]
+/// offers each predicted next generation here *before* scoring the real
+/// one, and the service's idle workers pre-execute the offered sets
+/// through the normal single-flight cache path. Implementations must
+/// treat offers as hints — dropping them is always correct.
+pub trait SpeculationHook: Sync {
+    fn offer(&self, candidates: &[ParamSet]);
 }
 
 /// Build the tuner a [`TuneOptions`] describes, seeded for determinism.
@@ -241,6 +265,24 @@ pub fn run_tune(
     scope: Option<Arc<ScopedCounters>>,
     inputs: &StudyInputs,
 ) -> Result<TuneOutcome> {
+    run_tune_with_hook(cfg, opts, cache, scope, inputs, None)
+}
+
+/// [`run_tune`] with a speculation hook: after each `ask` and *before*
+/// the generation is scored, the tuner's predicted next generation
+/// (assuming neutral scores — the prediction must not depend on results
+/// that don't exist yet) is offered to `hook`. Whether and when the
+/// hook executes the offer cannot affect this loop's results: the
+/// prediction never feeds back into the tuner, and any overlap with the
+/// real scoring resolves through the cache's single-flight claims.
+pub fn run_tune_with_hook(
+    cfg: &StudyConfig,
+    opts: &TuneOptions,
+    cache: Option<Arc<ReuseCache>>,
+    scope: Option<Arc<ScopedCounters>>,
+    inputs: &StudyInputs,
+    hook: Option<&dyn SpeculationHook>,
+) -> Result<TuneOutcome> {
     let start = Instant::now();
     let mut tuner = build_tuner(opts, cfg.seed);
     let objective = Objective::for_study(cfg, opts.objective, opts.cost_lambda);
@@ -257,6 +299,12 @@ pub fn run_tune(
         let generation = tuner.ask();
         if generation.is_empty() {
             break;
+        }
+        if let Some(h) = hook {
+            let predicted = tuner.speculate_next(&vec![0.0; generation.len()]);
+            if !predicted.is_empty() {
+                h.offer(&predicted);
+            }
         }
         let (ev_before, memo_before) = (ev.evaluated, ev.memo_hits);
         let scores = ev.score_batch(&generation)?;

@@ -23,6 +23,7 @@ use super::{TuneOptions, Tuner};
 /// A simplex vertex in the unit cube over the active dimensions.
 type Point = Vec<f64>;
 
+#[derive(Clone)]
 enum Phase {
     /// Nothing asked yet.
     Start,
@@ -40,7 +41,10 @@ enum Phase {
     Done,
 }
 
-/// The Nelder-Mead tuner (see the module docs).
+/// The Nelder-Mead tuner (see the module docs). `Clone` exists for
+/// [`Tuner::speculate_next`]: predicting the next generation runs
+/// tell → ask on a throwaway copy, leaving the real state untouched.
+#[derive(Clone)]
 pub struct NelderMead {
     space: ParamSpace,
     active: Vec<usize>,
@@ -245,6 +249,21 @@ impl Tuner for NelderMead {
             }
         }
     }
+
+    fn speculate_next(&self, guessed_scores: &[f64]) -> Vec<ParamSet> {
+        let outstanding = match &self.phase {
+            Phase::AwaitInit { pts } => pts.len(),
+            Phase::AwaitProbe { .. } => 4,
+            Phase::AwaitShrink { pts } => pts.len(),
+            _ => return Vec::new(),
+        };
+        if guessed_scores.len() != outstanding {
+            return Vec::new();
+        }
+        let mut copy = self.clone();
+        copy.tell(guessed_scores);
+        copy.ask()
+    }
 }
 
 #[cfg(test)]
@@ -309,6 +328,20 @@ mod tests {
             c.0 != a.0
         });
         assert!(differs, "ten nearby seeds cannot all reproduce seed 5's trajectory");
+    }
+
+    #[test]
+    fn speculate_next_predicts_without_advancing_state() {
+        let space = default_space();
+        let mut nm = NelderMead::new(space.clone(), vec![5, 6], &opts(40), 11);
+        let g1 = nm.ask();
+        let guess = vec![0.0; g1.len()];
+        let predicted = nm.speculate_next(&guess);
+        assert_eq!(predicted, nm.speculate_next(&guess), "speculation is pure");
+        nm.tell(&guess);
+        assert_eq!(nm.ask(), predicted, "telling the guess realizes the prediction");
+        // a guess of the wrong arity is refused, not mis-applied
+        assert!(nm.speculate_next(&[0.0]).is_empty());
     }
 
     #[test]

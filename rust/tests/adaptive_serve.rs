@@ -1,0 +1,173 @@
+//! The serve-side half of the run-time adaptivity story: adaptive
+//! studies bill their pruned evaluations at every level, speculative
+//! pre-execution is billed globally under the `~speculative`
+//! pseudo-tenant (never as a tenant's misses), drain never wedges on
+//! in-flight speculation, and the per-tenant scoped ledgers still
+//! partition the globals with speculation on. The standalone safety
+//! properties (surviving results bit-identical, `threshold=0` exact)
+//! live in `tests/prop_adaptive.rs`; this file proves the same
+//! machinery behaves under the multi-tenant service.
+
+use std::thread;
+use std::time::{Duration, Instant};
+
+use rtf_reuse::cache::CacheConfig;
+use rtf_reuse::config::{StudyConfig, TuneConfig};
+use rtf_reuse::sampling::default_space;
+use rtf_reuse::serve::{ServeOptions, ServiceReport, StudyJob, StudyService, SPECULATIVE_TENANT};
+
+fn opts(service_workers: usize) -> ServeOptions {
+    ServeOptions {
+        service_workers,
+        tenant_inflight_cap: 1,
+        study_workers: 2,
+        cache: CacheConfig { capacity_bytes: 512 * 1024 * 1024, ..CacheConfig::default() },
+        ..ServeOptions::default()
+    }
+}
+
+fn study_cfg(extra: &[&str]) -> StudyConfig {
+    let mut args: Vec<String> = vec!["method=moat".into(), "r=2".into()];
+    args.extend(extra.iter().map(|s| s.to_string()));
+    StudyConfig::from_args(&args).expect("test study args parse")
+}
+
+/// A GA tune whose budget spans three generations, so the tuner offers
+/// non-empty speculative predictions after the first and second.
+fn ga_tune(extra: &[&str]) -> TuneConfig {
+    let mut args: Vec<String> = ["tuner=ga", "budget=9", "population=3", "k-active=1", "r=1"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    args.extend(extra.iter().map(|s| s.to_string()));
+    TuneConfig::from_args(&args).expect("test tune args parse")
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Per-tenant scoped counters — including the `~speculative`
+/// pseudo-scope — must sum exactly to the shared cache's globals.
+fn assert_scoped_sums_match(report: &ServiceReport) {
+    let sums = report.scoped_totals();
+    assert_eq!(sums.hits, report.cache.hits, "scoped hits partition the globals");
+    assert_eq!(sums.disk_hits, report.cache.disk_hits, "scoped disk hits partition the globals");
+    assert_eq!(sums.misses, report.cache.misses, "scoped misses partition the globals");
+    assert_eq!(sums.inserts, report.cache.inserts, "scoped inserts partition the globals");
+}
+
+#[test]
+fn speculative_spend_bills_the_pseudo_tenant_and_ledgers_stay_exact() {
+    // one service worker: the tune job runs first, then the worker goes
+    // idle and works through the speculation backlog — every offered
+    // prediction executes through the scoped cache path before drain
+    let svc = StudyService::start(opts(1)).expect("service starts");
+    let tc = ga_tune(&["speculate=on"]);
+    let id = svc.submit_tune("dora", tc.study, tc.options).expect("submit tune");
+    let report = svc.wait_job(id).expect("job known");
+    assert!(report.ok(), "tune job failed: {:?}", report.error);
+
+    wait_until("the speculation backlog to drain", || svc.speculative_pending() == 0);
+    let report = svc.drain();
+    assert_eq!(report.jobs.len(), 1);
+    assert!(report.jobs[0].ok());
+
+    // a three-generation GA offers at least one non-empty prediction,
+    // so the pseudo-tenant scope exists — with no jobs of its own, and
+    // with real cache traffic from the pre-executions
+    let spec = report.tenant(SPECULATIVE_TENANT).expect("speculative pseudo-tenant billed");
+    assert_eq!(spec.jobs, 0, "the pseudo-tenant owns no jobs");
+    assert!(
+        spec.cache.hits + spec.cache.misses > 0,
+        "speculative pre-execution went through the scoped cache path"
+    );
+    // the job-level count is a lower bound on the global speculative
+    // spend (it reads whatever had executed by reporting time)
+    assert!(report.jobs[0].speculative <= report.speculative_launches);
+    // the launch ledger partitions: shared input builds + speculation +
+    // per-job work, with speculation never inside a tenant's row
+    assert_eq!(
+        report.total_launches(),
+        report.input_launches + report.speculative_launches + report.jobs[0].launches
+    );
+    assert_scoped_sums_match(&report);
+}
+
+#[test]
+fn drain_during_inflight_speculation_never_wedges() {
+    // two service workers and the service-level speculate flag: worker
+    // two pre-executes predictions while worker one still runs the
+    // tune. Draining mid-flight must complete the real job, discard or
+    // finish the speculation, and join — the drain return IS the
+    // no-wedge assertion
+    let mut o = opts(2);
+    o.speculate = true;
+    let svc = StudyService::start(o).expect("service starts");
+    let tc = ga_tune(&[]);
+    let id = svc.submit_tune("erin", tc.study, tc.options).expect("submit tune");
+
+    // drain as soon as speculation is observably queued, executing, or
+    // the job finished first — any interleaving must drain cleanly
+    wait_until("speculation or job completion", || {
+        svc.speculative_pending() > 0 || svc.speculative_launches() > 0 || svc.completed() > 0
+    });
+    let report = svc.drain();
+
+    assert_eq!(report.jobs.len(), 1, "the real job completed through the drain");
+    assert!(report.jobs[0].ok(), "job failed: {:?}", report.jobs[0].error);
+    assert_eq!(svc.speculative_pending(), 0, "drain leaves no speculation queued");
+    assert_eq!(report.jobs[0].job, id);
+    assert_eq!(report.jobs[0].tenant, "erin");
+    assert_scoped_sums_match(&report);
+}
+
+#[test]
+fn adaptive_studies_prune_and_bill_under_the_service() {
+    let k = default_space().dim();
+    let svc = StudyService::start(opts(1)).expect("service starts");
+    // three tenants, same MOAT r=2 design: the exhaustive baseline, an
+    // adaptive run at threshold=0 (must be exact), and an adaptive run
+    // whose absurd threshold prunes every parameter after the first
+    // trajectory (min-samples=1), dropping the entire second trajectory
+    let full = study_cfg(&[]);
+    let tiles = full.tiles;
+    svc.submit(StudyJob { tenant: "full".into(), cfg: full }).unwrap();
+    svc.submit(StudyJob {
+        tenant: "exact".into(),
+        cfg: study_cfg(&["adaptive=on", "threshold=0", "min-samples=1"]),
+    })
+    .unwrap();
+    svc.submit(StudyJob {
+        tenant: "pruned".into(),
+        cfg: study_cfg(&["adaptive=on", "threshold=1e18", "min-samples=1"]),
+    })
+    .unwrap();
+    let report = svc.drain();
+    assert_eq!(report.jobs.len(), 3);
+    assert!(report.jobs.iter().all(|j| j.ok()), "jobs: {:?}", report.jobs);
+    let (full, exact, pruned) = (&report.jobs[0], &report.jobs[1], &report.jobs[2]);
+
+    // threshold=0 never prunes: the adaptive run is the full run
+    assert_eq!(exact.pruned, 0);
+    assert_eq!(exact.y, full.y, "adaptive at threshold=0 is bit-identical to exhaustive");
+
+    // the absurd threshold prunes all k parameters after trajectory 1:
+    // its k+1 evaluations survive bit-identically, the second
+    // trajectory's k+1 evaluations are pruned 0.0 sentinels
+    let unit = (k + 1) * tiles;
+    assert_eq!(pruned.pruned, unit as u64, "exactly one trajectory was pruned");
+    assert_eq!(pruned.y[..unit], full.y[..unit], "surviving evaluations are bit-identical");
+    assert!(pruned.y[unit..].iter().all(|&v| v == 0.0), "pruned slots hold the sentinel");
+
+    // pruning is billed on the tenant rows, and only where it happened
+    assert_eq!(report.tenant("full").unwrap().pruned, 0);
+    assert_eq!(report.tenant("exact").unwrap().pruned, 0);
+    assert_eq!(report.tenant("pruned").unwrap().pruned, unit as u64);
+    assert_eq!(report.speculative_launches, 0, "studies never speculate");
+    assert_scoped_sums_match(&report);
+}

@@ -53,15 +53,10 @@ fn seeds() -> Vec<u64> {
     }
 }
 
-/// splitmix64 — a tiny deterministic stream so a seed expands into
-/// fault ordinals without pulling in an RNG dependency.
-fn splitmix(state: &mut u64) -> u64 {
-    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
-    let mut z = *state;
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    z ^ (z >> 31)
-}
+/// The shared splitmix64 stream expands a seed into fault ordinals —
+/// one definition in `rtf_reuse::testutil` keeps CI's pinned chaos
+/// seeds meaning the same fault schedule everywhere.
+use rtf_reuse::testutil::splitmix64 as splitmix;
 
 /// Node A hosts the cold study, so it gets the heavy script: a worker
 /// panic early in the run, one torn and one failed disk write, a

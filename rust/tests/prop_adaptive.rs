@@ -1,0 +1,259 @@
+//! The adaptive-execution safety harness: integration-level properties
+//! proving the run-time optimizations of `rtf_reuse::adaptive` can
+//! never change what is computed.
+//!
+//! * **Exactness at threshold=0** — `adaptive=on` with a zero threshold
+//!   must reproduce the exhaustive run *bit for bit* at every batch
+//!   width: the unit-at-a-time execution order, the per-unit candidate
+//!   batching, and the streaming estimator are all reorganizations of
+//!   the same floating-point work.
+//! * **Survivor bit-identity under pruning** — when the pruner does
+//!   fire (a threshold derived from the run's own confidence
+//!   intervals), every *surviving* evaluation is still bit-identical to
+//!   the exhaustive run, every pruned slot holds the 0.0 sentinel, and
+//!   the pruned count on the outcome is exactly the sentinel count.
+//! * **Streaming ≡ batch** — the streaming estimator fed the real
+//!   pipeline's outputs one unit at a time agrees bit-for-bit with the
+//!   batch estimator on every prefix (the unit-level twin of the
+//!   synthetic-data prefix tests inside `src/adaptive/stream.rs`).
+//!
+//! The seed is pinnable (`RTF_ADAPTIVE_SEED=N`) so CI runs fixed seeds
+//! and any failure reproduces exactly.
+
+use rtf_reuse::adaptive::{run_adaptive, AdaptiveEstimate, StreamingMoat};
+use rtf_reuse::analysis::moat_effects;
+use rtf_reuse::config::StudyConfig;
+use rtf_reuse::driver::{
+    build_cache, make_inputs, prepare, prune_plan_with_inputs, run_pjrt_with_inputs_scoped,
+    y_per_set, SampleInfo,
+};
+
+/// The seeds this invocation exercises: `RTF_ADAPTIVE_SEED` pins one
+/// (CI's adaptive-smoke job runs two fixed ones); the default keeps a
+/// local `cargo test` run to a single seed.
+fn seeds() -> Vec<u64> {
+    match std::env::var("RTF_ADAPTIVE_SEED") {
+        Ok(v) => vec![v.parse().expect("RTF_ADAPTIVE_SEED must be a u64")],
+        Err(_) => vec![7],
+    }
+}
+
+fn cfg_from(base: &[&str], seed: u64, batch_width: usize) -> StudyConfig {
+    let mut args: Vec<String> = base.iter().map(|s| s.to_string()).collect();
+    args.push(format!("seed={seed}"));
+    args.push(format!("batch-width={batch_width}"));
+    StudyConfig::from_args(&args).expect("test study args parse")
+}
+
+/// The exhaustive non-adaptive run: the ground truth every property
+/// compares against, through the same prepare → plan → execute path.
+fn full_run(cfg: &StudyConfig) -> Vec<f64> {
+    let prepared = prepare(cfg);
+    let inputs = make_inputs(cfg, &prepared).expect("inputs build");
+    let cache = build_cache(cfg);
+    let mut plan = prepared.plan(cfg);
+    if let Some(c) = &cache {
+        prune_plan_with_inputs(&prepared, &mut plan, c, &inputs);
+    }
+    let out = run_pjrt_with_inputs_scoped(cfg, &prepared, &plan, cache, None, &inputs)
+        .expect("exhaustive run completes");
+    out.y
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: slot {i} differs: {x} vs {y}");
+    }
+}
+
+#[test]
+fn threshold_zero_is_bit_identical_to_the_full_run_at_every_batch_width() {
+    for seed in seeds() {
+        let reference = full_run(&cfg_from(&["method=moat", "r=3"], seed, 16));
+        for width in [5, 16, 64] {
+            // the exhaustive run itself is batch-width invariant...
+            let full = full_run(&cfg_from(&["method=moat", "r=3"], seed, width));
+            assert_bits_eq(&full, &reference, &format!("full run @ width {width}, seed {seed}"));
+            // ...and the adaptive run at threshold=0 prunes nothing and
+            // reproduces it exactly, despite executing unit by unit
+            let cfg = cfg_from(
+                &["method=moat", "r=3", "adaptive=on", "threshold=0", "min-samples=1"],
+                seed,
+                width,
+            );
+            let out = run_adaptive(&cfg).expect("adaptive run completes");
+            assert_eq!(out.pruned, 0, "threshold=0 never prunes (seed {seed})");
+            assert!(out.pruned_params.is_empty());
+            assert!(out.survived.iter().all(|&s| s), "every set survived");
+            assert_bits_eq(
+                &out.y,
+                &reference,
+                &format!("adaptive @ width {width}, seed {seed}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn a_derived_threshold_prunes_work_but_survivors_stay_bit_identical() {
+    for seed in seeds() {
+        let cfg = cfg_from(&["method=moat", "r=4"], seed, 16);
+        let reference = full_run(&cfg);
+        let prepared = prepare(&cfg);
+        let SampleInfo::Moat(sample) = &prepared.sample else { panic!("moat study") };
+        let k = prepared.space.dim();
+        let n_sets = sample.sets.len();
+        let y_sets = y_per_set(&reference, n_sets, cfg.tiles);
+
+        // derive a threshold from the run's own early confidence
+        // intervals — exactly the state the online pruner sees at its
+        // first decision point (two trajectories in). Sitting just
+        // above the (3k/5)-th smallest μ* CI upper edge, it prunes a
+        // set dense enough (> half of k) that each later trajectory is
+        // guaranteed some evaluation with both neighboring steps
+        // pruned: at most 2 per unpruned step of its k+1 evals survive
+        let mut stream = StreamingMoat::new(k);
+        let executed = vec![true; n_sets];
+        for t in &sample.trajectories[..2] {
+            stream.update(t, &y_sets, &executed);
+        }
+        let mut uppers: Vec<f64> = (0..k).map(|p| stream.mu_star_upper(p)).collect();
+        uppers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let threshold = uppers[(3 * k) / 5] * (1.0 + 1e-9) + f64::MIN_POSITIVE;
+        assert!(threshold.is_finite() && threshold > 0.0);
+
+        let acfg = cfg_from(
+            &[
+                "method=moat",
+                "r=4",
+                "adaptive=on",
+                &format!("threshold={threshold}"),
+                "min-samples=2",
+            ],
+            seed,
+            16,
+        );
+        let out = run_adaptive(&acfg).expect("adaptive run completes");
+
+        // the pruner fired: below-median parameters were ruled out, so
+        // later trajectories really dropped evaluations...
+        assert!(out.pruned > 0, "the derived threshold prunes (seed {seed})");
+        assert!(!out.pruned_params.is_empty());
+        // ...but never the first min-samples trajectories
+        assert!(out.survived[..2 * (k + 1)].iter().all(|&s| s));
+        assert!(out.survived.iter().any(|&s| !s), "some sets were dropped");
+
+        // THE safety property: a surviving evaluation is bit-identical
+        // to the exhaustive run; a pruned slot is exactly the sentinel
+        let mut sentinel_evals = 0u64;
+        for (g, &alive) in out.survived.iter().enumerate() {
+            let (y, r) =
+                (&out.y[g * cfg.tiles..(g + 1) * cfg.tiles], &reference[g * cfg.tiles..(g + 1) * cfg.tiles]);
+            if alive {
+                assert_bits_eq(y, r, &format!("surviving set {g}, seed {seed}"));
+            } else {
+                assert!(y.iter().all(|&v| v == 0.0), "pruned set {g} holds the sentinel");
+                sentinel_evals += cfg.tiles as u64;
+            }
+        }
+        assert_eq!(out.pruned, sentinel_evals, "the pruning account is exact");
+    }
+}
+
+#[test]
+fn streaming_estimator_matches_batch_on_every_real_prefix() {
+    for seed in seeds() {
+        let cfg = cfg_from(&["method=moat", "r=3"], seed, 16);
+        let reference = full_run(&cfg);
+        let prepared = prepare(&cfg);
+        let SampleInfo::Moat(sample) = &prepared.sample else { panic!("moat study") };
+        let k = prepared.space.dim();
+        let y_sets = y_per_set(&reference, sample.sets.len(), cfg.tiles);
+        let executed = vec![true; sample.sets.len()];
+
+        let mut stream = StreamingMoat::new(k);
+        for (m, t) in sample.trajectories.iter().enumerate() {
+            stream.update(t, &y_sets, &executed);
+            let prefix = rtf_reuse::sampling::MoatSample {
+                sets: sample.sets[..(m + 1) * (k + 1)].to_vec(),
+                trajectories: sample.trajectories[..m + 1].to_vec(),
+            };
+            let batch = moat_effects(&prefix, &y_sets[..(m + 1) * (k + 1)], k);
+            let ours = stream.indices();
+            for p in 0..k {
+                assert_eq!(ours.mean[p].to_bits(), batch.mean[p].to_bits(), "mean[{p}] @ {m}");
+                assert_eq!(
+                    ours.mu_star[p].to_bits(),
+                    batch.mu_star[p].to_bits(),
+                    "mu*[{p}] @ {m}"
+                );
+                assert_eq!(ours.sigma[p].to_bits(), batch.sigma[p].to_bits(), "sigma[{p}] @ {m}");
+            }
+        }
+        // the adaptive runner's final estimate IS the streaming one
+        let acfg = cfg_from(
+            &["method=moat", "r=3", "adaptive=on", "threshold=0", "min-samples=1"],
+            seed,
+            16,
+        );
+        let out = run_adaptive(&acfg).expect("adaptive run completes");
+        let AdaptiveEstimate::Moat(idx) = out.estimate else { panic!("moat estimate") };
+        let last = stream.indices();
+        for p in 0..k {
+            assert_eq!(idx.mu_star[p].to_bits(), last.mu_star[p].to_bits(), "final mu*[{p}]");
+        }
+    }
+}
+
+#[test]
+fn vbd_adaptive_keeps_a_and_b_blocks_and_prunes_only_ab_columns() {
+    for seed in seeds() {
+        let base = ["method=vbd", "n=6", "k-active=3"];
+        let cfg = cfg_from(&base, seed, 16);
+        let reference = full_run(&cfg);
+        let prepared = prepare(&cfg);
+        let SampleInfo::Vbd(sample, _) = &prepared.sample else { panic!("vbd study") };
+        let (n, k) = (sample.n, sample.k);
+
+        // threshold=0 is exact for VBD too
+        let exact = run_adaptive(&cfg_from(
+            &["method=vbd", "n=6", "k-active=3", "adaptive=on", "threshold=0", "min-samples=1"],
+            seed,
+            16,
+        ))
+        .expect("adaptive run completes");
+        assert_eq!(exact.pruned, 0);
+        assert_bits_eq(&exact.y, &reference, &format!("vbd adaptive exact, seed {seed}"));
+
+        // an absurd threshold prunes every active parameter at the
+        // first decision point (min-samples=2): the remaining blocks
+        // keep their A/B evaluations — every index still needs them —
+        // and drop exactly the k AB evaluations per block
+        let out = run_adaptive(&cfg_from(
+            &["method=vbd", "n=6", "k-active=3", "adaptive=on", "threshold=1e18", "min-samples=2"],
+            seed,
+            16,
+        ))
+        .expect("adaptive run completes");
+        assert_eq!(out.pruned_params.len(), k, "every parameter pruned");
+        assert_eq!(out.pruned, ((n - 2) * k * cfg.tiles) as u64);
+        for j in 0..n {
+            assert!(out.survived[sample.idx_a(j)], "A_{j} always runs");
+            assert!(out.survived[sample.idx_b(j)], "B_{j} always runs");
+            for i in 0..k {
+                assert_eq!(out.survived[sample.idx_ab(i, j)], j < 2, "AB({i},{j})");
+            }
+        }
+        // surviving evaluations are bit-identical to the exhaustive run
+        for (g, &alive) in out.survived.iter().enumerate() {
+            if alive {
+                assert_bits_eq(
+                    &out.y[g * cfg.tiles..(g + 1) * cfg.tiles],
+                    &reference[g * cfg.tiles..(g + 1) * cfg.tiles],
+                    &format!("vbd surviving set {g}, seed {seed}"),
+                );
+            }
+        }
+    }
+}

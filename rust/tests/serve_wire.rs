@@ -236,6 +236,77 @@ fn tune_jobs_run_over_the_wire_next_to_studies() {
 }
 
 #[test]
+fn adaptive_studies_over_the_wire_bill_pruned_and_threshold_zero_changes_nothing() {
+    let (addr, server) = spawn_server(serve_opts(1));
+    let mut adaptive_args = study_args();
+    adaptive_args.extend(["adaptive=on".into(), "threshold=0".into(), "min-samples=1".into()]);
+    let specs = vec![
+        JobSpec { tenant: "plain".into(), args: study_args(), tune: false },
+        JobSpec { tenant: "adaptive".into(), args: adaptive_args, tune: false },
+    ];
+    let outcome = run_jobs(&addr, &specs, true).expect("client run succeeds");
+    assert_eq!(outcome.jobs.len(), 2);
+    assert!(outcome.jobs.iter().all(|j| j.ok()), "jobs: {:?}", outcome.jobs);
+
+    // threshold=0 can never prune (a CI upper bound is never negative),
+    // so the adaptive run reproduces the plain run bit for bit
+    assert_eq!(outcome.jobs[0].y, outcome.jobs[1].y, "adaptive at threshold=0 is exact");
+    assert_eq!(outcome.jobs[1].pruned, 0, "nothing was pruned at threshold=0");
+
+    // the v5 bill carries the pruning account at every level
+    let bill = outcome.bill.expect("bill");
+    assert_eq!(bill.pruned, 0);
+    let row = bill.tenants.iter().find(|t| t.tenant == "adaptive").expect("adaptive row");
+    assert_eq!(row.pruned, 0);
+    assert_eq!(bill.speculative_launches, 0, "no tune job ran, nothing to speculate on");
+    server.join().expect("server joins");
+}
+
+#[test]
+fn speculation_changes_timing_only_never_result_bytes_over_the_wire() {
+    // the same GA tune job on a speculation-off and a speculation-on
+    // service: the tuner's trajectory, scores and parameters must agree
+    // bit for bit — speculation may only warm the cache
+    let tune_args: Vec<String> = ["tuner=ga", "budget=6", "population=3", "k-active=1", "r=1"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let run = |speculate: bool| {
+        let mut opts = serve_opts(2);
+        opts.speculate = speculate;
+        let (addr, server) = spawn_server(opts);
+        let specs = vec![JobSpec { tenant: "carol".into(), args: tune_args.clone(), tune: true }];
+        let outcome = run_jobs(&addr, &specs, true).expect("client run succeeds");
+        server.join().expect("server joins");
+        outcome
+    };
+    let off = run(false);
+    let on = run(true);
+    assert!(off.jobs[0].ok() && on.jobs[0].ok(), "off: {:?} on: {:?}", off.jobs, on.jobs);
+    assert_eq!(off.jobs[0].y, on.jobs[0].y, "per-generation best scores are bit-identical");
+    assert_eq!(off.jobs[0].tune, on.jobs[0].tune, "the tune summary is bit-identical");
+    assert_eq!(off.jobs[0].pruned, 0, "tune jobs never prune");
+
+    // whatever speculation spent is billed globally — like shared input
+    // building — never to the tenant's row
+    let bill_off = off.bill.expect("bill");
+    let bill_on = on.bill.expect("bill");
+    assert_eq!(bill_off.speculative_launches, 0, "speculation off spends nothing");
+    for (bill, outcome) in [(&bill_off, &off), (&bill_on, &on)] {
+        assert_eq!(
+            bill.total_launches,
+            bill.input_launches + bill.speculative_launches + outcome.jobs[0].launches,
+            "the launch ledger partitions exactly"
+        );
+    }
+    if bill_on.speculative_launches > 0 {
+        let row = bill_on.tenants.iter().find(|t| t.tenant == "~speculative");
+        let row = row.expect("speculative spend appears under the pseudo-tenant");
+        assert_eq!(row.jobs, 0, "the pseudo-tenant owns no jobs");
+    }
+}
+
+#[test]
 fn demo_workload_matches_in_process_semantics() {
     // the same two-tenant demo the README quickstart runs, but over
     // TCP: on one service worker the first job is the only cold one,
