@@ -1,0 +1,235 @@
+//! Cluster phase-2 benchmark: what front-door routing costs and what
+//! hot-prefix replication saves.
+//!
+//! Phase 1 boots a three-node route-enabled cluster, warms the
+//! predicted owner, then times K warm submits sent DIRECTLY to the
+//! owner against K warm submits sent through a non-owner's front door
+//! (each routed over a dedicated peer hop and proxied back).
+//! Acceptance: routed throughput is at least 0.8× direct — the front
+//! door must cost a hop, not a rerun.
+//!
+//! Phase 2 runs the replication drill twice on a four-node ring: warm
+//! the cluster past the hot watermark, kill the shard owner, then probe
+//! from a node that never executed the study. With `replicas=1` the
+//! orphaned shard is served from ring replicas; with `replicas=0` it is
+//! relaunched locally behind the open breaker. Acceptance: the
+//! replica-served probe launches strictly less and its throughput is at
+//! least 0.8× of — in practice well above — the breaker-open baseline.
+//! Counts are asserted in `--test` (CI smoke) mode too. Writes
+//! `BENCH_routing.json`.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use rtf_reuse::benchx::fmt_secs;
+use rtf_reuse::cache::CacheConfig;
+use rtf_reuse::config::StudyConfig;
+use rtf_reuse::serve::{run_jobs, JobSpec, ServeOptions, ServiceReport, StudyService, WireServer};
+
+/// Proxy handles live at/above `server::ROUTE_BASE`; an id past this
+/// mark proves the submit was routed.
+const ROUTE_BASE: u64 = 1 << 32;
+
+fn reserve_addr() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("reserve a port");
+    listener.local_addr().expect("reserved addr").to_string()
+}
+
+fn opts(peers: &[String], own: &str, route: bool, replicas: usize) -> ServeOptions {
+    ServeOptions {
+        service_workers: 1,
+        study_workers: 2,
+        cache: CacheConfig { capacity_bytes: 512 * 1024 * 1024, ..CacheConfig::default() },
+        peers: peers.to_vec(),
+        cluster_addr: Some(own.to_string()),
+        route,
+        replicas,
+        ..ServeOptions::default()
+    }
+}
+
+fn spawn_node(
+    opts: ServeOptions,
+    addr: &str,
+) -> (Arc<StudyService>, thread::JoinHandle<ServiceReport>) {
+    let svc = StudyService::start(opts).expect("node starts");
+    let server = WireServer::bind(svc, addr).expect("node binds");
+    let svc = Arc::clone(server.service());
+    (svc, thread::spawn(move || server.run().expect("node drains cleanly")))
+}
+
+fn assert_scoped_sums(report: &ServiceReport, node: &str) {
+    let sums = report.scoped_totals();
+    assert_eq!(sums.hits, report.cache.hits, "{node}: scoped hits");
+    assert_eq!(sums.remote_hits, report.cache.remote_hits, "{node}: scoped remote hits");
+    assert_eq!(sums.misses, report.cache.misses, "{node}: scoped misses");
+    assert_eq!(sums.inserts, report.cache.inserts, "{node}: scoped inserts");
+}
+
+/// One replication drill: four nodes, warm-up past the hot watermark,
+/// owner killed, probe from the idle fourth node. Returns the probe's
+/// (launches, wall seconds, remote hits, y).
+fn replication_drill(
+    args: &[String],
+    replicas: usize,
+) -> (u64, f64, u64, Vec<f64>) {
+    let addrs: Vec<String> = (0..4).map(|_| reserve_addr()).collect();
+    let mut nodes: Vec<_> = addrs
+        .iter()
+        .map(|a| Some(spawn_node(opts(&addrs, a, false, replicas), a)))
+        .collect();
+
+    let spec = |tenant: &str| JobSpec { tenant: tenant.into(), args: args.to_vec(), tune: false };
+    for (i, tenant) in ["cold", "warm1", "warm2"].iter().enumerate() {
+        let out = run_jobs(&addrs[i], &[spec(tenant)], false).expect("warm-up job");
+        assert!(out.jobs[0].ok(), "warm-up {i}: {:?}", out.jobs[0].error);
+    }
+
+    // kill the first node: its shard is now orphaned — replicated or not
+    let (svc0, handle0) = nodes[0].take().expect("owner node");
+    run_jobs(&addrs[0], &[], true).expect("drain owner");
+    handle0.join().expect("owner joins");
+    drop(svc0);
+
+    let t0 = Instant::now();
+    let out = run_jobs(&addrs[3], &[spec("probe")], false).expect("probe job");
+    let wall = t0.elapsed().as_secs_f64();
+    assert!(out.jobs[0].ok(), "probe: {:?}", out.jobs[0].error);
+
+    let mut probe_remote_hits = 0;
+    for i in (1..4).rev() {
+        let (svc, handle) = nodes[i].take().expect("node");
+        run_jobs(&addrs[i], &[], true).expect("drain node");
+        let report = handle.join().expect("node joins");
+        assert_scoped_sums(&report, &format!("drill node {i}"));
+        if i == 3 {
+            probe_remote_hits = report.cache.remote_hits;
+        }
+        drop(svc);
+    }
+    (out.jobs[0].launches, wall, probe_remote_hits, out.jobs[0].y.clone())
+}
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    let args: Vec<String> =
+        vec!["method=moat".into(), format!("r={}", if test_mode { 1 } else { 2 })];
+    let repeats = if test_mode { 3 } else { 8 };
+    let spec = |tenant: &str| JobSpec { tenant: tenant.into(), args: args.clone(), tune: false };
+
+    // ---- phase 1: front-door routing overhead --------------------------
+    let addrs: Vec<String> = (0..3).map(|_| reserve_addr()).collect();
+    let nodes: Vec<_> =
+        addrs.iter().map(|a| spawn_node(opts(&addrs, a, true, 1), a)).collect();
+
+    // the planner probe names the peer owning the study's key plurality
+    let cfg = StudyConfig::from_args(&args).expect("study parses");
+    let winner = match nodes[0].0.predict_route(&cfg) {
+        None => 0,
+        Some(addr) => addrs.iter().position(|a| *a == addr).expect("winner is a member"),
+    };
+    let router = (winner + 1) % addrs.len();
+
+    // warm the owner so both timed phases measure serving, not compute
+    let cold = run_jobs(&addrs[winner], &[spec("cold")], false).expect("cold run");
+    assert!(cold.jobs[0].ok(), "cold job: {:?}", cold.jobs[0].error);
+    let base_y = cold.jobs[0].y.clone();
+
+    let t0 = Instant::now();
+    for i in 0..repeats {
+        let out =
+            run_jobs(&addrs[winner], &[spec(&format!("direct{i}"))], false).expect("direct run");
+        assert!(out.jobs[0].ok(), "direct job {i}: {:?}", out.jobs[0].error);
+        assert_eq!(out.jobs[0].y, base_y, "direct job {i} matches the cold run");
+    }
+    let wall_direct = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    for i in 0..repeats {
+        let out =
+            run_jobs(&addrs[router], &[spec(&format!("routed{i}"))], false).expect("routed run");
+        assert!(out.jobs[0].ok(), "routed job {i}: {:?}", out.jobs[0].error);
+        assert_eq!(out.jobs[0].y, base_y, "routed job {i} matches the cold run");
+        assert!(
+            out.jobs[0].job >= ROUTE_BASE,
+            "routed job {i} got local id {} — the front door did not route it",
+            out.jobs[0].job
+        );
+    }
+    let wall_routed = t0.elapsed().as_secs_f64();
+    let routed_ratio = wall_direct / wall_routed;
+
+    for i in [router, (winner + 2) % addrs.len(), winner] {
+        run_jobs(&addrs[i], &[], true).expect("drain node");
+    }
+    for (svc, handle) in nodes {
+        let report = handle.join().expect("node joins");
+        assert_scoped_sums(&report, "routing node");
+        drop(svc);
+    }
+
+    println!(
+        "front door: {repeats} direct submits in {} vs {repeats} routed in {} \
+         (routed throughput {routed_ratio:.2}x direct)",
+        fmt_secs(wall_direct),
+        fmt_secs(wall_routed),
+    );
+
+    // ---- phase 2: replica-served vs breaker-open relaunch --------------
+    let (launches_rep, wall_rep, remote_hits_rep, y_rep) = replication_drill(&args, 1);
+    let (launches_raw, wall_raw, _, y_raw) = replication_drill(&args, 0);
+    assert_eq!(y_rep, base_y, "replica-served probe matches the cold run");
+    assert_eq!(y_raw, base_y, "breaker-open probe matches the cold run");
+    let replica_ratio = wall_raw / wall_rep;
+
+    println!(
+        "dead owner: replicas=1 probe {launches_rep} launches in {} \
+         ({remote_hits_rep} remote hits) vs replicas=0 probe {launches_raw} launches in {} \
+         (replica throughput {replica_ratio:.2}x baseline)",
+        fmt_secs(wall_rep),
+        fmt_secs(wall_raw),
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"cluster_routing\",\n  \"mode\": \"{}\",\n  \
+         \"repeats\": {repeats},\n  \"direct_wall_secs\": {wall_direct:.6},\n  \
+         \"routed_wall_secs\": {wall_routed:.6},\n  \
+         \"routed_throughput_ratio\": {routed_ratio:.4},\n  \
+         \"replica_probe_launches\": {launches_rep},\n  \
+         \"replica_probe_wall_secs\": {wall_rep:.6},\n  \
+         \"replica_probe_remote_hits\": {remote_hits_rep},\n  \
+         \"unreplicated_probe_launches\": {launches_raw},\n  \
+         \"unreplicated_probe_wall_secs\": {wall_raw:.6},\n  \
+         \"replica_throughput_ratio\": {replica_ratio:.4}\n}}\n",
+        if test_mode { "test" } else { "full" },
+    );
+    std::fs::write("BENCH_routing.json", &json).expect("write BENCH_routing.json");
+    println!("wrote BENCH_routing.json");
+
+    println!(
+        "ACCEPTANCE: routed {routed_ratio:.2}x direct (floor 0.8), replica-served \
+         {launches_rep} launches vs breaker-open {launches_raw}, replica throughput \
+         {replica_ratio:.2}x (floor 0.8) — {}",
+        if routed_ratio >= 0.8 && launches_rep < launches_raw && replica_ratio >= 0.8 {
+            "PASS"
+        } else {
+            "FAIL"
+        }
+    );
+    assert!(
+        routed_ratio >= 0.8,
+        "front-door routing must cost a hop, not a rerun: {routed_ratio:.2}x"
+    );
+    assert!(
+        launches_rep < launches_raw,
+        "a replica-served probe must relaunch strictly less than the breaker-open \
+         baseline: {launches_rep} vs {launches_raw}"
+    );
+    assert!(remote_hits_rep > 0, "the replica-served probe must show remote hits");
+    assert!(
+        replica_ratio >= 0.8,
+        "replica serving must not be slower than relaunching: {replica_ratio:.2}x"
+    );
+}

@@ -71,7 +71,7 @@ pub use key::{
     candidate_key, chain_key, content_fingerprint, fold_keys, metrics_key, node_input_key,
     quantize, reference_fingerprints, task_cache_sig, tile_fingerprints, Key,
 };
-pub use remote::{PeerRing, RemoteTier};
+pub use remote::{PeerRing, RemoteTier, HOT_WATERMARK};
 pub use store::{
     CacheConfig, CacheStats, CachedState, FlightClaims, MemoryTier, MetricsClaim, RemoteServe,
     ReuseCache, ScopedCounters, StateClaim, WarmStartReport,

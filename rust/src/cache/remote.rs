@@ -52,12 +52,32 @@
 //! happens), so scripted fault plans stay deterministic regardless of
 //! how many lookups race the cooldown window.
 //!
+//! Breaker and connection-pool state is keyed **per peer address**, not
+//! per ring slot: one failed call marks the *peer* down for every key
+//! it owns (a dead peer is not rediscovered key by key), and live
+//! membership changes ([`RemoteTier::add_peer`] /
+//! [`RemoteTier::remove_peer`]) rebuild the ring without resetting the
+//! surviving peers' health.
+//!
+//! # Replication (protocol v6)
+//!
+//! With `replicas=1` (the default in cluster mode) a *hot* key — one
+//! the owner has served at least [`HOT_WATERMARK`] times — is also
+//! pushed to the peer with the key's second-highest rendezvous score
+//! ([`PeerRing::replica_of`]). When a lookup's owner call fails (dead
+//! peer or open breaker) the tier degrades to a **claim-free peek** at
+//! the replica (`cache-get` with `peek`) instead of straight to a local
+//! launch. The peek registers no cross-node claim, so the degraded mode
+//! can at worst duplicate a launch — it can never wedge one — and
+//! replication never changes a result, only where it's served from.
+//!
 //! [`planes_to_hex`]: crate::serve::protocol::planes_to_hex
 
+use std::collections::HashMap;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::faults::{Faults, PeerFault};
@@ -84,6 +104,14 @@ const BREAKER_THRESHOLD: u32 = 3;
 /// How long an open breaker refuses traffic before admitting one
 /// half-open probe.
 const BREAKER_COOLDOWN: Duration = Duration::from_millis(250);
+
+/// Serve-count watermark at which an owner pushes a key's state to its
+/// replica (see [`RemoteTier::note_served`]).
+pub const HOT_WATERMARK: u32 = 2;
+/// Bound on the hot-key tracker; crossing it clears the map. Counts
+/// restart from zero — replication is an optimization, so losing a
+/// count only delays a push, never loses data.
+const HOT_TRACKER_CAP: usize = 65_536;
 
 /// Rendezvous (highest-random-weight) partition of the 128-bit key
 /// space across a peer list.
@@ -140,6 +168,43 @@ impl PeerRing {
         self.owner_of(key) == self.self_idx
     }
 
+    /// The first `n` ring positions for `key` in descending rendezvous
+    /// score order: the owner first, then the replica targets.
+    pub fn owners_of(&self, key: Key, n: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.peers.len()).collect();
+        idx.sort_by_key(|&i| std::cmp::Reverse(Self::score(key, &self.peers[i])));
+        idx.truncate(n);
+        idx
+    }
+
+    /// Index of the key's replica target — the peer with the
+    /// second-highest rendezvous score. `None` on a single-node ring.
+    pub fn replica_of(&self, key: Key) -> Option<usize> {
+        self.owners_of(key, 2).get(1).copied()
+    }
+
+    /// A new ring with `addr` added (idempotent when already present).
+    /// Rendezvous hashing makes the change minimally disruptive: only
+    /// the keys the new peer *wins* change owner.
+    pub fn join(&self, addr: &str) -> Result<Self> {
+        let mut peers = self.peers.clone();
+        peers.push(addr.to_string());
+        Self::new(&peers, self.self_addr())
+    }
+
+    /// A new ring with `addr` removed (idempotent when absent): only
+    /// the departed peer's keys change owner. Removing this node's own
+    /// address collapses the ring to just this node — an excluded node
+    /// keeps serving, local-only, instead of erroring.
+    pub fn leave(&self, addr: &str) -> Self {
+        if addr == self.self_addr() {
+            return Self { peers: vec![addr.to_string()], self_idx: 0 };
+        }
+        let peers: Vec<String> =
+            self.peers.iter().filter(|p| p.as_str() != addr).cloned().collect();
+        Self::new(&peers, self.self_addr()).expect("this node stays a ring member")
+    }
+
     /// The sorted, deduplicated peer list.
     pub fn peers(&self) -> &[String] {
         &self.peers
@@ -150,7 +215,8 @@ impl PeerRing {
         &self.peers[self.self_idx]
     }
 
-    fn addr(&self, idx: usize) -> &str {
+    /// The address at a ring index (as returned by [`Self::owner_of`]).
+    pub fn addr(&self, idx: usize) -> &str {
         &self.peers[idx]
     }
 }
@@ -164,13 +230,24 @@ enum BreakerState {
 
 /// The remote tier: fetches and publishes cache entries over the serve
 /// wire protocol, one pooled connection set per peer, each peer behind
-/// its own circuit breaker.
+/// its own circuit breaker. Pools and breakers are keyed by peer
+/// *address* so a live membership change never resets a surviving
+/// peer's health, and one open breaker fails fast for every key that
+/// peer owns.
 pub struct RemoteTier {
-    ring: PeerRing,
-    /// Idle connections per peer (parallel to `ring.peers()`), returned
-    /// after a successful exchange, dropped on any error.
-    pools: Vec<Mutex<Vec<TcpStream>>>,
-    breakers: Vec<Mutex<BreakerState>>,
+    ring: RwLock<PeerRing>,
+    /// This node's ring address; immutable for the tier's lifetime
+    /// (leaving your own ring collapses it rather than renaming you).
+    self_addr: String,
+    /// Idle connections per peer address, returned after a successful
+    /// exchange, dropped on any error.
+    pools: Mutex<HashMap<String, Vec<TcpStream>>>,
+    breakers: Mutex<HashMap<String, BreakerState>>,
+    /// Replication factor: how many ring positions beyond the owner may
+    /// hold a hot key (0 disables the replica read path).
+    replicas: usize,
+    /// Per-key remote-serve counts for hot-watermark replication.
+    hot: Mutex<HashMap<Key, u32>>,
     connect_timeout: Duration,
     read_timeout: Duration,
     write_timeout: Duration,
@@ -186,16 +263,14 @@ impl RemoteTier {
     /// are opened lazily on the first lookup/store per peer.
     pub fn new(peers: &[String], self_addr: &str) -> Result<Self> {
         let ring = PeerRing::new(peers, self_addr)?;
-        let pools = ring.peers().iter().map(|_| Mutex::new(Vec::new())).collect();
-        let breakers = ring
-            .peers()
-            .iter()
-            .map(|_| Mutex::new(BreakerState::Closed { failures: 0 }))
-            .collect();
+        let self_addr = ring.self_addr().to_string();
         Ok(Self {
-            ring,
-            pools,
-            breakers,
+            ring: RwLock::new(ring),
+            self_addr,
+            pools: Mutex::new(HashMap::new()),
+            breakers: Mutex::new(HashMap::new()),
+            replicas: 1,
+            hot: Mutex::new(HashMap::new()),
             connect_timeout: CONNECT_TIMEOUT,
             read_timeout: READ_TIMEOUT,
             write_timeout: WRITE_TIMEOUT,
@@ -214,6 +289,12 @@ impl RemoteTier {
         self
     }
 
+    /// Set the replication factor (the `replicas=` serve flag).
+    pub fn with_replicas(mut self, replicas: usize) -> Self {
+        self.replicas = replicas;
+        self
+    }
+
     /// Override the connect/read/write timeouts (test aid: the
     /// timeout-path tests shrink the read budget to milliseconds so a
     /// stalled peer is observed quickly).
@@ -224,9 +305,100 @@ impl RemoteTier {
         self
     }
 
-    /// The key partition this tier routes by.
-    pub fn ring(&self) -> &PeerRing {
-        &self.ring
+    /// A snapshot of the key partition this tier routes by. The ring
+    /// can change under live membership — callers hold a consistent
+    /// copy, not a reference.
+    pub fn ring(&self) -> PeerRing {
+        self.ring.read().unwrap().clone()
+    }
+
+    /// This node's ring address.
+    pub fn self_addr(&self) -> &str {
+        &self.self_addr
+    }
+
+    /// Add `addr` to the ring without a restart (idempotent). Returns
+    /// the new ring size. Surviving peers' breaker and pool state is
+    /// untouched — it is keyed by address, not ring slot.
+    pub fn add_peer(&self, addr: &str) -> Result<usize> {
+        let mut ring = self.ring.write().unwrap();
+        *ring = ring.join(addr)?;
+        Ok(ring.peers().len())
+    }
+
+    /// Remove `addr` from the ring without a restart (idempotent;
+    /// removing this node collapses the ring to a single-node one).
+    /// Drops the departed peer's pooled connections and breaker state.
+    /// Returns the new ring size.
+    pub fn remove_peer(&self, addr: &str) -> usize {
+        let size = {
+            let mut ring = self.ring.write().unwrap();
+            *ring = ring.leave(addr);
+            ring.peers().len()
+        };
+        self.pools.lock().unwrap().remove(addr);
+        self.breakers.lock().unwrap().remove(addr);
+        size
+    }
+
+    /// Count one remote serve of a key this node owns; `true` exactly
+    /// when the count crosses [`HOT_WATERMARK`] — the caller should
+    /// then push the state to [`RemoteTier::replica_addr`].
+    pub fn note_served(&self, key: Key) -> bool {
+        let mut hot = self.hot.lock().unwrap();
+        if hot.len() >= HOT_TRACKER_CAP {
+            hot.clear();
+        }
+        let count = hot.entry(key).or_insert(0);
+        *count += 1;
+        *count == HOT_WATERMARK
+    }
+
+    /// Where `key`'s replica lives under the current ring — `None`
+    /// when replication is off, the ring is single-node, or the
+    /// replica position is this node.
+    pub fn replica_addr(&self, key: Key) -> Option<String> {
+        if self.replicas == 0 {
+            return None;
+        }
+        let ring = self.ring.read().unwrap();
+        let addr = ring.addr(ring.replica_of(key)?).to_string();
+        (addr != self.self_addr).then_some(addr)
+    }
+
+    /// Owner of `key` under the current ring — `None` when this node
+    /// is the owner. Membership handoff uses this to push now-foreign
+    /// keys to their new home.
+    pub fn owner_addr(&self, key: Key) -> Option<String> {
+        let ring = self.ring.read().unwrap();
+        let addr = ring.addr(ring.owner_of(key)).to_string();
+        (addr != self.self_addr).then_some(addr)
+    }
+
+    /// Publish a state to a *specific* peer (replication or membership
+    /// handoff): a plain `cache-put`, counted under `stores`.
+    /// Best-effort like every fabric call.
+    pub fn publish_to(&self, addr: &str, key: Key, state: &CachedState) -> bool {
+        if addr == self.self_addr {
+            return false;
+        }
+        let put = Message::CachePut(Box::new(WireCachePut::new(key, state)));
+        match self.call(addr, &put) {
+            Ok(Message::CacheOk { stored: true, .. }) => {
+                self.stores.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// A control-plane exchange with a specific peer (membership relays:
+    /// `peer-join` / `peer-leave`). Same transport as the data plane —
+    /// pooled connections, fault hook, and the per-address breaker — so
+    /// an unreachable peer costs the relay one fast failure, not a
+    /// timeout per message.
+    pub fn control(&self, addr: &str, msg: &Message) -> Result<Message> {
+        self.call(addr, msg)
     }
 
     /// Dial a peer and run the `hello` handshake in the `peer` role.
@@ -272,10 +444,11 @@ impl RemoteTier {
         }
     }
 
-    /// Admission check against peer `idx`'s breaker; flips an
-    /// expired-open breaker to half-open (the caller becomes the probe).
-    fn breaker_admits(&self, idx: usize) -> bool {
-        let mut b = self.breakers[idx].lock().unwrap();
+    /// Admission check against a peer's breaker; flips an expired-open
+    /// breaker to half-open (the caller becomes the probe).
+    fn breaker_admits(&self, addr: &str) -> bool {
+        let mut map = self.breakers.lock().unwrap();
+        let b = map.entry(addr.to_string()).or_insert(BreakerState::Closed { failures: 0 });
         match *b {
             BreakerState::Closed { .. } => true,
             BreakerState::Open { since } if since.elapsed() >= BREAKER_COOLDOWN => {
@@ -290,8 +463,9 @@ impl RemoteTier {
 
     /// Record a successful call: reset the failure streak; a successful
     /// half-open probe re-closes the breaker.
-    fn note_success(&self, idx: usize) {
-        let mut b = self.breakers[idx].lock().unwrap();
+    fn note_success(&self, addr: &str) {
+        let mut map = self.breakers.lock().unwrap();
+        let b = map.entry(addr.to_string()).or_insert(BreakerState::Closed { failures: 0 });
         if matches!(*b, BreakerState::HalfOpen) {
             self.breaker_closes.fetch_add(1, Ordering::Relaxed);
         }
@@ -300,8 +474,9 @@ impl RemoteTier {
 
     /// Record a failed call: extend the streak; at the threshold (or on
     /// a failed half-open probe) trip the breaker open.
-    fn note_failure(&self, idx: usize) {
-        let mut b = self.breakers[idx].lock().unwrap();
+    fn note_failure(&self, addr: &str) {
+        let mut map = self.breakers.lock().unwrap();
+        let b = map.entry(addr.to_string()).or_insert(BreakerState::Closed { failures: 0 });
         match *b {
             BreakerState::Closed { failures } if failures + 1 >= BREAKER_THRESHOLD => {
                 *b = BreakerState::Open { since: Instant::now() };
@@ -318,42 +493,44 @@ impl RemoteTier {
         }
     }
 
-    /// Send `msg` to peer `idx` through its breaker and the fault hook;
-    /// every outcome feeds the breaker.
-    fn call(&self, idx: usize, msg: &Message) -> Result<Message> {
-        if !self.breaker_admits(idx) {
-            return Err(Error::Protocol(format!(
-                "peer {}: circuit breaker open",
-                self.ring.addr(idx)
-            )));
+    fn pool_pop(&self, addr: &str) -> Option<TcpStream> {
+        self.pools.lock().unwrap().get_mut(addr).and_then(|v| v.pop())
+    }
+
+    fn pool_push(&self, addr: &str, stream: TcpStream) {
+        self.pools.lock().unwrap().entry(addr.to_string()).or_default().push(stream);
+    }
+
+    /// Send `msg` to the peer at `addr` through its breaker and the
+    /// fault hook; every outcome feeds the breaker.
+    fn call(&self, addr: &str, msg: &Message) -> Result<Message> {
+        if !self.breaker_admits(addr) {
+            return Err(Error::Protocol(format!("peer {addr}: circuit breaker open")));
         }
-        if let Some(fault) = self.faults.get().and_then(|h| h.on_peer_call(self.ring.addr(idx)))
-        {
+        if let Some(fault) = self.faults.get().and_then(|h| h.on_peer_call(addr)) {
             match fault {
                 PeerFault::Refuse => {
-                    self.note_failure(idx);
+                    self.note_failure(addr);
                     return Err(Error::Protocol(format!(
-                        "peer {}: fault injection: connection refused",
-                        self.ring.addr(idx)
+                        "peer {addr}: fault injection: connection refused"
                     )));
                 }
                 PeerFault::Drop => {
                     // the connection died mid-exchange: whatever was
                     // pooled is gone too
-                    self.pools[idx].lock().unwrap().clear();
-                    self.note_failure(idx);
+                    self.pools.lock().unwrap().remove(addr);
+                    self.note_failure(addr);
                     return Err(Error::Protocol(format!(
-                        "peer {}: fault injection: connection dropped mid-exchange",
-                        self.ring.addr(idx)
+                        "peer {addr}: fault injection: connection dropped mid-exchange"
                     )));
                 }
                 PeerFault::Delay(latency) => std::thread::sleep(latency),
             }
         }
-        let result = self.call_raw(idx, msg);
+        let result = self.call_raw(addr, msg);
         match result {
-            Ok(_) => self.note_success(idx),
-            Err(_) => self.note_failure(idx),
+            Ok(_) => self.note_success(addr),
+            Err(_) => self.note_failure(addr),
         }
         result
     }
@@ -362,17 +539,24 @@ impl RemoteTier {
     /// idle; a stale pooled connection is dropped and the call retried
     /// once on a fresh dial. A connection that errors (including a read
     /// timeout or an unparsable reply) is never returned to the pool.
-    fn call_raw(&self, idx: usize, msg: &Message) -> Result<Message> {
-        if let Some(stream) = self.pools[idx].lock().unwrap().pop() {
+    fn call_raw(&self, addr: &str, msg: &Message) -> Result<Message> {
+        if let Some(stream) = self.pool_pop(addr) {
             if let Ok(reply) = Self::exchange(&stream, msg) {
-                self.pools[idx].lock().unwrap().push(stream);
+                self.pool_push(addr, stream);
                 return Ok(reply);
             }
         }
-        let stream = self.connect(self.ring.addr(idx))?;
+        let stream = self.connect(addr)?;
         let reply = Self::exchange(&stream, msg)?;
-        self.pools[idx].lock().unwrap().push(stream);
+        self.pool_push(addr, stream);
         Ok(reply)
+    }
+
+    /// Decode a `found` cache-state payload into a cached state.
+    fn decode_hit(&self, h: u64, w: u64, planes: &str) -> Option<CachedState> {
+        let planes = planes_from_hex(h, w, planes).ok()?;
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(Arc::new(planes))
     }
 }
 
@@ -382,29 +566,48 @@ impl CacheTier for RemoteTier {
     }
 
     fn lookup(&self, key: Key, _ctx: &CacheCtx) -> Option<CachedState> {
-        let owner = self.ring.owner_of(key);
-        if owner == self.ring.self_idx {
-            return None;
-        }
-        match self.call(owner, &Message::CacheGet { key }).ok()? {
-            Message::CacheState(state) if state.found => {
-                let planes = planes_from_hex(state.h, state.w, &state.planes).ok()?;
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(Arc::new(planes))
+        let (owner, replica) = {
+            let ring = self.ring.read().unwrap();
+            if ring.is_local(key) {
+                return None;
             }
-            // `claimed` (or anything unexpected): this node computes
-            // locally and publishes through `store`.
-            _ => None,
+            let owner = ring.addr(ring.owner_of(key)).to_string();
+            let replica = (self.replicas >= 1)
+                .then(|| ring.replica_of(key).map(|i| ring.addr(i).to_string()))
+                .flatten();
+            (owner, replica)
+        };
+        match self.call(&owner, &Message::CacheGet { key, peek: false }) {
+            Ok(Message::CacheState(state)) if state.found => {
+                self.decode_hit(state.h, state.w, &state.planes)
+            }
+            // `claimed` (or anything unexpected): this node now holds
+            // the cross-node claim and must compute locally and publish
+            // through `store` — peeking a replica here would break
+            // single-flight.
+            Ok(_) => None,
+            // The owner is unreachable (or its breaker is open):
+            // degrade to a claim-free peek at the replica. When the
+            // replica position is this node the peek is pointless —
+            // our own tiers already missed.
+            Err(_) => {
+                let replica = replica.filter(|r| *r != self.self_addr)?;
+                match self.call(&replica, &Message::CacheGet { key, peek: true }).ok()? {
+                    Message::CacheState(state) if state.found => {
+                        self.decode_hit(state.h, state.w, &state.planes)
+                    }
+                    _ => None,
+                }
+            }
         }
     }
 
     fn store(&self, key: Key, state: &CachedState, _ctx: &CacheCtx) -> bool {
-        let owner = self.ring.owner_of(key);
-        if owner == self.ring.self_idx {
+        let Some(owner) = self.owner_addr(key) else {
             return false;
-        }
+        };
         let put = Message::CachePut(Box::new(WireCachePut::new(key, state)));
-        match self.call(owner, &put) {
+        match self.call(&owner, &put) {
             Ok(Message::CacheOk { stored: true, .. }) => {
                 self.stores.fetch_add(1, Ordering::Relaxed);
                 true
@@ -522,7 +725,7 @@ mod tests {
                         Message::Hello { .. } => {
                             Message::Hello { version: PROTOCOL_VERSION, role: "server".into() }
                         }
-                        Message::CacheGet { key } => {
+                        Message::CacheGet { key, .. } => {
                             served += 1;
                             Message::CacheState(Box::new(WireCacheState::found(key, &state())))
                         }
@@ -632,7 +835,7 @@ mod tests {
                                 Message::Hello { version: PROTOCOL_VERSION, role: "server".into() };
                             write_frame(&mut writer, &hello).unwrap();
                         }
-                        Message::CacheGet { key } => {
+                        Message::CacheGet { key, .. } => {
                             if std::mem::take(&mut first) {
                                 writer.write_all(b"rtfp1 9\nnot-json!\n").unwrap();
                             } else {
@@ -715,5 +918,141 @@ mod tests {
 
         drop(tier);
         assert_eq!(handle.join().unwrap(), 1, "only the probe reached the peer");
+    }
+
+    #[test]
+    fn ring_join_and_leave_are_idempotent_and_keep_self() {
+        let peers = vec!["h1:1".to_string(), "h2:2".to_string()];
+        let ring = PeerRing::new(&peers, "h1:1").unwrap();
+        let grown = ring.join("h3:3").unwrap();
+        assert_eq!(grown.peers(), ["h1:1", "h2:2", "h3:3"]);
+        assert_eq!(grown.join("h3:3").unwrap().peers().len(), 3, "re-join is a no-op");
+        let shrunk = grown.leave("h2:2");
+        assert_eq!(shrunk.peers(), ["h1:1", "h3:3"]);
+        assert_eq!(shrunk.leave("h9:9").peers().len(), 2, "unknown leave is a no-op");
+        // excluded from its own ring: collapse to single-node, keep serving
+        let alone = shrunk.leave("h1:1");
+        assert_eq!(alone.peers(), ["h1:1"]);
+        assert_eq!(alone.self_addr(), "h1:1");
+        // owner + replica are the top-2 distinct rendezvous scores
+        let key = Key::from(42u64);
+        let top = grown.owners_of(key, 2);
+        assert_eq!(top[0], grown.owner_of(key));
+        assert_eq!(Some(top[1]), grown.replica_of(key));
+        assert_ne!(top[0], top[1]);
+        let solo = PeerRing::new(&["h1:1".to_string()], "h1:1").unwrap();
+        assert!(solo.replica_of(key).is_none(), "single-node ring has no replica");
+    }
+
+    /// A peer that answers `cache-get` only when it carries `peek` —
+    /// the replica read path must never send a claiming get.
+    fn spawn_peek_only_peer(listener: TcpListener) -> std::thread::JoinHandle<u32> {
+        std::thread::spawn(move || {
+            let mut served = 0;
+            let Ok((stream, _)) = listener.accept() else {
+                return served;
+            };
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = BufWriter::new(stream);
+            while let Ok(Some(msg)) = read_frame(&mut reader) {
+                let reply = match msg {
+                    Message::Hello { .. } => {
+                        Message::Hello { version: PROTOCOL_VERSION, role: "server".into() }
+                    }
+                    Message::CacheGet { key, peek } => {
+                        assert!(peek, "replica reads must be claim-free peeks");
+                        served += 1;
+                        Message::CacheState(Box::new(WireCacheState::found(key, &state())))
+                    }
+                    other => panic!("peek peer got {}", other.type_name()),
+                };
+                write_frame(&mut writer, &reply).unwrap();
+                writer.flush().unwrap();
+            }
+            served
+        })
+    }
+
+    #[test]
+    fn a_dead_owner_degrades_to_a_claim_free_replica_peek() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let replica_addr = listener.local_addr().unwrap().to_string();
+        let handle = spawn_peek_only_peer(listener);
+
+        let dead = "127.0.0.1:1".to_string();
+        let peers = vec![dead.clone(), replica_addr.clone(), "127.0.0.1:9".to_string()];
+        let tier = RemoteTier::new(&peers, "127.0.0.1:9").unwrap();
+        let ring = tier.ring();
+        // a key the dead peer owns whose replica is the live peer
+        let key = (0..u64::MAX)
+            .map(Key::from)
+            .find(|k| {
+                ring.peers()[ring.owner_of(*k)] == dead
+                    && ring.replica_of(*k).map(|i| ring.peers()[i].as_str())
+                        == Some(replica_addr.as_str())
+            })
+            .unwrap();
+        let ctx = CacheCtx::unscoped();
+        let got = tier.lookup(key, &ctx).expect("replica serves the peek");
+        assert_eq!(got[0].data(), state()[0].data());
+        assert_eq!(tier.stats().hits, 1, "a replica hit is still a remote hit");
+
+        // replicas=0 turns the fallback off: the same lookup is a miss
+        let tier0 = RemoteTier::new(&peers, "127.0.0.1:9").unwrap().with_replicas(0);
+        assert!(tier0.lookup(key, &ctx).is_none());
+        assert_eq!(tier0.stats().hits, 0);
+        drop(tier);
+        assert_eq!(handle.join().unwrap(), 1, "only the replicated lookup peeked");
+    }
+
+    #[test]
+    fn per_address_breaker_survives_a_live_ring_rebuild() {
+        let dead = "127.0.0.1:1".to_string();
+        let peers = vec![dead.clone(), "127.0.0.1:9".to_string()];
+        let tier = RemoteTier::new(&peers, "127.0.0.1:9").unwrap().with_replicas(0);
+        let ctx = CacheCtx::unscoped();
+        let key = key_owned_by(&tier, &dead);
+        for _ in 0..BREAKER_THRESHOLD {
+            assert!(tier.lookup(key, &ctx).is_none());
+        }
+        assert_eq!(tier.stats().breaker_opens, 1, "dead peer tripped once");
+
+        // a join rebuilds the ring; the dead peer's breaker must stay
+        // open — health is per address, not per ring slot
+        assert_eq!(tier.add_peer("127.0.0.1:7").unwrap(), 3);
+        let key = key_owned_by(&tier, &dead);
+        for _ in 0..BREAKER_THRESHOLD {
+            assert!(tier.lookup(key, &ctx).is_none());
+        }
+        assert_eq!(
+            tier.stats().breaker_opens,
+            1,
+            "open breaker survived the rebuild: the peer is not rediscovered key by key"
+        );
+
+        // leaving drops the dead peer's state; its keys get new owners
+        assert_eq!(tier.remove_peer(&dead), 2);
+        assert!(!tier.ring().peers().contains(&dead));
+    }
+
+    #[test]
+    fn hot_keys_cross_the_watermark_once_and_publish_to_the_replica() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let replica_addr = listener.local_addr().unwrap().to_string();
+        let handle = spawn_mini_peer(listener, 1);
+
+        let peers = vec![replica_addr.clone(), "127.0.0.1:9".to_string()];
+        let tier = RemoteTier::new(&peers, "127.0.0.1:9").unwrap();
+        // a key this node owns: its replica is the other peer
+        let key = key_owned_by(&tier, "127.0.0.1:9");
+        assert_eq!(tier.replica_addr(key).as_deref(), Some(replica_addr.as_str()));
+
+        let crossings = (0..4).filter(|_| tier.note_served(key)).count();
+        assert_eq!(crossings, 1, "the watermark fires exactly once per key");
+        assert!(tier.publish_to(&replica_addr, key, &state()));
+        assert!(!tier.publish_to(tier.self_addr(), key, &state()), "self-publish is inert");
+        assert_eq!(tier.stats().stores, 1);
+        drop(tier);
+        assert_eq!(handle.join().unwrap(), 1, "one cache-put reached the replica");
     }
 }

@@ -33,6 +33,12 @@
 //!   either serves the state or hands the *requester* a deadline-bearing
 //!   claim ([`RemoteServe::Claimed`]) that its `cache-put` settles — two
 //!   nodes never duplicate a launch, and a crashed claimant expires.
+//!   The v6 *peek* path ([`ReuseCache::peek_state`], wire
+//!   `cache-get` with `peek:true`) is the deliberate exception: replica
+//!   fallbacks behind an open breaker read claim-free — a miss answers
+//!   immediately and registers nothing — so a degraded read can never
+//!   wedge behind a claim TTL; the worst case is one duplicated launch,
+//!   traded knowingly for liveness.
 //! * **Scoped accounting.** Every counted operation takes a
 //!   [`CacheCtx`] and bumps the context's scope *and* the global
 //!   counters with the same increments, so per-tenant counters sum

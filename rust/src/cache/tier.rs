@@ -19,6 +19,14 @@
 //! caller (a tenant's engine, a test, a bench) and pass it to every
 //! cache call. Unscoped traffic is [`CacheCtx::unscoped`]; the
 //! multi-tenant service builds one [`CacheCtx::scoped`] per tenant.
+//!
+//! Cluster phase 2 (rtfp v6) rides entirely on this abstraction: a
+//! hot-prefix replica is published with an ordinary
+//! [`CacheTier::store`] on the replica's node, and a replica read is an
+//! ordinary [`CacheTier::lookup`] answered by the remote tier's
+//! claim-free `peek` path — no new tier kind, no new counters, and the
+//! stack cannot tell a replicated entry from a locally computed one.
+//! Replication never changes a result, only where it's served from.
 
 use std::sync::Arc;
 

@@ -378,6 +378,18 @@ pub struct ServeConfig {
     /// space is consistent-hash partitioned across these nodes and
     /// misses on another node's shard are fetched over the wire.
     pub peers: Vec<String>,
+    /// `replicas=N` — cluster mode: hot-prefix replication factor.
+    /// Keys this node has served to peers at least twice are pushed to
+    /// the next peer on the rendezvous ring, so a dead owner degrades
+    /// to replica hits instead of local launches. Unset defaults to 1;
+    /// `replicas=0` disables replication.
+    pub replicas: Option<usize>,
+    /// `route=on|off` — cluster mode: front-door routing. A `submit`
+    /// landing on this node is forwarded to the peer owning the
+    /// largest share of the study's predicted chain keys, with results
+    /// proxied back on the submitting connection. Unset defaults to
+    /// off.
+    pub route: Option<bool>,
     /// The residual study options, kept raw for client mode (the server
     /// parses per-job lines itself).
     pub study_args: Vec<String>,
@@ -447,6 +459,16 @@ impl ServeConfig {
                 Some(("warm-start", v)) => sc.warm_start = Some(v == "on" || v == "true"),
                 Some(("window", v)) => sc.submit_window = Some(uint(v)?.max(1)),
                 Some(("retries", v)) => sc.job_retries = Some(uint(v)? as u32),
+                Some(("replicas", v)) => sc.replicas = Some(uint(v)?),
+                Some(("route", v)) => {
+                    sc.route = Some(match v {
+                        "on" | "true" => true,
+                        "off" | "false" => false,
+                        v => {
+                            return Err(Error::Config(format!("`route=` wants on|off, got `{v}`")))
+                        }
+                    })
+                }
                 Some(("speculate", v)) => {
                     sc.speculate = Some(match v {
                         "on" | "true" => true,
@@ -478,6 +500,20 @@ impl ServeConfig {
                 return Err(Error::Config(format!(
                     "`peers=` list must include this node's `listen=` address `{listen}`"
                 )));
+            }
+        }
+        // routing and replication shape the cluster fabric; outside
+        // cluster mode they could only be silently ignored — reject
+        if sc.peers.is_empty() {
+            if sc.route == Some(true) {
+                return Err(Error::Config(
+                    "`route=on` (front-door routing) needs cluster mode (`peers=`)".into(),
+                ));
+            }
+            if sc.replicas.is_some() {
+                return Err(Error::Config(
+                    "`replicas=` (hot-prefix replication) needs cluster mode (`peers=`)".into(),
+                ));
             }
         }
         // the service exists to share one cache across tenants; a
@@ -803,6 +839,41 @@ mod tests {
     }
 
     #[test]
+    fn serve_config_parses_routing_and_replication_flags() {
+        let cluster = ["listen=h:1", "peers=h:1,h:2"];
+        let sc = ServeConfig::from_args(&args(&cluster)).unwrap();
+        assert_eq!(sc.replicas, None, "unset defers to the service default (1)");
+        assert_eq!(sc.route, None, "unset defers to the service default (off)");
+        let sc = ServeConfig::from_args(&args(&[
+            "listen=h:1",
+            "peers=h:1,h:2",
+            "replicas=2",
+            "route=on",
+        ]))
+        .unwrap();
+        assert_eq!(sc.replicas, Some(2));
+        assert_eq!(sc.route, Some(true));
+        let sc = ServeConfig::from_args(&args(&[
+            "listen=h:1",
+            "peers=h:1,h:2",
+            "replicas=0",
+            "route=off",
+        ]))
+        .unwrap();
+        assert_eq!(sc.replicas, Some(0), "replicas=0 disables replication");
+        assert_eq!(sc.route, Some(false));
+        // both flags shape the cluster fabric: outside cluster mode
+        // they'd be silently inert, so they're rejected instead
+        let err = ServeConfig::from_args(&args(&["route=on"])).unwrap_err();
+        assert!(err.to_string().contains("peers="), "route=on names cluster mode: {err}");
+        let err = ServeConfig::from_args(&args(&["replicas=1"])).unwrap_err();
+        assert!(err.to_string().contains("peers="), "replicas= names cluster mode: {err}");
+        // route=off without a cluster is harmless (scripts share flag
+        // sets across single- and multi-node invocations)
+        assert!(ServeConfig::from_args(&args(&["route=off"])).is_ok());
+    }
+
+    #[test]
     fn serve_config_cluster_needs_listen_in_the_peer_list() {
         let err = ServeConfig::from_args(&args(&["peers=h:1,h:2"])).unwrap_err();
         assert!(err.to_string().contains("listen="), "names the missing flag: {err}");
@@ -878,6 +949,7 @@ mod tests {
             (vec!["listen=h:1", "peers=h1,h:1"], "peers=", "h1,h:1"),
             (vec!["listen=h:1", "peers="], "peers=", ""),
             (vec!["speculate=sometimes"], "speculate=", "sometimes"),
+            (vec!["route=sometimes"], "route=", "sometimes"),
             (vec!["adaptive=perhaps"], "adaptive=", "perhaps"),
             (vec!["threshold=-1"], "threshold=", "-1"),
         ] {

@@ -121,8 +121,15 @@ fn print_help() {
            peers=ADDR,...     cluster mode: the full node list (must include this\n\
                               node's listen= address); the 128-bit key space is\n\
                               partitioned across peers over cache-get/cache-put\n\
+           replicas=1         cluster mode: hot keys served to peers twice are\n\
+                              pushed to the ring's next peer (0 disables)\n\
+           route=on|off       cluster mode: front-door routing — submits are\n\
+                              forwarded to the peer owning most of the study's\n\
+                              predicted chain keys (default off)\n\
            submit=ADDR        client mode: send jobs=FILE to a listening service\n\
            drain=on           client mode: drain the service and print its bill\n\
+                              (jobs files may carry `peers add=ADDR` /\n\
+                              `peers remove=ADDR` admin lines: live membership)\n\
          \n\
          docs/SERVING.md is the operator's guide + wire-protocol spec"
     );
@@ -374,7 +381,7 @@ fn cmd_tune(args: &[String]) -> Result<()> {
 fn cmd_serve(args: &[String]) -> Result<()> {
     use rtf_reuse::config::ServeConfig;
     use rtf_reuse::serve::{
-        parse_jobs_file, run_jobs, ServeOptions, StudyJob, StudyService, WireServer,
+        parse_job_lines, run_lines, JobLine, ServeOptions, StudyJob, StudyService, WireServer,
         PROTOCOL_VERSION,
     };
 
@@ -386,10 +393,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             Error::Config("client mode needs jobs=FILE (`tenant=NAME [opts]` per line)".into())
         })?;
         let text = std::fs::read_to_string(path)?;
-        let specs = parse_jobs_file(&text, &sc.study_args)?;
-        let n = specs.len();
+        let lines = parse_job_lines(&text, &sc.study_args)?;
+        let n = lines.iter().filter(|l| matches!(l, JobLine::Job(_))).count();
         println!("client: submitting {n} jobs to {addr} (protocol v{PROTOCOL_VERSION})");
-        let outcome = run_jobs(addr, &specs, sc.drain)?;
+        let outcome = run_lines(addr, &lines, sc.drain)?;
         for j in &outcome.jobs {
             let status = if j.ok() { "ok" } else { "FAILED" };
             println!(
@@ -473,7 +480,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         if opts.peers.is_empty() {
             String::new()
         } else {
-            format!(", cluster of {} peers", opts.peers.len())
+            format!(
+                ", cluster of {} peers (replicas={}{})",
+                opts.peers.len(),
+                opts.replicas,
+                if opts.route { ", front-door routing" } else { "" }
+            )
         }
     );
     let svc = StudyService::start(opts)?;
@@ -506,15 +518,29 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     match &sc.jobs_file {
         Some(path) => {
             let text = std::fs::read_to_string(path)?;
-            for spec in parse_jobs_file(&text, &sc.study_args)? {
-                if spec.tune {
-                    let tc = rtf_reuse::config::TuneConfig::from_args(&spec.args)?;
-                    svc.submit_tune(spec.tenant, tc.study, tc.options)?;
-                } else {
-                    let cfg = StudyConfig::from_args(&spec.args)?;
-                    svc.submit(StudyJob { tenant: spec.tenant, cfg })?;
+            for line in parse_job_lines(&text, &sc.study_args)? {
+                match line {
+                    JobLine::Job(spec) => {
+                        if spec.tune {
+                            let tc = rtf_reuse::config::TuneConfig::from_args(&spec.args)?;
+                            svc.submit_tune(spec.tenant, tc.study, tc.options)?;
+                        } else {
+                            let cfg = StudyConfig::from_args(&spec.args)?;
+                            svc.submit(StudyJob { tenant: spec.tenant, cfg })?;
+                        }
+                        submitted += 1;
+                    }
+                    // admin lines work in-process too: apply + relay,
+                    // exactly as a wire peer-join/peer-leave would
+                    JobLine::PeerAdd(peer) => {
+                        let size = svc.peer_join(&peer, true)?;
+                        println!("peers: {peer} joined, ring size {size}");
+                    }
+                    JobLine::PeerRemove(peer) => {
+                        let size = svc.peer_leave(&peer, true)?;
+                        println!("peers: {peer} left, ring size {size}");
+                    }
                 }
-                submitted += 1;
             }
         }
         None => {

@@ -7,6 +7,12 @@
 //! then a blocking `result` per job in submission order. Third-party
 //! clients only need the protocol module's frame layout to
 //! interoperate.
+//!
+//! Jobs files may also carry *admin lines* (rtfp v6 live membership):
+//! `peers add=ADDR` / `peers remove=ADDR` send a `peer-join` /
+//! `peer-leave` (with `peers=0`, marking the change admin-originated so
+//! the receiving node relays it) at that point of the submit sequence —
+//! which is what lets a test or operator change membership mid-run.
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
@@ -28,6 +34,18 @@ pub struct JobSpec {
     pub tune: bool,
 }
 
+/// One line of a jobs file: a job to submit, or an admin action taken
+/// at that point of the sequence.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobLine {
+    /// `tenant=NAME ...` — submit a study/tune job.
+    Job(JobSpec),
+    /// `peers add=ADDR` — tell the service a node joined the ring.
+    PeerAdd(String),
+    /// `peers remove=ADDR` — tell the service a node left the ring.
+    PeerRemove(String),
+}
+
 /// What a client run brought back.
 #[derive(Clone, Debug, Default)]
 pub struct ClientOutcome {
@@ -46,13 +64,42 @@ pub struct ClientOutcome {
 /// for `kind=tune` lines — so a typo fails fast here instead of
 /// round-tripping to the server.
 pub fn parse_jobs_file(text: &str, defaults: &[String]) -> Result<Vec<JobSpec>> {
-    let mut specs = Vec::new();
+    parse_job_lines(text, defaults)?
+        .into_iter()
+        .map(|l| match l {
+            JobLine::Job(spec) => Ok(spec),
+            JobLine::PeerAdd(_) | JobLine::PeerRemove(_) => Err(Error::Config(
+                "admin `peers` lines need the line-mode client (run_lines)".into(),
+            )),
+        })
+        .collect()
+}
+
+/// Like [`parse_jobs_file`], but admin lines (`peers add=ADDR`,
+/// `peers remove=ADDR`) are first-class: they keep their position in
+/// the sequence, so [`run_lines`] performs them between submissions.
+pub fn parse_job_lines(text: &str, defaults: &[String]) -> Result<Vec<JobLine>> {
+    let mut lines = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
         let bad = |e: Error| Error::Config(format!("jobs file line {}: {e}", lineno + 1));
+        if let Some(rest) = line.strip_prefix("peers") {
+            let rest = rest.trim();
+            let parsed = match rest.split_once('=') {
+                Some(("add", addr)) if addr.contains(':') => JobLine::PeerAdd(addr.into()),
+                Some(("remove", addr)) if addr.contains(':') => JobLine::PeerRemove(addr.into()),
+                _ => {
+                    return Err(bad(Error::Config(format!(
+                        "`peers` admin line wants add=ADDR:PORT or remove=ADDR:PORT, got `{rest}`"
+                    ))));
+                }
+            };
+            lines.push(parsed);
+            continue;
+        }
         let mut tenant = None;
         let mut tune = false;
         let mut args: Vec<String> = defaults.to_vec();
@@ -77,9 +124,9 @@ pub fn parse_jobs_file(text: &str, defaults: &[String]) -> Result<Vec<JobSpec>> 
         } else {
             StudyConfig::from_args(&args).map_err(bad)?;
         }
-        specs.push(JobSpec { tenant, args, tune });
+        lines.push(JobLine::Job(JobSpec { tenant, args, tune }));
     }
-    Ok(specs)
+    Ok(lines)
 }
 
 /// Submit `specs` to the service at `addr`, wait for every result, and
@@ -87,6 +134,15 @@ pub fn parse_jobs_file(text: &str, defaults: &[String]) -> Result<Vec<JobSpec>> 
 /// server exits afterwards). Any protocol-level `error` reply aborts
 /// the run as [`Error::Protocol`].
 pub fn run_jobs(addr: &str, specs: &[JobSpec], drain: bool) -> Result<ClientOutcome> {
+    let lines: Vec<JobLine> = specs.iter().cloned().map(JobLine::Job).collect();
+    run_lines(addr, &lines, drain)
+}
+
+/// Like [`run_jobs`], but over [`JobLine`]s: admin lines execute *in
+/// sequence position* — a `peers remove=` between two submits changes
+/// membership while the first job may still be running, which is
+/// exactly what the membership-chaos tests exercise.
+pub fn run_lines(addr: &str, lines: &[JobLine], drain: bool) -> Result<ClientOutcome> {
     let stream = TcpStream::connect(addr)
         .map_err(|e| Error::Protocol(format!("cannot connect to {addr}: {e}")))?;
     let mut reader = BufReader::new(stream.try_clone().map_err(Error::Io)?);
@@ -105,18 +161,42 @@ pub fn run_jobs(addr: &str, specs: &[JobSpec], drain: bool) -> Result<ClientOutc
         other => return Err(unexpected("hello", &other)),
     }
 
-    let mut ids = Vec::with_capacity(specs.len());
-    for spec in specs {
-        let submit = if spec.tune {
-            Message::SubmitTune { tenant: spec.tenant.clone(), tune: spec.args.clone() }
-        } else {
-            Message::Submit { tenant: spec.tenant.clone(), study: spec.args.clone() }
-        };
-        write_frame(&mut writer, &submit)?;
-        writer.flush().map_err(Error::Io)?;
-        match expect_reply(&mut reader)? {
-            Message::Accepted { job } => ids.push(job),
-            other => return Err(unexpected("accepted", &other)),
+    let mut ids = Vec::with_capacity(lines.len());
+    for line in lines {
+        match line {
+            JobLine::Job(spec) => {
+                let submit = if spec.tune {
+                    Message::SubmitTune { tenant: spec.tenant.clone(), tune: spec.args.clone() }
+                } else {
+                    Message::Submit { tenant: spec.tenant.clone(), study: spec.args.clone() }
+                };
+                write_frame(&mut writer, &submit)?;
+                writer.flush().map_err(Error::Io)?;
+                match expect_reply(&mut reader)? {
+                    Message::Accepted { job } => ids.push(job),
+                    other => return Err(unexpected("accepted", &other)),
+                }
+            }
+            // peers=0 marks the change admin-originated: the receiving
+            // node applies it AND relays it to the rest of the ring
+            JobLine::PeerAdd(peer) => {
+                let msg = Message::PeerJoin { addr: peer.clone(), peers: 0 };
+                write_frame(&mut writer, &msg)?;
+                writer.flush().map_err(Error::Io)?;
+                match expect_reply(&mut reader)? {
+                    Message::PeerJoin { .. } => {}
+                    other => return Err(unexpected("peer-join", &other)),
+                }
+            }
+            JobLine::PeerRemove(peer) => {
+                let msg = Message::PeerLeave { addr: peer.clone(), peers: 0 };
+                write_frame(&mut writer, &msg)?;
+                writer.flush().map_err(Error::Io)?;
+                match expect_reply(&mut reader)? {
+                    Message::PeerLeave { .. } => {}
+                    other => return Err(unexpected("peer-leave", &other)),
+                }
+            }
         }
     }
 
@@ -189,6 +269,25 @@ mod tests {
         let specs =
             parse_jobs_file("tenant=a kind=tune budget=4\n", &["seed=9".to_string()]).unwrap();
         assert_eq!(specs[0].args, vec!["seed=9", "budget=4"]);
+    }
+
+    #[test]
+    fn jobs_file_parses_admin_lines_in_sequence_position() {
+        let text = "tenant=a r=1\npeers remove=127.0.0.1:9\ntenant=b r=1\npeers add=127.0.0.1:9\n";
+        let lines = parse_job_lines(text, &[]).unwrap();
+        assert_eq!(lines.len(), 4);
+        assert!(matches!(lines[0], JobLine::Job(_)));
+        assert_eq!(lines[1], JobLine::PeerRemove("127.0.0.1:9".into()));
+        assert!(matches!(lines[2], JobLine::Job(_)));
+        assert_eq!(lines[3], JobLine::PeerAdd("127.0.0.1:9".into()));
+        // malformed admin lines name the expected shape
+        for bad in ["peers", "peers add=", "peers add=noport", "peers drop=h:1"] {
+            let err = parse_job_lines(bad, &[]).unwrap_err();
+            assert!(err.to_string().contains("add=ADDR:PORT"), "`{bad}`: {err}");
+        }
+        // the strict jobs-file API refuses admin lines rather than
+        // silently dropping a membership change
+        assert!(parse_jobs_file(text, &[]).is_err());
     }
 
     #[test]

@@ -54,8 +54,18 @@
 //! attaches a [`crate::cache::RemoteTier`] below its local tiers, and
 //! misses on keys another node owns are resolved over the protocol-v3
 //! `cache-get` / `cache-put` messages — with single-flight claims that
-//! hold across the remote boundary. `docs/SERVING.md` is the operator's
-//! guide and the normative protocol spec.
+//! hold across the remote boundary. Protocol v6 grows the cluster three
+//! ways: **front-door routing** (`route=on` — any node accepts a submit
+//! and forwards it to the peer owning most of the study's predicted
+//! chain keys, proxying the result back), **hot-prefix replication**
+//! (`replicas=N` — keys served to peers past a hit watermark are pushed
+//! to the ring's next peer, so a dead owner degrades to replica hits
+//! instead of local launches), and **live membership** (`peer-join` /
+//! `peer-leave` wire messages and `peers add=/remove=` jobs-file admin
+//! lines rebuild every node's ring without a restart, with owned-key
+//! handoff as a background drain). Replication and routing never change
+//! a result, only where it's computed or served from. `docs/SERVING.md`
+//! is the operator's guide and the normative protocol spec.
 //!
 //! Correctness under tenancy rests on the cache properties of
 //! [`crate::cache`]: 128-bit content keys (collision margin for a
@@ -83,7 +93,9 @@ pub mod protocol;
 pub mod server;
 mod service;
 
-pub use client::{parse_jobs_file, run_jobs, ClientOutcome, JobSpec};
+pub use client::{
+    parse_job_lines, parse_jobs_file, run_jobs, run_lines, ClientOutcome, JobLine, JobSpec,
+};
 pub use protocol::{WireBill, WireJobReport, WireTenantBill, PROTOCOL_VERSION};
 pub use server::WireServer;
 pub use service::{

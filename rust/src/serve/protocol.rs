@@ -36,6 +36,14 @@
 //! client's version answers `error` with code
 //! [`codes::VERSION_MISMATCH`] and closes.
 //!
+//! Protocol v6 adds the cluster *control plane*: `route` → `routed`
+//! carries a front-door-forwarded job to the node owning most of its
+//! predicted chain keys (a routed job is executed where it lands, never
+//! re-routed), `peer-join`/`peer-leave` rebuild every node's
+//! [`crate::cache::PeerRing`] without a restart, and `cache-get` grows
+//! an optional `peek` flag — a claim-free probe used for replica reads,
+//! tolerated as absent by v5-era receivers.
+//!
 //! # Encode/decode
 //!
 //! ```
@@ -75,8 +83,12 @@ use super::service::{JobReport, ServiceReport};
 /// `pruned` and speculative-execution `speculative` fields to
 /// `job-report` and the per-tenant bill rows, and the bill-level
 /// `pruned` total and `speculative_launches` global (speculation is
-/// billed like input building: globally, to no tenant).
-pub const PROTOCOL_VERSION: u32 = 5;
+/// billed like input building: globally, to no tenant); v6 — adds the
+/// cluster control plane: front-door job forwarding (`route` →
+/// `routed`), live membership (`peer-join` / `peer-leave`, each acked
+/// by an echo carrying the receiver's new ring size), and the optional
+/// `peek` flag on `cache-get` (a claim-free probe for replica reads).
+pub const PROTOCOL_VERSION: u32 = 6;
 
 /// Frame tag: protocol name plus frame-format version.
 pub const FRAME_TAG: &str = "rtfp1";
@@ -140,11 +152,37 @@ pub enum Message {
     Drain,
     /// Reply to [`Message::Drain`]: the full per-tenant bill.
     Bill(Box<WireBill>),
+    /// Cluster control plane (protocol v6): a front-door node forwards
+    /// a submitted job to the peer owning the largest share of its
+    /// predicted chain keys. The receiver executes the job *here* —
+    /// a routed job is never re-routed — and replies
+    /// [`Message::Routed`].
+    Route { tenant: String, study: Vec<String> },
+    /// Reply to [`Message::Route`]: the executing node's local job id
+    /// (`result` on the same connection collects it) and its cluster
+    /// address (informational).
+    Routed { job: u64, node: String },
+    /// Cluster control plane (protocol v6): add `addr` to the
+    /// receiver's peer ring without a restart. `peers = 0` marks an
+    /// admin-originated request — the receiver applies it and relays it
+    /// to every other ring member (with `peers` set to its new ring
+    /// size, so relays are applied but never re-relayed). The ack is an
+    /// echo with `peers` = the receiver's ring size after the change.
+    PeerJoin { addr: String, peers: u64 },
+    /// Cluster control plane (protocol v6): remove `addr` from the
+    /// receiver's peer ring. Same `peers` relay/ack convention as
+    /// [`Message::PeerJoin`]; owned-key handoff runs as a background
+    /// drain on each node, never blocking job traffic.
+    PeerLeave { addr: String, peers: u64 },
     /// Cluster fabric (protocol v3): a peer node asks the key's owner
     /// for the cached state. The owner replies [`Message::CacheState`] —
     /// blocking while another node holds the cross-node claim on the
-    /// key, so two nodes never duplicate a launch.
-    CacheGet { key: Key },
+    /// key, so two nodes never duplicate a launch. With `peek` (v6) the
+    /// request is a claim-free probe: the receiver answers from its
+    /// local tiers or replies a plain miss (`found=false`,
+    /// `claimed=false`) — replica reads use this so a failover never
+    /// registers a claim on a node that does not own the key.
+    CacheGet { key: Key, peek: bool },
     /// Reply to [`Message::CacheGet`]: the state if the owner holds it
     /// (`found`), else a cross-node claim grant (`claimed`) telling the
     /// requester to compute locally and publish with
@@ -610,6 +648,17 @@ fn bool_field(o: &Json, key: &str) -> Result<bool> {
         .ok_or_else(|| Error::Protocol(format!("field `{key}` must be a boolean")))
 }
 
+/// An optional boolean field, absent (or null) meaning `false` — how v6
+/// extends `cache-get` with `peek` without breaking v5-era senders.
+fn opt_bool_field(o: &Json, key: &str) -> Result<bool> {
+    match o.get(key) {
+        None | Some(Json::Null) => Ok(false),
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| Error::Protocol(format!("field `{key}` must be a boolean"))),
+    }
+}
+
 fn key_field(o: &Json, key: &str) -> Result<Key> {
     let s = str_field(o, key)?;
     let raw = u128::from_str_radix(&s, 16)
@@ -830,6 +879,10 @@ impl Message {
             Message::JobDone(_) => "job-report",
             Message::Drain => "drain",
             Message::Bill(_) => "bill",
+            Message::Route { .. } => "route",
+            Message::Routed { .. } => "routed",
+            Message::PeerJoin { .. } => "peer-join",
+            Message::PeerLeave { .. } => "peer-leave",
             Message::CacheGet { .. } => "cache-get",
             Message::CacheState(_) => "cache-state",
             Message::CachePut(_) => "cache-put",
@@ -870,8 +923,32 @@ impl Message {
             Message::JobDone(report) => report.to_json(),
             Message::Drain => obj(vec![("type", js("drain"))]),
             Message::Bill(bill) => bill.to_json(),
-            Message::CacheGet { key } => {
-                obj(vec![("type", js("cache-get")), ("key", jkey(*key))])
+            Message::Route { tenant, study } => obj(vec![
+                ("type", js("route")),
+                ("tenant", js(tenant)),
+                ("study", Json::Arr(study.iter().map(|s| js(s.as_str())).collect())),
+            ]),
+            Message::Routed { job, node } => obj(vec![
+                ("type", js("routed")),
+                ("job", ju(*job)),
+                ("node", js(node)),
+            ]),
+            Message::PeerJoin { addr, peers } => obj(vec![
+                ("type", js("peer-join")),
+                ("addr", js(addr)),
+                ("peers", ju(*peers)),
+            ]),
+            Message::PeerLeave { addr, peers } => obj(vec![
+                ("type", js("peer-leave")),
+                ("addr", js(addr)),
+                ("peers", ju(*peers)),
+            ]),
+            Message::CacheGet { key, peek } => {
+                let mut fields = vec![("type", js("cache-get")), ("key", jkey(*key))];
+                if *peek {
+                    fields.push(("peek", jb(true)));
+                }
+                obj(fields)
             }
             Message::CacheState(state) => obj(vec![
                 ("type", js("cache-state")),
@@ -928,7 +1005,26 @@ impl Message {
             "job-report" => Ok(Message::JobDone(Box::new(WireJobReport::from_json(o)?))),
             "drain" => Ok(Message::Drain),
             "bill" => Ok(Message::Bill(Box::new(WireBill::from_json(o)?))),
-            "cache-get" => Ok(Message::CacheGet { key: key_field(o, "key")? }),
+            "route" => Ok(Message::Route {
+                tenant: str_field(o, "tenant")?,
+                study: str_arr(o, "study")?,
+            }),
+            "routed" => Ok(Message::Routed {
+                job: u64_field(o, "job")?,
+                node: str_field(o, "node")?,
+            }),
+            "peer-join" => Ok(Message::PeerJoin {
+                addr: str_field(o, "addr")?,
+                peers: u64_field(o, "peers")?,
+            }),
+            "peer-leave" => Ok(Message::PeerLeave {
+                addr: str_field(o, "addr")?,
+                peers: u64_field(o, "peers")?,
+            }),
+            "cache-get" => Ok(Message::CacheGet {
+                key: key_field(o, "key")?,
+                peek: opt_bool_field(o, "peek")?,
+            }),
             "cache-state" => Ok(Message::CacheState(Box::new(WireCacheState {
                 key: key_field(o, "key")?,
                 found: bool_field(o, "found")?,
@@ -1044,10 +1140,19 @@ mod tests {
             ..WireBill::default()
         })));
         roundtrip(Message::Error { code: codes::DRAINING.into(), message: "late".into() });
+        roundtrip(Message::Route {
+            tenant: "alice".into(),
+            study: vec!["method=moat".into(), "r=2".into()],
+        });
+        roundtrip(Message::Routed { job: 7, node: "127.0.0.1:4101".into() });
+        roundtrip(Message::PeerJoin { addr: "127.0.0.1:4103".into(), peers: 0 });
+        roundtrip(Message::PeerJoin { addr: "127.0.0.1:4103".into(), peers: 3 });
+        roundtrip(Message::PeerLeave { addr: "127.0.0.1:4102".into(), peers: 2 });
         let key = Key::from_parts(0xdead_beef, 42);
         let state =
             [Plane::filled(1.0, 2, 2), Plane::filled(0.5, 2, 2), Plane::filled(-3.25, 2, 2)];
-        roundtrip(Message::CacheGet { key });
+        roundtrip(Message::CacheGet { key, peek: false });
+        roundtrip(Message::CacheGet { key, peek: true });
         roundtrip(Message::CacheState(Box::new(WireCacheState::found(key, &state))));
         roundtrip(Message::CacheState(Box::new(WireCacheState::claimed(key))));
         roundtrip(Message::CachePut(Box::new(WireCachePut::new(key, &state))));
@@ -1109,11 +1214,27 @@ mod tests {
     }
 
     #[test]
+    fn cache_get_without_peek_parses_as_a_claiming_get() {
+        // a v5-era peer sends no `peek` field; v6 must read it as false
+        let body = format!(
+            "{{\"type\":\"cache-get\",\"key\":\"{:032x}\"}}",
+            Key::from_parts(1, 2).as_u128()
+        );
+        let frame = format!("rtfp1 {}\n{}\n", body.len(), body);
+        let (msg, _) = decode_frame(frame.as_bytes()).unwrap();
+        assert_eq!(msg, Message::CacheGet { key: Key::from_parts(1, 2), peek: false });
+    }
+
+    #[test]
     fn type_names_match_the_spec() {
         for (msg, name) in [
             (Message::Status, "status"),
             (Message::Drain, "drain"),
             (Message::Accepted { job: 0 }, "accepted"),
+            (Message::Route { tenant: String::new(), study: vec![] }, "route"),
+            (Message::Routed { job: 0, node: String::new() }, "routed"),
+            (Message::PeerJoin { addr: String::new(), peers: 0 }, "peer-join"),
+            (Message::PeerLeave { addr: String::new(), peers: 0 }, "peer-leave"),
         ] {
             assert_eq!(msg.type_name(), name);
             assert_eq!(msg.to_json().get("type").and_then(|t| t.as_str()), Some(name));

@@ -20,6 +20,20 @@
 //! frame and the connection stays usable — collect a result, submit
 //! again. This bounds the queue growth any one client can cause without
 //! touching tenant quotas (which meter bytes, not queue depth).
+//!
+//! # Front door (rtfp v6)
+//!
+//! With `route=on`, a `submit` may be *routed*: the server predicts
+//! which peer owns the largest share of the study's chain keys
+//! ([`StudyService::predict_route`]) and, when another node wins,
+//! forwards the study there as a `route` frame over a dedicated
+//! connection. The client sees a normal `accepted` carrying a local
+//! proxy handle; a later `result` for that handle is relayed to the
+//! owning peer and the `job-done` report comes back rewritten to the
+//! handle the client knows. Any routing failure falls back to local
+//! execution — routing is an optimization, never a correctness
+//! dependency. A received `route` is always executed locally
+//! (loop-free by construction).
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -129,9 +143,14 @@ fn handle_conn(
 
     // submit window: jobs this connection accepted but has not yet
     // collected; a submit past the cap gets `over-window`, not a queue
-    // slot (the connection itself stays fine)
+    // slot (the connection itself stays fine). Routed proxy handles
+    // count toward the window like local jobs.
     let window = svc.submit_window();
     let mut undelivered: std::collections::HashSet<u64> = std::collections::HashSet::new();
+    // front-door state: proxy handle -> the peer connection holding the
+    // routed job (handles start at ROUTE_BASE; local ids never collide)
+    let mut proxied: std::collections::HashMap<u64, ProxiedJob> = std::collections::HashMap::new();
+    let mut next_handle: u64 = ROUTE_BASE;
 
     loop {
         let msg = match read_frame(&mut reader) {
@@ -141,7 +160,7 @@ fn handle_conn(
             Err(e) => return refuse(&mut writer, codes::BAD_FRAME, &e.to_string()),
         };
         let reply = match msg {
-            Message::Submit { .. } | Message::SubmitTune { .. }
+            Message::Submit { .. } | Message::SubmitTune { .. } | Message::Route { .. }
                 if undelivered.len() >= window =>
             {
                 let msg = format!(
@@ -152,10 +171,47 @@ fn handle_conn(
                 error_msg(codes::OVER_WINDOW, &msg)
             }
             Message::Submit { tenant, study } => match StudyConfig::from_args(&study) {
+                Ok(cfg) => {
+                    // front door: when another peer owns most of this
+                    // study's predicted chain keys, hand the job there
+                    // and give the client a proxy handle. Every failure
+                    // on this path falls through to local execution.
+                    let routed = if svc.route_enabled() {
+                        svc.predict_route(&cfg)
+                            .and_then(|peer| open_route(&peer, &tenant, &study))
+                    } else {
+                        None
+                    };
+                    match routed {
+                        Some(job) => {
+                            let handle = next_handle;
+                            next_handle += 1;
+                            proxied.insert(handle, job);
+                            undelivered.insert(handle);
+                            Message::Accepted { job: handle }
+                        }
+                        None => match svc.submit(StudyJob { tenant, cfg }) {
+                            Ok(job) => {
+                                undelivered.insert(job);
+                                Message::Accepted { job }
+                            }
+                            Err(e) => error_msg(codes::DRAINING, &e.to_string()),
+                        },
+                    }
+                }
+                Err(e) => error_msg(codes::BAD_STUDY, &e.to_string()),
+            },
+            Message::Route { tenant, study } => match StudyConfig::from_args(&study) {
+                // a routed submit from a peer's front door: execute
+                // HERE, unconditionally — a route is never re-routed,
+                // so no membership disagreement can form a cycle
                 Ok(cfg) => match svc.submit(StudyJob { tenant, cfg }) {
                     Ok(job) => {
                         undelivered.insert(job);
-                        Message::Accepted { job }
+                        let node = svc
+                            .cluster_addr()
+                            .unwrap_or_else(|| self_addr.to_string());
+                        Message::Routed { job, node }
                     }
                     Err(e) => error_msg(codes::DRAINING, &e.to_string()),
                 },
@@ -176,6 +232,14 @@ fn handle_conn(
                 running: svc.in_flight() as u64,
                 done: svc.completed() as u64,
             },
+            Message::Result { job } if proxied.contains_key(&job) => {
+                let reply = proxy_result(&proxied[&job], job);
+                if matches!(reply, Message::JobDone(_)) {
+                    proxied.remove(&job);
+                    undelivered.remove(&job);
+                }
+                reply
+            }
             Message::Result { job } => match svc.wait_job(job) {
                 Some(done) => {
                     undelivered.remove(&job);
@@ -198,11 +262,27 @@ fn handle_conn(
                 let _ = TcpStream::connect(self_addr);
                 return sent;
             }
-            Message::CacheGet { key } => {
+            Message::CacheGet { key, peek: true } => {
+                // claim-free read (rtfp v6): replica fallbacks use this
+                // so a degraded read can never wedge a requester behind
+                // a claim TTL — worst case is one duplicated launch
+                match svc.cache().peek_state(key) {
+                    Some(state) => {
+                        Message::CacheState(Box::new(WireCacheState::found(key, &state)))
+                    }
+                    // wire shape of a miss is found=false, same frame a
+                    // claimed key gets — a peeker treats both as a miss
+                    None => Message::CacheState(Box::new(WireCacheState::claimed(key))),
+                }
+            }
+            Message::CacheGet { key, peek: false } => {
                 // blocks while another node holds the cross-node claim
                 // on this key — cluster single-flight (rtfp v3)
                 match svc.cache().serve_remote_get(key) {
                     RemoteServe::Found(state) => {
+                        // replication hook: the serve that crosses the
+                        // hot watermark pushes this key to its replica
+                        svc.note_remote_served(key);
                         Message::CacheState(Box::new(WireCacheState::found(key, &state)))
                     }
                     RemoteServe::Claimed => {
@@ -215,6 +295,19 @@ fn handle_conn(
                     let stored = svc.cache().serve_remote_put(put.key, planes);
                     Message::CacheOk { key: put.key, stored }
                 }
+                Err(e) => error_msg(codes::BAD_MESSAGE, &e.to_string()),
+            },
+            // live membership (rtfp v6): peers=0 marks an
+            // admin-originated change — apply AND relay it (with our
+            // new ring size, so receivers don't relay again); nonzero
+            // means a peer already relayed — apply only. The ack echoes
+            // the message with this node's new ring size.
+            Message::PeerJoin { addr, peers } => match svc.peer_join(&addr, peers == 0) {
+                Ok(size) => Message::PeerJoin { addr, peers: size },
+                Err(e) => error_msg(codes::BAD_MESSAGE, &e.to_string()),
+            },
+            Message::PeerLeave { addr, peers } => match svc.peer_leave(&addr, peers == 0) {
+                Ok(size) => Message::PeerLeave { addr, peers: size },
                 Err(e) => error_msg(codes::BAD_MESSAGE, &e.to_string()),
             },
             other => {
@@ -242,6 +335,69 @@ fn handle_conn(
             write_frame(&mut writer, &reply)?;
         }
         writer.flush().map_err(Error::Io)?;
+    }
+}
+
+/// Proxy handles start here — far above any id the service will ever
+/// assign locally, so a client can't confuse the two spaces.
+const ROUTE_BASE: u64 = 1 << 32;
+
+/// A routed job: the dedicated peer connection carrying it, and the
+/// job id the *peer* assigned (the client only ever sees the local
+/// proxy handle).
+struct ProxiedJob {
+    stream: TcpStream,
+    remote_id: u64,
+}
+
+/// Dial the winning peer and hand it the study as a `route` frame.
+/// Returns the open connection + remote job id, or `None` on any
+/// failure (the caller falls back to local execution). The connection
+/// gets a bounded connect timeout but NO read timeout: the later
+/// `result` relay blocks for as long as the job runs.
+fn open_route(peer: &str, tenant: &str, study: &[String]) -> Option<ProxiedJob> {
+    use std::net::ToSocketAddrs;
+    let sock = peer.to_socket_addrs().ok()?.next()?;
+    let stream =
+        TcpStream::connect_timeout(&sock, std::time::Duration::from_secs(2)).ok()?;
+    let mut w = BufWriter::new(stream.try_clone().ok()?);
+    let mut r = BufReader::new(stream.try_clone().ok()?);
+    let hello = Message::Hello { version: PROTOCOL_VERSION, role: "router".into() };
+    write_frame(&mut w, &hello).ok()?;
+    w.flush().ok()?;
+    match read_frame(&mut r).ok()?? {
+        Message::Hello { version, .. } if version == PROTOCOL_VERSION => {}
+        _ => return None,
+    }
+    let route = Message::Route { tenant: tenant.to_string(), study: study.to_vec() };
+    write_frame(&mut w, &route).ok()?;
+    w.flush().ok()?;
+    match read_frame(&mut r).ok()?? {
+        Message::Routed { job, .. } => Some(ProxiedJob { stream, remote_id: job }),
+        _ => None,
+    }
+}
+
+/// Relay a `result` wait to the peer owning a routed job and rewrite
+/// the report's job id back to the proxy handle the client knows.
+fn proxy_result(p: &ProxiedJob, handle: u64) -> Message {
+    let exchange = || -> Option<Message> {
+        let mut w = BufWriter::new(p.stream.try_clone().ok()?);
+        write_frame(&mut w, &Message::Result { job: p.remote_id }).ok()?;
+        w.flush().ok()?;
+        let mut r = BufReader::new(p.stream.try_clone().ok()?);
+        read_frame(&mut r).ok()?
+    };
+    match exchange() {
+        Some(Message::JobDone(mut report)) => {
+            report.job = handle;
+            Message::JobDone(report)
+        }
+        Some(Message::Error { code, message }) => Message::Error { code, message },
+        _ => error_msg(
+            codes::UNKNOWN_JOB,
+            &format!("routed peer went away holding proxy handle {handle}"),
+        ),
     }
 }
 

@@ -10,17 +10,20 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::cache::{
-    CacheConfig, CacheStats, RemoteTier, ReuseCache, ScopedCounters, WarmStartReport,
+    fold_keys, node_input_key, task_cache_sig, tile_fingerprints, CacheConfig, CacheStats, Key,
+    RemoteTier, ReuseCache, ScopedCounters, WarmStartReport,
 };
 use crate::config::{EngineMode, ServeConfig, StudyConfig};
 use crate::driver::{
-    make_inputs_with_engine, prepare, prepare_candidates, prune_plan_with_inputs,
+    make_inputs_with_engine, make_tiles, prepare, prepare_candidates, prune_plan_with_inputs,
     run_pjrt_with_inputs_scoped, PreparedStudy, StudyInputs,
 };
 use crate::faults::Faults;
+use crate::merging::{reuse_tree::ReuseTree, unit_stages};
 use crate::runtime::PjrtEngine;
 use crate::adaptive::run_adaptive_scoped;
 use crate::sampling::{default_space, ParamSet};
+use crate::serve::protocol::Message;
 use crate::tune::{run_tune_with_hook, SpeculationHook, TuneOptions, TuneSummary};
 use crate::{Error, Result};
 
@@ -65,6 +68,18 @@ pub struct ServeOptions {
     /// This node's address as it appears in `peers` (the `listen=`
     /// address). Required when `peers` is non-empty.
     pub cluster_addr: Option<String>,
+    /// Replication factor for hot reuse-tree prefixes (`replicas=N`,
+    /// default 1): a key the owner has served at least twice is pushed
+    /// to the peer with the key's next-highest rendezvous score, so a
+    /// breaker-open owner degrades to replica hits instead of local
+    /// launches. 0 disables replication. Cluster mode only.
+    pub replicas: usize,
+    /// Front-door routing (`route=on`): a `submit` landing on this node
+    /// is forwarded to the peer owning the largest share of the study's
+    /// predicted chain keys (`route`/`routed` wire messages), with the
+    /// result proxied back on the submitting connection. Off by
+    /// default. Cluster mode only.
+    pub route: bool,
     /// Extra execution attempts a failed job is granted (total attempts
     /// = `job_retries + 1`; 0 disables retry). Retries back off
     /// exponentially with deterministic per-(job, attempt) jitter and
@@ -118,6 +133,8 @@ impl Default for ServeOptions {
             warm_start: false,
             peers: Vec::new(),
             cluster_addr: None,
+            replicas: 1,
+            route: false,
             job_retries: DEFAULT_JOB_RETRIES,
             job_deadline: None,
             drain_deadline: Some(DEFAULT_DRAIN_DEADLINE),
@@ -165,6 +182,8 @@ impl ServeOptions {
             warm_start: sc.warm_start_effective(),
             peers: sc.peers.clone(),
             cluster_addr: if sc.peers.is_empty() { None } else { sc.listen.clone() },
+            replicas: sc.replicas.unwrap_or(1),
+            route: sc.route.unwrap_or(false),
             job_retries: sc.job_retries.unwrap_or(DEFAULT_JOB_RETRIES),
             submit_window: sc.submit_window.unwrap_or(DEFAULT_SUBMIT_WINDOW),
             speculate: sc.speculate.unwrap_or(false),
@@ -447,6 +466,10 @@ struct Inner {
     spec_launches: Mutex<HashMap<u64, u64>>,
     /// What the boot-time warm start admitted.
     warm: WarmStartReport,
+    /// The cluster fabric tier, kept beyond [`ReuseCache::attach_tier`]
+    /// so the service can reach the ring for routing, replication, and
+    /// live membership. `None` outside cluster mode.
+    remote: Option<Arc<RemoteTier>>,
 }
 
 /// The long-lived multi-tenant study service (see the module docs).
@@ -475,14 +498,20 @@ impl StudyService {
         cache_cfg.faults = opts.faults.clone();
         let cache = Arc::new(ReuseCache::new(cache_cfg));
         let warm = if opts.warm_start { cache.warm_start() } else { WarmStartReport::default() };
-        if !opts.peers.is_empty() {
+        let remote = if opts.peers.is_empty() {
+            None
+        } else {
             let addr = opts.cluster_addr.as_deref().ok_or_else(|| {
                 Error::Config("cluster mode (peers=) needs this node's listen=ADDR".into())
             })?;
-            cache.attach_tier(Arc::new(
-                RemoteTier::new(&opts.peers, addr)?.with_faults(opts.faults.clone()),
-            ));
-        }
+            let tier = Arc::new(
+                RemoteTier::new(&opts.peers, addr)?
+                    .with_faults(opts.faults.clone())
+                    .with_replicas(opts.replicas),
+            );
+            cache.attach_tier(Arc::clone(&tier));
+            Some(tier)
+        };
         let workers = opts.service_workers.max(1);
         let inner = Arc::new(Inner {
             opts,
@@ -496,6 +525,7 @@ impl StudyService {
             speculative_launches: AtomicU64::new(0),
             spec_launches: Mutex::new(HashMap::new()),
             warm,
+            remote,
         });
         let threads = (0..workers)
             .map(|_| {
@@ -531,6 +561,174 @@ impl StudyService {
     /// warm start was off or no disk tier is configured).
     pub fn warm_start_report(&self) -> WarmStartReport {
         self.inner.warm
+    }
+
+    /// The cluster fabric tier (`None` outside cluster mode). Tests and
+    /// the wire server reach the ring, the replication hooks, and the
+    /// breaker counters through this.
+    pub fn remote_tier(&self) -> Option<&Arc<RemoteTier>> {
+        self.inner.remote.as_ref()
+    }
+
+    /// This node's cluster address (`None` outside cluster mode) — the
+    /// `node=` field of a `routed` reply.
+    pub fn cluster_addr(&self) -> Option<String> {
+        self.inner.remote.as_ref().map(|r| r.self_addr().to_string())
+    }
+
+    /// Is front-door routing live on this node? Requires both the
+    /// `route=on` flag and cluster mode.
+    pub fn route_enabled(&self) -> bool {
+        self.inner.opts.route && self.inner.remote.is_some()
+    }
+
+    /// Apply a live membership join: grow the `PeerRing` without a
+    /// restart. With `relay` (the change arrived from an admin line,
+    /// peers=0 on the wire) the join is forwarded best-effort to every
+    /// other member of the *new* ring. Owned-key handoff runs as a
+    /// low-priority background drain. Returns the new ring size.
+    pub fn peer_join(&self, addr: &str, relay: bool) -> Result<u64> {
+        let remote = self.remote_or_err()?;
+        let size = remote.add_peer(addr)? as u64;
+        if relay {
+            let msg = Message::PeerJoin { addr: addr.to_string(), peers: size };
+            self.relay_membership(remote.ring().peers().to_vec(), &msg);
+        }
+        self.spawn_handoff();
+        Ok(size)
+    }
+
+    /// Apply a live membership leave. Relays (admin-originated changes
+    /// only) go over the *old* ring snapshot so the departing node
+    /// hears it too and collapses its own ring to single-node. Returns
+    /// the new ring size.
+    pub fn peer_leave(&self, addr: &str, relay: bool) -> Result<u64> {
+        let remote = self.remote_or_err()?;
+        let old_peers = remote.ring().peers().to_vec();
+        let size = remote.remove_peer(addr) as u64;
+        if relay {
+            let msg = Message::PeerLeave { addr: addr.to_string(), peers: size };
+            self.relay_membership(old_peers, &msg);
+        }
+        self.spawn_handoff();
+        Ok(size)
+    }
+
+    fn remote_or_err(&self) -> Result<&Arc<RemoteTier>> {
+        self.inner.remote.as_ref().ok_or_else(|| {
+            Error::Coordinator("membership change on a non-cluster node (no peers=)".into())
+        })
+    }
+
+    /// Best-effort fan-out of a membership message to every listed peer
+    /// except this node. Failures are ignored: an unreachable peer has
+    /// either departed already or will learn the ring from the next
+    /// change that reaches it.
+    fn relay_membership(&self, peers: Vec<String>, msg: &Message) {
+        let Some(remote) = &self.inner.remote else { return };
+        for peer in &peers {
+            if peer != remote.self_addr() {
+                let _ = remote.control(peer, msg);
+            }
+        }
+    }
+
+    /// After a membership change, trickle every resident key whose
+    /// rendezvous owner is now another node over to that owner — a
+    /// detached background drain, throttled to one key per millisecond
+    /// so it never competes with live jobs for the wire or the cache.
+    /// Idempotent and crash-safe: a key that never arrives just misses
+    /// on the new owner and is recomputed there.
+    fn spawn_handoff(&self) {
+        let Some(remote) = self.inner.remote.clone() else { return };
+        let cache = Arc::clone(&self.inner.cache);
+        std::thread::spawn(move || {
+            for key in cache.resident_keys() {
+                let Some(owner) = remote.owner_addr(key) else { continue };
+                let Some(state) = cache.peek_state(key) else { continue };
+                let _ = remote.publish_to(&owner, key, &state);
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        });
+    }
+
+    /// Replication hook, called by the wire server after this node
+    /// serves a peer a `found` cache state: the serve that crosses the
+    /// hot watermark pushes the key's state to its ring replica, so the
+    /// key outlives this node going dark. Best-effort — a failed push
+    /// costs nothing but the missed replica.
+    pub fn note_remote_served(&self, key: Key) {
+        let Some(remote) = &self.inner.remote else { return };
+        if !remote.note_served(key) {
+            return;
+        }
+        let Some(replica) = remote.replica_addr(key) else { return };
+        let Some(state) = self.inner.cache.peek_state(key) else { return };
+        let _ = remote.publish_to(&replica, key, &state);
+    }
+
+    /// Predict which peer owns the largest share of a study's chain
+    /// keys — the front door's routing decision. Mirrors the planner's
+    /// cache probe ([`crate::merging::count_cached`]) without touching
+    /// the cache or launching anything: prepare the study, enumerate
+    /// every unit's reuse-tree chain keys, and score each task node's
+    /// key against the ring. Returns `Some(addr)` only when another
+    /// node wins; `None` (execute here) on single-node rings, ties won
+    /// by self, or studies whose keys are mostly local.
+    pub fn predict_route(&self, cfg: &StudyConfig) -> Option<String> {
+        let remote = self.inner.remote.as_ref()?;
+        let ring = remote.ring();
+        if ring.peers().len() < 2 {
+            return None;
+        }
+        // pin the env-dependent fields exactly as `execute_job` will,
+        // so predicted keys match the keys execution computes
+        let mut cfg = cfg.clone();
+        cfg.engine = EngineMode::Pjrt;
+        cfg.artifacts_dir = self.inner.opts.artifacts_dir.clone();
+        cfg.workers = self.inner.opts.study_workers;
+        cfg.batch_width = self.inner.opts.batch_width;
+        let (h, w, art_fp, compare_task) = {
+            let leader = self.inner.leader.lock().unwrap();
+            let (h, w) = leader.tile_shape();
+            let m = leader.manifest();
+            (h, w, m.fingerprint(), m.compare_task.clone())
+        };
+        let prepared = prepare(&cfg);
+        let plan = prepared.plan(&cfg);
+        let tiles = make_tiles(&cfg, h, w);
+        let mut tile_fps = tile_fingerprints(&tiles);
+        for fp in tile_fps.values_mut() {
+            // the artifact fold `keyed_tile_fps` applies to real keys
+            *fp = fold_keys(Key::from(art_fp), *fp);
+        }
+        let step = self.inner.cache.quantize_step();
+        let graph = &prepared.graph;
+        let instances = &prepared.instances;
+        let mut tally: HashMap<usize, u64> = HashMap::new();
+        for unit in &plan.units {
+            let rep = &instances[graph.nodes[unit.nodes[0]].rep];
+            // comparison keys fold reference-mask fingerprints we can't
+            // compute without launches; routing scores the rest
+            if rep.tasks.len() == 1 && rep.tasks[0].name == compare_task {
+                continue;
+            }
+            let tile_fp = tile_fps.get(&rep.tile).copied().unwrap_or(Key::from(0u64));
+            let base = node_input_key(graph, instances, unit.nodes[0], tile_fp, step);
+            let stages = unit_stages(unit, graph, instances);
+            let tree = ReuseTree::build(&stages);
+            let levels = tree.walk();
+            let keys = tree.chain_keys(&levels, base, |level, member| {
+                task_cache_sig(&instances[graph.nodes[unit.nodes[member]].rep].tasks[level - 1], step)
+            });
+            for node in levels.iter().flatten().filter(|n| n.stage.is_none()) {
+                *tally.entry(ring.owner_of(keys[node.node])).or_insert(0) += 1;
+            }
+        }
+        let (&winner, _) =
+            tally.iter().max_by_key(|&(&idx, &count)| (count, std::cmp::Reverse(idx)))?;
+        let addr = ring.addr(winner);
+        (addr != remote.self_addr()).then(|| addr.to_string())
     }
 
     /// Enqueue a study job. Returns its id, or an error once draining
@@ -1278,6 +1476,8 @@ mod tests {
         assert_eq!(base.job_deadline, None);
         assert!(!base.speculate, "speculation is opt-in");
         assert!(!base.faults.is_active());
+        assert_eq!(base.replicas, 1, "one replica per hot prefix by default");
+        assert!(!base.route, "front-door routing is opt-in");
 
         let args: Vec<String> =
             ["window=3", "retries=0", "speculate=on"].iter().map(|s| s.to_string()).collect();
@@ -1286,6 +1486,16 @@ mod tests {
         assert_eq!(o.submit_window, 3);
         assert_eq!(o.job_retries, 0, "retries=0 disables retry");
         assert!(o.speculate, "speculate=on reaches the options");
+
+        let args: Vec<String> = ["listen=127.0.0.1:0", "peers=127.0.0.1:0,h:2", "replicas=2", "route=on"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let sc = ServeConfig::from_args(&args).unwrap();
+        let o = ServeOptions::from_config(&sc);
+        assert_eq!(o.replicas, 2, "replicas= reaches the options");
+        assert!(o.route, "route=on reaches the options");
+        assert_eq!(o.cluster_addr.as_deref(), Some("127.0.0.1:0"));
     }
 
     /// Pin the execution-environment fields exactly as `execute_job`

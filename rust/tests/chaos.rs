@@ -16,6 +16,14 @@
 //!
 //! The plan is derived deterministically from a seed so CI can pin
 //! seeds (`RTF_CHAOS_SEED=N`) and any failure reproduces exactly.
+//!
+//! Cluster phase 2 adds a **membership-chaos** schedule: a peer leaves
+//! mid-study over the wire admin path (`peers remove=`), rejoins, and
+//! the study's runner gets a scripted streak of refused dials that
+//! opens a circuit breaker toward an owner — degrading its lookups to
+//! replica peeks. Same bundle of claims: every job completes, results
+//! stay bit-identical to a fault-free single node, and drain never
+//! wedges.
 
 use std::net::TcpListener;
 use std::path::PathBuf;
@@ -23,10 +31,14 @@ use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
 
-use rtf_reuse::cache::CacheConfig;
+use rtf_reuse::cache::{CacheConfig, CacheTier};
+use rtf_reuse::config::StudyConfig;
 use rtf_reuse::faults::{DiskFault, FaultPlan, Faults, PeerFault};
 use rtf_reuse::serve::protocol::{WireBill, WireJobReport};
-use rtf_reuse::serve::{run_jobs, JobSpec, ServeOptions, ServiceReport, StudyService, WireServer};
+use rtf_reuse::serve::{
+    run_jobs, run_lines, JobLine, JobSpec, ServeOptions, ServiceReport, StudyJob, StudyService,
+    WireServer,
+};
 
 fn study_args() -> Vec<String> {
     vec!["method=moat".into(), "r=1".into(), "batch-width=16".into()]
@@ -217,5 +229,159 @@ fn scripted_chaos_is_survived_and_bit_identical_to_the_fault_free_run() {
         // ledgers stay exact under chaos
         assert_scoped_sums_match(&chaos.bill_a, "chaos node A");
         assert_scoped_sums_match(&chaos.bill_b, "chaos node B");
+    }
+}
+
+/// Start a node and keep its service handle too — the membership test
+/// asks nodes for their ring size and submits in-process to overlap a
+/// study with admin traffic.
+fn spawn_node_with_svc(
+    opts: ServeOptions,
+    addr: &str,
+) -> (Arc<StudyService>, thread::JoinHandle<ServiceReport>) {
+    let svc = StudyService::start(opts).expect("node starts");
+    let server = WireServer::bind(svc, addr).expect("node binds its reserved addr");
+    let svc = Arc::clone(server.service());
+    (svc, thread::spawn(move || server.run().expect("node drains cleanly")))
+}
+
+fn ring_size(svc: &StudyService) -> usize {
+    svc.remote_tier().expect("cluster node").ring().peers().len()
+}
+
+/// Node C runs the mid-chaos study, so its script refuses a streak of
+/// six consecutive outbound peer dials starting near the front. Six
+/// consecutive failures split over two remote addresses put at least
+/// three unbroken failures on one of them — a guaranteed breaker open,
+/// wherever the seed lands the streak.
+fn plan_for_node_c(seed: u64) -> FaultPlan {
+    let mut s = seed ^ 0xC0C;
+    let start = 1 + splitmix(&mut s) % 2;
+    let mut plan = FaultPlan::new();
+    for i in 0..6 {
+        plan = plan.peer_fault(start + i, PeerFault::Refuse);
+    }
+    plan
+}
+
+/// The membership-chaos schedule: on a three-node ring (replicas=1), a
+/// peer leaves mid-study through the wire admin path and later rejoins,
+/// while the running node's scripted dial refusals open a breaker
+/// toward an owner. Every job completes, every result is bit-identical
+/// to a fault-free single-node run, the rings converge after each
+/// change, and the ledgers stay exact.
+#[test]
+fn a_peer_leaving_and_rejoining_mid_study_never_changes_results() {
+    for seed in seeds() {
+        // ground truth: the same study on a fault-free single node
+        let solo_dir = temp_dir(&format!("member-solo-{seed}"));
+        let _ = std::fs::remove_dir_all(&solo_dir);
+        let solo_opts =
+            node_opts(&[], "", Faults::none(), solo_dir.clone());
+        let solo_opts = ServeOptions { peers: vec![], cluster_addr: None, ..solo_opts };
+        let solo = StudyService::start(solo_opts).expect("solo starts");
+        let server = WireServer::bind(solo, "127.0.0.1:0").expect("bind loopback");
+        let solo_addr = server.local_addr().expect("bound").to_string();
+        let solo_handle = thread::spawn(move || server.run().expect("solo drains"));
+        let spec = JobSpec { tenant: "solo".into(), args: study_args(), tune: false };
+        let base = run_jobs(&solo_addr, &[spec], true).expect("solo run succeeds");
+        solo_handle.join().expect("solo joins");
+        let _ = std::fs::remove_dir_all(&solo_dir);
+        assert!(base.jobs[0].ok(), "seed {seed}: solo job: {:?}", base.jobs[0].error);
+        let solo_y = &base.jobs[0].y;
+
+        let dirs: Vec<PathBuf> =
+            (0..3).map(|i| temp_dir(&format!("member-{seed}-{i}"))).collect();
+        for d in &dirs {
+            let _ = std::fs::remove_dir_all(d);
+        }
+        let addrs: Vec<String> = (0..3).map(|_| reserve_addr()).collect();
+        let plan_c = Arc::new(plan_for_node_c(seed));
+        let faults =
+            [Faults::none(), Faults::none(), Faults::hooked(plan_c.clone())];
+        let nodes: Vec<_> = addrs
+            .iter()
+            .zip(faults)
+            .zip(&dirs)
+            .map(|((a, f), d)| {
+                (spawn_node_with_svc(node_opts(&addrs, a, f, d.clone()), a), a.clone())
+            })
+            .collect();
+        let svc = |i: usize| -> &StudyService { &nodes[i].0 .0 };
+
+        // warm the fabric: cold on A, warm on B — B now holds a full
+        // copy, which is what the replica peeks lean on later
+        for (i, tenant) in ["cold", "warm"].iter().enumerate() {
+            let spec = JobSpec { tenant: tenant.to_string(), args: study_args(), tune: false };
+            let out = run_jobs(&addrs[i], &[spec], false).expect("warm-up completes");
+            assert!(out.jobs[0].ok(), "seed {seed}: warm-up {i}: {:?}", out.jobs[0].error);
+            assert_eq!(&out.jobs[0].y, solo_y, "seed {seed}: warm-up {i} matches solo");
+        }
+
+        // the chaos window: submit on C in-process, then while it runs
+        // (through C's scripted dial refusals) pull B out of the ring
+        // over the wire admin path — exactly what a jobs-file
+        // `peers remove=` line sends
+        let cfg = StudyConfig::from_args(&study_args()).expect("study parses");
+        let job = svc(2)
+            .submit(StudyJob { tenant: "chaos".into(), cfg })
+            .expect("mid-chaos submit accepted");
+        run_lines(&addrs[0], &[JobLine::PeerRemove(addrs[1].clone())], false)
+            .expect("admin leave accepted");
+        let report = svc(2).wait_job(job).expect("chaos job tracked");
+        assert!(report.ok(), "seed {seed}: mid-chaos job: {:?}", report.error);
+        assert_eq!(&report.y, solo_y, "seed {seed}: membership chaos never changes results");
+
+        // the leave relayed everywhere: A and C dropped B, and B — told
+        // of its own departure — collapsed to a solo ring but kept
+        // serving its local work
+        assert_eq!(ring_size(svc(0)), 2, "seed {seed}: A dropped the departed peer");
+        assert_eq!(ring_size(svc(2)), 2, "seed {seed}: C dropped the departed peer");
+        assert_eq!(ring_size(svc(1)), 1, "seed {seed}: the departed node runs solo");
+
+        // the scripted refusals fired and opened a per-address breaker;
+        // degraded lookups went to replica peeks, not a wedge
+        assert!(
+            plan_c.fired().peer_faults >= 3,
+            "seed {seed}: the refusal streak fired ({} faults)",
+            plan_c.fired().peer_faults
+        );
+        let breaker_opens = svc(2).remote_tier().expect("cluster node").stats().breaker_opens;
+        assert!(breaker_opens >= 1, "seed {seed}: the refusal streak opened a breaker");
+
+        // rejoin: the members re-admit B over the wire (`peers add=`),
+        // and B itself is re-pointed at its peers — the in-process
+        // equivalent of restarting it with `peers=` or feeding it its
+        // own `peers add=` lines
+        run_lines(&addrs[0], &[JobLine::PeerAdd(addrs[1].clone())], false)
+            .expect("admin rejoin accepted");
+        svc(1).peer_join(&addrs[0], false).expect("rejoiner re-adds A");
+        svc(1).peer_join(&addrs[2], false).expect("rejoiner re-adds C");
+        for i in 0..3 {
+            assert_eq!(ring_size(svc(i)), 3, "seed {seed}: node {i} converged after rejoin");
+        }
+
+        // the rejoined node still serves and computes correctly
+        let spec = JobSpec { tenant: "after".into(), args: study_args(), tune: false };
+        let out = run_jobs(&addrs[1], &[spec], false).expect("post-rejoin job completes");
+        assert!(out.jobs[0].ok(), "seed {seed}: post-rejoin job: {:?}", out.jobs[0].error);
+        assert_eq!(&out.jobs[0].y, solo_y, "seed {seed}: post-rejoin result matches solo");
+
+        // no scripted or membership fault may wedge drain; ledgers exact
+        let mut bills = Vec::new();
+        for i in (0..3).rev() {
+            let bill =
+                run_jobs(&addrs[i], &[], true).expect("drain node").bill.expect("bill");
+            bills.push((i, bill));
+        }
+        for ((_, handle), _) in nodes {
+            handle.join().expect("node joins");
+        }
+        for (i, bill) in &bills {
+            assert_scoped_sums_match(bill, &format!("member node {i}"));
+        }
+        for d in &dirs {
+            let _ = std::fs::remove_dir_all(d);
+        }
     }
 }

@@ -1,0 +1,174 @@
+//! Live-membership properties of the rendezvous ring (rtfp v6): the
+//! whole point of HRW hashing is that membership changes are *minimally
+//! disruptive* — a join moves only the keys the new peer wins, a leave
+//! moves only the departed peer's keys, and every other assignment is
+//! untouched. These are exactly the properties the background handoff
+//! drain and hot-prefix replication lean on (a bounded key share moves,
+//! so a trickled handoff converges), so they are pinned here over a
+//! large key sample and a seed-pinned membership-event sequence.
+//!
+//! `RTF_MEMBER_SEED=N` pins the sample (CI runs two fixed seeds); the
+//! default keeps local runs to one.
+
+use rtf_reuse::cache::{Key, PeerRing};
+use rtf_reuse::testutil::splitmix64 as splitmix;
+
+/// Sample size: ≥10k keys gives every peer of a small ring a shard in
+/// the thousands, so share assertions are far from noise.
+const KEYS: usize = 10_000;
+
+fn seed() -> u64 {
+    match std::env::var("RTF_MEMBER_SEED") {
+        Ok(v) => v.parse().expect("RTF_MEMBER_SEED must be a u64"),
+        Err(_) => 7,
+    }
+}
+
+/// A deterministic sample of 128-bit keys from the seed's splitmix
+/// stream.
+fn sample_keys(seed: u64) -> Vec<Key> {
+    let mut s = seed;
+    (0..KEYS).map(|_| Key::from_parts(splitmix(&mut s), splitmix(&mut s))).collect()
+}
+
+fn addrs(n: usize) -> Vec<String> {
+    (0..n).map(|i| format!("10.0.0.{i}:7070")).collect()
+}
+
+#[test]
+fn every_peer_owns_a_substantial_shard_and_replicas_differ_from_owners() {
+    let peers = addrs(4);
+    let ring = PeerRing::new(&peers, &peers[0]).expect("ring builds");
+    let keys = sample_keys(seed());
+    let mut shares = vec![0usize; peers.len()];
+    for &k in &keys {
+        let owner = ring.owner_of(k);
+        shares[owner] += 1;
+        let replica = ring.replica_of(k).expect("multi-node ring has a replica");
+        assert_ne!(replica, owner, "the replica target is never the owner");
+    }
+    // uniform in expectation: each of 4 peers gets ~2500 of 10k keys;
+    // a quarter of the fair share is a generous floor for FNV mixing
+    for (i, &share) in shares.iter().enumerate() {
+        assert!(
+            share > KEYS / peers.len() / 4,
+            "peer {i} owns {share} of {KEYS} keys — partition is badly skewed"
+        );
+    }
+}
+
+#[test]
+fn a_join_moves_only_the_keys_the_new_peer_wins() {
+    let peers = addrs(3);
+    let ring = PeerRing::new(&peers, &peers[0]).expect("ring builds");
+    let keys = sample_keys(seed());
+    let before: Vec<usize> = keys.iter().map(|&k| ring.owner_of(k)).collect();
+
+    let joined = "10.0.0.9:7070";
+    let grown = ring.join(joined).expect("join builds a ring");
+    let mut moved = 0usize;
+    for (i, &k) in keys.iter().enumerate() {
+        let new_owner = grown.addr(grown.owner_of(k));
+        let old_owner = ring.addr(before[i]);
+        if new_owner != old_owner {
+            assert_eq!(
+                new_owner, joined,
+                "key {k:?} moved from {old_owner} to {new_owner} — a join may only move \
+                 keys TO the joined peer"
+            );
+            moved += 1;
+        }
+    }
+    // the newcomer wins its fair share (~1/4) and nothing close to all
+    assert!(moved > KEYS / 8, "join moved only {moved} of {KEYS} keys");
+    assert!(moved < KEYS / 2, "join moved {moved} of {KEYS} keys — far too disruptive");
+}
+
+#[test]
+fn a_leave_moves_only_the_departed_peers_keys() {
+    let peers = addrs(4);
+    let ring = PeerRing::new(&peers, &peers[0]).expect("ring builds");
+    let keys = sample_keys(seed());
+
+    let departed = ring.addr(2).to_string();
+    let shrunk = ring.leave(&departed);
+    assert_eq!(shrunk.peers().len(), 3);
+    for &k in &keys {
+        let old_owner = ring.addr(ring.owner_of(k)).to_string();
+        let new_owner = shrunk.addr(shrunk.owner_of(k)).to_string();
+        if old_owner == departed {
+            assert_ne!(new_owner, departed, "departed peers own nothing");
+        } else {
+            assert_eq!(
+                new_owner, old_owner,
+                "key {k:?} moved although its owner {old_owner} never left"
+            );
+        }
+    }
+}
+
+#[test]
+fn ring_rebuilds_are_order_insensitive_and_idempotent() {
+    let peers = addrs(3);
+    let ring = PeerRing::new(&peers, &peers[1]).expect("ring builds");
+    // every node fed the same membership (any order) agrees on owners
+    let shuffled = vec![peers[2].clone(), peers[0].clone(), peers[1].clone()];
+    let other = PeerRing::new(&shuffled, &peers[1]).expect("ring builds");
+    for &k in sample_keys(seed()).iter().take(1000) {
+        assert_eq!(ring.owner_of(k), other.owner_of(k), "peer order must not matter");
+    }
+    // re-joining a member and leaving a stranger are both no-ops
+    let rejoin = ring.join(&peers[0]).expect("idempotent join");
+    assert_eq!(rejoin.peers(), ring.peers());
+    let stranger = ring.leave("10.9.9.9:1");
+    assert_eq!(stranger.peers(), ring.peers());
+    // leaving yourself collapses to a single-node ring, not an error
+    let solo = ring.leave(&peers[1]);
+    assert_eq!(solo.peers(), [peers[1].clone()]);
+    assert_eq!(solo.self_addr(), peers[1]);
+}
+
+/// The satellite property: over a seed-pinned *sequence* of membership
+/// events, every single step is minimally disruptive — each key either
+/// keeps its owner, moves to the peer that joined, or moves because its
+/// owner left. Runs the sequence with a tracked owner map so a
+/// violation names the exact step.
+#[test]
+fn a_seedpinned_membership_sequence_is_minimally_disruptive_at_every_step() {
+    let mut s = seed() ^ 0xD15B;
+    let keys = sample_keys(seed());
+    let pool = addrs(8);
+    // start from a 3-node ring; the rest of the pool joins/leaves
+    let mut ring = PeerRing::new(&pool[..3].to_vec(), &pool[0]).expect("ring builds");
+    let mut owners: Vec<String> =
+        keys.iter().map(|&k| ring.addr(ring.owner_of(k)).to_string()).collect();
+
+    for step in 0..12 {
+        let candidate = &pool[(splitmix(&mut s) % pool.len() as u64) as usize];
+        let is_member = ring.peers().iter().any(|p| p == candidate);
+        // self never leaves; otherwise flip the candidate's membership
+        let (next, joined, left) = if !is_member {
+            (ring.join(candidate).expect("join builds"), Some(candidate.clone()), None)
+        } else if candidate != ring.self_addr() && ring.peers().len() > 2 {
+            (ring.leave(candidate), None, Some(candidate.clone()))
+        } else {
+            continue;
+        };
+        for (i, &k) in keys.iter().enumerate() {
+            let new_owner = next.addr(next.owner_of(k)).to_string();
+            let old_owner = &owners[i];
+            if new_owner != *old_owner {
+                let to_joiner = joined.as_deref() == Some(new_owner.as_str());
+                let from_departed = left.as_deref() == Some(old_owner.as_str());
+                assert!(
+                    to_joiner || from_departed,
+                    "step {step}: key {k:?} moved {old_owner} -> {new_owner}, but the \
+                     event was join={joined:?} leave={left:?} — only keys owned by (or \
+                     destined to) the changed peer may move"
+                );
+            }
+            owners[i] = new_owner;
+        }
+        ring = next;
+    }
+}

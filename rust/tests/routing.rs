@@ -1,0 +1,308 @@
+//! Cluster phase 2 end to end: front-door routing and hot-prefix
+//! replication on real `StudyService`s behind real TCP listeners. The
+//! properties under test are the ones the v6 protocol sells: a submit
+//! to a non-owner is transparently routed to the peer owning the
+//! study's key plurality (and falls back to local execution when that
+//! peer is gone), a dead owner past the hot watermark degrades to
+//! replica hits instead of local launches, and through all of it the
+//! results stay bit-identical to a single node while the scoped
+//! ledgers keep partitioning the globals on every node. Plus the
+//! regression pin for the breaker hoist: the circuit breaker keys on
+//! the peer *address*, never rediscovering a dead peer key by key.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use rtf_reuse::cache::{CacheCtx, CacheConfig, CacheTier, Key, RemoteTier};
+use rtf_reuse::config::StudyConfig;
+use rtf_reuse::serve::protocol::WireBill;
+use rtf_reuse::serve::{run_jobs, JobSpec, ServeOptions, ServiceReport, StudyService, WireServer};
+
+/// Proxy handles live above every local job id (`server::ROUTE_BASE`);
+/// a client-visible id at or past this mark proves the job was routed.
+const ROUTE_BASE: u64 = 1 << 32;
+
+fn study_args(batch_width: usize) -> Vec<String> {
+    vec!["method=moat".into(), "r=1".into(), format!("batch-width={batch_width}")]
+}
+
+/// Reserve a loopback address the OS just proved free (same caveat as
+/// `tests/cluster.rs`: the rebind window is vanishingly small).
+fn reserve_addr() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("reserve a port");
+    listener.local_addr().expect("reserved addr").to_string()
+}
+
+fn base_opts() -> ServeOptions {
+    ServeOptions {
+        service_workers: 1,
+        tenant_inflight_cap: 1,
+        study_workers: 2,
+        cache: CacheConfig { capacity_bytes: 512 * 1024 * 1024, ..CacheConfig::default() },
+        ..ServeOptions::default()
+    }
+}
+
+fn node_opts(peers: &[String], own: &str) -> ServeOptions {
+    ServeOptions {
+        peers: peers.to_vec(),
+        cluster_addr: Some(own.to_string()),
+        ..base_opts()
+    }
+}
+
+/// Start a node and keep a handle on its service, so the test can ask
+/// it questions (`predict_route`, `completed`) while the wire server
+/// owns the listener.
+fn spawn_node(
+    opts: ServeOptions,
+    addr: &str,
+) -> (Arc<StudyService>, thread::JoinHandle<ServiceReport>) {
+    let svc = StudyService::start(opts).expect("node starts");
+    let server = WireServer::bind(svc, addr).expect("node binds its reserved addr");
+    let svc = Arc::clone(server.service());
+    (svc, thread::spawn(move || server.run().expect("node drains cleanly")))
+}
+
+/// Ground truth: the same study on a plain single node.
+fn solo_baseline(args: Vec<String>) -> Vec<f64> {
+    let svc = StudyService::start(base_opts()).expect("solo service starts");
+    let server = WireServer::bind(svc, "127.0.0.1:0").expect("bind loopback");
+    let addr = server.local_addr().expect("bound address").to_string();
+    let handle = thread::spawn(move || server.run().expect("solo drains cleanly"));
+    let spec = JobSpec { tenant: "solo".into(), args, tune: false };
+    let out = run_jobs(&addr, &[spec], true).expect("solo run succeeds");
+    handle.join().expect("solo joins");
+    assert!(out.jobs[0].ok(), "solo job: {:?}", out.jobs[0].error);
+    out.jobs[0].y.clone()
+}
+
+fn assert_scoped_sums_match(bill: &WireBill, node: &str) {
+    let sums = bill.tenants.iter().fold((0, 0, 0, 0, 0), |acc, t| {
+        (
+            acc.0 + t.cache.hits,
+            acc.1 + t.cache.disk_hits,
+            acc.2 + t.cache.remote_hits,
+            acc.3 + t.cache.misses,
+            acc.4 + t.cache.inserts,
+        )
+    });
+    assert_eq!(sums.0, bill.cache.hits, "{node}: scoped hits partition the globals");
+    assert_eq!(sums.1, bill.cache.disk_hits, "{node}: scoped disk hits partition the globals");
+    assert_eq!(sums.2, bill.cache.remote_hits, "{node}: scoped remote hits partition the globals");
+    assert_eq!(sums.3, bill.cache.misses, "{node}: scoped misses partition the globals");
+    assert_eq!(sums.4, bill.cache.inserts, "{node}: scoped inserts partition the globals");
+}
+
+/// The front door end to end: three route-enabled nodes, a submit to a
+/// non-owner is executed on the predicted owner behind a proxy handle,
+/// and when that owner dies the same submit falls back to local
+/// execution on the router — riding the third node's shard over remote
+/// hits — with bit-identical results throughout.
+#[test]
+fn a_submit_to_a_non_owner_is_routed_and_falls_back_local_when_the_owner_dies() {
+    let args = study_args(16);
+    let base_y = solo_baseline(args.clone());
+
+    let addrs: Vec<String> = (0..3).map(|_| reserve_addr()).collect();
+    let mut nodes: Vec<_> = addrs
+        .iter()
+        .map(|a| {
+            let opts = ServeOptions { route: true, ..node_opts(&addrs, a) };
+            Some(spawn_node(opts, a))
+        })
+        .collect();
+
+    // the planner probe must agree across the cluster: exactly one node
+    // claims the study's key plurality for itself (predicts None), and
+    // every other node names that node's address
+    let cfg = StudyConfig::from_args(&args).expect("study parses");
+    let predictions: Vec<Option<String>> = nodes
+        .iter()
+        .map(|n| n.as_ref().unwrap().0.predict_route(&cfg))
+        .collect();
+    let locals = predictions.iter().filter(|p| p.is_none()).count();
+    assert_eq!(locals, 1, "exactly one node owns the key plurality: {predictions:?}");
+    let winner = predictions.iter().position(|p| p.is_none()).expect("a local predictor");
+    assert!(
+        predictions.iter().flatten().all(|a| *a == addrs[winner]),
+        "the peers disagree on the owner: {predictions:?}"
+    );
+    let router = (winner + 1) % addrs.len();
+    let third = (winner + 2) % addrs.len();
+
+    // cold job through the front door: accepted by the router, executed
+    // on the winner, result proxied back on the same connection
+    let spec = JobSpec { tenant: "cold".into(), args: args.clone(), tune: false };
+    let out = run_jobs(&addrs[router], &[spec], false).expect("routed submit succeeds");
+    assert!(out.jobs[0].ok(), "routed job: {:?}", out.jobs[0].error);
+    assert_eq!(out.jobs[0].y, base_y, "a routed job is bit-identical to solo");
+    assert!(
+        out.jobs[0].job >= ROUTE_BASE,
+        "the client-visible id {} must be a proxy handle — was the job routed at all?",
+        out.jobs[0].job
+    );
+    assert_eq!(nodes[router].as_ref().unwrap().0.completed(), 0, "the router executed nothing");
+    assert_eq!(nodes[winner].as_ref().unwrap().0.completed(), 1, "the owner executed the job");
+
+    // kill the owner; its shard survives on the peers it wrote through to
+    let (winner_svc, winner_handle) = nodes[winner].take().expect("winner node");
+    let bill_w = run_jobs(&addrs[winner], &[], true).expect("drain winner").bill.expect("bill");
+    winner_handle.join().expect("winner joins");
+    drop(winner_svc);
+
+    // the same study again: the router still predicts the (dead) owner,
+    // the route dial fails, and the submit falls back to LOCAL execution
+    // — completing bit-identically by pulling the third node's shard
+    // over remote gets and relaunching what died with the owner
+    let spec = JobSpec { tenant: "fallback".into(), args, tune: false };
+    let out = run_jobs(&addrs[router], &[spec], false).expect("fallback submit succeeds");
+    assert!(out.jobs[0].ok(), "fallback job: {:?}", out.jobs[0].error);
+    assert_eq!(out.jobs[0].y, base_y, "a dead route never changes results");
+    assert!(out.jobs[0].job < ROUTE_BASE, "the fallback runs under a local id");
+    assert_eq!(nodes[router].as_ref().unwrap().0.completed(), 1, "the router ran the fallback");
+
+    let bill_t = run_jobs(&addrs[third], &[], true).expect("drain third").bill.expect("bill");
+    let bill_r = run_jobs(&addrs[router], &[], true).expect("drain router").bill.expect("bill");
+    for node in nodes.into_iter().flatten() {
+        node.1.join().expect("node joins");
+    }
+
+    assert!(
+        bill_r.cache.remote_hits > 0,
+        "the fallback run must ride the surviving peer's shard"
+    );
+    assert_scoped_sums_match(&bill_w, "winner");
+    assert_scoped_sums_match(&bill_t, "third node");
+    assert_scoped_sums_match(&bill_r, "router");
+}
+
+/// One replication round on a four-node ring: a cold run on node 0 and
+/// two warm runs (nodes 1, 2) push node 0's shard past the hot
+/// watermark — the second remote serve of each key crosses it, so with
+/// `replicas=1` node 0 publishes every hot key to its ring replica.
+/// Then a probe job on node 3, optionally after killing node 0.
+/// Returns the probe's backend launches and node 3's remote hits.
+fn replication_round(replicas: usize, kill_owner: bool, base_y: &[f64]) -> (u64, u64) {
+    let addrs: Vec<String> = (0..4).map(|_| reserve_addr()).collect();
+    let mut nodes: Vec<_> = addrs
+        .iter()
+        .map(|a| {
+            let opts = ServeOptions { replicas, ..node_opts(&addrs, a) };
+            Some(spawn_node(opts, a))
+        })
+        .collect();
+
+    for (i, tenant) in ["cold", "warm1", "warm2"].iter().enumerate() {
+        let spec = JobSpec { tenant: tenant.to_string(), args: study_args(16), tune: false };
+        let out = run_jobs(&addrs[i], &[spec], false).expect("warm-up job succeeds");
+        assert!(out.jobs[0].ok(), "warm-up on node {i}: {:?}", out.jobs[0].error);
+        assert_eq!(out.jobs[0].y, base_y, "warm-up on node {i} matches solo");
+    }
+
+    let mut bills: Vec<(String, WireBill)> = Vec::new();
+    if kill_owner {
+        let (svc, handle) = nodes[0].take().expect("owner node");
+        let bill = run_jobs(&addrs[0], &[], true).expect("drain owner").bill.expect("bill");
+        handle.join().expect("owner joins");
+        drop(svc);
+        bills.push(("dead owner".into(), bill));
+    }
+
+    let spec = JobSpec { tenant: "probe".into(), args: study_args(16), tune: false };
+    let out = run_jobs(&addrs[3], &[spec], false).expect("probe job succeeds");
+    assert!(out.jobs[0].ok(), "probe job: {:?}", out.jobs[0].error);
+    assert_eq!(out.jobs[0].y, base_y, "the probe is bit-identical no matter who serves it");
+
+    let mut probe_remote_hits = 0;
+    for i in (0..4).rev() {
+        let Some((svc, handle)) = nodes[i].take() else { continue };
+        let bill = run_jobs(&addrs[i], &[], true).expect("drain node").bill.expect("bill");
+        handle.join().expect("node joins");
+        drop(svc);
+        if i == 3 {
+            probe_remote_hits = bill.cache.remote_hits;
+        }
+        bills.push((format!("node {i}"), bill));
+    }
+    for (node, bill) in &bills {
+        assert_scoped_sums_match(bill, node);
+    }
+    (out.jobs[0].launches, probe_remote_hits)
+}
+
+/// The replication economy, pinned three ways against the same study:
+/// with the owner alive, a warm probe costs some baseline of launches;
+/// with the owner dead and `replicas=1` it costs EXACTLY the same
+/// (every orphaned key is served from its ring replica — claim-free
+/// peeks or the pushed copy already resident); with the owner dead and
+/// `replicas=0` it costs strictly more, because the orphaned shard has
+/// to be relaunched locally. Results are bit-identical in all three.
+#[test]
+fn a_dead_owner_is_served_from_its_replica_with_zero_extra_launches() {
+    let base_y = solo_baseline(study_args(16));
+
+    let (launches_alive, _) = replication_round(1, false, &base_y);
+    let (launches_dead, probe_remote_hits) = replication_round(1, true, &base_y);
+    let (launches_unreplicated, _) = replication_round(0, true, &base_y);
+
+    assert_eq!(
+        launches_dead, launches_alive,
+        "replicas=1: a dead owner must cost zero extra launches \
+         (alive {launches_alive}, dead {launches_dead})"
+    );
+    assert!(
+        probe_remote_hits > 0,
+        "the probe behind a dead owner must show remote (replica) hits on its bill"
+    );
+    assert!(
+        launches_unreplicated > launches_dead,
+        "replicas=0 must relaunch the orphaned shard: {launches_unreplicated} launches \
+         vs {launches_dead} with replication"
+    );
+}
+
+/// Regression pin for the breaker hoist: the circuit breaker keys on
+/// the peer ADDRESS. Before the fix it was rediscovered per key, so a
+/// dead peer cost a fresh dial streak for every distinct key; now
+/// failures on distinct keys share one streak, the breaker opens once,
+/// and every further lookup to that address fails fast without dialing.
+#[test]
+fn the_circuit_breaker_is_per_peer_address_not_per_key() {
+    let own = reserve_addr();
+    let dead = reserve_addr(); // nothing ever listens here
+    let tier = RemoteTier::new(&[own.clone(), dead.clone()], &own)
+        .expect("tier builds")
+        .with_replicas(0);
+    let ctx = CacheCtx::unscoped();
+
+    // distinct keys, all owned by the dead peer
+    let ring = tier.ring();
+    let dead_keys: Vec<Key> = (0..200u64)
+        .map(Key::from)
+        .filter(|&k| ring.addr(ring.owner_of(k)) == dead)
+        .take(8)
+        .collect();
+    assert!(dead_keys.len() >= 4, "too few sampled keys land on the dead peer");
+
+    for &k in &dead_keys {
+        assert!(tier.lookup(k, &ctx).is_none(), "a dead owner serves nothing");
+    }
+    let stats = tier.stats();
+    assert_eq!(
+        stats.breaker_opens, 1,
+        "one address, one breaker: failures on distinct keys must share a streak"
+    );
+
+    // while the breaker is open, a lookup of yet another key fails fast
+    // — in-memory, no dial, no connect timeout
+    let t0 = Instant::now();
+    assert!(tier.lookup(dead_keys[0], &ctx).is_none());
+    assert!(
+        t0.elapsed() < Duration::from_millis(50),
+        "an open breaker must fail fast, not re-dial: took {:?}",
+        t0.elapsed()
+    );
+}
