@@ -1,0 +1,132 @@
+//! Acceptance benchmark for the telemetry invariant's first half:
+//! **telemetry on must be (nearly) free**. The same frontier-batched
+//! Morris study runs twice — once with the `Obs` handle off (the
+//! production default) and once tracing every span to a JSONL file
+//! with the metrics registry live — and the telemetry-on run must keep
+//! ≥ 0.95× the telemetry-off throughput. The second half of the
+//! invariant (on never changes a result) is asserted here too: the
+//! traced run's metrics must be bit-identical to the untraced run's.
+//!
+//! Each arm takes the best of several repetitions (one warm-up run
+//! first), so the ratio compares steady-state walls, not allocator or
+//! page-cache noise. Unlike the throughput benches, the ratio IS
+//! asserted in `--test` mode: it is a same-machine, same-binary
+//! comparison, so CI noise cancels.
+//!
+//! Writes the `BENCH_obs.json` perf-trajectory artifact.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use rtf_reuse::benchx::{fmt_secs, time_once, Table};
+use rtf_reuse::config::{SaMethod, StudyConfig};
+use rtf_reuse::driver::{make_inputs, prepare, run_pjrt_with_inputs};
+use rtf_reuse::obs::{span, Obs, SpanCtx};
+
+const MIN_RATIO: f64 = 0.95;
+
+fn main() {
+    let test_mode = std::env::args().any(|a| a == "--test");
+    let r = if test_mode { 1 } else { 2 };
+    let reps = if test_mode { 3 } else { 5 };
+    let mut cfg = StudyConfig {
+        method: SaMethod::Moat { r },
+        workers: 2,
+        batch_width: 16,
+        ..StudyConfig::default()
+    };
+    let prepared = prepare(&cfg);
+    let plan = prepared.plan(&cfg);
+    let inputs = make_inputs(&cfg, &prepared).expect("study inputs");
+
+    // warm-up: first run pays one-time costs (lazy init, page faults)
+    let baseline =
+        run_pjrt_with_inputs(&cfg, &prepared, &plan, None, &inputs).expect("warm-up study");
+
+    // arm 1: telemetry off — every instrumentation site is one branch
+    let mut d_off = Duration::MAX;
+    for _ in 0..reps {
+        let (out, d) = time_once(|| run_pjrt_with_inputs(&cfg, &prepared, &plan, None, &inputs));
+        out.expect("untraced study");
+        d_off = d_off.min(d);
+    }
+
+    // arm 2: telemetry on — every span to a JSONL sink, registry live
+    let trace_path =
+        std::env::temp_dir().join(format!("rtf-obs-overhead-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&trace_path);
+    cfg.obs = Obs::to_file("bench", &trace_path).expect("trace sink");
+    let mut d_on = Duration::MAX;
+    let mut traced_metrics = Vec::new();
+    for rep in 0..reps {
+        // one root job span per repetition, like the service would mint
+        let o = cfg.obs.get().expect("active handle").clone();
+        let root = o.next_span();
+        cfg.trace = Some(SpanCtx {
+            trace: o.new_trace(),
+            parent: root,
+            tenant: Arc::from("bench"),
+            job: rep as u64,
+        });
+        let started = Instant::now();
+        let (out, d) = time_once(|| run_pjrt_with_inputs(&cfg, &prepared, &plan, None, &inputs));
+        let out = out.expect("traced study");
+        let ctx = SpanCtx { parent: 0, ..cfg.trace.clone().expect("ctx") };
+        o.emit_timed(&ctx, span::JOB, root, started, d, "obs_overhead rep".into());
+        d_on = d_on.min(d);
+        traced_metrics = out.metrics;
+    }
+    if let Some(o) = cfg.obs.get() {
+        o.flush();
+    }
+
+    // telemetry on never changes a result
+    for (i, (a, b)) in baseline.metrics.iter().zip(&traced_metrics).enumerate() {
+        assert_eq!(a, b, "eval {i}: traced metrics drifted from untraced");
+    }
+    // ... and it actually recorded the run: spans in the file, launches
+    // in the registry
+    let snap = cfg.obs.get().expect("active handle").snapshot();
+    let launches = snap.global.counter("launches");
+    assert!(launches > 0, "traced run recorded no launches");
+    let trace_lines =
+        std::fs::read_to_string(&trace_path).expect("trace file").lines().count();
+    assert!(trace_lines > 0, "trace sink is empty");
+    let _ = std::fs::remove_file(&trace_path);
+
+    let ratio = d_off.as_secs_f64() / d_on.as_secs_f64();
+    let mut t = Table::new(&["arm", "wall (best)", "throughput vs off"]);
+    t.row(&["telemetry off".into(), fmt_secs(d_off.as_secs_f64()), "1.00x".into()]);
+    t.row(&[
+        "telemetry on (trace + stats)".into(),
+        fmt_secs(d_on.as_secs_f64()),
+        format!("{ratio:.3}x"),
+    ]);
+    t.print("telemetry overhead on a frontier-batched Morris study");
+    println!("traced spans: {trace_lines} lines, launches counted: {launches}");
+
+    let json = format!(
+        "{{\n  \"bench\": \"obs_overhead\",\n  \"mode\": \"{}\",\n  \
+         \"evals\": {},\n  \"reps\": {reps},\n  \
+         \"wall_off_secs\": {:.6},\n  \"wall_on_secs\": {:.6},\n  \
+         \"throughput_ratio\": {:.4},\n  \"trace_lines\": {trace_lines},\n  \
+         \"launches\": {launches}\n}}\n",
+        if test_mode { "test" } else { "full" },
+        prepared.n_evals(),
+        d_off.as_secs_f64(),
+        d_on.as_secs_f64(),
+        ratio,
+    );
+    std::fs::write("BENCH_obs.json", &json).expect("write BENCH_obs.json");
+    println!("wrote BENCH_obs.json");
+
+    println!(
+        "ACCEPTANCE: telemetry-on throughput {ratio:.3}x of telemetry-off \
+         (required >= {MIN_RATIO}x) — {}",
+        if ratio >= MIN_RATIO { "PASS" } else { "FAIL" }
+    );
+    assert!(
+        ratio >= MIN_RATIO,
+        "telemetry must stay >= {MIN_RATIO}x of untraced throughput, got {ratio:.3}x"
+    );
+}

@@ -81,8 +81,10 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::faults::{Faults, PeerFault};
+use crate::obs::{HistId, Obs};
 use crate::serve::protocol::{
-    planes_from_hex, read_frame, write_frame, Message, WireCachePut, PROTOCOL_VERSION,
+    planes_from_hex, read_frame, write_frame, Message, WireCachePut, WireTrace,
+    PROTOCOL_VERSION,
 };
 use crate::{Error, Result};
 
@@ -252,10 +254,14 @@ pub struct RemoteTier {
     read_timeout: Duration,
     write_timeout: Duration,
     faults: Faults,
+    /// Telemetry handle: peer round-trip latencies land in the
+    /// [`HistId::PeerRtt`] histogram. Off ([`Obs::none`]) by default.
+    obs: Obs,
     hits: AtomicU64,
     stores: AtomicU64,
     breaker_opens: AtomicU64,
     breaker_closes: AtomicU64,
+    replica_hits: AtomicU64,
 }
 
 impl RemoteTier {
@@ -275,10 +281,12 @@ impl RemoteTier {
             read_timeout: READ_TIMEOUT,
             write_timeout: WRITE_TIMEOUT,
             faults: Faults::none(),
+            obs: Obs::none(),
             hits: AtomicU64::new(0),
             stores: AtomicU64::new(0),
             breaker_opens: AtomicU64::new(0),
             breaker_closes: AtomicU64::new(0),
+            replica_hits: AtomicU64::new(0),
         })
     }
 
@@ -286,6 +294,13 @@ impl RemoteTier {
     /// ([`crate::faults::FaultHook::on_peer_call`]).
     pub fn with_faults(mut self, faults: Faults) -> Self {
         self.faults = faults;
+        self
+    }
+
+    /// Install the telemetry handle (peer RTT histogram; off by
+    /// default).
+    pub fn with_obs(mut self, obs: Obs) -> Self {
+        self.obs = obs;
         self
     }
 
@@ -527,7 +542,12 @@ impl RemoteTier {
                 PeerFault::Delay(latency) => std::thread::sleep(latency),
             }
         }
+        let started = self.obs.is_active().then(Instant::now);
         let result = self.call_raw(addr, msg);
+        if let Some(t) = started {
+            // RTT is a fabric property, not a tenant's doing: global only
+            self.obs.observe(HistId::PeerRtt, None, t.elapsed());
+        }
         match result {
             Ok(_) => self.note_success(addr),
             Err(_) => self.note_failure(addr),
@@ -558,6 +578,14 @@ impl RemoteTier {
         self.hits.fetch_add(1, Ordering::Relaxed);
         Some(Arc::new(planes))
     }
+
+    /// The trace context to stamp onto outgoing fabric frames: the
+    /// caller's trace id plus its lookup/publish span id, which the
+    /// owner's `serve-get`/`serve-put` span parents under. `None` (no
+    /// fields on the wire) when untraced.
+    fn wire_trace(ctx: &CacheCtx) -> Option<WireTrace> {
+        ctx.span().map(|sc| WireTrace { trace: sc.trace, span: sc.parent })
+    }
 }
 
 impl CacheTier for RemoteTier {
@@ -565,7 +593,7 @@ impl CacheTier for RemoteTier {
         REMOTE_TIER
     }
 
-    fn lookup(&self, key: Key, _ctx: &CacheCtx) -> Option<CachedState> {
+    fn lookup(&self, key: Key, ctx: &CacheCtx) -> Option<CachedState> {
         let (owner, replica) = {
             let ring = self.ring.read().unwrap();
             if ring.is_local(key) {
@@ -577,7 +605,8 @@ impl CacheTier for RemoteTier {
                 .flatten();
             (owner, replica)
         };
-        match self.call(&owner, &Message::CacheGet { key, peek: false }) {
+        let trace = Self::wire_trace(ctx);
+        match self.call(&owner, &Message::CacheGet { key, peek: false, trace }) {
             Ok(Message::CacheState(state)) if state.found => {
                 self.decode_hit(state.h, state.w, &state.planes)
             }
@@ -592,8 +621,9 @@ impl CacheTier for RemoteTier {
             // our own tiers already missed.
             Err(_) => {
                 let replica = replica.filter(|r| *r != self.self_addr)?;
-                match self.call(&replica, &Message::CacheGet { key, peek: true }).ok()? {
+                match self.call(&replica, &Message::CacheGet { key, peek: true, trace }).ok()? {
                     Message::CacheState(state) if state.found => {
+                        self.replica_hits.fetch_add(1, Ordering::Relaxed);
                         self.decode_hit(state.h, state.w, &state.planes)
                     }
                     _ => None,
@@ -602,11 +632,13 @@ impl CacheTier for RemoteTier {
         }
     }
 
-    fn store(&self, key: Key, state: &CachedState, _ctx: &CacheCtx) -> bool {
+    fn store(&self, key: Key, state: &CachedState, ctx: &CacheCtx) -> bool {
         let Some(owner) = self.owner_addr(key) else {
             return false;
         };
-        let put = Message::CachePut(Box::new(WireCachePut::new(key, state)));
+        let mut put = WireCachePut::new(key, state);
+        put.trace = Self::wire_trace(ctx);
+        let put = Message::CachePut(Box::new(put));
         match self.call(&owner, &put) {
             Ok(Message::CacheOk { stored: true, .. }) => {
                 self.stores.fetch_add(1, Ordering::Relaxed);
@@ -627,6 +659,7 @@ impl CacheTier for RemoteTier {
             resident_bytes: 0,
             breaker_opens: self.breaker_opens.load(Ordering::Relaxed),
             breaker_closes: self.breaker_closes.load(Ordering::Relaxed),
+            replica_hits: self.replica_hits.load(Ordering::Relaxed),
         }
     }
 }
@@ -959,7 +992,7 @@ mod tests {
                     Message::Hello { .. } => {
                         Message::Hello { version: PROTOCOL_VERSION, role: "server".into() }
                     }
-                    Message::CacheGet { key, peek } => {
+                    Message::CacheGet { key, peek, .. } => {
                         assert!(peek, "replica reads must be claim-free peeks");
                         served += 1;
                         Message::CacheState(Box::new(WireCacheState::found(key, &state())))

@@ -67,6 +67,7 @@ use std::time::{Duration, Instant};
 
 use crate::data::Plane;
 use crate::faults::Faults;
+use crate::obs::{span, HistId};
 
 use super::disk::{self, DiskTier};
 use super::key::Key;
@@ -730,7 +731,8 @@ impl ReuseCache {
     fn lookup_lower(&self, key: Key, ctx: &CacheCtx) -> Option<CachedState> {
         let tiers = self.lower.read().unwrap();
         for tier in tiers.iter() {
-            let Some(state) = tier.lookup(key, ctx) else {
+            let found = Self::lookup_one(tier.as_ref(), key, ctx);
+            let Some(state) = found else {
                 continue;
             };
             if tier.name() == DISK_TIER {
@@ -745,12 +747,52 @@ impl ReuseCache {
         None
     }
 
+    /// One lower-tier consultation, timed and traced when the context
+    /// carries an active telemetry handle: the lookup's own span id is
+    /// allocated *before* the call and handed down via a child context,
+    /// so the remote tier can stamp it onto its wire frames (the owner's
+    /// `serve-get` span parents under it); the tier's latency lands in
+    /// its per-tier histogram. Off path: one never-taken branch.
+    fn lookup_one(tier: &dyn CacheTier, key: Key, ctx: &CacheCtx) -> Option<CachedState> {
+        let Some(o) = ctx.obs().get().cloned() else {
+            return tier.lookup(key, ctx);
+        };
+        let span_id = o.next_span();
+        let started = Instant::now();
+        let found = match ctx.span() {
+            Some(sc) => tier.lookup(key, &ctx.with_span(sc.child(span_id))),
+            None => tier.lookup(key, ctx),
+        };
+        let dur = started.elapsed();
+        let tenant = ctx.span().map(|sc| sc.tenant.as_ref());
+        o.observe(HistId::lookup_for_tier(tier.name()), tenant, dur);
+        if let Some(sc) = ctx.span() {
+            let outcome = if found.is_some() { "hit" } else { "miss" };
+            o.emit_timed(sc, span::LOOKUP, span_id, started, dur, format!("{} {outcome}", tier.name()));
+        }
+        found
+    }
+
+    /// Time a memory-tier probe into the memory-lookup histogram (no
+    /// span — memory probes are nanosecond-scale and would flood the
+    /// ring; the histogram is the observable).
+    fn probe_memory(&self, key: Key, ctx: &CacheCtx) -> Option<CachedState> {
+        let Some(o) = ctx.obs().get() else {
+            return self.memory.lookup(key, ctx);
+        };
+        let started = Instant::now();
+        let found = self.memory.lookup(key, ctx);
+        let tenant = ctx.span().map(|sc| sc.tenant.as_ref());
+        o.observe(HistId::LookupMemory, tenant, started.elapsed());
+        found
+    }
+
     /// Look up the state for `key`: memory first, then the lower tiers
     /// in order. A memory hit is a refcount bump (the returned `Arc`
     /// shares the resident allocation); a lower-tier hit is promoted
     /// back into memory, charged to (owned by) the context's scope.
     pub fn get_state(&self, key: Key, ctx: &CacheCtx) -> Option<CachedState> {
-        if let Some(state) = self.memory.lookup(key, ctx) {
+        if let Some(state) = self.probe_memory(key, ctx) {
             self.count_memory_hit(ctx, &state);
             return Some(state);
         }
@@ -769,7 +811,7 @@ impl ReuseCache {
     /// caller waits and retries, and the eventual resolution is what
     /// gets counted.
     pub fn lookup_or_claim(&self, key: Key, ctx: &CacheCtx) -> StateClaim {
-        if let Some(state) = self.memory.lookup(key, ctx) {
+        if let Some(state) = self.probe_memory(key, ctx) {
             self.count_memory_hit(ctx, &state);
             return StateClaim::Ready(state);
         }

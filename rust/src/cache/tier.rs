@@ -32,6 +32,7 @@ use std::sync::Arc;
 
 use super::key::Key;
 use super::store::{CachedState, ScopedCounters};
+use crate::obs::{Obs, SpanCtx};
 
 /// Canonical tier names. The stack maps a lower tier's hits and stores
 /// onto the global counters by name: [`DISK_TIER`] feeds
@@ -47,24 +48,51 @@ pub const REMOTE_TIER: &str = "remote";
 #[derive(Clone, Debug, Default)]
 pub struct CacheCtx {
     scope: Option<Arc<ScopedCounters>>,
+    obs: Obs,
+    span: Option<SpanCtx>,
 }
 
 impl CacheCtx {
     /// Unscoped traffic: only the global counters are bumped, admitted
     /// entries are unowned (exempt from every quota).
     pub fn unscoped() -> Self {
-        Self { scope: None }
+        Self::default()
     }
 
     /// Tenant-scoped traffic: every counted operation mirrors into
     /// `scope`, and admitted entries are owned by (charged to) it.
     pub fn scoped(scope: Arc<ScopedCounters>) -> Self {
-        Self { scope: Some(scope) }
+        Self { scope: Some(scope), ..Self::default() }
     }
 
     /// The scope this context counts under, if any.
     pub fn scope(&self) -> Option<&Arc<ScopedCounters>> {
         self.scope.as_ref()
+    }
+
+    /// Attach (or detach) the telemetry handle and the span context
+    /// cache operations should parent under. With the handle off this
+    /// context behaves exactly as before — telemetry off is zero-cost.
+    pub fn set_obs(&mut self, obs: Obs, span: Option<SpanCtx>) {
+        self.obs = obs;
+        self.span = span;
+    }
+
+    /// The telemetry handle (off by default).
+    pub fn obs(&self) -> &Obs {
+        &self.obs
+    }
+
+    /// The span context this call chain runs under, if tracing.
+    pub fn span(&self) -> Option<&SpanCtx> {
+        self.span.as_ref()
+    }
+
+    /// A child of this context whose operations parent under `span`
+    /// (same scope, same handle) — how a per-tier lookup hands the tier
+    /// its own span id so wire frames can carry it.
+    pub fn with_span(&self, span: SpanCtx) -> Self {
+        Self { scope: self.scope.clone(), obs: self.obs.clone(), span: Some(span) }
     }
 }
 
@@ -87,6 +115,9 @@ pub struct TierStats {
     /// Circuit-breaker recoveries: HalfOpen probes that succeeded and
     /// re-closed a peer's breaker.
     pub breaker_closes: u64,
+    /// Lookups served from a hot-prefix *replica* rather than the key's
+    /// owner (rtfp v6 failover reads; 0 for tiers without replicas).
+    pub replica_hits: u64,
 }
 
 /// One storage tier of the reuse cache. Implementations must be cheap

@@ -7,6 +7,7 @@ use crate::adaptive::AdaptiveOptions;
 use crate::coordinator::BatchPolicy;
 use crate::faults::Faults;
 use crate::merging::{FineAlgorithm, TrtmaOptions};
+use crate::obs::{Obs, SpanCtx};
 use crate::{Error, Result};
 
 /// Which SA method generates the experiments.
@@ -164,6 +165,17 @@ pub struct StudyConfig {
     /// prune parameters whose CI falls below the threshold. Off by
     /// default — the exhaustive path stays the reference semantics.
     pub adaptive: AdaptiveOptions,
+    /// Telemetry handle threaded into the worker engines and the cache
+    /// tiers (see [`crate::obs`]). Inactive by default; set
+    /// programmatically — like `faults`, there is deliberately no
+    /// study-level CLI flag (the serve-level `trace=` / `stats=` flags
+    /// activate telemetry and stamp each job's handle here).
+    pub obs: Obs,
+    /// The span context this study's engine spans parent under —
+    /// normally the job's root span, allocated by the serving layer.
+    /// `None` leaves the engines span-silent even when `obs` is active
+    /// (histograms and counters still record).
+    pub trace: Option<SpanCtx>,
 }
 
 impl Default for StudyConfig {
@@ -184,6 +196,8 @@ impl Default for StudyConfig {
             cache: CacheSettings::default(),
             faults: Faults::none(),
             adaptive: AdaptiveOptions::default(),
+            obs: Obs::none(),
+            trace: None,
         }
     }
 }
@@ -390,6 +404,17 @@ pub struct ServeConfig {
     /// proxied back on the submitting connection. Unset defaults to
     /// off.
     pub route: Option<bool>,
+    /// `trace=FILE` — structured telemetry: activate the process-wide
+    /// [`crate::obs`] registry and append every span event to FILE as
+    /// one JSON line (see `docs/OBSERVABILITY.md`). Server-side only —
+    /// rejected in `submit=` client mode, where the spans live on the
+    /// serving node.
+    pub trace: Option<String>,
+    /// `stats=on` — telemetry exposure: the server logs a one-line
+    /// metrics digest as jobs complete; a `submit=` client prints a
+    /// Prometheus-style text dump of the server's `stats` snapshot
+    /// after its jobs finish.
+    pub stats: bool,
     /// The residual study options, kept raw for client mode (the server
     /// parses per-job lines itself).
     pub study_args: Vec<String>,
@@ -480,6 +505,23 @@ impl ServeConfig {
                         }
                     })
                 }
+                Some(("trace", v)) => {
+                    if v.is_empty() || v == "on" || v == "off" {
+                        return Err(Error::Config(format!(
+                            "`trace=` wants a span-sink file path, got `{v}`"
+                        )));
+                    }
+                    sc.trace = Some(v.to_string());
+                }
+                Some(("stats", v)) => {
+                    sc.stats = match v {
+                        "on" | "true" => true,
+                        "off" | "false" => false,
+                        v => {
+                            return Err(Error::Config(format!("`stats=` wants on|off, got `{v}`")))
+                        }
+                    }
+                }
                 _ => sc.study_args.push(a.clone()),
             }
         }
@@ -487,6 +529,16 @@ impl ServeConfig {
             return Err(Error::Config(
                 "`listen=` (run a service) and `submit=` (be a client) are mutually \
                  exclusive"
+                    .into(),
+            ));
+        }
+        // spans are recorded where jobs execute; a client-side sink
+        // could only ever be empty, so reject rather than silently
+        // write nothing
+        if sc.trace.is_some() && sc.submit.is_some() {
+            return Err(Error::Config(
+                "`trace=` records spans on the serving node; pass it to the `listen=` \
+                 side, not a `submit=` client"
                     .into(),
             ));
         }
@@ -928,6 +980,28 @@ mod tests {
     }
 
     #[test]
+    fn serve_config_parses_telemetry_flags() {
+        let sc = ServeConfig::from_args(&args(&["trace=/tmp/spans.jsonl", "stats=on"])).unwrap();
+        assert_eq!(sc.trace.as_deref(), Some("/tmp/spans.jsonl"));
+        assert!(sc.stats);
+        let sc = ServeConfig::from_args(&args(&["stats=off"])).unwrap();
+        assert!(!sc.stats);
+        let sc = ServeConfig::from_args(&[]).unwrap();
+        assert_eq!(sc.trace, None, "tracing defaults off");
+        assert!(!sc.stats, "stats digest defaults off");
+        // `trace=on` is a likely typo for `trace=FILE`: reject it
+        // instead of creating a file literally named `on`
+        assert!(ServeConfig::from_args(&args(&["trace=on"])).is_err());
+        // the sink lives where the jobs run
+        let err = ServeConfig::from_args(&args(&["submit=h:1", "trace=/tmp/t"])).unwrap_err();
+        assert!(err.to_string().contains("trace="), "names the flag: {err}");
+        assert!(err.to_string().contains("submit="), "explains the conflict: {err}");
+        // a client may still ask for the stats dump
+        let sc = ServeConfig::from_args(&args(&["submit=h:1", "stats=on"])).unwrap();
+        assert!(sc.stats);
+    }
+
+    #[test]
     fn serve_config_parses_speculate() {
         let sc = ServeConfig::from_args(&args(&["speculate=on"])).unwrap();
         assert_eq!(sc.speculate, Some(true));
@@ -950,6 +1024,8 @@ mod tests {
             (vec!["listen=h:1", "peers="], "peers=", ""),
             (vec!["speculate=sometimes"], "speculate=", "sometimes"),
             (vec!["route=sometimes"], "route=", "sometimes"),
+            (vec!["stats=sometimes"], "stats=", "sometimes"),
+            (vec!["trace="], "trace=", ""),
             (vec!["adaptive=perhaps"], "adaptive=", "perhaps"),
             (vec!["threshold=-1"], "threshold=", "-1"),
         ] {

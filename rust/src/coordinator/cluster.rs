@@ -15,6 +15,7 @@ use crate::merging::{
     batched_unit_cost, unit_launch_count, CompactGraph, StudyPlan, DEFAULT_LAUNCH_COST_SECS,
     DEFAULT_MARGINAL_COST_SECS,
 };
+use crate::obs::{Obs, SpanCtx};
 use crate::runtime::{ArtifactManifest, PjrtEngine, TaskTimer};
 use crate::workflow::StageInstance;
 use crate::{Error, Result};
@@ -60,6 +61,13 @@ pub struct ExecuteOptions {
     /// Fault-injection hook installed into every worker engine
     /// (inactive by default; see [`crate::faults`]).
     pub faults: Faults,
+    /// Telemetry handle installed into every worker engine (inactive by
+    /// default; see [`crate::obs`]).
+    pub obs: Obs,
+    /// The span every worker engine parents its spans under — normally
+    /// the job's root span. `None` keeps engines span-silent even with
+    /// `obs` active (histograms only).
+    pub obs_span: Option<SpanCtx>,
 }
 
 impl ExecuteOptions {
@@ -72,6 +80,8 @@ impl ExecuteOptions {
             cache_scope: None,
             batch: BatchPolicy::default(),
             faults: Faults::none(),
+            obs: Obs::none(),
+            obs_span: None,
         }
     }
 
@@ -110,6 +120,16 @@ impl ExecuteOptions {
     /// instead of a wedged one.
     pub fn with_faults(mut self, faults: Faults) -> Self {
         self.faults = faults;
+        self
+    }
+
+    /// Install a telemetry handle (and the span to parent under) into
+    /// every worker engine: launches, lookups and frontier levels record
+    /// histograms and — when `span` is set — emit spans of the job's
+    /// trace (see [`crate::obs`]).
+    pub fn with_obs(mut self, obs: Obs, span: Option<SpanCtx>) -> Self {
+        self.obs = obs;
+        self.obs_span = span;
         self
     }
 }
@@ -349,6 +369,7 @@ fn worker_loop(
         }
     }
     engine.set_fault_hook(opts.faults.clone());
+    engine.set_obs(opts.obs.clone(), opts.obs_span.clone());
     let quantize = opts.cache.as_ref().map(|c| c.quantize_step()).unwrap_or(0.0);
 
     loop {

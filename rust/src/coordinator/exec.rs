@@ -19,10 +19,14 @@
 //! At study tile sizes this is a few MiB per worker; the policy width
 //! caps how many *outputs* a single launch materializes at once.
 
+use std::sync::Arc;
+use std::time::Instant;
+
 use crate::cache::{metrics_key, task_cache_sig, Key};
 use crate::data::Plane;
 use crate::merging::reuse_tree::{ReuseTree, WalkNode};
 use crate::merging::{unit_stages, CompactGraph, ScheduleUnit};
+use crate::obs::{span, ObsInner, SpanCtx};
 use crate::runtime::{PjrtEngine, TaskId};
 use crate::workflow::{StageInstance, TaskInstance};
 use crate::{Error, Result};
@@ -179,7 +183,23 @@ fn frontier(
     let tree = cx.tree;
     let mut states: Vec<Option<[xla::Literal; 3]>> = vec![None; tree.nodes.len()];
     states[tree.root] = Some(input);
-    for level in levels {
+    // With tracing on, each level gets a span and the launches / lookups
+    // inside it re-parent under that span; `traced` captures the job ctx
+    // up front so the per-level cost is two Arc clones when active, zero
+    // branches extra when off.
+    let traced: Option<(Arc<ObsInner>, SpanCtx)> = {
+        let (obs, sc) = engine.obs_ctx();
+        match (obs.get(), sc) {
+            (Some(o), Some(sc)) => Some((Arc::clone(o), sc.clone())),
+            _ => None,
+        }
+    };
+    for (li, level) in levels.iter().enumerate() {
+        let lvl = traced.as_ref().map(|(o, sc)| {
+            let span_id = o.next_span();
+            let prev = engine.swap_obs_span(Some(sc.child(span_id)));
+            (span_id, Instant::now(), prev)
+        });
         let mut pending: Vec<WalkNode> = Vec::with_capacity(level.len());
         for n in level {
             match n.stage {
@@ -204,6 +224,15 @@ fn frontier(
         // this level consumed its parents' states: free them
         for n in level {
             states[n.parent] = None;
+        }
+        // restore the job span and close the level (error paths skip
+        // this; the service re-arms the engine's span per job, so a
+        // failed job can't leak a stale level parent into the next one)
+        if let Some((span_id, started, prev)) = lvl {
+            engine.swap_obs_span(prev);
+            let (o, sc) = traced.as_ref().expect("lvl implies traced");
+            let dur = started.elapsed();
+            o.emit_timed(sc, span::LEVEL, span_id, started, dur, format!("level {li} nodes={}", level.len()));
         }
     }
     Ok(())

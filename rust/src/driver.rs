@@ -309,7 +309,8 @@ pub fn run_pjrt_with_inputs_scoped(
 ) -> Result<StudyOutcome> {
     let mut opts = ExecuteOptions::new(cfg.workers, &cfg.artifacts_dir)
         .with_batch(BatchPolicy::new(cfg.batch_width))
-        .with_faults(cfg.faults.clone());
+        .with_faults(cfg.faults.clone())
+        .with_obs(cfg.obs.clone(), cfg.trace.clone());
     if let Some(cache) = cache {
         opts = opts.with_cache(cache);
         if let Some(scope) = scope {

@@ -27,6 +27,11 @@
 //!   panics, torn disk writes, peer flap, frame corruption) behind a
 //!   zero-cost-when-disabled hook, driving the self-healing paths
 //!   (retries, circuit breaker, disk quarantine) in `tests/chaos.rs`.
+//! * [`obs`] — end-to-end telemetry: 128-bit job traces with
+//!   cross-node span stitching, named counters and fixed-bucket latency
+//!   histograms with per-tenant scoping, behind a zero-cost-when-off
+//!   handle (telemetry off is zero-cost; telemetry on never changes a
+//!   result). `docs/OBSERVABILITY.md` is the operator guide.
 //! * [`serve`] — the multi-tenant study service: one process-lifetime
 //!   shared cache + engine serving many concurrent studies, with
 //!   weighted-fair admission, per-tenant byte quotas and accounting,
@@ -64,6 +69,7 @@ pub mod error;
 pub mod faults;
 pub mod jsonx;
 pub mod merging;
+pub mod obs;
 pub mod runtime;
 pub mod sampling;
 pub mod serve;

@@ -129,9 +129,18 @@ fn print_help() {
            submit=ADDR        client mode: send jobs=FILE to a listening service\n\
            drain=on           client mode: drain the service and print its bill\n\
                               (jobs files may carry `peers add=ADDR` /\n\
-                              `peers remove=ADDR` admin lines: live membership)\n\
+                              `peers remove=ADDR` admin lines: live membership —\n\
+                              and a bare `stats` line: fetch + print a telemetry\n\
+                              snapshot at that point of the sequence)\n\
+           trace=FILE         serving side: stream structured JSONL spans (job,\n\
+                              admit, queue, schedule, level, lookup, launch,\n\
+                              retry, drain, route, serve-get/put) to FILE\n\
+           stats=on|off       keep the metrics registry live; serving side logs a\n\
+                              one-line digest on change, client mode prints a\n\
+                              final Prometheus-style dump (default off)\n\
          \n\
-         docs/SERVING.md is the operator's guide + wire-protocol spec"
+         docs/SERVING.md is the operator's guide + wire-protocol spec;\n\
+         docs/OBSERVABILITY.md covers tracing, metrics and the stats surface"
     );
 }
 
@@ -381,8 +390,8 @@ fn cmd_tune(args: &[String]) -> Result<()> {
 fn cmd_serve(args: &[String]) -> Result<()> {
     use rtf_reuse::config::ServeConfig;
     use rtf_reuse::serve::{
-        parse_job_lines, run_lines, JobLine, ServeOptions, StudyJob, StudyService, WireServer,
-        PROTOCOL_VERSION,
+        parse_job_lines, render_prometheus, run_lines, JobLine, ServeOptions, StudyJob,
+        StudyService, WireServer, PROTOCOL_VERSION,
     };
 
     let sc = ServeConfig::from_args(args)?;
@@ -393,7 +402,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             Error::Config("client mode needs jobs=FILE (`tenant=NAME [opts]` per line)".into())
         })?;
         let text = std::fs::read_to_string(path)?;
-        let lines = parse_job_lines(&text, &sc.study_args)?;
+        let mut lines = parse_job_lines(&text, &sc.study_args)?;
+        if sc.stats {
+            // stats=on in client mode: one final snapshot after the
+            // whole sequence, printed as the Prometheus-style dump
+            lines.push(JobLine::Stats);
+        }
         let n = lines.iter().filter(|l| matches!(l, JobLine::Job(_))).count();
         println!("client: submitting {n} jobs to {addr} (protocol v{PROTOCOL_VERSION})");
         let outcome = run_lines(addr, &lines, sc.drain)?;
@@ -428,6 +442,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                 );
             }
         }
+        for s in &outcome.stats {
+            print!("{}", render_prometheus(s));
+        }
         if let Some(bill) = &outcome.bill {
             let mut t = Table::new(&[
                 "tenant", "jobs", "launches", "cached", "retries", "pruned", "spec",
@@ -449,6 +466,22 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                 ]);
             }
             t.print("drain bill (per tenant, from the drained service)");
+            if !bill.tiers.is_empty() {
+                let mut t = Table::new(&[
+                    "tier", "hits", "stores", "resident KiB", "breaker o/c", "replica hits",
+                ]);
+                for tr in &bill.tiers {
+                    t.row(&[
+                        tr.tier.clone(),
+                        tr.stats.hits.to_string(),
+                        tr.stats.stores.to_string(),
+                        (tr.stats.resident_bytes / 1024).to_string(),
+                        format!("{}/{}", tr.stats.breaker_opens, tr.stats.breaker_closes),
+                        tr.stats.replica_hits.to_string(),
+                    ]);
+                }
+                t.print("per-tier cache counters (rtfp v7)");
+            }
             println!(
                 "drain bill: {} jobs ({} failed, {} retried attempts, {} evals pruned), \
                  {} total launches ({} speculative), service wall {}",
@@ -467,7 +500,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     // ---- service modes ----------------------------------------------
     let opts = ServeOptions::from_config(&sc);
     println!(
-        "serve: {} service workers, tenant cap {}, {} study workers, cache {} MiB{}{}{}",
+        "serve: {} service workers, tenant cap {}, {} study workers, cache {} MiB{}{}{}{}",
         opts.service_workers,
         opts.tenant_inflight_cap,
         opts.study_workers,
@@ -486,6 +519,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                 opts.replicas,
                 if opts.route { ", front-door routing" } else { "" }
             )
+        },
+        match (&opts.trace, opts.stats) {
+            (Some(path), _) => format!(", tracing to {path}"),
+            (None, true) => ", stats on".to_string(),
+            (None, false) => String::new(),
         }
     );
     let svc = StudyService::start(opts)?;
@@ -540,6 +578,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                         let size = svc.peer_leave(&peer, true)?;
                         println!("peers: {peer} left, ring size {size}");
                     }
+                    // in-process stats: snapshot the service directly,
+                    // same dump the wire client prints
+                    JobLine::Stats => print!("{}", render_prometheus(&svc.stats_snapshot())),
                 }
             }
         }
@@ -594,6 +635,22 @@ fn print_service_report(report: &rtf_reuse::serve::ServiceReport) {
         ]);
     }
     t.print("per-tenant bill (one shared reuse cache)");
+    if !report.tiers.is_empty() {
+        let mut t = Table::new(&[
+            "tier", "hits", "stores", "resident KiB", "breaker o/c", "replica hits",
+        ]);
+        for (tier, s) in &report.tiers {
+            t.row(&[
+                tier.clone(),
+                s.hits.to_string(),
+                s.stores.to_string(),
+                (s.resident_bytes / 1024).to_string(),
+                format!("{}/{}", s.breaker_opens, s.breaker_closes),
+                s.replica_hits.to_string(),
+            ]);
+        }
+        t.print("per-tier cache counters");
+    }
     let retried: u64 = report.jobs.iter().map(|j| j.retries).sum();
     let pruned: u64 = report.jobs.iter().map(|j| j.pruned).sum();
     println!(

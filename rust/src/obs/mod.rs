@@ -1,0 +1,931 @@
+//! Process-wide telemetry: structured job tracing, named counters and
+//! fixed-bucket latency histograms, behind a zero-cost-when-off handle.
+//!
+//! The design mirrors [`crate::faults::Faults`]: an [`Obs`] is an
+//! `Option<Arc<ObsInner>>` — [`Obs::none`] (the default) makes every
+//! recording call a single never-taken branch on the hot path, and an
+//! active handle is an `Arc` shared by every layer of one process
+//! (service, engine, cache stack, remote tier, wire server). The
+//! telemetry invariant the rest of the stack builds on: **telemetry off
+//! is zero-cost; telemetry on never changes a result** — observers only
+//! read clocks and bump atomics, they never touch the data path.
+//!
+//! # Tracing
+//!
+//! Every job gets a 128-bit trace id at admission. Spans cover
+//! admit → queue wait → schedule → per-level frontier execution →
+//! lower-tier cache lookups → kernel launches → retries → drain, each
+//! emitted as one [`SpanEvent`] into a bounded ring buffer
+//! ([`RING_CAP`]; overflow drops the oldest and counts
+//! [`ObsSnapshot::ring_dropped`]) and, with a `trace=FILE` sink, as one
+//! JSONL line ([`event_json`] / [`parse_event`]). Trace id and parent
+//! span id propagate on `route` / `cache-get` / `cache-put` frames
+//! (protocol v7, optional fields), so a routed job's spans — and the
+//! owner-side `serve-get` / `serve-put` spans its cache traffic causes
+//! on peer nodes — stitch into one cross-node tree: one root per trace,
+//! every parent link resolvable. Span ids are node-unique (an atomic
+//! counter salted per process), timestamps are per-node monotonic
+//! offsets ([`std::time::Instant`], never wall-clock arithmetic), and
+//! the tree structure never depends on clock agreement between nodes.
+//!
+//! # Metrics
+//!
+//! A fixed registry: [`CounterId`] counters and [`HistId`] latency
+//! histograms over the fixed [`BUCKET_BOUNDS_US`] bucket boundaries
+//! (job wall, queue wait, per-tier lookup, kernel launch, peer RTT,
+//! retry backoff). Recording with a tenant label bumps the global
+//! registry *and* the tenant's — the same discipline as
+//! [`crate::cache::ScopedCounters`], so per-tenant counters sum exactly
+//! to the globals on every field that is recorded with a tenant.
+//! Unattributed traffic (peer RTT, speculative work) is global-only.
+//!
+//! # Exposure
+//!
+//! [`ObsInner::snapshot`] is the point-in-time [`ObsSnapshot`] behind
+//! the `stats` wire message, the `stats` admin job line's
+//! Prometheus-style client dump, and the `stats=on` periodic server
+//! digest. See `docs/OBSERVABILITY.md` for the event schema, metric
+//! names and operator cookbook.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::jsonx::{obj, Json};
+use crate::{Error, Result};
+
+/// Span-kind names as they appear on the wire and in trace files.
+pub mod span {
+    /// Root span of one job, admission to completion.
+    pub const JOB: &str = "job";
+    /// Admission processing inside `submit` (queue insertion).
+    pub const ADMIT: &str = "admit";
+    /// Queue wait: admission to a worker popping the job.
+    pub const QUEUE: &str = "queue";
+    /// Worker dispatch: pop to execution start.
+    pub const SCHEDULE: &str = "schedule";
+    /// One frontier level of one unit's reuse-tree walk.
+    pub const LEVEL: &str = "level";
+    /// One lower-tier cache lookup (detail names the tier).
+    pub const LOOKUP: &str = "lookup";
+    /// One backend kernel launch (batched: one span per call).
+    pub const LAUNCH: &str = "launch";
+    /// One retried attempt (duration = the backoff slept).
+    pub const RETRY: &str = "retry";
+    /// Service drain: admission stop to last job completion.
+    pub const DRAIN: &str = "drain";
+    /// Front-door routing of a submit to the owning peer.
+    pub const ROUTE: &str = "route";
+    /// Owner-side service of a peer's `cache-get`.
+    pub const SERVE_GET: &str = "serve-get";
+    /// Owner-side service of a peer's `cache-put`.
+    pub const SERVE_PUT: &str = "serve-put";
+}
+
+/// Bounded span ring capacity; overflow drops the oldest event and is
+/// counted, never silently.
+pub const RING_CAP: usize = 8192;
+
+/// Fixed histogram bucket upper bounds, microseconds. Chosen to resolve
+/// both a sub-millisecond memory-tier lookup and a multi-second job
+/// wall on one scale; the implicit final bucket is +Inf.
+pub const BUCKET_BOUNDS_US: [u64; 12] =
+    [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 50_000, 100_000, 1_000_000, 10_000_000];
+
+/// Named counters of the metrics registry (wire/dump names via
+/// [`CounterId::name`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CounterId {
+    /// Jobs admitted into the queue.
+    JobsAdmitted,
+    /// Jobs completed (success or failure).
+    JobsCompleted,
+    /// Jobs whose final attempt failed.
+    JobsFailed,
+    /// Retried attempts across all jobs.
+    Retries,
+    /// Backend kernel launches.
+    Launches,
+    /// Task executions served from the reuse cache.
+    CachedTasks,
+    /// Submits forwarded to a peer by the front door.
+    JobsRouted,
+}
+
+impl CounterId {
+    /// Every counter, in wire order.
+    pub const ALL: [CounterId; 7] = [
+        CounterId::JobsAdmitted,
+        CounterId::JobsCompleted,
+        CounterId::JobsFailed,
+        CounterId::Retries,
+        CounterId::Launches,
+        CounterId::CachedTasks,
+        CounterId::JobsRouted,
+    ];
+
+    /// The counter's registry/wire name.
+    pub fn name(self) -> &'static str {
+        match self {
+            CounterId::JobsAdmitted => "jobs_admitted",
+            CounterId::JobsCompleted => "jobs_completed",
+            CounterId::JobsFailed => "jobs_failed",
+            CounterId::Retries => "retries",
+            CounterId::Launches => "launches",
+            CounterId::CachedTasks => "cached_tasks",
+            CounterId::JobsRouted => "jobs_routed",
+        }
+    }
+}
+
+/// Named latency histograms of the metrics registry (wire/dump names
+/// via [`HistId::name`]; all record microseconds over
+/// [`BUCKET_BOUNDS_US`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HistId {
+    /// Job execution wall time (per attempt set, admission excluded).
+    JobWall,
+    /// Admission-to-pop queue wait.
+    QueueWait,
+    /// Memory-tier lookup latency.
+    LookupMemory,
+    /// Disk-tier lookup latency.
+    LookupDisk,
+    /// Remote-tier lookup latency (owner call + any replica peek).
+    LookupRemote,
+    /// One backend kernel launch (a batched call is one observation).
+    Launch,
+    /// One peer round trip (dial + exchange) on the cluster fabric.
+    PeerRtt,
+    /// Backoff slept before a retried attempt.
+    RetryBackoff,
+}
+
+impl HistId {
+    /// Every histogram, in wire order.
+    pub const ALL: [HistId; 8] = [
+        HistId::JobWall,
+        HistId::QueueWait,
+        HistId::LookupMemory,
+        HistId::LookupDisk,
+        HistId::LookupRemote,
+        HistId::Launch,
+        HistId::PeerRtt,
+        HistId::RetryBackoff,
+    ];
+
+    /// The histogram's registry/wire name (`_us` marks the unit).
+    pub fn name(self) -> &'static str {
+        match self {
+            HistId::JobWall => "job_wall_us",
+            HistId::QueueWait => "queue_wait_us",
+            HistId::LookupMemory => "lookup_memory_us",
+            HistId::LookupDisk => "lookup_disk_us",
+            HistId::LookupRemote => "lookup_remote_us",
+            HistId::Launch => "launch_us",
+            HistId::PeerRtt => "peer_rtt_us",
+            HistId::RetryBackoff => "retry_backoff_us",
+        }
+    }
+
+    /// The lookup histogram for a cache tier name
+    /// ([`crate::cache::CacheTier::name`]); unknown tiers record as
+    /// remote (every non-disk lower tier bills as remote today).
+    pub fn lookup_for_tier(tier: &str) -> HistId {
+        match tier {
+            "memory" => HistId::LookupMemory,
+            "disk" => HistId::LookupDisk,
+            _ => HistId::LookupRemote,
+        }
+    }
+
+    fn index(self) -> usize {
+        HistId::ALL.iter().position(|h| *h == self).expect("every histogram is registered")
+    }
+}
+
+/// The trace context one job carries through the stack: which trace its
+/// spans belong to, which span new child spans parent to, and the
+/// tenant/job labels spans and scoped metrics are stamped with. Cheap
+/// to clone (one `Arc` bump); the service builds one per job attempt
+/// and the engine/cache layers thread it via
+/// [`crate::cache::CacheCtx`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanCtx {
+    /// 128-bit trace id (nonzero for real traces).
+    pub trace: u128,
+    /// Span id new children parent to.
+    pub parent: u64,
+    /// Tenant label for span events and scoped metrics.
+    pub tenant: Arc<str>,
+    /// Job id as billed (the executing node's local id).
+    pub job: u64,
+}
+
+impl SpanCtx {
+    /// A child context: same trace/tenant/job, parenting to `span`.
+    pub fn child(&self, span: u64) -> SpanCtx {
+        SpanCtx { parent: span, ..self.clone() }
+    }
+}
+
+/// One span, as buffered in the ring and written to the trace sink.
+/// `start_us` is a monotonic offset from the emitting node's epoch —
+/// meaningful for ordering *within* a node, never compared across
+/// nodes (the tree structure carries the cross-node relation).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanEvent {
+    pub trace: u128,
+    pub span: u64,
+    /// Parent span id; `None` marks a trace root. A parent emitted by
+    /// another node is fine — stitching is by (trace, span id).
+    pub parent: Option<u64>,
+    /// One of the [`span`] kind names.
+    pub kind: &'static str,
+    pub job: u64,
+    pub tenant: String,
+    /// Monotonic start offset from the node's epoch, microseconds.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Kind-specific detail (tier name, task name, level index, ...).
+    pub detail: String,
+}
+
+/// Serialize one event as its JSONL trace line (no trailing newline).
+pub fn event_json(ev: &SpanEvent, node: &str) -> String {
+    let mut fields = vec![
+        ("trace", Json::Str(format!("{:032x}", ev.trace))),
+        ("span", Json::Str(format!("{:016x}", ev.span))),
+        ("kind", Json::Str(ev.kind.to_string())),
+        ("job", Json::Num(ev.job as f64)),
+        ("tenant", Json::Str(ev.tenant.clone())),
+        ("node", Json::Str(node.to_string())),
+        ("start_us", Json::Num(ev.start_us as f64)),
+        ("dur_us", Json::Num(ev.dur_us as f64)),
+        ("detail", Json::Str(ev.detail.clone())),
+    ];
+    if let Some(p) = ev.parent {
+        fields.push(("parent", Json::Str(format!("{p:016x}"))));
+    }
+    obj(fields).to_string_compact()
+}
+
+/// One parsed trace line: the event plus the node that emitted it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceLine {
+    pub event: SpanEvent,
+    pub node: String,
+}
+
+/// Parse one JSONL trace line (the inverse of [`event_json`]).
+pub fn parse_event(line: &str) -> Result<TraceLine> {
+    let bad = |what: &str| Error::Json(format!("trace line: {what}"));
+    let json = Json::parse(line).map_err(|e| Error::Json(format!("trace line: {e}")))?;
+    let hexfield = |key: &str| -> Result<u128> {
+        let s = json
+            .get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad(&format!("missing hex field `{key}`")))?;
+        u128::from_str_radix(s, 16).map_err(|_| bad(&format!("field `{key}` is not hex")))
+    };
+    let num = |key: &str| -> Result<u64> {
+        json.get(key)
+            .and_then(Json::as_f64)
+            .filter(|n| *n >= 0.0)
+            .map(|n| n as u64)
+            .ok_or_else(|| bad(&format!("missing numeric field `{key}`")))
+    };
+    let text = |key: &str| -> Result<String> {
+        json.get(key)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| bad(&format!("missing string field `{key}`")))
+    };
+    let parent = match json.get("parent") {
+        None | Some(Json::Null) => None,
+        Some(_) => Some(hexfield("parent")? as u64),
+    };
+    let kind_name = text("kind")?;
+    let kind = [
+        span::JOB,
+        span::ADMIT,
+        span::QUEUE,
+        span::SCHEDULE,
+        span::LEVEL,
+        span::LOOKUP,
+        span::LAUNCH,
+        span::RETRY,
+        span::DRAIN,
+        span::ROUTE,
+        span::SERVE_GET,
+        span::SERVE_PUT,
+    ]
+    .into_iter()
+    .find(|k| *k == kind_name)
+    .ok_or_else(|| bad(&format!("unknown span kind `{kind_name}`")))?;
+    Ok(TraceLine {
+        node: text("node")?,
+        event: SpanEvent {
+            trace: hexfield("trace")?,
+            span: hexfield("span")? as u64,
+            parent,
+            kind,
+            job: num("job")?,
+            tenant: text("tenant")?,
+            start_us: num("start_us")?,
+            dur_us: num("dur_us")?,
+            detail: text("detail")?,
+        },
+    })
+}
+
+/// One fixed-bucket latency histogram: atomic bucket counts over
+/// [`BUCKET_BOUNDS_US`] plus an overflow bucket, with running sum and
+/// count (all `Relaxed` — a snapshot is a statistical read, not a
+/// synchronization point).
+#[derive(Debug)]
+struct Hist {
+    counts: [AtomicU64; BUCKET_BOUNDS_US.len() + 1],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Hist {
+    fn new() -> Self {
+        Self {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    fn observe(&self, us: u64) {
+        let b = BUCKET_BOUNDS_US.iter().position(|&lim| us <= lim).unwrap_or(BUCKET_BOUNDS_US.len());
+        self.counts[b].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self, id: HistId) -> HistSnapshot {
+        HistSnapshot {
+            name: id.name().to_string(),
+            counts: self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One registry (the global one, or one tenant's mirror).
+#[derive(Debug)]
+struct Metrics {
+    counters: [AtomicU64; CounterId::ALL.len()],
+    hists: [Hist; HistId::ALL.len()],
+}
+
+impl Metrics {
+    fn new() -> Self {
+        Self {
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            hists: std::array::from_fn(|_| Hist::new()),
+        }
+    }
+
+    fn add(&self, c: CounterId, n: u64) {
+        let i = CounterId::ALL.iter().position(|x| *x == c).expect("registered counter");
+        self.counters[i].fetch_add(n, Ordering::Relaxed);
+    }
+
+    fn observe(&self, h: HistId, us: u64) {
+        self.hists[h.index()].observe(us);
+    }
+
+    fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: CounterId::ALL
+                .iter()
+                .zip(&self.counters)
+                .map(|(id, c)| (id.name().to_string(), c.load(Ordering::Relaxed)))
+                .collect(),
+            hists: HistId::ALL.iter().map(|id| self.hists[id.index()].snapshot(*id)).collect(),
+        }
+    }
+}
+
+/// Point-in-time copy of one histogram (snapshot/wire form).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistSnapshot {
+    pub name: String,
+    /// Bucket counts: one per [`BUCKET_BOUNDS_US`] bound, plus the
+    /// final +Inf overflow bucket.
+    pub counts: Vec<u64>,
+    pub sum_us: u64,
+    pub count: u64,
+}
+
+impl HistSnapshot {
+    /// Approximate quantile (0..=1) from the bucket counts: the upper
+    /// bound of the bucket holding the q-th observation (the overflow
+    /// bucket reports the largest finite bound). `None` when empty.
+    pub fn quantile_us(&self, q: f64) -> Option<u64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, n) in self.counts.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return Some(*BUCKET_BOUNDS_US.get(i).unwrap_or(BUCKET_BOUNDS_US.last().unwrap()));
+            }
+        }
+        Some(*BUCKET_BOUNDS_US.last().unwrap())
+    }
+}
+
+/// Point-in-time copy of one registry.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    /// `(name, value)` in [`CounterId::ALL`] order.
+    pub counters: Vec<(String, u64)>,
+    /// One row per [`HistId::ALL`] entry.
+    pub hists: Vec<HistSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// A counter by name (0 when absent — snapshots from older peers
+    /// may carry fewer counters).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(0)
+    }
+
+    /// A histogram row by name.
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.iter().find(|h| h.name == name)
+    }
+}
+
+/// The full point-in-time telemetry snapshot (metrics + ring state);
+/// the payload of the `stats` wire message, per-tier cache stats ride
+/// beside it.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ObsSnapshot {
+    /// The emitting node's label (cluster address, or `local`).
+    pub node: String,
+    pub global: MetricsSnapshot,
+    /// Per-tenant mirrors, sorted by tenant name. Each field sums to
+    /// the global across tenants for tenant-attributed recordings.
+    pub tenants: Vec<(String, MetricsSnapshot)>,
+    pub ring_len: u64,
+    pub ring_cap: u64,
+    /// Events dropped by ring overflow (the trace sink, when
+    /// configured, still received them).
+    pub ring_dropped: u64,
+}
+
+struct Ring {
+    buf: VecDeque<SpanEvent>,
+    dropped: u64,
+}
+
+/// The active telemetry state behind an [`Obs`] handle.
+pub struct ObsInner {
+    node: String,
+    epoch: Instant,
+    seed: u64,
+    span_ids: AtomicU64,
+    trace_ids: AtomicU64,
+    ring: Mutex<Ring>,
+    sink: Option<Mutex<BufWriter<File>>>,
+    global: Metrics,
+    tenants: Mutex<BTreeMap<String, Arc<Metrics>>>,
+}
+
+fn mix64(mut x: u64) -> u64 {
+    // splitmix64 finalizer: full-period bijection, good avalanche
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+impl ObsInner {
+    fn new(node: &str, sink: Option<BufWriter<File>>) -> Self {
+        // trace-id entropy: process + node + boot wall clock. This is
+        // identity material, not a latency measurement — the monotonic
+        // epoch below is what every duration is measured against.
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::SystemTime::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let mut seed = mix64(nanos ^ u64::from(std::process::id()));
+        for b in node.as_bytes() {
+            seed = mix64(seed ^ u64::from(*b));
+        }
+        Self {
+            node: node.to_string(),
+            epoch: Instant::now(),
+            seed,
+            span_ids: AtomicU64::new(0),
+            trace_ids: AtomicU64::new(0),
+            ring: Mutex::new(Ring { buf: VecDeque::new(), dropped: 0 }),
+            sink: sink.map(Mutex::new),
+            global: Metrics::new(),
+            tenants: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// This node's label, stamped on every emitted trace line.
+    pub fn node(&self) -> &str {
+        &self.node
+    }
+
+    /// Allocate a node-unique span id (salted, so two nodes' ids do not
+    /// collide within a trace except with negligible probability).
+    pub fn next_span(&self) -> u64 {
+        let n = self.span_ids.fetch_add(1, Ordering::Relaxed) + 1;
+        mix64(self.seed ^ n) | 1
+    }
+
+    /// Allocate a fresh 128-bit trace id (never zero).
+    pub fn new_trace(&self) -> u128 {
+        let n = self.trace_ids.fetch_add(1, Ordering::Relaxed) + 1;
+        let hi = mix64(self.seed.rotate_left(17) ^ n);
+        let lo = mix64(hi ^ n.rotate_left(32));
+        (u128::from(hi) << 64) | u128::from(lo) | 1
+    }
+
+    /// Microseconds since this node's telemetry epoch (monotonic).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Buffer one span event and append it to the trace sink.
+    pub fn emit(&self, ev: SpanEvent) {
+        if let Some(sink) = &self.sink {
+            let line = event_json(&ev, &self.node);
+            let mut w = sink.lock().unwrap();
+            // a full disk must never fail a job: drop the line
+            let _ = writeln!(w, "{line}");
+        }
+        let mut ring = self.ring.lock().unwrap();
+        if ring.buf.len() >= RING_CAP {
+            ring.buf.pop_front();
+            ring.dropped += 1;
+        }
+        ring.buf.push_back(ev);
+    }
+
+    /// Emit a span timed against the node epoch: `started` is the
+    /// span's start instant, `dur` its duration.
+    pub fn emit_timed(
+        &self,
+        ctx: &SpanCtx,
+        kind: &'static str,
+        span_id: u64,
+        started: Instant,
+        dur: Duration,
+        detail: String,
+    ) {
+        let start_us = self
+            .now_us()
+            .saturating_sub(started.elapsed().as_micros() as u64);
+        self.emit(SpanEvent {
+            trace: ctx.trace,
+            span: span_id,
+            parent: (ctx.parent != 0).then_some(ctx.parent),
+            kind,
+            job: ctx.job,
+            tenant: ctx.tenant.to_string(),
+            start_us,
+            dur_us: dur.as_micros() as u64,
+            detail,
+        });
+    }
+
+    fn tenant_metrics(&self, tenant: &str) -> Arc<Metrics> {
+        let mut map = self.tenants.lock().unwrap();
+        Arc::clone(map.entry(tenant.to_string()).or_insert_with(|| Arc::new(Metrics::new())))
+    }
+
+    /// Bump a counter, globally and (when labeled) for the tenant.
+    pub fn add(&self, c: CounterId, tenant: Option<&str>, n: u64) {
+        self.global.add(c, n);
+        if let Some(t) = tenant {
+            self.tenant_metrics(t).add(c, n);
+        }
+    }
+
+    /// Record a latency observation, globally and (when labeled) for
+    /// the tenant.
+    pub fn observe(&self, h: HistId, tenant: Option<&str>, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.global.observe(h, us);
+        if let Some(t) = tenant {
+            self.tenant_metrics(t).observe(h, us);
+        }
+    }
+
+    /// Flush the trace sink (drain path; also called on drop).
+    pub fn flush(&self) {
+        if let Some(sink) = &self.sink {
+            let _ = sink.lock().unwrap().flush();
+        }
+    }
+
+    /// Copy of the buffered ring events, oldest first.
+    pub fn ring_events(&self) -> Vec<SpanEvent> {
+        self.ring.lock().unwrap().buf.iter().cloned().collect()
+    }
+
+    /// The point-in-time snapshot behind every stats surface.
+    pub fn snapshot(&self) -> ObsSnapshot {
+        let ring = self.ring.lock().unwrap();
+        let tenants = self.tenants.lock().unwrap();
+        ObsSnapshot {
+            node: self.node.clone(),
+            global: self.global.snapshot(),
+            tenants: tenants.iter().map(|(t, m)| (t.clone(), m.snapshot())).collect(),
+            ring_len: ring.buf.len() as u64,
+            ring_cap: RING_CAP as u64,
+            ring_dropped: ring.dropped,
+        }
+    }
+}
+
+impl Drop for ObsInner {
+    fn drop(&mut self) {
+        if let Some(sink) = &self.sink {
+            let _ = sink.lock().unwrap().flush();
+        }
+    }
+}
+
+impl fmt::Debug for ObsInner {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ObsInner")
+            .field("node", &self.node)
+            .field("sink", &self.sink.is_some())
+            .finish_non_exhaustive()
+    }
+}
+
+/// The telemetry handle every layer carries (engine, cache stack,
+/// remote tier, service, server). Mirrors [`crate::faults::Faults`]:
+/// `Obs::none()` — the default — is a `None` and costs one never-taken
+/// branch per recording site; an active handle shares one
+/// [`ObsInner`] process-wide.
+#[derive(Clone, Default)]
+pub struct Obs(Option<Arc<ObsInner>>);
+
+impl Obs {
+    /// Telemetry off (the default): every recording call is one
+    /// `Option` test.
+    pub fn none() -> Self {
+        Obs(None)
+    }
+
+    /// Telemetry on, ring buffer + metrics only (no trace sink).
+    /// `node` labels emitted events (the cluster address, or `local`).
+    pub fn active(node: &str) -> Self {
+        Obs(Some(Arc::new(ObsInner::new(node, None))))
+    }
+
+    /// Telemetry on with a JSONL trace sink appended to `path`
+    /// (the `trace=FILE` serve flag).
+    pub fn to_file(node: &str, path: impl AsRef<Path>) -> Result<Self> {
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path.as_ref())
+            .map_err(Error::Io)?;
+        Ok(Obs(Some(Arc::new(ObsInner::new(node, Some(BufWriter::new(file)))))))
+    }
+
+    /// The active state, if telemetry is on. Callers needing more than
+    /// a counter/histogram bump guard on this — exactly the
+    /// [`crate::faults::Faults::get`] idiom — so the off path never
+    /// allocates span details.
+    pub fn get(&self) -> Option<&Arc<ObsInner>> {
+        self.0.as_ref()
+    }
+
+    /// Is telemetry on?
+    pub fn is_active(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Bump a counter (no-op when off).
+    pub fn add(&self, c: CounterId, tenant: Option<&str>, n: u64) {
+        if let Some(inner) = &self.0 {
+            inner.add(c, tenant, n);
+        }
+    }
+
+    /// Record a latency observation (no-op when off).
+    pub fn observe(&self, h: HistId, tenant: Option<&str>, d: Duration) {
+        if let Some(inner) = &self.0 {
+            inner.observe(h, tenant, d);
+        }
+    }
+}
+
+/// Handles compare by activeness (the inner state is shared mutable
+/// telemetry, not a value) — the same convention as
+/// [`crate::faults::Faults`], and what lets every config struct
+/// carrying an `Obs` stay `PartialEq`.
+impl PartialEq for Obs {
+    fn eq(&self, other: &Self) -> bool {
+        self.is_active() == other.is_active()
+    }
+}
+
+impl fmt::Debug for Obs {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Obs({})", if self.is_active() { "on" } else { "off" })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(inner: &ObsInner) -> SpanCtx {
+        SpanCtx { trace: inner.new_trace(), parent: 0, tenant: Arc::from("alice"), job: 7 }
+    }
+
+    #[test]
+    fn an_inactive_handle_records_nothing_and_compares_by_activeness() {
+        let off = Obs::none();
+        assert!(!off.is_active());
+        assert!(off.get().is_none());
+        off.add(CounterId::Launches, Some("alice"), 3);
+        off.observe(HistId::Launch, None, Duration::from_millis(1));
+        assert_eq!(off, Obs::default());
+        assert_ne!(off, Obs::active("local"));
+        assert_eq!(format!("{off:?}"), "Obs(off)");
+        assert_eq!(format!("{:?}", Obs::active("local")), "Obs(on)");
+    }
+
+    #[test]
+    fn tenant_scoped_metrics_sum_exactly_to_the_globals() {
+        let obs = Obs::active("local");
+        obs.add(CounterId::Launches, Some("alice"), 5);
+        obs.add(CounterId::Launches, Some("bob"), 7);
+        obs.observe(HistId::JobWall, Some("alice"), Duration::from_millis(3));
+        obs.observe(HistId::JobWall, Some("bob"), Duration::from_micros(80));
+        let snap = obs.get().unwrap().snapshot();
+        assert_eq!(snap.global.counter("launches"), 12);
+        let by_tenant: u64 =
+            snap.tenants.iter().map(|(_, m)| m.counter("launches")).sum();
+        assert_eq!(by_tenant, snap.global.counter("launches"));
+        let g = snap.global.hist("job_wall_us").unwrap();
+        assert_eq!(g.count, 2);
+        assert_eq!(g.sum_us, 3000 + 80);
+        let tenant_counts: u64 = snap
+            .tenants
+            .iter()
+            .filter_map(|(_, m)| m.hist("job_wall_us"))
+            .map(|h| h.count)
+            .sum();
+        assert_eq!(tenant_counts, g.count, "histogram counts partition by tenant");
+        for (i, &n) in g.counts.iter().enumerate() {
+            let t: u64 = snap
+                .tenants
+                .iter()
+                .filter_map(|(_, m)| m.hist("job_wall_us"))
+                .map(|h| h.counts[i])
+                .sum();
+            assert_eq!(t, n, "bucket {i} partitions by tenant");
+        }
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles_follow_the_fixed_bounds() {
+        let obs = Obs::active("local");
+        // 40us -> bucket 0 (<=50), 80us -> bucket 1 (<=100),
+        // 20s -> overflow bucket
+        for us in [40u64, 80, 20_000_000] {
+            obs.observe(HistId::PeerRtt, None, Duration::from_micros(us));
+        }
+        let snap = obs.get().unwrap().snapshot();
+        let h = snap.global.hist("peer_rtt_us").unwrap();
+        assert_eq!(h.counts.len(), BUCKET_BOUNDS_US.len() + 1);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[1], 1);
+        assert_eq!(*h.counts.last().unwrap(), 1, "20s lands in the overflow bucket");
+        assert_eq!(h.quantile_us(0.0), Some(50));
+        assert_eq!(h.quantile_us(0.5), Some(100));
+        assert_eq!(h.quantile_us(1.0), Some(*BUCKET_BOUNDS_US.last().unwrap()));
+        assert_eq!(HistSnapshot::default().quantile_us(0.5), None);
+    }
+
+    #[test]
+    fn span_events_roundtrip_through_the_jsonl_codec() {
+        let ev = SpanEvent {
+            trace: 0xdead_beef_0000_0000_0000_0000_0000_0001,
+            span: 0x1234,
+            parent: Some(0x99),
+            kind: span::LAUNCH,
+            job: 42,
+            tenant: "alice".into(),
+            start_us: 1_000,
+            dur_us: 250,
+            detail: "t3 x4".into(),
+        };
+        let line = event_json(&ev, "127.0.0.1:4101");
+        let back = parse_event(&line).expect("line parses");
+        assert_eq!(back.event, ev);
+        assert_eq!(back.node, "127.0.0.1:4101");
+
+        let root = SpanEvent { parent: None, kind: span::JOB, ..ev };
+        let back = parse_event(&event_json(&root, "n")).expect("root parses");
+        assert_eq!(back.event.parent, None, "absent parent reads as a root");
+
+        assert!(parse_event("not json").is_err());
+        assert!(
+            parse_event("{\"trace\":\"1\",\"span\":\"1\",\"kind\":\"gossip\"}").is_err(),
+            "unknown span kinds are rejected"
+        );
+    }
+
+    #[test]
+    fn the_ring_is_bounded_and_counts_drops() {
+        let obs = Obs::active("local");
+        let inner = obs.get().unwrap();
+        let c = ctx(inner);
+        for i in 0..(RING_CAP as u64 + 10) {
+            inner.emit(SpanEvent {
+                trace: c.trace,
+                span: i + 1,
+                parent: None,
+                kind: span::LAUNCH,
+                job: 7,
+                tenant: "alice".into(),
+                start_us: i,
+                dur_us: 1,
+                detail: String::new(),
+            });
+        }
+        let snap = inner.snapshot();
+        assert_eq!(snap.ring_len, RING_CAP as u64);
+        assert_eq!(snap.ring_dropped, 10);
+        let events = inner.ring_events();
+        assert_eq!(events.len(), RING_CAP);
+        assert_eq!(events[0].span, 11, "the oldest events were dropped");
+    }
+
+    #[test]
+    fn trace_and_span_ids_are_unique_and_nonzero() {
+        let obs = Obs::active("local");
+        let inner = obs.get().unwrap();
+        let mut traces = std::collections::HashSet::new();
+        let mut spans = std::collections::HashSet::new();
+        for _ in 0..1000 {
+            let t = inner.new_trace();
+            let s = inner.next_span();
+            assert_ne!(t, 0);
+            assert_ne!(s, 0);
+            assert!(traces.insert(t), "trace ids must not repeat");
+            assert!(spans.insert(s), "span ids must not repeat");
+        }
+    }
+
+    #[test]
+    fn the_file_sink_writes_parsable_jsonl() {
+        let dir = std::env::temp_dir().join(format!("obs_sink_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let obs = Obs::to_file("127.0.0.1:4101", &path).expect("sink opens");
+        let inner = obs.get().unwrap();
+        let c = ctx(inner);
+        let root = inner.next_span();
+        inner.emit_timed(&c, span::JOB, root, Instant::now(), Duration::from_millis(2), String::new());
+        let child = c.child(root);
+        inner.emit_timed(
+            &child,
+            span::LAUNCH,
+            inner.next_span(),
+            Instant::now(),
+            Duration::from_micros(300),
+            "t1".into(),
+        );
+        inner.flush();
+        let text = std::fs::read_to_string(&path).expect("trace file exists");
+        let lines: Vec<TraceLine> =
+            text.lines().map(|l| parse_event(l).expect("line parses")).collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].event.trace, c.trace);
+        assert_eq!(lines[0].event.parent, None, "ctx parent 0 emits a root");
+        assert_eq!(lines[1].event.parent, Some(root), "child links to the root");
+        assert_eq!(lines[1].event.kind, span::LAUNCH);
+        assert!(lines.iter().all(|l| l.node == "127.0.0.1:4101"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -55,6 +55,7 @@ use crate::cache::{
 };
 use crate::data::Plane;
 use crate::faults::Faults;
+use crate::obs::{span, HistId, Obs, SpanCtx};
 use crate::{Error, Result};
 
 use super::manifest::ArtifactManifest;
@@ -80,6 +81,12 @@ pub struct TaskTimer {
     slots: Vec<(Duration, u64)>,
     /// String-keyed rows merged in via [`TaskTimer::absorb`].
     extra: HashMap<String, (Duration, u64)>,
+    /// Telemetry handle: live (non-cached) recordings mirror into the
+    /// [`HistId::Launch`] histogram, attributed to `tenant`. The
+    /// interned table stays — the cost model and summaries need
+    /// per-task means, which the fixed-bucket registry cannot provide.
+    obs: Obs,
+    tenant: Option<Arc<str>>,
 }
 
 impl TaskTimer {
@@ -87,7 +94,14 @@ impl TaskTimer {
     /// manifest's task names).
     pub fn with_tasks(names: Vec<String>) -> Self {
         let slots = vec![(Duration::ZERO, 0); names.len() * 2];
-        Self { names, slots, extra: HashMap::new() }
+        Self { names, slots, ..Self::default() }
+    }
+
+    /// Attach the telemetry handle; every subsequent live recording
+    /// feeds the launch-latency histogram under `tenant`.
+    pub fn set_obs(&mut self, obs: Obs, tenant: Option<Arc<str>>) {
+        self.obs = obs;
+        self.tenant = tenant;
     }
 
     /// Record one execution of interned task `id`; `cached` executions
@@ -96,6 +110,11 @@ impl TaskTimer {
         let e = &mut self.slots[id * 2 + usize::from(cached)];
         e.0 += elapsed;
         e.1 += 1;
+        if !cached {
+            // no-op when telemetry is off; cached rows are zero-cost
+            // serves, not launches
+            self.obs.observe(HistId::Launch, self.tenant.as_deref(), elapsed);
+        }
     }
 
     /// Mean seconds per execution for `task` (a plain task name, or
@@ -252,6 +271,12 @@ pub struct PjrtEngine {
     /// Fault-injection hook consulted before every backend launch
     /// (inactive by default; see the module docs).
     faults: Faults,
+    /// Telemetry handle (off by default): backend calls emit `launch`
+    /// spans and feed the launch histogram; threaded into the cache
+    /// context so lookups are timed per tier.
+    obs: Obs,
+    /// The job span this engine's spans parent under, if tracing.
+    obs_span: Option<SpanCtx>,
 }
 
 /// Capacity of the per-engine hit-conversion memo. Crossing it clears
@@ -301,6 +326,8 @@ impl PjrtEngine {
             ctx: CacheCtx::default(),
             lit_memo: HashMap::new(),
             faults: Faults::none(),
+            obs: Obs::none(),
+            obs_span: None,
         })
     }
 
@@ -312,8 +339,50 @@ impl PjrtEngine {
 
     /// Account this engine's cache traffic under a per-tenant scope
     /// (see [`ScopedCounters`]); only meaningful with a cache attached.
+    /// Preserves an installed telemetry handle.
     pub fn set_cache_scope(&mut self, scope: Arc<ScopedCounters>) {
         self.ctx = CacheCtx::scoped(scope);
+        self.ctx.set_obs(self.obs.clone(), self.obs_span.clone());
+    }
+
+    /// Attach the telemetry handle and the job span this engine's
+    /// launches and cache lookups should report under; threads both
+    /// into the cache context and the task timer. Off
+    /// ([`Obs::none`], the default) every instrumented site is one
+    /// never-taken branch — and on, only recording happens: telemetry
+    /// never changes a result.
+    pub fn set_obs(&mut self, obs: Obs, span: Option<SpanCtx>) {
+        self.ctx.set_obs(obs.clone(), span.clone());
+        self.timer.set_obs(obs.clone(), span.as_ref().map(|s| Arc::clone(&s.tenant)));
+        self.obs = obs;
+        self.obs_span = span;
+    }
+
+    /// The installed telemetry handle and the span the engine currently
+    /// parents under — for callers that emit their own spans around
+    /// engine calls (the frontier executor's per-level spans).
+    pub fn obs_ctx(&self) -> (&Obs, Option<&SpanCtx>) {
+        (&self.obs, self.obs_span.as_ref())
+    }
+
+    /// Swap the span the engine parents its launch and lookup spans
+    /// under (telemetry handle and tenant attribution unchanged),
+    /// returning the previous one. The frontier executor brackets each
+    /// tree level with this so launches nest under the level's span.
+    pub fn swap_obs_span(&mut self, span: Option<SpanCtx>) -> Option<SpanCtx> {
+        let prev = self.obs_span.take();
+        self.ctx.set_obs(self.obs.clone(), span.clone());
+        self.obs_span = span;
+        prev
+    }
+
+    /// Emit a `launch` span under the engine's job span (no-op with
+    /// telemetry off or untraced).
+    fn emit_launch(&self, started: Instant, dur: Duration, detail: String) {
+        if let (Some(o), Some(sc)) = (self.obs.get(), self.obs_span.as_ref()) {
+            let span_id = o.next_span();
+            o.emit_timed(sc, span::LAUNCH, span_id, started, dur, detail);
+        }
     }
 
     /// Install a fault-injection hook consulted before every backend
@@ -457,7 +526,11 @@ impl PjrtEngine {
         let out: [xla::Literal; 3] = parts.try_into().map_err(|_| {
             Error::Xla(format!("task `{}` did not return 3 outputs", self.manifest.tasks[id].name))
         })?;
-        self.timer.record(id, false, start.elapsed());
+        let dur = start.elapsed();
+        self.timer.record(id, false, dur);
+        if self.obs.is_active() {
+            self.emit_launch(start, dur, self.manifest.tasks[id].name.clone());
+        }
         Ok(out)
     }
 
@@ -611,6 +684,11 @@ impl PjrtEngine {
                         exec.len()
                     )));
                 }
+                // one batched call = one backend launch = one span
+                if self.obs.is_active() {
+                    let name = &self.manifest.tasks[id].name;
+                    self.emit_launch(start, elapsed, format!("{name} x{}", exec.len()));
+                }
                 // per-task accounting: the launch cost amortizes over lanes
                 let per_lane = elapsed / exec.len() as u32;
                 for (&i, lits) in exec.iter().zip(results) {
@@ -720,7 +798,11 @@ impl PjrtEngine {
         if v.len() != 3 {
             return Err(Error::Xla(format!("compare returned {} metrics", v.len())));
         }
-        self.timer.record(id, false, start.elapsed());
+        let dur = start.elapsed();
+        self.timer.record(id, false, dur);
+        if self.obs.is_active() {
+            self.emit_launch(start, dur, self.manifest.compare_task.clone());
+        }
         Ok([v[0], v[1], v[2]])
     }
 

@@ -12,16 +12,20 @@
 //! `peers add=ADDR` / `peers remove=ADDR` send a `peer-join` /
 //! `peer-leave` (with `peers=0`, marking the change admin-originated so
 //! the receiving node relays it) at that point of the submit sequence —
-//! which is what lets a test or operator change membership mid-run.
+//! which is what lets a test or operator change membership mid-run. A
+//! bare `stats` line (rtfp v7) fetches the server's telemetry snapshot
+//! at that point; [`render_prometheus`] turns a snapshot into the
+//! Prometheus-style text dump the CLI prints.
 
 use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
 
+use crate::obs::{MetricsSnapshot, BUCKET_BOUNDS_US};
 use crate::config::{StudyConfig, TuneConfig};
 use crate::{Error, Result};
 
 use super::protocol::{
-    read_frame, write_frame, Message, WireBill, WireJobReport, PROTOCOL_VERSION,
+    read_frame, write_frame, Message, WireBill, WireJobReport, WireStats, PROTOCOL_VERSION,
 };
 
 /// One job to submit: a tenant plus the job's `key=value` options
@@ -44,6 +48,9 @@ pub enum JobLine {
     PeerAdd(String),
     /// `peers remove=ADDR` — tell the service a node left the ring.
     PeerRemove(String),
+    /// `stats` — fetch the server's telemetry snapshot at this point
+    /// of the sequence (rtfp v7).
+    Stats,
 }
 
 /// What a client run brought back.
@@ -53,6 +60,8 @@ pub struct ClientOutcome {
     pub jobs: Vec<WireJobReport>,
     /// The service's final bill, when the run drained it.
     pub bill: Option<WireBill>,
+    /// One snapshot per `stats` admin line, sequence order.
+    pub stats: Vec<WireStats>,
 }
 
 /// Parse a jobs file: one job per line, `tenant=NAME [kind=study|tune]
@@ -68,8 +77,8 @@ pub fn parse_jobs_file(text: &str, defaults: &[String]) -> Result<Vec<JobSpec>> 
         .into_iter()
         .map(|l| match l {
             JobLine::Job(spec) => Ok(spec),
-            JobLine::PeerAdd(_) | JobLine::PeerRemove(_) => Err(Error::Config(
-                "admin `peers` lines need the line-mode client (run_lines)".into(),
+            JobLine::PeerAdd(_) | JobLine::PeerRemove(_) | JobLine::Stats => Err(Error::Config(
+                "admin `peers`/`stats` lines need the line-mode client (run_lines)".into(),
             )),
         })
         .collect()
@@ -98,6 +107,10 @@ pub fn parse_job_lines(text: &str, defaults: &[String]) -> Result<Vec<JobLine>> 
                 }
             };
             lines.push(parsed);
+            continue;
+        }
+        if line == "stats" {
+            lines.push(JobLine::Stats);
             continue;
         }
         let mut tenant = None;
@@ -161,8 +174,16 @@ pub fn run_lines(addr: &str, lines: &[JobLine], drain: bool) -> Result<ClientOut
         other => return Err(unexpected("hello", &other)),
     }
 
+    // `stats` lines at the END of the sequence snapshot after every
+    // result is collected (stable counters: all submitted jobs have
+    // finished); anywhere else they snapshot at that point of the
+    // submit sequence (a live mid-run view).
+    let trailing = lines.iter().rev().take_while(|l| matches!(l, JobLine::Stats)).count();
+    let (head, tail) = lines.split_at(lines.len() - trailing);
+
     let mut ids = Vec::with_capacity(lines.len());
-    for line in lines {
+    let mut stats = Vec::new();
+    for line in head {
         match line {
             JobLine::Job(spec) => {
                 let submit = if spec.tune {
@@ -197,6 +218,14 @@ pub fn run_lines(addr: &str, lines: &[JobLine], drain: bool) -> Result<ClientOut
                     other => return Err(unexpected("peer-leave", &other)),
                 }
             }
+            JobLine::Stats => {
+                write_frame(&mut writer, &Message::Stats)?;
+                writer.flush().map_err(Error::Io)?;
+                match expect_reply(&mut reader)? {
+                    Message::StatsReport(s) => stats.push(*s),
+                    other => return Err(unexpected("stats-report", &other)),
+                }
+            }
         }
     }
 
@@ -210,6 +239,15 @@ pub fn run_lines(addr: &str, lines: &[JobLine], drain: bool) -> Result<ClientOut
         }
     }
 
+    for _ in tail {
+        write_frame(&mut writer, &Message::Stats)?;
+        writer.flush().map_err(Error::Io)?;
+        match expect_reply(&mut reader)? {
+            Message::StatsReport(s) => stats.push(*s),
+            other => return Err(unexpected("stats-report", &other)),
+        }
+    }
+
     let bill = if drain {
         write_frame(&mut writer, &Message::Drain)?;
         writer.flush().map_err(Error::Io)?;
@@ -220,7 +258,71 @@ pub fn run_lines(addr: &str, lines: &[JobLine], drain: bool) -> Result<ClientOut
     } else {
         None
     };
-    Ok(ClientOutcome { jobs, bill })
+    Ok(ClientOutcome { jobs, bill, stats })
+}
+
+/// Render a [`WireStats`] snapshot as a Prometheus-style text dump:
+/// `rtf_`-prefixed counter samples (global, then `tenant`-labelled),
+/// cumulative `_bucket`/`_sum`/`_count` histogram rows over the fixed
+/// [`BUCKET_BOUNDS_US`] boundaries, per-tier cache counters under a
+/// `tier` label, and queue/span-ring gauges. With telemetry off the
+/// registry rows are absent; tier and queue rows are always live.
+pub fn render_prometheus(stats: &WireStats) -> String {
+    use std::fmt::Write as _;
+    let snap = &stats.snapshot;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "# rtf-reuse stats: node {} telemetry={}",
+        snap.node,
+        if stats.enabled { "on" } else { "off" }
+    );
+    push_metrics(&mut out, &snap.global, None);
+    for (tenant, m) in &snap.tenants {
+        push_metrics(&mut out, m, Some(tenant));
+    }
+    for t in &stats.tiers {
+        let rows = [
+            ("hits", t.stats.hits),
+            ("stores", t.stats.stores),
+            ("resident_bytes", t.stats.resident_bytes),
+            ("breaker_opens", t.stats.breaker_opens),
+            ("breaker_closes", t.stats.breaker_closes),
+            ("replica_hits", t.stats.replica_hits),
+        ];
+        for (name, v) in rows {
+            let _ = writeln!(out, "rtf_tier_{name}{{tier=\"{}\"}} {v}", t.tier);
+        }
+    }
+    let _ = writeln!(out, "rtf_jobs_queued {}", stats.queued);
+    let _ = writeln!(out, "rtf_jobs_running {}", stats.running);
+    let _ = writeln!(out, "rtf_jobs_done {}", stats.done);
+    let _ = writeln!(out, "rtf_span_ring_len {}", snap.ring_len);
+    let _ = writeln!(out, "rtf_span_ring_dropped {}", snap.ring_dropped);
+    out
+}
+
+/// One metric scope (global or one tenant) of the Prometheus dump.
+fn push_metrics(out: &mut String, m: &MetricsSnapshot, tenant: Option<&str>) {
+    use std::fmt::Write as _;
+    let scope = tenant.map(|t| format!("tenant=\"{t}\"")).unwrap_or_default();
+    let braced = if scope.is_empty() { String::new() } else { format!("{{{scope}}}") };
+    for (name, v) in &m.counters {
+        let _ = writeln!(out, "rtf_{name}{braced} {v}");
+    }
+    for h in &m.hists {
+        let mut cum = 0u64;
+        for (i, c) in h.counts.iter().enumerate() {
+            cum += c;
+            let le = BUCKET_BOUNDS_US
+                .get(i)
+                .map_or_else(|| "+Inf".to_string(), |b| b.to_string());
+            let sep = if scope.is_empty() { String::new() } else { format!("{scope},") };
+            let _ = writeln!(out, "rtf_{}_bucket{{{sep}le=\"{le}\"}} {cum}", h.name);
+        }
+        let _ = writeln!(out, "rtf_{}_sum{braced} {}", h.name, h.sum_us);
+        let _ = writeln!(out, "rtf_{}_count{braced} {}", h.name, h.count);
+    }
 }
 
 /// Read the next frame, turning EOF and `error` replies into errors.
@@ -288,6 +390,71 @@ mod tests {
         // the strict jobs-file API refuses admin lines rather than
         // silently dropping a membership change
         assert!(parse_jobs_file(text, &[]).is_err());
+    }
+
+    #[test]
+    fn jobs_file_parses_stats_lines() {
+        let text = "tenant=a r=1\nstats\n";
+        let lines = parse_job_lines(text, &[]).unwrap();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[1], JobLine::Stats);
+        // strict jobs-file API refuses admin lines, stats included
+        assert!(parse_jobs_file(text, &[]).is_err());
+    }
+
+    #[test]
+    fn prometheus_dump_renders_scopes_buckets_and_tiers() {
+        use crate::cache::TierStats;
+        use crate::obs::{HistSnapshot, MetricsSnapshot, ObsSnapshot};
+        use crate::serve::protocol::{WireStats, WireTierStats};
+        let hist = HistSnapshot {
+            name: "job_wall_us".into(),
+            counts: {
+                let mut c = vec![0u64; BUCKET_BOUNDS_US.len() + 1];
+                c[0] = 2; // two samples in the first bucket
+                c[BUCKET_BOUNDS_US.len()] = 1; // one overflow
+                c
+            },
+            sum_us: 1234,
+            count: 3,
+        };
+        let global = MetricsSnapshot {
+            counters: vec![("jobs_admitted".into(), 3)],
+            hists: vec![hist.clone()],
+        };
+        let alice =
+            MetricsSnapshot { counters: vec![("jobs_admitted".into(), 3)], hists: vec![hist] };
+        let stats = WireStats {
+            enabled: true,
+            snapshot: ObsSnapshot {
+                node: "127.0.0.1:7071".into(),
+                global,
+                tenants: vec![("alice".into(), alice)],
+                ring_len: 5,
+                ring_cap: 8192,
+                ring_dropped: 0,
+            },
+            tiers: vec![WireTierStats {
+                tier: "memory".into(),
+                stats: TierStats { hits: 7, ..TierStats::default() },
+            }],
+            queued: 1,
+            running: 2,
+            done: 3,
+        };
+        let dump = render_prometheus(&stats);
+        assert!(dump.contains("rtf_jobs_admitted 3\n"), "{dump}");
+        assert!(dump.contains("rtf_jobs_admitted{tenant=\"alice\"} 3\n"), "{dump}");
+        // buckets are cumulative and close with +Inf == count
+        let first = BUCKET_BOUNDS_US[0];
+        assert!(dump.contains(&format!("rtf_job_wall_us_bucket{{le=\"{first}\"}} 2\n")), "{dump}");
+        assert!(dump.contains("rtf_job_wall_us_bucket{le=\"+Inf\"} 3\n"), "{dump}");
+        assert!(dump.contains("rtf_job_wall_us_bucket{tenant=\"alice\",le=\"+Inf\"} 3\n"));
+        assert!(dump.contains("rtf_job_wall_us_sum 1234\n"), "{dump}");
+        assert!(dump.contains("rtf_job_wall_us_count 3\n"), "{dump}");
+        assert!(dump.contains("rtf_tier_hits{tier=\"memory\"} 7\n"), "{dump}");
+        assert!(dump.contains("rtf_jobs_running 2\n"), "{dump}");
+        assert!(dump.contains("rtf_span_ring_len 5\n"), "{dump}");
     }
 
     #[test]

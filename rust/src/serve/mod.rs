@@ -64,8 +64,18 @@
 //! `peer-leave` wire messages and `peers add=/remove=` jobs-file admin
 //! lines rebuild every node's ring without a restart, with owned-key
 //! handoff as a background drain). Replication and routing never change
-//! a result, only where it's computed or served from. `docs/SERVING.md`
-//! is the operator's guide and the normative protocol spec.
+//! a result, only where it's computed or served from. Protocol v7 adds
+//! the **telemetry surface** ([`crate::obs`]): `trace=FILE` streams
+//! structured JSONL spans (admit → queue → schedule → per-level
+//! execution → per-tier lookups → launches → retries → drain),
+//! `stats=on` keeps a live metrics registry and logs a one-line digest,
+//! a `stats` wire message returns the full snapshot (rendered as a
+//! Prometheus-style dump by [`render_prometheus`]), and `route` /
+//! `cache-get` / `cache-put` frames carry an optional trace context so
+//! a routed job's spans stitch into one cross-node tree.
+//! Telemetry off is zero-cost; telemetry on never changes a result.
+//! `docs/SERVING.md` is the operator's guide and the normative
+//! protocol spec; `docs/OBSERVABILITY.md` covers the telemetry surface.
 //!
 //! Correctness under tenancy rests on the cache properties of
 //! [`crate::cache`]: 128-bit content keys (collision margin for a
@@ -94,11 +104,15 @@ pub mod server;
 mod service;
 
 pub use client::{
-    parse_job_lines, parse_jobs_file, run_jobs, run_lines, ClientOutcome, JobLine, JobSpec,
+    parse_job_lines, parse_jobs_file, render_prometheus, run_jobs, run_lines, ClientOutcome,
+    JobLine, JobSpec,
 };
-pub use protocol::{WireBill, WireJobReport, WireTenantBill, PROTOCOL_VERSION};
+pub use protocol::{
+    WireBill, WireJobReport, WireStats, WireTenantBill, WireTierStats, WireTrace,
+    PROTOCOL_VERSION,
+};
 pub use server::WireServer;
 pub use service::{
-    JobReport, ServeOptions, ServiceReport, StudyJob, StudyService, TenantReport,
+    stats_digest, JobReport, ServeOptions, ServiceReport, StudyJob, StudyService, TenantReport,
     SPECULATIVE_TENANT,
 };

@@ -44,6 +44,16 @@
 //! an optional `peek` flag — a claim-free probe used for replica reads,
 //! tolerated as absent by v5-era receivers.
 //!
+//! Protocol v7 adds the telemetry surface: `stats` → `stats-report`
+//! returns a point-in-time snapshot (the metrics registry, per-tier
+//! cache stats, queue and span-ring state), the bill and
+//! `status-report` carry per-tier cache stats, and `route` /
+//! `cache-get` / `cache-put` grow an optional trace context
+//! (`trace` + `span`, hex) so a routed job's spans — and the
+//! owner-side serves its cache traffic causes — stitch into one
+//! cross-node trace tree ([`crate::obs`]). All v7 fields are optional
+//! on parse: v6-era frames read as "no trace, no tiers".
+//!
 //! # Encode/decode
 //!
 //! ```
@@ -59,9 +69,10 @@
 
 use std::io::{BufRead, Write};
 
-use crate::cache::{CacheStats, Key};
+use crate::cache::{CacheStats, Key, TierStats};
 use crate::data::Plane;
 use crate::jsonx::{obj, Json};
+use crate::obs::{HistSnapshot, MetricsSnapshot, ObsSnapshot};
 use crate::tune::TuneSummary;
 use crate::{Error, Result};
 
@@ -87,8 +98,14 @@ use super::service::{JobReport, ServiceReport};
 /// cluster control plane: front-door job forwarding (`route` →
 /// `routed`), live membership (`peer-join` / `peer-leave`, each acked
 /// by an echo carrying the receiver's new ring size), and the optional
-/// `peek` flag on `cache-get` (a claim-free probe for replica reads).
-pub const PROTOCOL_VERSION: u32 = 6;
+/// `peek` flag on `cache-get` (a claim-free probe for replica reads);
+/// v7 — adds the telemetry surface: the `stats` → `stats-report`
+/// exchange (point-in-time metrics + per-tier cache stats), the
+/// `tiers` block on the bill and on `status-report`, and the optional
+/// `trace`/`span` context on `route`, `cache-get` and `cache-put`
+/// (cross-node span stitching; absent fields parse as no-trace, so
+/// v6-era frames stay readable).
+pub const PROTOCOL_VERSION: u32 = 7;
 
 /// Frame tag: protocol name plus frame-format version.
 pub const FRAME_TAG: &str = "rtfp1";
@@ -141,8 +158,16 @@ pub enum Message {
     Accepted { job: u64 },
     /// Ask for service-level queue counts.
     Status,
-    /// Reply to [`Message::Status`].
-    StatusReport { queued: u64, running: u64, done: u64 },
+    /// Reply to [`Message::Status`]; `tiers` (protocol v7) carries the
+    /// node's per-tier cache counters, empty from v6-era servers.
+    StatusReport { queued: u64, running: u64, done: u64, tiers: Vec<WireTierStats> },
+    /// Ask for the node's point-in-time telemetry snapshot
+    /// (protocol v7). Answered by [`Message::StatsReport`]; valid even
+    /// with telemetry off (the snapshot is then empty but the per-tier
+    /// cache stats and queue counts are still live).
+    Stats,
+    /// Reply to [`Message::Stats`] (protocol v7).
+    StatsReport(Box<WireStats>),
     /// Block until the job finishes, then receive its report.
     Result { job: u64 },
     /// Reply to [`Message::Result`]: the finished job's outcome.
@@ -156,8 +181,10 @@ pub enum Message {
     /// a submitted job to the peer owning the largest share of its
     /// predicted chain keys. The receiver executes the job *here* —
     /// a routed job is never re-routed — and replies
-    /// [`Message::Routed`].
-    Route { tenant: String, study: Vec<String> },
+    /// [`Message::Routed`]. `trace` (protocol v7) carries the front
+    /// door's trace context so the executing node's spans stitch under
+    /// the front door's `route` span; absent from v6-era senders.
+    Route { tenant: String, study: Vec<String>, trace: Option<WireTrace> },
     /// Reply to [`Message::Route`]: the executing node's local job id
     /// (`result` on the same connection collects it) and its cluster
     /// address (informational).
@@ -181,8 +208,10 @@ pub enum Message {
     /// request is a claim-free probe: the receiver answers from its
     /// local tiers or replies a plain miss (`found=false`,
     /// `claimed=false`) — replica reads use this so a failover never
-    /// registers a claim on a node that does not own the key.
-    CacheGet { key: Key, peek: bool },
+    /// registers a claim on a node that does not own the key. `trace`
+    /// (protocol v7) parents the owner's `serve-get` span under the
+    /// requester's lookup span; absent from v6-era senders.
+    CacheGet { key: Key, peek: bool, trace: Option<WireTrace> },
     /// Reply to [`Message::CacheGet`]: the state if the owner holds it
     /// (`found`), else a cross-node claim grant (`claimed`) telling the
     /// requester to compute locally and publish with
@@ -196,6 +225,40 @@ pub enum Message {
     CacheOk { key: Key, stored: bool },
     /// Any failure; `code` is one of [`codes`].
     Error { code: String, message: String },
+}
+
+/// The trace context a frame can carry (protocol v7): the 128-bit
+/// trace id and the sender-side span id the receiver's spans should
+/// parent under. Encoded as two lowercase-hex string fields (`trace`,
+/// `span`); both absent on untraced traffic and from v6-era senders.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireTrace {
+    pub trace: u128,
+    pub span: u64,
+}
+
+/// One cache tier's counters as reported over the wire (protocol v7):
+/// the tier's canonical name plus its [`TierStats`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WireTierStats {
+    pub tier: String,
+    pub stats: TierStats,
+}
+
+/// Reply to a `stats` request (protocol v7): the node's telemetry
+/// snapshot (counters, histograms, span-ring state — empty with
+/// telemetry off), its per-tier cache counters, and its queue counts.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WireStats {
+    /// True when the node runs with telemetry on.
+    pub enabled: bool,
+    /// The metrics registry + span-ring snapshot ([`crate::obs`]).
+    pub snapshot: ObsSnapshot,
+    /// Per-tier cache counters (live even with telemetry off).
+    pub tiers: Vec<WireTierStats>,
+    pub queued: u64,
+    pub running: u64,
+    pub done: u64,
 }
 
 /// Reply to a `cache-get` (see [`Message::CacheState`]). Exactly one of
@@ -235,12 +298,15 @@ pub struct WireCachePut {
     pub w: u64,
     /// Hex of the three planes' little-endian f32 data, concatenated.
     pub planes: String,
+    /// Trace context (protocol v7): parents the owner's `serve-put`
+    /// span under the publisher's span; absent from v6-era senders.
+    pub trace: Option<WireTrace>,
 }
 
 impl WireCachePut {
     pub fn new(key: Key, state: &[Plane; 3]) -> Self {
         let (h, w, planes) = planes_to_hex(state);
-        Self { key, h, w, planes }
+        Self { key, h, w, planes, trace: None }
     }
 }
 
@@ -418,6 +484,10 @@ pub struct WireBill {
     /// Persisted comparison-metric rows the warm start reloaded
     /// (protocol v4) — comparisons a warm restart will not relaunch.
     pub warm_metrics: u64,
+    /// Per-tier cache counters at drain time (protocol v7), including
+    /// breaker transitions and replica-served reads; empty from v6-era
+    /// servers.
+    pub tiers: Vec<WireTierStats>,
 }
 
 impl From<&ServiceReport> for WireBill {
@@ -456,6 +526,11 @@ impl From<&ServiceReport> for WireBill {
             warm_admitted_bytes: r.warm.admitted_bytes,
             warm_swept: r.warm.swept,
             warm_metrics: r.warm.metrics_loaded,
+            tiers: r
+                .tiers
+                .iter()
+                .map(|(tier, stats)| WireTierStats { tier: tier.clone(), stats: *stats })
+                .collect(),
         }
     }
 }
@@ -676,6 +751,132 @@ fn opt_str_field(o: &Json, key: &str) -> Result<Option<String>> {
     }
 }
 
+/// The optional trace context (protocol v7): two hex string fields,
+/// `trace` (128-bit) and `span` (64-bit). Absent (or null) `trace`
+/// means untraced — how v6-era frames keep parsing.
+fn opt_trace_field(o: &Json) -> Result<Option<WireTrace>> {
+    let Some(t) = opt_str_field(o, "trace")? else { return Ok(None) };
+    let trace = u128::from_str_radix(&t, 16)
+        .map_err(|_| Error::Protocol("field `trace` must be a 128-bit hex trace id".into()))?;
+    let span = match opt_str_field(o, "span")? {
+        Some(s) => u64::from_str_radix(&s, 16)
+            .map_err(|_| Error::Protocol("field `span` must be a 64-bit hex span id".into()))?,
+        None => 0,
+    };
+    Ok(Some(WireTrace { trace, span }))
+}
+
+fn push_trace(fields: &mut Vec<(&str, Json)>, trace: &Option<WireTrace>) {
+    if let Some(t) = trace {
+        fields.push(("trace", Json::Str(format!("{:032x}", t.trace))));
+        fields.push(("span", Json::Str(format!("{:016x}", t.span))));
+    }
+}
+
+fn tier_stats_json(t: &WireTierStats) -> Json {
+    obj(vec![
+        ("tier", js(&t.tier)),
+        ("hits", ju(t.stats.hits)),
+        ("stores", ju(t.stats.stores)),
+        ("resident_bytes", ju(t.stats.resident_bytes)),
+        ("breaker_opens", ju(t.stats.breaker_opens)),
+        ("breaker_closes", ju(t.stats.breaker_closes)),
+        ("replica_hits", ju(t.stats.replica_hits)),
+    ])
+}
+
+fn tier_stats_from_json(o: &Json) -> Result<WireTierStats> {
+    Ok(WireTierStats {
+        tier: str_field(o, "tier")?,
+        stats: TierStats {
+            hits: u64_field(o, "hits")?,
+            stores: u64_field(o, "stores")?,
+            resident_bytes: u64_field(o, "resident_bytes")?,
+            breaker_opens: u64_field(o, "breaker_opens")?,
+            breaker_closes: u64_field(o, "breaker_closes")?,
+            replica_hits: u64_field(o, "replica_hits")?,
+        },
+    })
+}
+
+fn tiers_json(tiers: &[WireTierStats]) -> Json {
+    Json::Arr(tiers.iter().map(tier_stats_json).collect())
+}
+
+/// The optional `tiers` array (protocol v7); absent (or null) means
+/// empty — how v6-era `bill` and `status-report` frames keep parsing.
+fn opt_tiers_field(o: &Json) -> Result<Vec<WireTierStats>> {
+    match o.get("tiers") {
+        None | Some(Json::Null) => Ok(Vec::new()),
+        Some(v) => {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| Error::Protocol("field `tiers` must be an array".into()))?;
+            arr.iter().map(tier_stats_from_json).collect()
+        }
+    }
+}
+
+fn u64_arr(o: &Json, key: &str) -> Result<Vec<u64>> {
+    let mut out = Vec::new();
+    for v in arr_field(o, key)? {
+        match v.as_f64() {
+            Some(n) if n >= 0.0 => out.push(n as u64),
+            _ => {
+                return Err(Error::Protocol(format!(
+                    "field `{key}` must hold non-negative numbers"
+                )))
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn hist_json(h: &HistSnapshot) -> Json {
+    obj(vec![
+        ("name", js(&h.name)),
+        ("counts", Json::Arr(h.counts.iter().map(|&c| ju(c)).collect())),
+        ("sum_us", ju(h.sum_us)),
+        ("count", ju(h.count)),
+    ])
+}
+
+fn hist_from_json(o: &Json) -> Result<HistSnapshot> {
+    Ok(HistSnapshot {
+        name: str_field(o, "name")?,
+        counts: u64_arr(o, "counts")?,
+        sum_us: u64_field(o, "sum_us")?,
+        count: u64_field(o, "count")?,
+    })
+}
+
+fn metrics_json(m: &MetricsSnapshot) -> Json {
+    obj(vec![
+        (
+            "counters",
+            Json::Arr(
+                m.counters
+                    .iter()
+                    .map(|(name, value)| obj(vec![("name", js(name)), ("value", ju(*value))]))
+                    .collect(),
+            ),
+        ),
+        ("hists", Json::Arr(m.hists.iter().map(hist_json).collect())),
+    ])
+}
+
+fn metrics_from_json(o: &Json) -> Result<MetricsSnapshot> {
+    let mut counters = Vec::new();
+    for c in arr_field(o, "counters")? {
+        counters.push((str_field(c, "name")?, u64_field(c, "value")?));
+    }
+    let mut hists = Vec::new();
+    for h in arr_field(o, "hists")? {
+        hists.push(hist_from_json(h)?);
+    }
+    Ok(MetricsSnapshot { counters, hists })
+}
+
 fn cache_stats_json(s: &CacheStats) -> Json {
     obj(vec![
         ("hits", ju(s.hits)),
@@ -837,6 +1038,7 @@ impl WireBill {
             ("warm_admitted_bytes", ju(self.warm_admitted_bytes)),
             ("warm_swept", ju(self.warm_swept)),
             ("warm_metrics", ju(self.warm_metrics)),
+            ("tiers", tiers_json(&self.tiers)),
         ])
     }
 
@@ -861,6 +1063,59 @@ impl WireBill {
             warm_admitted_bytes: u64_field(o, "warm_admitted_bytes")?,
             warm_swept: u64_field(o, "warm_swept")?,
             warm_metrics: u64_field(o, "warm_metrics")?,
+            tiers: opt_tiers_field(o)?,
+        })
+    }
+}
+
+impl WireStats {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("type", js("stats-report")),
+            ("enabled", jb(self.enabled)),
+            ("node", js(&self.snapshot.node)),
+            ("global", metrics_json(&self.snapshot.global)),
+            (
+                "tenants",
+                Json::Arr(
+                    self.snapshot
+                        .tenants
+                        .iter()
+                        .map(|(tenant, m)| {
+                            obj(vec![("tenant", js(tenant)), ("metrics", metrics_json(m))])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("ring_len", ju(self.snapshot.ring_len)),
+            ("ring_cap", ju(self.snapshot.ring_cap)),
+            ("ring_dropped", ju(self.snapshot.ring_dropped)),
+            ("tiers", tiers_json(&self.tiers)),
+            ("queued", ju(self.queued)),
+            ("running", ju(self.running)),
+            ("done", ju(self.done)),
+        ])
+    }
+
+    fn from_json(o: &Json) -> Result<WireStats> {
+        let mut tenants = Vec::new();
+        for t in arr_field(o, "tenants")? {
+            tenants.push((str_field(t, "tenant")?, metrics_from_json(field(t, "metrics")?)?));
+        }
+        Ok(WireStats {
+            enabled: bool_field(o, "enabled")?,
+            snapshot: ObsSnapshot {
+                node: str_field(o, "node")?,
+                global: metrics_from_json(field(o, "global")?)?,
+                tenants,
+                ring_len: u64_field(o, "ring_len")?,
+                ring_cap: u64_field(o, "ring_cap")?,
+                ring_dropped: u64_field(o, "ring_dropped")?,
+            },
+            tiers: opt_tiers_field(o)?,
+            queued: u64_field(o, "queued")?,
+            running: u64_field(o, "running")?,
+            done: u64_field(o, "done")?,
         })
     }
 }
@@ -875,6 +1130,8 @@ impl Message {
             Message::Accepted { .. } => "accepted",
             Message::Status => "status",
             Message::StatusReport { .. } => "status-report",
+            Message::Stats => "stats",
+            Message::StatsReport(_) => "stats-report",
             Message::Result { .. } => "result",
             Message::JobDone(_) => "job-report",
             Message::Drain => "drain",
@@ -913,21 +1170,28 @@ impl Message {
                 obj(vec![("type", js("accepted")), ("job", ju(*job))])
             }
             Message::Status => obj(vec![("type", js("status"))]),
-            Message::StatusReport { queued, running, done } => obj(vec![
+            Message::StatusReport { queued, running, done, tiers } => obj(vec![
                 ("type", js("status-report")),
                 ("queued", ju(*queued)),
                 ("running", ju(*running)),
                 ("done", ju(*done)),
+                ("tiers", tiers_json(tiers)),
             ]),
+            Message::Stats => obj(vec![("type", js("stats"))]),
+            Message::StatsReport(stats) => stats.to_json(),
             Message::Result { job } => obj(vec![("type", js("result")), ("job", ju(*job))]),
             Message::JobDone(report) => report.to_json(),
             Message::Drain => obj(vec![("type", js("drain"))]),
             Message::Bill(bill) => bill.to_json(),
-            Message::Route { tenant, study } => obj(vec![
-                ("type", js("route")),
-                ("tenant", js(tenant)),
-                ("study", Json::Arr(study.iter().map(|s| js(s.as_str())).collect())),
-            ]),
+            Message::Route { tenant, study, trace } => {
+                let mut fields = vec![
+                    ("type", js("route")),
+                    ("tenant", js(tenant)),
+                    ("study", Json::Arr(study.iter().map(|s| js(s.as_str())).collect())),
+                ];
+                push_trace(&mut fields, trace);
+                obj(fields)
+            }
             Message::Routed { job, node } => obj(vec![
                 ("type", js("routed")),
                 ("job", ju(*job)),
@@ -943,11 +1207,12 @@ impl Message {
                 ("addr", js(addr)),
                 ("peers", ju(*peers)),
             ]),
-            Message::CacheGet { key, peek } => {
+            Message::CacheGet { key, peek, trace } => {
                 let mut fields = vec![("type", js("cache-get")), ("key", jkey(*key))];
                 if *peek {
                     fields.push(("peek", jb(true)));
                 }
+                push_trace(&mut fields, trace);
                 obj(fields)
             }
             Message::CacheState(state) => obj(vec![
@@ -959,13 +1224,17 @@ impl Message {
                 ("w", ju(state.w)),
                 ("planes", js(&state.planes)),
             ]),
-            Message::CachePut(put) => obj(vec![
-                ("type", js("cache-put")),
-                ("key", jkey(put.key)),
-                ("h", ju(put.h)),
-                ("w", ju(put.w)),
-                ("planes", js(&put.planes)),
-            ]),
+            Message::CachePut(put) => {
+                let mut fields = vec![
+                    ("type", js("cache-put")),
+                    ("key", jkey(put.key)),
+                    ("h", ju(put.h)),
+                    ("w", ju(put.w)),
+                    ("planes", js(&put.planes)),
+                ];
+                push_trace(&mut fields, &put.trace);
+                obj(fields)
+            }
             Message::CacheOk { key, stored } => obj(vec![
                 ("type", js("cache-ok")),
                 ("key", jkey(*key)),
@@ -1000,7 +1269,10 @@ impl Message {
                 queued: u64_field(o, "queued")?,
                 running: u64_field(o, "running")?,
                 done: u64_field(o, "done")?,
+                tiers: opt_tiers_field(o)?,
             }),
+            "stats" => Ok(Message::Stats),
+            "stats-report" => Ok(Message::StatsReport(Box::new(WireStats::from_json(o)?))),
             "result" => Ok(Message::Result { job: u64_field(o, "job")? }),
             "job-report" => Ok(Message::JobDone(Box::new(WireJobReport::from_json(o)?))),
             "drain" => Ok(Message::Drain),
@@ -1008,6 +1280,7 @@ impl Message {
             "route" => Ok(Message::Route {
                 tenant: str_field(o, "tenant")?,
                 study: str_arr(o, "study")?,
+                trace: opt_trace_field(o)?,
             }),
             "routed" => Ok(Message::Routed {
                 job: u64_field(o, "job")?,
@@ -1024,6 +1297,7 @@ impl Message {
             "cache-get" => Ok(Message::CacheGet {
                 key: key_field(o, "key")?,
                 peek: opt_bool_field(o, "peek")?,
+                trace: opt_trace_field(o)?,
             }),
             "cache-state" => Ok(Message::CacheState(Box::new(WireCacheState {
                 key: key_field(o, "key")?,
@@ -1038,6 +1312,7 @@ impl Message {
                 h: u64_field(o, "h")?,
                 w: u64_field(o, "w")?,
                 planes: str_field(o, "planes")?,
+                trace: opt_trace_field(o)?,
             }))),
             "cache-ok" => Ok(Message::CacheOk {
                 key: key_field(o, "key")?,
@@ -1080,7 +1355,56 @@ mod tests {
         });
         roundtrip(Message::Accepted { job: 42 });
         roundtrip(Message::Status);
-        roundtrip(Message::StatusReport { queued: 3, running: 2, done: 7 });
+        roundtrip(Message::StatusReport { queued: 3, running: 2, done: 7, tiers: vec![] });
+        roundtrip(Message::StatusReport {
+            queued: 3,
+            running: 2,
+            done: 7,
+            tiers: vec![WireTierStats {
+                tier: "memory".into(),
+                stats: TierStats { hits: 9, stores: 4, ..TierStats::default() },
+            }],
+        });
+        roundtrip(Message::Stats);
+        roundtrip(Message::StatsReport(Box::new(WireStats {
+            enabled: true,
+            snapshot: ObsSnapshot {
+                node: "127.0.0.1:4101".into(),
+                global: MetricsSnapshot {
+                    counters: vec![("jobs_admitted".into(), 5), ("launches".into(), 80)],
+                    hists: vec![HistSnapshot {
+                        name: "launch_us".into(),
+                        counts: vec![0, 3, 77, 0],
+                        sum_us: 12_345,
+                        count: 80,
+                    }],
+                },
+                tenants: vec![(
+                    "alice".into(),
+                    MetricsSnapshot {
+                        counters: vec![("jobs_admitted".into(), 5)],
+                        hists: vec![],
+                    },
+                )],
+                ring_len: 100,
+                ring_cap: 8192,
+                ring_dropped: 0,
+            },
+            tiers: vec![WireTierStats {
+                tier: "remote".into(),
+                stats: TierStats {
+                    hits: 7,
+                    stores: 3,
+                    breaker_opens: 1,
+                    breaker_closes: 1,
+                    replica_hits: 2,
+                    ..TierStats::default()
+                },
+            }],
+            queued: 1,
+            running: 2,
+            done: 3,
+        })));
         roundtrip(Message::Result { job: 42 });
         roundtrip(Message::JobDone(Box::new(WireJobReport {
             job: 42,
@@ -1137,12 +1461,28 @@ mod tests {
             warm_admitted: 12,
             warm_swept: 2,
             warm_metrics: 7,
+            tiers: vec![
+                WireTierStats {
+                    tier: "memory".into(),
+                    stats: TierStats { hits: 40, stores: 9, ..TierStats::default() },
+                },
+                WireTierStats {
+                    tier: "remote".into(),
+                    stats: TierStats { breaker_opens: 2, replica_hits: 5, ..TierStats::default() },
+                },
+            ],
             ..WireBill::default()
         })));
         roundtrip(Message::Error { code: codes::DRAINING.into(), message: "late".into() });
         roundtrip(Message::Route {
             tenant: "alice".into(),
             study: vec!["method=moat".into(), "r=2".into()],
+            trace: None,
+        });
+        roundtrip(Message::Route {
+            tenant: "alice".into(),
+            study: vec!["method=moat".into(), "r=2".into()],
+            trace: Some(WireTrace { trace: 0xfeed_beef, span: 0x1234 }),
         });
         roundtrip(Message::Routed { job: 7, node: "127.0.0.1:4101".into() });
         roundtrip(Message::PeerJoin { addr: "127.0.0.1:4103".into(), peers: 0 });
@@ -1151,11 +1491,20 @@ mod tests {
         let key = Key::from_parts(0xdead_beef, 42);
         let state =
             [Plane::filled(1.0, 2, 2), Plane::filled(0.5, 2, 2), Plane::filled(-3.25, 2, 2)];
-        roundtrip(Message::CacheGet { key, peek: false });
-        roundtrip(Message::CacheGet { key, peek: true });
+        roundtrip(Message::CacheGet { key, peek: false, trace: None });
+        roundtrip(Message::CacheGet { key, peek: true, trace: None });
+        roundtrip(Message::CacheGet {
+            key,
+            peek: true,
+            trace: Some(WireTrace { trace: u128::MAX, span: u64::MAX }),
+        });
         roundtrip(Message::CacheState(Box::new(WireCacheState::found(key, &state))));
         roundtrip(Message::CacheState(Box::new(WireCacheState::claimed(key))));
         roundtrip(Message::CachePut(Box::new(WireCachePut::new(key, &state))));
+        roundtrip(Message::CachePut(Box::new(WireCachePut {
+            trace: Some(WireTrace { trace: 7, span: 9 }),
+            ..WireCachePut::new(key, &state)
+        })));
         roundtrip(Message::CacheOk { key, stored: true });
     }
 
@@ -1222,7 +1571,52 @@ mod tests {
         );
         let frame = format!("rtfp1 {}\n{}\n", body.len(), body);
         let (msg, _) = decode_frame(frame.as_bytes()).unwrap();
-        assert_eq!(msg, Message::CacheGet { key: Key::from_parts(1, 2), peek: false });
+        assert_eq!(
+            msg,
+            Message::CacheGet { key: Key::from_parts(1, 2), peek: false, trace: None }
+        );
+    }
+
+    #[test]
+    fn v6_frames_without_trace_or_tiers_still_parse() {
+        // a v6-era route carries no `trace`/`span`; v7 reads it as
+        // untraced
+        let body = "{\"type\":\"route\",\"tenant\":\"a\",\"study\":[\"r=2\"]}";
+        let frame = format!("rtfp1 {}\n{}\n", body.len(), body);
+        let (msg, _) = decode_frame(frame.as_bytes()).unwrap();
+        assert_eq!(
+            msg,
+            Message::Route { tenant: "a".into(), study: vec!["r=2".into()], trace: None }
+        );
+        // a v6-era cache-put carries no trace either
+        let body = format!(
+            "{{\"type\":\"cache-put\",\"key\":\"{:032x}\",\"h\":0,\"w\":0,\"planes\":\"\"}}",
+            Key::from_parts(3, 4).as_u128()
+        );
+        let frame = format!("rtfp1 {}\n{}\n", body.len(), body);
+        let (msg, _) = decode_frame(frame.as_bytes()).unwrap();
+        assert_eq!(
+            msg,
+            Message::CachePut(Box::new(WireCachePut {
+                key: Key::from_parts(3, 4),
+                ..WireCachePut::default()
+            }))
+        );
+        // a v6-era status-report carries no `tiers`; v7 reads it empty
+        let body = "{\"type\":\"status-report\",\"queued\":1,\"running\":2,\"done\":3}";
+        let frame = format!("rtfp1 {}\n{}\n", body.len(), body);
+        let (msg, _) = decode_frame(frame.as_bytes()).unwrap();
+        assert_eq!(
+            msg,
+            Message::StatusReport { queued: 1, running: 2, done: 3, tiers: vec![] }
+        );
+    }
+
+    #[test]
+    fn a_malformed_trace_context_is_rejected() {
+        let body = "{\"type\":\"route\",\"tenant\":\"a\",\"study\":[],\"trace\":\"xyz\"}";
+        let frame = format!("rtfp1 {}\n{}\n", body.len(), body);
+        assert!(decode_frame(frame.as_bytes()).is_err(), "non-hex trace id rejected");
     }
 
     #[test]
@@ -1231,10 +1625,12 @@ mod tests {
             (Message::Status, "status"),
             (Message::Drain, "drain"),
             (Message::Accepted { job: 0 }, "accepted"),
-            (Message::Route { tenant: String::new(), study: vec![] }, "route"),
+            (Message::Route { tenant: String::new(), study: vec![], trace: None }, "route"),
             (Message::Routed { job: 0, node: String::new() }, "routed"),
             (Message::PeerJoin { addr: String::new(), peers: 0 }, "peer-join"),
             (Message::PeerLeave { addr: String::new(), peers: 0 }, "peer-leave"),
+            (Message::Stats, "stats"),
+            (Message::StatsReport(Box::default()), "stats-report"),
         ] {
             assert_eq!(msg.type_name(), name);
             assert_eq!(msg.to_json().get("type").and_then(|t| t.as_str()), Some(name));

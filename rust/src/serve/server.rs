@@ -39,14 +39,16 @@ use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::cache::RemoteServe;
 use crate::config::{StudyConfig, TuneConfig};
+use crate::obs::{span, CounterId, SpanCtx};
 use crate::{Error, Result};
 
 use super::protocol::{
     codes, encode_frame, planes_from_hex, read_frame, write_frame, Message, WireBill,
-    WireCacheState, WireJobReport, PROTOCOL_VERSION,
+    WireCacheState, WireJobReport, WireTierStats, WireTrace, PROTOCOL_VERSION,
 };
 use super::service::{ServiceReport, StudyJob, StudyService};
 
@@ -177,8 +179,37 @@ fn handle_conn(
                     // and give the client a proxy handle. Every failure
                     // on this path falls through to local execution.
                     let routed = if svc.route_enabled() {
-                        svc.predict_route(&cfg)
-                            .and_then(|peer| open_route(&peer, &tenant, &study))
+                        // with tracing on, the route span is the trace
+                        // ROOT of a routed job: the peer parents its
+                        // whole job tree under the `trace` we stamp here
+                        let traced = svc.obs().get().map(|o| {
+                            let trace = o.new_trace();
+                            let route_span = o.next_span();
+                            (WireTrace { trace, span: route_span }, Instant::now())
+                        });
+                        svc.predict_route(&cfg).and_then(|peer| {
+                            let job =
+                                open_route(&peer, &tenant, &study, traced.map(|(w, _)| w))?;
+                            if let (Some(o), Some((w, started))) = (svc.obs().get(), traced) {
+                                let ctx = SpanCtx {
+                                    trace: w.trace,
+                                    parent: 0,
+                                    tenant: Arc::from(tenant.as_str()),
+                                    job: next_handle,
+                                };
+                                let dur = started.elapsed();
+                                o.emit_timed(
+                                    &ctx,
+                                    span::ROUTE,
+                                    w.span,
+                                    started,
+                                    dur,
+                                    format!("to {peer}"),
+                                );
+                                o.add(CounterId::JobsRouted, Some(&tenant), 1);
+                            }
+                            Some(job)
+                        })
                     } else {
                         None
                     };
@@ -201,11 +232,13 @@ fn handle_conn(
                 }
                 Err(e) => error_msg(codes::BAD_STUDY, &e.to_string()),
             },
-            Message::Route { tenant, study } => match StudyConfig::from_args(&study) {
+            Message::Route { tenant, study, trace } => match StudyConfig::from_args(&study) {
                 // a routed submit from a peer's front door: execute
                 // HERE, unconditionally — a route is never re-routed,
-                // so no membership disagreement can form a cycle
-                Ok(cfg) => match svc.submit(StudyJob { tenant, cfg }) {
+                // so no membership disagreement can form a cycle. Any
+                // `trace` context makes this job's spans children of the
+                // front door's route span (same trace id, cross-node).
+                Ok(cfg) => match svc.submit_with_trace(StudyJob { tenant, cfg }, trace) {
                     Ok(job) => {
                         undelivered.insert(job);
                         let node = svc
@@ -231,7 +264,13 @@ fn handle_conn(
                 queued: svc.queued() as u64,
                 running: svc.in_flight() as u64,
                 done: svc.completed() as u64,
+                tiers: svc
+                    .tier_stats()
+                    .into_iter()
+                    .map(|(tier, stats)| WireTierStats { tier, stats })
+                    .collect(),
             },
+            Message::Stats => Message::StatsReport(Box::new(svc.stats_snapshot())),
             Message::Result { job } if proxied.contains_key(&job) => {
                 let reply = proxy_result(&proxied[&job], job);
                 if matches!(reply, Message::JobDone(_)) {
@@ -262,37 +301,53 @@ fn handle_conn(
                 let _ = TcpStream::connect(self_addr);
                 return sent;
             }
-            Message::CacheGet { key, peek: true } => {
+            Message::CacheGet { key, peek: true, trace } => {
                 // claim-free read (rtfp v6): replica fallbacks use this
                 // so a degraded read can never wedge a requester behind
                 // a claim TTL — worst case is one duplicated launch
-                match svc.cache().peek_state(key) {
+                let started = Instant::now();
+                let (reply, outcome) = match svc.cache().peek_state(key) {
                     Some(state) => {
-                        Message::CacheState(Box::new(WireCacheState::found(key, &state)))
+                        (Message::CacheState(Box::new(WireCacheState::found(key, &state))), "hit")
                     }
                     // wire shape of a miss is found=false, same frame a
                     // claimed key gets — a peeker treats both as a miss
-                    None => Message::CacheState(Box::new(WireCacheState::claimed(key))),
-                }
+                    None => {
+                        (Message::CacheState(Box::new(WireCacheState::claimed(key))), "miss")
+                    }
+                };
+                emit_serve_span(&svc, trace, span::SERVE_GET, started, format!("peek {outcome}"));
+                reply
             }
-            Message::CacheGet { key, peek: false } => {
+            Message::CacheGet { key, peek: false, trace } => {
                 // blocks while another node holds the cross-node claim
                 // on this key — cluster single-flight (rtfp v3)
-                match svc.cache().serve_remote_get(key) {
+                let started = Instant::now();
+                let (reply, outcome) = match svc.cache().serve_remote_get(key) {
                     RemoteServe::Found(state) => {
                         // replication hook: the serve that crosses the
                         // hot watermark pushes this key to its replica
                         svc.note_remote_served(key);
-                        Message::CacheState(Box::new(WireCacheState::found(key, &state)))
+                        (Message::CacheState(Box::new(WireCacheState::found(key, &state))), "hit")
                     }
                     RemoteServe::Claimed => {
-                        Message::CacheState(Box::new(WireCacheState::claimed(key)))
+                        (Message::CacheState(Box::new(WireCacheState::claimed(key))), "claimed")
                     }
-                }
+                };
+                emit_serve_span(&svc, trace, span::SERVE_GET, started, outcome.to_string());
+                reply
             }
             Message::CachePut(put) => match planes_from_hex(put.h, put.w, &put.planes) {
                 Ok(planes) => {
+                    let started = Instant::now();
                     let stored = svc.cache().serve_remote_put(put.key, planes);
+                    emit_serve_span(
+                        &svc,
+                        put.trace,
+                        span::SERVE_PUT,
+                        started,
+                        format!("stored={stored}"),
+                    );
                     Message::CacheOk { key: put.key, stored }
                 }
                 Err(e) => error_msg(codes::BAD_MESSAGE, &e.to_string()),
@@ -355,7 +410,12 @@ struct ProxiedJob {
 /// failure (the caller falls back to local execution). The connection
 /// gets a bounded connect timeout but NO read timeout: the later
 /// `result` relay blocks for as long as the job runs.
-fn open_route(peer: &str, tenant: &str, study: &[String]) -> Option<ProxiedJob> {
+fn open_route(
+    peer: &str,
+    tenant: &str,
+    study: &[String],
+    trace: Option<WireTrace>,
+) -> Option<ProxiedJob> {
     use std::net::ToSocketAddrs;
     let sock = peer.to_socket_addrs().ok()?.next()?;
     let stream =
@@ -369,7 +429,7 @@ fn open_route(peer: &str, tenant: &str, study: &[String]) -> Option<ProxiedJob> 
         Message::Hello { version, .. } if version == PROTOCOL_VERSION => {}
         _ => return None,
     }
-    let route = Message::Route { tenant: tenant.to_string(), study: study.to_vec() };
+    let route = Message::Route { tenant: tenant.to_string(), study: study.to_vec(), trace };
     write_frame(&mut w, &route).ok()?;
     w.flush().ok()?;
     match read_frame(&mut r).ok()?? {
@@ -398,6 +458,25 @@ fn proxy_result(p: &ProxiedJob, handle: u64) -> Message {
             codes::UNKNOWN_JOB,
             &format!("routed peer went away holding proxy handle {handle}"),
         ),
+    }
+}
+
+/// Emit a `serve-get`/`serve-put` span on the owner node, parented
+/// under the requester's per-tier lookup span when the frame carried a
+/// trace context (rtfp v7). No trace on the frame, or telemetry off on
+/// this node: no event, no allocation. The pseudo-tenant `~peer` keeps
+/// owner-side serve work out of every real tenant's metric scope.
+fn emit_serve_span(
+    svc: &StudyService,
+    trace: Option<WireTrace>,
+    kind: &'static str,
+    started: Instant,
+    detail: String,
+) {
+    if let (Some(o), Some(w)) = (svc.obs().get(), trace) {
+        let ctx = SpanCtx { trace: w.trace, parent: w.span, tenant: Arc::from("~peer"), job: 0 };
+        let id = o.next_span();
+        o.emit_timed(&ctx, kind, id, started, started.elapsed(), detail);
     }
 }
 

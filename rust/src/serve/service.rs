@@ -11,7 +11,7 @@ use std::time::{Duration, Instant};
 
 use crate::cache::{
     fold_keys, node_input_key, task_cache_sig, tile_fingerprints, CacheConfig, CacheStats, Key,
-    RemoteTier, ReuseCache, ScopedCounters, WarmStartReport,
+    RemoteTier, ReuseCache, ScopedCounters, TierStats, WarmStartReport,
 };
 use crate::config::{EngineMode, ServeConfig, StudyConfig};
 use crate::driver::{
@@ -20,10 +20,11 @@ use crate::driver::{
 };
 use crate::faults::Faults;
 use crate::merging::{reuse_tree::ReuseTree, unit_stages};
+use crate::obs::{span, CounterId, HistId, MetricsSnapshot, Obs, ObsInner, ObsSnapshot, SpanCtx};
 use crate::runtime::PjrtEngine;
 use crate::adaptive::run_adaptive_scoped;
 use crate::sampling::{default_space, ParamSet};
-use crate::serve::protocol::Message;
+use crate::serve::protocol::{Message, WireStats, WireTierStats, WireTrace};
 use crate::tune::{run_tune_with_hook, SpeculationHook, TuneOptions, TuneSummary};
 use crate::{Error, Result};
 
@@ -115,6 +116,15 @@ pub struct ServeOptions {
     /// a scripted panic there would poison the service-wide memo, which
     /// is not a failure mode the harness targets.
     pub faults: Faults,
+    /// `trace=FILE`: activate telemetry ([`crate::obs`]) with FILE as
+    /// the JSONL span sink. Every job gets a trace id and a span tree
+    /// (admit → queue → schedule → frontier levels → lookups/launches →
+    /// retries); see `docs/OBSERVABILITY.md`.
+    pub trace: Option<String>,
+    /// `stats=on`: activate telemetry (ring + metrics, no file sink
+    /// unless `trace` is also set) and log a one-line digest whenever
+    /// the counters move.
+    pub stats: bool,
 }
 
 impl Default for ServeOptions {
@@ -141,6 +151,8 @@ impl Default for ServeOptions {
             submit_window: DEFAULT_SUBMIT_WINDOW,
             speculate: false,
             faults: Faults::none(),
+            trace: None,
+            stats: false,
         }
     }
 }
@@ -187,6 +199,8 @@ impl ServeOptions {
             job_retries: sc.job_retries.unwrap_or(DEFAULT_JOB_RETRIES),
             submit_window: sc.submit_window.unwrap_or(DEFAULT_SUBMIT_WINDOW),
             speculate: sc.speculate.unwrap_or(false),
+            trace: sc.trace.clone(),
+            stats: sc.stats,
             ..ServeOptions::default()
         }
     }
@@ -320,6 +334,11 @@ pub struct ServiceReport {
     pub speculative_launches: u64,
     /// What the boot-time disk warm start admitted (zeros when off).
     pub warm: WarmStartReport,
+    /// Per-tier diagnostic counters at drain time, top of the stack
+    /// first (memory, then every attached lower tier). The remote
+    /// tier's row carries the circuit-breaker transitions and the
+    /// replica-served count.
+    pub tiers: Vec<(String, TierStats)>,
     /// Service lifetime, start to drain.
     pub wall: Duration,
 }
@@ -365,6 +384,19 @@ struct Queued {
     tenant: String,
     payload: JobPayload,
     submitted: Instant,
+    /// Telemetry handles allocated at admission (`None` with telemetry
+    /// off or span-silent).
+    trace: Option<JobTrace>,
+}
+
+/// What a traced job carries from admission to its final report: the
+/// context the root `job` span is emitted under (for routed jobs, the
+/// front door's `route` span of the same trace), the child context every
+/// per-job span parents under, and the root span id itself.
+struct JobTrace {
+    root_ctx: SpanCtx,
+    ctx: SpanCtx,
+    root: u64,
 }
 
 /// A speculative unit: the tuner's *predicted* next generation, queued
@@ -470,6 +502,9 @@ struct Inner {
     /// so the service can reach the ring for routing, replication, and
     /// live membership. `None` outside cluster mode.
     remote: Option<Arc<RemoteTier>>,
+    /// The process-wide telemetry handle (`trace=` / `stats=`; inactive
+    /// by default — one never-taken branch per instrumented site).
+    obs: Obs,
 }
 
 /// The long-lived multi-tenant study service (see the module docs).
@@ -498,6 +533,15 @@ impl StudyService {
         cache_cfg.faults = opts.faults.clone();
         let cache = Arc::new(ReuseCache::new(cache_cfg));
         let warm = if opts.warm_start { cache.warm_start() } else { WarmStartReport::default() };
+        // either telemetry flag activates the registry; `trace=` adds
+        // the file sink. The node label makes multi-node trace files
+        // stitchable (every span event carries it).
+        let node = opts.cluster_addr.clone().unwrap_or_else(|| "local".to_string());
+        let obs = match &opts.trace {
+            Some(path) => Obs::to_file(&node, path)?,
+            None if opts.stats => Obs::active(&node),
+            None => Obs::none(),
+        };
         let remote = if opts.peers.is_empty() {
             None
         } else {
@@ -507,7 +551,8 @@ impl StudyService {
             let tier = Arc::new(
                 RemoteTier::new(&opts.peers, addr)?
                     .with_faults(opts.faults.clone())
-                    .with_replicas(opts.replicas),
+                    .with_replicas(opts.replicas)
+                    .with_obs(obs.clone()),
             );
             cache.attach_tier(Arc::clone(&tier));
             Some(tier)
@@ -526,13 +571,22 @@ impl StudyService {
             spec_launches: Mutex::new(HashMap::new()),
             warm,
             remote,
+            obs,
         });
-        let threads = (0..workers)
+        let mut threads: Vec<JoinHandle<()>> = (0..workers)
             .map(|_| {
                 let inner = Arc::clone(&inner);
                 std::thread::spawn(move || worker_loop(inner))
             })
             .collect();
+        // the `stats=on` digest rides the same join path as the workers,
+        // so drain never leaves it printing into a dead service
+        if inner.opts.stats {
+            if let Some(o) = inner.obs.get().cloned() {
+                let inner = Arc::clone(&inner);
+                threads.push(std::thread::spawn(move || digest_loop(inner, o)));
+            }
+        }
         Ok(StudyService {
             inner,
             threads: Mutex::new(threads),
@@ -734,7 +788,16 @@ impl StudyService {
     /// Enqueue a study job. Returns its id, or an error once draining
     /// started.
     pub fn submit(&self, job: StudyJob) -> Result<u64> {
-        self.submit_payload(job.tenant, JobPayload::Study(job.cfg))
+        self.submit_payload(job.tenant, JobPayload::Study(job.cfg), None)
+    }
+
+    /// [`StudyService::submit`] joining an existing trace: the job's
+    /// root `job` span parents under `parent` — for routed jobs, the
+    /// front door's `route` span carried on the wire — so a routed
+    /// job's spans stitch into one cross-node tree. Ignored with
+    /// telemetry off.
+    pub fn submit_with_trace(&self, job: StudyJob, parent: Option<WireTrace>) -> Result<u64> {
+        self.submit_payload(job.tenant, JobPayload::Study(job.cfg), parent)
     }
 
     /// Enqueue a tuning job ([`crate::tune`]): an optimizer loop whose
@@ -746,10 +809,15 @@ impl StudyService {
         cfg: StudyConfig,
         opts: TuneOptions,
     ) -> Result<u64> {
-        self.submit_payload(tenant.into(), JobPayload::Tune(cfg, opts))
+        self.submit_payload(tenant.into(), JobPayload::Tune(cfg, opts), None)
     }
 
-    fn submit_payload(&self, tenant: String, payload: JobPayload) -> Result<u64> {
+    fn submit_payload(
+        &self,
+        tenant: String,
+        payload: JobPayload,
+        parent: Option<WireTrace>,
+    ) -> Result<u64> {
         let mut st = self.inner.state.lock().unwrap();
         if st.draining {
             return Err(Error::Coordinator(format!(
@@ -758,6 +826,22 @@ impl StudyService {
         }
         let id = st.next_id;
         st.next_id += 1;
+        // allocate the job's trace — or join the front door's — and
+        // emit the admit span before the job can race to completion
+        let trace = self.inner.obs.get().map(|o| {
+            let root_ctx = SpanCtx {
+                trace: parent.map(|w| w.trace).unwrap_or_else(|| o.new_trace()),
+                parent: parent.map(|w| w.span).unwrap_or(0),
+                tenant: Arc::from(tenant.as_str()),
+                job: id,
+            };
+            let root = o.next_span();
+            let ctx = root_ctx.child(root);
+            let admit = o.next_span();
+            o.emit_timed(&ctx, span::ADMIT, admit, Instant::now(), Duration::ZERO, String::new());
+            o.add(CounterId::JobsAdmitted, Some(&tenant), 1);
+            JobTrace { root_ctx, ctx, root }
+        });
         // a tenant going from idle to busy starts at the current
         // virtual time: waiting earns priority, idling does not
         let busy = st.inflight.get(&tenant).copied().unwrap_or(0) > 0
@@ -767,9 +851,50 @@ impl StudyService {
             let pass = st.pass.entry(tenant.clone()).or_insert(vt);
             *pass = (*pass).max(vt);
         }
-        st.queue.push_back(Queued { id, tenant, payload, submitted: Instant::now() });
+        st.queue.push_back(Queued { id, tenant, payload, submitted: Instant::now(), trace });
         self.inner.cv.notify_all();
         Ok(id)
+    }
+
+    /// The service's telemetry handle (inactive unless `trace=` or
+    /// `stats=` was configured). The wire server parents its
+    /// `serve-get`/`serve-put`/`route` spans through this.
+    pub fn obs(&self) -> &Obs {
+        &self.inner.obs
+    }
+
+    /// Per-tier diagnostic counters of the shared cache, top of the
+    /// stack first (memory, then every attached lower tier). The drain
+    /// bill and the `status-report` / `stats-report` wire messages carry
+    /// exactly these rows.
+    pub fn tier_stats(&self) -> Vec<(String, TierStats)> {
+        self.inner.cache.tier_stats().into_iter().map(|(n, s)| (n.to_string(), s)).collect()
+    }
+
+    /// Point-in-time telemetry snapshot — the `stats` wire message's
+    /// reply. Cheap enough to serve on every request: counters are
+    /// relaxed atomic loads, histograms a few hundred of them.
+    pub fn stats_snapshot(&self) -> WireStats {
+        let (queued, running, done) = {
+            let st = self.inner.state.lock().unwrap();
+            (
+                st.queue.len() as u64,
+                st.inflight.values().sum::<usize>() as u64,
+                st.results.len() as u64,
+            )
+        };
+        WireStats {
+            enabled: self.inner.obs.is_active(),
+            snapshot: self.inner.obs.get().map(|o| o.snapshot()).unwrap_or_default(),
+            tiers: self
+                .tier_stats()
+                .into_iter()
+                .map(|(tier, stats)| WireTierStats { tier, stats })
+                .collect(),
+            queued,
+            running,
+            done,
+        }
     }
 
     /// Jobs currently queued (not yet picked up by a worker).
@@ -825,6 +950,7 @@ impl StudyService {
         if let Some(report) = &*drained {
             return report.clone();
         }
+        let drain_started = Instant::now();
         {
             let mut st = self.inner.state.lock().unwrap();
             st.draining = true;
@@ -869,8 +995,30 @@ impl StudyService {
             input_launches: self.inner.input_launches.load(Ordering::Relaxed),
             speculative_launches: self.inner.speculative_launches.load(Ordering::Relaxed),
             warm: self.inner.warm,
+            tiers: self.tier_stats(),
             wall: self.started.elapsed(),
         };
+        // the drain is service-level work, not any job's: it roots its
+        // own one-span trace, then the sink is flushed so a reader that
+        // opens the file after drain sees every span
+        if let Some(o) = self.inner.obs.get() {
+            let ctx = SpanCtx {
+                trace: o.new_trace(),
+                parent: 0,
+                tenant: Arc::from("~service"),
+                job: 0,
+            };
+            let id = o.next_span();
+            o.emit_timed(
+                &ctx,
+                span::DRAIN,
+                id,
+                drain_started,
+                drain_started.elapsed(),
+                format!("jobs={}", report.jobs.len()),
+            );
+            o.flush();
+        }
         *drained = Some(report.clone());
         report
     }
@@ -1004,8 +1152,15 @@ impl Inner {
     }
 
     fn run_job(&self, queued: Queued) -> JobReport {
-        let Queued { id, tenant, payload, submitted } = queued;
+        let Queued { id, tenant, payload, submitted, trace } = queued;
         let queue_wait = submitted.elapsed();
+        if let Some(o) = self.obs.get() {
+            o.observe(HistId::QueueWait, Some(&tenant), queue_wait);
+            if let Some(t) = &trace {
+                let span_id = o.next_span();
+                o.emit_timed(&t.ctx, span::QUEUE, span_id, submitted, queue_wait, String::new());
+            }
+        }
         let mut report = JobReport {
             job: id,
             tenant: tenant.clone(),
@@ -1026,10 +1181,25 @@ impl Inner {
         let mut attempt = 0u64;
         loop {
             attempt += 1;
+            let attempt_started = Instant::now();
             // a panicking study must not take the worker (and the
             // tenant's in-flight slot) down with it
-            let outcome =
-                catch_unwind(AssertUnwindSafe(|| self.execute_job(id, &tenant, &payload)));
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                self.execute_job(id, &tenant, &payload, trace.as_ref().map(|t| &t.ctx))
+            }));
+            // one schedule span per execution attempt (the backoff
+            // between attempts is the retry span's)
+            if let (Some(o), Some(t)) = (self.obs.get(), trace.as_ref()) {
+                let span_id = o.next_span();
+                o.emit_timed(
+                    &t.ctx,
+                    span::SCHEDULE,
+                    span_id,
+                    attempt_started,
+                    attempt_started.elapsed(),
+                    format!("attempt {attempt}"),
+                );
+            }
             let error = match outcome {
                 Ok(Ok(out)) => {
                     report.n_evals = out.n_evals;
@@ -1042,6 +1212,7 @@ impl Inner {
                         self.spec_launches.lock().unwrap().get(&id).copied().unwrap_or(0);
                     report.exec_wall = out.exec_wall;
                     report.error = None;
+                    self.finish_job(trace.as_ref(), &report, submitted);
                     return report;
                 }
                 Ok(Err(e)) => e.to_string(),
@@ -1058,14 +1229,59 @@ impl Inner {
             let budget_spent = attempt >= max_attempts;
             let past_deadline = deadline.is_some_and(|dl| Instant::now() >= dl);
             if budget_spent || past_deadline {
+                self.finish_job(trace.as_ref(), &report, submitted);
                 return report;
             }
             report.retries += 1;
-            std::thread::sleep(retry_backoff(id, attempt));
+            let backoff = retry_backoff(id, attempt);
+            let backoff_started = Instant::now();
+            std::thread::sleep(backoff);
+            if let Some(o) = self.obs.get() {
+                o.add(CounterId::Retries, Some(&tenant), 1);
+                o.observe(HistId::RetryBackoff, Some(&tenant), backoff);
+                if let Some(t) = &trace {
+                    let span_id = o.next_span();
+                    o.emit_timed(
+                        &t.ctx,
+                        span::RETRY,
+                        span_id,
+                        backoff_started,
+                        backoff_started.elapsed(),
+                        format!("attempt {attempt} failed; backing off"),
+                    );
+                }
+            }
         }
     }
 
-    fn execute_job(&self, id: u64, tenant: &str, payload: &JobPayload) -> Result<ExecOut> {
+    /// Completion-side telemetry for one job, success or final failure:
+    /// the completed/failed + launch/cached counters, the job-wall
+    /// histogram sample, and the root `job` span closing the trace tree.
+    fn finish_job(&self, trace: Option<&JobTrace>, report: &JobReport, submitted: Instant) {
+        let Some(o) = self.obs.get() else { return };
+        let tenant = Some(report.tenant.as_str());
+        let done = if report.ok() { CounterId::JobsCompleted } else { CounterId::JobsFailed };
+        o.add(done, tenant, 1);
+        o.add(CounterId::Launches, tenant, report.launches);
+        o.add(CounterId::CachedTasks, tenant, report.cached_tasks);
+        let wall = submitted.elapsed();
+        o.observe(HistId::JobWall, tenant, wall);
+        if let Some(t) = trace {
+            let detail = match &report.error {
+                Some(e) => format!("failed: {e}"),
+                None => format!("ok launches={} cached={}", report.launches, report.cached_tasks),
+            };
+            o.emit_timed(&t.root_ctx, span::JOB, t.root, submitted, wall, detail);
+        }
+    }
+
+    fn execute_job(
+        &self,
+        id: u64,
+        tenant: &str,
+        payload: &JobPayload,
+        trace: Option<&SpanCtx>,
+    ) -> Result<ExecOut> {
         // pin the execution environment to the service's
         let base = match payload {
             JobPayload::Study(cfg) => cfg,
@@ -1077,6 +1293,8 @@ impl Inner {
         cfg.workers = self.opts.study_workers;
         cfg.batch_width = self.opts.batch_width;
         cfg.faults = self.opts.faults.clone();
+        cfg.obs = self.obs.clone();
+        cfg.trace = trace.cloned();
 
         match payload {
             JobPayload::Study(_) if cfg.adaptive.enabled => {
@@ -1212,6 +1430,56 @@ impl SpeculationHook for ServiceSpeculation<'_> {
     }
 }
 
+/// The `stats=on` digest thread: one log line whenever the global
+/// counters move, checked on every service state change (and at worst
+/// every 500 ms); exits as soon as draining starts. Quiet services log
+/// nothing — the digest is change-driven, not a heartbeat.
+fn digest_loop(inner: Arc<Inner>, o: Arc<ObsInner>) {
+    let mut last: Option<MetricsSnapshot> = None;
+    loop {
+        {
+            let st = inner.state.lock().unwrap();
+            if st.draining {
+                return;
+            }
+            let (st, _timeout) =
+                inner.cv.wait_timeout(st, Duration::from_millis(500)).unwrap();
+            if st.draining {
+                return;
+            }
+        }
+        let snap = o.snapshot();
+        if last.as_ref() == Some(&snap.global) {
+            continue;
+        }
+        eprintln!("[stats {}] {}", snap.node, stats_digest(&snap));
+        last = Some(snap.global);
+    }
+}
+
+/// One-line digest of a telemetry snapshot: the headline counters plus
+/// job-wall quantiles (microsecond histograms rendered as milliseconds).
+/// Shared by the server log (`stats=on`) and the CLI.
+pub fn stats_digest(snap: &ObsSnapshot) -> String {
+    let g = &snap.global;
+    let ms = |us: u64| us as f64 / 1000.0;
+    let jw = g.hist("job_wall_us");
+    format!(
+        "jobs={} failed={} launches={} cached={} retries={} routed={} \
+         job p50={:.1}ms p95={:.1}ms ring={}/{}",
+        g.counter("jobs_completed"),
+        g.counter("jobs_failed"),
+        g.counter("launches"),
+        g.counter("cached_tasks"),
+        g.counter("retries"),
+        g.counter("jobs_routed"),
+        ms(jw.and_then(|h| h.quantile_us(0.5)).unwrap_or(0)),
+        ms(jw.and_then(|h| h.quantile_us(0.95)).unwrap_or(0)),
+        snap.ring_len,
+        snap.ring_cap,
+    )
+}
+
 /// Backoff before retry `attempt + 1` of a job: 10 ms doubling per
 /// attempt, capped at 500 ms, plus up to +50% jitter derived
 /// deterministically from (job id, attempt) — concurrent retrying jobs
@@ -1302,6 +1570,7 @@ mod tests {
             tenant: tenant.into(),
             payload: JobPayload::Study(StudyConfig::default()),
             submitted: Instant::now(),
+            trace: None,
         }
     }
 

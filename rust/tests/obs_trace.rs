@@ -1,0 +1,364 @@
+//! Telemetry end to end (rtfp v7): real `StudyService`s behind real TCP
+//! listeners, each streaming structured spans to a `trace=FILE` sink.
+//! The properties under test are the ones `docs/OBSERVABILITY.md`
+//! sells: a routed job's spans — emitted on two different nodes —
+//! stitch into ONE tree under a single stable trace id (the front
+//! door's route span is the root, the executing node's job span its
+//! child, owner-side serve spans parent under the requester's lookup
+//! spans), every parent link resolves (no orphans), span counts match
+//! the billed launch/retry counts, per-tenant metric scopes partition
+//! the globals, and a dead peer (breaker opening mid-study) never
+//! produces a malformed trace.
+
+use std::collections::HashMap;
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread;
+
+use rtf_reuse::cache::CacheConfig;
+use rtf_reuse::config::StudyConfig;
+use rtf_reuse::faults::{FaultPlan, Faults};
+use rtf_reuse::obs::{parse_event, span, ObsSnapshot, TraceLine};
+use rtf_reuse::serve::{
+    run_jobs, JobSpec, ServeOptions, ServiceReport, StudyService, WireServer,
+};
+
+/// Mirror of `server::ROUTE_BASE`: a client-visible id at or past this
+/// mark proves the job was routed.
+const ROUTE_BASE: u64 = 1 << 32;
+
+/// batch-width=1 pins one backend call per launch span AND per billed
+/// launch, so the two counts must agree exactly.
+fn study_args(seed: u64) -> Vec<String> {
+    vec!["method=moat".into(), "r=1".into(), "batch-width=1".into(), format!("seed={seed}")]
+}
+
+fn reserve_addr() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("reserve a port");
+    listener.local_addr().expect("reserved addr").to_string()
+}
+
+fn trace_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("rtf-obs-{tag}-{}.jsonl", std::process::id()))
+}
+
+fn node_opts(peers: &[String], own: &str, trace: &PathBuf) -> ServeOptions {
+    ServeOptions {
+        service_workers: 1,
+        tenant_inflight_cap: 1,
+        study_workers: 2,
+        cache: CacheConfig { capacity_bytes: 512 * 1024 * 1024, ..CacheConfig::default() },
+        peers: peers.to_vec(),
+        cluster_addr: Some(own.to_string()),
+        trace: Some(trace.to_string_lossy().into_owned()),
+        ..ServeOptions::default()
+    }
+}
+
+fn spawn_node(
+    opts: ServeOptions,
+    addr: &str,
+) -> (Arc<StudyService>, thread::JoinHandle<ServiceReport>) {
+    let svc = StudyService::start(opts).expect("node starts");
+    let server = WireServer::bind(svc, addr).expect("node binds its reserved addr");
+    let svc = Arc::clone(server.service());
+    (svc, thread::spawn(move || server.run().expect("node drains cleanly")))
+}
+
+fn read_trace(path: &PathBuf) -> Vec<TraceLine> {
+    let text = std::fs::read_to_string(path).expect("trace file exists after drain");
+    text.lines()
+        .map(|l| parse_event(l).unwrap_or_else(|e| panic!("unparseable trace line `{l}`: {e}")))
+        .collect()
+}
+
+/// Every span of `trace_id` across both nodes must form one tree:
+/// exactly one root, every parent link resolving to a span in the set.
+/// Returns the events of that trace keyed by span id.
+fn assert_one_tree(all: &[TraceLine], trace_id: u128) -> HashMap<u64, TraceLine> {
+    let events: HashMap<u64, TraceLine> = all
+        .iter()
+        .filter(|l| l.event.trace == trace_id)
+        .map(|l| (l.event.span, l.clone()))
+        .collect();
+    assert!(!events.is_empty(), "trace {trace_id:032x} has no spans");
+    let roots: Vec<&TraceLine> =
+        events.values().filter(|l| l.event.parent.is_none()).collect();
+    assert_eq!(
+        roots.len(),
+        1,
+        "trace {trace_id:032x} must have exactly one root, got {roots:?}"
+    );
+    for l in events.values() {
+        if let Some(p) = l.event.parent {
+            assert!(
+                events.contains_key(&p),
+                "orphan span: {:?} parents {p:016x}, which no node emitted",
+                l.event
+            );
+        }
+    }
+    events
+}
+
+/// Per-tenant counter scopes must sum exactly to the globals, and the
+/// job-wall histogram (tenant-attributed at record time) likewise.
+fn assert_counters_partition(snap: &ObsSnapshot, node: &str) {
+    for (name, global) in &snap.global.counters {
+        let sum: u64 = snap
+            .tenants
+            .iter()
+            .map(|(_, m)| m.counters.iter().find(|(n, _)| n == name).map_or(0, |(_, v)| *v))
+            .sum();
+        assert_eq!(sum, *global, "{node}: tenant scopes must partition counter `{name}`");
+    }
+    let global_wall = snap.global.hists.iter().find(|h| h.name == "job_wall_us");
+    if let Some(g) = global_wall {
+        let sum: u64 = snap
+            .tenants
+            .iter()
+            .flat_map(|(_, m)| m.hists.iter().filter(|h| h.name == "job_wall_us"))
+            .map(|h| h.count)
+            .sum();
+        assert_eq!(sum, g.count, "{node}: tenant scopes must partition the job-wall histogram");
+    }
+}
+
+/// The headline property: a submit through the front door executes on
+/// the owning peer, and the spans the two nodes emit — route on the
+/// router; job, admit, queue, schedule, levels, launches, lookups on
+/// the owner; serve-gets back on the router for the keys it owns —
+/// stitch into one tree under one stable trace id, with launch spans
+/// equal to the billed launch count.
+#[test]
+fn a_routed_job_stitches_into_one_cross_node_span_tree() {
+    let addrs: Vec<String> = (0..2).map(|_| reserve_addr()).collect();
+    let traces: Vec<PathBuf> =
+        (0..2).map(|i| trace_path(&format!("routed-{i}"))).collect();
+    let nodes: Vec<_> = addrs
+        .iter()
+        .zip(&traces)
+        .map(|(a, t)| {
+            let opts = ServeOptions { route: true, ..node_opts(&addrs, a, t) };
+            spawn_node(opts, a)
+        })
+        .collect();
+
+    // exactly one node predicts itself as the owner; the other is the
+    // front door this test submits through
+    let args = study_args(42);
+    let cfg = StudyConfig::from_args(&args).expect("study parses");
+    let predictions: Vec<Option<String>> =
+        nodes.iter().map(|n| n.0.predict_route(&cfg)).collect();
+    let owner = predictions
+        .iter()
+        .position(|p| p.is_none())
+        .expect("one node owns the key plurality");
+    let router = 1 - owner;
+    assert_eq!(
+        predictions[router].as_deref(),
+        Some(addrs[owner].as_str()),
+        "the router must name the owner"
+    );
+
+    let spec = JobSpec { tenant: "traced".into(), args, tune: false };
+    let out = run_jobs(&addrs[router], &[spec], false).expect("routed submit succeeds");
+    assert!(out.jobs[0].ok(), "routed job: {:?}", out.jobs[0].error);
+    assert!(out.jobs[0].job >= ROUTE_BASE, "the job must actually be routed");
+    let billed_launches = out.jobs[0].launches;
+    assert_eq!(out.jobs[0].retries, 0, "fault-free run retries nothing");
+
+    // drain both nodes (drain flushes each node's trace sink)
+    let bill_owner =
+        run_jobs(&addrs[owner], &[], true).expect("drain owner").bill.expect("bill");
+    run_jobs(&addrs[router], &[], true).expect("drain router");
+    let owner_svc = Arc::clone(&nodes[owner].0);
+    let router_svc = Arc::clone(&nodes[router].0);
+    for (_, handle) in nodes {
+        handle.join().expect("node joins");
+    }
+
+    let mut all = read_trace(&traces[router]);
+    let owner_lines = read_trace(&traces[owner]);
+    all.extend(owner_lines);
+
+    // the router emitted exactly one route span; its trace id is the
+    // stable id the whole cross-node tree lives under
+    let routes: Vec<&TraceLine> =
+        all.iter().filter(|l| l.event.kind == span::ROUTE).collect();
+    assert_eq!(routes.len(), 1, "one routed submit, one route span");
+    let route = routes[0].clone();
+    let trace_id = route.event.trace;
+
+    let tree = assert_one_tree(&all, trace_id);
+    assert!(tree[&route.event.span].event.parent.is_none(), "the route span is the root");
+
+    // exactly one job span, emitted by the OWNER, child of the route span
+    let jobs: Vec<&TraceLine> =
+        tree.values().filter(|l| l.event.kind == span::JOB).collect();
+    assert_eq!(jobs.len(), 1, "one job root per job");
+    assert_eq!(jobs[0].event.parent, Some(route.event.span), "cross-node parent link");
+    assert_ne!(jobs[0].node, route.node, "the job ran on the other node");
+    assert_eq!(jobs[0].event.tenant, "traced");
+
+    let count = |kind: &str| tree.values().filter(|l| l.event.kind == kind).count() as u64;
+    assert_eq!(count(span::ADMIT), 1, "one admit span");
+    assert_eq!(count(span::QUEUE), 1, "one queue span");
+    assert_eq!(count(span::SCHEDULE), 1, "one attempt, one schedule span");
+    assert_eq!(count(span::RETRY), 0, "no retries, no retry spans");
+    assert!(count(span::LEVEL) > 0, "frontier levels are spanned");
+    assert!(count(span::LOOKUP) > 0, "lower-tier lookups are spanned");
+    assert_eq!(
+        count(span::LAUNCH),
+        billed_launches,
+        "at batch-width=1, launch spans must equal the billed launches"
+    );
+
+    // owner-side work crossed back: the router served cache-gets for
+    // the keys it owns, each span parenting under an owner-side lookup
+    let serves: Vec<&TraceLine> =
+        tree.values().filter(|l| l.event.kind == span::SERVE_GET).collect();
+    assert!(!serves.is_empty(), "a two-node cold study must cross the fabric");
+    for s in &serves {
+        assert_eq!(s.node, route.node, "serve-get spans are emitted by the serving node");
+        let parent = &tree[&s.event.parent.expect("serve spans are never roots")];
+        assert_eq!(parent.event.kind, span::LOOKUP, "serve-gets nest under lookups");
+        assert_ne!(parent.node, s.node, "…emitted by the requesting node");
+    }
+
+    // the registry partitions per tenant on both nodes, and the drain
+    // bill carries the per-tier rows (rtfp v7 satellite)
+    assert_counters_partition(&owner_svc.stats_snapshot().snapshot, "owner");
+    assert_counters_partition(&router_svc.stats_snapshot().snapshot, "router");
+    assert!(
+        bill_owner.tiers.iter().any(|t| t.tier == "memory" && t.stats.stores > 0),
+        "the owner's bill must carry per-tier rows: {:?}",
+        bill_owner.tiers
+    );
+
+    for t in traces {
+        let _ = std::fs::remove_file(t);
+    }
+}
+
+/// Retries under fault injection: a worker panic fails the first
+/// attempt, the retry completes the job — and the trace shows exactly
+/// that, with one retry span per billed retry, one schedule span per
+/// attempt, and the whole thing still a single tree.
+#[test]
+fn a_retried_job_traces_every_attempt_and_matches_the_billed_retry_count() {
+    let addr = reserve_addr();
+    let trace = trace_path("retry");
+    let plan = FaultPlan::new().panic_on_launch(2);
+    let opts = ServeOptions {
+        faults: Faults::hooked(plan.clone()),
+        ..node_opts(&[], &addr, &trace)
+    };
+    let (svc, handle) = spawn_node(opts, &addr);
+
+    let spec = JobSpec { tenant: "bumpy".into(), args: study_args(42), tune: false };
+    let out = run_jobs(&addr, &[spec], true).expect("run succeeds");
+    handle.join().expect("node joins");
+    assert!(out.jobs[0].ok(), "the retry absorbs the panic: {:?}", out.jobs[0].error);
+    assert_eq!(out.jobs[0].retries, 1, "the panicked attempt is billed as one retry");
+    assert_eq!(plan.fired().launch_panics, 1, "the scripted panic fired");
+
+    let all = read_trace(&trace);
+    let job_root = all
+        .iter()
+        .find(|l| l.event.kind == span::JOB)
+        .expect("the job span was emitted");
+    assert!(job_root.event.parent.is_none(), "an unrouted job's root is the job span");
+    let tree = assert_one_tree(&all, job_root.event.trace);
+
+    let count = |kind: &str| tree.values().filter(|l| l.event.kind == kind).count() as u64;
+    assert_eq!(count(span::RETRY), out.jobs[0].retries, "one retry span per billed retry");
+    assert_eq!(count(span::SCHEDULE), out.jobs[0].retries + 1, "one schedule span per attempt");
+    // the failed attempt's work is traced too, so launch spans can only
+    // exceed the (successful-attempt) billed count
+    assert!(
+        count(span::LAUNCH) >= out.jobs[0].launches,
+        "launch spans cover the lost attempt as well"
+    );
+
+    let snap = svc.stats_snapshot().snapshot;
+    assert_counters_partition(&snap, "retry node");
+    assert_eq!(snap.global.counter("retries"), 1, "the registry counted the retry");
+    assert_eq!(snap.global.counter("jobs_completed"), 1);
+    let backoff = snap.global.hist("retry_backoff_us").expect("retry-backoff histogram");
+    assert_eq!(backoff.count, 1, "one backoff observation per retry");
+    let wall = snap.global.hist("job_wall_us").expect("job-wall histogram");
+    assert_eq!(wall.count, 1, "one job, one wall sample");
+
+    let _ = std::fs::remove_file(trace);
+}
+
+/// A peer dying mid-cluster opens the circuit breaker on the survivor —
+/// and the survivor's trace stays well-formed through the failed remote
+/// lookups, while the breaker transition lands on the drain bill's
+/// per-tier rows and the stats surface.
+#[test]
+fn a_dead_peer_opens_the_breaker_without_malforming_the_survivors_trace() {
+    let addrs: Vec<String> = (0..2).map(|_| reserve_addr()).collect();
+    let traces: Vec<PathBuf> = (0..2).map(|i| trace_path(&format!("breaker-{i}"))).collect();
+    let nodes: Vec<_> = addrs
+        .iter()
+        .zip(&traces)
+        .map(|(a, t)| spawn_node(node_opts(&addrs, a, t), a))
+        .collect();
+
+    // a cold study on the survivor warms its local shard (and B's)
+    let spec = JobSpec { tenant: "cold".into(), args: study_args(42), tune: false };
+    let out = run_jobs(&addrs[0], &[spec], false).expect("cold run succeeds");
+    assert!(out.jobs[0].ok(), "cold job: {:?}", out.jobs[0].error);
+
+    // kill node 1; its shard dies with it (no replicas configured)
+    let mut nodes = nodes;
+    let (dead_svc, dead_handle) = nodes.pop().expect("node 1");
+    let (survivor_svc, survivor_handle) = nodes.pop().expect("node 0");
+    assert!(run_jobs(&addrs[1], &[], true).expect("drain peer").bill.is_some());
+    dead_handle.join().expect("peer joins");
+    drop(dead_svc);
+
+    // a DIFFERENT study (fresh keys): lookups for the dead peer's half
+    // of the key space dial, fail, and trip the per-address breaker —
+    // the job completes by relaunching locally
+    let spec = JobSpec { tenant: "probe".into(), args: study_args(43), tune: false };
+    let out = run_jobs(&addrs[0], &[spec], false).expect("probe run succeeds");
+    assert!(out.jobs[0].ok(), "a dead peer never fails a job: {:?}", out.jobs[0].error);
+
+    let bill = run_jobs(&addrs[0], &[], true).expect("drain survivor").bill.expect("bill");
+    survivor_handle.join().expect("survivor joins");
+
+    let remote = bill
+        .tiers
+        .iter()
+        .find(|t| t.tier == "remote")
+        .expect("a clustered node bills its remote tier");
+    assert!(
+        remote.stats.breaker_opens >= 1,
+        "the dead peer must trip the breaker: {:?}",
+        remote.stats
+    );
+    assert_eq!(
+        survivor_svc.tier_stats().iter().find(|(t, _)| t == "remote").expect("remote tier").1
+            .breaker_opens,
+        remote.stats.breaker_opens,
+        "the stats surface and the bill agree on breaker transitions"
+    );
+
+    // both jobs' traces are complete trees despite the failed lookups
+    let all = read_trace(&traces[0]);
+    let job_roots: Vec<&TraceLine> =
+        all.iter().filter(|l| l.event.kind == span::JOB).collect();
+    assert_eq!(job_roots.len(), 2, "two jobs, two job roots");
+    for root in job_roots {
+        assert!(root.event.parent.is_none());
+        assert_one_tree(&all, root.event.trace);
+    }
+
+    for t in traces {
+        let _ = std::fs::remove_file(t);
+    }
+}

@@ -131,10 +131,26 @@ fn protocol_errors_are_reported_not_fatal() {
         protocol::write_frame(&mut writer, &Message::Status).unwrap();
         writer.flush().unwrap();
         match protocol::read_frame(&mut reader).unwrap() {
-            Some(Message::StatusReport { queued, running, done }) => {
+            Some(Message::StatusReport { queued, running, done, tiers }) => {
                 assert_eq!((queued, running, done), (0, 0, 0));
+                // rtfp v7: status always carries per-tier cache counters
+                assert!(tiers.iter().any(|t| t.tier == "memory"), "tiers: {tiers:?}");
             }
             other => panic!("expected status-report, got {other:?}"),
+        }
+
+        // rtfp v7 stats surface: valid with telemetry off — counters
+        // all zero, per-tier rows still live
+        protocol::write_frame(&mut writer, &Message::Stats).unwrap();
+        writer.flush().unwrap();
+        match protocol::read_frame(&mut reader).unwrap() {
+            Some(Message::StatsReport(stats)) => {
+                assert!(!stats.enabled, "test server runs telemetry off");
+                assert_eq!(stats.snapshot.global.counter("jobs_admitted"), 0);
+                assert!(stats.tiers.iter().any(|t| t.tier == "memory"));
+                assert_eq!((stats.queued, stats.running, stats.done), (0, 0, 0));
+            }
+            other => panic!("expected stats-report, got {other:?}"),
         }
 
         protocol::write_frame(&mut writer, &Message::Result { job: 999 }).unwrap();
